@@ -1,0 +1,54 @@
+//! Mini ablation playground (Table 4 interactive version): sweep the
+//! SQuant stage combinations and bit widths on any zoo model and watch the
+//! CASE objective track accuracy.
+//!
+//!   cargo run --release --example ablation [-- --model M --samples N]
+
+use anyhow::Result;
+use squant::eval::{accuracy, tables::Env};
+use squant::quant::{channel_scales, perturbation, QuantConfig};
+use squant::squant::{case_objective, squant, SquantOpts};
+use squant::util::cli::Args;
+use squant::util::pool::default_threads;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    let model = args.str_or("model", "miniresnet18");
+    let samples = args.usize_or("samples", 1024)?;
+    let mut env = Env::load(&args.str_or("artifacts", "artifacts"))?;
+    env.test.truncate(samples);
+    let (graph, params) = env.model(&model)?;
+    let threads = default_threads();
+
+    println!(
+        "| {:<6} | {:<14} | {:>9} | {:>12} | {:>8} |",
+        "W-bit", "variant", "top-1", "CASE obj", "flips"
+    );
+    for bits in [3usize, 4, 6, 8] {
+        for opts in [
+            SquantOpts::e_only(bits),
+            SquantOpts::ek(bits),
+            SquantOpts::ec(bits),
+            SquantOpts::full(bits),
+        ] {
+            let mut p = params.clone();
+            let mut obj = 0.0f32;
+            let mut flips = 0usize;
+            for layer in graph.quant_layers() {
+                let w = &params[&layer.weight];
+                let scales = channel_scales(w, QuantConfig::new(bits));
+                let res = squant(w, &scales, opts);
+                obj += case_objective(&perturbation(w, &res.q, &scales));
+                flips += res.flips_k + res.flips_c;
+                p.insert(layer.weight.clone(), res.wq);
+            }
+            let acc = accuracy(&graph, &p, None, &env.test, 128, threads)?;
+            println!(
+                "| {:<6} | {:<14} | {:>8.2}% | {:>12.1} | {:>8} |",
+                bits, opts.label(), acc * 100.0, obj, flips
+            );
+        }
+    }
+    args.finish()?;
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! End-to-end deployment driver (the DESIGN.md §7 validation run).
+//!
+//!   cargo run --release --example deploy_eval [-- --model M --wbits B --abits A]
+//!
+//! Full pipeline on a real trained model + real test set:
+//!   1. FP32 reference accuracy (native engine);
+//!   2. on-the-fly SQuant with per-layer parallelism (+ timing report);
+//!   3. RTN vs SQuant accuracy with data-free activation quantization;
+//!   4. the same quantized weights executed through the AOT PJRT forward
+//!      graph (latency + throughput);
+//!   5. quantized-container export.
+//!
+//! Results of this run are recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+use squant::coordinator::quantize_model;
+use squant::eval::{accuracy, quantize_rtn_only, tables::Env};
+use squant::io::sqnt;
+use squant::nn::actrange::data_free_ranges;
+use squant::runtime::Runtime;
+use squant::squant::SquantOpts;
+use squant::tensor::Tensor;
+use squant::util::cli::Args;
+use squant::util::pool::default_threads;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    let model = args.str_or("model", "miniresnet18");
+    let wbits = args.usize_or("wbits", 4)?;
+    let abits = args.usize_or("abits", 8)?;
+    let env = Env::load(&args.str_or("artifacts", "artifacts"))?;
+    let threads = default_threads();
+
+    let entry = env.man.model(&model)?;
+    let c = sqnt::load(&entry.sqnt)?;
+    let graph = squant::nn::Graph::from_header(&c.header)?;
+    println!("== deploy_eval: {model} W{wbits}A{abits} ({} test images) ==",
+             env.test.len());
+
+    let fp32 = accuracy(&graph, &c.params, None, &env.test, 256, threads)?;
+    println!("[1] fp32 top-1 (native)       : {:.2}%", fp32 * 100.0);
+
+    let (qparams, report) =
+        quantize_model(&graph, &c.params, SquantOpts::full(wbits), threads);
+    println!(
+        "[2] on-the-fly quantization   : {} layers, {:.1} ms wall, {:.2} ms/layer",
+        report.layers.len(), report.wall_ms, report.avg_layer_ms()
+    );
+
+    let aq = (abits > 0).then(|| data_free_ranges(&graph, &qparams, abits));
+    let rtn = quantize_rtn_only(&graph, &c.params, wbits);
+    let rtn_acc = accuracy(&graph, &rtn, aq.as_ref(), &env.test, 256, threads)?;
+    let sq_acc =
+        accuracy(&graph, &qparams, aq.as_ref(), &env.test, 256, threads)?;
+    println!("[3] rtn    top-1 (native)     : {:.2}%", rtn_acc * 100.0);
+    println!("    squant top-1 (native)     : {:.2}%", sq_acc * 100.0);
+
+    if let Some(path) = entry.forward.get(&256) {
+        let rt = Runtime::cpu()?;
+        let exe = rt.load(path)?;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let mut ms = 0.0f64;
+        let mut nb = 0usize;
+        let mut bi = 0;
+        while bi + 256 <= env.test.len() {
+            let (x, labels) = env.test.batch(bi, 256);
+            let ordered: Vec<&Tensor> =
+                c.order.iter().map(|n| &qparams[n]).collect();
+            let mut inputs: Vec<&Tensor> = vec![&x];
+            inputs.extend(ordered.iter());
+            let t0 = std::time::Instant::now();
+            let outs = rt.execute(&exe, &inputs)?;
+            ms += t0.elapsed().as_secs_f64() * 1e3;
+            nb += 1;
+            for (p, l) in outs[0].argmax_rows().iter().zip(labels) {
+                correct += (*p == *l as usize) as usize;
+            }
+            seen += labels.len();
+            bi += 256;
+        }
+        println!(
+            "[4] squant top-1 (PJRT AOT)   : {:.2}%  ({:.1} ms / 256-batch, {:.0} img/s)",
+            correct as f64 / seen as f64 * 100.0,
+            ms / nb as f64,
+            seen as f64 / (ms / 1e3)
+        );
+    }
+
+    let out = format!("artifacts/{model}_w{wbits}_deploy.sqnt");
+    sqnt::save(&out, &c.header, &qparams)?;
+    println!("[5] quantized container       : {out}");
+    args.finish()?;
+    Ok(())
+}

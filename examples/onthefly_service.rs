@@ -1,0 +1,73 @@
+//! On-the-fly quantization as a service: starts the coordinator's TCP
+//! server on an ephemeral port, then exercises it as a client — the
+//! smartphone/IoT deployment story from the paper's introduction.
+//!
+//!   cargo run --release --example onthefly_service
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use squant::coordinator::server::{Client, ModelStore};
+use squant::io::manifest::Manifest;
+use squant::util::json::Json;
+
+fn main() -> Result<()> {
+    let man = Manifest::load("artifacts")?;
+    let store = Arc::new(ModelStore::load(&man)?);
+    let names: Vec<String> = store.models.keys().cloned().collect();
+
+    // Bind on an ephemeral port, serve in the background.
+    let addr = "127.0.0.1:7433";
+    let store2 = Arc::clone(&store);
+    let server = std::thread::spawn(move || {
+        let _ = squant::coordinator::server::serve(store2, addr);
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let mut client = Client::connect(addr)?;
+    println!("connected to coordinator at {addr}");
+
+    let resp = client.call(&Json::parse(r#"{"cmd":"models"}"#)?)?;
+    println!("models: {}", resp.req("models")?.dump());
+
+    for name in names.iter().take(2) {
+        for bits in [8usize, 4] {
+            let req = Json::obj()
+                .set("cmd", "quantize")
+                .set("model", name.as_str())
+                .set("wbits", bits);
+            let resp = client.call(&req)?;
+            println!(
+                "quantize {name} W{bits}: {} layers in {:.1} ms wall \
+                 ({:.2} ms/layer, {} flips)",
+                resp.req("layers")?.as_usize()?,
+                resp.req("wall_ms")?.as_f64()?,
+                resp.req("avg_layer_ms")?.as_f64()?,
+                resp.req("flips")?.as_usize()?
+            );
+        }
+    }
+
+    // One full quantize+eval round trip on a subsample.
+    let req = Json::obj()
+        .set("cmd", "eval")
+        .set("model", names[0].as_str())
+        .set("wbits", 4usize)
+        .set("abits", 8usize)
+        .set("samples", 256usize);
+    let resp = client.call(&req)?;
+    println!(
+        "eval {} W4A8 on {} samples: top-1 {:.2}% (quantized in {:.1} ms)",
+        names[0],
+        resp.req("samples")?.as_usize()?,
+        resp.req("top1")?.as_f64()? * 100.0,
+        resp.req("quant_ms")?.as_f64()?
+    );
+
+    let _ = client.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?)?;
+    // Nudge the accept loop so it notices the stop flag.
+    let _ = std::net::TcpStream::connect(addr);
+    let _ = server.join();
+    println!("service stopped cleanly");
+    Ok(())
+}

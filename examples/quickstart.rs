@@ -1,0 +1,53 @@
+//! Quickstart: the 60-second tour of the SQuant API.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Loads a trained model from `artifacts/`, quantizes one layer and then
+//! the whole network on the fly, and shows the CASE objective + accuracy
+//! effect.  Requires `make artifacts`.
+
+use anyhow::Result;
+use squant::coordinator::quantize_model;
+use squant::eval::{accuracy, tables::Env};
+use squant::quant::{channel_scales, perturbation, quantize_rtn, QuantConfig};
+use squant::squant::{case_objective, squant, SquantOpts};
+use squant::util::pool::default_threads;
+
+fn main() -> Result<()> {
+    let env = Env::load("artifacts")?;
+    let (graph, params) = env.model("miniresnet18")?;
+    println!("model: {} ({} quantizable layers, {} weights)",
+             graph.name, graph.quant_layers().len(), graph.weight_count());
+
+    // --- 1. Quantize a single layer ------------------------------------
+    let layer = &graph.quant_layers()[1];
+    let w = &params[&layer.weight];
+    let bits = 4;
+    let scales = channel_scales(w, QuantConfig::new(bits));
+    let res = squant(w, &scales, SquantOpts::full(bits));
+    let q_rtn = quantize_rtn(w, &scales, bits);
+    println!(
+        "\nlayer {} (M={}, N={}, K={}): {} kernel flips, {} channel flips",
+        layer.weight, layer.m, layer.n, layer.k, res.flips_k, res.flips_c
+    );
+    println!(
+        "CASE objective: rtn {:.2} -> squant {:.2}",
+        case_objective(&perturbation(w, &q_rtn, &scales)),
+        case_objective(&perturbation(w, &res.q, &scales))
+    );
+
+    // --- 2. Quantize the whole network on the fly ----------------------
+    let threads = default_threads();
+    let (qparams, report) =
+        quantize_model(&graph, &params, SquantOpts::full(bits), threads);
+    println!(
+        "\nwhole network: {:.1} ms wall ({:.2} ms/layer avg) on {threads} threads",
+        report.wall_ms, report.avg_layer_ms()
+    );
+
+    // --- 3. Accuracy before/after --------------------------------------
+    let fp32 = accuracy(&graph, &params, None, &env.test, 256, threads)?;
+    let q4 = accuracy(&graph, &qparams, None, &env.test, 256, threads)?;
+    println!("top-1: fp32 {:.2}% -> W4 squant {:.2}%", fp32 * 100.0, q4 * 100.0);
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time Python package: JAX model zoo + Pallas kernels + AOT lowering.
+
+Nothing in here runs at serving time — `make artifacts` invokes
+``python -m compile.aot`` once, producing HLO text + SQNT containers that the
+Rust coordinator consumes.
+"""

@@ -1,0 +1,140 @@
+"""AOT lowering: JAX → HLO text artifacts consumed by the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifacts produced in --out (default ../artifacts):
+
+  synthimagenet_{train,test}.bin       dataset (via compile.train)
+  <model>.sqnt                         trained weights + IR (via compile.train)
+  <model>_fwd_b{B}.hlo.txt             eval forward, params as HLO inputs
+  squant_m{M}_n{N}_k{K}_b{bits}.hlo.txt  SQuant E→K→C for one weight shape
+  manifest.json                        index of everything above
+
+`make artifacts` is incremental: existing files are kept unless --force.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import ir as irmod, model as modelmod, sqnt, train as trainmod
+
+FWD_BATCHES = (1, 256)
+SQUANT_BITS = (4, 8)
+# SQuant AOT offload artifacts are lowered for this model's layer shapes (the
+# cross-validation + offload demo target); the Rust native path covers every
+# model and bit-width.
+SQUANT_AOT_MODEL = "miniresnet18"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_forward(ir, batch: int) -> str:
+    c, h, w = ir["input_shape"]
+    x_spec = jax.ShapeDtypeStruct((batch, c, h, w), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(tuple(s["shape"]), jnp.float32)
+               for s in ir["params"]]
+
+    def fn(x, *params):
+        return modelmod.forward_flat(ir, x, params, use_pallas_fc=True)
+
+    return to_hlo_text(jax.jit(fn).lower(x_spec, *p_specs))
+
+
+def lower_squant(m: int, n: int, k: int, bits: int) -> str:
+    w_spec = jax.ShapeDtypeStruct((m, n, k), jnp.float32)
+    s_spec = jax.ShapeDtypeStruct((m,), jnp.float32)
+
+    def fn(w, s):
+        return modelmod.squant_graph(w, s, bits=bits)
+
+    return to_hlo_text(jax.jit(fn).lower(w_spec, s_spec))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="fail if weights are missing instead of training")
+    ap.add_argument("--epochs", type=int, default=trainmod.EPOCHS)
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    # ---- 1. dataset + trained models (compile.train) ----------------------
+    train_data, test_data = trainmod.ensure_dataset(out)
+    for name in irmod.ZOO:
+        path = os.path.join(out, f"{name}.sqnt")
+        if os.path.exists(path) and not args.force:
+            continue
+        if args.skip_train:
+            raise FileNotFoundError(path)
+        print(f"training {name} ...")
+        ir, params, meta = trainmod.train_model(
+            name, train_data, test_data, epochs=args.epochs)
+        sqnt.write_sqnt(path, ir, params, meta)
+        print(f"wrote {path} (test_acc={meta['test_acc']})")
+
+    manifest = {"models": {}, "squant": [], "dataset": {
+        "train": "synthimagenet_train.bin", "test": "synthimagenet_test.bin"}}
+
+    # ---- 2. forward HLOs ---------------------------------------------------
+    for name in irmod.ZOO:
+        header, _ = sqnt.read_sqnt(os.path.join(out, f"{name}.sqnt"))
+        ir = {k: header[k] for k in
+              ("name", "input_shape", "num_classes", "nodes")}
+        ir["params"] = [{"name": t["name"], "shape": t["shape"]}
+                        for t in header["tensors"]]
+        entry = {"sqnt": f"{name}.sqnt", "forward": {},
+                 "param_order": [t["name"] for t in header["tensors"]],
+                 "meta": header["meta"]}
+        for b in FWD_BATCHES:
+            fname = f"{name}_fwd_b{b}.hlo.txt"
+            fpath = os.path.join(out, fname)
+            if not os.path.exists(fpath) or args.force:
+                print(f"lowering {fname} ...")
+                with open(fpath, "w") as f:
+                    f.write(lower_forward(ir, b))
+            entry["forward"][str(b)] = fname
+        manifest["models"][name] = entry
+
+    # ---- 3. SQuant offload HLOs -------------------------------------------
+    header, _ = sqnt.read_sqnt(os.path.join(out, f"{SQUANT_AOT_MODEL}.sqnt"))
+    ir = {k: header[k] for k in ("name", "input_shape", "num_classes", "nodes")}
+    ir["params"] = [{"name": t["name"], "shape": t["shape"]}
+                    for t in header["tensors"]]
+    shapes = sorted({mnk for _, _, mnk in irmod.quantizable_layers(ir)})
+    for (m, n, k) in shapes:
+        for bits in SQUANT_BITS:
+            fname = f"squant_m{m}_n{n}_k{k}_b{bits}.hlo.txt"
+            fpath = os.path.join(out, fname)
+            if not os.path.exists(fpath) or args.force:
+                print(f"lowering {fname} ...")
+                with open(fpath, "w") as f:
+                    f.write(lower_squant(m, n, k, bits))
+            manifest["squant"].append(
+                {"m": m, "n": n, "k": k, "bits": bits, "file": fname})
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest written: {len(manifest['models'])} models, "
+          f"{len(manifest['squant'])} squant artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Shared constants and numeric helpers for the SQuant compile pipeline.
+
+Everything here must stay bit-compatible with the Rust implementation in
+``rust/src`` — in particular the rounding convention.  Both layers use
+*round-half-up* implemented as ``floor(x + 0.5)`` (NOT banker's rounding,
+which is what ``jnp.round`` / ``f32::round_ties_even`` would give), so that
+the native Rust SQuant and the AOT JAX/Pallas SQuant agree bit-exactly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Global seeds / dataset geometry (mirrored by rust/src/io/dataset.rs).
+# ---------------------------------------------------------------------------
+DATASET_SEED = 20220131  # ICLR 2022 :-)
+NUM_CLASSES = 10
+IMG_C, IMG_H, IMG_W = 3, 32, 32
+TRAIN_N = 8192
+TEST_N = 2048
+
+# Container magics (mirrored by rust/src/io/*.rs).
+SQNT_MAGIC = b"SQNT"
+SQNT_VERSION = 1
+DSET_MAGIC = b"SDSB"
+DSET_VERSION = 1
+
+
+def rn(x):
+    """Round-half-up for jnp arrays: floor(x + 0.5).
+
+    Matches ``squant::quant::rn`` on the Rust side.  We deliberately avoid
+    ``jnp.round`` (ties-to-even) so the two SQuant implementations are
+    bit-identical on .5 grid points.
+    """
+    return jnp.floor(x + 0.5)
+
+
+def rn_np(x):
+    """Numpy twin of :func:`rn`."""
+    return np.floor(x + 0.5)
+
+
+def qrange(bits: int):
+    """Symmetric signed integer grid for ``bits``-bit quantization.
+
+    Returns (qmin, qmax) = (-(2^{b-1} - 1), 2^{b-1} - 1).  The grid is
+    symmetric (no -2^{b-1}) which keeps per-channel symmetric quantization
+    sign-balanced — the convention SQuant and all our baselines use.
+    """
+    qmax = (1 << (bits - 1)) - 1
+    return -qmax, qmax
+
+
+def channel_scales(w2d, bits: int):
+    """Per-output-channel max-abs scales for a (M, N*K) weight matrix."""
+    _, qmax = qrange(bits)
+    absmax = jnp.max(jnp.abs(w2d), axis=1)
+    # Guard all-zero channels.
+    absmax = jnp.where(absmax <= 0.0, 1.0, absmax)
+    return absmax / qmax

@@ -1,0 +1,139 @@
+"""SynthImageNet: a deterministic, procedurally generated image-classification
+dataset standing in for ImageNet (which is unavailable in this environment —
+see DESIGN.md §2 for the substitution argument).
+
+Ten classes, 32x32x3.  Each class is a parametric texture family:
+
+  * an oriented sinusoidal grating (class-specific orientation + frequency,
+    with per-sample jitter and random phase),
+  * a class-specific base colour palette (with per-sample jitter),
+  * 1-3 soft elliptical blobs at class-biased positions,
+  * additive Gaussian pixel noise.
+
+Adjacent classes use adjacent orientations/frequencies so the decision
+boundary is genuinely non-trivial; the trained models end up with weight
+distributions whose low-bit quantization behaviour mirrors the paper's
+regime (graceful at 8 bits, painful at 4, catastrophic for naive rounding
+at 3).
+
+The generator is pure numpy + a counter-based RNG seeded from
+(DATASET_SEED, split, index), so train/test splits are disjoint and every
+regeneration is bit-identical — the Rust side just loads the exported bin.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (
+    DATASET_SEED,
+    DSET_MAGIC,
+    DSET_VERSION,
+    IMG_C,
+    IMG_H,
+    IMG_W,
+    NUM_CLASSES,
+    TEST_N,
+    TRAIN_N,
+)
+
+# Class palette anchors (RGB in [0,1]); deliberately overlapping hues.
+_PALETTE = np.array(
+    [
+        [0.85, 0.30, 0.25],
+        [0.80, 0.55, 0.20],
+        [0.75, 0.75, 0.25],
+        [0.40, 0.75, 0.30],
+        [0.25, 0.70, 0.60],
+        [0.25, 0.55, 0.80],
+        [0.35, 0.35, 0.85],
+        [0.60, 0.30, 0.80],
+        [0.80, 0.30, 0.65],
+        [0.55, 0.55, 0.55],
+    ],
+    dtype=np.float32,
+)
+
+
+def _sample_rng(split: str, idx: int) -> np.random.Generator:
+    salt = 0 if split == "train" else 1_000_000_007
+    return np.random.default_rng((DATASET_SEED, salt, idx))
+
+
+def make_image(cls: int, split: str, idx: int) -> np.ndarray:
+    """Generate one CHW float32 image in [-1, 1] for class ``cls``."""
+    rng = _sample_rng(split, idx)
+    yy, xx = np.meshgrid(
+        np.linspace(-1.0, 1.0, IMG_H, dtype=np.float32),
+        np.linspace(-1.0, 1.0, IMG_W, dtype=np.float32),
+        indexing="ij",
+    )
+
+    # Oriented grating: classes live 18 degrees apart with +-9 deg jitter,
+    # frequency alternates between two bands per class parity.
+    theta = np.deg2rad(cls * 18.0 + rng.uniform(-9.0, 9.0))
+    freq = 3.0 + (cls % 5) * 1.1 + rng.uniform(-0.5, 0.5)
+    phase = rng.uniform(0.0, 2.0 * np.pi)
+    u = np.cos(theta) * xx + np.sin(theta) * yy
+    grating = 0.5 * np.sin(2.0 * np.pi * freq * u + phase).astype(np.float32)
+
+    # Colour field: palette anchor + jitter, modulated by the grating.
+    color = _PALETTE[cls] + rng.uniform(-0.12, 0.12, size=3).astype(np.float32)
+    img = np.empty((IMG_C, IMG_H, IMG_W), dtype=np.float32)
+    for c in range(IMG_C):
+        img[c] = color[c] * (0.6 + 0.4 * grating)
+
+    # Soft elliptical blobs at class-biased positions.
+    n_blobs = 1 + int(rng.integers(0, 3))
+    bias = np.array(
+        [np.cos(cls * 0.63), np.sin(cls * 0.63)], dtype=np.float32
+    )
+    for _ in range(n_blobs):
+        cx = np.clip(0.45 * bias[0] + rng.normal(0.0, 0.35), -0.9, 0.9)
+        cy = np.clip(0.45 * bias[1] + rng.normal(0.0, 0.35), -0.9, 0.9)
+        sx = rng.uniform(0.08, 0.30)
+        sy = rng.uniform(0.08, 0.30)
+        amp = rng.uniform(0.25, 0.6) * (1.0 if rng.random() < 0.5 else -1.0)
+        blob = amp * np.exp(
+            -(((xx - cx) / sx) ** 2 + ((yy - cy) / sy) ** 2)
+        ).astype(np.float32)
+        ch = int(rng.integers(0, IMG_C))
+        img[ch] += blob
+
+    # Pixel noise, then map to roughly [-1, 1].
+    img += rng.normal(0.0, 0.15, size=img.shape).astype(np.float32)
+    img = 2.0 * img - 1.0
+    return np.clip(img, -1.5, 1.5).astype(np.float32)
+
+
+def make_split(split: str, n: int):
+    """Generate (images[N,C,H,W] f32, labels[N] i32); labels round-robin."""
+    imgs = np.empty((n, IMG_C, IMG_H, IMG_W), dtype=np.float32)
+    labels = np.empty((n,), dtype=np.int32)
+    for i in range(n):
+        cls = i % NUM_CLASSES
+        imgs[i] = make_image(cls, split, i)
+        labels[i] = cls
+    # Deterministic shuffle so batches are class-mixed.
+    rng = np.random.default_rng((DATASET_SEED, 42, 0 if split == "train" else 1))
+    perm = rng.permutation(n)
+    return imgs[perm], labels[perm]
+
+
+def write_dataset_bin(path: str, imgs: np.ndarray, labels: np.ndarray) -> None:
+    """SDSB container (mirrored by rust/src/io/dataset.rs):
+
+    magic[4] | version u32 | n u32 | c u32 | h u32 | w u32
+    | images f32le[n*c*h*w] | labels u32le[n]
+    """
+    n, c, h, w = imgs.shape
+    with open(path, "wb") as f:
+        f.write(DSET_MAGIC)
+        header = np.array([DSET_VERSION, n, c, h, w], dtype="<u4")
+        f.write(header.tobytes())
+        f.write(imgs.astype("<f4").tobytes())
+        f.write(labels.astype("<u4").tobytes())
+
+
+def default_splits():
+    return make_split("train", TRAIN_N), make_split("test", TEST_N)

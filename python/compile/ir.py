@@ -1,0 +1,327 @@
+"""Model IR shared between the Python (build-time) and Rust (run-time) sides.
+
+A model is a topologically ordered list of nodes; each node consumes the
+outputs of earlier nodes and may reference named parameter tensors.  The same
+JSON-serialized IR is embedded in the SQNT weight container and interpreted
+by both the JAX executor (`model.py`, for training + AOT lowering) and the
+Rust native engine (`rust/src/nn/`).
+
+Ops
+---
+  input                                  — placeholder, NCHW
+  conv2d   {stride, pad, groups}         — weight [O, I/g, KH, KW], bias opt.
+  batchnorm{eps}                         — gamma/beta/mean/var, per channel
+  relu
+  maxpool  {k, s} / avgpool {k, s}
+  gap                                    — global average pool -> [N, C]
+  linear                                 — weight [O, I], bias opt.
+  add                                    — elementwise (residual)
+  concat                                 — channel concat
+  channel_shuffle {groups}
+  flatten
+
+The five architectures are miniature analogs of the paper's evaluation zoo
+(ResNet18/50, InceptionV3, SqueezeNext, ShuffleNet) — see DESIGN.md §2 for
+why each structural feature is preserved.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from .common import IMG_C, NUM_CLASSES
+
+
+class Builder:
+    """Tiny graph builder: methods append a node and return its id."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.nodes = []
+        self.params = []  # (name, shape, init) with init in {he, zeros, ones}
+        self._uid = 0
+        self.input_id = self._node("input", [], {}, {})
+
+    # -- internals ---------------------------------------------------------
+    def _node(self, op, inputs, attrs, params) -> int:
+        self.nodes.append(
+            {"id": len(self.nodes), "op": op, "inputs": list(inputs),
+             "attrs": attrs, "params": params}
+        )
+        return len(self.nodes) - 1
+
+    def _pname(self, kind: str) -> str:
+        self._uid += 1
+        return f"{kind}{self._uid}"
+
+    def _add_param(self, name, shape, init):
+        self.params.append({"name": name, "shape": list(shape), "init": init})
+
+    # -- ops ----------------------------------------------------------------
+    def conv(self, x: int, cin: int, cout: int, kh: int, kw: int,
+             stride: int = 1, pad: Optional[tuple] = None, groups: int = 1,
+             bias: bool = False) -> int:
+        if pad is None:
+            pad = ((kh - 1) // 2, (kw - 1) // 2)  # per-dim "same" padding
+        elif isinstance(pad, int):
+            pad = (pad, pad)
+        wname = self._pname("conv_w")
+        params = {"weight": wname}
+        assert cin % groups == 0 and cout % groups == 0
+        self._add_param(wname, (cout, cin // groups, kh, kw), "he")
+        if bias:
+            bname = self._pname("conv_b")
+            params["bias"] = bname
+            self._add_param(bname, (cout,), "zeros")
+        return self._node(
+            "conv2d", [x],
+            {"stride": stride, "pad": list(pad), "groups": groups,
+             "cin": cin, "cout": cout, "kh": kh, "kw": kw},
+            params,
+        )
+
+    def bn(self, x: int, c: int) -> int:
+        g, b = self._pname("bn_g"), self._pname("bn_b")
+        m, v = self._pname("bn_m"), self._pname("bn_v")
+        self._add_param(g, (c,), "ones")
+        self._add_param(b, (c,), "zeros")
+        self._add_param(m, (c,), "zeros")
+        self._add_param(v, (c,), "ones")
+        return self._node(
+            "batchnorm", [x], {"eps": 1e-5, "c": c},
+            {"gamma": g, "beta": b, "mean": m, "var": v},
+        )
+
+    def relu(self, x: int) -> int:
+        return self._node("relu", [x], {}, {})
+
+    def maxpool(self, x: int, k: int, s: int) -> int:
+        return self._node("maxpool", [x], {"k": k, "s": s}, {})
+
+    def avgpool(self, x: int, k: int, s: int, pad: int = 0) -> int:
+        return self._node("avgpool", [x], {"k": k, "s": s, "pad": pad}, {})
+
+    def gap(self, x: int) -> int:
+        return self._node("gap", [x], {}, {})
+
+    def linear(self, x: int, cin: int, cout: int, bias: bool = True) -> int:
+        wname = self._pname("fc_w")
+        params = {"weight": wname}
+        self._add_param(wname, (cout, cin), "he")
+        if bias:
+            bname = self._pname("fc_b")
+            params["bias"] = bname
+            self._add_param(bname, (cout,), "zeros")
+        return self._node("linear", [x],
+                          {"cin": cin, "cout": cout}, params)
+
+    def add(self, a: int, b: int) -> int:
+        return self._node("add", [a, b], {}, {})
+
+    def concat(self, xs) -> int:
+        return self._node("concat", list(xs), {}, {})
+
+    def shuffle(self, x: int, groups: int) -> int:
+        return self._node("channel_shuffle", [x], {"groups": groups}, {})
+
+    # -- composite helpers ---------------------------------------------------
+    def conv_bn_relu(self, x, cin, cout, kh, kw, stride=1, groups=1, pad=None):
+        x = self.conv(x, cin, cout, kh, kw, stride=stride, groups=groups, pad=pad)
+        x = self.bn(x, cout)
+        return self.relu(x)
+
+    def to_ir(self) -> dict:
+        return {
+            "name": self.name,
+            "input_shape": [IMG_C, 32, 32],
+            "num_classes": NUM_CLASSES,
+            "nodes": self.nodes,
+            "params": self.params,
+        }
+
+
+# ===========================================================================
+# Architectures
+# ===========================================================================
+
+def mini_resnet18() -> dict:
+    """Basic-block residual net: stem + 4 stages x 2 blocks, widths 8..64.
+
+    18 weighted conv/fc layers, mirroring ResNet18's structure (3x3 convs,
+    1x1 projection shortcuts on downsample)."""
+    b = Builder("miniresnet18")
+    widths = [8, 16, 32, 64]
+    x = b.conv_bn_relu(b.input_id, IMG_C, widths[0], 3, 3)
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        for bi in range(2):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            identity = x
+            y = b.conv_bn_relu(x, cin, w, 3, 3, stride=stride)
+            y = b.conv(y, w, w, 3, 3)
+            y = b.bn(y, w)
+            if stride != 1 or cin != w:
+                identity = b.conv(x, cin, w, 1, 1, stride=stride)
+                identity = b.bn(identity, w)
+            x = b.relu(b.add(y, identity))
+            cin = w
+    x = b.gap(x)
+    b.linear(x, widths[-1], NUM_CLASSES)
+    return b.to_ir()
+
+
+def mini_resnet50() -> dict:
+    """Bottleneck residual net (1x1 -> 3x3 -> 1x1 x4 expansion): heavy on the
+    K=1 path which SQuant treats specially (SQuant-K skipped)."""
+    b = Builder("miniresnet50")
+    widths = [8, 16, 32]
+    blocks = [2, 3, 2]
+    exp = 4
+    x = b.conv_bn_relu(b.input_id, IMG_C, widths[0], 3, 3)
+    cin = widths[0]
+    for si, (w, nb) in enumerate(zip(widths, blocks)):
+        for bi in range(nb):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            identity = x
+            y = b.conv_bn_relu(x, cin, w, 1, 1)
+            y = b.conv_bn_relu(y, w, w, 3, 3, stride=stride)
+            y = b.conv(y, w, w * exp, 1, 1)
+            y = b.bn(y, w * exp)
+            if stride != 1 or cin != w * exp:
+                identity = b.conv(x, cin, w * exp, 1, 1, stride=stride)
+                identity = b.bn(identity, w * exp)
+            x = b.relu(b.add(y, identity))
+            cin = w * exp
+    x = b.gap(x)
+    b.linear(x, widths[-1] * exp, NUM_CLASSES)
+    return b.to_ir()
+
+
+def _inception_block(b: Builder, x: int, cin: int, c1, c3r, c3, c5r, c5, cp):
+    br1 = b.conv_bn_relu(x, cin, c1, 1, 1)
+    br2 = b.conv_bn_relu(x, cin, c3r, 1, 1)
+    br2 = b.conv_bn_relu(br2, c3r, c3, 3, 3)
+    br3 = b.conv_bn_relu(x, cin, c5r, 1, 1)
+    br3 = b.conv_bn_relu(br3, c5r, c5, 5, 5)
+    br4 = b.avgpool(x, 3, 1, pad=1)
+    br4 = b.conv_bn_relu(br4, cin, cp, 1, 1)
+    return b.concat([br1, br2, br3, br4]), c1 + c3 + c5 + cp
+
+
+def mini_inception() -> dict:
+    """GoogLeNet/InceptionV3-style: mixed 1x1/3x3/5x5 branches + concat.
+
+    Exercises K in {1, 9, 25} and the concat path."""
+    b = Builder("miniinception")
+    x = b.conv_bn_relu(b.input_id, IMG_C, 16, 3, 3)
+    x = b.maxpool(x, 2, 2)  # 16x16
+    x, c = _inception_block(b, x, 16, 8, 8, 12, 4, 6, 6)   # 32
+    x, c = _inception_block(b, x, c, 12, 8, 16, 4, 8, 8)   # 44
+    x = b.conv_bn_relu(x, c, 48, 3, 3, stride=2)           # 8x8
+    x, c = _inception_block(b, x, 48, 16, 12, 24, 6, 12, 12)  # 64
+    x = b.gap(x)
+    b.linear(x, c, NUM_CLASSES)
+    return b.to_ir()
+
+
+def mini_squeezenext() -> dict:
+    """SqueezeNext-style low-rank blocks: 1x1 reduce, separable 1x3 + 3x1,
+    1x1 expand, residual.  Exercises rectangular kernels (K=3)."""
+    b = Builder("minisqueezenext")
+    x = b.conv_bn_relu(b.input_id, IMG_C, 16, 3, 3)
+    cin = 16
+    plan = [(16, 1), (16, 1), (32, 2), (32, 1), (64, 2), (64, 1)]
+    for cout, stride in plan:
+        identity = x
+        h = b.conv_bn_relu(x, cin, cout // 2, 1, 1, stride=stride)
+        h = b.conv_bn_relu(h, cout // 2, cout // 4, 1, 1)
+        h = b.conv_bn_relu(h, cout // 4, cout // 2, 1, 3)
+        h = b.conv_bn_relu(h, cout // 2, cout // 2, 3, 1)
+        h = b.conv(h, cout // 2, cout, 1, 1)
+        h = b.bn(h, cout)
+        if stride != 1 or cin != cout:
+            identity = b.conv(x, cin, cout, 1, 1, stride=stride)
+            identity = b.bn(identity, cout)
+        x = b.relu(b.add(h, identity))
+        cin = cout
+    x = b.gap(x)
+    b.linear(x, cin, NUM_CLASSES)
+    return b.to_ir()
+
+
+def mini_shufflenet() -> dict:
+    """ShuffleNet-style units: grouped 1x1 conv + channel shuffle + depthwise
+    3x3.  Exercises groups>1 and depthwise (N=1) — the degenerate SQuant-C
+    case."""
+    b = Builder("minishufflenet")
+    g = 4
+    x = b.conv_bn_relu(b.input_id, IMG_C, 16, 3, 3)
+    cin = 16
+
+    def unit(x, cin, cout, stride):
+        mid = cout // 4
+        h = b.conv_bn_relu(x, cin, mid, 1, 1, groups=g)
+        h = b.shuffle(h, g)
+        h = b.conv(h, mid, mid, 3, 3, stride=stride, groups=mid)  # depthwise
+        h = b.bn(h, mid)
+        branch_out = cout - cin if stride == 2 else cout
+        h = b.conv(h, mid, branch_out, 1, 1, groups=g)
+        h = b.bn(h, branch_out)
+        if stride == 2:
+            short = b.avgpool(x, 2, 2)
+            return b.relu(b.concat([h, short])), cout
+        else:
+            return b.relu(b.add(h, x)), cout
+
+    x, cin = unit(x, cin, 32, 2)
+    x, cin = unit(x, cin, 32, 1)
+    x, cin = unit(x, cin, 64, 2)
+    x, cin = unit(x, cin, 64, 1)
+    x = b.gap(x)
+    b.linear(x, cin, NUM_CLASSES)
+    return b.to_ir()
+
+
+ZOO = {
+    "miniresnet18": mini_resnet18,
+    "miniresnet50": mini_resnet50,
+    "miniinception": mini_inception,
+    "minisqueezenext": mini_squeezenext,
+    "minishufflenet": mini_shufflenet,
+}
+
+
+def quantizable_layers(ir: dict):
+    """Yield (node, weight_name, (M, N, K)) for every conv2d/linear node.
+
+    M = output channels, N = input channels per group, K = kh*kw — the
+    weight-tensor view SQuant operates on (per-group weights are treated as
+    independent channel sets, matching the Rust side)."""
+    for node in ir["nodes"]:
+        if node["op"] == "conv2d":
+            a = node["attrs"]
+            yield node, node["params"]["weight"], (
+                a["cout"], a["cin"] // a["groups"], a["kh"] * a["kw"])
+        elif node["op"] == "linear":
+            a = node["attrs"]
+            yield node, node["params"]["weight"], (a["cout"], a["cin"], 1)
+
+
+def init_params(ir: dict, seed: int = 0):
+    """He-normal initialization, numpy (deterministic, shared convention)."""
+    import numpy as np
+
+    rng = np.random.default_rng((seed, hash(ir["name"]) & 0xFFFF))
+    out = {}
+    for spec in ir["params"]:
+        shape, init = tuple(spec["shape"]), spec["init"]
+        if init == "he":
+            fan_in = int(math.prod(shape[1:])) if len(shape) > 1 else shape[0]
+            std = math.sqrt(2.0 / max(fan_in, 1))
+            out[spec["name"]] = rng.normal(0.0, std, size=shape).astype("float32")
+        elif init == "ones":
+            out[spec["name"]] = np.ones(shape, dtype="float32")
+        else:
+            out[spec["name"]] = np.zeros(shape, dtype="float32")
+    return out

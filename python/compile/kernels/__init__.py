@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + reference oracles for the SQuant compile pipeline."""
+
+from . import fake_quant, qmatmul, ref, squant_flip  # noqa: F401

@@ -1,0 +1,49 @@
+"""Pallas per-channel fake-quantization kernel.
+
+Quantize-dequantize of a (rows, cols) weight matrix with one scale per row
+(per output channel).  Used by the AOT eval graphs and as the simplest L1
+kernel — it doubles as the round-to-nearest (SQuant-E / DFQ) baseline's hot
+path on the accelerator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_BLOCK = 64
+
+
+def _fq_body(w_ref, s_ref, o_ref, *, qmin: float, qmax: float):
+    w = w_ref[...]
+    s = s_ref[...][:, None]
+    q = jnp.clip(jnp.floor(w / s + 0.5), qmin, qmax)
+    o_ref[...] = q * s
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "row_block"))
+def fake_quant(w, s, *, qmin: float, qmax: float,
+               row_block: int = DEFAULT_ROW_BLOCK):
+    """Per-row fake-quant: clip(rn(w/s), qmin, qmax) * s."""
+    r, c = w.shape
+    rb = min(row_block, r) if r > 0 else 1
+    pad = (-r) % rb
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        s = jnp.pad(s, (0, pad), constant_values=1.0)
+    rp = w.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_fq_body, qmin=float(qmin), qmax=float(qmax)),
+        grid=(rp // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, c), lambda i: (i, 0)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        interpret=True,
+    )(w, s)
+    return out[:r] if pad else out

@@ -1,0 +1,61 @@
+"""Pallas quantized matmul: y = x @ (q * s).T with dequantize-on-load.
+
+The inference hot path for FC layers (and im2col'd convolutions) when weights
+are stored as integer grid points + per-channel scales.  On a real TPU the
+(bb, in) x (ob, in) tile contraction maps onto the MXU systolic array with the
+dequantize fused into the load; under interpret=True it lowers to plain HLO
+dot + multiply, which is what the CPU PJRT client executes.
+
+Tiling: grid is (B/bb, O/ob); each program instance keeps one x tile and one
+dequantized weight tile in VMEM.  The contraction (`in`) dimension is loaded
+whole — every layer in the zoo has in <= 1600 floats per row, far under VMEM
+budget (see DESIGN.md §Perf for the footprint table).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_B_BLOCK = 32
+DEFAULT_O_BLOCK = 32
+
+
+def _qmm_body(x_ref, q_ref, s_ref, o_ref):
+    x = x_ref[...]                       # (bb, in)
+    w = q_ref[...] * s_ref[...][:, None]  # dequantize-on-load (ob, in)
+    o_ref[...] = x @ w.T
+
+
+@functools.partial(jax.jit, static_argnames=("b_block", "o_block"))
+def qmatmul(x, q, s, *, b_block: int = DEFAULT_B_BLOCK,
+            o_block: int = DEFAULT_O_BLOCK):
+    """x (B, IN) @ dequant(q (O, IN), s (O,)).T -> (B, O), all float32."""
+    b, cin = x.shape
+    o, cin2 = q.shape
+    assert cin == cin2, (cin, cin2)
+    bb = min(b_block, b) if b > 0 else 1
+    ob = min(o_block, o) if o > 0 else 1
+    pb, po = (-b) % bb, (-o) % ob
+    if pb:
+        x = jnp.pad(x, ((0, pb), (0, 0)))
+    if po:
+        q = jnp.pad(q, ((0, po), (0, 0)))
+        s = jnp.pad(s, (0, po))
+    bp, op_ = x.shape[0], q.shape[0]
+    out = pl.pallas_call(
+        _qmm_body,
+        grid=(bp // bb, op_ // ob),
+        in_specs=[
+            pl.BlockSpec((bb, cin), lambda i, j: (i, 0)),
+            pl.BlockSpec((ob, cin), lambda i, j: (j, 0)),
+            pl.BlockSpec((ob,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bb, ob), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, op_), jnp.float32),
+        interpret=True,
+    )(x, q, s)
+    return out[:b, :o]

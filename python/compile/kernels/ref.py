@@ -1,0 +1,209 @@
+"""Pure-numpy reference oracles for every kernel in the stack.
+
+These are the *semantic ground truth*: slow, loop-based, written to follow
+the paper's Algorithms 1/2/4 line by line.  Both the Pallas kernels (L1) and
+the Rust native implementation (L3, ``rust/src/squant``) are tested against
+the behaviour defined here; the Rust integration suite additionally checks
+bit-exact agreement with the AOT HLO produced from the Pallas path.
+
+Shared semantic decisions (mirrored in rust/src/squant/mod.rs):
+
+* rounding is round-half-up: rn(x) = floor(x + 0.5);
+* sign(0) = 0; a kernel/channel with exactly zero accumulated error is left
+  untouched and produces no flip candidate;
+* top-k selection breaks |perturbation| ties towards the lower index;
+* a flip that would leave the integer grid [qmin, qmax] is infeasible: the
+  element is not eligible, and k is clamped to the number of eligible
+  elements (the paper assumes an unbounded grid; real fixed-point grids
+  saturate, see DESIGN.md);
+* SQuant-K is skipped for K == 1 (FC / 1x1 conv), per paper §3.4; the
+  flip candidate for such kernels is the element itself;
+* SQuant-C flips at most one element per kernel (the Alg. 4 candidate).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def rn(x):
+    return np.floor(x + 0.5)
+
+
+def qrange(bits: int):
+    qmax = (1 << (bits - 1)) - 1
+    return -qmax, qmax
+
+
+def sign(x: float) -> float:
+    return 1.0 if x > 0 else (-1.0 if x < 0 else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Flip algorithm (paper Algorithm 2) on one row, with Algorithm 4 candidate
+# bookkeeping fused (the paper fuses them too, §B.3).
+# ---------------------------------------------------------------------------
+
+def flip_row(q, p, e, qmin, qmax):
+    """SQuantFlip on one row (kernel): mutates q, p in place.
+
+    Returns (cand_idx, cand_val): the single follow-up flip candidate this
+    row exposes to the next granularity level (Algorithm 4), or (-1, 0.0)
+    when the row has none.
+    """
+    sgn = sign(e)
+    if sgn == 0.0:
+        return -1, 0.0
+    elig = (p * sgn > 0) & (q - sgn >= qmin) & (q - sgn <= qmax)
+    n_elig = int(elig.sum())
+    k = int(rn(abs(e)))
+    k = min(k, n_elig)
+
+    # Selection order: eligible elements by descending |p|, ties -> lower idx.
+    order = sorted(np.nonzero(elig)[0], key=lambda j: (-abs(p[j]), j))
+    for j in order[:k]:
+        q[j] -= sgn
+        p[j] -= sgn
+
+    over = k > abs(e)
+    if over and k >= 1:
+        j = order[k - 1]          # last flipped: largest post-flip |p|
+        return int(j), float(p[j])
+    if not over and k < n_elig:
+        j = order[k]              # first unflipped eligible element
+        return int(j), float(p[j])
+    return -1, 0.0
+
+
+# ---------------------------------------------------------------------------
+# Progressive SQuant (paper Algorithm 1) on one (M, N, K) weight tensor.
+# ---------------------------------------------------------------------------
+
+def squant_ref(w, scale, bits, enable_k=True, enable_c=True):
+    """Reference progressive SQuant.
+
+    Args:
+      w:      float32 array (M, N, K) — output channel, kernel, element.
+      scale:  float32 array (M,) — per-output-channel scale.
+      bits:   integer bit width (symmetric signed grid).
+      enable_k / enable_c: ablation switches (Table 4).
+
+    Returns (q, wq):
+      q:  int32 grid values (M, N, K)
+      wq: dequantized float32 weights q * scale
+    """
+    w = np.asarray(w, dtype=np.float32)
+    M, N, K = w.shape
+    qmin, qmax = qrange(bits)
+    t = w / scale[:, None, None].astype(np.float32)
+    q = np.clip(rn(t), qmin, qmax).astype(np.float32)
+    p = (q - t).astype(np.float32)
+
+    for m in range(M):
+        if enable_k and K > 1:
+            # SQuant-K per kernel, collecting Algorithm-4 candidates.
+            cand_idx = np.full((N,), -1, dtype=np.int64)
+            cand_val = np.zeros((N,), dtype=np.float32)
+            for n in range(N):
+                e = float(p[m, n].sum())
+                cand_idx[n], cand_val[n] = flip_row(q[m, n], p[m, n], e, qmin, qmax)
+            if enable_c:
+                # SQuant-C flips at most one candidate element per kernel.
+                a = float(p[m].sum())
+                sgn_a = sign(a)
+                if sgn_a != 0.0:
+                    elig = [n for n in range(N)
+                            if cand_idx[n] >= 0 and cand_val[n] * sgn_a > 0]
+                    kc = min(int(rn(abs(a))), len(elig))
+                    elig.sort(key=lambda n: (-abs(cand_val[n]), n))
+                    for n in elig[:kc]:
+                        j = cand_idx[n]
+                        q[m, n, j] -= sgn_a
+                        p[m, n, j] -= sgn_a
+        elif enable_c:
+            # SQuant-K skipped (K == 1, per paper §3.4, or the E&C ablation):
+            # SQuant-C operates directly on the channel's N*K elements as one
+            # flip problem (Eq. 11).
+            qc = q[m].reshape(-1)
+            pc = p[m].reshape(-1)
+            flip_row(qc, pc, float(pc.sum()), qmin, qmax)
+            q[m] = qc.reshape(N, K)
+            p[m] = pc.reshape(N, K)
+
+    wq = q * scale[:, None, None].astype(np.float32)
+    return q.astype(np.int32), wq.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Scales + simple baselines used by pytest cross-checks.
+# ---------------------------------------------------------------------------
+
+def channel_scales_ref(w2d, bits):
+    _, qmax = qrange(bits)
+    absmax = np.abs(w2d).max(axis=1)
+    absmax = np.where(absmax <= 0.0, 1.0, absmax)
+    return (absmax / qmax).astype(np.float32)
+
+
+def rtn_ref(w, scale, bits):
+    """Round-to-nearest (SQuant-E only) oracle."""
+    qmin, qmax = qrange(bits)
+    t = w / scale[:, None, None]
+    q = np.clip(rn(t), qmin, qmax).astype(np.float32)
+    return q.astype(np.int32), (q * scale[:, None, None]).astype(np.float32)
+
+
+def fake_quant_ref(w2d, scale, bits):
+    """Per-row fake-quant oracle for the Pallas fake_quant kernel."""
+    qmin, qmax = qrange(bits)
+    t = w2d / scale[:, None]
+    q = np.clip(rn(t), qmin, qmax)
+    return (q * scale[:, None]).astype(np.float32)
+
+
+def qmatmul_ref(x, q, scale):
+    """x [B, IN] @ dequant(q [OUT, IN] * scale [OUT]).T oracle."""
+    return (x.astype(np.float64) @ (q * scale[:, None]).astype(np.float64).T).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Invariant checkers used by both pytest and hypothesis suites.
+# ---------------------------------------------------------------------------
+
+def perturbation(w, q, scale):
+    t = w / scale[:, None, None]
+    return q - t
+
+
+def check_invariants(w, q, scale, bits, enable_k=True, enable_c=True, atol=1e-4):
+    """Assert the paper's post-conditions (Eq. 9-12) on a SQuant result.
+
+    Returns a dict of the measured maxima so tests can report them.
+    """
+    qmin, qmax = qrange(bits)
+    p = perturbation(np.asarray(w, np.float32), q.astype(np.float32),
+                     np.asarray(scale, np.float32))
+    out = {}
+    assert q.min() >= qmin and q.max() <= qmax, "grid bounds violated"
+    t = np.asarray(w, np.float32) / np.asarray(scale, np.float32)[:, None, None]
+    saturated = (rn(t) < qmin) | (rn(t) > qmax)
+    # Element perturbation bound |dW| < 1 (Eq. 12), unless grid-saturated.
+    if (~saturated).any():
+        out["max_elem"] = float(np.abs(p[~saturated]).max())
+        assert out["max_elem"] < 1.0 + atol, f"|dW|={out['max_elem']}"
+    if not saturated.any():
+        K = w.shape[2]
+        if enable_k and K > 1:
+            ase = np.abs(p.sum(axis=-1))
+            bound = 1.0 if enable_c else 0.5
+            out["max_kernel_ase"] = float(ase.max())
+            assert out["max_kernel_ase"] <= bound + atol, (
+                f"kernel ASE {out['max_kernel_ase']} > {bound}")
+        if enable_c:
+            chan = np.abs(p.sum(axis=(1, 2)))
+            out["max_channel_ase"] = float(chan.max())
+            assert out["max_channel_ase"] <= 0.5 + atol, (
+                f"channel ASE {out['max_channel_ase']}")
+    return out

@@ -1,0 +1,131 @@
+"""Pallas implementation of the SQuant flip kernel (paper Algorithms 2 + 4).
+
+One program instance processes a block of independent rows.  A "row" is:
+
+  * SQuant-K stage: one convolution kernel — K = kh*kw elements;
+  * SQuant-C stage: one output channel — N candidate perturbations.
+
+This mirrors the paper's GPU mapping (§3.4: "each sub-problem accelerated in
+parallel") onto the Pallas grid: instead of one CUDA threadblock per kernel we
+tile the (rows, K) perturbation matrix into VMEM-resident row blocks
+(BlockSpec), and the per-row top-k is an unrolled masked-argmax loop — K is a
+compile-time constant (<= 25 for the zoo), so the loop becomes straight-line
+vector code on the MXU-free VPU path.  See DESIGN.md §3 (hardware adaptation)
+and §Perf for the block-size study.
+
+Everything here must match ``ref.flip_row`` element-for-element: same
+round-half-up, same sign(0)=0 convention, same tie-breaking (argmax returns
+the lowest index), same grid-saturation masking.
+
+The kernel is always lowered with ``interpret=True``: CPU PJRT cannot run
+Mosaic custom-calls; on a real TPU the same code lowers natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_BLOCK = 64
+
+
+def _flip_body(q_ref, p_ref, e_ref, qo_ref, po_ref, ci_ref, cv_ref,
+               *, width: int, qmin: float, qmax: float):
+    """Process one (RB, width) row block."""
+    q = q_ref[...]
+    p = p_ref[...]
+    e = e_ref[...]
+    rb = q.shape[0]
+
+    sgn = jnp.sign(e)[:, None]                       # (RB, 1)
+    elig = (p * sgn > 0.0) & (q - sgn >= qmin) & (q - sgn <= qmax)
+    n_elig = jnp.sum(elig, axis=1).astype(jnp.float32)
+    k = jnp.minimum(jnp.floor(jnp.abs(e) + 0.5), n_elig)  # (RB,)
+    over = k > jnp.abs(e)
+
+    score = jnp.where(elig, jnp.abs(p), -1.0)
+    rows = jnp.arange(rb)
+    cols = jnp.arange(width)[None, :]
+    cidx = jnp.full((rb,), -1, dtype=jnp.int32)
+    cval = jnp.zeros((rb,), dtype=jnp.float32)
+
+    # Unrolled selection: at step t flip the t-th largest eligible |p|.
+    for t in range(width):
+        j = jnp.argmax(score, axis=1)                # ties -> lowest index
+        valid = score[rows, j] >= 0.0
+        do_flip = (jnp.float32(t) < k) & valid
+        onehot = (cols == j[:, None])
+        step = sgn * do_flip[:, None].astype(jnp.float32)
+        q = q - onehot * step
+        p = p - onehot * step
+        # Algorithm 4 candidate: the k-th flipped element when over-SQuanted
+        # (read *after* the flip), the (k+1)-th eligible element otherwise.
+        take = jnp.where(over,
+                         jnp.float32(t + 1) == k,
+                         jnp.float32(t) == k) & valid
+        cidx = jnp.where(take, j.astype(jnp.int32), cidx)
+        cval = jnp.where(take, p[rows, j], cval)
+        score = jnp.where(onehot, -2.0, score)       # consume
+
+    qo_ref[...] = q
+    po_ref[...] = p
+    ci_ref[...] = cidx
+    cv_ref[...] = cval
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax", "row_block"))
+def flip_rows(q, p, e, *, qmin: float, qmax: float,
+              row_block: int = DEFAULT_ROW_BLOCK):
+    """Batched SQuantFlip over independent rows.
+
+    Args:
+      q: (R, W) float32, integer-valued grid points.
+      p: (R, W) float32, perturbation q - w/s.
+      e: (R,)  float32, accumulated row perturbation (sum of the *full* row —
+         for SQuant-C this is the whole-channel sum, not the candidate sum).
+      qmin/qmax: static grid bounds (pass +-inf-ish for the C stage, where
+         candidate feasibility was already established).
+
+    Returns (q', p', cand_idx i32 (R,), cand_val f32 (R,)).
+    """
+    r, width = q.shape
+    rb = min(row_block, r) if r > 0 else 1
+    pad = (-r) % rb
+    if pad:
+        # Padded rows have e = 0 -> sign 0 -> nothing eligible, no flips.
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        p = jnp.pad(p, ((0, pad), (0, 0)))
+        e = jnp.pad(e, (0, pad))
+    rp = q.shape[0]
+    grid = (rp // rb,)
+
+    body = functools.partial(_flip_body, width=width,
+                             qmin=float(qmin), qmax=float(qmax))
+    qo, po, ci, cv = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, width), lambda i: (i, 0)),
+            pl.BlockSpec((rb, width), lambda i: (i, 0)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rb, width), lambda i: (i, 0)),
+            pl.BlockSpec((rb, width), lambda i: (i, 0)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, width), jnp.float32),
+            jax.ShapeDtypeStruct((rp, width), jnp.float32),
+            jax.ShapeDtypeStruct((rp,), jnp.int32),
+            jax.ShapeDtypeStruct((rp,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, p, e)
+    if pad:
+        qo, po, ci, cv = qo[:r], po[:r], ci[:r], cv[:r]
+    return qo, po, ci, cv

@@ -1,0 +1,183 @@
+"""L2: JAX execution of the model IR + the SQuant computation graph.
+
+Two roles:
+
+1. **Model zoo forward** — interprets the IR from `ir.py` with
+   `lax.conv_general_dilated` etc.  Used for training (`train.py`, BN in
+   batch-stats mode with autodiff) and AOT-lowered in eval mode with all
+   parameters as HLO inputs (so the Rust side can feed *any* — e.g.
+   quantized — weights without re-lowering).
+
+2. **SQuant graph** — the progressive E→K→C algorithm as a pure JAX function
+   calling the L1 Pallas flip kernel, fully vectorized over channels and
+   kernels.  `aot.py` lowers one HLO per distinct (M, N, K) weight shape in
+   the zoo; the Rust coordinator can then offload layer quantization to the
+   PJRT device.  Tested bit-exact against `kernels.ref.squant_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import rn, qrange
+from .kernels import qmatmul as qmm
+from .kernels import squant_flip
+
+# ---------------------------------------------------------------------------
+# IR executor
+# ---------------------------------------------------------------------------
+
+BN_MOMENTUM = 0.9
+
+
+def forward_ir(ir, params, x, train=False, use_pallas_fc=False):
+    """Run the model IR.
+
+    Returns (logits, new_running_stats) where new_running_stats is a dict of
+    updated BN running mean/var tensors (empty in eval mode).
+    """
+    vals = {}
+    new_stats = {}
+    for node in ir["nodes"]:
+        op = node["op"]
+        ins = [vals[i] for i in node["inputs"]]
+        a = node["attrs"]
+        prm = node["params"]
+        if op == "input":
+            out = x
+        elif op == "conv2d":
+            w = params[prm["weight"]]
+            ph, pw = a["pad"]
+            out = lax.conv_general_dilated(
+                ins[0], w,
+                window_strides=(a["stride"], a["stride"]),
+                padding=[(ph, ph), (pw, pw)],
+                feature_group_count=a["groups"],
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )
+            if "bias" in prm:
+                out = out + params[prm["bias"]][None, :, None, None]
+        elif op == "batchnorm":
+            g = params[prm["gamma"]][None, :, None, None]
+            b = params[prm["beta"]][None, :, None, None]
+            if train:
+                mu = jnp.mean(ins[0], axis=(0, 2, 3))
+                var = jnp.var(ins[0], axis=(0, 2, 3))
+                new_stats[prm["mean"]] = (
+                    BN_MOMENTUM * params[prm["mean"]] + (1 - BN_MOMENTUM) * mu)
+                new_stats[prm["var"]] = (
+                    BN_MOMENTUM * params[prm["var"]] + (1 - BN_MOMENTUM) * var)
+            else:
+                mu = params[prm["mean"]]
+                var = params[prm["var"]]
+            inv = lax.rsqrt(var + a["eps"])[None, :, None, None]
+            out = (ins[0] - mu[None, :, None, None]) * inv * g + b
+        elif op == "relu":
+            out = jnp.maximum(ins[0], 0.0)
+        elif op == "maxpool":
+            k, s = a["k"], a["s"]
+            out = lax.reduce_window(
+                ins[0], -jnp.inf, lax.max, (1, 1, k, k), (1, 1, s, s), "VALID")
+        elif op == "avgpool":
+            k, s, pad = a["k"], a["s"], a.get("pad", 0)
+            summed = lax.reduce_window(
+                ins[0], 0.0, lax.add, (1, 1, k, k), (1, 1, s, s),
+                [(0, 0), (0, 0), (pad, pad), (pad, pad)])
+            out = summed / float(k * k)  # count_include_pad=True convention
+        elif op == "gap":
+            out = jnp.mean(ins[0], axis=(2, 3))
+        elif op == "linear":
+            w = params[prm["weight"]]
+            if use_pallas_fc:
+                out = qmm.qmatmul(ins[0], w, jnp.ones((w.shape[0],), jnp.float32))
+            else:
+                out = ins[0] @ w.T
+            if "bias" in prm:
+                out = out + params[prm["bias"]][None, :]
+        elif op == "add":
+            out = ins[0] + ins[1]
+        elif op == "concat":
+            out = jnp.concatenate(ins, axis=1)
+        elif op == "channel_shuffle":
+            g = a["groups"]
+            n, c, h, w_ = ins[0].shape
+            out = ins[0].reshape(n, g, c // g, h, w_).swapaxes(1, 2).reshape(
+                n, c, h, w_)
+        elif op == "flatten":
+            out = ins[0].reshape(ins[0].shape[0], -1)
+        else:
+            raise ValueError(f"unknown op {op}")
+        vals[node["id"]] = out
+    return vals[len(ir["nodes"]) - 1], new_stats
+
+
+def forward_flat(ir, x, flat_params, use_pallas_fc=False):
+    """Eval-mode forward with parameters as a flat list in ir['params'] order
+    — the signature the AOT HLO exposes to the Rust runtime."""
+    params = {spec["name"]: t for spec, t in zip(ir["params"], flat_params)}
+    logits, _ = forward_ir(ir, params, x, train=False,
+                           use_pallas_fc=use_pallas_fc)
+    return (logits,)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized SQuant graph (calls the Pallas flip kernel)
+# ---------------------------------------------------------------------------
+
+def squant_graph(w, scale, *, bits: int):
+    """Progressive SQuant (E→K→C) on a (M, N, K) weight tensor.
+
+    Fully shape-static JAX: `aot.py` lowers one HLO per (M, N, K, bits).
+    Returns (q, wq): integer grid values (as f32) and dequantized weights.
+    """
+    m, n, k = w.shape
+    qmin, qmax = qrange(bits)
+    t = w / scale[:, None, None]
+    q = jnp.clip(rn(t), qmin, qmax)
+    p = q - t
+
+    if k > 1:
+        # --- SQuant-K over M*N kernel rows --------------------------------
+        qr = q.reshape(m * n, k)
+        pr = p.reshape(m * n, k)
+        e = jnp.sum(pr, axis=1)
+        qr, pr, cidx, cval = squant_flip.flip_rows(
+            qr, pr, e, qmin=float(qmin), qmax=float(qmax))
+        q = qr.reshape(m, n, k)
+        p = pr.reshape(m, n, k)
+        cidx = cidx.reshape(m, n)
+        cval = cval.reshape(m, n)
+
+        # --- SQuant-C over channels: rows of N candidate values -----------
+        # Invalid candidates (idx < 0) carry val 0 -> never eligible.
+        a = jnp.sum(p, axis=(1, 2))
+        qv = jnp.zeros((m, n), jnp.float32)  # virtual grid, unconstrained
+        _, pv, _, _ = squant_flip.flip_rows(
+            qv, cval, a, qmin=-1e30, qmax=1e30)
+        flipped = pv != cval                              # (m, n)
+        sgn_a = jnp.sign(a)[:, None]                      # (m, 1)
+        onehot = (jnp.arange(k)[None, None, :] ==
+                  jnp.maximum(cidx, 0)[:, :, None])       # (m, n, k)
+        delta = onehot * (flipped * sgn_a)[:, :, None]
+        q = q - delta
+    else:
+        # K == 1: SQuant-K skipped; SQuant-C flips elements directly over the
+        # flattened channel (paper §3.4).
+        qr = q.reshape(m, n)
+        pr = p.reshape(m, n)
+        a = jnp.sum(pr, axis=1)
+        qr, pr, _, _ = squant_flip.flip_rows(
+            qr, pr, a, qmin=float(qmin), qmax=float(qmax))
+        q = qr.reshape(m, n, 1)
+
+    wq = q * scale[:, None, None]
+    return q, wq
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def squant_jit(w, scale, *, bits: int):
+    return squant_graph(w, scale, bits=bits)

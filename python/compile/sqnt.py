@@ -1,0 +1,79 @@
+"""SQNT weight container: the interchange format between the Python build
+pipeline and the Rust runtime (mirrored by ``rust/src/io/sqnt.rs``).
+
+Layout (all little-endian):
+
+    magic  b"SQNT"
+    version u32
+    header_len u32
+    header  JSON (utf-8), exactly header_len bytes:
+        {
+          "name": str, "input_shape": [c,h,w], "num_classes": int,
+          "nodes": [...],              # model IR (see ir.py)
+          "tensors": [{"name","shape","offset","numel"}, ...],
+          "meta": {...}                # train/test acc, seed, etc.
+        }
+    payload f32le[total_numel]         # tensors concatenated in order
+
+Offsets are in f32 *elements*, not bytes.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+from .common import SQNT_MAGIC, SQNT_VERSION
+
+
+def write_sqnt(path: str, ir: dict, params: dict, meta: dict | None = None):
+    tensors = []
+    blobs = []
+    offset = 0
+    for spec in ir["params"]:
+        name = spec["name"]
+        arr = np.ascontiguousarray(params[name], dtype="<f4")
+        assert list(arr.shape) == list(spec["shape"]), (
+            name, arr.shape, spec["shape"])
+        tensors.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "offset": offset,
+            "numel": int(arr.size),
+        })
+        blobs.append(arr.tobytes())
+        offset += int(arr.size)
+
+    header = {
+        "name": ir["name"],
+        "input_shape": ir["input_shape"],
+        "num_classes": ir["num_classes"],
+        "nodes": ir["nodes"],
+        "tensors": tensors,
+        "meta": meta or {},
+    }
+    hbytes = json.dumps(header, separators=(",", ":")).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(SQNT_MAGIC)
+        f.write(struct.pack("<II", SQNT_VERSION, len(hbytes)))
+        f.write(hbytes)
+        for b in blobs:
+            f.write(b)
+
+
+def read_sqnt(path: str):
+    """Read back a container (used by pytest round-trip checks)."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == SQNT_MAGIC, magic
+        version, hlen = struct.unpack("<II", f.read(8))
+        assert version == SQNT_VERSION
+        header = json.loads(f.read(hlen).decode("utf-8"))
+        payload = np.frombuffer(f.read(), dtype="<f4")
+    params = {}
+    for t in header["tensors"]:
+        arr = payload[t["offset"]:t["offset"] + t["numel"]]
+        params[t["name"]] = arr.reshape(t["shape"]).copy()
+    return header, params

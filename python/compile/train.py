@@ -1,0 +1,175 @@
+"""Training pipeline: fit every zoo model on SynthImageNet, export SQNT
+containers + dataset bins.
+
+This is a *substrate* for the reproduction (the paper quantizes pre-trained
+ImageNet models; we must produce our own converged models — see DESIGN.md
+§2).  SGD with Nesterov momentum, cosine LR, light weight decay, BN in
+batch-stats mode.  Deterministic given the seeds in `common.py`.
+
+Run via ``python -m compile.train --out ../artifacts`` (normally orchestrated
+by ``compile.aot`` / ``make artifacts``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, ir as irmod, model as modelmod, sqnt
+from .common import NUM_CLASSES
+
+BATCH = 128
+EPOCHS = 10
+BASE_LR = 0.08
+WEIGHT_DECAY = 1e-4
+MOMENTUM = 0.9
+TRAIN_SEED = 7
+
+
+def cross_entropy(logits, labels):
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logz, labels[:, None], axis=1))
+
+
+def make_step(ir):
+    decay_names = {
+        spec["name"] for spec in ir["params"]
+        if spec["name"].startswith(("conv_w", "fc_w"))
+    }
+
+    def loss_fn(params, x, y):
+        logits, new_stats = modelmod.forward_ir(ir, params, x, train=True)
+        loss = cross_entropy(logits, y)
+        acc = jnp.mean(jnp.argmax(logits, -1) == y)
+        return loss, (new_stats, acc)
+
+    @jax.jit
+    def step(params, mom, x, y, lr):
+        (loss, (new_stats, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, x, y)
+        new_params, new_mom = {}, {}
+        for k, v in params.items():
+            if k in new_stats:  # BN running stats: assigned, not SGD-updated
+                new_params[k] = new_stats[k]
+                new_mom[k] = mom[k]
+                continue
+            g = grads[k]
+            if k in decay_names:
+                g = g + WEIGHT_DECAY * v
+            m = MOMENTUM * mom[k] + g
+            new_params[k] = v - lr * (MOMENTUM * m + g)  # Nesterov
+            new_mom[k] = m
+        return new_params, new_mom, loss, acc
+
+    @jax.jit
+    def eval_logits(params, x):
+        logits, _ = modelmod.forward_ir(ir, params, x, train=False)
+        return logits
+
+    return step, eval_logits
+
+
+def evaluate(eval_logits, params, xs, ys, batch=256):
+    correct = 0
+    for i in range(0, len(xs), batch):
+        logits = eval_logits(params, xs[i:i + batch])
+        correct += int((np.argmax(np.asarray(logits), -1) == ys[i:i + batch]).sum())
+    return correct / len(xs)
+
+
+def train_model(name, train_data, test_data, epochs=EPOCHS, log=print):
+    ir = irmod.ZOO[name]()
+    params = {k: jnp.asarray(v) for k, v in irmod.init_params(ir, TRAIN_SEED).items()}
+    mom = {k: jnp.zeros_like(v) for k, v in params.items()}
+    step, eval_logits = make_step(ir)
+
+    (xtr, ytr), (xte, yte) = train_data, test_data
+    n = len(xtr)
+    steps_per_epoch = n // BATCH
+    total_steps = epochs * steps_per_epoch
+    rng = np.random.default_rng((TRAIN_SEED, hash(name) & 0xFFFF))
+
+    t0 = time.time()
+    it = 0
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        ep_loss, ep_acc = 0.0, 0.0
+        for b in range(steps_per_epoch):
+            idx = perm[b * BATCH:(b + 1) * BATCH]
+            lr = 0.5 * BASE_LR * (1 + math.cos(math.pi * it / total_steps))
+            params, mom, loss, acc = step(
+                params, mom, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]),
+                jnp.float32(lr))
+            ep_loss += float(loss)
+            ep_acc += float(acc)
+            it += 1
+        log(f"  [{name}] epoch {ep + 1}/{epochs} "
+            f"loss={ep_loss / steps_per_epoch:.4f} "
+            f"acc={ep_acc / steps_per_epoch:.4f} ({time.time() - t0:.0f}s)")
+
+    train_acc = evaluate(eval_logits, params, xtr[:2048], ytr[:2048])
+    test_acc = evaluate(eval_logits, params, xte, yte)
+    log(f"  [{name}] final train_acc={train_acc:.4f} test_acc={test_acc:.4f}")
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    meta = {
+        "train_acc": round(train_acc, 4),
+        "test_acc": round(test_acc, 4),
+        "epochs": epochs,
+        "seed": TRAIN_SEED,
+    }
+    return ir, np_params, meta
+
+
+def ensure_dataset(outdir, log=print):
+    tr_path = os.path.join(outdir, "synthimagenet_train.bin")
+    te_path = os.path.join(outdir, "synthimagenet_test.bin")
+    if os.path.exists(tr_path) and os.path.exists(te_path):
+        log("dataset bins exist, skipping generation")
+    else:
+        log("generating SynthImageNet ...")
+        (xtr, ytr), (xte, yte) = datasets.default_splits()
+        datasets.write_dataset_bin(tr_path, xtr, ytr)
+        datasets.write_dataset_bin(te_path, xte, yte)
+        log(f"wrote {tr_path} ({xtr.shape}) and {te_path} ({xte.shape})")
+    # Always return loaded arrays for training.
+    def load(path):
+        with open(path, "rb") as f:
+            assert f.read(4) == b"SDSB"
+            ver, n, c, h, w = np.frombuffer(f.read(20), dtype="<u4")
+            imgs = np.frombuffer(f.read(n * c * h * w * 4), dtype="<f4").reshape(
+                n, c, h, w)
+            labels = np.frombuffer(f.read(n * 4), dtype="<u4").astype(np.int32)
+        return imgs, labels
+    return load(tr_path), load(te_path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(irmod.ZOO.keys()))
+    ap.add_argument("--epochs", type=int, default=EPOCHS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    train_data, test_data = ensure_dataset(args.out)
+    for name in args.models.split(","):
+        path = os.path.join(args.out, f"{name}.sqnt")
+        if os.path.exists(path) and not args.force:
+            print(f"{path} exists, skipping")
+            continue
+        print(f"training {name} ...")
+        ir, params, meta = train_model(name, train_data, test_data,
+                                       epochs=args.epochs)
+        sqnt.write_sqnt(path, ir, params, meta)
+        print(f"wrote {path} (test_acc={meta['test_acc']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""SQNT container round-trip + SynthImageNet determinism tests."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import datasets, ir as irmod, sqnt
+from compile.common import NUM_CLASSES
+
+
+class TestSqntContainer:
+    def test_round_trip(self, tmp_path):
+        ir = irmod.ZOO["minishufflenet"]()
+        params = irmod.init_params(ir, 1)
+        path = os.path.join(tmp_path, "m.sqnt")
+        sqnt.write_sqnt(path, ir, params, {"test_acc": 0.5})
+        header, rparams = sqnt.read_sqnt(path)
+        assert header["name"] == "minishufflenet"
+        assert header["meta"]["test_acc"] == 0.5
+        assert len(header["nodes"]) == len(ir["nodes"])
+        for k, v in params.items():
+            np.testing.assert_array_equal(rparams[k], v)
+
+    def test_offsets_contiguous(self, tmp_path):
+        ir = irmod.ZOO["minishufflenet"]()
+        params = irmod.init_params(ir, 1)
+        path = os.path.join(tmp_path, "m.sqnt")
+        sqnt.write_sqnt(path, ir, params)
+        header, _ = sqnt.read_sqnt(path)
+        off = 0
+        for t in header["tensors"]:
+            assert t["offset"] == off
+            assert t["numel"] == int(np.prod(t["shape"]))
+            off += t["numel"]
+
+    def test_bad_shape_rejected(self, tmp_path):
+        ir = irmod.ZOO["minishufflenet"]()
+        params = irmod.init_params(ir, 1)
+        name = ir["params"][0]["name"]
+        params[name] = params[name][..., :1]
+        with pytest.raises(AssertionError):
+            sqnt.write_sqnt(os.path.join(tmp_path, "m.sqnt"), ir, params)
+
+
+class TestSynthImageNet:
+    def test_deterministic(self):
+        a = datasets.make_image(3, "train", 17)
+        b = datasets.make_image(3, "train", 17)
+        np.testing.assert_array_equal(a, b)
+
+    def test_train_test_disjoint_rng(self):
+        a = datasets.make_image(3, "train", 17)
+        b = datasets.make_image(3, "test", 17)
+        assert not np.array_equal(a, b)
+
+    def test_split_shapes_and_balance(self):
+        imgs, labels = datasets.make_split("test", 200)
+        assert imgs.shape == (200, 3, 32, 32)
+        assert imgs.dtype == np.float32
+        counts = np.bincount(labels, minlength=NUM_CLASSES)
+        assert counts.min() == counts.max() == 20
+
+    def test_bin_round_trip(self, tmp_path):
+        imgs, labels = datasets.make_split("test", 64)
+        path = os.path.join(tmp_path, "d.bin")
+        datasets.write_dataset_bin(path, imgs, labels)
+        with open(path, "rb") as f:
+            assert f.read(4) == b"SDSB"
+            ver, n, c, h, w = np.frombuffer(f.read(20), "<u4")
+        assert (ver, n, c, h, w) == (1, 64, 3, 32, 32)
+        sz = os.path.getsize(path)
+        assert sz == 24 + 64 * 3 * 32 * 32 * 4 + 64 * 4
+
+    def test_classes_separable_by_simple_stat(self):
+        """Sanity: different classes differ in mean image more than noise."""
+        means = []
+        for cls in range(3):
+            imgs = np.stack([datasets.make_image(cls, "train", i)
+                             for i in range(20)])
+            means.append(imgs.mean(axis=0))
+        d01 = np.abs(means[0] - means[1]).mean()
+        within = np.abs(
+            np.stack([datasets.make_image(0, "train", i) for i in range(20)])
+            - means[0]).mean()
+        assert d01 > 0.01  # classes are distinguishable in expectation
+        assert within > d01 * 0.2  # but with real intra-class variation

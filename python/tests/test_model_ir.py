@@ -1,0 +1,120 @@
+"""Model IR + JAX executor tests: shapes, op semantics, BN modes."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import ir as irmod, model as modelmod
+
+
+def params_for(ir, seed=0):
+    return {k: jnp.asarray(v) for k, v in irmod.init_params(ir, seed).items()}
+
+
+@pytest.mark.parametrize("name", list(irmod.ZOO.keys()))
+def test_forward_shapes(name):
+    ir = irmod.ZOO[name]()
+    params = params_for(ir)
+    x = jnp.zeros((2, 3, 32, 32), jnp.float32)
+    logits, stats = modelmod.forward_ir(ir, params, x, train=False)
+    assert logits.shape == (2, 10)
+    assert stats == {}
+
+
+@pytest.mark.parametrize("name", list(irmod.ZOO.keys()))
+def test_train_mode_updates_bn(name):
+    ir = irmod.ZOO[name]()
+    params = params_for(ir)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (4, 3, 32, 32))
+                    .astype(np.float32))
+    _, stats = modelmod.forward_ir(ir, params, x, train=True)
+    n_bn = sum(1 for node in ir["nodes"] if node["op"] == "batchnorm")
+    assert len(stats) == 2 * n_bn  # mean + var per BN
+
+
+def test_quantizable_layers_shapes():
+    ir = irmod.ZOO["miniresnet18"]()
+    layers = list(irmod.quantizable_layers(ir))
+    assert len(layers) == 21  # 17 convs + 3 downsample 1x1 + 1 fc
+    for node, wname, (m, n, k) in layers:
+        spec = next(s for s in ir["params"] if s["name"] == wname)
+        if node["op"] == "conv2d":
+            o, i, kh, kw = spec["shape"]
+            assert (m, n, k) == (o, i, kh * kw)
+        else:
+            o, i = spec["shape"]
+            assert (m, n, k) == (o, i, 1)
+
+
+def test_depthwise_and_grouped_shapes():
+    ir = irmod.ZOO["minishufflenet"]()
+    convs = [n for n in ir["nodes"] if n["op"] == "conv2d"]
+    groups = sorted({c["attrs"]["groups"] for c in convs})
+    assert 1 in groups and 4 in groups and max(groups) > 4  # depthwise present
+    # Depthwise weight has N = 1 (the degenerate SQuant-C case).
+    dws = [n for n in convs if n["attrs"]["groups"] == n["attrs"]["cin"]
+           and n["attrs"]["groups"] > 1]
+    assert dws
+    for node, wname, (m, n, k) in irmod.quantizable_layers(ir):
+        if node in dws:
+            assert n == 1 and k == 9
+
+
+def test_channel_shuffle_semantics():
+    b = irmod.Builder("t")
+    nid = b.shuffle(b.input_id, 2)
+    ir = b.to_ir()
+    x = jnp.asarray(np.arange(8, dtype=np.float32).reshape(1, 8, 1, 1))
+    out, _ = modelmod.forward_ir(ir, {}, x, train=False)
+    # groups=2: [0..3 | 4..7] -> interleaved [0,4,1,5,2,6,3,7]
+    np.testing.assert_array_equal(
+        np.asarray(out).reshape(-1), [0, 4, 1, 5, 2, 6, 3, 7])
+
+
+def test_avgpool_count_include_pad():
+    b = irmod.Builder("t")
+    b.avgpool(b.input_id, 3, 1, pad=1)
+    ir = b.to_ir()
+    x = jnp.ones((1, 1, 4, 4), jnp.float32)
+    out, _ = modelmod.forward_ir(ir, {}, x, train=False)
+    out = np.asarray(out)[0, 0]
+    # Corner: 4 ones / 9 (count_include_pad=True convention).
+    assert out[0, 0] == pytest.approx(4.0 / 9.0)
+    assert out[1, 1] == pytest.approx(1.0)
+
+
+def test_rect_kernel_padding_preserves_hw():
+    b = irmod.Builder("t")
+    c = b.conv(b.input_id, 3, 4, 1, 3)  # 1x3 kernel
+    ir = b.to_ir()
+    params = params_for(ir)
+    x = jnp.zeros((1, 3, 8, 8), jnp.float32)
+    vals = {}
+    out, _ = modelmod.forward_ir(ir, params, x, train=False)
+    assert out.shape == (1, 4, 8, 8)
+
+
+def test_init_deterministic():
+    ir = irmod.ZOO["miniresnet18"]()
+    a = irmod.init_params(ir, 3)
+    b = irmod.init_params(ir, 3)
+    c = irmod.init_params(ir, 4)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    assert any(not np.array_equal(a[k], c[k]) for k in a)
+
+
+def test_residual_add_is_identity_preserving():
+    """Zero conv weights + BN(identity stats) -> residual passes through."""
+    b = irmod.Builder("t")
+    conv = b.conv(b.input_id, 2, 2, 3, 3)
+    add = b.add(conv, b.input_id)
+    ir = b.to_ir()
+    params = params_for(ir)
+    wname = ir["nodes"][conv]["params"]["weight"]
+    params[wname] = jnp.zeros_like(params[wname])
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (1, 2, 5, 5))
+                    .astype(np.float32))
+    out, _ = modelmod.forward_ir(ir, params, x, train=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)

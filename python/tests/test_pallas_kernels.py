@@ -1,0 +1,134 @@
+"""L1 Pallas kernels vs the pure-numpy oracles (hypothesis-swept).
+
+Pallas runs under interpret=True (CPU PJRT cannot execute Mosaic) — these
+tests pin the *semantics*; the Rust integration suite then checks the same
+numbers come out of the AOT HLO artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import fake_quant, qmatmul, ref, squant_flip
+
+
+def flip_rows_oracle(q, p, e, qmin, qmax):
+    q, p = q.copy(), p.copy()
+    idxs = np.full((q.shape[0],), -1, np.int32)
+    vals = np.zeros((q.shape[0],), np.float32)
+    for r in range(q.shape[0]):
+        idxs[r], vals[r] = ref.flip_row(q[r], p[r], float(e[r]), qmin, qmax)
+    return q, p, idxs, vals
+
+
+def make_rows(rows, width, seed, pscale=0.5):
+    rng = np.random.default_rng(seed)
+    t = rng.normal(0, 2.0, (rows, width)).astype(np.float32)
+    q = ref.rn(t).astype(np.float32)
+    q = np.clip(q, -7, 7)
+    p = (q - t).astype(np.float32)
+    e = p.sum(axis=1).astype(np.float32)
+    return q, p, e
+
+
+class TestFlipRows:
+    @pytest.mark.parametrize("rows,width", [(1, 3), (5, 9), (64, 9), (70, 25),
+                                            (128, 4), (3, 1)])
+    def test_matches_oracle(self, rows, width):
+        q, p, e = make_rows(rows, width, seed=rows * 31 + width)
+        qo, po, io_, vo = flip_rows_oracle(q, p, e, -7, 7)
+        qj, pj, ij, vj = squant_flip.flip_rows(
+            jnp.asarray(q), jnp.asarray(p), jnp.asarray(e), qmin=-7, qmax=7)
+        np.testing.assert_array_equal(np.asarray(qj), qo)
+        np.testing.assert_allclose(np.asarray(pj), po, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(ij), io_)
+        np.testing.assert_allclose(np.asarray(vj), vo, atol=1e-6)
+
+    def test_row_block_sizes_equivalent(self):
+        q, p, e = make_rows(100, 9, seed=77)
+        outs = []
+        for rb in (1, 16, 64, 256):
+            qj, pj, ij, vj = squant_flip.flip_rows(
+                jnp.asarray(q), jnp.asarray(p), jnp.asarray(e),
+                qmin=-7, qmax=7, row_block=rb)
+            outs.append((np.asarray(qj), np.asarray(ij)))
+        for a, b in zip(outs, outs[1:]):
+            np.testing.assert_array_equal(a[0], b[0])
+            np.testing.assert_array_equal(a[1], b[1])
+
+    def test_zero_rows_noop(self):
+        q = np.zeros((4, 9), np.float32)
+        p = np.zeros((4, 9), np.float32)
+        e = np.zeros((4,), np.float32)
+        qj, pj, ij, vj = squant_flip.flip_rows(
+            jnp.asarray(q), jnp.asarray(p), jnp.asarray(e), qmin=-7, qmax=7)
+        assert np.all(np.asarray(qj) == 0)
+        assert np.all(np.asarray(ij) == -1)
+
+    @settings(max_examples=25, deadline=None)
+    @given(rows=st.integers(1, 40), width=st.sampled_from([1, 3, 5, 9, 25]),
+           seed=st.integers(0, 2 ** 16),
+           bits=st.sampled_from([3, 4, 8]))
+    def test_hypothesis_parity(self, rows, width, seed, bits):
+        qmin, qmax = ref.qrange(bits)
+        rng = np.random.default_rng(seed)
+        t = rng.normal(0, qmax / 2, (rows, width)).astype(np.float32)
+        q = np.clip(ref.rn(t), qmin, qmax).astype(np.float32)
+        p = (q - t).astype(np.float32)
+        e = p.sum(axis=1).astype(np.float32)
+        qo, po, io_, vo = flip_rows_oracle(q, p, e, qmin, qmax)
+        qj, pj, ij, vj = squant_flip.flip_rows(
+            jnp.asarray(q), jnp.asarray(p), jnp.asarray(e),
+            qmin=qmin, qmax=qmax)
+        np.testing.assert_array_equal(np.asarray(qj), qo)
+        np.testing.assert_array_equal(np.asarray(ij), io_)
+
+
+class TestFakeQuant:
+    @pytest.mark.parametrize("rows,cols,bits", [(8, 27, 4), (64, 9, 8),
+                                                (1, 1, 3), (100, 64, 4)])
+    def test_matches_oracle(self, rows, cols, bits):
+        rng = np.random.default_rng(rows + cols)
+        w = rng.normal(0, 0.2, (rows, cols)).astype(np.float32)
+        s = ref.channel_scales_ref(w, bits)
+        qmin, qmax = ref.qrange(bits)
+        out = fake_quant.fake_quant(jnp.asarray(w), jnp.asarray(s),
+                                    qmin=qmin, qmax=qmax)
+        np.testing.assert_allclose(
+            np.asarray(out), ref.fake_quant_ref(w, s, bits), atol=1e-6)
+
+    def test_idempotent(self):
+        rng = np.random.default_rng(5)
+        w = rng.normal(0, 0.2, (16, 32)).astype(np.float32)
+        s = ref.channel_scales_ref(w, 4)
+        once = np.asarray(fake_quant.fake_quant(
+            jnp.asarray(w), jnp.asarray(s), qmin=-7, qmax=7))
+        twice = np.asarray(fake_quant.fake_quant(
+            jnp.asarray(once), jnp.asarray(s), qmin=-7, qmax=7))
+        np.testing.assert_allclose(once, twice, atol=1e-6)
+
+
+class TestQMatmul:
+    @pytest.mark.parametrize("b,o,cin", [(4, 10, 64), (32, 32, 128),
+                                         (1, 7, 9), (33, 17, 50)])
+    def test_matches_oracle(self, b, o, cin):
+        rng = np.random.default_rng(b * o)
+        x = rng.normal(0, 1, (b, cin)).astype(np.float32)
+        q = ref.rn(rng.normal(0, 3, (o, cin))).astype(np.float32)
+        s = rng.uniform(0.01, 0.1, o).astype(np.float32)
+        y = qmatmul.qmatmul(jnp.asarray(x), jnp.asarray(q), jnp.asarray(s))
+        np.testing.assert_allclose(
+            np.asarray(y), ref.qmatmul_ref(x, q, s), rtol=2e-4, atol=2e-4)
+
+    def test_block_sizes_equivalent(self):
+        rng = np.random.default_rng(9)
+        x = rng.normal(0, 1, (48, 40)).astype(np.float32)
+        q = ref.rn(rng.normal(0, 3, (24, 40))).astype(np.float32)
+        s = rng.uniform(0.01, 0.1, 24).astype(np.float32)
+        y1 = np.asarray(qmatmul.qmatmul(
+            jnp.asarray(x), jnp.asarray(q), jnp.asarray(s), b_block=8, o_block=8))
+        y2 = np.asarray(qmatmul.qmatmul(
+            jnp.asarray(x), jnp.asarray(q), jnp.asarray(s), b_block=64, o_block=64))
+        np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,41 @@
+"""Training-pipeline smoke test: a few steps on a tiny subset must reduce
+loss.  Kept small so the suite stays fast; full training happens in
+`make artifacts`."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import datasets, ir as irmod, train as trainmod
+
+
+def test_loss_decreases_on_tiny_subset():
+    imgs, labels = datasets.make_split("train", 256)
+    ir = irmod.ZOO["minishufflenet"]()
+    params = {k: jnp.asarray(v) for k, v in irmod.init_params(
+        ir, trainmod.TRAIN_SEED).items()}
+    mom = {k: jnp.zeros_like(v) for k, v in params.items()}
+    step, eval_logits = trainmod.make_step(ir)
+
+    losses = []
+    for it in range(12):
+        i = (it * 64) % 192
+        loss_params = step(params, mom,
+                           jnp.asarray(imgs[i:i + 64]),
+                           jnp.asarray(labels[i:i + 64]),
+                           jnp.float32(0.05))
+        params, mom, loss, acc = loss_params
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    # Accuracy should at least beat chance on the training batch.
+    assert float(acc) > 0.1
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 1.0, 0.0]])
+    labels = jnp.asarray([0, 1])
+    ce = float(trainmod.cross_entropy(logits, labels))
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1 + np.exp(-1.0))
+    p1 = np.exp(1.0) / (2 + np.exp(1.0))
+    expected = -0.5 * (np.log(p0) + np.log(p1))
+    assert abs(ce - expected) < 1e-5

@@ -1,0 +1,61 @@
+//! §B.4 complexity claim: SQuant is linear in the weight count (for fixed
+//! K).  Sweeps M*N at K in {9, 25} and K at fixed M*N, reporting ns/weight
+//! — flat ns/weight = linear scaling.  Also the flip-kernel microbench.
+use squant::squant::{squant, SquantOpts};
+use squant::quant::{channel_scales, QuantConfig};
+use squant::tensor::Tensor;
+use squant::util::bench::bench;
+use squant::util::rng::Rng;
+
+fn main() {
+    let opts = SquantOpts::full(4);
+    println!("== scaling in M*N (K = 9) ==");
+    for mn in [64usize, 256, 1024, 4096, 16384] {
+        let m = (mn as f64).sqrt() as usize;
+        let n = mn / m;
+        let mut w = Tensor::zeros(&[m, n, 1, 9]);
+        Rng::new(mn as u64).fill_normal(&mut w.data, 0.1);
+        let scales = channel_scales(&w, QuantConfig::new(4));
+        let st = bench(&format!("squant {m}x{n}x9"), 3, 20, || {
+            let _ = squant(&w, &scales, opts);
+        });
+        println!("{st}   ({:.2} ns/weight)",
+                 st.median_ns as f64 / (m * n * 9) as f64);
+    }
+    println!("\n== scaling in K (M*N = 1024) ==");
+    for k in [3usize, 9, 25, 49] {
+        let mut w = Tensor::zeros(&[32, 32, 1, k]);
+        Rng::new(k as u64).fill_normal(&mut w.data, 0.1);
+        let scales = channel_scales(&w, QuantConfig::new(4));
+        let st = bench(&format!("squant 32x32x{k}"), 3, 20, || {
+            let _ = squant(&w, &scales, opts);
+        });
+        println!("{st}   ({:.2} ns/weight)",
+                 st.median_ns as f64 / (32 * 32 * k) as f64);
+    }
+    println!("\n== flip kernel microbench ==");
+    use squant::squant::flip::{flip_row, Scratch};
+    let mut rng = Rng::new(1);
+    for k in [9usize, 25] {
+        let rows = 4096;
+        let mut q = vec![0.0f32; rows * k];
+        let mut p = vec![0.0f32; rows * k];
+        for i in 0..rows * k {
+            let t = rng.normal() * 2.0;
+            q[i] = (t + 0.5).floor().clamp(-7.0, 7.0);
+            p[i] = q[i] - t;
+        }
+        let mut scratch = Scratch::with_capacity(k);
+        let st = bench(&format!("flip_row x{rows} (K={k})"), 3, 50, || {
+            let mut qc = q.clone();
+            let mut pc = p.clone();
+            for r in 0..rows {
+                let e: f32 = pc[r * k..(r + 1) * k].iter().sum();
+                let _ = flip_row(&mut qc[r * k..(r + 1) * k],
+                                 &mut pc[r * k..(r + 1) * k],
+                                 e, -7.0, 7.0, &mut scratch);
+            }
+        });
+        println!("{st}   ({:.1} ns/row)", st.median_ns as f64 / rows as f64);
+    }
+}

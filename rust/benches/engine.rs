@@ -1,0 +1,50 @@
+//! Inference-engine benchmark: native Rust engine vs the PJRT-compiled AOT
+//! forward graph, batch 1 and 256 (latency + throughput), per model.
+use squant::eval::tables::{present_archs, Env, ALL_ARCHS};
+use squant::io::sqnt;
+use squant::nn::engine::forward;
+use squant::nn::Graph;
+use squant::runtime::Runtime;
+use squant::tensor::Tensor;
+use squant::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    for arch in present_archs(&env, ALL_ARCHS) {
+        let entry = env.man.model(arch)?;
+        let c = sqnt::load(&entry.sqnt)?;
+        let graph = Graph::from_header(&c.header)?;
+        let (x1, _) = env.test.batch(0, 1);
+        let (x256, _) = env.test.batch(0, 256);
+
+        let st = bench(&format!("{arch} native b1"), 2, 10, || {
+            let _ = forward(&graph, &c.params, &x1, None, None).unwrap();
+        });
+        println!("{st}");
+        let st = bench(&format!("{arch} native b256"), 1, 5, || {
+            let _ = forward(&graph, &c.params, &x256, None, None).unwrap();
+        });
+        println!("{st}   ({:.0} img/s)", 256.0 / (st.median_ns as f64 / 1e9));
+
+        for (b, x) in [(1usize, &x1), (256, &x256)] {
+            if let Some(path) = entry.forward.get(&b) {
+                let exe = rt.load(path)?;
+                let params: Vec<&Tensor> =
+                    c.order.iter().map(|n| &c.params[n]).collect();
+                let st = bench(&format!("{arch} pjrt   b{b}"), 2, 10, || {
+                    let mut inputs: Vec<&Tensor> = vec![x];
+                    inputs.extend(params.iter());
+                    let _ = rt.execute(&exe, &inputs).unwrap();
+                });
+                if b == 256 {
+                    println!("{st}   ({:.0} img/s)",
+                             256.0 / (st.median_ns as f64 / 1e9));
+                } else {
+                    println!("{st}");
+                }
+            }
+        }
+    }
+    Ok(())
+}

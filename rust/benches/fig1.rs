@@ -1,0 +1,12 @@
+//! Figure 1: how much of the dense expected Hessian E[xx^T] each
+//! approximation level captures (H-E diagonal / H-K block-diagonal / full
+//! E+K+C reconstruction error), per conv layer on real activations.
+use squant::eval::tables::{coverage_table, fail_if_missing, print_coverage_table, Env};
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load("artifacts")?;
+    fail_if_missing(&env, &["miniresnet18"])?;
+    let rows = coverage_table(&env, "miniresnet18", 64, 512)?;
+    print_coverage_table(&rows);
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Figure 2: the flipping approach — perturbation distribution before
+//! (RTN, |p| <= 0.5) and after SQuant (flipped elements in [0.5, 1.0)),
+//! plus the flip rate.
+use squant::eval::tables::{fail_if_missing, flip_histogram, print_flip_histogram, Env};
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load("artifacts")?;
+    fail_if_missing(&env, &["miniresnet18"])?;
+    for bits in [3, 4, 8] {
+        let h = flip_histogram(&env, "miniresnet18", bits)?;
+        print_flip_histogram(&h);
+    }
+    Ok(())
+}

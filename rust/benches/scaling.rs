@@ -1,0 +1,48 @@
+//! Coordinator thread-scaling + design ablations:
+//!  * per-layer parallel quantization wall time vs thread count (the
+//!    paper's "faster if we quantize layers in parallel" remark, §4.2);
+//!  * scale-selection ablation: SQuant on MaxAbs vs MSE-grid scales.
+use squant::coordinator::quantize_model;
+use squant::eval::{accuracy, tables::Env};
+use squant::quant::{channel_scales, QuantConfig, ScaleMethod};
+use squant::squant::{squant, SquantOpts};
+use squant::util::pool::default_threads;
+
+fn main() -> anyhow::Result<()> {
+    let mut env = Env::load("artifacts")?;
+    env.test.truncate(1024);
+    let (graph, params) = env.model("miniresnet18")?;
+
+    println!("== thread scaling (miniresnet18, W4, median of 9) ==");
+    for threads in [1usize, 2, 4, 8, default_threads()] {
+        let mut walls: Vec<f64> = (0..9)
+            .map(|_| {
+                let (_, r) = quantize_model(&graph, &params,
+                                            SquantOpts::full(4), threads);
+                r.wall_ms
+            })
+            .collect();
+        walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!("  threads={threads:<3} wall={:.2} ms", walls[4]);
+    }
+
+    println!("\n== scale-selection ablation (weight-only) ==");
+    println!("| {:>5} | {:<8} | {:>8} |", "W-bit", "scales", "top-1");
+    for bits in [2usize, 3, 4] {
+        for (name, method) in [("maxabs", ScaleMethod::MaxAbs),
+                               ("msegrid", ScaleMethod::MseGrid { steps: 32 })] {
+            let mut p = params.clone();
+            for layer in graph.quant_layers() {
+                let w = &params[&layer.weight];
+                let scales = channel_scales(
+                    w, QuantConfig { bits, scale: method });
+                let res = squant(w, &scales, SquantOpts::full(bits));
+                p.insert(layer.weight.clone(), res.wq);
+            }
+            let acc = accuracy(&graph, &p, None, &env.test, 256,
+                               default_threads())?;
+            println!("| {bits:>5} | {name:<8} | {:>7.2}% |", acc * 100.0);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Table 1: ResNet18/50 analogs — {DFQ, ZeroQ, DSG, GDFQ, SQuant} at
+//! W4A4 / W6A6 / W8A8.  Set SQUANT_SAMPLES to trim the eval set.
+use squant::eval::tables::{acc_table, fail_if_missing, Env, TABLE1_ARCHS, TABLE12_BITS};
+use squant::eval::report::{acc_table_markdown, print_acc_table};
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load("artifacts")?;
+    fail_if_missing(&env, TABLE1_ARCHS)?;
+    let rows = acc_table(&env, TABLE1_ARCHS, TABLE12_BITS)?;
+    print_acc_table("Table 1 — data-free methods, ResNet analogs", &rows);
+    println!("\n{}", acc_table_markdown(&rows));
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Table 2: InceptionV3 / SqueezeNext / ShuffleNet analogs — same grid as
+//! Table 1 (the paper omits DFQ/DSG on some of these; we run the full set).
+use squant::eval::tables::{acc_table, fail_if_missing, Env, TABLE2_ARCHS, TABLE12_BITS};
+use squant::eval::report::{acc_table_markdown, print_acc_table};
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load("artifacts")?;
+    fail_if_missing(&env, TABLE2_ARCHS)?;
+    let rows = acc_table(&env, TABLE2_ARCHS, TABLE12_BITS)?;
+    print_acc_table("Table 2 — data-free methods, Inception/SqueezeNext/ShuffleNet analogs", &rows);
+    println!("\n{}", acc_table_markdown(&rows));
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Table 3: 4-bit quantization time — SQuant (ms, per-layer sum) vs the
+//! calibration-based baselines.  The paper's claim is the asymmetry
+//! (ms vs s vs h), not absolute numbers.
+use squant::eval::tables::{print_timing_table, timing_table, Env, ALL_ARCHS, present_archs};
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load("artifacts")?;
+    let archs = present_archs(&env, ALL_ARCHS);
+    let rows = timing_table(&env, &archs)?;
+    print_timing_table(&rows);
+    for r in &rows {
+        println!(
+            "{}: SQuant/ZeroQ speedup = {:.0}x, SQuant/GDFQ speedup = {:.0}x",
+            r.arch, r.zeroq_ms / r.squant_ms.max(1e-9),
+            r.gdfq_ms / r.squant_ms.max(1e-9)
+        );
+    }
+    Ok(())
+}

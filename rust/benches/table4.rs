@@ -1,0 +1,13 @@
+//! Table 4: SQuant granularity ablation (E / E&K / E&C / E&K&C) on the
+//! ResNet18 analog, weight-only W3 / W4.
+use squant::eval::tables::{ablation_table, fail_if_missing, Env};
+use squant::eval::report::{acc_table_markdown, print_acc_table};
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load("artifacts")?;
+    fail_if_missing(&env, &["miniresnet18"])?;
+    let rows = ablation_table(&env, "miniresnet18", &[2, 3, 4])?;
+    print_acc_table("Table 4 — SQuant granularity ablation (weight-only)", &rows);
+    println!("\n{}", acc_table_markdown(&rows));
+    Ok(())
+}

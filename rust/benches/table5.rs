@@ -1,0 +1,13 @@
+//! Table 5: SQuant vs data-free AdaRound (ZeroQ+AdaRound, DSG+AdaRound),
+//! weight-only W3 / W4 / W5 on the ResNet18 analog.
+use squant::eval::tables::{adaround_table, fail_if_missing, Env};
+use squant::eval::report::{acc_table_markdown, print_acc_table};
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load("artifacts")?;
+    fail_if_missing(&env, &["miniresnet18"])?;
+    let rows = adaround_table(&env, "miniresnet18", &[2, 3, 4])?;
+    print_acc_table("Table 5 — SQuant vs data-free AdaRound (weight-only)", &rows);
+    println!("\n{}", acc_table_markdown(&rows));
+    Ok(())
+}

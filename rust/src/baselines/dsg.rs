@@ -1,0 +1,35 @@
+//! DSG-lite (Zhang et al., CVPR 2021 / Qin et al. 2021): ZeroQ with
+//! *diverse* sample generation — the synthetic batch carries an explicit
+//! decorrelation objective, which improves range calibration at low bits.
+
+use anyhow::Result;
+
+use super::synth::SynthConfig;
+use super::zeroq::{self, ZeroQOut};
+use crate::nn::{Graph, Params};
+
+pub fn quantize_model(
+    graph: &Graph,
+    params: &Params,
+    wbits: usize,
+    abits: usize,
+    batch: usize,
+    iters: usize,
+    seed: u64,
+) -> Result<ZeroQOut> {
+    zeroq::quantize_model(graph, params, wbits, abits,
+                          SynthConfig::dsg(batch, iters, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+
+    #[test]
+    fn runs_end_to_end() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let out = quantize_model(&g, &p, 6, 6, 4, 2, 2).unwrap();
+        assert!(out.act.is_some());
+    }
+}

@@ -1,0 +1,124 @@
+//! GDFQ-lite (Xu et al., ECCV 2020): the strongest (and slowest) baseline.
+//! The original trains a generator + fine-tunes the quantized network for
+//! hours; the lite version composes everything a gradient-free pipeline can:
+//! diverse synthetic data → AdaRound weight optimization on captured layer
+//! inputs → analytic bias correction → calibrated activation ranges.
+//! See DESIGN.md §2 for the substitution argument (the qualitative ordering
+//! GDFQ ≫ ZeroQ at 4 bits is preserved; so is the cost asymmetry vs SQuant).
+
+use anyhow::Result;
+
+use super::adaround::{adaround_layer, linear_gram};
+use super::synth::{capture_layer_inputs, generate, SynthConfig};
+use super::{calibrate_act_ranges};
+use crate::hessian::empirical_xxt;
+use crate::nn::engine::ActQuant;
+use crate::nn::statprop::propagate;
+use crate::nn::{Graph, Op, Params};
+use crate::tensor::Tensor;
+
+pub struct GdfqOut {
+    pub params: Params,
+    pub act: Option<ActQuant>,
+}
+
+const MAX_FLIPS_PER_CHANNEL: usize = 128;
+const MAX_GRAM_COLS: usize = 256;
+
+pub fn quantize_model(
+    graph: &Graph,
+    params: &Params,
+    wbits: usize,
+    abits: usize,
+    cfg: SynthConfig,
+) -> Result<GdfqOut> {
+    let data = generate(graph, params, cfg)?;
+    let captured = capture_layer_inputs(graph, params, &data)?;
+    let stats = propagate(graph, params);
+
+    let mut out = params.clone();
+    for layer in graph.quant_layers() {
+        let w = &params[&layer.weight];
+        let node = &graph.nodes[layer.node_id];
+        let inp = &captured[&layer.node_id];
+        // Gram matrix of the layer input.
+        let gram = match &node.op {
+            Op::Conv2d { kh, kw, stride, ph, pw, groups, .. } if *groups == 1 => {
+                empirical_xxt(inp, *kh, *kw, *stride, *ph, *pw, MAX_GRAM_COLS)
+            }
+            Op::Conv2d { .. } => {
+                // Grouped conv: fall back to an uncorrelated Gram (diagonal
+                // dominant) sized for the per-group weight view.
+                let nk = layer.n * layer.k;
+                let mut g = Tensor::filled(&[nk, nk], 0.1);
+                for i in 0..nk {
+                    g.data[i * nk + i] = 1.0;
+                }
+                g
+            }
+            Op::Linear { .. } => linear_gram(inp),
+            _ => unreachable!(),
+        };
+        let wq = adaround_layer(w, &gram, wbits, MAX_FLIPS_PER_CHANNEL);
+        out.insert(layer.weight.clone(), wq);
+    }
+
+    // Bias correction against the quantized weights (BN beta absorbs it —
+    // we shift the BN beta of the following BN when present, else skip).
+    for node in &graph.nodes {
+        let Op::BatchNorm { beta, .. } = &node.op else { continue };
+        let src = node.inputs[0];
+        let Op::Conv2d { weight, cin, cout, groups, kh, kw, .. } =
+            &graph.nodes[src].op
+        else {
+            continue;
+        };
+        let input_mean = &stats[&graph.nodes[src].inputs[0]].mean;
+        let wf = &params[weight];
+        let wq = &out[weight];
+        let cg = cin / groups;
+        let og = cout / groups;
+        let khw = kh * kw;
+        let mut b = out[beta].clone();
+        // BN applies scale gamma/sqrt(var): the conv-output shift deltaW*E[x]
+        // passes through BN's normalization scale; approximate with the
+        // identity scale (post-normalization shift), which empirically
+        // recovers most of the bias error at 4 bits.
+        for oc in 0..*cout {
+            let g = oc / og;
+            let mut shift = 0.0f32;
+            for icg in 0..cg {
+                let ic = g * cg + icg;
+                let base = (oc * cg + icg) * khw;
+                let dsum: f32 = (0..khw)
+                    .map(|k| wq.data[base + k] - wf.data[base + k])
+                    .sum();
+                shift += dsum * input_mean[ic];
+            }
+            b.data[oc] -= shift;
+        }
+        out.insert(beta.clone(), b);
+    }
+
+    let act = if abits > 0 {
+        Some(calibrate_act_ranges(graph, params, &data, abits)?)
+    } else {
+        None
+    };
+    Ok(GdfqOut { params: out, act })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+
+    #[test]
+    fn runs_and_changes_weights() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let out = quantize_model(&g, &p, 4, 8,
+                                 SynthConfig::dsg(4, 2, 5)).unwrap();
+        assert_ne!(out.params["w1"].data, p["w1"].data);
+        assert!(out.act.is_some());
+    }
+}

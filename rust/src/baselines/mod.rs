@@ -1,0 +1,86 @@
+//! Every competing method in the paper's evaluation, implemented (or
+//! faithfully simulated — see DESIGN.md §2) from scratch:
+//!
+//! | module     | paper method | notes |
+//! |------------|--------------|-------|
+//! | `rtn`      | rounding     | SQuant-E / the naive strategy |
+//! | `dfq`      | DFQ (Nagel'19) | BN fold + cross-layer equalization + analytic bias correction — fully data-free, exact algorithm |
+//! | `synth`    | (substrate)  | BN-statistics-matched synthetic data, (1+1)-ES refined; `diverse` adds DSG's sample-diversity term |
+//! | `zeroq`    | ZeroQ        | synthetic-data range calibration + MSE-optimal weight scales |
+//! | `dsg`      | DSG          | ZeroQ with diverse synthetic data |
+//! | `adaround` | AdaRound     | greedy coordinate-descent output-MSE rounding on calibration data |
+//! | `gdfq`     | GDFQ         | synthetic data + AdaRound weights + bias correction + calibrated activations (fine-tune-lite) |
+
+pub mod adaround;
+pub mod dfq;
+pub mod dsg;
+pub mod gdfq;
+pub mod rtn;
+pub mod synth;
+pub mod zeroq;
+
+use std::collections::HashMap;
+
+use crate::nn::engine::{forward, ActQuant, Capture};
+use crate::nn::{Graph, Params};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Calibrate per-node activation ranges by observing conv/linear inputs on
+/// calibration data (used by every synthetic-data method).
+pub fn calibrate_act_ranges(
+    graph: &Graph,
+    params: &Params,
+    data: &Tensor,
+    bits: usize,
+) -> Result<ActQuant> {
+    let mut cap = Capture::default();
+    for l in graph.quant_layers() {
+        cap.nodes.insert(l.node_id);
+    }
+    let out = forward(graph, params, data, None, Some(&cap))?;
+    let mut ranges = HashMap::new();
+    for (id, t) in &out.captured {
+        // Outlier-robust range: observed min/max clipped to mean +- 6 sigma
+        // (the role percentile clipping plays in real calibration pipelines;
+        // raw min/max collapses at <= 4 activation bits when the synthetic
+        // batch contains a single extreme sample).
+        let n = t.data.len().max(1) as f32;
+        let mean = t.data.iter().sum::<f32>() / n;
+        let var = t.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let sd = var.sqrt();
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &t.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        lo = lo.max(mean - 6.0 * sd);
+        hi = hi.min(mean + 6.0 * sd);
+        if hi - lo < 1e-6 {
+            hi = lo + 1e-6;
+        }
+        ranges.insert(*id, (lo, hi));
+    }
+    Ok(ActQuant { bits, ranges })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn calibrated_ranges_cover_observed_values() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let mut x = Tensor::zeros(&[4, 3, 8, 8]);
+        Rng::new(8).fill_normal(&mut x.data, 1.0);
+        let aq = calibrate_act_ranges(&g, &p, &x, 8).unwrap();
+        assert_eq!(aq.ranges.len(), 2);
+        let (lo, hi) = aq.ranges[&1];
+        assert!(lo < 0.0 && hi > 0.0); // network input is zero-mean
+        let (lo_fc, _) = aq.ranges[&5];
+        assert!(lo_fc >= 0.0); // post-relu input to FC
+    }
+}

@@ -1,0 +1,53 @@
+//! Round-to-nearest weight quantization (the paper's "rounding" strategy /
+//! SQuant-E).  The weakest baseline and the core of DFQ's weight handling.
+
+use crate::nn::{Graph, Params};
+use crate::quant::{channel_scales, dequant, quantize_rtn, QuantConfig, ScaleMethod};
+
+/// Quantize every conv/linear weight in place with per-channel RTN.
+pub fn quantize_model(graph: &Graph, params: &Params, bits: usize,
+                      scale: ScaleMethod) -> Params {
+    let mut out = params.clone();
+    for layer in graph.quant_layers() {
+        let w = &params[&layer.weight];
+        let cfg = QuantConfig { bits, scale };
+        let scales = channel_scales(w, cfg);
+        let q = quantize_rtn(w, &scales, bits);
+        out.insert(layer.weight.clone(), dequant(&q, &scales));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+    use crate::quant::ScaleMethod;
+
+    #[test]
+    fn weights_land_on_grid() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let q = quantize_model(&g, &p, 4, ScaleMethod::MaxAbs);
+        // Dequantized values are integer multiples of the channel scale.
+        let w = &q["w1"];
+        let orig = &p["w1"];
+        let scales = channel_scales(orig, QuantConfig::new(4));
+        for c in 0..4 {
+            for i in 0..27 {
+                let v = w.data[c * 27 + i] / scales[c];
+                assert!((v - v.round()).abs() < 1e-4);
+                assert!(v.abs() <= 7.001);
+            }
+        }
+        // Non-weight params untouched.
+        assert_eq!(q["g1"].data, p["g1"].data);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let e4 = quantize_model(&g, &p, 4, ScaleMethod::MaxAbs)["w1"].mse(&p["w1"]);
+        let e8 = quantize_model(&g, &p, 8, ScaleMethod::MaxAbs)["w1"].mse(&p["w1"]);
+        assert!(e8 < e4);
+    }
+}

@@ -1,0 +1,205 @@
+//! BN-statistics-matched synthetic calibration data — the substrate behind
+//! ZeroQ / DSG / GDFQ (which is gradient-based in the originals; here a
+//! derivative-free (1+1)-ES refinement, see DESIGN.md §2 for the
+//! substitution argument).
+//!
+//! Objective: for every BatchNorm, the per-channel mean/var of its *input*
+//! on the synthetic batch should match the stored running statistics.  DSG's
+//! contribution (sample diversity) becomes an explicit pairwise-correlation
+//! penalty on the batch.
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+use crate::nn::engine::{forward, Capture};
+use crate::nn::{Graph, Op, Params};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SynthConfig {
+    pub batch: usize,
+    /// (1+1)-ES refinement iterations (0 = plain Gaussian data).
+    pub iters: usize,
+    /// DSG-style diversity penalty weight (0 = ZeroQ-style).
+    pub diversity: f32,
+    pub seed: u64,
+    /// ES mutation step.
+    pub sigma: f32,
+}
+
+impl SynthConfig {
+    pub fn zeroq(batch: usize, iters: usize, seed: u64) -> Self {
+        SynthConfig { batch, iters, diversity: 0.0, seed, sigma: 0.15 }
+    }
+    pub fn dsg(batch: usize, iters: usize, seed: u64) -> Self {
+        SynthConfig { batch, iters, diversity: 0.3, seed, sigma: 0.15 }
+    }
+}
+
+/// BN-statistics distance of a batch (lower is better) + diversity penalty.
+pub fn bn_stat_loss(
+    graph: &Graph,
+    params: &Params,
+    x: &Tensor,
+    diversity: f32,
+) -> Result<f32> {
+    // Capture every BN node's input (= the producing node's output).
+    let mut cap = Capture::default();
+    let mut bn_nodes = Vec::new();
+    for node in &graph.nodes {
+        if let Op::BatchNorm { .. } = node.op {
+            cap.outputs.insert(node.inputs[0]);
+            bn_nodes.push(node.id);
+        }
+    }
+    let out = forward(graph, params, x, None, Some(&cap))?;
+
+    let mut loss = 0.0f32;
+    let mut terms = 0usize;
+    for &bn_id in &bn_nodes {
+        let node = &graph.nodes[bn_id];
+        let Op::BatchNorm { mean, var, .. } = &node.op else { unreachable!() };
+        let t = &out.captured_out[&node.inputs[0]];
+        let (b, c) = (t.shape[0], t.shape[1]);
+        let hw: usize = t.shape[2..].iter().product();
+        let tgt_m = &params[mean].data;
+        let tgt_v = &params[var].data;
+        for ci in 0..c {
+            let mut s = 0.0f32;
+            let mut s2 = 0.0f32;
+            for bi in 0..b {
+                let base = (bi * c + ci) * hw;
+                for &v in &t.data[base..base + hw] {
+                    s += v;
+                    s2 += v * v;
+                }
+            }
+            let n = (b * hw) as f32;
+            let mu = s / n;
+            let va = (s2 / n - mu * mu).max(0.0);
+            let dm = mu - tgt_m[ci];
+            let dv = va.sqrt() - tgt_v[ci].max(0.0).sqrt();
+            loss += dm * dm + dv * dv;
+            terms += 1;
+        }
+    }
+    let mut total = loss / terms.max(1) as f32;
+
+    if diversity > 0.0 {
+        // Pairwise cosine similarity of flattened images.
+        let b = x.shape[0];
+        let d: usize = x.shape[1..].iter().product();
+        let mut pen = 0.0f32;
+        let mut pairs = 0usize;
+        for i in 0..b {
+            let xi = &x.data[i * d..(i + 1) * d];
+            let ni: f32 = xi.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+            for j in (i + 1)..b {
+                let xj = &x.data[j * d..(j + 1) * d];
+                let nj: f32 =
+                    xj.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+                let dot: f32 = xi.iter().zip(xj).map(|(a, b)| a * b).sum();
+                pen += (dot / (ni * nj)).abs();
+                pairs += 1;
+            }
+        }
+        total += diversity * pen / pairs.max(1) as f32;
+    }
+    Ok(total)
+}
+
+/// Generate a refined synthetic calibration batch.
+pub fn generate(graph: &Graph, params: &Params, cfg: SynthConfig)
+                -> Result<Tensor> {
+    let [c, h, w] = graph.input_shape;
+    let mut rng = Rng::new(cfg.seed);
+    let mut x = Tensor::zeros(&[cfg.batch, c, h, w]);
+    rng.fill_normal(&mut x.data, 1.0);
+    if cfg.diversity > 0.0 {
+        // Structured diverse init: per-sample scale + offset bands.
+        for bi in 0..cfg.batch {
+            let scale = 0.5 + 1.5 * (bi as f32 / cfg.batch.max(1) as f32);
+            let off = rng.uniform(-0.5, 0.5);
+            for v in &mut x.data[bi * c * h * w..(bi + 1) * c * h * w] {
+                *v = *v * scale + off;
+            }
+        }
+    }
+
+    let mut best = bn_stat_loss(graph, params, &x, cfg.diversity)?;
+    let n = x.data.len();
+    for it in 0..cfg.iters {
+        // (1+1)-ES: perturb a random contiguous chunk (cheap, local).
+        let chunk = (n / 8).max(1);
+        let start = rng.below(n.saturating_sub(chunk).max(1));
+        let saved: Vec<f32> = x.data[start..start + chunk].to_vec();
+        let sigma = cfg.sigma * (1.0 - 0.5 * it as f32 / cfg.iters.max(1) as f32);
+        for v in &mut x.data[start..start + chunk] {
+            *v += rng.normal() * sigma;
+        }
+        let cand = bn_stat_loss(graph, params, &x, cfg.diversity)?;
+        if cand < best {
+            best = cand;
+        } else {
+            x.data[start..start + chunk].copy_from_slice(&saved);
+        }
+    }
+    Ok(x)
+}
+
+/// Capture per-layer inputs on calibration data (for AdaRound / Hessian).
+pub fn capture_layer_inputs(
+    graph: &Graph,
+    params: &Params,
+    data: &Tensor,
+) -> Result<HashMap<usize, Tensor>> {
+    let mut cap = Capture::default();
+    for l in graph.quant_layers() {
+        cap.nodes.insert(l.node_id);
+    }
+    Ok(forward(graph, params, data, None, Some(&cap))?.captured)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+
+    #[test]
+    fn refinement_reduces_stat_loss() {
+        let (g, mut p) = tiny_test_graph(3, 4, 10);
+        // Non-trivial BN targets.
+        p.get_mut("m1").unwrap().data = vec![0.3, -0.2, 0.1, 0.0];
+        p.get_mut("v1").unwrap().data = vec![0.5, 1.5, 1.0, 2.0];
+        let cfg0 = SynthConfig { batch: 4, iters: 0, diversity: 0.0, seed: 1,
+                                 sigma: 0.15 };
+        let x0 = generate(&g, &p, cfg0).unwrap();
+        let l0 = bn_stat_loss(&g, &p, &x0, 0.0).unwrap();
+        let cfg = SynthConfig { iters: 30, ..cfg0 };
+        let x1 = generate(&g, &p, cfg).unwrap();
+        let l1 = bn_stat_loss(&g, &p, &x1, 0.0).unwrap();
+        assert!(l1 <= l0, "{l1} > {l0}");
+    }
+
+    #[test]
+    fn diverse_batch_less_correlated() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let base = SynthConfig { batch: 6, iters: 0, diversity: 0.0, seed: 3,
+                                 sigma: 0.15 };
+        let x_plain = generate(&g, &p, base).unwrap();
+        let x_div = generate(&g, &p, SynthConfig { diversity: 0.3, ..base })
+            .unwrap();
+        assert_eq!(x_plain.shape, x_div.shape);
+        // Both finite.
+        assert!(x_div.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn capture_covers_all_quant_layers() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let x = Tensor::filled(&[2, 3, 8, 8], 0.1);
+        let caps = capture_layer_inputs(&g, &p, &x).unwrap();
+        assert_eq!(caps.len(), 2);
+    }
+}

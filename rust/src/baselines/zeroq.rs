@@ -1,0 +1,57 @@
+//! ZeroQ-lite (Cai et al., CVPR 2020): BN-stat synthetic data for range
+//! calibration + MSE-optimal per-channel weight scales, RTN rounding.
+
+use anyhow::Result;
+
+use super::synth::{generate, SynthConfig};
+use super::{calibrate_act_ranges, rtn};
+use crate::nn::engine::ActQuant;
+use crate::nn::{Graph, Params};
+use crate::quant::ScaleMethod;
+
+pub struct ZeroQOut {
+    pub params: Params,
+    pub act: Option<ActQuant>,
+}
+
+pub fn quantize_model(
+    graph: &Graph,
+    params: &Params,
+    wbits: usize,
+    abits: usize,
+    cfg: SynthConfig,
+) -> Result<ZeroQOut> {
+    let data = generate(graph, params, cfg)?;
+    let qparams = rtn::quantize_model(
+        graph, params, wbits, ScaleMethod::MseGrid { steps: 32 });
+    let act = if abits > 0 {
+        Some(calibrate_act_ranges(graph, params, &data, abits)?)
+    } else {
+        None
+    };
+    Ok(ZeroQOut { params: qparams, act })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+
+    #[test]
+    fn produces_quantized_weights_and_ranges() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let out = quantize_model(&g, &p, 4, 8,
+                                 SynthConfig::zeroq(4, 2, 1)).unwrap();
+        assert!(out.act.is_some());
+        assert_eq!(out.act.as_ref().unwrap().ranges.len(), 2);
+        assert_ne!(out.params["w1"].data, p["w1"].data);
+    }
+
+    #[test]
+    fn weight_only_mode_has_no_act_quant() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let out = quantize_model(&g, &p, 4, 0,
+                                 SynthConfig::zeroq(2, 0, 1)).unwrap();
+        assert!(out.act.is_none());
+    }
+}

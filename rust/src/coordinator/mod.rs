@@ -1,0 +1,175 @@
+//! The on-the-fly quantization coordinator — the L3 system contribution.
+//!
+//! The paper's pitch (§3.4): SQuant's M·N sub-problems are independent, so a
+//! whole network quantizes in milliseconds on an inference-only device.
+//! This module is that device-side service:
+//!
+//!  * [`quantize_model`] — per-layer parallel SQuant over a loaded model,
+//!    with per-layer timing (Table 3's "sum of all layer quantization
+//!    time" and the ~ms/layer claim);
+//!  * [`quantize_model_offload`] — the same work routed through the AOT
+//!    JAX/Pallas HLO artifacts on the PJRT device (cross-validated
+//!    bit-exact against the native path in rust/tests/);
+//!  * [`server`] — a line-JSON TCP service exposing quantize/eval to
+//!    external clients (see examples/onthefly_service.rs).
+
+pub mod server;
+
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+use crate::io::manifest::{Manifest, SquantShape};
+use crate::nn::{Graph, Params, QuantLayer};
+use crate::quant::{channel_scales, QuantConfig};
+use crate::runtime::Runtime;
+use crate::squant::{squant, SquantOpts, SquantResult};
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_map;
+
+/// Per-layer quantization record (timing + flip counts).
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub weight: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub ms: f64,
+    pub flips_k: usize,
+    pub flips_c: usize,
+}
+
+#[derive(Debug)]
+pub struct QuantReport {
+    pub layers: Vec<LayerReport>,
+    pub total_ms: f64,
+    /// Wall-clock of the parallel run (< total_ms when threads > 1).
+    pub wall_ms: f64,
+}
+
+impl QuantReport {
+    pub fn avg_layer_ms(&self) -> f64 {
+        if self.layers.is_empty() {
+            0.0
+        } else {
+            self.total_ms / self.layers.len() as f64
+        }
+    }
+}
+
+/// Quantize every conv/linear layer with SQuant, layers in parallel.
+/// Returns updated params (weights replaced by dequantized values).
+pub fn quantize_model(
+    graph: &Graph,
+    params: &Params,
+    opts: SquantOpts,
+    threads: usize,
+) -> (Params, QuantReport) {
+    let layers = graph.quant_layers();
+    let t0 = Instant::now();
+    let results: Vec<(QuantLayer, SquantResult, f64)> =
+        parallel_map(layers.len(), threads, |i| {
+            let layer = layers[i].clone();
+            let w = &params[&layer.weight];
+            let lt = Instant::now();
+            let scales = channel_scales(w, QuantConfig::new(opts.bits));
+            let res = squant(w, &scales, opts);
+            let ms = lt.elapsed().as_secs_f64() * 1e3;
+            (layer, res, ms)
+        });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut out = params.clone();
+    let mut reports = Vec::new();
+    let mut total_ms = 0.0;
+    for (layer, res, ms) in results {
+        reports.push(LayerReport {
+            weight: layer.weight.clone(),
+            m: layer.m,
+            n: layer.n,
+            k: layer.k,
+            ms,
+            flips_k: res.flips_k,
+            flips_c: res.flips_c,
+        });
+        total_ms += ms;
+        out.insert(layer.weight, res.wq);
+    }
+    (out, QuantReport { layers: reports, total_ms, wall_ms })
+}
+
+/// Quantize via the AOT JAX/Pallas artifacts (PJRT offload).  Layers whose
+/// (M, N, K, bits) shape has no artifact fall back to the native path.
+pub fn quantize_model_offload(
+    graph: &Graph,
+    params: &Params,
+    bits: usize,
+    manifest: &Manifest,
+    rt: &Runtime,
+) -> Result<(Params, QuantReport, usize)> {
+    let layers = graph.quant_layers();
+    let mut out = params.clone();
+    let mut reports = Vec::new();
+    let mut offloaded = 0usize;
+    let t0 = Instant::now();
+    let mut total_ms = 0.0;
+    for layer in &layers {
+        let w = &params[&layer.weight];
+        let scales = channel_scales(w, QuantConfig::new(bits));
+        let lt = Instant::now();
+        let shape = SquantShape { m: layer.m, n: layer.n, k: layer.k, bits };
+        let (wq, fk, fc) = if let Some(path) = manifest.squant.get(&shape) {
+            // AOT path: (w, s) -> (q, wq).
+            let w3 = Tensor::from_vec(&[layer.m, layer.n, layer.k],
+                                      w.data.clone());
+            let s = Tensor::from_vec(&[layer.m], scales.clone());
+            let outs = rt
+                .run(path, &[&w3, &s])
+                .with_context(|| format!("offload {}", layer.weight))?;
+            offloaded += 1;
+            (Tensor::from_vec(&w.shape, outs[1].data.clone()), 0, 0)
+        } else {
+            let res = squant(w, &scales, SquantOpts::full(bits));
+            (res.wq, res.flips_k, res.flips_c)
+        };
+        let ms = lt.elapsed().as_secs_f64() * 1e3;
+        total_ms += ms;
+        reports.push(LayerReport {
+            weight: layer.weight.clone(),
+            m: layer.m,
+            n: layer.n,
+            k: layer.k,
+            ms,
+            flips_k: fk,
+            flips_c: fc,
+        });
+        out.insert(layer.weight.clone(), wq);
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok((out, QuantReport { layers: reports, total_ms, wall_ms }, offloaded))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+
+    #[test]
+    fn parallel_quantize_matches_serial() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let opts = SquantOpts::full(4);
+        let (q1, r1) = quantize_model(&g, &p, opts, 1);
+        let (q4, _) = quantize_model(&g, &p, opts, 4);
+        assert_eq!(q1["w1"].data, q4["w1"].data);
+        assert_eq!(q1["wfc"].data, q4["wfc"].data);
+        assert_eq!(r1.layers.len(), 2);
+        assert!(r1.total_ms >= 0.0);
+    }
+
+    #[test]
+    fn report_avg_layer_ms() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let (_, r) = quantize_model(&g, &p, SquantOpts::full(8), 2);
+        assert!(r.avg_layer_ms() >= 0.0);
+        assert!(r.wall_ms <= r.total_ms + 50.0); // sanity
+    }
+}

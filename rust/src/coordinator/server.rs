@@ -1,0 +1,253 @@
+//! Line-JSON TCP service: the deployment face of the on-the-fly coordinator.
+//!
+//! Protocol (one JSON object per line, response is one JSON line):
+//!   {"cmd":"ping"}
+//!   {"cmd":"models"}
+//!   {"cmd":"quantize","model":"miniresnet18","wbits":4}
+//!   {"cmd":"eval","model":"miniresnet18","wbits":4,"abits":8,"samples":512}
+//!   {"cmd":"shutdown"}
+//!
+//! One worker thread per connection; model containers are loaded once and
+//! shared.  Used by examples/onthefly_service.rs and the CLI `serve`
+//! command.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::eval;
+use crate::io::{dataset, manifest::Manifest, sqnt};
+use crate::nn::{Graph, Params};
+use crate::squant::SquantOpts;
+use crate::util::json::Json;
+use crate::util::pool::default_threads;
+
+pub struct ModelStore {
+    pub models: HashMap<String, (Graph, Params)>,
+    pub test: dataset::Dataset,
+}
+
+impl ModelStore {
+    pub fn load(manifest: &Manifest) -> Result<ModelStore> {
+        let mut models = HashMap::new();
+        for (name, entry) in &manifest.models {
+            let c = sqnt::load(&entry.sqnt)?;
+            let graph = Graph::from_header(&c.header)?;
+            models.insert(name.clone(), (graph, c.params));
+        }
+        let test = dataset::load(&manifest.test_bin)?;
+        Ok(ModelStore { models, test })
+    }
+}
+
+fn handle_request(store: &ModelStore, req: &Json, stop: &AtomicBool) -> Json {
+    let cmd = req.get("cmd").and_then(|c| c.as_str().ok()).unwrap_or("");
+    match cmd {
+        "ping" => Json::obj().set("ok", true).set("pong", true),
+        "models" => {
+            let names: Vec<Json> = store
+                .models
+                .keys()
+                .map(|k| Json::Str(k.clone()))
+                .collect();
+            Json::obj().set("ok", true).set("models", Json::Arr(names))
+        }
+        "quantize" => match do_quantize(store, req) {
+            Ok(j) => j,
+            Err(e) => Json::obj().set("ok", false).set("error", format!("{e:#}")),
+        },
+        "eval" => match do_eval(store, req) {
+            Ok(j) => j,
+            Err(e) => Json::obj().set("ok", false).set("error", format!("{e:#}")),
+        },
+        "shutdown" => {
+            stop.store(true, Ordering::SeqCst);
+            Json::obj().set("ok", true).set("bye", true)
+        }
+        other => Json::obj()
+            .set("ok", false)
+            .set("error", format!("unknown cmd '{other}'")),
+    }
+}
+
+fn get_model<'a>(store: &'a ModelStore, req: &Json)
+                 -> Result<(&'a Graph, &'a Params)> {
+    let name = req.req("model")?.as_str()?;
+    let (g, p) = store
+        .models
+        .get(name)
+        .with_context(|| format!("unknown model '{name}'"))?;
+    Ok((g, p))
+}
+
+fn do_quantize(store: &ModelStore, req: &Json) -> Result<Json> {
+    let (g, p) = get_model(store, req)?;
+    let wbits = req.get("wbits").and_then(|b| b.as_usize().ok()).unwrap_or(8);
+    let (_, report) = crate::coordinator::quantize_model(
+        g, p, SquantOpts::full(wbits), default_threads());
+    Ok(Json::obj()
+        .set("ok", true)
+        .set("layers", report.layers.len())
+        .set("total_ms", report.total_ms)
+        .set("wall_ms", report.wall_ms)
+        .set("avg_layer_ms", report.avg_layer_ms())
+        .set(
+            "flips",
+            report
+                .layers
+                .iter()
+                .map(|l| l.flips_k + l.flips_c)
+                .sum::<usize>(),
+        ))
+}
+
+fn do_eval(store: &ModelStore, req: &Json) -> Result<Json> {
+    let (g, p) = get_model(store, req)?;
+    let wbits = req.get("wbits").and_then(|b| b.as_usize().ok()).unwrap_or(8);
+    let abits = req.get("abits").and_then(|b| b.as_usize().ok()).unwrap_or(0);
+    let samples = req
+        .get("samples")
+        .and_then(|b| b.as_usize().ok())
+        .unwrap_or(512);
+    let q = eval::quantize_with(
+        eval::Method::squant_full(), g, p, wbits, abits,
+        eval::CalibCfg::default())?;
+    let mut ds = dataset::Dataset {
+        images: store.test.images.clone(),
+        labels: store.test.labels.clone(),
+    };
+    ds.truncate(samples);
+    let acc = eval::accuracy(&q.graph, &q.params, q.act.as_ref(), &ds, 64,
+                             default_threads())?;
+    Ok(Json::obj()
+        .set("ok", true)
+        .set("top1", acc)
+        .set("quant_ms", q.quant_ms)
+        .set("samples", ds.len()))
+}
+
+/// Serve until a `shutdown` request arrives.  Returns the bound port.
+pub fn serve(store: Arc<ModelStore>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    println!("squant coordinator listening on {}", listener.local_addr()?);
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(conn) = conn else { continue };
+        let store = Arc::clone(&store);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let _ = handle_conn(&store, conn, &stop);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(store: &ModelStore, conn: TcpStream, stop: &AtomicBool)
+               -> Result<()> {
+    let mut writer = conn.try_clone()?;
+    let reader = BufReader::new(conn);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line) {
+            Ok(req) => handle_request(store, &req, stop),
+            Err(e) => Json::obj().set("ok", false).set("error", format!("{e:#}")),
+        };
+        writer.write_all(resp.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Minimal client for tests/examples.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.stream.write_all(req.dump().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Json::parse(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+    use crate::tensor::Tensor;
+
+    fn tiny_store() -> ModelStore {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let mut models = HashMap::new();
+        models.insert("tiny".to_string(), (g, p));
+        let test = dataset::Dataset {
+            images: Tensor::zeros(&[8, 3, 8, 8]),
+            labels: vec![0; 8],
+        };
+        ModelStore { models, test }
+    }
+
+    #[test]
+    fn request_dispatch() {
+        let store = tiny_store();
+        let stop = AtomicBool::new(false);
+        let r = handle_request(&store, &Json::parse(r#"{"cmd":"ping"}"#).unwrap(),
+                               &stop);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true));
+        let r = handle_request(
+            &store,
+            &Json::parse(r#"{"cmd":"quantize","model":"tiny","wbits":4}"#)
+                .unwrap(),
+            &stop,
+        );
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(r.req("layers").unwrap().as_usize().unwrap(), 2);
+        let r = handle_request(&store,
+                               &Json::parse(r#"{"cmd":"nope"}"#).unwrap(), &stop);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(false));
+    }
+
+    #[test]
+    fn server_round_trip_over_tcp() {
+        let store = Arc::new(tiny_store());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = Arc::clone(&store);
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            handle_conn(&s2, conn, &stop2).unwrap();
+        });
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let resp = client
+            .call(&Json::parse(r#"{"cmd":"models"}"#).unwrap())
+            .unwrap();
+        assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true));
+        let resp = client
+            .call(&Json::parse(r#"{"cmd":"shutdown"}"#).unwrap())
+            .unwrap();
+        assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true));
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,86 @@
+//! Paper-table-shaped report formatting (markdown-ish, printed by the CLI
+//! and the bench binaries, captured into EXPERIMENTS.md).
+
+/// A single accuracy row: method x bits -> top-1.
+#[derive(Clone, Debug)]
+pub struct AccRow {
+    pub arch: String,
+    pub method: String,
+    pub no_bp: bool,
+    pub no_ft: bool,
+    pub wbits: usize,
+    pub abits: usize,
+    pub top1: f64,
+    pub quant_ms: f64,
+}
+
+fn mark(b: bool) -> &'static str {
+    if b {
+        "yes"
+    } else {
+        "no "
+    }
+}
+
+pub fn print_acc_table(title: &str, rows: &[AccRow]) {
+    println!("\n=== {title} ===");
+    println!(
+        "| {:<16} | {:<14} | {:<5} | {:<5} | {:>5} | {:>5} | {:>7} | {:>10} |",
+        "Arch", "Method", "No BP", "No FT", "W-bit", "A-bit", "Top-1", "quant ms"
+    );
+    println!("|{}|", "-".repeat(96));
+    for r in rows {
+        let bits_w = if r.wbits == 32 { "32".into() } else { format!("{}", r.wbits) };
+        let bits_a = if r.abits == 0 { "32".into() } else { format!("{}", r.abits) };
+        println!(
+            "| {:<16} | {:<14} | {:<5} | {:<5} | {:>5} | {:>5} | {:>7.2} | {:>10.1} |",
+            r.arch,
+            r.method,
+            mark(r.no_bp),
+            mark(r.no_ft),
+            bits_w,
+            bits_a,
+            r.top1 * 100.0,
+            r.quant_ms
+        );
+    }
+}
+
+/// Markdown dump used to append results into EXPERIMENTS.md.
+pub fn acc_table_markdown(rows: &[AccRow]) -> String {
+    let mut s = String::from(
+        "| Arch | Method | No BP | No FT | W | A | Top-1 | quant ms |\n|---|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        let a = if r.abits == 0 { 32 } else { r.abits };
+        let w = if r.wbits == 0 { 32 } else { r.wbits };
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {:.2} | {:.1} |\n",
+            r.arch, r.method, mark(r.no_bp), mark(r.no_ft), w, a,
+            r.top1 * 100.0, r.quant_ms
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_contains_rows() {
+        let rows = vec![AccRow {
+            arch: "miniresnet18".into(),
+            method: "SQuant".into(),
+            no_bp: true,
+            no_ft: true,
+            wbits: 4,
+            abits: 4,
+            top1: 0.6614,
+            quant_ms: 84.0,
+        }];
+        let md = acc_table_markdown(&rows);
+        assert!(md.contains("miniresnet18"));
+        assert!(md.contains("66.14"));
+    }
+}

@@ -1,0 +1,449 @@
+//! Regeneration of every table and figure in the paper's evaluation section
+//! (the code behind `cargo bench --bench table1..6 / fig1 / fig2` and the
+//! corresponding CLI commands).  See DESIGN.md §6 for the experiment index
+//! and EXPERIMENTS.md for recorded paper-vs-measured results.
+
+use anyhow::{Context, Result};
+use std::collections::HashSet;
+use std::time::Instant;
+
+use super::report::AccRow;
+use super::{accuracy, quantize_with, CalibCfg, Method};
+use crate::hessian;
+use crate::io::{dataset, manifest::Manifest, sqnt};
+use crate::nn::engine::{forward, Capture};
+use crate::nn::{Graph, Op, Params};
+use crate::quant::{channel_scales, QuantConfig};
+use crate::squant::decompose;
+use crate::util::pool::default_threads;
+
+pub struct Env {
+    pub man: Manifest,
+    pub test: dataset::Dataset,
+    pub samples: usize,
+    pub calib: CalibCfg,
+}
+
+impl Env {
+    /// `samples` truncates the eval set (0 = full); honours SQUANT_SAMPLES.
+    pub fn load(artifacts: &str) -> Result<Env> {
+        let man = Manifest::load(artifacts)?;
+        let mut test = dataset::load(&man.test_bin)?;
+        let samples = std::env::var("SQUANT_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(0);
+        if samples > 0 {
+            test.truncate(samples);
+        }
+        Ok(Env {
+            man,
+            samples: if samples == 0 { usize::MAX } else { samples },
+            test,
+            calib: CalibCfg::default(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<(Graph, Params)> {
+        let entry = self.man.model(name)?;
+        let c = sqnt::load(&entry.sqnt)?;
+        Ok((Graph::from_header(&c.header)?, c.params))
+    }
+}
+
+fn acc_row(
+    env: &Env,
+    arch: &str,
+    graph: &Graph,
+    params: &Params,
+    method: Method,
+    wbits: usize,
+    abits: usize,
+) -> Result<AccRow> {
+    let q = quantize_with(method, graph, params, wbits, abits, env.calib)?;
+    let top1 = accuracy(&q.graph, &q.params, q.act.as_ref(), &env.test, 256,
+                        default_threads())?;
+    Ok(AccRow {
+        arch: arch.to_string(),
+        method: method.name(),
+        no_bp: method.no_bp(),
+        no_ft: method.no_ft(),
+        wbits,
+        abits,
+        top1,
+        quant_ms: q.quant_ms,
+    })
+}
+
+/// Tables 1 & 2: data-free methods x (W, A) settings on the model zoo.
+///
+/// The paper runs W4A4/W6A6/W8A8 on ImageNet; our SynthImageNet minis are
+/// over-parameterized for their task, which shifts the interesting regime
+/// about one bit lower (see EXPERIMENTS.md), so the default grid adds
+/// W3A3 and a W2A8 stress row.
+pub fn acc_table(env: &Env, archs: &[&str], bit_settings: &[(usize, usize)])
+                 -> Result<Vec<AccRow>> {
+    let methods = [
+        Method::Dfq,
+        Method::ZeroQ,
+        Method::Dsg,
+        Method::Gdfq,
+        Method::squant_full(),
+    ];
+    let mut rows = Vec::new();
+    for arch in archs {
+        let (graph, params) = env.model(arch)?;
+        let fp32 = accuracy(&graph, &params, None, &env.test, 256,
+                            default_threads())?;
+        rows.push(AccRow {
+            arch: arch.to_string(),
+            method: "Baseline".into(),
+            no_bp: true,
+            no_ft: true,
+            wbits: 32,
+            abits: 32,
+            top1: fp32,
+            quant_ms: 0.0,
+        });
+        for &(wbits, abits) in bit_settings {
+            for m in methods {
+                rows.push(acc_row(env, arch, &graph, &params, m, wbits, abits)?);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Table 3: 4-bit quantization wall time per method per model.
+pub struct TimingRow {
+    pub arch: String,
+    pub layers: usize,
+    pub squant_ms: f64,
+    pub squant_per_layer_ms: f64,
+    pub zeroq_ms: f64,
+    pub gdfq_ms: f64,
+}
+
+pub fn timing_table(env: &Env, archs: &[&str]) -> Result<Vec<TimingRow>> {
+    let mut rows = Vec::new();
+    for arch in archs {
+        let (graph, params) = env.model(arch)?;
+        let layers = graph.quant_layers().len();
+
+        // SQuant: the on-the-fly coordinator (sum over layers, like the
+        // paper's "sum of all layer quantization time").
+        let (_, report) = crate::coordinator::quantize_model(
+            &graph, &params, crate::squant::SquantOpts::full(4), 1);
+
+        let t0 = Instant::now();
+        let _ = quantize_with(Method::ZeroQ, &graph, &params, 4, 4, env.calib)?;
+        let zeroq_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t0 = Instant::now();
+        let _ = quantize_with(Method::Gdfq, &graph, &params, 4, 4, env.calib)?;
+        let gdfq_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        rows.push(TimingRow {
+            arch: arch.to_string(),
+            layers,
+            squant_ms: report.total_ms,
+            squant_per_layer_ms: report.avg_layer_ms(),
+            zeroq_ms,
+            gdfq_ms,
+        });
+    }
+    Ok(rows)
+}
+
+/// Table 4: SQuant granularity ablation on one arch, weight-only.
+pub fn ablation_table(env: &Env, arch: &str, bit_settings: &[usize])
+                      -> Result<Vec<AccRow>> {
+    let (graph, params) = env.model(arch)?;
+    let variants = [
+        Method::Squant { enable_k: false, enable_c: false },
+        Method::Squant { enable_k: true, enable_c: false },
+        Method::Squant { enable_k: false, enable_c: true },
+        Method::Squant { enable_k: true, enable_c: true },
+    ];
+    let mut rows = Vec::new();
+    let fp32 = accuracy(&graph, &params, None, &env.test, 256,
+                        default_threads())?;
+    rows.push(AccRow {
+        arch: arch.into(),
+        method: "Baseline".into(),
+        no_bp: true,
+        no_ft: true,
+        wbits: 32,
+        abits: 32,
+        top1: fp32,
+        quant_ms: 0.0,
+    });
+    for &bits in bit_settings {
+        for m in variants {
+            rows.push(acc_row(env, arch, &graph, &params, m, bits, 0)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Table 5: SQuant vs ZeroQ/DSG + AdaRound, weight-only.
+pub fn adaround_table(env: &Env, arch: &str, bit_settings: &[usize])
+                      -> Result<Vec<AccRow>> {
+    let (graph, params) = env.model(arch)?;
+    let mut rows = Vec::new();
+    for &bits in bit_settings {
+        for m in [
+            Method::AdaRound { diverse: false },
+            Method::AdaRound { diverse: true },
+            Method::squant_full(),
+        ] {
+            rows.push(acc_row(env, arch, &graph, &params, m, bits, 0)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Table 6: per-layer approximation precision on real activations.
+pub struct ApRow {
+    pub layer: String,
+    pub node_id: usize,
+    pub stats: hessian::ApStats,
+}
+
+pub fn ap_table(env: &Env, arch: &str, bits: usize, calib_images: usize,
+                max_cols: usize) -> Result<Vec<ApRow>> {
+    let (graph, params) = env.model(arch)?;
+    // Capture conv inputs on real test images (the paper uses 1000 samples;
+    // we subsample im2col columns instead to bound the dense-H cost).
+    let (x, _) = env.test.batch(0, calib_images);
+    let mut cap = Capture::default();
+    let mut conv_ids = Vec::new();
+    for node in &graph.nodes {
+        if let Op::Conv2d { groups: 1, .. } = node.op {
+            cap.nodes.insert(node.id);
+            conv_ids.push(node.id);
+        }
+    }
+    let out = forward(&graph, &params, &x, None, Some(&cap))?;
+
+    let mut rows = Vec::new();
+    for node_id in conv_ids {
+        let attrs = hessian::conv_attrs(&graph, node_id)?;
+        let weight_name = match &graph.nodes[node_id].op {
+            Op::Conv2d { weight, .. } => weight.clone(),
+            _ => unreachable!(),
+        };
+        let w = &params[&weight_name];
+        let scales = channel_scales(w, QuantConfig::new(bits));
+        let (stats, _) = hessian::layer_ap(
+            w, &scales, bits, &out.captured[&node_id], &attrs, max_cols);
+        rows.push(ApRow { layer: weight_name, node_id, stats });
+    }
+    Ok(rows)
+}
+
+/// Figure 1: decomposition coverage of the empirical Hessian per layer.
+pub struct CoverageRow {
+    pub layer: String,
+    pub nk: usize,
+    pub cov: decompose::Coverage,
+}
+
+pub fn coverage_table(env: &Env, arch: &str, calib_images: usize,
+                      max_cols: usize) -> Result<Vec<CoverageRow>> {
+    let (graph, params) = env.model(arch)?;
+    let (x, _) = env.test.batch(0, calib_images);
+    let mut cap = Capture::default();
+    let mut conv_ids = Vec::new();
+    for node in &graph.nodes {
+        if let Op::Conv2d { groups: 1, kh, .. } = node.op {
+            if kh > 1 {
+                cap.nodes.insert(node.id);
+                conv_ids.push(node.id);
+            }
+        }
+    }
+    let fwd = forward(&graph, &params, &x, None, Some(&cap))?;
+    let mut rows = Vec::new();
+    for node_id in conv_ids {
+        let attrs = hessian::conv_attrs(&graph, node_id)?;
+        let (weight_name, n, k) = match &graph.nodes[node_id].op {
+            Op::Conv2d { weight, cin, kh, kw, .. } => {
+                (weight.clone(), *cin, kh * kw)
+            }
+            _ => unreachable!(),
+        };
+        let h = hessian::empirical_xxt(
+            &fwd.captured[&node_id], attrs.kh, attrs.kw, attrs.stride,
+            attrs.ph, attrs.pw, max_cols);
+        rows.push(CoverageRow {
+            layer: weight_name,
+            nk: n * k,
+            cov: decompose::coverage(&h, n, k),
+        });
+    }
+    Ok(rows)
+}
+
+/// Figure 2: flip statistics — perturbation histogram before/after flips.
+pub struct FlipHistogram {
+    pub arch: String,
+    pub bits: usize,
+    /// Bucketed |perturbation| counts before flipping (RTN), 10 buckets
+    /// over [0, 0.5].
+    pub before: Vec<usize>,
+    /// After SQuant, 10 buckets over [0, 1.0] (flipped elements land in
+    /// [0.5, 1.0)).
+    pub after: Vec<usize>,
+    pub flipped: usize,
+    pub total: usize,
+}
+
+pub fn flip_histogram(env: &Env, arch: &str, bits: usize)
+                      -> Result<FlipHistogram> {
+    let (graph, params) = env.model(arch)?;
+    let mut before = vec![0usize; 10];
+    let mut after = vec![0usize; 10];
+    let mut flipped = 0usize;
+    let mut total = 0usize;
+    for layer in graph.quant_layers() {
+        let w = &params[&layer.weight];
+        let scales = channel_scales(w, QuantConfig::new(bits));
+        let res = crate::squant::squant(
+            w, &scales, crate::squant::SquantOpts::full(bits));
+        let q0 = crate::quant::quantize_rtn(w, &scales, bits);
+        let p0 = crate::quant::perturbation(w, &q0, &scales);
+        let p1 = crate::quant::perturbation(w, &res.q, &scales);
+        for (&b, &a) in p0.data.iter().zip(&p1.data) {
+            let bi = ((b.abs() / 0.5) * 10.0).min(9.0) as usize;
+            let ai = (a.abs() * 10.0).min(9.0) as usize;
+            before[bi] += 1;
+            after[ai] += 1;
+            if b != a {
+                flipped += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(FlipHistogram { arch: arch.into(), bits, before, after, flipped, total })
+}
+
+/// Names of the five zoo models, in the paper's presentation order.
+pub const TABLE1_ARCHS: &[&str] = &["miniresnet18", "miniresnet50"];
+pub const TABLE2_ARCHS: &[&str] =
+    &["miniinception", "minisqueezenext", "minishufflenet"];
+/// Default (W, A) grid for Tables 1 & 2 (paper grid + low-bit extension).
+pub const TABLE12_BITS: &[(usize, usize)] =
+    &[(2, 8), (3, 3), (4, 4), (6, 6), (8, 8)];
+
+pub const ALL_ARCHS: &[&str] = &[
+    "miniresnet18",
+    "miniresnet50",
+    "miniinception",
+    "minisqueezenext",
+    "minishufflenet",
+];
+
+/// Check which archs are actually present (training may be configured down).
+pub fn present_archs<'a>(env: &Env, wanted: &[&'a str]) -> Vec<&'a str> {
+    let have: HashSet<&str> =
+        env.man.models.keys().map(|s| s.as_str()).collect();
+    wanted
+        .iter()
+        .copied()
+        .filter(|a| have.contains(a))
+        .collect()
+}
+
+pub fn print_timing_table(rows: &[TimingRow]) {
+    println!(
+        "\n| {:<18} | {:>6} | {:>12} | {:>14} | {:>12} | {:>12} |",
+        "Arch", "Layers", "SQuant (ms)", "ms/layer", "ZeroQ (ms)", "GDFQ (ms)"
+    );
+    for r in rows {
+        println!(
+            "| {:<18} | {:>6} | {:>12.1} | {:>14.2} | {:>12.1} | {:>12.1} |",
+            r.arch, r.layers, r.squant_ms, r.squant_per_layer_ms, r.zeroq_ms,
+            r.gdfq_ms
+        );
+    }
+}
+
+pub fn print_ap_table(rows: &[ApRow]) {
+    println!(
+        "\n| {:<3} | {:<14} | {:>8} {:>8} {:>7} | {:>8} {:>8} {:>7} |",
+        "#", "layer", "K-flip", "K-corr", "K-AP%", "C-flip", "C-corr", "C-AP%"
+    );
+    let mut tk = (0, 0);
+    let mut tc = (0, 0);
+    for (i, r) in rows.iter().enumerate() {
+        println!(
+            "| {:<3} | {:<14} | {:>8} {:>8} {:>6.1}% | {:>8} {:>8} {:>6.1}% |",
+            i + 1,
+            r.layer,
+            r.stats.k_flipped,
+            r.stats.k_correct,
+            r.stats.k_ap() * 100.0,
+            r.stats.c_flipped,
+            r.stats.c_correct,
+            r.stats.c_ap() * 100.0
+        );
+        tk.0 += r.stats.k_flipped;
+        tk.1 += r.stats.k_correct;
+        tc.0 += r.stats.c_flipped;
+        tc.1 += r.stats.c_correct;
+    }
+    let pct = |c: usize, f: usize| if f == 0 { 100.0 } else {
+        c as f64 / f as f64 * 100.0
+    };
+    println!(
+        "| {:<3} | {:<14} | {:>8} {:>8} {:>6.1}% | {:>8} {:>8} {:>6.1}% |",
+        "", "Total", tk.0, tk.1, pct(tk.1, tk.0), tc.0, tc.1, pct(tc.1, tc.0)
+    );
+}
+
+pub fn print_coverage_table(rows: &[CoverageRow]) {
+    println!(
+        "\n| {:<14} | {:>5} | {:>10} | {:>10} | {:>12} |",
+        "layer", "NK", "H-E frac", "H-K frac", "E+K+C relerr"
+    );
+    for r in rows {
+        println!(
+            "| {:<14} | {:>5} | {:>9.1}% | {:>9.1}% | {:>12.4} |",
+            r.layer,
+            r.nk,
+            r.cov.frac_diag * 100.0,
+            r.cov.frac_block * 100.0,
+            r.cov.recon_rel_err
+        );
+    }
+}
+
+pub fn print_flip_histogram(h: &FlipHistogram) {
+    println!(
+        "\nFig.2 flip histogram — {} W{} ({} / {} elements flipped = {:.2}%)",
+        h.arch, h.bits, h.flipped, h.total,
+        h.flipped as f64 / h.total as f64 * 100.0
+    );
+    println!("|p| before flips (RTN), buckets of 0.05 over [0,0.5]:");
+    let bmax = *h.before.iter().max().unwrap_or(&1) as f64;
+    for (i, &c) in h.before.iter().enumerate() {
+        let bar = "#".repeat((c as f64 / bmax * 40.0) as usize);
+        println!("  [{:4.2},{:4.2}) {:>8} {bar}", i as f64 * 0.05,
+                 (i + 1) as f64 * 0.05, c);
+    }
+    println!("|p| after SQuant, buckets of 0.1 over [0,1.0]:");
+    let amax = *h.after.iter().max().unwrap_or(&1) as f64;
+    for (i, &c) in h.after.iter().enumerate() {
+        let bar = "#".repeat((c as f64 / amax * 40.0) as usize);
+        println!("  [{:3.1},{:3.1}) {:>8} {bar}", i as f64 * 0.1,
+                 (i + 1) as f64 * 0.1, c);
+    }
+}
+
+pub fn fail_if_missing(env: &Env, archs: &[&str]) -> Result<()> {
+    for a in archs {
+        env.man.model(a).context("model missing — run `make artifacts`")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,318 @@
+//! Empirical Hessian analysis — the machinery behind the paper's Appendix
+//! A.3 / Table 6 (approximation precision) and Figure 1 (decomposition
+//! coverage).
+//!
+//! For a conv layer, the per-output-channel expected Hessian is
+//! `E[H] ≈ l_m · E[x xᵀ]` (Eq. 2) where x ranges over im2col columns of the
+//! layer input.  We estimate `E[x xᵀ]` from captured activations on real
+//! (or synthetic) data, decompose it with Algorithm 3, and judge every flip
+//! SQuant performed against the *precise* objective Eq. (6): a flip is
+//! "correct" when it decreases the coefficient-weighted objective, and the
+//! approximation precision AP = correct / flipped.
+
+use anyhow::{bail, Result};
+
+use crate::nn::{Graph, Op};
+use crate::squant::decompose::{decompose, Decomposition};
+use crate::squant::{squant_traced, SquantOpts, SquantResult};
+use crate::tensor::im2col::im2col;
+use crate::tensor::Tensor;
+
+/// Accumulate E[x xᵀ] for one conv layer from a batch of its input
+/// activations (B, C, H, W).  `max_cols` subsamples im2col columns to bound
+/// cost.  Only groups == 1 convs are supported (the Table 6 target,
+/// ResNet18, is group-free).
+#[allow(clippy::too_many_arguments)]
+pub fn empirical_xxt(
+    inputs: &Tensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    ph: usize,
+    pw: usize,
+    max_cols: usize,
+) -> Tensor {
+    let (b, c, h, w) = (
+        inputs.shape[0],
+        inputs.shape[1],
+        inputs.shape[2],
+        inputs.shape[3],
+    );
+    let nk = c * kh * kw;
+    let mut acc = Tensor::zeros(&[nk, nk]);
+    let mut count = 0usize;
+    for bi in 0..b {
+        let img = &inputs.data[bi * c * h * w..(bi + 1) * c * h * w];
+        let patches = im2col(img, c, h, w, kh, kw, stride, ph, pw);
+        let cols = patches.shape[1];
+        let step = (cols * b / max_cols.max(1)).max(1);
+        let mut ci = (bi * 7) % step; // stagger sampling across images
+        while ci < cols {
+            // x x^T accumulate (upper triangle, mirrored after).
+            for r in 0..nk {
+                let xr = patches.at2(r, ci);
+                if xr == 0.0 {
+                    continue;
+                }
+                let arow = &mut acc.data[r * nk..(r + 1) * nk];
+                for cc in 0..nk {
+                    arow[cc] += xr * patches.at2(cc, ci);
+                }
+            }
+            count += 1;
+            ci += step;
+        }
+    }
+    if count > 0 {
+        acc.scale_inplace(1.0 / count as f32);
+    }
+    acc
+}
+
+/// The per-stage flip judgement for one layer (one Table 6 row).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ApStats {
+    pub k_flipped: usize,
+    pub k_correct: usize,
+    pub c_flipped: usize,
+    pub c_correct: usize,
+}
+
+impl ApStats {
+    pub fn k_ap(&self) -> f64 {
+        if self.k_flipped == 0 {
+            1.0
+        } else {
+            self.k_correct as f64 / self.k_flipped as f64
+        }
+    }
+    pub fn c_ap(&self) -> f64 {
+        if self.c_flipped == 0 {
+            1.0
+        } else {
+            self.c_correct as f64 / self.c_flipped as f64
+        }
+    }
+}
+
+/// Judge every flip of a traced SQuant run against the precise objective
+/// Eq. (6) with coefficients from `decomp` (shared across output channels,
+/// per Eq. 2 — the positive per-channel factor l_m cancels in the sign).
+pub fn judge_flips(
+    w: &Tensor,
+    res: &SquantResult,
+    decomp: &Decomposition,
+) -> ApStats {
+    let (m, n, k) = crate::quant::mnk_of(&w.shape);
+    assert_eq!((decomp.n, decomp.k), (n, k));
+
+    // Rebuild the RTN starting state.
+    let q0 = crate::quant::quantize_rtn(w, &res.scales, res.bits);
+    let mut p = crate::quant::perturbation(w, &q0, &res.scales);
+    let mut ker_sum = vec![0.0f32; m * n];
+    let mut chan_sum = vec![0.0f32; m];
+    for mi in 0..m {
+        for ni in 0..n {
+            let s: f32 = p.data[(mi * n + ni) * k..(mi * n + ni + 1) * k]
+                .iter()
+                .sum();
+            ker_sum[mi * n + ni] = s;
+            chan_sum[mi] += s;
+        }
+    }
+
+    let mut st = ApStats::default();
+    for ev in &res.trace {
+        let off = (ev.m * n + ev.n) * k + ev.i;
+        let d = ev.delta;
+        let pv = p.data[off];
+        let sk = ker_sum[ev.m * n + ev.n];
+        let tc = chan_sum[ev.m];
+        // Eq. (6) delta for a single +-1 mutation.
+        let delta_obj = decomp.e(ev.n, ev.i) * ((pv + d) * (pv + d) - pv * pv)
+            + decomp.kern[ev.n] * ((sk + d) * (sk + d) - sk * sk)
+            + decomp.c * ((tc + d) * (tc + d) - tc * tc);
+        let correct = delta_obj < 0.0;
+        if ev.c_stage {
+            st.c_flipped += 1;
+            st.c_correct += correct as usize;
+        } else {
+            st.k_flipped += 1;
+            st.k_correct += correct as usize;
+        }
+        p.data[off] += d;
+        ker_sum[ev.m * n + ev.n] += d;
+        chan_sum[ev.m] += d;
+    }
+    st
+}
+
+/// One Table-6 row: layer id + AP for SQuant-E&K and SQuant-E&K&C stages.
+#[derive(Clone, Debug)]
+pub struct LayerAp {
+    pub node_id: usize,
+    pub name: String,
+    pub stats: ApStats,
+}
+
+/// Conv attributes needed to compute the empirical Hessian of a layer.
+pub struct ConvAttrs {
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub ph: usize,
+    pub pw: usize,
+}
+
+pub fn conv_attrs(graph: &Graph, node_id: usize) -> Result<ConvAttrs> {
+    match &graph.nodes[node_id].op {
+        Op::Conv2d { kh, kw, stride, ph, pw, groups, .. } => {
+            if *groups != 1 {
+                bail!("empirical Hessian only for groups == 1");
+            }
+            Ok(ConvAttrs { kh: *kh, kw: *kw, stride: *stride, ph: *ph, pw: *pw })
+        }
+        _ => bail!("node {node_id} is not a conv"),
+    }
+}
+
+/// Full per-layer AP analysis given the layer's captured input activations.
+pub fn layer_ap(
+    w: &Tensor,
+    scales: &[f32],
+    bits: usize,
+    inputs: &Tensor,
+    attrs: &ConvAttrs,
+    max_cols: usize,
+) -> (ApStats, Decomposition) {
+    let (_, n, k) = crate::quant::mnk_of(&w.shape);
+    let h = empirical_xxt(inputs, attrs.kh, attrs.kw, attrs.stride, attrs.ph,
+                          attrs.pw, max_cols);
+    let decomp = decompose(&h, n, k);
+    let res = squant_traced(w, scales, SquantOpts::full(bits));
+    (judge_flips(w, &res, &decomp), decomp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{channel_scales, QuantConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn xxt_identity_input() {
+        // Single 1x1 "image" with value v: H = v^2 J for 1x1 kernel.
+        let x = Tensor::from_vec(&[1, 2, 1, 1], vec![2.0, 3.0]);
+        let h = empirical_xxt(&x, 1, 1, 1, 0, 0, 100);
+        assert_eq!(h.shape, vec![2, 2]);
+        assert!((h.at2(0, 0) - 4.0).abs() < 1e-6);
+        assert!((h.at2(0, 1) - 6.0).abs() < 1e-6);
+        assert!((h.at2(1, 1) - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn xxt_symmetric_psd_diag() {
+        let mut rng = Rng::new(1);
+        let mut x = Tensor::zeros(&[2, 3, 6, 6]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let h = empirical_xxt(&x, 3, 3, 1, 1, 1, 64);
+        let nk = 27;
+        for r in 0..nk {
+            assert!(h.at2(r, r) >= -1e-6);
+            for c in 0..nk {
+                assert!((h.at2(r, c) - h.at2(c, r)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn judge_manual_single_flip() {
+        // One kernel, one channel: w/s = [1.3, 0.45, 0.45] -> RTN q = [1,0,0],
+        // p = [-0.3, -0.45, -0.45], e = -1.2 -> one flip of index 1 (largest
+        // |p|, tie to lower index), d = +1.
+        let w = Tensor::from_vec(&[1, 1, 1, 3], vec![1.3, 0.45, 0.45]);
+        let scales = vec![1.0];
+        let res = squant_traced(&w, &scales, SquantOpts::full(4));
+        assert_eq!(res.trace.len(), 1);
+        let ev = res.trace[0];
+        assert_eq!((ev.n, ev.i, ev.delta), (0, 1, 1.0));
+        // Judge under coefficients where the kernel term dominates:
+        // delta = e*((p+1)^2 - p^2) + k*((S+1)^2 - S^2) + c*(same as k)
+        //       = e*(0.55^2-0.45^2) + (k+c)*((-0.2)^2-(-1.2)^2)
+        //       = 0.1*e - 1.4*(k+c)
+        let mk = |e: f32, k: f32, c: f32| Decomposition {
+            n: 1, k: 3, c, kern: vec![k], elem: vec![e; 3],
+        };
+        let ap = judge_flips(&w, &res, &mk(0.1, 1.0, 0.5));
+        assert_eq!((ap.k_flipped, ap.k_correct), (1, 1));
+        // Element term dominant -> the same flip is judged incorrect.
+        let ap = judge_flips(&w, &res, &mk(100.0, 0.01, 0.01));
+        assert_eq!((ap.k_flipped, ap.k_correct), (1, 0));
+    }
+
+    fn synth_acts(s_amp: f32, c_amp: f32, n_amp: f32, mu: f32) -> Tensor {
+        let mut rng = Rng::new(7);
+        let mut x = Tensor::zeros(&[6, 6, 8, 8]);
+        for bi in 0..6 {
+            let shared = rng.normal();
+            for ci in 0..6 {
+                let chan = rng.normal();
+                let off = (bi * 6 + ci) * 64;
+                for i in 0..64 {
+                    x.data[off + i] =
+                        mu + shared * s_amp + chan * c_amp + rng.normal() * n_amp;
+                }
+            }
+        }
+        x
+    }
+
+    fn ap_of(x: &Tensor) -> ApStats {
+        let mut rng = Rng::new(3);
+        let mut w = Tensor::zeros(&[8, 6, 3, 3]);
+        rng.fill_normal(&mut w.data, 0.1);
+        let scales = channel_scales(&w, QuantConfig::new(4));
+        let attrs = ConvAttrs { kh: 3, kw: 3, stride: 1, ph: 1, pw: 1 };
+        layer_ap(&w, &scales, 4, x, &attrs, 128).0
+    }
+
+    #[test]
+    fn ap_tracks_hessian_structure() {
+        // The approximation precision must respond to the activation
+        // covariance structure exactly as the paper's theory predicts
+        // (Appendix A.1): per-channel-correlated activations validate the
+        // kernel-wise term (high K AP), a strong shared component validates
+        // the channel-wise term (high C AP), and iid activations break the
+        // kernel assumption (low K AP).
+        let chan_dom = ap_of(&synth_acts(0.1, 1.0, 0.1, 0.5));
+        assert!(chan_dom.k_flipped > 0);
+        assert!(chan_dom.k_ap() >= 0.85, "chan-dom K AP {}", chan_dom.k_ap());
+
+        let shared_dom = ap_of(&synth_acts(1.0, 0.1, 0.05, 1.0));
+        assert!(shared_dom.c_ap() >= 0.75, "shared-dom C AP {}", shared_dom.c_ap());
+
+        let iid = ap_of(&synth_acts(0.0, 0.0, 1.0, 0.0));
+        assert!(iid.k_ap() < 0.5, "iid K AP {}", iid.k_ap());
+
+        // Realistic mixed structure (post-BN/ReLU-like): K stage decent.
+        // (C flips are too few per layer for a stable AP assertion here —
+        // the Table 6 bench measures it on the real model.)
+        let mixed = ap_of(&synth_acts(0.5, 0.5, 0.2, 0.8));
+        assert!(mixed.k_ap() >= 0.7, "mixed K AP {}", mixed.k_ap());
+    }
+
+    #[test]
+    fn judge_flips_counts_match_trace() {
+        let mut rng = Rng::new(5);
+        let mut w = Tensor::zeros(&[4, 3, 3, 3]);
+        rng.fill_normal(&mut w.data, 0.1);
+        let scales = channel_scales(&w, QuantConfig::new(4));
+        let res = squant_traced(&w, &scales, SquantOpts::full(4));
+        // Uniform H: every coefficient equal.
+        let h = Tensor::filled(&[27, 27], 1.0);
+        let d = decompose(&h, 3, 9);
+        let ap = judge_flips(&w, &res, &d);
+        assert_eq!(ap.k_flipped, res.flips_k);
+        assert_eq!(ap.c_flipped, res.flips_c);
+    }
+}

@@ -1,0 +1,137 @@
+//! SDSB dataset-bin loader (mirrors python/compile/datasets.py).
+//!
+//! Layout: b"SDSB" | version u32 | n u32 | c u32 | h u32 | w u32 |
+//! images f32le[n*c*h*w] | labels u32le[n].
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::{read_f32s, read_u32};
+use crate::tensor::Tensor;
+
+pub const MAGIC: &[u8; 4] = b"SDSB";
+
+pub struct Dataset {
+    /// (N, C, H, W)
+    pub images: Tensor,
+    pub labels: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Copy one image as a (C, H, W) tensor.
+    pub fn image(&self, i: usize) -> Tensor {
+        let chw: usize = self.images.shape[1..].iter().product();
+        Tensor::from_vec(
+            &self.images.shape[1..],
+            self.images.data[i * chw..(i + 1) * chw].to_vec(),
+        )
+    }
+
+    /// Copy a contiguous batch [start, start+len) as (len, C, H, W).
+    pub fn batch(&self, start: usize, len: usize) -> (Tensor, &[u32]) {
+        let chw: usize = self.images.shape[1..].iter().product();
+        let end = (start + len).min(self.len());
+        let mut shape = self.images.shape.clone();
+        shape[0] = end - start;
+        (
+            Tensor::from_vec(
+                &shape,
+                self.images.data[start * chw..end * chw].to_vec(),
+            ),
+            &self.labels[start..end],
+        )
+    }
+
+    /// Keep only the first n samples (for fast sweeps).
+    pub fn truncate(&mut self, n: usize) {
+        let n = n.min(self.len());
+        let chw: usize = self.images.shape[1..].iter().product();
+        self.images.data.truncate(n * chw);
+        self.images.shape[0] = n;
+        self.labels.truncate(n);
+    }
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+    let buf = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    if buf.len() < 24 || &buf[0..4] != MAGIC {
+        bail!("not an SDSB dataset: {:?}", path.as_ref());
+    }
+    let mut pos = 4usize;
+    let version = read_u32(&buf, &mut pos)?;
+    if version != 1 {
+        bail!("unsupported SDSB version {version}");
+    }
+    let n = read_u32(&buf, &mut pos)? as usize;
+    let c = read_u32(&buf, &mut pos)? as usize;
+    let h = read_u32(&buf, &mut pos)? as usize;
+    let w = read_u32(&buf, &mut pos)? as usize;
+    let images = read_f32s(&buf, &mut pos, n * c * h * w)?;
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        labels.push(read_u32(&buf, &mut pos)?);
+    }
+    Ok(Dataset {
+        images: Tensor::from_vec(&[n, c, h, w], images),
+        labels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tiny(path: &Path) {
+        let (n, c, h, w) = (3u32, 1u32, 2u32, 2u32);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        for v in [1u32, n, c, h, w] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for i in 0..(n * c * h * w) {
+            buf.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        for l in [0u32, 1, 2] {
+            buf.extend_from_slice(&l.to_le_bytes());
+        }
+        std::fs::write(path, buf).unwrap();
+    }
+
+    #[test]
+    fn load_and_slice() {
+        let dir = std::env::temp_dir().join("sdsb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.bin");
+        write_tiny(&path);
+        let ds = load(&path).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.images.shape, vec![3, 1, 2, 2]);
+        assert_eq!(ds.image(1).data, vec![4., 5., 6., 7.]);
+        let (b, l) = ds.batch(1, 2);
+        assert_eq!(b.shape, vec![2, 1, 2, 2]);
+        assert_eq!(l, &[1, 2]);
+        let (b2, _) = ds.batch(2, 5); // clamped at end
+        assert_eq!(b2.shape[0], 1);
+    }
+
+    #[test]
+    fn truncate() {
+        let dir = std::env::temp_dir().join("sdsb_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.bin");
+        write_tiny(&path);
+        let mut ds = load(&path).unwrap();
+        ds.truncate(2);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.images.shape[0], 2);
+    }
+}

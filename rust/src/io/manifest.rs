@@ -1,0 +1,131 @@
+//! AOT manifest (artifacts/manifest.json) — the index of everything
+//! `make artifacts` produced: per-model forward HLOs + SQuant offload HLOs.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub sqnt: PathBuf,
+    /// batch size -> forward HLO path
+    pub forward: HashMap<usize, PathBuf>,
+    /// AOT parameter order (tensor names after the leading input).
+    pub param_order: Vec<String>,
+    pub test_acc: Option<f64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SquantShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub bits: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: HashMap<String, ModelEntry>,
+    pub squant: HashMap<SquantShape, PathBuf>,
+    pub train_bin: PathBuf,
+    pub test_bin: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text)?;
+
+        let mut models = HashMap::new();
+        for (name, entry) in j.req("models")?.as_obj()? {
+            let mut forward = HashMap::new();
+            for (b, f) in entry.req("forward")?.as_obj()? {
+                forward.insert(b.parse::<usize>()?, dir.join(f.as_str()?));
+            }
+            let param_order = entry
+                .req("param_order")?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            let test_acc = entry
+                .get("meta")
+                .and_then(|m| m.get("test_acc"))
+                .and_then(|x| x.as_f64().ok());
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    sqnt: dir.join(entry.req("sqnt")?.as_str()?),
+                    forward,
+                    param_order,
+                    test_acc,
+                },
+            );
+        }
+
+        let mut squant = HashMap::new();
+        for e in j.req("squant")?.as_arr()? {
+            squant.insert(
+                SquantShape {
+                    m: e.req("m")?.as_usize()?,
+                    n: e.req("n")?.as_usize()?,
+                    k: e.req("k")?.as_usize()?,
+                    bits: e.req("bits")?.as_usize()?,
+                },
+                dir.join(e.req("file")?.as_str()?),
+            );
+        }
+
+        let ds = j.req("dataset")?;
+        Ok(Manifest {
+            train_bin: dir.join(ds.req("train")?.as_str()?),
+            test_bin: dir.join(ds.req("test")?.as_str()?),
+            dir,
+            models,
+            squant,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"dataset":{"train":"tr.bin","test":"te.bin"},
+                "models":{"m1":{"sqnt":"m1.sqnt",
+                                "forward":{"1":"m1_b1.hlo.txt","256":"m1_b256.hlo.txt"},
+                                "param_order":["w1","w2"],
+                                "meta":{"test_acc":0.91}}},
+                "squant":[{"m":8,"n":3,"k":9,"bits":4,"file":"sq.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("m1").unwrap();
+        assert_eq!(e.param_order, vec!["w1", "w2"]);
+        assert_eq!(e.test_acc, Some(0.91));
+        assert!(e.forward.contains_key(&256));
+        assert!(m
+            .squant
+            .contains_key(&SquantShape { m: 8, n: 3, k: 9, bits: 4 }));
+        assert!(m.model("nope").is_err());
+    }
+}

@@ -1,0 +1,33 @@
+//! Artifact I/O: SQNT weight containers, SDSB dataset bins, and the AOT
+//! manifest — the three files `make artifacts` leaves behind and the only
+//! interface between the Python build pipeline and this crate.
+
+pub mod dataset;
+pub mod manifest;
+pub mod sqnt;
+
+use anyhow::{bail, Result};
+
+/// Read a little-endian u32 from a byte slice at offset, advancing it.
+pub(crate) fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    if *pos + 4 > buf.len() {
+        bail!("truncated file at byte {}", *pos);
+    }
+    let v = u32::from_le_bytes([buf[*pos], buf[*pos + 1], buf[*pos + 2], buf[*pos + 3]]);
+    *pos += 4;
+    Ok(v)
+}
+
+/// Reinterpret a little-endian byte run as f32s.
+pub(crate) fn read_f32s(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<f32>> {
+    if *pos + 4 * n > buf.len() {
+        bail!("truncated float payload: want {n} floats at byte {}", *pos);
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let o = *pos + 4 * i;
+        out.push(f32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]]));
+    }
+    *pos += 4 * n;
+    Ok(out)
+}

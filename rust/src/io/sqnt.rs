@@ -1,0 +1,158 @@
+//! SQNT weight-container codec (mirrors python/compile/sqnt.py).
+//!
+//! Layout: b"SQNT" | version u32 | header_len u32 | header JSON | f32le
+//! payload.  The header embeds the model IR (nodes) and the tensor table
+//! (name, shape, offset-in-floats, numel).  The writer is used to export
+//! quantized models back to disk.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::{read_f32s, read_u32};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+pub const MAGIC: &[u8; 4] = b"SQNT";
+pub const VERSION: u32 = 1;
+
+/// A parsed container: IR header (raw JSON) + named parameter tensors.
+pub struct Container {
+    pub header: Json,
+    pub params: HashMap<String, Tensor>,
+    /// Tensor-table order (the AOT forward HLO's parameter order).
+    pub order: Vec<String>,
+}
+
+impl Container {
+    pub fn name(&self) -> &str {
+        self.header
+            .get("name")
+            .and_then(|j| j.as_str().ok())
+            .unwrap_or("?")
+    }
+
+    pub fn meta(&self) -> Option<&Json> {
+        self.header.get("meta")
+    }
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Container> {
+    let buf = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let mut pos = 0usize;
+    if buf.len() < 12 || &buf[0..4] != MAGIC {
+        bail!("not a SQNT container: {:?}", path.as_ref());
+    }
+    pos += 4;
+    let version = read_u32(&buf, &mut pos)?;
+    if version != VERSION {
+        bail!("unsupported SQNT version {version}");
+    }
+    let hlen = read_u32(&buf, &mut pos)? as usize;
+    if pos + hlen > buf.len() {
+        bail!("truncated header");
+    }
+    let header = Json::parse(std::str::from_utf8(&buf[pos..pos + hlen])?)?;
+    pos += hlen;
+
+    let mut params = HashMap::new();
+    let mut order = Vec::new();
+    let payload_start = pos;
+    for t in header.req("tensors")?.as_arr()? {
+        let name = t.req("name")?.as_str()?.to_string();
+        let shape = t.req("shape")?.usize_vec()?;
+        let offset = t.req("offset")?.as_usize()?;
+        let numel = t.req("numel")?.as_usize()?;
+        if numel != shape.iter().product::<usize>() {
+            bail!("tensor {name}: numel {numel} != shape {shape:?}");
+        }
+        let mut p = payload_start + 4 * offset;
+        let data = read_f32s(&buf, &mut p, numel)?;
+        params.insert(name.clone(), Tensor::from_vec(&shape, data));
+        order.push(name);
+    }
+    Ok(Container { header, params, order })
+}
+
+/// Write a container: `header` must contain a `tensors` table consistent
+/// with `params` (use [`rebuild_tensor_table`] when shapes changed).
+pub fn save(path: impl AsRef<Path>, header: &Json,
+            params: &HashMap<String, Tensor>) -> Result<()> {
+    let hbytes = header.dump().into_bytes();
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(hbytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&hbytes);
+    for t in header.req("tensors")?.as_arr()? {
+        let name = t.req("name")?.as_str()?;
+        let tensor = params
+            .get(name)
+            .with_context(|| format!("missing tensor {name}"))?;
+        let shape = t.req("shape")?.usize_vec()?;
+        if shape != tensor.shape {
+            bail!("tensor {name}: header shape {shape:?} != {:?}", tensor.shape);
+        }
+        for v in &tensor.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path.as_ref(), out)
+        .with_context(|| format!("writing {:?}", path.as_ref()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_header() -> Json {
+        Json::parse(
+            r#"{"name":"t","input_shape":[1,2,2],"num_classes":2,
+                "nodes":[{"id":0,"op":"input","inputs":[],"attrs":{},"params":{}}],
+                "tensors":[{"name":"w","shape":[2,3],"offset":0,"numel":6}],
+                "meta":{"test_acc":0.9}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("sqnt_test_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sqnt");
+        let mut params = HashMap::new();
+        params.insert(
+            "w".to_string(),
+            Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
+        );
+        save(&path, &tiny_header(), &params).unwrap();
+        let c = load(&path).unwrap();
+        assert_eq!(c.name(), "t");
+        assert_eq!(c.order, vec!["w"]);
+        assert_eq!(c.params["w"].data, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(
+            c.meta().unwrap().req("test_acc").unwrap().as_f64().unwrap(),
+            0.9
+        );
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sqnt_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.sqnt");
+        std::fs::write(&path, b"NOPE00000000").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn save_rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join("sqnt_test_shape");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut params = HashMap::new();
+        params.insert("w".to_string(), Tensor::zeros(&[1, 1]));
+        assert!(save(dir.join("x.sqnt"), &tiny_header(), &params).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! # SQuant — on-the-fly data-free quantization (ICLR 2022 reproduction)
+//!
+//! Layer-3 of the three-layer Rust + JAX + Pallas stack: everything that runs
+//! at deployment time lives here — the SQuant algorithm itself
+//! ([`squant`]), the model substrate ([`nn`], [`tensor`], [`io`]), the
+//! competing data-free baselines ([`baselines`]), the empirical Hessian
+//! analyzer ([`hessian`]), the PJRT runtime that executes the AOT-compiled
+//! JAX/Pallas artifacts ([`runtime`]), and the on-the-fly quantization
+//! coordinator ([`coordinator`]).
+//!
+//! Python never runs on this path: `make artifacts` produces HLO text +
+//! SQNT weight containers once; this crate is self-contained afterwards.
+//!
+//! See DESIGN.md for the paper -> module map and EXPERIMENTS.md for the
+//! reproduced tables/figures.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod eval;
+pub mod hessian;
+pub mod io;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod squant;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,340 @@
+//! `squant` CLI — the deployment entrypoint of the L3 coordinator.
+//!
+//! Commands:
+//!   squant info                          artifact + runtime status
+//!   squant zoo                           list models + FP32 accuracy
+//!   squant quantize --model M --bits B   on-the-fly SQuant + per-layer report
+//!   squant eval --model M --wbits B [--abits A] [--method squant|rtn|dfq|...]
+//!   squant e2e                           end-to-end driver (quantize + eval,
+//!                                        native and PJRT paths)
+//!   squant serve [--addr HOST:PORT]      TCP quantization service
+//!
+//! Every command takes --artifacts DIR (default ./artifacts).
+
+use anyhow::{bail, Context, Result};
+
+use squant::coordinator::{self, server};
+use squant::eval::{self, report::AccRow, CalibCfg, Method};
+use squant::io::{dataset, manifest::Manifest, sqnt};
+use squant::nn::Graph;
+use squant::squant as sq;
+use squant::util::cli::Args;
+use squant::util::pool::default_threads;
+
+fn load_model(man: &Manifest, name: &str)
+              -> Result<(Graph, squant::nn::Params, sqnt::Container)> {
+    let entry = man.model(name)?;
+    let c = sqnt::load(&entry.sqnt)?;
+    let graph = Graph::from_header(&c.header)?;
+    let params = c.params.clone();
+    Ok((graph, params, c))
+}
+
+fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s {
+        "squant" => Method::squant_full(),
+        "squant-e" => Method::Squant { enable_k: false, enable_c: false },
+        "squant-ek" => Method::Squant { enable_k: true, enable_c: false },
+        "squant-ec" => Method::Squant { enable_k: false, enable_c: true },
+        "rtn" => Method::Squant { enable_k: false, enable_c: false },
+        "dfq" => Method::Dfq,
+        "zeroq" => Method::ZeroQ,
+        "dsg" => Method::Dsg,
+        "gdfq" => Method::Gdfq,
+        "adaround" => Method::AdaRound { diverse: false },
+        "dsg-adaround" => Method::AdaRound { diverse: true },
+        "fp32" => Method::Fp32,
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let cmd = args.command.clone().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "info" => cmd_info(&artifacts, &mut args),
+        "zoo" => cmd_zoo(&artifacts, &mut args),
+        "quantize" => cmd_quantize(&artifacts, &mut args),
+        "eval" => cmd_eval(&artifacts, &mut args),
+        "e2e" => cmd_e2e(&artifacts, &mut args),
+        "serve" => cmd_serve(&artifacts, &mut args),
+        "table1" | "table2" | "table3" | "table4" | "table5" | "table6"
+        | "fig1" | "fig2" => cmd_table(&cmd, &artifacts, &mut args),
+        "help" | _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+squant — on-the-fly data-free quantization (SQuant, ICLR'22 reproduction)
+
+USAGE: squant <command> [--artifacts DIR] [options]
+
+COMMANDS:
+  table1..table6, fig1, fig2   regenerate a paper table/figure
+  info                         artifact inventory + PJRT platform
+  zoo                          models + stored FP32 test accuracy
+  quantize --model M --bits B  SQuant the model, print per-layer timing
+          [--threads T] [--offload]
+  eval    --model M --wbits B [--abits A] [--method NAME] [--samples N]
+  e2e     [--model M] [--wbits B] [--abits A]   full end-to-end driver
+  serve   [--addr HOST:PORT]   TCP quantization service
+
+METHODS: squant squant-e squant-ek squant-ec dfq zeroq dsg gdfq adaround
+         dsg-adaround fp32
+";
+
+fn cmd_info(artifacts: &str, args: &mut Args) -> Result<()> {
+    args.finish()?;
+    let man = Manifest::load(artifacts)?;
+    println!("artifacts dir : {artifacts}");
+    println!("models        : {}", man.models.len());
+    for (name, e) in &man.models {
+        println!(
+            "  {name:<18} fp32 top-1 {:.2}%  batches {:?}",
+            e.test_acc.unwrap_or(0.0) * 100.0,
+            e.forward.keys().collect::<Vec<_>>()
+        );
+    }
+    println!("squant HLOs   : {}", man.squant.len());
+    match squant::runtime::Runtime::cpu() {
+        Ok(rt) => println!("PJRT platform : {}", rt.platform()),
+        Err(e) => println!("PJRT platform : unavailable ({e:#})"),
+    }
+    Ok(())
+}
+
+fn cmd_zoo(artifacts: &str, args: &mut Args) -> Result<()> {
+    args.finish()?;
+    let man = Manifest::load(artifacts)?;
+    let test = dataset::load(&man.test_bin)?;
+    println!("| {:<18} | {:>8} | {:>8} | {:>9} |", "model", "params",
+             "q-layers", "fp32 top1");
+    let mut names: Vec<_> = man.models.keys().cloned().collect();
+    names.sort();
+    for name in names {
+        let (graph, params, _) = load_model(&man, &name)?;
+        let acc = eval::accuracy(&graph, &params, None, &test, 256,
+                                 default_threads())?;
+        println!(
+            "| {:<18} | {:>8} | {:>8} | {:>8.2}% |",
+            name,
+            graph.weight_count(),
+            graph.quant_layers().len(),
+            acc * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_quantize(artifacts: &str, args: &mut Args) -> Result<()> {
+    let model = args.str_or("model", "miniresnet18");
+    let bits = args.usize_or("bits", 4)?;
+    let threads = args.usize_or("threads", default_threads())?;
+    let offload = args.flag("offload");
+    args.finish()?;
+    let man = Manifest::load(artifacts)?;
+    let (graph, params, _) = load_model(&man, &model)?;
+
+    let report = if offload {
+        let rt = squant::runtime::Runtime::cpu()?;
+        let (_, report, offloaded) = coordinator::quantize_model_offload(
+            &graph, &params, bits, &man, &rt)?;
+        println!("offloaded {offloaded}/{} layers to PJRT", report.layers.len());
+        report
+    } else {
+        let (_, report) =
+            coordinator::quantize_model(&graph, &params,
+                                        sq::SquantOpts::full(bits), threads);
+        report
+    };
+    println!(
+        "| {:<14} | {:>4} {:>4} {:>3} | {:>9} | {:>6} | {:>6} |",
+        "layer", "M", "N", "K", "ms", "flipK", "flipC"
+    );
+    for l in &report.layers {
+        println!(
+            "| {:<14} | {:>4} {:>4} {:>3} | {:>9.3} | {:>6} | {:>6} |",
+            l.weight, l.m, l.n, l.k, l.ms, l.flips_k, l.flips_c
+        );
+    }
+    println!(
+        "{model}: {} layers, sum {:.1} ms, wall {:.1} ms ({} threads), avg {:.2} ms/layer",
+        report.layers.len(), report.total_ms, report.wall_ms, threads,
+        report.avg_layer_ms()
+    );
+    Ok(())
+}
+
+fn cmd_eval(artifacts: &str, args: &mut Args) -> Result<()> {
+    let model = args.str_or("model", "miniresnet18");
+    let wbits = args.usize_or("wbits", 4)?;
+    let abits = args.usize_or("abits", 0)?;
+    let samples = args.usize_or("samples", usize::MAX)?;
+    let method = parse_method(&args.str_or("method", "squant"))?;
+    let calib_iters = args.usize_or("calib-iters", 24)?;
+    args.finish()?;
+    let man = Manifest::load(artifacts)?;
+    let (graph, params, _) = load_model(&man, &model)?;
+    let mut test = dataset::load(&man.test_bin)?;
+    test.truncate(samples);
+
+    let calib = CalibCfg { iters: calib_iters, ..CalibCfg::default() };
+    let q = eval::quantize_with(method, &graph, &params, wbits, abits, calib)?;
+    let acc = eval::accuracy(&q.graph, &q.params, q.act.as_ref(), &test, 128,
+                             default_threads())?;
+    let row = AccRow {
+        arch: model,
+        method: method.name(),
+        no_bp: method.no_bp(),
+        no_ft: method.no_ft(),
+        wbits,
+        abits,
+        top1: acc,
+        quant_ms: q.quant_ms,
+    };
+    eval::report::print_acc_table("eval", std::slice::from_ref(&row));
+    Ok(())
+}
+
+fn cmd_e2e(artifacts: &str, args: &mut Args) -> Result<()> {
+    let model = args.str_or("model", "miniresnet18");
+    let wbits = args.usize_or("wbits", 4)?;
+    let abits = args.usize_or("abits", 8)?;
+    args.finish()?;
+    let man = Manifest::load(artifacts)?;
+    let (graph, params, container) = load_model(&man, &model)?;
+    let test = dataset::load(&man.test_bin)?;
+    let threads = default_threads();
+
+    println!("== SQuant end-to-end driver: {model} W{wbits}A{abits} ==");
+
+    // 1. FP32 reference accuracy (native engine).
+    let fp32 = eval::accuracy(&graph, &params, None, &test, 256, threads)?;
+    println!("fp32 top-1 (native)   : {:.2}%", fp32 * 100.0);
+
+    // 2. On-the-fly quantization with per-layer parallelism.
+    let (qparams, report) = coordinator::quantize_model(
+        &graph, &params, sq::SquantOpts::full(wbits), threads);
+    println!(
+        "quantized {} layers in {:.1} ms wall ({:.1} ms summed, {:.2} ms/layer)",
+        report.layers.len(), report.wall_ms, report.total_ms,
+        report.avg_layer_ms()
+    );
+
+    // 3. Accuracy: RTN vs SQuant, native engine.
+    let rtn_params = eval::quantize_rtn_only(&graph, &params, wbits);
+    let aq = (abits > 0).then(|| {
+        squant::nn::actrange::data_free_ranges(&graph, &qparams, abits)
+    });
+    let rtn_acc =
+        eval::accuracy(&graph, &rtn_params, aq.as_ref(), &test, 256, threads)?;
+    let sq_acc =
+        eval::accuracy(&graph, &qparams, aq.as_ref(), &test, 256, threads)?;
+    println!("rtn    top-1 (native) : {:.2}%", rtn_acc * 100.0);
+    println!("squant top-1 (native) : {:.2}%", sq_acc * 100.0);
+
+    // 4. PJRT path: run the AOT forward graph with the quantized weights.
+    let entry = man.model(&model)?;
+    if let Some(path) = entry.forward.get(&256) {
+        let rt = squant::runtime::Runtime::cpu()?;
+        let exe = rt.load(path)?;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let mut latency_ms = 0.0f64;
+        let mut nb = 0usize;
+        let mut bi = 0usize;
+        while bi + 256 <= test.len() {
+            let (x, labels) = test.batch(bi, 256);
+            let mut inputs: Vec<&squant::tensor::Tensor> = vec![&x];
+            let ordered: Vec<&squant::tensor::Tensor> = container
+                .order
+                .iter()
+                .map(|n| &qparams[n])
+                .collect();
+            inputs.extend(ordered.iter());
+            let t0 = std::time::Instant::now();
+            let outs = rt.execute(&exe, &inputs)?;
+            latency_ms += t0.elapsed().as_secs_f64() * 1e3;
+            nb += 1;
+            let preds = outs[0].argmax_rows();
+            correct += preds
+                .iter()
+                .zip(labels)
+                .filter(|(p, l)| **p == **l as usize)
+                .count();
+            seen += labels.len();
+            bi += 256;
+        }
+        println!(
+            "squant top-1 (PJRT)   : {:.2}%  ({:.1} ms/batch of 256, {} imgs/s)",
+            correct as f64 / seen as f64 * 100.0,
+            latency_ms / nb as f64,
+            (seen as f64 / (latency_ms / 1e3)) as u64
+        );
+    }
+
+    // 5. Container round-trip: export the quantized model.
+    let out_path = format!("{artifacts}/{model}_w{wbits}.sqnt");
+    sqnt::save(&out_path, &container.header, &qparams)?;
+    println!("quantized container written: {out_path}");
+    Ok(())
+}
+
+fn cmd_table(which: &str, artifacts: &str, args: &mut Args) -> Result<()> {
+    use squant::eval::tables as tb;
+    let samples = args.usize_or("samples", 0)?;
+    args.finish()?;
+    let mut env = tb::Env::load(artifacts)?;
+    if samples > 0 {
+        env.test.truncate(samples);
+    }
+    match which {
+        "table1" => {
+            let rows = tb::acc_table(&env, tb::TABLE1_ARCHS, tb::TABLE12_BITS)?;
+            eval::report::print_acc_table("Table 1", &rows);
+        }
+        "table2" => {
+            let rows = tb::acc_table(&env, tb::TABLE2_ARCHS, tb::TABLE12_BITS)?;
+            eval::report::print_acc_table("Table 2", &rows);
+        }
+        "table3" => {
+            let archs = tb::present_archs(&env, tb::ALL_ARCHS);
+            tb::print_timing_table(&tb::timing_table(&env, &archs)?);
+        }
+        "table4" => {
+            let rows = tb::ablation_table(&env, "miniresnet18", &[2, 3, 4])?;
+            eval::report::print_acc_table("Table 4", &rows);
+        }
+        "table5" => {
+            let rows = tb::adaround_table(&env, "miniresnet18", &[2, 3, 4])?;
+            eval::report::print_acc_table("Table 5", &rows);
+        }
+        "table6" => {
+            tb::print_ap_table(&tb::ap_table(&env, "miniresnet18", 4, 64, 512)?);
+        }
+        "fig1" => {
+            tb::print_coverage_table(
+                &tb::coverage_table(&env, "miniresnet18", 64, 512)?);
+        }
+        "fig2" => {
+            for bits in [3, 4, 8] {
+                tb::print_flip_histogram(
+                    &tb::flip_histogram(&env, "miniresnet18", bits)?);
+            }
+        }
+        _ => unreachable!(),
+    }
+    Ok(())
+}
+
+fn cmd_serve(artifacts: &str, args: &mut Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7433");
+    args.finish()?;
+    let man = Manifest::load(artifacts)?;
+    let store = server::ModelStore::load(&man).context("loading models")?;
+    server::serve(std::sync::Arc::new(store), &addr)
+}

@@ -1,0 +1,132 @@
+//! Data-free activation ranges (the paper's BN-based activation scheme).
+//!
+//! SQuant quantizes weights; activations use "a simple rounding method and a
+//! wide quantization range ... without breaking the data-free premise"
+//! (paper §4, following DFQ).  BatchNorm output channel c is N(β_c, γ_c²)
+//! *by construction* on the training distribution, so a data-free per-tensor
+//! range is
+//!
+//! ```text
+//! [min_c (β_c − n·|γ_c|), max_c (β_c + n·|γ_c|)]
+//! ```
+//!
+//! propagated through ReLU (lo → 0), pooling (unchanged), residual adds
+//! (conservative interval sum), concat (interval union).  The network input
+//! is assumed standardized (|x| ≤ `INPUT_SIGMA`).  No data is touched.
+
+use std::collections::HashMap;
+
+use super::{Graph, Op, Params};
+use crate::nn::engine::ActQuant;
+
+/// Assumed range of the standardized network input (data-free convention).
+pub const INPUT_SIGMA: f32 = 3.0;
+/// Width multiplier n for BN ranges ("wide range" per the paper).
+pub const BN_SIGMAS: f32 = 4.0;
+
+/// Interval estimate of every node's output, then an [`ActQuant`] with the
+/// ranges of every conv/linear *input*.
+pub fn data_free_ranges(graph: &Graph, params: &Params, bits: usize) -> ActQuant {
+    let mut out: Vec<(f32, f32)> = Vec::with_capacity(graph.nodes.len());
+    for node in &graph.nodes {
+        let inr = |i: usize| out[node.inputs[i]];
+        let r = match &node.op {
+            Op::Input => (-INPUT_SIGMA, INPUT_SIGMA),
+            Op::Conv2d { weight, .. } => {
+                // Fallback bound (every conv in the zoo is BN-followed, so
+                // this rarely matters): max-channel L2 norm times input mag.
+                let w = &params[weight];
+                let m = w.shape[0];
+                let per = w.numel() / m;
+                let mut worst = 0.0f32;
+                for c in 0..m {
+                    let norm: f32 = w.data[c * per..(c + 1) * per]
+                        .iter()
+                        .map(|v| v * v)
+                        .sum::<f32>()
+                        .sqrt();
+                    worst = worst.max(norm);
+                }
+                let (lo, hi) = inr(0);
+                let mag = lo.abs().max(hi.abs()) * worst;
+                (-mag, mag)
+            }
+            Op::BatchNorm { gamma, beta, .. } => {
+                let g = &params[gamma].data;
+                let b = &params[beta].data;
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for (gv, bv) in g.iter().zip(b) {
+                    lo = lo.min(bv - BN_SIGMAS * gv.abs());
+                    hi = hi.max(bv + BN_SIGMAS * gv.abs());
+                }
+                (lo, hi)
+            }
+            Op::Relu => {
+                let (lo, hi) = inr(0);
+                (lo.max(0.0), hi.max(0.0))
+            }
+            Op::MaxPool { .. } | Op::AvgPool { .. } | Op::Gap
+            | Op::ChannelShuffle { .. } | Op::Flatten => inr(0),
+            Op::Add => {
+                let (a, b) = (inr(0), inr(1));
+                (a.0 + b.0, a.1 + b.1) // conservative interval sum
+            }
+            Op::Concat => {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for &i in &node.inputs {
+                    lo = lo.min(out[i].0);
+                    hi = hi.max(out[i].1);
+                }
+                (lo, hi)
+            }
+            Op::Linear { weight, .. } => {
+                let w = &params[weight];
+                let (lo, hi) = inr(0);
+                let mag = lo.abs().max(hi.abs()) * w.abs_max() * w.shape[1] as f32;
+                (-mag, mag)
+            }
+        };
+        out.push(r);
+    }
+
+    let mut ranges = HashMap::new();
+    for node in &graph.nodes {
+        if matches!(node.op, Op::Conv2d { .. } | Op::Linear { .. }) {
+            let (lo, hi) = out[node.inputs[0]];
+            // Degenerate intervals still need a nonzero span.
+            let hi = if hi - lo < 1e-6 { lo + 1e-6 } else { hi };
+            ranges.insert(node.id, (lo, hi));
+        }
+    }
+    ActQuant { bits, ranges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+
+    #[test]
+    fn ranges_cover_conv_and_fc() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let aq = data_free_ranges(&g, &p, 8);
+        assert_eq!(aq.ranges.len(), 2);
+        // Conv input = network input.
+        assert_eq!(aq.ranges[&1], (-INPUT_SIGMA, INPUT_SIGMA));
+        // FC input = post-relu(BN): lo = 0 (unit gamma, zero beta -> [0, 4]).
+        let (lo, hi) = aq.ranges[&5];
+        assert_eq!(lo, 0.0);
+        assert!((hi - BN_SIGMAS).abs() < 1e-5);
+    }
+
+    #[test]
+    fn relu_clamps_lo() {
+        let (g, p) = tiny_test_graph(2, 2, 2);
+        let aq = data_free_ranges(&g, &p, 4);
+        for (_, (lo, hi)) in &aq.ranges {
+            assert!(lo <= hi);
+        }
+    }
+}

@@ -1,0 +1,457 @@
+//! Native CPU inference engine for the model IR.
+//!
+//! Executes a [`Graph`] batch-at-a-time: convs are im2col + blocked matmul
+//! (per group), BN is a folded affine in eval mode, pooling follows the
+//! count-include-pad convention shared with the JAX executor.  Two optional
+//! features drive the experiments:
+//!
+//!  * **activation quantization** — a per-node fake-quant applied to every
+//!    conv/linear *input* (per-tensor affine, the paper's activation scheme);
+//!  * **activation capture** — clones the input of selected conv/linear
+//!    nodes so the Hessian analyzer / calibration baselines can compute
+//!    E[x xᵀ] or output-MSE on real intermediate activations.
+
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+
+use super::{Graph, Op, Params};
+use crate::tensor::im2col::{im2col, out_dim};
+use crate::tensor::{matmul::matmul_bt, matmul::matmul_into, Tensor};
+use crate::util::rn;
+
+/// Per-tensor affine activation quantizer: node id -> (min, max) range.
+#[derive(Clone, Debug)]
+pub struct ActQuant {
+    pub bits: usize,
+    /// Quantization range per conv/linear node id (applied to its input).
+    pub ranges: HashMap<usize, (f32, f32)>,
+}
+
+impl ActQuant {
+    /// Fake-quantize a tensor in place with an asymmetric affine grid.
+    pub fn apply(&self, node_id: usize, t: &mut Tensor) {
+        let Some(&(lo, hi)) = self.ranges.get(&node_id) else {
+            return;
+        };
+        let levels = ((1usize << self.bits) - 1) as f32;
+        let span = (hi - lo).max(1e-8);
+        let scale = span / levels;
+        let zp = rn(-lo / scale);
+        for v in t.data.iter_mut() {
+            let q = (rn(*v / scale) + zp).clamp(0.0, levels);
+            *v = (q - zp) * scale;
+        }
+    }
+}
+
+/// What to record during a forward pass.
+#[derive(Default)]
+pub struct Capture {
+    /// Node ids whose *input* tensor should be cloned (conv/linear only;
+    /// for conv/linear the clone is taken *after* activation fake-quant,
+    /// i.e. exactly what the layer consumes).
+    pub nodes: HashSet<usize>,
+    /// Node ids whose *output* tensor should be cloned (any op — used for
+    /// BN-statistics matching, which needs conv outputs / BN inputs).
+    pub outputs: HashSet<usize>,
+}
+
+pub struct ForwardOut {
+    /// (B, num_classes)
+    pub logits: Tensor,
+    /// node id -> cloned input tensor (when requested via Capture).
+    pub captured: HashMap<usize, Tensor>,
+    /// node id -> cloned output tensor (when requested via Capture).
+    pub captured_out: HashMap<usize, Tensor>,
+}
+
+/// Run the graph on a (B, C, H, W) input batch.
+pub fn forward(
+    graph: &Graph,
+    params: &Params,
+    x: &Tensor,
+    act_quant: Option<&ActQuant>,
+    capture: Option<&Capture>,
+) -> Result<ForwardOut> {
+    if x.ndim() != 4 {
+        bail!("input must be (B,C,H,W), got {:?}", x.shape);
+    }
+    let mut vals: Vec<Option<Tensor>> = vec![None; graph.nodes.len()];
+    let mut captured = HashMap::new();
+    let mut captured_out = HashMap::new();
+
+    for node in &graph.nodes {
+        let get = |i: usize| -> Result<&Tensor> {
+            vals[node.inputs[i]]
+                .as_ref()
+                .context("missing input value")
+        };
+        let out = match &node.op {
+            Op::Input => x.clone(),
+            Op::Conv2d { .. } | Op::Linear { .. } => {
+                let mut input = get(0)?.clone();
+                if let Some(aq) = act_quant {
+                    aq.apply(node.id, &mut input);
+                }
+                if let Some(cap) = capture {
+                    if cap.nodes.contains(&node.id) {
+                        captured.insert(node.id, input.clone());
+                    }
+                }
+                match &node.op {
+                    Op::Conv2d {
+                        stride, ph, pw, groups, cin, cout, kh, kw, weight, bias,
+                    } => conv2d(
+                        &input,
+                        params.get(weight).context("missing conv weight")?,
+                        bias.as_ref().map(|b| params.get(b)).flatten(),
+                        *stride, *ph, *pw, *groups, *cin, *cout, *kh, *kw,
+                    )?,
+                    Op::Linear { weight, bias, .. } => {
+                        let w = params.get(weight).context("missing fc weight")?;
+                        let mut y = matmul_bt(&input, w);
+                        if let Some(bname) = bias {
+                            let b = params.get(bname).context("missing fc bias")?;
+                            for r in 0..y.shape[0] {
+                                for (v, bv) in y.row_mut(r).iter_mut().zip(&b.data) {
+                                    *v += bv;
+                                }
+                            }
+                        }
+                        y
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            Op::BatchNorm { eps, gamma, beta, mean, var, .. } => {
+                let t = get(0)?;
+                batchnorm(
+                    t,
+                    &params.get(gamma).context("bn gamma")?.data,
+                    &params.get(beta).context("bn beta")?.data,
+                    &params.get(mean).context("bn mean")?.data,
+                    &params.get(var).context("bn var")?.data,
+                    *eps,
+                )
+            }
+            Op::Relu => {
+                let mut t = get(0)?.clone();
+                t.relu_inplace();
+                t
+            }
+            Op::MaxPool { k, s } => pool(get(0)?, *k, *s, 0, true),
+            Op::AvgPool { k, s, pad } => pool(get(0)?, *k, *s, *pad, false),
+            Op::Gap => gap(get(0)?),
+            Op::Add => {
+                let mut t = get(0)?.clone();
+                t.add_assign(get(1)?);
+                t
+            }
+            Op::Concat => {
+                let ins: Vec<&Tensor> = node
+                    .inputs
+                    .iter()
+                    .map(|&i| vals[i].as_ref().unwrap())
+                    .collect();
+                concat_channels(&ins)?
+            }
+            Op::ChannelShuffle { groups } => channel_shuffle(get(0)?, *groups),
+            Op::Flatten => {
+                let t = get(0)?;
+                let b = t.shape[0];
+                let rest: usize = t.shape[1..].iter().product();
+                t.clone().reshape(&[b, rest])
+            }
+        };
+        if let Some(cap) = capture {
+            if cap.outputs.contains(&node.id) {
+                captured_out.insert(node.id, out.clone());
+            }
+        }
+        vals[node.id] = Some(out);
+    }
+
+    let logits = vals
+        .pop()
+        .flatten()
+        .context("empty graph")?;
+    Ok(ForwardOut { logits, captured, captured_out })
+}
+
+// ---------------------------------------------------------------------------
+// ops
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    stride: usize,
+    ph: usize,
+    pw: usize,
+    groups: usize,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+) -> Result<Tensor> {
+    let (b, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    if c != cin {
+        bail!("conv input channels {c} != {cin}");
+    }
+    if w.shape != [cout, cin / groups, kh, kw] {
+        bail!("conv weight shape {:?} unexpected", w.shape);
+    }
+    let oh = out_dim(h, kh, stride, ph);
+    let ow = out_dim(wd, kw, stride, pw);
+    let cg = cin / groups; // in-channels per group
+    let og = cout / groups; // out-channels per group
+    let krows = cg * kh * kw;
+    let mut out = Tensor::zeros(&[b, cout, oh, ow]);
+
+    for bi in 0..b {
+        let img = &x.data[bi * c * h * wd..(bi + 1) * c * h * wd];
+        for g in 0..groups {
+            let patches = im2col(
+                &img[g * cg * h * wd..(g + 1) * cg * h * wd],
+                cg, h, wd, kh, kw, stride, ph, pw,
+            );
+            // weight rows for this group: (og, krows)
+            let wslice = &w.data[g * og * krows..(g + 1) * og * krows];
+            let dst = &mut out.data[(bi * cout + g * og) * oh * ow
+                ..(bi * cout + (g + 1) * og) * oh * ow];
+            matmul_into(wslice, &patches.data, dst, og, krows, oh * ow);
+        }
+        if let Some(bt) = bias {
+            for oc in 0..cout {
+                let base = (bi * cout + oc) * oh * ow;
+                let bv = bt.data[oc];
+                for v in &mut out.data[base..base + oh * ow] {
+                    *v += bv;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn batchnorm(x: &Tensor, gamma: &[f32], beta: &[f32], mean: &[f32],
+             var: &[f32], eps: f32) -> Tensor {
+    let (b, c) = (x.shape[0], x.shape[1]);
+    let hw: usize = x.shape[2..].iter().product();
+    let mut out = x.clone();
+    for bi in 0..b {
+        for ci in 0..c {
+            let scale = gamma[ci] / (var[ci] + eps).sqrt();
+            let shift = beta[ci] - mean[ci] * scale;
+            let base = (bi * c + ci) * hw;
+            for v in &mut out.data[base..base + hw] {
+                *v = *v * scale + shift;
+            }
+        }
+    }
+    out
+}
+
+fn pool(x: &Tensor, k: usize, s: usize, pad: usize, is_max: bool) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = out_dim(h, k, s, pad);
+    let ow = out_dim(w, k, s, pad);
+    let mut out = Tensor::zeros(&[b, c, oh, ow]);
+    for bi in 0..b {
+        for ci in 0..c {
+            let src = &x.data[(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
+            let dst = &mut out.data[(bi * c + ci) * oh * ow
+                ..(bi * c + ci + 1) * oh * ow];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = if is_max { f32::NEG_INFINITY } else { 0.0 };
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oy * s + ky) as isize - pad as isize;
+                            let ix = (ox * s + kx) as isize - pad as isize;
+                            let v = if iy >= 0
+                                && iy < h as isize
+                                && ix >= 0
+                                && ix < w as isize
+                            {
+                                src[iy as usize * w + ix as usize]
+                            } else if is_max {
+                                f32::NEG_INFINITY
+                            } else {
+                                0.0 // count-include-pad: padded zeros count
+                            };
+                            if is_max {
+                                acc = acc.max(v);
+                            } else {
+                                acc += v;
+                            }
+                        }
+                    }
+                    dst[oy * ow + ox] = if is_max { acc } else { acc / (k * k) as f32 };
+                }
+            }
+        }
+    }
+    out
+}
+
+fn gap(x: &Tensor) -> Tensor {
+    let (b, c) = (x.shape[0], x.shape[1]);
+    let hw: usize = x.shape[2..].iter().product();
+    let mut out = Tensor::zeros(&[b, c]);
+    for bi in 0..b {
+        for ci in 0..c {
+            let base = (bi * c + ci) * hw;
+            out.data[bi * c + ci] =
+                x.data[base..base + hw].iter().sum::<f32>() / hw as f32;
+        }
+    }
+    out
+}
+
+fn concat_channels(ins: &[&Tensor]) -> Result<Tensor> {
+    let (b, h, w) = (ins[0].shape[0], ins[0].shape[2], ins[0].shape[3]);
+    let ctot: usize = ins.iter().map(|t| t.shape[1]).sum();
+    let mut out = Tensor::zeros(&[b, ctot, h, w]);
+    for bi in 0..b {
+        let mut coff = 0usize;
+        for t in ins {
+            let c = t.shape[1];
+            if t.shape[0] != b || t.shape[2] != h || t.shape[3] != w {
+                bail!("concat shape mismatch: {:?}", t.shape);
+            }
+            let src = &t.data[bi * c * h * w..(bi + 1) * c * h * w];
+            let dst = &mut out.data[(bi * ctot + coff) * h * w
+                ..(bi * ctot + coff + c) * h * w];
+            dst.copy_from_slice(src);
+            coff += c;
+        }
+    }
+    Ok(out)
+}
+
+fn channel_shuffle(x: &Tensor, groups: usize) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let cg = c / groups;
+    let mut out = Tensor::zeros(&x.shape);
+    // out channel j*groups + g  <-  in channel g*cg + j
+    for bi in 0..b {
+        for g in 0..groups {
+            for j in 0..cg {
+                let src = (bi * c + g * cg + j) * h * w;
+                let dst = (bi * c + j * groups + g) * h * w;
+                out.data[dst..dst + h * w]
+                    .copy_from_slice(&x.data[src..src + h * w]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiny_forward_shape() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let mut x = Tensor::zeros(&[2, 3, 8, 8]);
+        Rng::new(1).fill_normal(&mut x.data, 1.0);
+        let out = forward(&g, &p, &x, None, None).unwrap();
+        assert_eq!(out.logits.shape, vec![2, 10]);
+    }
+
+    #[test]
+    fn capture_records_conv_input() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let x = Tensor::filled(&[1, 3, 8, 8], 0.5);
+        let mut cap = Capture::default();
+        cap.nodes.insert(1); // the conv node
+        let out = forward(&g, &p, &x, None, Some(&cap)).unwrap();
+        let got = &out.captured[&1];
+        assert_eq!(got.shape, vec![1, 3, 8, 8]);
+        assert_eq!(got.data[0], 0.5);
+    }
+
+    #[test]
+    fn act_quant_coarsens_input() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let mut x = Tensor::zeros(&[1, 3, 8, 8]);
+        Rng::new(2).fill_normal(&mut x.data, 1.0);
+        let exact = forward(&g, &p, &x, None, None).unwrap().logits;
+        let mut ranges = HashMap::new();
+        ranges.insert(1usize, (-3.0f32, 3.0f32));
+        ranges.insert(5usize, (-3.0f32, 3.0f32));
+        let aq = ActQuant { bits: 2, ranges };
+        let coarse = forward(&g, &p, &x, Some(&aq), None).unwrap().logits;
+        assert!(exact.mse(&coarse) > 0.0);
+        // And 8-bit should be much closer than 2-bit.
+        let aq8 = ActQuant { bits: 8, ranges: aq.ranges.clone() };
+        let fine = forward(&g, &p, &x, Some(&aq8), None).unwrap().logits;
+        assert!(exact.mse(&fine) < exact.mse(&coarse));
+    }
+
+    #[test]
+    fn batchnorm_identity() {
+        let x = Tensor::from_vec(&[1, 2, 1, 2], vec![1., 2., 3., 4.]);
+        let out = batchnorm(&x, &[1., 1.], &[0., 0.], &[0., 0.], &[1., 1.], 0.0);
+        assert_eq!(out.data, x.data);
+        let out2 = batchnorm(&x, &[2., 2.], &[1., 1.], &[1., 1.], &[1., 1.], 0.0);
+        assert_eq!(out2.data, vec![1., 3., 5., 7.]);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            (0..16).map(|v| v as f32).collect(),
+        );
+        let out = pool(&x, 2, 2, 0, true);
+        assert_eq!(out.shape, vec![1, 1, 2, 2]);
+        assert_eq!(out.data, vec![5., 7., 13., 15.]);
+    }
+
+    #[test]
+    fn avgpool_count_include_pad() {
+        let x = Tensor::filled(&[1, 1, 4, 4], 1.0);
+        let out = pool(&x, 3, 1, 1, false);
+        assert_eq!(out.shape, vec![1, 1, 4, 4]);
+        assert!((out.at4(0, 0, 0, 0) - 4.0 / 9.0).abs() < 1e-6);
+        assert!((out.at4(0, 0, 1, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shuffle_interleaves() {
+        let x = Tensor::from_vec(
+            &[1, 8, 1, 1],
+            (0..8).map(|v| v as f32).collect(),
+        );
+        let out = channel_shuffle(&x, 2);
+        assert_eq!(out.data, vec![0., 4., 1., 5., 2., 6., 3., 7.]);
+    }
+
+    #[test]
+    fn grouped_conv_independent_groups() {
+        // groups=2: zeroing group-1 weights must not affect group-0 output.
+        let mut w = Tensor::zeros(&[2, 1, 1, 1]);
+        w.data[0] = 2.0; // out ch 0 reads in ch 0
+        w.data[1] = 3.0; // out ch 1 reads in ch 1
+        let x = Tensor::from_vec(&[1, 2, 1, 1], vec![5.0, 7.0]);
+        let y = conv2d(&x, &w, None, 1, 0, 0, 2, 2, 2, 1, 1).unwrap();
+        assert_eq!(y.data, vec![10.0, 21.0]);
+    }
+
+    #[test]
+    fn concat_stacks_channels() {
+        let a = Tensor::filled(&[1, 1, 2, 2], 1.0);
+        let b = Tensor::filled(&[1, 2, 2, 2], 2.0);
+        let out = concat_channels(&[&a, &b]).unwrap();
+        assert_eq!(out.shape, vec![1, 3, 2, 2]);
+        assert_eq!(out.data[0], 1.0);
+        assert_eq!(out.data[4], 2.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! BatchNorm folding: rewrite conv+BN pairs so the BN becomes identity and
+//! the conv absorbs scale/shift into its weight/bias.  The DFQ baseline
+//! (Nagel et al., 2019) operates on folded weights — equalization and bias
+//! correction are defined on the fused form.
+//!
+//! Folding is expressed as a parameter rewrite only: the graph keeps its BN
+//! nodes, whose parameters become (gamma=1, beta=0, mean=0, var=1), so the
+//! same engine executes both forms.
+
+use std::collections::HashMap;
+
+use super::{Graph, Op, Params};
+use crate::tensor::Tensor;
+
+/// Fold every BN whose sole input is a conv2d.  Returns the new params and
+/// the list of (conv_node, bn_node) pairs folded.  Convs gain a bias tensor
+/// named `<weight>.__fold_bias` registered in the returned params and wired
+/// via the returned bias-name map (node id -> bias tensor name).
+pub struct Folded {
+    pub params: Params,
+    pub pairs: Vec<(usize, usize)>,
+    /// conv node id -> synthesized bias tensor name
+    pub bias_of: HashMap<usize, String>,
+}
+
+pub fn fold_bn(graph: &Graph, params: &Params) -> Folded {
+    let mut out = params.clone();
+    let mut pairs = Vec::new();
+    let mut bias_of = HashMap::new();
+
+    // conv node id -> (weight name, cout, existing bias)
+    let mut conv_info: HashMap<usize, (String, usize, Option<String>)> = HashMap::new();
+    for node in &graph.nodes {
+        if let Op::Conv2d { weight, cout, bias, .. } = &node.op {
+            conv_info.insert(node.id, (weight.clone(), *cout, bias.clone()));
+        }
+    }
+
+    for node in &graph.nodes {
+        let Op::BatchNorm { eps, gamma, beta, mean, var, .. } = &node.op else {
+            continue;
+        };
+        let src = node.inputs[0];
+        let Some((wname, cout, conv_bias)) = conv_info.get(&src) else {
+            continue;
+        };
+        let g = out[gamma].clone();
+        let b = out[beta].clone();
+        let mu = out[mean].clone();
+        let v = out[var].clone();
+
+        // scale_c = gamma / sqrt(var + eps); w_c *= scale_c;
+        // bias_c = beta - mean * scale_c (+ old_bias * scale_c).
+        let w = out.get_mut(wname).unwrap();
+        let per = w.numel() / cout;
+        let mut bias = Tensor::zeros(&[*cout]);
+        for c in 0..*cout {
+            let scale = g.data[c] / (v.data[c] + eps).sqrt();
+            for x in &mut w.data[c * per..(c + 1) * per] {
+                *x *= scale;
+            }
+            let old = conv_bias
+                .as_ref()
+                .map(|bn| params[bn].data[c])
+                .unwrap_or(0.0);
+            bias.data[c] = b.data[c] + (old - mu.data[c]) * scale;
+        }
+
+        let bias_name = match conv_bias {
+            Some(existing) => {
+                out.insert(existing.clone(), bias);
+                existing.clone()
+            }
+            None => {
+                let name = format!("{wname}.__fold_bias");
+                out.insert(name.clone(), bias);
+                bias_of.insert(src, name.clone());
+                name
+            }
+        };
+        let _ = bias_name;
+
+        // Neutralize the BN node's parameters.
+        let c = g.numel();
+        out.insert(gamma.clone(), Tensor::filled(&[c], 1.0));
+        out.insert(beta.clone(), Tensor::zeros(&[c]));
+        out.insert(mean.clone(), Tensor::zeros(&[c]));
+        out.insert(var.clone(), Tensor::filled(&[c], 1.0));
+        pairs.push((src, node.id));
+    }
+
+    Folded { params: out, pairs, bias_of }
+}
+
+/// Produce a graph whose folded convs actually reference their synthesized
+/// bias tensors (so the engine adds them).
+pub fn rewire_bias(graph: &Graph, folded: &Folded) -> Graph {
+    let mut g = graph.clone();
+    for node in &mut g.nodes {
+        if let Op::Conv2d { bias, .. } = &mut node.op {
+            if bias.is_none() {
+                if let Some(name) = folded.bias_of.get(&node.id) {
+                    *bias = Some(name.clone());
+                }
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::forward;
+    use crate::nn::tiny_test_graph;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn folded_model_matches_original() {
+        let (g, mut p) = tiny_test_graph(3, 4, 10);
+        // Give the BN non-trivial statistics.
+        let mut rng = Rng::new(42);
+        for (name, lo, hi) in [("g1", 0.5, 1.5), ("b1", -0.3, 0.3),
+                               ("m1", -0.2, 0.2), ("v1", 0.5, 2.0)] {
+            let t = p.get_mut(name).unwrap();
+            for v in &mut t.data {
+                *v = rng.uniform(lo, hi);
+            }
+        }
+        let mut x = Tensor::zeros(&[2, 3, 8, 8]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let want = forward(&g, &p, &x, None, None).unwrap().logits;
+
+        let folded = fold_bn(&g, &p);
+        assert_eq!(folded.pairs.len(), 1);
+        let g2 = rewire_bias(&g, &folded);
+        let got = forward(&g2, &folded.params, &x, None, None).unwrap().logits;
+        assert!(want.mse(&got) < 1e-8, "mse {}", want.mse(&got));
+    }
+}

@@ -1,0 +1,286 @@
+//! Model IR + native inference engine.
+//!
+//! The IR mirrors `python/compile/ir.py` exactly (it is parsed from the
+//! JSON header embedded in SQNT containers).  The engine executes it on the
+//! CPU via im2col + blocked matmul, with activation-capture hooks (for the
+//! empirical Hessian / calibration baselines) and an optional activation
+//! quantizer (for the WxAy experiments).
+
+pub mod actrange;
+pub mod engine;
+pub mod fold;
+pub mod statprop;
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+pub type Params = HashMap<String, Tensor>;
+
+/// One IR operation.  Parameter tensors are referenced by name.
+#[derive(Clone, Debug)]
+pub enum Op {
+    Input,
+    Conv2d {
+        stride: usize,
+        ph: usize,
+        pw: usize,
+        groups: usize,
+        cin: usize,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        weight: String,
+        bias: Option<String>,
+    },
+    BatchNorm {
+        eps: f32,
+        c: usize,
+        gamma: String,
+        beta: String,
+        mean: String,
+        var: String,
+    },
+    Relu,
+    MaxPool { k: usize, s: usize },
+    AvgPool { k: usize, s: usize, pad: usize },
+    Gap,
+    Linear { cin: usize, cout: usize, weight: String, bias: Option<String> },
+    Add,
+    Concat,
+    ChannelShuffle { groups: usize },
+    Flatten,
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub op: Op,
+    pub inputs: Vec<usize>,
+}
+
+/// A parsed model graph (topologically ordered node list).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    /// (C, H, W)
+    pub input_shape: [usize; 3],
+    pub num_classes: usize,
+    pub nodes: Vec<Node>,
+}
+
+/// A quantizable layer's weight viewed as the paper's (M, N, K) tensor.
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    pub node_id: usize,
+    pub weight: String,
+    /// Output channels (per whole weight, groups included).
+    pub m: usize,
+    /// Kernels per output channel (input channels / groups).
+    pub n: usize,
+    /// Elements per kernel (kh * kw; 1 for Linear).
+    pub k: usize,
+    pub is_conv: bool,
+}
+
+impl Graph {
+    /// Parse from an SQNT header (the same JSON `ir.py` serializes).
+    pub fn from_header(header: &Json) -> Result<Graph> {
+        let name = header.req("name")?.as_str()?.to_string();
+        let ishape = header.req("input_shape")?.usize_vec()?;
+        if ishape.len() != 3 {
+            bail!("input_shape must be CHW");
+        }
+        let num_classes = header.req("num_classes")?.as_usize()?;
+        let mut nodes = Vec::new();
+        for nj in header.req("nodes")?.as_arr()? {
+            nodes.push(parse_node(nj)?);
+        }
+        // Validate topological order + input references.
+        for (i, n) in nodes.iter().enumerate() {
+            if n.id != i {
+                bail!("node ids must be dense/ordered (got {} at {i})", n.id);
+            }
+            for &inp in &n.inputs {
+                if inp >= i {
+                    bail!("node {i} references later node {inp}");
+                }
+            }
+        }
+        Ok(Graph {
+            name,
+            input_shape: [ishape[0], ishape[1], ishape[2]],
+            num_classes,
+            nodes,
+        })
+    }
+
+    /// Every conv/linear layer in (M, N, K) view — the SQuant work list.
+    pub fn quant_layers(&self) -> Vec<QuantLayer> {
+        let mut out = Vec::new();
+        for node in &self.nodes {
+            match &node.op {
+                Op::Conv2d { cin, cout, kh, kw, groups, weight, .. } => {
+                    out.push(QuantLayer {
+                        node_id: node.id,
+                        weight: weight.clone(),
+                        m: *cout,
+                        n: cin / groups,
+                        k: kh * kw,
+                        is_conv: true,
+                    })
+                }
+                Op::Linear { cin, cout, weight, .. } => out.push(QuantLayer {
+                    node_id: node.id,
+                    weight: weight.clone(),
+                    m: *cout,
+                    n: *cin,
+                    k: 1,
+                    is_conv: false,
+                }),
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Total weight parameter count over quantizable layers.
+    pub fn weight_count(&self) -> usize {
+        self.quant_layers().iter().map(|l| l.m * l.n * l.k).sum()
+    }
+}
+
+fn sget(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?.as_str()?.to_string())
+}
+
+fn parse_node(nj: &Json) -> Result<Node> {
+    let id = nj.req("id")?.as_usize()?;
+    let inputs = nj.req("inputs")?.usize_vec()?;
+    let a = nj.req("attrs")?;
+    let p = nj.req("params")?;
+    let op_name = nj.req("op")?.as_str()?;
+    let op = match op_name {
+        "input" => Op::Input,
+        "conv2d" => {
+            let pad = a.req("pad")?.usize_vec()?;
+            Op::Conv2d {
+                stride: a.req("stride")?.as_usize()?,
+                ph: pad[0],
+                pw: pad[1],
+                groups: a.req("groups")?.as_usize()?,
+                cin: a.req("cin")?.as_usize()?,
+                cout: a.req("cout")?.as_usize()?,
+                kh: a.req("kh")?.as_usize()?,
+                kw: a.req("kw")?.as_usize()?,
+                weight: sget(p, "weight")?,
+                bias: p.get("bias").and_then(|b| b.as_str().ok()).map(String::from),
+            }
+        }
+        "batchnorm" => Op::BatchNorm {
+            eps: a.req("eps")?.as_f64()? as f32,
+            c: a.req("c")?.as_usize()?,
+            gamma: sget(p, "gamma")?,
+            beta: sget(p, "beta")?,
+            mean: sget(p, "mean")?,
+            var: sget(p, "var")?,
+        },
+        "relu" => Op::Relu,
+        "maxpool" => Op::MaxPool {
+            k: a.req("k")?.as_usize()?,
+            s: a.req("s")?.as_usize()?,
+        },
+        "avgpool" => Op::AvgPool {
+            k: a.req("k")?.as_usize()?,
+            s: a.req("s")?.as_usize()?,
+            pad: a.get("pad").and_then(|x| x.as_usize().ok()).unwrap_or(0),
+        },
+        "gap" => Op::Gap,
+        "linear" => Op::Linear {
+            cin: a.req("cin")?.as_usize()?,
+            cout: a.req("cout")?.as_usize()?,
+            weight: sget(p, "weight")?,
+            bias: p.get("bias").and_then(|b| b.as_str().ok()).map(String::from),
+        },
+        "add" => Op::Add,
+        "concat" => Op::Concat,
+        "channel_shuffle" => Op::ChannelShuffle {
+            groups: a.req("groups")?.as_usize()?,
+        },
+        "flatten" => Op::Flatten,
+        other => bail!("unknown op '{other}'"),
+    };
+    Ok(Node { id, op, inputs })
+}
+
+/// Build a tiny conv-bn-relu-gap-linear graph programmatically (test helper,
+/// also used by unit tests in other modules).
+pub fn tiny_test_graph(cin: usize, cmid: usize, classes: usize) -> (Graph, Params) {
+    let header = format!(
+        r#"{{"name":"tiny","input_shape":[{cin},8,8],"num_classes":{classes},
+        "nodes":[
+         {{"id":0,"op":"input","inputs":[],"attrs":{{}},"params":{{}}}},
+         {{"id":1,"op":"conv2d","inputs":[0],
+           "attrs":{{"stride":1,"pad":[1,1],"groups":1,"cin":{cin},"cout":{cmid},"kh":3,"kw":3}},
+           "params":{{"weight":"w1"}}}},
+         {{"id":2,"op":"batchnorm","inputs":[1],
+           "attrs":{{"eps":1e-5,"c":{cmid}}},
+           "params":{{"gamma":"g1","beta":"b1","mean":"m1","var":"v1"}}}},
+         {{"id":3,"op":"relu","inputs":[2],"attrs":{{}},"params":{{}}}},
+         {{"id":4,"op":"gap","inputs":[3],"attrs":{{}},"params":{{}}}},
+         {{"id":5,"op":"linear","inputs":[4],
+           "attrs":{{"cin":{cmid},"cout":{classes}}},
+           "params":{{"weight":"wfc","bias":"bfc"}}}}],
+        "tensors":[],"meta":{{}}}}"#
+    );
+    let graph = Graph::from_header(&Json::parse(&header).unwrap()).unwrap();
+    let mut rng = crate::util::rng::Rng::new(99);
+    let mut params: Params = HashMap::new();
+    let mut w1 = Tensor::zeros(&[cmid, cin, 3, 3]);
+    rng.fill_normal(&mut w1.data, 0.3);
+    params.insert("w1".into(), w1);
+    params.insert("g1".into(), Tensor::filled(&[cmid], 1.0));
+    params.insert("b1".into(), Tensor::zeros(&[cmid]));
+    params.insert("m1".into(), Tensor::zeros(&[cmid]));
+    params.insert("v1".into(), Tensor::filled(&[cmid], 1.0));
+    let mut wfc = Tensor::zeros(&[classes, cmid]);
+    rng.fill_normal(&mut wfc.data, 0.3);
+    params.insert("wfc".into(), wfc);
+    params.insert("bfc".into(), Tensor::zeros(&[classes]));
+    (graph, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tiny_graph() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        assert_eq!(g.nodes.len(), 6);
+        assert_eq!(g.input_shape, [3, 8, 8]);
+        let ql = g.quant_layers();
+        assert_eq!(ql.len(), 2);
+        assert_eq!((ql[0].m, ql[0].n, ql[0].k), (4, 3, 9));
+        assert_eq!((ql[1].m, ql[1].n, ql[1].k), (10, 4, 1));
+        assert!(p.contains_key("w1"));
+        assert_eq!(g.weight_count(), 4 * 3 * 9 + 10 * 4);
+    }
+
+    #[test]
+    fn rejects_forward_reference() {
+        let bad = r#"{"name":"x","input_shape":[1,1,1],"num_classes":1,
+          "nodes":[{"id":0,"op":"relu","inputs":[1],"attrs":{},"params":{}},
+                   {"id":1,"op":"input","inputs":[],"attrs":{},"params":{}}]}"#;
+        assert!(Graph::from_header(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let bad = r#"{"name":"x","input_shape":[1,1,1],"num_classes":1,
+          "nodes":[{"id":0,"op":"warp","inputs":[],"attrs":{},"params":{}}]}"#;
+        assert!(Graph::from_header(&Json::parse(bad).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Analytic (data-free) propagation of per-channel activation statistics.
+//!
+//! Needed by the DFQ baseline's bias correction (Nagel'19 §4: E[y_q] - E[y]
+//! = ΔW · E[x], with E[x] derived from BN statistics — no data) and by the
+//! ZeroQ-lite synthetic-data generator's target statistics.
+//!
+//! Every node gets a per-channel (mean, std) estimate under Gaussian
+//! assumptions:
+//!   * BN output c is N(beta_c, gamma_c) by construction;
+//!   * ReLU of N(m, s) has the standard rectified-Gaussian moments;
+//!   * convs/linears propagate the mean exactly (mean_out = W @ mean_in +
+//!     bias via the kernel sums) and the std in quadrature.
+
+use std::collections::HashMap;
+
+use super::{Graph, Op, Params};
+
+/// Per-channel first/second-moment estimates of a node's output.
+#[derive(Clone, Debug)]
+pub struct ChanStats {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+fn phi(x: f32) -> f32 {
+    // standard normal pdf
+    (-(x * x) / 2.0).exp() / (2.0 * std::f32::consts::PI).sqrt()
+}
+
+fn cdf(x: f32) -> f32 {
+    // Abramowitz-Stegun erf approximation (|err| < 1.5e-7).
+    let t = 1.0 / (1.0 + 0.2316419 * x.abs());
+    let poly = t
+        * (0.319381530
+            + t * (-0.356563782
+                + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
+    let tail = phi(x.abs()) * poly;
+    if x >= 0.0 {
+        1.0 - tail
+    } else {
+        tail
+    }
+}
+
+/// Moments of ReLU(N(m, s)).
+pub fn relu_gaussian(m: f32, s: f32) -> (f32, f32) {
+    if s < 1e-8 {
+        return (m.max(0.0), 0.0);
+    }
+    let a = m / s;
+    let mean = m * cdf(a) + s * phi(a);
+    let ex2 = (m * m + s * s) * cdf(a) + m * s * phi(a);
+    let var = (ex2 - mean * mean).max(0.0);
+    (mean, var.sqrt())
+}
+
+/// Propagate analytic stats through the graph.  Returns node id -> stats.
+pub fn propagate(graph: &Graph, params: &Params) -> HashMap<usize, ChanStats> {
+    let mut out: HashMap<usize, ChanStats> = HashMap::new();
+    for node in &graph.nodes {
+        let stats = match &node.op {
+            Op::Input => {
+                let c = graph.input_shape[0];
+                ChanStats { mean: vec![0.0; c], std: vec![1.0; c] }
+            }
+            Op::Conv2d { weight, bias, cout, groups, cin, kh, kw, .. } => {
+                let inp = &out[&node.inputs[0]];
+                let w = &params[weight];
+                let cg = cin / groups;
+                let og = cout / groups;
+                let per = cg * kh * kw;
+                let mut mean = vec![0.0f32; *cout];
+                let mut std = vec![0.0f32; *cout];
+                for oc in 0..*cout {
+                    let g = oc / og;
+                    let row = &w.data[oc * per..(oc + 1) * per];
+                    let mut m = 0.0f32;
+                    let mut v = 0.0f32;
+                    for icg in 0..cg {
+                        let ic = g * cg + icg;
+                        let ksum: f32 =
+                            row[icg * kh * kw..(icg + 1) * kh * kw].iter().sum();
+                        let ksq: f32 = row[icg * kh * kw..(icg + 1) * kh * kw]
+                            .iter()
+                            .map(|x| x * x)
+                            .sum();
+                        m += ksum * inp.mean[ic];
+                        v += ksq * inp.std[ic] * inp.std[ic];
+                    }
+                    if let Some(bn) = bias {
+                        m += params[bn].data[oc];
+                    }
+                    mean[oc] = m;
+                    std[oc] = v.sqrt();
+                }
+                ChanStats { mean, std }
+            }
+            Op::BatchNorm { gamma, beta, .. } => {
+                // BN output is N(beta, |gamma|) on the training distribution.
+                let g = &params[gamma].data;
+                let b = &params[beta].data;
+                ChanStats {
+                    mean: b.clone(),
+                    std: g.iter().map(|v| v.abs()).collect(),
+                }
+            }
+            Op::Relu => {
+                let inp = &out[&node.inputs[0]];
+                let mut mean = Vec::with_capacity(inp.mean.len());
+                let mut std = Vec::with_capacity(inp.mean.len());
+                for (m, s) in inp.mean.iter().zip(&inp.std) {
+                    let (rm, rs) = relu_gaussian(*m, *s);
+                    mean.push(rm);
+                    std.push(rs);
+                }
+                ChanStats { mean, std }
+            }
+            Op::MaxPool { .. } => out[&node.inputs[0]].clone(), // approx
+            Op::AvgPool { .. } | Op::Gap | Op::Flatten => {
+                out[&node.inputs[0]].clone()
+            }
+            Op::Add => {
+                let a = &out[&node.inputs[0]];
+                let b = &out[&node.inputs[1]];
+                ChanStats {
+                    mean: a.mean.iter().zip(&b.mean).map(|(x, y)| x + y).collect(),
+                    std: a
+                        .std
+                        .iter()
+                        .zip(&b.std)
+                        .map(|(x, y)| (x * x + y * y).sqrt())
+                        .collect(),
+                }
+            }
+            Op::Concat => {
+                let mut mean = Vec::new();
+                let mut std = Vec::new();
+                for &i in &node.inputs {
+                    mean.extend_from_slice(&out[&i].mean);
+                    std.extend_from_slice(&out[&i].std);
+                }
+                ChanStats { mean, std }
+            }
+            Op::ChannelShuffle { groups } => {
+                let inp = &out[&node.inputs[0]];
+                let c = inp.mean.len();
+                let cg = c / groups;
+                let mut mean = vec![0.0; c];
+                let mut std = vec![0.0; c];
+                for g in 0..*groups {
+                    for j in 0..cg {
+                        mean[j * groups + g] = inp.mean[g * cg + j];
+                        std[j * groups + g] = inp.std[g * cg + j];
+                    }
+                }
+                ChanStats { mean, std }
+            }
+            Op::Linear { weight, bias, cout, .. } => {
+                let inp = &out[&node.inputs[0]];
+                let w = &params[weight];
+                let cin = w.shape[1];
+                let mut mean = vec![0.0f32; *cout];
+                let mut std = vec![0.0f32; *cout];
+                for oc in 0..*cout {
+                    let row = &w.data[oc * cin..(oc + 1) * cin];
+                    let mut m = 0.0f32;
+                    let mut v = 0.0f32;
+                    for ic in 0..cin {
+                        m += row[ic] * inp.mean[ic];
+                        v += row[ic] * row[ic] * inp.std[ic] * inp.std[ic];
+                    }
+                    if let Some(bn) = bias {
+                        m += params[bn].data[oc];
+                    }
+                    mean[oc] = m;
+                    std[oc] = v.sqrt();
+                }
+                ChanStats { mean, std }
+            }
+        };
+        out.insert(node.id, stats);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+
+    #[test]
+    fn relu_gaussian_known_values() {
+        // ReLU(N(0,1)): mean = 1/sqrt(2*pi), var = 1/2 - 1/(2*pi).
+        let (m, s) = relu_gaussian(0.0, 1.0);
+        assert!((m - 0.3989).abs() < 1e-3, "{m}");
+        let want_var = 0.5 - 1.0 / (2.0 * std::f32::consts::PI);
+        assert!((s * s - want_var).abs() < 1e-3, "{}", s * s);
+        // Large positive mean: ReLU is identity.
+        let (m2, s2) = relu_gaussian(10.0, 1.0);
+        assert!((m2 - 10.0).abs() < 1e-3);
+        assert!((s2 - 1.0).abs() < 1e-2);
+        // Large negative mean: everything clipped.
+        let (m3, s3) = relu_gaussian(-10.0, 1.0);
+        assert!(m3.abs() < 1e-3 && s3 < 1e-2);
+    }
+
+    #[test]
+    fn cdf_sane() {
+        assert!((cdf(0.0) - 0.5).abs() < 1e-6);
+        assert!(cdf(3.0) > 0.99);
+        assert!(cdf(-3.0) < 0.01);
+    }
+
+    #[test]
+    fn propagate_tiny_graph() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let stats = propagate(&g, &p);
+        // BN node (id 2): unit gamma, zero beta -> mean 0, std 1.
+        let bn = &stats[&2];
+        assert!(bn.mean.iter().all(|&m| m == 0.0));
+        assert!(bn.std.iter().all(|&s| s == 1.0));
+        // ReLU output mean = 0.3989 per channel.
+        let relu = &stats[&3];
+        assert!(relu.mean.iter().all(|&m| (m - 0.3989).abs() < 1e-3));
+        // Final linear produces num_classes channels.
+        assert_eq!(stats[&5].mean.len(), 10);
+    }
+}

@@ -1,0 +1,218 @@
+//! Fixed-point quantization substrate shared by SQuant and every baseline:
+//! symmetric per-channel weight grids, scale selection (max-abs or
+//! MSE-optimal search), fake-quant, and the (M, N, K) weight view.
+
+use crate::tensor::Tensor;
+use crate::util::rn;
+
+/// Symmetric signed grid: (-qmax, qmax) with qmax = 2^{b-1} - 1.
+pub fn qrange(bits: usize) -> (f32, f32) {
+    let qmax = ((1usize << (bits - 1)) - 1) as f32;
+    (-qmax, qmax)
+}
+
+/// How per-channel weight scales are chosen.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScaleMethod {
+    /// s = max|w| / qmax (the paper's setting).
+    MaxAbs,
+    /// Grid-search the clip ratio minimizing per-channel MSE (ZeroQ-style).
+    MseGrid { steps: usize },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct QuantConfig {
+    pub bits: usize,
+    pub scale: ScaleMethod,
+}
+
+impl QuantConfig {
+    pub fn new(bits: usize) -> Self {
+        QuantConfig { bits, scale: ScaleMethod::MaxAbs }
+    }
+}
+
+/// View a conv ([O, I/g, KH, KW]) or linear ([O, I]) weight as the paper's
+/// (M, N, K): M = out channels, N = kernels/channel, K = elems/kernel.
+pub fn mnk_of(shape: &[usize]) -> (usize, usize, usize) {
+    match shape.len() {
+        4 => (shape[0], shape[1], shape[2] * shape[3]),
+        2 => (shape[0], shape[1], 1),
+        _ => panic!("not a weight shape: {shape:?}"),
+    }
+}
+
+/// Per-output-channel scales for a weight tensor.
+pub fn channel_scales(w: &Tensor, cfg: QuantConfig) -> Vec<f32> {
+    let (m, n, k) = mnk_of(&w.shape);
+    let per = n * k;
+    let (_, qmax) = qrange(cfg.bits);
+    (0..m)
+        .map(|c| {
+            let row = &w.data[c * per..(c + 1) * per];
+            let absmax = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+            if absmax <= 0.0 {
+                return 1.0;
+            }
+            match cfg.scale {
+                ScaleMethod::MaxAbs => absmax / qmax,
+                ScaleMethod::MseGrid { steps } => {
+                    let mut best = (f32::INFINITY, absmax / qmax);
+                    for i in 0..steps {
+                        let ratio = 0.4 + 0.6 * (i as f32 + 1.0) / steps as f32;
+                        let s = absmax * ratio / qmax;
+                        let mse: f32 = row
+                            .iter()
+                            .map(|v| {
+                                let q = rn(v / s).clamp(-qmax, qmax);
+                                let d = q * s - v;
+                                d * d
+                            })
+                            .sum();
+                        if mse < best.0 {
+                            best = (mse, s);
+                        }
+                    }
+                    best.1
+                }
+            }
+        })
+        .collect()
+}
+
+/// Round-to-nearest quantization: returns grid values (f32 integers) with
+/// the original weight shape.
+pub fn quantize_rtn(w: &Tensor, scales: &[f32], bits: usize) -> Tensor {
+    let (m, n, k) = mnk_of(&w.shape);
+    let per = n * k;
+    let (qmin, qmax) = qrange(bits);
+    let mut q = Tensor::zeros(&w.shape);
+    for c in 0..m {
+        let s = scales[c];
+        for i in 0..per {
+            q.data[c * per + i] = rn(w.data[c * per + i] / s).clamp(qmin, qmax);
+        }
+    }
+    q
+}
+
+/// Dequantize grid values back to weights.
+pub fn dequant(q: &Tensor, scales: &[f32]) -> Tensor {
+    let (m, n, k) = mnk_of(&q.shape);
+    let per = n * k;
+    let mut w = Tensor::zeros(&q.shape);
+    for c in 0..m {
+        for i in 0..per {
+            w.data[c * per + i] = q.data[c * per + i] * scales[c];
+        }
+    }
+    w
+}
+
+/// Fake-quant convenience: RTN quantize + dequantize.
+pub fn fake_quant(w: &Tensor, cfg: QuantConfig) -> Tensor {
+    let scales = channel_scales(w, cfg);
+    let q = quantize_rtn(w, &scales, cfg.bits);
+    dequant(&q, &scales)
+}
+
+/// Perturbation p = q - w/s in grid units, shape of w.
+pub fn perturbation(w: &Tensor, q: &Tensor, scales: &[f32]) -> Tensor {
+    let (m, n, k) = mnk_of(&w.shape);
+    let per = n * k;
+    let mut p = Tensor::zeros(&w.shape);
+    for c in 0..m {
+        let s = scales[c];
+        for i in 0..per {
+            p.data[c * per + i] = q.data[c * per + i] - w.data[c * per + i] / s;
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qrange_matches_paper() {
+        assert_eq!(qrange(4), (-7.0, 7.0));
+        assert_eq!(qrange(8), (-127.0, 127.0));
+        assert_eq!(qrange(3), (-3.0, 3.0));
+    }
+
+    #[test]
+    fn mnk_views() {
+        assert_eq!(mnk_of(&[8, 4, 3, 3]), (8, 4, 9));
+        assert_eq!(mnk_of(&[10, 64]), (10, 64, 1));
+    }
+
+    #[test]
+    fn maxabs_scale_hits_qmax() {
+        let mut w = Tensor::zeros(&[2, 1, 3, 3]);
+        w.data[0] = 0.7; // channel 0 absmax
+        w.data[9] = -1.4; // channel 1 absmax
+        let s = channel_scales(&w, QuantConfig::new(4));
+        assert!((s[0] - 0.1).abs() < 1e-6);
+        assert!((s[1] - 0.2).abs() < 1e-6);
+        let q = quantize_rtn(&w, &s, 4);
+        assert_eq!(q.data[0], 7.0);
+        assert_eq!(q.data[9], -7.0);
+    }
+
+    #[test]
+    fn zero_channel_scale_is_one() {
+        let w = Tensor::zeros(&[1, 1, 3, 3]);
+        let s = channel_scales(&w, QuantConfig::new(4));
+        assert_eq!(s[0], 1.0);
+    }
+
+    #[test]
+    fn rtn_round_trip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let mut w = Tensor::zeros(&[4, 3, 3, 3]);
+        rng.fill_normal(&mut w.data, 0.1);
+        let cfg = QuantConfig::new(8);
+        let wq = fake_quant(&w, cfg);
+        let s = channel_scales(&w, cfg);
+        for c in 0..4 {
+            for i in 0..27 {
+                let d = (wq.data[c * 27 + i] - w.data[c * 27 + i]).abs();
+                assert!(d <= 0.5 * s[c] + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn mse_grid_no_worse_than_maxabs_on_outliers() {
+        // One huge outlier per channel: clipping should win on MSE.
+        let mut rng = Rng::new(2);
+        let mut w = Tensor::zeros(&[1, 1, 4, 4]);
+        rng.fill_normal(&mut w.data, 0.05);
+        w.data[0] = 1.0; // outlier
+        let bits = 4;
+        let mse_of = |cfg: QuantConfig| {
+            let wq = fake_quant(&w, cfg);
+            wq.mse(&w)
+        };
+        let a = mse_of(QuantConfig { bits, scale: ScaleMethod::MaxAbs });
+        let b = mse_of(QuantConfig {
+            bits,
+            scale: ScaleMethod::MseGrid { steps: 40 },
+        });
+        assert!(b <= a + 1e-9, "mse grid {b} vs maxabs {a}");
+    }
+
+    #[test]
+    fn perturbation_bounded_by_half() {
+        let mut rng = Rng::new(3);
+        let mut w = Tensor::zeros(&[3, 2, 3, 3]);
+        rng.fill_normal(&mut w.data, 0.1);
+        let cfg = QuantConfig::new(6);
+        let s = channel_scales(&w, cfg);
+        let q = quantize_rtn(&w, &s, 6);
+        let p = perturbation(&w, &q, &s);
+        assert!(p.abs_max() <= 0.5 + 1e-5);
+    }
+}

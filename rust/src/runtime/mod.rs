@@ -1,0 +1,115 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts that `python/compile/aot.py`
+//! produced (JAX model forwards, Pallas-lowered SQuant graphs) and executes
+//! them from the Rust hot path.  No Python anywhere near this module.
+//!
+//! One [`Runtime`] holds the PJRT CPU client plus a per-path executable
+//! cache (compilation is milliseconds-to-seconds; execution is micro- to
+//! milliseconds, so compile-once matters).
+
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::tensor::Tensor;
+
+/// NOTE: the underlying PJRT handles are not Send/Sync (the `xla` crate
+/// wraps raw pointers in `Rc`), so a [`Runtime`] is confined to one thread;
+/// the coordinator keeps it on the serving thread and parallelizes across
+/// layers *before* the offload boundary.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a PJRT CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Runtime { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached per path).
+    pub fn load(&self, path: impl AsRef<Path>)
+                -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let path = path.as_ref().to_path_buf();
+        {
+            let cache = self.cache.borrow();
+            if let Some(exe) = cache.get(&path) {
+                return Ok(exe.clone());
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with f32 tensor inputs; outputs are the flattened tuple
+    /// elements as tensors (shape recovered from the result literals).
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape literal: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+        // jax.aot lowers with return_tuple=True: always a tuple.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                Ok(Tensor::from_vec(&dims, data))
+            })
+            .collect()
+    }
+
+    /// Convenience: load + execute in one call.
+    pub fn run(&self, path: impl AsRef<Path>, inputs: &[&Tensor])
+               -> Result<Vec<Tensor>> {
+        let exe = self.load(path)?;
+        self.execute(&exe, inputs)
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// NOTE: integration tests for this module live in rust/tests/runtime.rs —
+// they need `make artifacts` output, which unit tests must not depend on.

@@ -1,0 +1,244 @@
+//! The SQuant flip kernel (paper Algorithm 2) with the Algorithm-4
+//! candidate bookkeeping fused, exactly as `kernels/ref.py::flip_row`.
+//!
+//! Hot path of the whole quantizer: called once per kernel (M*N times per
+//! layer).  Uses a caller-provided [`Scratch`] so the per-row work is
+//! allocation-free.
+
+use crate::util::{rn, sign};
+
+/// The one follow-up flip this row exposes to the next granularity level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Candidate {
+    /// Element index within the row, or -1 if none.
+    pub idx: isize,
+    /// Its *current* (post-stage) perturbation value; 0 when none.
+    pub val: f32,
+}
+
+impl Candidate {
+    pub const NONE: Candidate = Candidate { idx: -1, val: 0.0 };
+}
+
+/// Reusable per-call scratch (eligible-index ordering).
+///
+/// `order` holds sort keys packed as `(|p|-bits << 32) | (!idx)` so the
+/// natural descending u64 order is exactly "descending |p|, ties to the
+/// lower index" — |p| is a non-negative finite f32, whose IEEE bit pattern
+/// orders identically to its value, and complementing the index reverses
+/// the tie direction.  One u64 compare per step, no float branches.
+pub struct Scratch {
+    pub order: Vec<usize>,
+    keys: Vec<u64>,
+    flipped_len: usize,
+}
+
+#[inline(always)]
+fn pack(absp: f32, idx: usize) -> u64 {
+    ((absp.to_bits() as u64) << 32) | (!(idx as u32) as u64)
+}
+
+#[inline(always)]
+fn unpack_idx(key: u64) -> usize {
+    (!(key as u32)) as usize
+}
+
+impl Scratch {
+    pub fn with_capacity(n: usize) -> Self {
+        Scratch {
+            order: Vec::with_capacity(n),
+            keys: Vec::with_capacity(n),
+            flipped_len: 0,
+        }
+    }
+
+    /// Indices flipped by the most recent [`flip_row`] call.
+    pub fn flipped(&self) -> &[usize] {
+        &self.order[..self.flipped_len]
+    }
+}
+
+/// SQuantFlip on one row: mutates `q` (grid values) and `p` (perturbations)
+/// in place; `e` is the row's accumulated perturbation (computed by the
+/// caller over the *full* row).  Returns (candidate, flips-performed).
+///
+/// Hot path of the quantizer (called M*N times per layer): a single
+/// eligibility scan collects packed keys, then a partial selection orders
+/// only the k+1 largest (k is small — rn(|e|) with |e| <= K/2, typically
+/// 0-2) instead of sorting all eligible elements.  See EXPERIMENTS.md §Perf.
+pub fn flip_row(
+    q: &mut [f32],
+    p: &mut [f32],
+    e: f32,
+    qmin: f32,
+    qmax: f32,
+    scratch: &mut Scratch,
+) -> (Candidate, usize) {
+    let sgn = sign(e);
+    scratch.order.clear();
+    scratch.keys.clear();
+    scratch.flipped_len = 0;
+    if sgn == 0.0 {
+        return (Candidate::NONE, 0);
+    }
+
+    // Eligible: same perturbation sign as e, and the flip stays on the grid.
+    for (j, (&qv, &pv)) in q.iter().zip(p.iter()).enumerate() {
+        if pv * sgn > 0.0 && qv - sgn >= qmin && qv - sgn <= qmax {
+            scratch.keys.push(pack(pv.abs(), j));
+        }
+    }
+    let n_elig = scratch.keys.len();
+    let k = (rn(e.abs()) as usize).min(n_elig);
+
+    // Partial selection: order the first min(k+1, n_elig) positions.
+    let want = (k + 1).min(n_elig);
+    let keys = &mut scratch.keys;
+    for t in 0..want {
+        let mut best = t;
+        for j in (t + 1)..n_elig {
+            if keys[j] > keys[best] {
+                best = j;
+            }
+        }
+        keys.swap(t, best);
+    }
+    for &key in keys[..k].iter() {
+        let j = unpack_idx(key);
+        scratch.order.push(j);
+        q[j] -= sgn;
+        p[j] -= sgn;
+    }
+    scratch.flipped_len = k;
+
+    let over = k as f32 > e.abs();
+    let cand = if over && k >= 1 {
+        let j = unpack_idx(keys[k - 1]); // last flipped: largest post-flip |p|
+        Candidate { idx: j as isize, val: p[j] }
+    } else if !over && k < n_elig {
+        let j = unpack_idx(keys[k]); // first unflipped eligible element
+        Candidate { idx: j as isize, val: p[j] }
+    } else {
+        Candidate::NONE
+    };
+    (cand, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(q: &mut [f32], p: &mut [f32]) -> (Candidate, usize) {
+        let e: f32 = p.iter().sum();
+        let mut s = Scratch::with_capacity(p.len());
+        flip_row(q, p, e, -7.0, 7.0, &mut s)
+    }
+
+    #[test]
+    fn no_flip_small_e() {
+        let mut q = [1.0, -2.0, 3.0];
+        let mut p = [0.1, -0.2, 0.3];
+        let (cand, k) = run(&mut q, &mut p);
+        assert_eq!(k, 0);
+        assert_eq!(q, [1.0, -2.0, 3.0]);
+        assert_eq!(cand, Candidate { idx: 2, val: 0.3 });
+    }
+
+    #[test]
+    fn over_squant_candidate() {
+        // e = 1.6 -> k = 2 (over); candidate = 2nd flipped with val p-1.
+        let mut q = [1.0, 1.0, 0.0, 0.0];
+        let mut p = [0.45, 0.40, 0.40, 0.35];
+        let (cand, k) = run(&mut q, &mut p);
+        assert_eq!(k, 2);
+        assert_eq!(q, [0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(cand.idx, 1);
+        assert!((cand.val - (0.40 - 1.0)).abs() < 1e-6);
+        assert!(p.iter().sum::<f32>().abs() <= 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn under_squant_candidate() {
+        // e = 1.4 -> k = 1 (under); candidate = next eligible, unflipped.
+        let mut q = [1.0, 1.0, 0.0, 0.0];
+        let mut p = [0.45, 0.40, 0.30, 0.25];
+        let (cand, k) = run(&mut q, &mut p);
+        assert_eq!(k, 1);
+        assert_eq!(cand, Candidate { idx: 1, val: 0.40 });
+    }
+
+    #[test]
+    fn zero_e_no_candidate() {
+        let mut q = [0.0; 4];
+        let mut p = [0.2, -0.2, 0.1, -0.1];
+        let (cand, k) = run(&mut q, &mut p);
+        assert_eq!((cand, k), (Candidate::NONE, 0));
+    }
+
+    #[test]
+    fn tie_breaks_lower_index() {
+        let mut q = [0.0, 0.0, 0.0];
+        let mut p = [0.4, 0.4, 0.4];
+        let (_, k) = run(&mut q, &mut p);
+        assert_eq!(k, 1);
+        assert_eq!(q, [-1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn grid_saturation_blocks_flips() {
+        let mut q = [7.0, 7.0, 7.0];
+        let mut p = [0.4, 0.4, 0.4];
+        let e: f32 = p.iter().sum();
+        let mut s = Scratch::with_capacity(3);
+        // Degenerate grid [7,7]: q - 1 = 6 < 7 -> ineligible.
+        let (cand, k) = flip_row(&mut q, &mut p, e, 7.0, 7.0, &mut s);
+        assert_eq!(k, 0);
+        assert_eq!(cand, Candidate::NONE);
+        assert_eq!(q, [7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn negative_e_flips_up() {
+        let mut q = [-1.0, -1.0, 0.0];
+        let mut p = [-0.45, -0.4, -0.35];
+        let (_, k) = run(&mut q, &mut p);
+        // e = -1.2, k = 1: flip index 0 upward.
+        assert_eq!(k, 1);
+        assert_eq!(q, [0.0, -1.0, 0.0]);
+        assert!((p[0] - 0.55).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scratch_flipped_indices() {
+        let mut q = [1.0, 1.0, 0.0, 0.0];
+        let mut p = [0.45, 0.40, 0.40, 0.35];
+        let e: f32 = p.iter().sum();
+        let mut s = Scratch::with_capacity(4);
+        flip_row(&mut q, &mut p, e, -7.0, 7.0, &mut s);
+        assert_eq!(s.flipped(), &[0, 1]);
+    }
+
+    #[test]
+    fn ase_bound_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        for _ in 0..500 {
+            let n = 2 + rng.below(24);
+            let mut q = vec![0.0f32; n];
+            let mut p = vec![0.0f32; n];
+            for i in 0..n {
+                let t = rng.normal() * 2.0;
+                q[i] = rn(t).clamp(-7.0, 7.0);
+                p[i] = q[i] - t;
+            }
+            let e: f32 = p.iter().sum();
+            let mut s = Scratch::with_capacity(n);
+            flip_row(&mut q, &mut p, e, -7.0, 7.0, &mut s);
+            let e2: f32 = p.iter().sum();
+            assert!(e2.abs() <= 0.5 + 1e-5, "{e} -> {e2}");
+            assert!(p.iter().all(|v| v.abs() < 1.0 + 1e-5));
+        }
+    }
+
+    use crate::util::rn;
+}

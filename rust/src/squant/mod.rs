@@ -1,0 +1,402 @@
+//! SQuant: progressive CASE-minimizing data-free quantization
+//! (paper Algorithms 1, 2, 4).
+//!
+//! This is the native "on-the-fly" path: no data, no back-propagation, no
+//! architecture knowledge — just the weight tensor, per-channel scales and a
+//! bit width.  The semantics are defined by `python/compile/kernels/ref.py`
+//! (same round-half-up, sign(0)=0, tie-to-lower-index, grid-saturation
+//! masking, K==1 skip); the integration suite in `rust/tests/` checks this
+//! implementation bit-exact against both the oracle-derived fixtures and the
+//! AOT JAX/Pallas HLO executed through PJRT.
+//!
+//! Complexity: O(M·N·K log K) from the per-kernel sorts — linear in the
+//! weight count for fixed K, matching the paper's §B.4 claim (reproduced by
+//! `benches/complexity.rs`).
+
+pub mod decompose;
+pub mod flip;
+
+use crate::quant::{channel_scales, mnk_of, perturbation, qrange, QuantConfig};
+#[cfg(test)]
+use crate::quant::quantize_rtn;
+use crate::tensor::Tensor;
+use crate::util::{rn, sign};
+
+pub use flip::{flip_row, Candidate};
+
+/// Which of the progressive stages to run (Table 4 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SquantOpts {
+    pub bits: usize,
+    /// SQuant-K: per-kernel CASE flipping (Eq. 10).
+    pub enable_k: bool,
+    /// SQuant-C: per-channel CASE flipping (Eq. 11).
+    pub enable_c: bool,
+}
+
+impl SquantOpts {
+    pub fn full(bits: usize) -> Self {
+        SquantOpts { bits, enable_k: true, enable_c: true }
+    }
+    pub fn e_only(bits: usize) -> Self {
+        SquantOpts { bits, enable_k: false, enable_c: false }
+    }
+    pub fn ek(bits: usize) -> Self {
+        SquantOpts { bits, enable_k: true, enable_c: false }
+    }
+    pub fn ec(bits: usize) -> Self {
+        SquantOpts { bits, enable_k: false, enable_c: true }
+    }
+    pub fn label(&self) -> &'static str {
+        match (self.enable_k, self.enable_c) {
+            (false, false) => "SQuant-E",
+            (true, false) => "SQuant-E&K",
+            (false, true) => "SQuant-E&C",
+            (true, true) => "SQuant-E&K&C",
+        }
+    }
+}
+
+/// One recorded flip (for the Table 6 approximation-precision analysis).
+#[derive(Clone, Copy, Debug)]
+pub struct FlipEvent {
+    pub m: usize,
+    pub n: usize,
+    pub i: usize,
+    /// +1 or -1 (grid mutation applied).
+    pub delta: f32,
+    /// true = SQuant-C stage, false = SQuant-K stage.
+    pub c_stage: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct SquantResult {
+    /// Bit width used (needed to replay the RTN starting point).
+    pub bits: usize,
+    /// Integer grid values, original weight shape.
+    pub q: Tensor,
+    /// Dequantized weights q * s.
+    pub wq: Tensor,
+    pub scales: Vec<f32>,
+    pub flips_k: usize,
+    pub flips_c: usize,
+    /// Flip trace (only populated by [`squant_traced`]).
+    pub trace: Vec<FlipEvent>,
+}
+
+/// Quantize one weight tensor with SQuant (paper Algorithm 1).
+pub fn squant(w: &Tensor, scales: &[f32], opts: SquantOpts) -> SquantResult {
+    run(w, scales, opts, false)
+}
+
+/// As [`squant`] but records every flip for the AP analysis.
+pub fn squant_traced(w: &Tensor, scales: &[f32], opts: SquantOpts) -> SquantResult {
+    run(w, scales, opts, true)
+}
+
+/// Convenience: max-abs scales + full SQuant.
+pub fn squant_auto(w: &Tensor, bits: usize) -> SquantResult {
+    let scales = channel_scales(w, QuantConfig::new(bits));
+    squant(w, &scales, SquantOpts::full(bits))
+}
+
+fn run(w: &Tensor, scales: &[f32], opts: SquantOpts, traced: bool) -> SquantResult {
+    let (m, n, k) = mnk_of(&w.shape);
+    let (qmin, qmax) = qrange(opts.bits);
+    // Fused RTN + perturbation (single pass over the weights; the two-pass
+    // `quantize_rtn` + `perturbation` version costs extra memory traffic on
+    // large layers — see EXPERIMENTS.md §Perf).
+    let per = n * k;
+    let mut q = Tensor::zeros(&w.shape);
+    let mut p = Tensor::zeros(&w.shape);
+    for mi in 0..m {
+        let s = scales[mi];
+        let base = mi * per;
+        for i in 0..per {
+            let t = w.data[base + i] / s;
+            let qv = rn(t).clamp(qmin, qmax);
+            q.data[base + i] = qv;
+            p.data[base + i] = qv - t;
+        }
+    }
+    let mut flips_k = 0usize;
+    let mut flips_c = 0usize;
+    let mut trace = Vec::new();
+
+    let mut scratch = flip::Scratch::with_capacity(n.max(k));
+    let mut cands: Vec<Candidate> = Vec::with_capacity(n);
+
+    for mi in 0..m {
+        let base = mi * n * k;
+        if opts.enable_k && k > 1 {
+            // ---- SQuant-K per kernel + Algorithm-4 candidates ------------
+            cands.clear();
+            for ni in 0..n {
+                let off = base + ni * k;
+                let qk = &mut q.data[off..off + k];
+                let pk = &mut p.data[off..off + k];
+                let e: f32 = pk.iter().sum();
+                let (cand, nflips) =
+                    flip_row(qk, pk, e, qmin, qmax, &mut scratch);
+                flips_k += nflips;
+                if traced {
+                    // Reconstruct which indices flipped from scratch order.
+                    for &j in scratch.flipped() {
+                        trace.push(FlipEvent {
+                            m: mi, n: ni, i: j,
+                            delta: -sign(e),
+                            c_stage: false,
+                        });
+                    }
+                }
+                cands.push(cand);
+            }
+            if opts.enable_c {
+                // ---- SQuant-C over per-kernel candidates ------------------
+                let a: f32 = p.data[base..base + n * k].iter().sum();
+                let sgn_a = sign(a);
+                if sgn_a != 0.0 {
+                    // Eligible: candidate exists and val sign matches a.
+                    scratch.order.clear();
+                    for (ni, c) in cands.iter().enumerate() {
+                        if c.idx >= 0 && c.val * sgn_a > 0.0 {
+                            scratch.order.push(ni);
+                        }
+                    }
+                    let kc = (rn(a.abs()) as usize).min(scratch.order.len());
+                    // Top-kc by |candidate val|, ties to lower kernel index.
+                    scratch.order.sort_by(|&x, &y| {
+                        let (ax, ay) = (cands[x].val.abs(), cands[y].val.abs());
+                        ay.partial_cmp(&ax).unwrap().then(x.cmp(&y))
+                    });
+                    for &ni in scratch.order[..kc].iter() {
+                        let j = cands[ni].idx as usize;
+                        let off = base + ni * k + j;
+                        q.data[off] -= sgn_a;
+                        p.data[off] -= sgn_a;
+                        flips_c += 1;
+                        if traced {
+                            trace.push(FlipEvent {
+                                m: mi, n: ni, i: j,
+                                delta: -sgn_a,
+                                c_stage: true,
+                            });
+                        }
+                    }
+                }
+            }
+        } else if opts.enable_c {
+            // ---- K == 1 (or E&C ablation): one flip problem over the whole
+            // channel's N*K elements (paper §3.4 / Eq. 11). ----------------
+            let qk = &mut q.data[base..base + n * k];
+            let pk = &mut p.data[base..base + n * k];
+            let e: f32 = pk.iter().sum();
+            let (_, nflips) = flip_row(qk, pk, e, qmin, qmax, &mut scratch);
+            flips_c += nflips;
+            if traced {
+                for &j in scratch.flipped() {
+                    trace.push(FlipEvent {
+                        m: mi, n: j / k, i: j % k,
+                        delta: -sign(e),
+                        c_stage: true,
+                    });
+                }
+            }
+        }
+    }
+
+    let mut wq = Tensor::zeros(&w.shape);
+    for mi in 0..m {
+        for i in 0..per {
+            wq.data[mi * per + i] = q.data[mi * per + i] * scales[mi];
+        }
+    }
+    SquantResult { bits: opts.bits, q, wq, scales: scales.to_vec(), flips_k, flips_c, trace }
+}
+
+// ---------------------------------------------------------------------------
+// Invariant checking (shared by tests and the property suite)
+// ---------------------------------------------------------------------------
+
+/// Verify the paper's post-conditions (Eq. 9-12) on a result; returns the
+/// measured maxima.  Only valid when no element grid-saturated.
+pub fn check_invariants(
+    w: &Tensor,
+    res: &SquantResult,
+    opts: SquantOpts,
+) -> Result<(f32, f32, f32), String> {
+    let (m, n, k) = mnk_of(&w.shape);
+    let (qmin, qmax) = qrange(opts.bits);
+    let p = perturbation(w, &res.q, &res.scales);
+    let mut max_elem = 0.0f32;
+    let mut max_kernel = 0.0f32;
+    let mut max_chan = 0.0f32;
+    for mi in 0..m {
+        let s = res.scales[mi];
+        let mut chan_sum = 0.0f32;
+        for ni in 0..n {
+            let mut ker_sum = 0.0f32;
+            for i in 0..k {
+                let off = (mi * n + ni) * k + i;
+                let t = w.data[off] / s;
+                if rn(t) < qmin || rn(t) > qmax {
+                    return Err(format!("saturated element at {mi},{ni},{i}"));
+                }
+                if res.q.data[off] < qmin || res.q.data[off] > qmax {
+                    return Err(format!("grid bound violated at {mi},{ni},{i}"));
+                }
+                max_elem = max_elem.max(p.data[off].abs());
+                ker_sum += p.data[off];
+            }
+            if k > 1 && opts.enable_k {
+                max_kernel = max_kernel.max(ker_sum.abs());
+            }
+            chan_sum += ker_sum;
+        }
+        if opts.enable_c {
+            max_chan = max_chan.max(chan_sum.abs());
+        }
+    }
+    let eps = 1e-4;
+    if max_elem >= 1.0 + eps {
+        return Err(format!("|dW| = {max_elem} >= 1"));
+    }
+    let kbound = if opts.enable_c { 1.0 } else { 0.5 };
+    if opts.enable_k && max_kernel > kbound + eps {
+        return Err(format!("kernel ASE {max_kernel} > {kbound}"));
+    }
+    if opts.enable_c && max_chan > 0.5 + eps {
+        return Err(format!("channel ASE {max_chan} > 0.5"));
+    }
+    Ok((max_elem, max_kernel, max_chan))
+}
+
+/// The data-free objective Eq. (8) of a perturbation tensor.
+pub fn case_objective(p: &Tensor) -> f32 {
+    let (m, n, k) = mnk_of(&p.shape);
+    let mut total = 0.0f32;
+    for mi in 0..m {
+        let mut chan = 0.0f32;
+        for ni in 0..n {
+            let mut ker = 0.0f32;
+            for i in 0..k {
+                let v = p.data[(mi * n + ni) * k + i];
+                total += v * v;
+                ker += v;
+            }
+            total += ker * ker;
+            chan += ker;
+        }
+        total += chan * chan;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_w(m: usize, n: usize, k: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let shape = if k == 1 { vec![m, n] } else {
+            // pick kh*kw = k with kh = 1 row
+            vec![m, n, 1, k]
+        };
+        let mut w = Tensor::zeros(&shape);
+        rng.fill_normal(&mut w.data, 0.1);
+        w
+    }
+
+    #[test]
+    fn invariants_full() {
+        for seed in 0..10 {
+            let w = rand_w(8, 6, 9, seed);
+            let res = squant_auto(&w, 4);
+            let opts = SquantOpts::full(4);
+            check_invariants(&w, &res, opts).unwrap();
+        }
+    }
+
+    #[test]
+    fn invariants_ablations() {
+        let w = rand_w(6, 5, 9, 3);
+        let scales = channel_scales(&w, QuantConfig::new(4));
+        for opts in [SquantOpts::ek(4), SquantOpts::ec(4), SquantOpts::e_only(4)] {
+            let res = squant(&w, &scales, opts);
+            check_invariants(&w, &res, opts).unwrap();
+        }
+    }
+
+    #[test]
+    fn k1_layer_uses_channel_flip() {
+        let w = rand_w(8, 32, 1, 5);
+        let res = squant_auto(&w, 4);
+        check_invariants(&w, &res, SquantOpts::full(4)).unwrap();
+        assert_eq!(res.flips_k, 0); // SQuant-K skipped for K == 1
+    }
+
+    #[test]
+    fn e_only_equals_rtn() {
+        let w = rand_w(4, 4, 9, 7);
+        let scales = channel_scales(&w, QuantConfig::new(4));
+        let res = squant(&w, &scales, SquantOpts::e_only(4));
+        let q_rtn = quantize_rtn(&w, &scales, 4);
+        assert_eq!(res.q.data, q_rtn.data);
+        assert_eq!(res.flips_k + res.flips_c, 0);
+    }
+
+    #[test]
+    fn case_objective_improves_in_aggregate() {
+        // Strict per-instance descent of summed Eq. (8) is not guaranteed
+        // (see rust/tests/squant_properties.rs); aggregate descent is.
+        let mut o_sq = 0.0f64;
+        let mut o_rtn = 0.0f64;
+        for seed in 0..20 {
+            let w = rand_w(8, 6, 9, seed + 100);
+            let scales = channel_scales(&w, QuantConfig::new(4));
+            let res = squant(&w, &scales, SquantOpts::full(4));
+            let q_rtn = quantize_rtn(&w, &scales, 4);
+            o_sq += case_objective(&perturbation(&w, &res.q, &scales)) as f64;
+            o_rtn += case_objective(&perturbation(&w, &q_rtn, &scales)) as f64;
+        }
+        assert!(o_sq < o_rtn, "{o_sq} vs {o_rtn}");
+    }
+
+    #[test]
+    fn trace_matches_flip_counts() {
+        let w = rand_w(8, 6, 9, 11);
+        let scales = channel_scales(&w, QuantConfig::new(4));
+        let res = squant_traced(&w, &scales, SquantOpts::full(4));
+        let k_events = res.trace.iter().filter(|e| !e.c_stage).count();
+        let c_events = res.trace.iter().filter(|e| e.c_stage).count();
+        assert_eq!(k_events, res.flips_k);
+        assert_eq!(c_events, res.flips_c);
+        // Replaying the trace on the RTN start must reproduce q.
+        let mut q = quantize_rtn(&w, &scales, 4);
+        let (_, n, k) = mnk_of(&w.shape);
+        for ev in &res.trace {
+            q.data[(ev.m * n + ev.n) * k + ev.i] += ev.delta;
+        }
+        assert_eq!(q.data, res.q.data);
+    }
+
+    #[test]
+    fn zero_weights_noop() {
+        let w = Tensor::zeros(&[3, 2, 3, 3]);
+        let res = squant_auto(&w, 4);
+        assert!(res.q.data.iter().all(|&v| v == 0.0));
+        assert_eq!(res.flips_k + res.flips_c, 0);
+    }
+
+    #[test]
+    fn saturation_does_not_escape_grid() {
+        // Weights far beyond the grid: everything clips to +-qmax and no
+        // flip may leave the grid.
+        let mut w = Tensor::filled(&[2, 2, 3, 3], 10.0);
+        w.data[0] = -10.0;
+        let scales = vec![1.0, 1.0];
+        let res = squant(&w, &scales, SquantOpts::full(4));
+        assert!(res.q.data.iter().all(|&v| (-7.0..=7.0).contains(&v)));
+    }
+}

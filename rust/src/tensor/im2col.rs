@@ -1,0 +1,134 @@
+//! im2col lowering: convolution as matmul.
+//!
+//! For input (C, H, W), kernel (KH, KW), stride S and padding (PH, PW) the
+//! patch matrix has shape (C*KH*KW, OH*OW); conv weight reshaped to
+//! (O, C*KH*KW) then `weight @ patches` yields (O, OH*OW).  Grouped conv
+//! slices channels per group.  This is also the activation view the
+//! empirical Hessian analyzer needs: E[x x^T] is the second moment of the
+//! *columns* of this matrix (paper Eq. 2).
+
+use super::Tensor;
+
+/// Output spatial size for one dimension.
+pub fn out_dim(input: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (input + 2 * pad - k) / stride + 1
+}
+
+/// im2col for a single image (C, H, W) -> (C*KH*KW, OH*OW).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    ph: usize,
+    pw: usize,
+) -> Tensor {
+    let oh = out_dim(h, kh, stride, ph);
+    let ow = out_dim(w, kw, stride, pw);
+    let rows = c * kh * kw;
+    let cols = oh * ow;
+    let mut out = Tensor::zeros(&[rows, cols]);
+    for ci in 0..c {
+        let xch = &x[ci * h * w..(ci + 1) * h * w];
+        for ki in 0..kh {
+            for kj in 0..kw {
+                let r = (ci * kh + ki) * kw + kj;
+                let orow = &mut out.data[r * cols..(r + 1) * cols];
+                for oy in 0..oh {
+                    let iy = (oy * stride + ki) as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // padded rows stay zero
+                    }
+                    let src = &xch[iy as usize * w..(iy as usize + 1) * w];
+                    let dst = &mut orow[oy * ow..(oy + 1) * ow];
+                    for ox in 0..ow {
+                        let ix = (ox * stride + kj) as isize - pw as isize;
+                        if ix >= 0 && ix < w as isize {
+                            dst[ox] = src[ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1() {
+        // 1x1 kernel, stride 1, no pad: im2col is just a reshape.
+        let x: Vec<f32> = (0..2 * 3 * 3).map(|v| v as f32).collect();
+        let m = im2col(&x, 2, 3, 3, 1, 1, 1, 0, 0);
+        assert_eq!(m.shape, vec![2, 9]);
+        assert_eq!(m.data, x);
+    }
+
+    #[test]
+    fn padding_zero_border() {
+        let x = vec![1.0f32; 9]; // 1x3x3 of ones
+        let m = im2col(&x, 1, 3, 3, 3, 3, 1, 1, 1);
+        assert_eq!(m.shape, vec![9, 9]);
+        // Center output position (1,1) sees all ones.
+        let center_col: Vec<f32> = (0..9).map(|r| m.at2(r, 4)).collect();
+        assert_eq!(center_col, vec![1.0; 9]);
+        // Corner output (0,0): top-left 2x2 of kernel hits padding -> zeros.
+        assert_eq!(m.at2(0, 0), 0.0); // k(0,0)
+        assert_eq!(m.at2(4, 0), 1.0); // k(1,1) hits x(0,0)
+    }
+
+    #[test]
+    fn stride_two_dims() {
+        let x = vec![0.0f32; 1 * 5 * 5];
+        let m = im2col(&x, 1, 5, 5, 3, 3, 2, 1, 1);
+        assert_eq!(out_dim(5, 3, 2, 1), 3);
+        assert_eq!(m.shape, vec![9, 9]);
+    }
+
+    #[test]
+    fn conv_via_matmul_matches_direct() {
+        // Direct 2D conv vs im2col+matmul on a random case.
+        use crate::tensor::matmul;
+        use crate::util::rng::Rng;
+        let (c, h, w, o, k, s, p) = (3, 6, 5, 4, 3, 1, 1);
+        let mut rng = Rng::new(2);
+        let mut x = vec![0.0f32; c * h * w];
+        let mut wgt = vec![0.0f32; o * c * k * k];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut wgt, 1.0);
+
+        let patches = im2col(&x, c, h, w, k, k, s, p, p);
+        let wt = Tensor::from_vec(&[o, c * k * k], wgt.clone());
+        let y = matmul(&wt, &patches);
+
+        let (oh, ow) = (out_dim(h, k, s, p), out_dim(w, k, s, p));
+        for oc in 0..o {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ci in 0..c {
+                        for ki in 0..k {
+                            for kj in 0..k {
+                                let iy = (oy * s + ki) as isize - p as isize;
+                                let ix = (ox * s + kj) as isize - p as isize;
+                                if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                                    acc += wgt[((oc * c + ci) * k + ki) * k + kj]
+                                        * x[(ci * h + iy as usize) * w + ix as usize];
+                                }
+                            }
+                        }
+                    }
+                    let got = y.at2(oc, oy * ow + ox);
+                    assert!((acc - got).abs() < 1e-3, "{acc} vs {got}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Blocked matmul — the native engine's compute core.
+//!
+//! `C[MxN] = A[MxK] @ B[KxN]`, row-major.  The kernel is a cache-blocked
+//! i-k-j loop with the innermost loop over contiguous `B` rows, which
+//! auto-vectorizes well; see EXPERIMENTS.md §Perf for the before/after of
+//! the blocking pass.
+
+use super::Tensor;
+
+const BLOCK_I: usize = 32;
+const BLOCK_K: usize = 64;
+
+/// C = A @ B (allocating).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_into(&a.data, &b.data, &mut c.data, m, k, n);
+    c
+}
+
+/// C += A @ B into a preallocated buffer (hot-path form, no allocation).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i0 in (0..m).step_by(BLOCK_I) {
+        let i1 = (i0 + BLOCK_I).min(m);
+        for k0 in (0..k).step_by(BLOCK_K) {
+            let k1 = (k0 + BLOCK_K).min(k);
+            for i in i0..i1 {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = A @ B^T — the weight layout used by Linear ([out, in]).
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.at2(i, kk) * b.at2(kk, j);
+                }
+                c.data[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn small_exact() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(matmul(&a, &b).data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matches_naive_random() {
+        let mut rng = Rng::new(4);
+        for &(m, k, n) in &[(3, 5, 7), (33, 65, 17), (64, 64, 64), (1, 100, 1)] {
+            let mut a = Tensor::zeros(&[m, k]);
+            let mut b = Tensor::zeros(&[k, n]);
+            rng.fill_normal(&mut a.data, 1.0);
+            rng.fill_normal(&mut b.data, 1.0);
+            let c1 = matmul(&a, &b);
+            let c2 = naive(&a, &b);
+            for (x, y) in c1.data.iter().zip(&c2.data) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn bt_matches_transposed() {
+        let mut rng = Rng::new(5);
+        let mut a = Tensor::zeros(&[4, 6]);
+        let mut b = Tensor::zeros(&[3, 6]);
+        rng.fill_normal(&mut a.data, 1.0);
+        rng.fill_normal(&mut b.data, 1.0);
+        // Build B^T explicitly.
+        let mut bt = Tensor::zeros(&[6, 3]);
+        for i in 0..3 {
+            for j in 0..6 {
+                bt.data[j * 3 + i] = b.at2(i, j);
+            }
+        }
+        let c1 = matmul_bt(&a, &b);
+        let c2 = matmul(&a, &bt);
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

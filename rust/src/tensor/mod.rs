@@ -1,0 +1,212 @@
+//! Dense f32 tensor substrate (no ndarray in the offline vendor set).
+//!
+//! Row-major contiguous storage + the small op set the inference engine and
+//! quantizers need: elementwise ops, reductions, matmul, im2col.  Shapes are
+//! `Vec<usize>`; everything is bounds-checked in debug and `unsafe`-free.
+
+pub mod im2col;
+pub mod matmul;
+
+pub use matmul::matmul;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape (must preserve numel).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.numel());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // ---- indexing -----------------------------------------------------------
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 4);
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d]
+    }
+
+    /// Row view of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.shape[self.ndim() - 1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.shape[self.ndim() - 1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    // ---- elementwise ---------------------------------------------------------
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn relu_inplace(&mut self) {
+        for v in self.data.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    // ---- reductions ------------------------------------------------------------
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.numel() as f32
+        }
+    }
+
+    /// Mean squared difference against another tensor.
+    pub fn mse(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / self.numel() as f32
+    }
+
+    /// argmax over the last axis for a 2-D tensor -> one index per row.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.ndim(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let row = self.row(i);
+                let mut best = 0;
+                for (j, v) in row.iter().enumerate() {
+                    if *v > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn at4_layout() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        t.data[((1 * 3 + 2) * 4 + 3) * 5 + 4] = 9.0;
+        assert_eq!(t.at4(1, 2, 3, 4), 9.0);
+    }
+
+    #[test]
+    fn elementwise() {
+        let mut t = Tensor::from_vec(&[4], vec![-1., 2., -3., 4.]);
+        t.relu_inplace();
+        assert_eq!(t.data, vec![0., 2., 0., 4.]);
+        let u = t.map(|x| x * 2.0);
+        assert_eq!(u.data, vec![0., 4., 0., 8.]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(&[4], vec![-5., 1., 2., 2.]);
+        assert_eq!(t.abs_max(), 5.0);
+        assert_eq!(t.sum(), 0.0);
+        assert_eq!(t.mean(), 0.0);
+    }
+
+    #[test]
+    fn mse() {
+        let a = Tensor::from_vec(&[2], vec![0., 0.]);
+        let b = Tensor::from_vec(&[2], vec![3., 4.]);
+        assert_eq!(a.mse(&b), 12.5);
+    }
+
+    #[test]
+    fn argmax_rows_ties_lower() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 3., 3., 0., -1., -1.]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Hand-rolled benchmark harness (criterion is not in the offline vendor
+//! set).  Used by every `[[bench]]` target with `harness = false`.
+//!
+//! Method: warmup runs, then N timed repetitions; reports min / median /
+//! mean / p95 so the paper tables can cite medians (robust against CI
+//! noise).  Deliberately simple — the paper's timing claims are order-of-
+//! magnitude claims (ms vs s vs h), not microsecond-level ones.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub reps: usize,
+    pub min_ns: u128,
+    pub median_ns: u128,
+    pub mean_ns: u128,
+    pub p95_ns: u128,
+}
+
+impl Stats {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns as f64 / 1e6
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns as f64 / 1e6
+    }
+}
+
+fn fmt_ns(ns: u128) -> String {
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} reps={:<4} min={:>10} median={:>10} mean={:>10} p95={:>10}",
+            self.name,
+            self.reps,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns)
+        )
+    }
+}
+
+/// Time `f` with `warmup` untimed and `reps` timed repetitions.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<u128> = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos());
+    }
+    samples.sort_unstable();
+    let n = samples.len();
+    Stats {
+        name: name.to_string(),
+        reps: n,
+        min_ns: samples[0],
+        median_ns: samples[n / 2],
+        mean_ns: samples.iter().sum::<u128>() / n as u128,
+        p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+    }
+}
+
+/// Time a single run of `f`, returning (result, millis).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Print a markdown-style table row (used by bench binaries for
+/// paper-table-shaped output).
+pub fn table_row(cols: &[&str], widths: &[usize]) -> String {
+    let mut s = String::from("|");
+    for (c, w) in cols.iter().zip(widths) {
+        s.push_str(&format!(" {c:<w$} |", w = w));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_reps() {
+        let mut n = 0;
+        let st = bench("x", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(st.reps, 10);
+        assert!(st.min_ns <= st.median_ns && st.median_ns <= st.p95_ns);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, ms) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(ms >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(500).contains("ns"));
+        assert!(fmt_ns(5_000).contains("µs"));
+        assert!(fmt_ns(5_000_000).contains("ms"));
+        assert!(fmt_ns(5_000_000_000).contains("s"));
+    }
+}

@@ -1,0 +1,163 @@
+//! Tiny CLI argument parser (no clap in the offline vendor set).
+//!
+//! Grammar: `squant <command> [--key value]... [--flag]... [positional]...`
+//! Typed getters with defaults; unknown-flag detection via `finish()`.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashSet;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: Vec<(String, String)>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    consumed: HashSet<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.push((k.to_string(), v.to_string()));
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.push((name.to_string(), it.next().unwrap()));
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn opt(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.opts
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.clone())
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&mut self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&mut self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&mut self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.insert(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&mut self, key: &str, default: &str) -> Vec<String> {
+        self.str_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    /// Error on any option/flag that was never consumed (typo guard).
+    pub fn finish(&self) -> Result<()> {
+        for (k, _) in &self.opts {
+            if !self.consumed.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for k in &self.flags {
+            if !self.consumed.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()).collect())
+    }
+
+    #[test]
+    fn command_and_opts() {
+        let mut a = args("quantize --bits 4 --model miniresnet18 --verbose");
+        assert_eq!(a.command.as_deref(), Some("quantize"));
+        assert_eq!(a.usize_or("bits", 8).unwrap(), 4);
+        assert_eq!(a.str_or("model", "x"), "miniresnet18");
+        assert!(a.flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn eq_syntax() {
+        let mut a = args("eval --bits=6");
+        assert_eq!(a.usize_or("bits", 8).unwrap(), 6);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = args("eval --bogus 3");
+        let _ = a.usize_or("bits", 8);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = args("eval");
+        assert_eq!(a.usize_or("bits", 8).unwrap(), 8);
+        assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
+        assert!(!a.flag("force"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let mut a = args("t --models a,b,c");
+        assert_eq!(a.list_or("models", ""), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let mut a = args("t --bits 4 --bits 6");
+        assert_eq!(a.usize_or("bits", 8).unwrap(), 6);
+    }
+}

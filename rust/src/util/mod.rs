@@ -1,0 +1,55 @@
+//! Self-contained utility layer.
+//!
+//! The offline vendor set ships only `xla` + `anyhow`, so the crate carries
+//! its own JSON codec, RNG, thread pool, CLI parser, bench harness and a
+//! small property-testing helper — all deliberately minimal but real
+//! (tested in each module).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+
+/// Round-half-up, the crate-wide rounding convention (matches
+/// `python/compile/common.py::rn` bit-for-bit so the native and AOT SQuant
+/// paths agree on .5 grid points).
+#[inline(always)]
+pub fn rn(x: f32) -> f32 {
+    (x + 0.5).floor()
+}
+
+/// sign with sign(0) = 0 (shared semantic decision, see kernels/ref.py).
+#[inline(always)]
+pub fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rn_half_up() {
+        assert_eq!(rn(0.5), 1.0);
+        assert_eq!(rn(-0.5), 0.0);
+        assert_eq!(rn(1.5), 2.0);
+        assert_eq!(rn(2.4), 2.0);
+        assert_eq!(rn(-1.6), -2.0);
+        assert_eq!(rn(0.0), 0.0);
+    }
+
+    #[test]
+    fn sign_zero() {
+        assert_eq!(sign(0.0), 0.0);
+        assert_eq!(sign(1e-30), 1.0);
+        assert_eq!(sign(-1e-30), -1.0);
+    }
+}

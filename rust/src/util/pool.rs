@@ -1,0 +1,187 @@
+//! Parallel-execution helpers (no rayon in the offline vendor set).
+//!
+//! Two primitives:
+//!  * [`parallel_for`] — scoped fork-join over an index range, used by the
+//!    coordinator to quantize layers/channels concurrently;
+//!  * [`ThreadPool`] — a persistent pool with a submission queue, used by the
+//!    long-lived on-the-fly service.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(i)` for every `i in 0..n`, work-stealing via an atomic counter.
+/// `f` may produce a value; results are returned in index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    thread::scope(|s| {
+        for _ in 0..threads {
+            let fref = &f;
+            let nref = &next;
+            let optr = &out_ptr;
+            s.spawn(move || loop {
+                let i = nref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = fref(i);
+                // SAFETY: each index i is claimed exactly once, slots are
+                // disjoint, and the scope outlives all writes.
+                unsafe {
+                    *optr.0.add(i) = Some(v);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Run `f(i)` for side effects only.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_map(n, threads, |i| f(i));
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: used only with disjoint index writes inside a scope.
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+// ---------------------------------------------------------------------------
+// Persistent pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size thread pool with a shared FIFO queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            let (lock, cv) = &*pending;
+                            let mut cnt = lock.lock().unwrap();
+                            *cnt -= 1;
+                            if *cnt == 0 {
+                                cv.notify_all();
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    /// Submit a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.as_ref().unwrap().send(Box::new(f)).unwrap();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut cnt = lock.lock().unwrap();
+        while *cnt > 0 {
+            cnt = cv.wait(cnt).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_map_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread() {
+        assert_eq!(parallel_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn pool_wait_idempotent() {
+        let pool = ThreadPool::new(2);
+        pool.wait();
+        pool.submit(|| {});
+        pool.wait();
+        pool.wait();
+    }
+}

@@ -1,0 +1,76 @@
+//! Mini property-testing helper (proptest is not in the offline vendor set).
+//!
+//! [`forall`] runs a property over `n` seeded cases; on failure it retries
+//! with a binary-search-style "shrink" over the case's size hint and reports
+//! the smallest failing seed.  Used by the SQuant invariant suites
+//! (`rust/tests/`) the way the paper's Eq. 9-12 post-conditions demand.
+
+use crate::util::rng::Rng;
+
+/// A generated test case: the RNG to draw from plus a size in [1, max_size].
+pub struct Case {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+/// Run `prop` over `n` cases derived from `seed`.  `prop` returns
+/// `Err(reason)` to signal failure.  Panics with the seed + smallest size
+/// that still fails, so failures are reproducible.
+pub fn forall<F>(name: &str, seed: u64, n: usize, max_size: usize, prop: F)
+where
+    F: Fn(&mut Case) -> Result<(), String>,
+{
+    let mut meta = Rng::new(seed);
+    for i in 0..n {
+        let case_seed = meta.next_u64();
+        let size = 1 + (meta.below(max_size.max(1)));
+        let mut case = Case { rng: Rng::new(case_seed), size };
+        if let Err(msg) = prop(&mut case) {
+            // Shrink: halve the size while it still fails.
+            let mut best = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut c = Case { rng: Rng::new(case_seed), size: s };
+                match prop(&mut c) {
+                    Err(m) => {
+                        best = (s, m);
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {i}, seed {case_seed}, \
+                 shrunk size {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        forall("true", 1, 50, 10, |_c| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn fails_trivially_false() {
+        forall("always-false", 1, 5, 10, |_c| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_in_range() {
+        forall("size-range", 2, 100, 7, |c| {
+            if (1..=7).contains(&c.size) {
+                Ok(())
+            } else {
+                Err(format!("size {}", c.size))
+            }
+        });
+    }
+}

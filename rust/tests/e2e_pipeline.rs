@@ -1,0 +1,102 @@
+//! End-to-end pipeline tests — require `make artifacts`.  These assert the
+//! *shape* of the paper's headline results on the real trained zoo:
+//! 8-bit SQuant is nearly lossless, SQuant >= RTN at 4 bits, the offload
+//! path agrees with the native path, and the quantized container
+//! round-trips.
+
+use squant::coordinator::{quantize_model, quantize_model_offload};
+use squant::eval::{self, accuracy, tables::Env, CalibCfg, Method};
+use squant::io::sqnt;
+use squant::quant::ScaleMethod;
+use squant::squant::SquantOpts;
+use squant::util::pool::default_threads;
+
+fn env() -> Env {
+    let mut env = Env::load("artifacts").expect("run `make artifacts` first");
+    env.test.truncate(512);
+    env
+}
+
+#[test]
+fn w8_squant_nearly_lossless() {
+    let env = env();
+    let (graph, params) = env.model("miniresnet18").unwrap();
+    let threads = default_threads();
+    let fp32 = accuracy(&graph, &params, None, &env.test, 128, threads).unwrap();
+    let (qp, _) = quantize_model(&graph, &params, SquantOpts::full(8), threads);
+    let q8 = accuracy(&graph, &qp, None, &env.test, 128, threads).unwrap();
+    assert!(q8 >= fp32 - 0.02, "8-bit dropped too much: {fp32} -> {q8}");
+}
+
+#[test]
+fn w4_squant_not_worse_than_rtn() {
+    let env = env();
+    for arch in ["miniresnet18", "minishufflenet"] {
+        let Ok((graph, params)) = env.model(arch) else { continue };
+        let threads = default_threads();
+        let (sq, _) = quantize_model(&graph, &params, SquantOpts::full(4),
+                                     threads);
+        let rtn = squant::baselines::rtn::quantize_model(
+            &graph, &params, 4, ScaleMethod::MaxAbs);
+        let acc_sq = accuracy(&graph, &sq, None, &env.test, 128, threads).unwrap();
+        let acc_rtn =
+            accuracy(&graph, &rtn, None, &env.test, 128, threads).unwrap();
+        // Binomial noise on 512 samples ~ 2.2%; require no significant loss.
+        assert!(
+            acc_sq >= acc_rtn - 0.03,
+            "{arch}: squant {acc_sq} well below rtn {acc_rtn}"
+        );
+    }
+}
+
+#[test]
+fn offload_path_matches_native() {
+    let env = env();
+    let (graph, params) = env.model("miniresnet18").unwrap();
+    let rt = squant::runtime::Runtime::cpu().unwrap();
+    let (native, _) = quantize_model(&graph, &params, SquantOpts::full(4), 1);
+    let (offload, _, offloaded) =
+        quantize_model_offload(&graph, &params, 4, &env.man, &rt).unwrap();
+    assert!(offloaded > 0, "no layers offloaded — artifacts missing?");
+    for layer in graph.quant_layers() {
+        let a = &native[&layer.weight];
+        let b = &offload[&layer.weight];
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-6, "{} differs", layer.weight);
+        }
+    }
+}
+
+#[test]
+fn quantized_container_round_trips() {
+    let env = env();
+    let entry = env.man.model("miniresnet18").unwrap();
+    let c = sqnt::load(&entry.sqnt).unwrap();
+    let graph = squant::nn::Graph::from_header(&c.header).unwrap();
+    let (qp, _) = quantize_model(&graph, &c.params, SquantOpts::full(4), 2);
+    let path = std::env::temp_dir().join("squant_e2e_roundtrip.sqnt");
+    sqnt::save(&path, &c.header, &qp).unwrap();
+    let c2 = sqnt::load(&path).unwrap();
+    for (k, v) in &qp {
+        assert_eq!(&c2.params[k].data, &v.data, "{k}");
+    }
+}
+
+#[test]
+fn quantize_with_runs_every_method_on_real_model() {
+    let mut env = env();
+    env.test.truncate(128);
+    let (graph, params) = env.model("minishufflenet").unwrap();
+    let calib = CalibCfg { batch: 8, iters: 4, seed: 1 };
+    for m in [
+        Method::Dfq,
+        Method::ZeroQ,
+        Method::squant_full(),
+    ] {
+        let q = eval::quantize_with(m, &graph, &params, 6, 6, calib).unwrap();
+        let acc = accuracy(&q.graph, &q.params, q.act.as_ref(), &env.test, 64,
+                           default_threads())
+            .unwrap();
+        assert!((0.0..=1.0).contains(&acc), "{m:?}");
+    }
+}

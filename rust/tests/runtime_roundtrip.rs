@@ -1,0 +1,88 @@
+//! PJRT runtime integration tests — require `make artifacts`.
+//!
+//! The key cross-validation of the whole stack: the AOT JAX/Pallas SQuant
+//! HLO (validated against the numpy oracle in pytest) must agree with the
+//! native Rust implementation on the integer grid assignment.
+
+use squant::eval::tables::Env;
+use squant::io::sqnt;
+use squant::nn::engine::forward;
+use squant::nn::Graph;
+use squant::quant::{channel_scales, QuantConfig};
+use squant::runtime::Runtime;
+use squant::squant::{squant, SquantOpts};
+use squant::tensor::Tensor;
+use squant::util::rng::Rng;
+
+fn env() -> Env {
+    Env::load("artifacts").expect("run `make artifacts` first")
+}
+
+#[test]
+fn squant_hlo_bitexact_vs_native() {
+    let env = env();
+    let rt = Runtime::cpu().unwrap();
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut tested = 0;
+    let mut shapes: Vec<_> = env.man.squant.iter().collect();
+    shapes.sort_by_key(|(s, _)| (s.m, s.n, s.k, s.bits));
+    for (shape, path) in shapes {
+        // Keep runtime bounded: every distinct (n, k) at both bit widths.
+        if tested >= 12 {
+            break;
+        }
+        let mut w = Tensor::zeros(&[shape.m, shape.n, shape.k]);
+        rng.fill_normal(&mut w.data, 0.1);
+        let w4 = Tensor::from_vec(&[shape.m, shape.n, 1, shape.k],
+                                  w.data.clone());
+        let scales = channel_scales(&w4, QuantConfig::new(shape.bits));
+        let s = Tensor::from_vec(&[shape.m], scales.clone());
+
+        let outs = rt.run(path, &[&w, &s]).expect("offload failed");
+        let native = squant(&w4, &scales, SquantOpts::full(shape.bits));
+
+        assert_eq!(outs[0].data, native.q.data,
+                   "q mismatch for {shape:?}");
+        for (a, b) in outs[1].data.iter().zip(&native.wq.data) {
+            assert!((a - b).abs() < 1e-6, "wq mismatch for {shape:?}");
+        }
+        tested += 1;
+    }
+    assert!(tested >= 4, "too few squant artifacts found");
+}
+
+#[test]
+fn forward_hlo_matches_native_engine() {
+    let env = env();
+    let entry = env.man.model("miniresnet18").unwrap();
+    let c = sqnt::load(&entry.sqnt).unwrap();
+    let graph = Graph::from_header(&c.header).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let path = entry.forward.get(&1).expect("b1 forward artifact");
+    let exe = rt.load(path).unwrap();
+
+    let (x, _) = env.test.batch(3, 1);
+    let native = forward(&graph, &c.params, &x, None, None).unwrap().logits;
+
+    let mut inputs: Vec<&Tensor> = vec![&x];
+    let ordered: Vec<&Tensor> = c.order.iter().map(|n| &c.params[n]).collect();
+    inputs.extend(ordered.iter());
+    let outs = rt.execute(&exe, &inputs).unwrap();
+
+    assert_eq!(outs[0].shape, native.shape);
+    for (a, b) in outs[0].data.iter().zip(&native.data) {
+        assert!((a - b).abs() < 2e-3,
+                "logit mismatch: pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let env = env();
+    let rt = Runtime::cpu().unwrap();
+    let (_, path) = env.man.squant.iter().next().unwrap();
+    let _ = rt.load(path).unwrap();
+    let n1 = rt.cached_executables();
+    let _ = rt.load(path).unwrap();
+    assert_eq!(rt.cached_executables(), n1);
+}

@@ -1,0 +1,68 @@
+//! Model-zoo integrity — requires `make artifacts`.  Checks every trained
+//! container parses, runs, and reproduces (a subsample of) its recorded
+//! test accuracy through the native engine.
+
+use squant::eval::{accuracy, tables::Env};
+use squant::io::{dataset, sqnt};
+use squant::nn::engine::forward;
+use squant::nn::Graph;
+use squant::util::pool::default_threads;
+
+#[test]
+fn all_models_load_and_forward() {
+    let env = Env::load("artifacts").expect("run `make artifacts` first");
+    assert!(!env.man.models.is_empty());
+    for (name, entry) in &env.man.models {
+        let c = sqnt::load(&entry.sqnt).unwrap();
+        let graph = Graph::from_header(&c.header).unwrap();
+        assert_eq!(&graph.name, name);
+        assert!(!graph.quant_layers().is_empty());
+        // Every referenced parameter exists with a sane shape.
+        for layer in graph.quant_layers() {
+            let w = &c.params[&layer.weight];
+            assert_eq!(w.numel(), layer.m * layer.n * layer.k, "{name}");
+        }
+        let (x, _) = env.test.batch(0, 4);
+        let out = forward(&graph, &c.params, &x, None, None).unwrap();
+        assert_eq!(out.logits.shape, vec![4, graph.num_classes]);
+        assert!(out.logits.data.iter().all(|v| v.is_finite()), "{name}");
+    }
+}
+
+#[test]
+fn recorded_accuracy_reproduces() {
+    let env = Env::load("artifacts").expect("run `make artifacts` first");
+    let mut test = dataset::load(&env.man.test_bin).unwrap();
+    test.truncate(512);
+    for (name, entry) in &env.man.models {
+        let Some(recorded) = entry.test_acc else { continue };
+        let c = sqnt::load(&entry.sqnt).unwrap();
+        let graph = Graph::from_header(&c.header).unwrap();
+        let acc = accuracy(&graph, &c.params, None, &test, 128,
+                           default_threads())
+            .unwrap();
+        // 512-sample estimate vs full-set recorded value: allow 3 sigma of
+        // binomial noise plus slack for engine-vs-jax numerics.
+        let sigma = (recorded * (1.0 - recorded) / 512.0).sqrt();
+        let tol = 3.0 * sigma + 0.03;
+        assert!(
+            (acc - recorded).abs() < tol,
+            "{name}: recorded {recorded:.4} vs measured {acc:.4} (tol {tol:.4})"
+        );
+    }
+}
+
+#[test]
+fn dataset_is_balanced_and_normalized() {
+    let env = Env::load("artifacts").expect("run `make artifacts` first");
+    let ds = dataset::load(&env.man.test_bin).unwrap();
+    assert!(ds.len() >= 1000);
+    let mut counts = [0usize; 10];
+    for &l in &ds.labels {
+        counts[l as usize] += 1;
+    }
+    let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+    assert!(mx - mn <= 1, "class imbalance: {counts:?}");
+    // Pixels roughly in [-3, 3].
+    assert!(ds.images.abs_max() <= 3.5);
+}
