@@ -1,14 +1,17 @@
 //! On-the-fly quantization as a service: starts the coordinator's TCP
 //! server on an ephemeral port, then exercises it as a client — the
-//! smartphone/IoT deployment story from the paper's introduction.
+//! smartphone/IoT deployment story from the paper's introduction, now
+//! backed by the serving subsystem (artifact cache, single-flight dedup,
+//! bounded scheduler, metrics).
 //!
 //!   cargo run --release --example onthefly_service
 
 use anyhow::Result;
 use std::sync::Arc;
 
-use squant::coordinator::server::{Client, ModelStore};
+use squant::coordinator::server::{self, Client, ModelStore};
 use squant::io::manifest::Manifest;
+use squant::serve::EngineCfg;
 use squant::util::json::Json;
 
 fn main() -> Result<()> {
@@ -16,58 +19,89 @@ fn main() -> Result<()> {
     let store = Arc::new(ModelStore::load(&man)?);
     let names: Vec<String> = store.models.keys().cloned().collect();
 
-    // Bind on an ephemeral port, serve in the background.
-    let addr = "127.0.0.1:7433";
-    let store2 = Arc::clone(&store);
-    let server = std::thread::spawn(move || {
-        let _ = squant::coordinator::server::serve(store2, addr);
-    });
-    std::thread::sleep(std::time::Duration::from_millis(300));
+    // Bind an ephemeral port, serve in the background.
+    let handle = server::spawn(store, "127.0.0.1:0", EngineCfg::default())?;
+    let addr = handle.addr.to_string();
 
-    let mut client = Client::connect(addr)?;
+    let mut client = Client::connect(&addr)?;
     println!("connected to coordinator at {addr}");
 
     let resp = client.call(&Json::parse(r#"{"cmd":"models"}"#)?)?;
     println!("models: {}", resp.req("models")?.dump());
 
+    // Prefetch one artifact, then quantize each model twice: the repeat is
+    // served from the LRU cache (cached=true, ~µs instead of ~ms).
+    let warm = Json::obj()
+        .set("cmd", "warm")
+        .set("model", names[0].as_str())
+        .set("wbits", 8usize);
+    println!("warm: {}", client.call(&warm)?.dump());
+
     for name in names.iter().take(2) {
         for bits in [8usize, 4] {
-            let req = Json::obj()
-                .set("cmd", "quantize")
-                .set("model", name.as_str())
-                .set("wbits", bits);
-            let resp = client.call(&req)?;
-            println!(
-                "quantize {name} W{bits}: {} layers in {:.1} ms wall \
-                 ({:.2} ms/layer, {} flips)",
-                resp.req("layers")?.as_usize()?,
-                resp.req("wall_ms")?.as_f64()?,
-                resp.req("avg_layer_ms")?.as_f64()?,
-                resp.req("flips")?.as_usize()?
-            );
+            for round in 1..=2 {
+                let req = Json::obj()
+                    .set("cmd", "quantize")
+                    .set("model", name.as_str())
+                    .set("wbits", bits);
+                let resp = client.call(&req)?;
+                println!(
+                    "quantize {name} W{bits} (round {round}): {} layers, \
+                     served in {:.2} ms (quantize wall {:.1} ms, {} flips, \
+                     cached={})",
+                    resp.req("layers")?.as_usize()?,
+                    resp.req("served_ms")?.as_f64()?,
+                    resp.req("wall_ms")?.as_f64()?,
+                    resp.req("flips")?.as_usize()?,
+                    resp.req("cached")?.as_bool()?
+                );
+            }
         }
     }
 
-    // One full quantize+eval round trip on a subsample.
+    // Two identical quantize+eval round trips on a subsample.  Note the
+    // cache key includes abits, so this W4A8 eval is a fresh artifact even
+    // after the W4 (abits=0) quantizes above — but the second eval reuses
+    // the first one's entry.
     let req = Json::obj()
         .set("cmd", "eval")
         .set("model", names[0].as_str())
         .set("wbits", 4usize)
         .set("abits", 8usize)
         .set("samples", 256usize);
-    let resp = client.call(&req)?;
+    for round in 1..=2 {
+        let resp = client.call(&req)?;
+        println!(
+            "eval {} W4A8 (round {round}) on {} samples: top-1 {:.2}% \
+             (quantized in {:.1} ms, cached={})",
+            names[0],
+            resp.req("samples")?.as_usize()?,
+            resp.req("top1")?.as_f64()? * 100.0,
+            resp.req("quant_ms")?.as_f64()?,
+            resp.req("cached")?.as_bool()?
+        );
+    }
+
+    // Serving metrics: request counts, hit/miss, latency quantiles.
+    let stats = client.call(&Json::parse(r#"{"cmd":"stats"}"#)?)?;
+    let cache = stats.req("cache")?;
     println!(
-        "eval {} W4A8 on {} samples: top-1 {:.2}% (quantized in {:.1} ms)",
-        names[0],
-        resp.req("samples")?.as_usize()?,
-        resp.req("top1")?.as_f64()? * 100.0,
-        resp.req("quant_ms")?.as_f64()?
+        "stats: {} entries cached ({} hits / {} misses), p95 latency {:.2} ms",
+        cache.req("entries")?.as_usize()?,
+        cache.req("hits")?.as_usize()?,
+        cache.req("misses")?.as_usize()?,
+        stats
+            .req("metrics")?
+            .req("latency")?
+            .req("all")?
+            .req("p95_ms")?
+            .as_f64()?
     );
 
+    // Shutdown now takes effect immediately — the accept loop polls, so no
+    // nudge connection is needed.
     let _ = client.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?)?;
-    // Nudge the accept loop so it notices the stop flag.
-    let _ = std::net::TcpStream::connect(addr);
-    let _ = server.join();
+    handle.join();
     println!("service stopped cleanly");
     Ok(())
 }

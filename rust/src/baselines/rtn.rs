@@ -3,6 +3,16 @@
 
 use crate::nn::{Graph, Params};
 use crate::quant::{channel_scales, dequant, quantize_rtn, QuantConfig, ScaleMethod};
+use crate::tensor::Tensor;
+
+/// Per-channel RTN of a single weight tensor (quantize + dequantize).
+/// Shared by the whole-model path below and the serving engine's
+/// per-layer-reporting path, so the two can never diverge.
+pub fn quantize_layer(w: &Tensor, bits: usize, scale: ScaleMethod) -> Tensor {
+    let cfg = QuantConfig { bits, scale };
+    let scales = channel_scales(w, cfg);
+    dequant(&quantize_rtn(w, &scales, bits), &scales)
+}
 
 /// Quantize every conv/linear weight in place with per-channel RTN.
 pub fn quantize_model(graph: &Graph, params: &Params, bits: usize,
@@ -10,10 +20,7 @@ pub fn quantize_model(graph: &Graph, params: &Params, bits: usize,
     let mut out = params.clone();
     for layer in graph.quant_layers() {
         let w = &params[&layer.weight];
-        let cfg = QuantConfig { bits, scale };
-        let scales = channel_scales(w, cfg);
-        let q = quantize_rtn(w, &scales, bits);
-        out.insert(layer.weight.clone(), dequant(&q, &scales));
+        out.insert(layer.weight.clone(), quantize_layer(w, bits, scale));
     }
     out
 }

@@ -38,7 +38,7 @@ pub struct LayerReport {
     pub flips_c: usize,
 }
 
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct QuantReport {
     pub layers: Vec<LayerReport>,
     pub total_ms: f64,

@@ -3,27 +3,38 @@
 //! Protocol (one JSON object per line, response is one JSON line):
 //!   {"cmd":"ping"}
 //!   {"cmd":"models"}
-//!   {"cmd":"quantize","model":"miniresnet18","wbits":4}
+//!   {"cmd":"quantize","model":"miniresnet18","wbits":4[,"abits":A][,"method":"squant|squant-e|squant-ek|squant-ec|rtn"]}
 //!   {"cmd":"eval","model":"miniresnet18","wbits":4,"abits":8,"samples":512}
+//!   {"cmd":"warm","model":"miniresnet18","wbits":4}      prefetch into cache
+//!   {"cmd":"stats"}                                      counters + latency
 //!   {"cmd":"shutdown"}
 //!
-//! One worker thread per connection; model containers are loaded once and
-//! shared.  Used by examples/onthefly_service.rs and the CLI `serve`
-//! command.
+//! Responses always carry `"ok"`.  `quantize`/`eval` add `"cached"` (LRU or
+//! single-flight reuse) and `"served_ms"`.  When the bounded job queue is
+//! full the server answers `{"ok":false,"error":"busy","retry_ms":N}`
+//! instead of queueing unboundedly — clients should back off and retry.
+//!
+//! This module is a thin protocol layer: every request is dispatched to
+//! [`crate::serve::Engine`], which owns the artifact cache, single-flight
+//! deduplication, the bounded worker pool and the metrics (see
+//! `rust/src/serve/`).  Connection threads only parse/serialize lines; the
+//! accept loop polls non-blockingly so `shutdown` takes effect without
+//! needing one more connection, and joins every connection thread before
+//! returning.
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
 
-use crate::eval;
 use crate::io::{dataset, manifest::Manifest, sqnt};
 use crate::nn::{Graph, Params};
-use crate::squant::SquantOpts;
+use crate::serve::{Engine, EngineCfg};
 use crate::util::json::Json;
-use crate::util::pool::default_threads;
 
 pub struct ModelStore {
     pub models: HashMap<String, (Graph, Params)>,
@@ -43,128 +54,162 @@ impl ModelStore {
     }
 }
 
-fn handle_request(store: &ModelStore, req: &Json, stop: &AtomicBool) -> Json {
+/// Dispatch one request: `shutdown` flips the server's stop flag, anything
+/// else goes to the engine.
+fn dispatch(engine: &Arc<Engine>, req: &Json, stop: &AtomicBool) -> Json {
     let cmd = req.get("cmd").and_then(|c| c.as_str().ok()).unwrap_or("");
-    match cmd {
-        "ping" => Json::obj().set("ok", true).set("pong", true),
-        "models" => {
-            let names: Vec<Json> = store
-                .models
-                .keys()
-                .map(|k| Json::Str(k.clone()))
-                .collect();
-            Json::obj().set("ok", true).set("models", Json::Arr(names))
+    if cmd == "shutdown" {
+        engine.metrics.count_cmd("shutdown");
+        stop.store(true, Ordering::SeqCst);
+        return Json::obj().set("ok", true).set("bye", true);
+    }
+    engine.handle(req)
+}
+
+/// Serve on `addr` until a `shutdown` request arrives (CLI entry point).
+pub fn serve(store: Arc<ModelStore>, addr: &str, cfg: EngineCfg) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    println!(
+        "squant coordinator listening on {} ({} workers, queue {}, cache {} entries / {} MB)",
+        listener.local_addr()?,
+        cfg.workers.max(1),
+        cfg.queue_depth,
+        cfg.cache_cap,
+        cfg.cache_mb
+    );
+    let engine = Engine::new(store, cfg);
+    run(listener, engine, Arc::new(AtomicBool::new(false)))
+}
+
+/// A background server (tests, examples, `bench-serve --spawn`).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Ask the accept loop to exit (same effect as a `shutdown` request).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Stop and wait for the accept loop + all connection threads.
+    pub fn join(mut self) {
+        self.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
         }
-        "quantize" => match do_quantize(store, req) {
-            Ok(j) => j,
-            Err(e) => Json::obj().set("ok", false).set("error", format!("{e:#}")),
-        },
-        "eval" => match do_eval(store, req) {
-            Ok(j) => j,
-            Err(e) => Json::obj().set("ok", false).set("error", format!("{e:#}")),
-        },
-        "shutdown" => {
-            stop.store(true, Ordering::SeqCst);
-            Json::obj().set("ok", true).set("bye", true)
-        }
-        other => Json::obj()
-            .set("ok", false)
-            .set("error", format!("unknown cmd '{other}'")),
     }
 }
 
-fn get_model<'a>(store: &'a ModelStore, req: &Json)
-                 -> Result<(&'a Graph, &'a Params)> {
-    let name = req.req("model")?.as_str()?;
-    let (g, p) = store
-        .models
-        .get(name)
-        .with_context(|| format!("unknown model '{name}'"))?;
-    Ok((g, p))
-}
-
-fn do_quantize(store: &ModelStore, req: &Json) -> Result<Json> {
-    let (g, p) = get_model(store, req)?;
-    let wbits = req.get("wbits").and_then(|b| b.as_usize().ok()).unwrap_or(8);
-    let (_, report) = crate::coordinator::quantize_model(
-        g, p, SquantOpts::full(wbits), default_threads());
-    Ok(Json::obj()
-        .set("ok", true)
-        .set("layers", report.layers.len())
-        .set("total_ms", report.total_ms)
-        .set("wall_ms", report.wall_ms)
-        .set("avg_layer_ms", report.avg_layer_ms())
-        .set(
-            "flips",
-            report
-                .layers
-                .iter()
-                .map(|l| l.flips_k + l.flips_c)
-                .sum::<usize>(),
-        ))
-}
-
-fn do_eval(store: &ModelStore, req: &Json) -> Result<Json> {
-    let (g, p) = get_model(store, req)?;
-    let wbits = req.get("wbits").and_then(|b| b.as_usize().ok()).unwrap_or(8);
-    let abits = req.get("abits").and_then(|b| b.as_usize().ok()).unwrap_or(0);
-    let samples = req
-        .get("samples")
-        .and_then(|b| b.as_usize().ok())
-        .unwrap_or(512);
-    let q = eval::quantize_with(
-        eval::Method::squant_full(), g, p, wbits, abits,
-        eval::CalibCfg::default())?;
-    let mut ds = dataset::Dataset {
-        images: store.test.images.clone(),
-        labels: store.test.labels.clone(),
-    };
-    ds.truncate(samples);
-    let acc = eval::accuracy(&q.graph, &q.params, q.act.as_ref(), &ds, 64,
-                             default_threads())?;
-    Ok(Json::obj()
-        .set("ok", true)
-        .set("top1", acc)
-        .set("quant_ms", q.quant_ms)
-        .set("samples", ds.len()))
-}
-
-/// Serve until a `shutdown` request arrives.  Returns the bound port.
-pub fn serve(store: Arc<ModelStore>, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    let stop = Arc::new(AtomicBool::new(false));
-    println!("squant coordinator listening on {}", listener.local_addr()?);
-    for conn in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
         }
-        let Ok(conn) = conn else { continue };
-        let store = Arc::clone(&store);
-        let stop = Arc::clone(&stop);
-        std::thread::spawn(move || {
-            let _ = handle_conn(&store, conn, &stop);
-        });
+    }
+}
+
+/// Bind (use port 0 for ephemeral) and serve on a background thread.
+pub fn spawn(
+    store: Arc<ModelStore>,
+    addr: &str,
+    cfg: EngineCfg,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let engine = Engine::new(store, cfg);
+    let stop2 = Arc::clone(&stop);
+    let thread = thread::spawn(move || {
+        let _ = run(listener, engine, stop2);
+    });
+    Ok(ServerHandle { addr: local, stop, thread: Some(thread) })
+}
+
+/// Accept loop: non-blocking accept + stop-flag poll, so `shutdown` exits
+/// promptly without the "one more connection" nudge the old blocking loop
+/// needed.  Connection threads are tracked and joined before returning.
+fn run(
+    listener: TcpListener,
+    engine: Arc<Engine>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((conn, _)) => {
+                let engine = Arc::clone(&engine);
+                let stop = Arc::clone(&stop);
+                conns.push(thread::spawn(move || {
+                    let _ = handle_conn(&engine, conn, &stop);
+                }));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
     }
     Ok(())
 }
 
-fn handle_conn(store: &ModelStore, conn: TcpStream, stop: &AtomicBool)
+/// One connection: read a JSON line, answer a JSON line.  Reads use a short
+/// timeout so an idle connection notices shutdown.  Framing is done on raw
+/// bytes (not `read_line`) so a timeout firing mid multi-byte UTF-8
+/// character cannot discard an accumulated partial line — `read_line`'s
+/// append-to-string guard truncates on invalid UTF-8, which would desync
+/// the protocol.
+fn handle_conn(engine: &Arc<Engine>, mut conn: TcpStream, stop: &AtomicBool)
                -> Result<()> {
+    conn.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut writer = conn.try_clone()?;
-    let reader = BufReader::new(conn);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = match Json::parse(&line) {
-            Ok(req) => handle_request(store, &req, stop),
-            Err(e) => Json::obj().set("ok", false).set("error", format!("{e:#}")),
-        };
-        writer.write_all(resp.dump().as_bytes())?;
-        writer.write_all(b"\n")?;
-        if stop.load(Ordering::SeqCst) {
-            break;
+    let mut pending: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match conn.read(&mut chunk) {
+            Ok(0) => break, // EOF
+            Ok(n) => {
+                pending.extend_from_slice(&chunk[..n]);
+                while let Some(pos) = pending.iter().position(|&b| b == b'\n') {
+                    let line: Vec<u8> = pending.drain(..=pos).collect();
+                    let text = String::from_utf8_lossy(&line);
+                    let text = text.trim();
+                    if text.is_empty() {
+                        continue;
+                    }
+                    let resp = match Json::parse(text) {
+                        Ok(req) => dispatch(engine, &req, stop),
+                        Err(e) => Json::obj()
+                            .set("ok", false)
+                            .set("error", format!("{e:#}")),
+                    };
+                    writer.write_all(resp.dump().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    if stop.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
         }
     }
     Ok(())
@@ -177,7 +222,10 @@ pub struct Client {
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
-        Ok(Client { stream: TcpStream::connect(addr)? })
+        Ok(Client {
+            stream: TcpStream::connect(addr)
+                .with_context(|| format!("connecting to {addr}"))?,
+        })
     }
 
     pub fn call(&mut self, req: &Json) -> Result<Json> {
@@ -196,7 +244,7 @@ mod tests {
     use crate::nn::tiny_test_graph;
     use crate::tensor::Tensor;
 
-    fn tiny_store() -> ModelStore {
+    fn tiny_store() -> Arc<ModelStore> {
         let (g, p) = tiny_test_graph(3, 4, 10);
         let mut models = HashMap::new();
         models.insert("tiny".to_string(), (g, p));
@@ -204,50 +252,53 @@ mod tests {
             images: Tensor::zeros(&[8, 3, 8, 8]),
             labels: vec![0; 8],
         };
-        ModelStore { models, test }
+        Arc::new(ModelStore { models, test })
+    }
+
+    fn test_cfg() -> EngineCfg {
+        EngineCfg { workers: 2, queue_depth: 8, cache_cap: 8, cache_mb: 64 }
     }
 
     #[test]
     fn request_dispatch() {
-        let store = tiny_store();
+        let engine = Engine::new(tiny_store(), test_cfg());
         let stop = AtomicBool::new(false);
-        let r = handle_request(&store, &Json::parse(r#"{"cmd":"ping"}"#).unwrap(),
-                               &stop);
+        let r = dispatch(&engine, &Json::parse(r#"{"cmd":"ping"}"#).unwrap(),
+                         &stop);
         assert_eq!(r.req("ok").unwrap(), &Json::Bool(true));
-        let r = handle_request(
-            &store,
+        let r = dispatch(
+            &engine,
             &Json::parse(r#"{"cmd":"quantize","model":"tiny","wbits":4}"#)
                 .unwrap(),
             &stop,
         );
         assert_eq!(r.req("ok").unwrap(), &Json::Bool(true));
         assert_eq!(r.req("layers").unwrap().as_usize().unwrap(), 2);
-        let r = handle_request(&store,
-                               &Json::parse(r#"{"cmd":"nope"}"#).unwrap(), &stop);
+        let r = dispatch(&engine,
+                         &Json::parse(r#"{"cmd":"nope"}"#).unwrap(), &stop);
         assert_eq!(r.req("ok").unwrap(), &Json::Bool(false));
+        assert!(!stop.load(Ordering::SeqCst));
+        let r = dispatch(&engine,
+                         &Json::parse(r#"{"cmd":"shutdown"}"#).unwrap(), &stop);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true));
+        assert!(stop.load(Ordering::SeqCst));
     }
 
     #[test]
     fn server_round_trip_over_tcp() {
-        let store = Arc::new(tiny_store());
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let stop = Arc::new(AtomicBool::new(false));
-        let s2 = Arc::clone(&store);
-        let stop2 = Arc::clone(&stop);
-        let handle = std::thread::spawn(move || {
-            let (conn, _) = listener.accept().unwrap();
-            handle_conn(&s2, conn, &stop2).unwrap();
-        });
-        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let handle = spawn(tiny_store(), "127.0.0.1:0", test_cfg()).unwrap();
+        let addr = handle.addr.to_string();
+        let mut client = Client::connect(&addr).unwrap();
         let resp = client
             .call(&Json::parse(r#"{"cmd":"models"}"#).unwrap())
             .unwrap();
         assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(resp.req("models").unwrap().as_arr().unwrap().len(), 1);
         let resp = client
             .call(&Json::parse(r#"{"cmd":"shutdown"}"#).unwrap())
             .unwrap();
         assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true));
-        handle.join().unwrap();
+        // The accept loop must exit without another connection arriving.
+        handle.join();
     }
 }

@@ -24,6 +24,11 @@ use crate::util::pool::parallel_map;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     Fp32,
+    /// Plain per-channel round-to-nearest (baselines::rtn) — numerically
+    /// identical to `Squant { enable_k: false, enable_c: false }` (both are
+    /// max-abs scales + RTN; asserted by `rtn_method_matches_squant_e`),
+    /// but routed through the dedicated baseline for clarity.
+    Rtn,
     /// DFQ (Nagel'19): fold + equalize + bias correct + RTN.
     Dfq,
     /// ZeroQ-lite.
@@ -46,6 +51,7 @@ impl Method {
     pub fn name(&self) -> String {
         match self {
             Method::Fp32 => "Baseline".into(),
+            Method::Rtn => "RTN".into(),
             Method::Dfq => "DFQ".into(),
             Method::ZeroQ => "ZeroQ".into(),
             Method::Dsg => "DSG".into(),
@@ -63,7 +69,10 @@ impl Method {
     /// Paper-table metadata: does the method need back-propagation (here:
     /// iterative synthetic-data generation) / synthetic data / fine-tuning?
     pub fn no_bp(&self) -> bool {
-        matches!(self, Method::Fp32 | Method::Dfq | Method::Squant { .. })
+        matches!(
+            self,
+            Method::Fp32 | Method::Rtn | Method::Dfq | Method::Squant { .. }
+        )
     }
     pub fn no_ft(&self) -> bool {
         !matches!(self, Method::Gdfq)
@@ -110,6 +119,11 @@ pub fn quantize_with(
             act: None,
             quant_ms: 0.0,
         },
+        Method::Rtn => {
+            let p = rtn::quantize_model(graph, params, wbits, ScaleMethod::MaxAbs);
+            let act = (abits > 0).then(|| data_free_ranges(graph, &p, abits));
+            Quantized { graph: graph.clone(), params: p, act, quant_ms: 0.0 }
+        }
         Method::Dfq => {
             let r = dfq::quantize_model(graph, params, wbits);
             let act = (abits > 0)
@@ -264,6 +278,7 @@ mod tests {
         let calib = CalibCfg { batch: 4, iters: 2, seed: 1 };
         for m in [
             Method::Fp32,
+            Method::Rtn,
             Method::Dfq,
             Method::ZeroQ,
             Method::Dsg,
@@ -280,6 +295,28 @@ mod tests {
                 .unwrap();
             assert!((0.0..=1.0).contains(&acc), "{m:?}");
         }
+    }
+
+    /// The CLI's "rtn" routes to the dedicated baseline; this pins down
+    /// that it stays bit-identical to the SQuant-E ablation (both are
+    /// max-abs per-channel scales + round-to-nearest).
+    #[test]
+    fn rtn_method_matches_squant_e() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let calib = CalibCfg { batch: 4, iters: 2, seed: 1 };
+        let a = quantize_with(Method::Rtn, &g, &p, 4, 0, calib).unwrap();
+        let b = quantize_with(
+            Method::Squant { enable_k: false, enable_c: false },
+            &g, &p, 4, 0, calib,
+        )
+        .unwrap();
+        for layer in g.quant_layers() {
+            assert_eq!(
+                a.params[&layer.weight].data, b.params[&layer.weight].data,
+                "{} differs between RTN and SQuant-E", layer.weight
+            );
+        }
+        assert_eq!(Method::Rtn.name(), "RTN");
     }
 
     #[test]

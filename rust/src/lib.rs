@@ -5,8 +5,10 @@
 //! ([`squant`]), the model substrate ([`nn`], [`tensor`], [`io`]), the
 //! competing data-free baselines ([`baselines`]), the empirical Hessian
 //! analyzer ([`hessian`]), the PJRT runtime that executes the AOT-compiled
-//! JAX/Pallas artifacts ([`runtime`]), and the on-the-fly quantization
-//! coordinator ([`coordinator`]).
+//! JAX/Pallas artifacts ([`runtime`]), the on-the-fly quantization
+//! coordinator ([`coordinator`]), and the serving subsystem ([`serve`]:
+//! artifact cache, single-flight dedup, bounded scheduler, metrics) behind
+//! the TCP service.
 //!
 //! Python never runs on this path: `make artifacts` produces HLO text +
 //! SQNT weight containers once; this crate is self-contained afterwards.
@@ -22,6 +24,7 @@ pub mod io;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod squant;
 pub mod tensor;
 pub mod util;

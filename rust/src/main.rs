@@ -7,7 +7,12 @@
 //!   squant eval --model M --wbits B [--abits A] [--method squant|rtn|dfq|...]
 //!   squant e2e                           end-to-end driver (quantize + eval,
 //!                                        native and PJRT paths)
-//!   squant serve [--addr HOST:PORT]      TCP quantization service
+//!   squant serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
+//!                [--cache-cap N] [--cache-mb MB]   TCP quantization service
+//!                (cache + single-flight + bounded scheduler; see serve/)
+//!   squant bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--reqs N]
+//!                load-generate against a serve instance: req/s, hit-rate,
+//!                latency quantiles, busy rejections
 //!
 //! Every command takes --artifacts DIR (default ./artifacts).
 
@@ -17,6 +22,7 @@ use squant::coordinator::{self, server};
 use squant::eval::{self, report::AccRow, CalibCfg, Method};
 use squant::io::{dataset, manifest::Manifest, sqnt};
 use squant::nn::Graph;
+use squant::serve::EngineCfg;
 use squant::squant as sq;
 use squant::util::cli::Args;
 use squant::util::pool::default_threads;
@@ -36,7 +42,9 @@ fn parse_method(s: &str) -> Result<Method> {
         "squant-e" => Method::Squant { enable_k: false, enable_c: false },
         "squant-ek" => Method::Squant { enable_k: true, enable_c: false },
         "squant-ec" => Method::Squant { enable_k: false, enable_c: true },
-        "rtn" => Method::Squant { enable_k: false, enable_c: false },
+        // The dedicated RTN baseline (bit-identical to SQuant-E; see
+        // eval::tests::rtn_method_matches_squant_e).
+        "rtn" => Method::Rtn,
         "dfq" => Method::Dfq,
         "zeroq" => Method::ZeroQ,
         "dsg" => Method::Dsg,
@@ -59,6 +67,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&artifacts, &mut args),
         "e2e" => cmd_e2e(&artifacts, &mut args),
         "serve" => cmd_serve(&artifacts, &mut args),
+        "bench-serve" => cmd_bench_serve(&artifacts, &mut args),
         "table1" | "table2" | "table3" | "table4" | "table5" | "table6"
         | "fig1" | "fig2" => cmd_table(&cmd, &artifacts, &mut args),
         "help" | _ => {
@@ -81,10 +90,19 @@ COMMANDS:
           [--threads T] [--offload]
   eval    --model M --wbits B [--abits A] [--method NAME] [--samples N]
   e2e     [--model M] [--wbits B] [--abits A]   full end-to-end driver
-  serve   [--addr HOST:PORT]   TCP quantization service
+  serve   [--addr HOST:PORT] [--workers N] [--queue-depth N]
+          [--cache-cap N] [--cache-mb MB]       TCP quantization service
+          protocol verbs: ping models quantize eval warm stats shutdown
+          (quantize/eval hit an LRU artifact cache; identical concurrent
+          requests share one run; a full queue answers
+          {\"ok\":false,\"error\":\"busy\",\"retry_ms\":N})
+  bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--reqs N]
+          [--models A,B] [--wbits 8,4] [--eval-every N] [--samples N]
+          [--seed S]    load-generate against a server; prints req/s,
+          cache hit-rate, p50/p95/p99 latency and busy rejections
 
-METHODS: squant squant-e squant-ek squant-ec dfq zeroq dsg gdfq adaround
-         dsg-adaround fp32
+METHODS: squant squant-e squant-ek squant-ec rtn dfq zeroq dsg gdfq
+         adaround dsg-adaround fp32
 ";
 
 fn cmd_info(artifacts: &str, args: &mut Args) -> Result<()> {
@@ -331,10 +349,206 @@ fn cmd_table(which: &str, artifacts: &str, args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+fn serve_cfg(args: &mut Args) -> Result<EngineCfg> {
+    let defaults = EngineCfg::default();
+    Ok(EngineCfg {
+        workers: args.usize_or("workers", defaults.workers)?,
+        queue_depth: args.usize_or("queue-depth", defaults.queue_depth)?,
+        cache_cap: args.usize_or("cache-cap", defaults.cache_cap)?,
+        cache_mb: args.usize_or("cache-mb", defaults.cache_mb)?,
+    })
+}
+
 fn cmd_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7433");
+    let cfg = serve_cfg(args)?;
     args.finish()?;
     let man = Manifest::load(artifacts)?;
     let store = server::ModelStore::load(&man).context("loading models")?;
-    server::serve(std::sync::Arc::new(store), &addr)
+    server::serve(std::sync::Arc::new(store), &addr, cfg)
+}
+
+/// Load generator: hammer a serve instance with a mixed quantize/eval
+/// workload and report throughput, latency quantiles and cache hit-rate —
+/// the serving benchmark trajectory for ROADMAP's scale goal.
+fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
+    use squant::serve::metrics::Histogram;
+    use squant::util::json::Json;
+    use squant::util::rng::Rng;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    let addr = args.str_or("addr", "127.0.0.1:7433");
+    let conns = args.usize_or("conns", 8)?.max(1);
+    let reqs = args.usize_or("reqs", 64)?.max(1);
+    let model_list = args.list_or("models", "");
+    let wbits_list = args.list_or("wbits", "8,4");
+    let eval_every = args.usize_or("eval-every", 8)?;
+    let samples = args.usize_or("samples", 64)?;
+    let seed = args.u64_or("seed", 7)?;
+    let spawn = args.flag("spawn");
+    let cfg = serve_cfg(args)?;
+    args.finish()?;
+
+    // Either target a running server (--addr) or self-host one (--spawn).
+    let server = if spawn {
+        let man = Manifest::load(artifacts)?;
+        let store = server::ModelStore::load(&man).context("loading models")?;
+        Some(server::spawn(std::sync::Arc::new(store), "127.0.0.1:0", cfg)?)
+    } else {
+        None
+    };
+    let addr = server
+        .as_ref()
+        .map(|h| h.addr.to_string())
+        .unwrap_or(addr);
+
+    let mut probe = server::Client::connect(&addr).context(
+        "connecting (start `squant serve` first, or pass --spawn)",
+    )?;
+    let models: Arc<Vec<String>> = Arc::new(if model_list.is_empty() {
+        let resp = probe.call(&Json::parse(r#"{"cmd":"models"}"#)?)?;
+        resp.req("models")?
+            .as_arr()?
+            .iter()
+            .map(|j| Ok(j.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        model_list
+    });
+    if models.is_empty() {
+        bail!("server has no models loaded");
+    }
+    let wbits: Arc<Vec<usize>> = Arc::new(
+        wbits_list
+            .iter()
+            .map(|s| s.parse::<usize>().map_err(|e| anyhow::anyhow!("--wbits: {e}")))
+            .collect::<Result<Vec<_>>>()?,
+    );
+    if wbits.is_empty() {
+        bail!("--wbits list is empty");
+    }
+
+    let cache_counts = |stats: &Json| -> Result<(f64, f64, f64)> {
+        let c = stats.req("cache")?;
+        Ok((
+            c.req("hits")?.as_f64()?,
+            c.req("misses")?.as_f64()?,
+            c.req("shared")?.as_f64()?,
+        ))
+    };
+    let stats0 = probe.call(&Json::parse(r#"{"cmd":"stats"}"#)?)?;
+    let (h0, m0, s0) = cache_counts(&stats0)?;
+
+    let hist = Arc::new(Histogram::new());
+    let busy = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let done = Arc::new(AtomicU64::new(0));
+
+    println!(
+        "bench-serve: {conns} conns x {reqs} reqs against {addr} \
+         (models {:?}, wbits {:?}, eval every {eval_every})",
+        models, wbits
+    );
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for ci in 0..conns {
+        let (addr, models, wbits) = (addr.clone(), Arc::clone(&models),
+                                     Arc::clone(&wbits));
+        let (hist, busy, errors, done) =
+            (Arc::clone(&hist), Arc::clone(&busy), Arc::clone(&errors),
+             Arc::clone(&done));
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(seed + ci as u64);
+            let Ok(mut client) = server::Client::connect(&addr) else {
+                errors.fetch_add(reqs as u64, Ordering::Relaxed);
+                return;
+            };
+            for i in 0..reqs {
+                let model = models[rng.below(models.len())].clone();
+                let wb = wbits[rng.below(wbits.len())];
+                let req = if eval_every > 0 && (i + 1) % eval_every == 0 {
+                    Json::obj()
+                        .set("cmd", "eval")
+                        .set("model", model)
+                        .set("wbits", wb)
+                        .set("samples", samples)
+                } else {
+                    Json::obj()
+                        .set("cmd", "quantize")
+                        .set("model", model)
+                        .set("wbits", wb)
+                };
+                let rt = std::time::Instant::now();
+                match client.call(&req) {
+                    Ok(resp) => {
+                        let ok = matches!(resp.get("ok"),
+                                          Some(Json::Bool(true)));
+                        if ok {
+                            // Only successful responses feed the latency
+                            // quantiles / req-s figures; a busy rejection
+                            // returns in microseconds and would drag p50
+                            // down exactly when the server is overloaded.
+                            hist.record_ms(rt.elapsed().as_secs_f64() * 1e3);
+                            done.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            let is_busy = resp
+                                .get("error")
+                                .and_then(|e| e.as_str().ok())
+                                .map(|e| e == "busy")
+                                .unwrap_or(false);
+                            if is_busy {
+                                busy.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let stats1 = probe.call(&Json::parse(r#"{"cmd":"stats"}"#)?)?;
+    let (h1, m1, s1) = cache_counts(&stats1)?;
+    let (hits, misses, shared) = (h1 - h0, m1 - m0, s1 - s0);
+    let lookups = hits + misses + shared;
+    let hit_rate = if lookups > 0.0 {
+        (hits + shared) / lookups * 100.0
+    } else {
+        0.0
+    };
+
+    let n = done.load(Ordering::Relaxed);
+    println!("  completed  : {n} ok responses in {wall_s:.2} s  ({:.1} req/s)",
+             n as f64 / wall_s.max(1e-9));
+    println!(
+        "  latency    : p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms",
+        hist.quantile_ms(0.50),
+        hist.quantile_ms(0.95),
+        hist.quantile_ms(0.99),
+        hist.max_ms()
+    );
+    println!(
+        "  cache      : {hit_rate:.1}% hit-rate (hits {hits:.0}, shared {shared:.0}, misses {misses:.0})"
+    );
+    println!(
+        "  rejected   : {} busy, {} errors",
+        busy.load(Ordering::Relaxed),
+        errors.load(Ordering::Relaxed)
+    );
+
+    if let Some(handle) = server {
+        let _ = probe.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);
+        handle.join();
+    }
+    Ok(())
 }

@@ -1,0 +1,236 @@
+//! LRU cache of quantized artifacts keyed by (model, wbits, abits, method).
+//!
+//! Entries hold the dequantized [`Params`], the activation ranges (when
+//! abits > 0) and the per-layer [`QuantReport`], so a cache hit answers
+//! both `quantize` and `eval` without re-running SQuant.  Eviction is
+//! least-recently-used, bounded by an entry cap *and* a byte budget
+//! (quantized Params for the zoo models run to megabytes each).
+//!
+//! Recency is a monotonic tick per entry; eviction scans for the minimum
+//! tick — O(n) per eviction, which is fine at serving cache sizes (tens of
+//! entries) and keeps the structure a single flat map.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::sync::Arc;
+
+use super::QuantMethod;
+use crate::coordinator::QuantReport;
+use crate::nn::engine::ActQuant;
+use crate::nn::Params;
+
+/// Cache key: everything that changes the quantized artifact.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct QuantKey {
+    pub model: String,
+    pub wbits: usize,
+    pub abits: usize,
+    pub method: QuantMethod,
+}
+
+impl QuantKey {
+    pub fn label(&self) -> String {
+        format!(
+            "{}:w{}a{}:{}",
+            self.model, self.wbits, self.abits, self.method.label()
+        )
+    }
+}
+
+/// One cached quantization result.
+pub struct CacheEntry {
+    pub params: Params,
+    pub act: Option<ActQuant>,
+    pub report: QuantReport,
+    /// Approximate heap footprint (tensor payloads).
+    pub bytes: usize,
+}
+
+/// Approximate byte footprint of a parameter set (f32 payload + map slack).
+pub fn params_bytes(p: &Params) -> usize {
+    p.values().map(|t| t.data.len() * 4 + 64).sum()
+}
+
+struct Inner {
+    map: HashMap<QuantKey, (Arc<CacheEntry>, u64)>,
+    tick: u64,
+    bytes: usize,
+    evictions: u64,
+}
+
+/// Thread-safe LRU cache (single mutex; all operations are O(1) except
+/// eviction scans).
+pub struct Cache {
+    inner: Mutex<Inner>,
+    cap: usize,
+    byte_budget: usize,
+}
+
+impl Cache {
+    pub fn new(cap: usize, byte_budget: usize) -> Cache {
+        Cache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                bytes: 0,
+                evictions: 0,
+            }),
+            cap,
+            byte_budget,
+        }
+    }
+
+    /// Look up and mark as most-recently-used.
+    pub fn get(&self, key: &QuantKey) -> Option<Arc<CacheEntry>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.get_mut(key).map(|(entry, t)| {
+            *t = tick;
+            Arc::clone(entry)
+        })
+    }
+
+    /// Presence check that does NOT touch recency (used by `warm`).
+    pub fn contains(&self, key: &QuantKey) -> bool {
+        self.inner.lock().unwrap().map.contains_key(key)
+    }
+
+    /// Insert (or replace), then evict LRU entries until both the entry cap
+    /// and the byte budget hold.  Entries larger than the whole budget are
+    /// not cached at all.
+    pub fn put(&self, key: QuantKey, entry: Arc<CacheEntry>) {
+        if self.cap == 0 || entry.bytes > self.byte_budget {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let added = entry.bytes;
+        if let Some((old, _)) = inner.map.insert(key, (entry, tick)) {
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += added;
+        while inner.map.len() > self.cap || inner.bytes > self.byte_budget {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|entry| entry.1 .1)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            if let Some((gone, _)) = inner.map.remove(&victim) {
+                inner.bytes -= gone.bytes;
+                inner.evictions += 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn byte_budget(&self) -> usize {
+        self.byte_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn key(name: &str) -> QuantKey {
+        QuantKey {
+            model: name.to_string(),
+            wbits: 4,
+            abits: 0,
+            method: QuantMethod::Squant { enable_k: true, enable_c: true },
+        }
+    }
+
+    fn entry(floats: usize) -> Arc<CacheEntry> {
+        let mut params = Params::new();
+        params.insert("w".to_string(), Tensor::zeros(&[floats]));
+        let bytes = params_bytes(&params);
+        Arc::new(CacheEntry {
+            params,
+            act: None,
+            report: QuantReport { layers: Vec::new(), total_ms: 0.0, wall_ms: 0.0 },
+            bytes,
+        })
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let cache = Cache::new(2, usize::MAX);
+        cache.put(key("a"), entry(4));
+        cache.put(key("b"), entry(4));
+        // Touch "a" so "b" becomes the LRU victim.
+        assert!(cache.get(&key("a")).is_some());
+        cache.put(key("c"), entry(4));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(&key("a")));
+        assert!(cache.contains(&key("c")));
+        assert!(!cache.contains(&key("b")));
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn byte_budget_evicts() {
+        // Each entry: 4*100 + 64 = 464 bytes.  Budget fits two, not three.
+        let cache = Cache::new(16, 1000);
+        cache.put(key("a"), entry(100));
+        cache.put(key("b"), entry(100));
+        assert_eq!(cache.len(), 2);
+        cache.put(key("c"), entry(100));
+        assert_eq!(cache.len(), 2);
+        assert!(!cache.contains(&key("a")), "oldest entry evicted");
+        assert!(cache.bytes() <= 1000);
+    }
+
+    #[test]
+    fn oversized_entry_not_cached() {
+        let cache = Cache::new(16, 100);
+        cache.put(key("big"), entry(1000));
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn replace_same_key_updates_bytes() {
+        let cache = Cache::new(4, usize::MAX);
+        cache.put(key("a"), entry(10));
+        let b1 = cache.bytes();
+        cache.put(key("a"), entry(20));
+        assert_eq!(cache.len(), 1);
+        assert!(cache.bytes() > b1);
+        cache.put(key("a"), entry(10));
+        assert_eq!(cache.bytes(), b1);
+    }
+
+    #[test]
+    fn contains_does_not_bump_recency() {
+        let cache = Cache::new(2, usize::MAX);
+        cache.put(key("a"), entry(4));
+        cache.put(key("b"), entry(4));
+        // `contains` must not rescue "a" from eviction.
+        assert!(cache.contains(&key("a")));
+        cache.put(key("c"), entry(4));
+        assert!(!cache.contains(&key("a")));
+    }
+}

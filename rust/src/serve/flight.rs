@@ -1,0 +1,177 @@
+//! Single-flight deduplication: N concurrent requests for the same key
+//! share one computation.
+//!
+//! The first caller to [`Flight::lead_or_wait`] for a key becomes the
+//! *leader* and must eventually call [`Flight::complete`] (with a success
+//! or an error value — errors propagate to waiters too, so a failed leader
+//! never strands them).  Every caller that arrives while the key is in
+//! flight blocks on the slot's condvar and receives a clone of the
+//! leader's result.  `complete` removes the key, so later requests go back
+//! through the cache / recompute path.
+//!
+//! Lock order: the registry mutex is never held while a slot mutex is
+//! held, so there is no ordering cycle.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Slot<V> {
+    val: Mutex<Option<V>>,
+    cv: Condvar,
+}
+
+impl<V> Slot<V> {
+    fn new() -> Slot<V> {
+        Slot { val: Mutex::new(None), cv: Condvar::new() }
+    }
+}
+
+/// What a caller got back from [`Flight::lead_or_wait`].
+pub enum Role<V> {
+    /// Caller owns the computation and must call [`Flight::complete`].
+    Leader,
+    /// Another caller computed it; here is a clone of the result.
+    Shared(V),
+}
+
+/// Per-key in-flight computation registry.
+pub struct Flight<K, V> {
+    inner: Mutex<HashMap<K, Arc<Slot<V>>>>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Default for Flight<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Flight<K, V> {
+    pub fn new() -> Flight<K, V> {
+        Flight { inner: Mutex::new(HashMap::new()) }
+    }
+
+    /// Number of keys currently being computed.
+    pub fn in_flight(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Become the leader for `key`, or block until the current leader
+    /// completes and return its result.
+    pub fn lead_or_wait(&self, key: &K) -> Role<V> {
+        let slot = {
+            let mut map = self.inner.lock().unwrap();
+            match map.get(key) {
+                Some(slot) => Arc::clone(slot),
+                None => {
+                    map.insert(key.clone(), Arc::new(Slot::new()));
+                    return Role::Leader;
+                }
+            }
+        };
+        let mut guard = slot.val.lock().unwrap();
+        while guard.is_none() {
+            guard = slot.cv.wait(guard).unwrap();
+        }
+        Role::Shared(guard.as_ref().unwrap().clone())
+    }
+
+    /// Become the leader for `key` without blocking; returns false if the
+    /// key is already in flight (used by the `warm` prefetch verb).
+    pub fn try_lead(&self, key: &K) -> bool {
+        let mut map = self.inner.lock().unwrap();
+        if map.contains_key(key) {
+            false
+        } else {
+            map.insert(key.clone(), Arc::new(Slot::new()));
+            true
+        }
+    }
+
+    /// Publish the leader's result: wakes every waiter and retires the key.
+    pub fn complete(&self, key: &K, val: V) {
+        let slot = self.inner.lock().unwrap().remove(key);
+        if let Some(slot) = slot {
+            *slot.val.lock().unwrap() = Some(val);
+            slot.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+    use std::time::Duration;
+
+    /// Two waiter threads, one computation: the main thread leads, the
+    /// waiters block, and everyone sees the single computed value.
+    #[test]
+    fn two_threads_one_compute() {
+        let flight: Arc<Flight<String, Result<usize, String>>> =
+            Arc::new(Flight::new());
+        let computes = Arc::new(AtomicUsize::new(0));
+        let key = "model:w4".to_string();
+
+        match flight.lead_or_wait(&key) {
+            Role::Leader => computes.fetch_add(1, Ordering::SeqCst),
+            Role::Shared(_) => panic!("first caller must lead"),
+        };
+        assert_eq!(flight.in_flight(), 1);
+
+        let mut waiters = Vec::new();
+        for _ in 0..2 {
+            let f = Arc::clone(&flight);
+            let c = Arc::clone(&computes);
+            let k = key.clone();
+            waiters.push(thread::spawn(move || match f.lead_or_wait(&k) {
+                Role::Leader => {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    f.complete(&k, Ok(0));
+                    0
+                }
+                Role::Shared(v) => v.unwrap(),
+            }));
+        }
+        // Let the waiters reach the condvar, then publish.
+        thread::sleep(Duration::from_millis(50));
+        flight.complete(&key, Ok(42));
+
+        for w in waiters {
+            assert_eq!(w.join().unwrap(), 42);
+        }
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "exactly one compute");
+        assert_eq!(flight.in_flight(), 0);
+    }
+
+    #[test]
+    fn errors_propagate_to_waiters() {
+        let flight: Arc<Flight<u32, Result<u32, String>>> = Arc::new(Flight::new());
+        assert!(matches!(flight.lead_or_wait(&7), Role::Leader));
+        let f = Arc::clone(&flight);
+        let w = thread::spawn(move || match f.lead_or_wait(&7) {
+            Role::Leader => panic!("should wait on the leader"),
+            Role::Shared(v) => v,
+        });
+        thread::sleep(Duration::from_millis(20));
+        flight.complete(&7, Err("boom".to_string()));
+        assert_eq!(w.join().unwrap(), Err("boom".to_string()));
+    }
+
+    #[test]
+    fn try_lead_is_non_blocking() {
+        let flight: Flight<u32, u32> = Flight::new();
+        assert!(flight.try_lead(&1));
+        assert!(!flight.try_lead(&1));
+        flight.complete(&1, 5);
+        assert!(flight.try_lead(&1), "key retired after complete");
+    }
+
+    #[test]
+    fn complete_without_leader_is_noop() {
+        let flight: Flight<u32, u32> = Flight::new();
+        flight.complete(&9, 1);
+        assert_eq!(flight.in_flight(), 0);
+    }
+}

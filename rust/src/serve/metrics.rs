@@ -1,0 +1,232 @@
+//! Serving metrics: lock-free request counters and fixed log-scale latency
+//! histograms, surfaced through the `{"cmd":"stats"}` protocol verb.
+//!
+//! Histograms use power-of-two microsecond buckets (bucket `i` covers
+//! `[2^i, 2^{i+1})` µs), so recording is one atomic increment and the
+//! p50/p95/p99 estimates are exact to within a factor of two — plenty for
+//! a serving dashboard, and no locks on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Buckets cover 1 µs .. ~2^27 µs (~134 s); slower requests saturate the
+/// top bucket.
+const NBUCKETS: usize = 28;
+
+/// Fixed log2-scale latency histogram (microsecond resolution).
+pub struct Histogram {
+    buckets: [AtomicU64; NBUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            (63 - us.leading_zeros() as usize).min(NBUCKETS - 1)
+        }
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn record_ms(&self, ms: f64) {
+        self.record_us((ms * 1e3).max(0.0) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Quantile estimate in ms (geometric midpoint of the hit bucket).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for i in 0..NBUCKETS {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << i) as f64 * 1.5 / 1e3;
+            }
+        }
+        self.max_ms()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.count() as usize)
+            .set("p50_ms", self.quantile_ms(0.50))
+            .set("p95_ms", self.quantile_ms(0.95))
+            .set("p99_ms", self.quantile_ms(0.99))
+            .set("mean_ms", self.mean_ms())
+            .set("max_ms", self.max_ms())
+    }
+}
+
+/// Protocol verbs tracked individually; anything else lands in "other".
+pub const CMDS: [&str; 8] =
+    ["ping", "models", "quantize", "eval", "warm", "stats", "shutdown", "other"];
+
+/// All serving counters + latency histograms.  Every field is atomic so the
+/// request hot path never takes a lock for accounting.
+pub struct Metrics {
+    start: Instant,
+    by_cmd: [AtomicU64; CMDS.len()],
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    /// Requests that piggy-backed on an identical in-flight computation.
+    pub flight_shared: AtomicU64,
+    pub rejected_busy: AtomicU64,
+    pub errors: AtomicU64,
+    pub lat_all: Histogram,
+    pub lat_quantize: Histogram,
+    pub lat_eval: Histogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            start: Instant::now(),
+            by_cmd: std::array::from_fn(|_| AtomicU64::new(0)),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            flight_shared: AtomicU64::new(0),
+            rejected_busy: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            lat_all: Histogram::new(),
+            lat_quantize: Histogram::new(),
+            lat_eval: Histogram::new(),
+        }
+    }
+
+    pub fn count_cmd(&self, cmd: &str) {
+        let idx = CMDS
+            .iter()
+            .position(|c| *c == cmd)
+            .unwrap_or(CMDS.len() - 1);
+        self.by_cmd[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn requests_total(&self) -> u64 {
+        self.by_cmd.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut cmds = Json::obj();
+        for (i, name) in CMDS.iter().enumerate() {
+            cmds = cmds.set(name, self.by_cmd[i].load(Ordering::Relaxed) as usize);
+        }
+        Json::obj()
+            .set("uptime_s", self.uptime_s())
+            .set("requests_total", self.requests_total() as usize)
+            .set("requests", cmds)
+            .set("errors", self.errors.load(Ordering::Relaxed) as usize)
+            .set(
+                "latency",
+                Json::obj()
+                    .set("all", self.lat_all.to_json())
+                    .set("quantize", self.lat_quantize.to_json())
+                    .set("eval", self.lat_eval.to_json()),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(1024), 10);
+        assert_eq!(Histogram::bucket_of(u64::MAX), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_monotonic() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 40, 80, 5000, 5000, 5000, 100_000] {
+            h.record_us(us);
+        }
+        let p50 = h.quantile_ms(0.50);
+        let p95 = h.quantile_ms(0.95);
+        let p99 = h.quantile_ms(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert_eq!(h.count(), 8);
+        assert!(h.mean_ms() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn cmd_counting() {
+        let m = Metrics::new();
+        m.count_cmd("ping");
+        m.count_cmd("quantize");
+        m.count_cmd("quantize");
+        m.count_cmd("nope");
+        assert_eq!(m.requests_total(), 4);
+        let j = m.to_json();
+        let reqs = j.req("requests").unwrap();
+        assert_eq!(reqs.req("quantize").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(reqs.req("other").unwrap().as_usize().unwrap(), 1);
+    }
+}

@@ -1,0 +1,746 @@
+//! The serving subsystem behind the on-the-fly TCP service.
+//!
+//! Layering (request → response):
+//!
+//! ```text
+//!   coordinator::server (line-JSON protocol)
+//!        └── serve::Engine::handle
+//!              ├── cache   — LRU of quantized Params + report, keyed by
+//!              │             (model, wbits, abits, method)
+//!              ├── flight  — single-flight dedup: N concurrent identical
+//!              │             requests share one SQuant run
+//!              ├── sched   — bounded queue + fixed worker pool; full ⇒
+//!              │             {"ok":false,"error":"busy","retry_ms":...}
+//!              └── metrics — counters + log-scale latency histograms,
+//!                            exposed via {"cmd":"stats"}
+//! ```
+//!
+//! The engine owns all heavy compute: quantization *and* accuracy
+//! evaluation run as scheduler jobs, so total CPU pressure is bounded by
+//! `--workers` no matter how many connections are open.
+
+pub mod cache;
+pub mod flight;
+pub mod metrics;
+pub mod sched;
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::baselines::rtn;
+use crate::coordinator::server::ModelStore;
+use crate::coordinator::{self, LayerReport, QuantReport};
+use crate::eval;
+use crate::io::dataset::Dataset;
+use crate::nn::actrange::data_free_ranges;
+use crate::quant::ScaleMethod;
+use crate::squant::SquantOpts;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::pool::default_threads;
+
+use cache::{params_bytes, Cache, CacheEntry, QuantKey};
+use flight::{Flight, Role};
+use metrics::Metrics;
+use sched::{Scheduler, Submit};
+
+/// Serving configuration (CLI: `--workers`, `--queue-depth`, `--cache-cap`,
+/// `--cache-mb`).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineCfg {
+    /// Worker threads executing quantize/eval jobs.
+    pub workers: usize,
+    /// Jobs allowed to wait beyond the running ones before `busy`.
+    pub queue_depth: usize,
+    /// Max cached artifacts (entries).
+    pub cache_cap: usize,
+    /// Max cached artifact payload (megabytes).
+    pub cache_mb: usize,
+}
+
+impl Default for EngineCfg {
+    fn default() -> Self {
+        EngineCfg {
+            workers: default_threads(),
+            queue_depth: 32,
+            cache_cap: 32,
+            cache_mb: 256,
+        }
+    }
+}
+
+/// Serving-path quantization methods (the on-the-fly family; calibration
+/// baselines stay CLI-only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantMethod {
+    Squant { enable_k: bool, enable_c: bool },
+    Rtn,
+}
+
+impl QuantMethod {
+    /// Canonical wire name (the CLI/protocol `method` string).
+    pub fn label(&self) -> &'static str {
+        match self {
+            QuantMethod::Squant { enable_k: true, enable_c: true } => "squant",
+            QuantMethod::Squant { enable_k: false, enable_c: false } => {
+                "squant-e"
+            }
+            QuantMethod::Squant { enable_k: true, enable_c: false } => {
+                "squant-ek"
+            }
+            QuantMethod::Squant { enable_k: false, enable_c: true } => {
+                "squant-ec"
+            }
+            QuantMethod::Rtn => "rtn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<QuantMethod, String> {
+        Ok(match s {
+            "squant" => QuantMethod::Squant { enable_k: true, enable_c: true },
+            "squant-e" => QuantMethod::Squant { enable_k: false, enable_c: false },
+            "squant-ek" => QuantMethod::Squant { enable_k: true, enable_c: false },
+            "squant-ec" => QuantMethod::Squant { enable_k: false, enable_c: true },
+            "rtn" => QuantMethod::Rtn,
+            other => {
+                return Err(format!(
+                    "unknown serving method '{other}' \
+                     (expected squant|squant-e|squant-ek|squant-ec|rtn)"
+                ))
+            }
+        })
+    }
+}
+
+/// Serving-layer error, cloneable so single-flight can fan it out.
+#[derive(Clone, Debug)]
+pub enum ServeError {
+    /// Queue full — retry after the hinted backoff.
+    Busy { retry_ms: u64 },
+    Failed(String),
+}
+
+impl ServeError {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServeError::Busy { retry_ms } => Json::obj()
+                .set("ok", false)
+                .set("error", "busy")
+                .set("retry_ms", *retry_ms as usize),
+            ServeError::Failed(msg) => {
+                Json::obj().set("ok", false).set("error", msg.as_str())
+            }
+        }
+    }
+}
+
+/// Where a quantized artifact came from (metrics + the `cached` flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// Straight out of the LRU cache.
+    Hit,
+    /// Joined an identical in-flight computation.
+    Shared,
+    /// Computed fresh by this request.
+    Computed,
+}
+
+type QuantOutcome = Result<Arc<CacheEntry>, ServeError>;
+
+/// The serving engine: model store + cache + single-flight + scheduler +
+/// metrics.  Shared as `Arc<Engine>` between all connection threads.
+pub struct Engine {
+    store: Arc<ModelStore>,
+    cache: Cache,
+    flight: Flight<QuantKey, QuantOutcome>,
+    sched: Scheduler,
+    pub metrics: Metrics,
+    /// Total hardware threads; each job's internal parallelism is sized
+    /// from this and the current load (see [`Engine::job_threads`]).
+    machine_threads: usize,
+}
+
+impl Engine {
+    pub fn new(store: Arc<ModelStore>, cfg: EngineCfg) -> Arc<Engine> {
+        let workers = cfg.workers.max(1);
+        Arc::new(Engine {
+            store,
+            cache: Cache::new(cfg.cache_cap, cfg.cache_mb.saturating_mul(1 << 20)),
+            flight: Flight::new(),
+            sched: Scheduler::new(workers, cfg.queue_depth),
+            metrics: Metrics::new(),
+            machine_threads: default_threads(),
+        })
+    }
+
+    /// Per-job internal parallelism, adaptive to load: an idle server gives
+    /// a lone request the whole machine (matching the pre-subsystem
+    /// latency); under concurrent load the cores are split between the
+    /// admitted jobs.
+    fn job_threads(&self) -> usize {
+        (self.machine_threads / self.sched.pending().max(1)).max(1)
+    }
+
+    pub fn store(&self) -> &ModelStore {
+        &self.store
+    }
+
+    /// Dispatch one protocol request (everything except `shutdown`, which
+    /// needs the server's stop flag).
+    pub fn handle(self: &Arc<Self>, req: &Json) -> Json {
+        let cmd = req
+            .get("cmd")
+            .and_then(|c| c.as_str().ok())
+            .unwrap_or("")
+            .to_string();
+        self.metrics.count_cmd(&cmd);
+        let t0 = Instant::now();
+        let resp = match cmd.as_str() {
+            "ping" => Json::obj()
+                .set("ok", true)
+                .set("pong", true)
+                .set("uptime_s", self.metrics.uptime_s()),
+            "models" => {
+                let mut names: Vec<String> =
+                    self.store.models.keys().cloned().collect();
+                names.sort();
+                Json::obj().set("ok", true).set(
+                    "models",
+                    Json::Arr(names.into_iter().map(Json::Str).collect()),
+                )
+            }
+            "quantize" => self.do_quantize(req),
+            "eval" => self.do_eval(req),
+            "warm" => self.do_warm(req),
+            "stats" => self.stats_json(),
+            other => Json::obj()
+                .set("ok", false)
+                .set("error", format!("unknown cmd '{other}'")),
+        };
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.lat_all.record_ms(ms);
+        match cmd.as_str() {
+            "quantize" => self.metrics.lat_quantize.record_ms(ms),
+            "eval" => self.metrics.lat_eval.record_ms(ms),
+            _ => {}
+        }
+        if matches!(resp.get("ok"), Some(Json::Bool(false))) {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        resp
+    }
+
+    // ---- request handlers --------------------------------------------------
+
+    fn key_from(&self, req: &Json) -> Result<QuantKey, ServeError> {
+        let model = req
+            .get("model")
+            .and_then(|m| m.as_str().ok())
+            .map(String::from)
+            .ok_or_else(|| ServeError::Failed("missing 'model'".into()))?;
+        if !self.store.models.contains_key(&model) {
+            return Err(ServeError::Failed(format!("unknown model '{model}'")));
+        }
+        let wbits = req.get("wbits").and_then(|b| b.as_usize().ok()).unwrap_or(8);
+        if !(2..=16).contains(&wbits) {
+            return Err(ServeError::Failed(format!("wbits {wbits} out of range 2..=16")));
+        }
+        let abits = req.get("abits").and_then(|b| b.as_usize().ok()).unwrap_or(0);
+        if abits > 16 {
+            return Err(ServeError::Failed(format!("abits {abits} out of range 0..=16")));
+        }
+        let method = QuantMethod::parse(
+            req.get("method").and_then(|m| m.as_str().ok()).unwrap_or("squant"),
+        )
+        .map_err(ServeError::Failed)?;
+        Ok(QuantKey { model, wbits, abits, method })
+    }
+
+    fn do_quantize(self: &Arc<Self>, req: &Json) -> Json {
+        let key = match self.key_from(req) {
+            Ok(k) => k,
+            Err(e) => return e.to_json(),
+        };
+        let t0 = Instant::now();
+        match self.quantized(&key) {
+            Ok((entry, src)) => {
+                let r = &entry.report;
+                Json::obj()
+                    .set("ok", true)
+                    .set("model", key.model.as_str())
+                    .set("wbits", key.wbits)
+                    .set("method", key.method.label())
+                    .set("layers", r.layers.len())
+                    .set("total_ms", r.total_ms)
+                    .set("wall_ms", r.wall_ms)
+                    .set("avg_layer_ms", r.avg_layer_ms())
+                    .set(
+                        "flips",
+                        r.layers
+                            .iter()
+                            .map(|l| l.flips_k + l.flips_c)
+                            .sum::<usize>(),
+                    )
+                    .set("cached", matches!(src, Source::Hit | Source::Shared))
+                    .set("served_ms", t0.elapsed().as_secs_f64() * 1e3)
+            }
+            Err(e) => e.to_json(),
+        }
+    }
+
+    fn do_eval(self: &Arc<Self>, req: &Json) -> Json {
+        let key = match self.key_from(req) {
+            Ok(k) => k,
+            Err(e) => return e.to_json(),
+        };
+        let samples =
+            req.get("samples").and_then(|b| b.as_usize().ok()).unwrap_or(512);
+        let batch = req.get("batch").and_then(|b| b.as_usize().ok()).unwrap_or(64);
+        let t0 = Instant::now();
+        let (entry, src) = match self.quantized(&key) {
+            Ok(x) => x,
+            Err(e) => return e.to_json(),
+        };
+        // Accuracy also runs under the bounded worker pool, so eval traffic
+        // cannot oversubscribe the machine either.
+        let (tx, rx) = mpsc::channel();
+        let eng = Arc::clone(self);
+        let k = key.clone();
+        let entry2 = Arc::clone(&entry);
+        match self.sched.try_submit(move || {
+            let _ = tx.send(eng.run_accuracy(&k, &entry2, samples, batch));
+        }) {
+            Submit::Busy { retry_ms } => {
+                self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                ServeError::Busy { retry_ms }.to_json()
+            }
+            Submit::Accepted => match rx.recv() {
+                Ok(Ok((acc, n))) => Json::obj()
+                    .set("ok", true)
+                    .set("model", key.model.as_str())
+                    .set("top1", acc)
+                    .set("samples", n)
+                    .set("wbits", key.wbits)
+                    .set("abits", key.abits)
+                    .set("quant_ms", entry.report.wall_ms)
+                    .set("cached", matches!(src, Source::Hit | Source::Shared))
+                    .set("served_ms", t0.elapsed().as_secs_f64() * 1e3),
+                Ok(Err(msg)) => ServeError::Failed(msg).to_json(),
+                Err(_) => ServeError::Failed("eval worker dropped".into()).to_json(),
+            },
+        }
+    }
+
+    /// `{"cmd":"warm","model":...,"wbits":...}` — prefetch into the cache
+    /// without blocking the caller on the computation.
+    fn do_warm(self: &Arc<Self>, req: &Json) -> Json {
+        let key = match self.key_from(req) {
+            Ok(k) => k,
+            Err(e) => return e.to_json(),
+        };
+        if self.cache.contains(&key) {
+            return Json::obj()
+                .set("ok", true)
+                .set("key", key.label())
+                .set("cached", true);
+        }
+        if !self.flight.try_lead(&key) {
+            return Json::obj()
+                .set("ok", true)
+                .set("key", key.label())
+                .set("queued", true)
+                .set("inflight", true);
+        }
+        let eng = Arc::clone(self);
+        let k = key.clone();
+        match self.sched.try_submit(move || {
+            let _ = eng.compute_and_finish(&k);
+        }) {
+            Submit::Busy { retry_ms } => {
+                let err = ServeError::Busy { retry_ms };
+                self.flight.complete(&key, Err(err.clone()));
+                self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                err.to_json()
+            }
+            Submit::Accepted => {
+                self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                Json::obj()
+                    .set("ok", true)
+                    .set("key", key.label())
+                    .set("queued", true)
+            }
+        }
+    }
+
+    fn stats_json(&self) -> Json {
+        Json::obj()
+            .set("ok", true)
+            .set("metrics", self.metrics.to_json())
+            .set(
+                "cache",
+                Json::obj()
+                    .set("hits", self.metrics.cache_hits.load(Ordering::Relaxed) as usize)
+                    .set(
+                        "misses",
+                        self.metrics.cache_misses.load(Ordering::Relaxed) as usize,
+                    )
+                    .set(
+                        "shared",
+                        self.metrics.flight_shared.load(Ordering::Relaxed) as usize,
+                    )
+                    .set("entries", self.cache.len())
+                    .set("bytes", self.cache.bytes())
+                    .set("evictions", self.cache.evictions() as usize)
+                    .set("cap", self.cache.cap())
+                    .set("byte_budget", self.cache.byte_budget()),
+            )
+            .set(
+                "sched",
+                Json::obj()
+                    .set("workers", self.sched.workers())
+                    .set("queue_depth", self.sched.queue_depth())
+                    .set("pending", self.sched.pending())
+                    .set(
+                        "rejected_busy",
+                        self.metrics.rejected_busy.load(Ordering::Relaxed) as usize,
+                    ),
+            )
+            .set(
+                "flight",
+                Json::obj().set("in_flight", self.flight.in_flight()),
+            )
+    }
+
+    // ---- quantization pipeline ---------------------------------------------
+
+    /// Get the quantized artifact for `key`: cache → single-flight →
+    /// scheduled compute, in that order.
+    pub fn quantized(
+        self: &Arc<Self>,
+        key: &QuantKey,
+    ) -> Result<(Arc<CacheEntry>, Source), ServeError> {
+        if let Some(e) = self.cache.get(key) {
+            self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((e, Source::Hit));
+        }
+        match self.flight.lead_or_wait(key) {
+            Role::Shared(res) => {
+                // Only a successfully shared artifact counts toward the
+                // reuse stats; fanned-out busy/failure results must not
+                // inflate the hit-rate precisely when the server degrades.
+                if res.is_ok() {
+                    self.metrics.flight_shared.fetch_add(1, Ordering::Relaxed);
+                }
+                res.map(|e| (e, Source::Shared))
+            }
+            Role::Leader => {
+                // A completed leader may have filled the cache while we
+                // raced for leadership.
+                if let Some(e) = self.cache.get(key) {
+                    self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    self.flight.complete(key, Ok(Arc::clone(&e)));
+                    return Ok((e, Source::Hit));
+                }
+                let (tx, rx) = mpsc::channel();
+                let eng = Arc::clone(self);
+                let k = key.clone();
+                match self.sched.try_submit(move || {
+                    let _ = tx.send(eng.compute_and_finish(&k));
+                }) {
+                    Submit::Busy { retry_ms } => {
+                        let err = ServeError::Busy { retry_ms };
+                        self.flight.complete(key, Err(err.clone()));
+                        self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                        Err(err)
+                    }
+                    Submit::Accepted => {
+                        // Only an admitted compute counts as a miss;
+                        // busy-rejected leaders never ran anything.
+                        self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                        match rx.recv() {
+                            Ok(res) => res.map(|e| (e, Source::Computed)),
+                            Err(_) => {
+                                // The worker died before sending (a panic
+                                // inside the job): release any waiters
+                                // instead of stranding the key forever.
+                                let err = ServeError::Failed(
+                                    "quantize worker dropped".into(),
+                                );
+                                self.flight.complete(key, Err(err.clone()));
+                                Err(err)
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Worker-side: compute, publish to cache, release single-flight
+    /// waiters.  Cache fill happens before `complete` so no request can
+    /// observe "not in flight, not cached" for a finished key.  Compute
+    /// panics are converted to errors so `complete` always runs — a
+    /// stranded flight key would block every future request for it (warm
+    /// submits this without a receive-side recovery path).
+    fn compute_and_finish(&self, key: &QuantKey) -> QuantOutcome {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.compute_entry(key)
+        }))
+        .unwrap_or_else(|_| {
+            Err(ServeError::Failed(format!(
+                "quantize job panicked for {}", key.label()
+            )))
+        });
+        if let Ok(entry) = &res {
+            self.cache.put(key.clone(), Arc::clone(entry));
+        }
+        self.flight.complete(key, res.clone());
+        res
+    }
+
+    fn compute_entry(&self, key: &QuantKey) -> QuantOutcome {
+        let (graph, params) = self
+            .store
+            .models
+            .get(&key.model)
+            .ok_or_else(|| ServeError::Failed(format!("unknown model '{}'", key.model)))?;
+        let t0 = Instant::now();
+        let (qparams, report) = match key.method {
+            QuantMethod::Squant { enable_k, enable_c } => {
+                let opts = SquantOpts { bits: key.wbits, enable_k, enable_c };
+                coordinator::quantize_model(graph, params, opts, self.job_threads())
+            }
+            QuantMethod::Rtn => {
+                // baselines::rtn per layer, so the protocol's per-layer
+                // timing report holds for this method too (the whole-model
+                // baseline API has no per-layer timing).
+                let layers = graph.quant_layers();
+                let mut p = params.clone();
+                let mut reports = Vec::with_capacity(layers.len());
+                let mut total_ms = 0.0;
+                for layer in &layers {
+                    let lt = Instant::now();
+                    let w = &params[&layer.weight];
+                    let wq =
+                        rtn::quantize_layer(w, key.wbits, ScaleMethod::MaxAbs);
+                    p.insert(layer.weight.clone(), wq);
+                    let ms = lt.elapsed().as_secs_f64() * 1e3;
+                    total_ms += ms;
+                    reports.push(LayerReport {
+                        weight: layer.weight.clone(),
+                        m: layer.m,
+                        n: layer.n,
+                        k: layer.k,
+                        ms,
+                        flips_k: 0,
+                        flips_c: 0,
+                    });
+                }
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                (p, QuantReport { layers: reports, total_ms, wall_ms })
+            }
+        };
+        let act =
+            (key.abits > 0).then(|| data_free_ranges(graph, &qparams, key.abits));
+        let bytes = params_bytes(&qparams);
+        Ok(Arc::new(CacheEntry { params: qparams, act, report, bytes }))
+    }
+
+    fn run_accuracy(
+        &self,
+        key: &QuantKey,
+        entry: &CacheEntry,
+        samples: usize,
+        batch: usize,
+    ) -> Result<(f64, usize), String> {
+        let (graph, _) = self
+            .store
+            .models
+            .get(&key.model)
+            .ok_or_else(|| format!("unknown model '{}'", key.model))?;
+        let ds = self
+            .test_subset(samples)
+            .ok_or_else(|| "no test data loaded".to_string())?;
+        let n = ds.len();
+        let acc = eval::accuracy(
+            graph,
+            &entry.params,
+            entry.act.as_ref(),
+            &ds,
+            batch.max(1),
+            self.job_threads(),
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        Ok((acc, n))
+    }
+
+    /// First `samples` test images without cloning the whole set.
+    fn test_subset(&self, samples: usize) -> Option<Dataset> {
+        let total = self.store.test.len();
+        let n = samples.min(total);
+        if n == 0 {
+            return None;
+        }
+        let mut shape = self.store.test.images.shape.clone();
+        shape[0] = n;
+        let per: usize = shape[1..].iter().product();
+        Some(Dataset {
+            images: Tensor::from_vec(
+                &shape,
+                self.store.test.images.data[..n * per].to_vec(),
+            ),
+            labels: self.store.test.labels[..n].to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tiny_test_graph;
+    use std::collections::HashMap;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+    use std::time::Duration;
+
+    fn tiny_store() -> Arc<ModelStore> {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let mut models = HashMap::new();
+        models.insert("tiny".to_string(), (g, p));
+        let test = Dataset {
+            images: Tensor::zeros(&[8, 3, 8, 8]),
+            labels: vec![0; 8],
+        };
+        Arc::new(ModelStore { models, test })
+    }
+
+    fn cfg() -> EngineCfg {
+        EngineCfg { workers: 2, queue_depth: 8, cache_cap: 4, cache_mb: 64 }
+    }
+
+    fn quantize_req() -> Json {
+        Json::obj().set("cmd", "quantize").set("model", "tiny").set("wbits", 4usize)
+    }
+
+    #[test]
+    fn quantize_twice_hits_cache() {
+        let engine = Engine::new(tiny_store(), cfg());
+        let r1 = engine.handle(&quantize_req());
+        assert_eq!(r1.req("ok").unwrap(), &Json::Bool(true), "{}", r1.dump());
+        assert_eq!(r1.req("cached").unwrap(), &Json::Bool(false));
+        assert_eq!(r1.req("layers").unwrap().as_usize().unwrap(), 2);
+
+        let r2 = engine.handle(&quantize_req());
+        assert_eq!(r2.req("cached").unwrap(), &Json::Bool(true));
+
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let cache = stats.req("cache").unwrap();
+        assert_eq!(cache.req("hits").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(cache.req("misses").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(cache.req("entries").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn eval_reuses_quantize_cache() {
+        let engine = Engine::new(tiny_store(), cfg());
+        let r1 = engine.handle(&quantize_req());
+        assert_eq!(r1.req("ok").unwrap(), &Json::Bool(true), "{}", r1.dump());
+        let ev = Json::obj()
+            .set("cmd", "eval")
+            .set("model", "tiny")
+            .set("wbits", 4usize)
+            .set("samples", 8usize);
+        let r2 = engine.handle(&ev);
+        assert_eq!(r2.req("ok").unwrap(), &Json::Bool(true), "{}", r2.dump());
+        assert_eq!(r2.req("cached").unwrap(), &Json::Bool(true));
+        let top1 = r2.req("top1").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&top1));
+        assert_eq!(r2.req("samples").unwrap().as_usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn saturated_queue_returns_busy() {
+        let engine =
+            Engine::new(tiny_store(), EngineCfg { workers: 1, queue_depth: 0, ..cfg() });
+        // Occupy the single worker slot directly.
+        let release = Arc::new(AtomicBool::new(false));
+        let r2 = Arc::clone(&release);
+        assert!(!engine
+            .sched
+            .try_submit(move || {
+                while !r2.load(Ordering::SeqCst) {
+                    thread::sleep(Duration::from_millis(1));
+                }
+            })
+            .is_busy());
+
+        let resp = engine.handle(&quantize_req());
+        assert_eq!(resp.req("ok").unwrap(), &Json::Bool(false), "{}", resp.dump());
+        assert_eq!(resp.req("error").unwrap().as_str().unwrap(), "busy");
+        assert!(resp.req("retry_ms").unwrap().as_usize().unwrap() >= 25);
+
+        release.store(true, Ordering::SeqCst);
+        engine.sched.wait_idle();
+        let resp = engine.handle(&quantize_req());
+        assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true), "{}", resp.dump());
+
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let sched = stats.req("sched").unwrap();
+        assert_eq!(sched.req("rejected_busy").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn warm_prefetches_into_cache() {
+        let engine = Engine::new(tiny_store(), cfg());
+        let warm = Json::obj().set("cmd", "warm").set("model", "tiny").set("wbits", 4usize);
+        let r = engine.handle(&warm);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("queued").unwrap(), &Json::Bool(true));
+        engine.sched.wait_idle();
+
+        let r = engine.handle(&warm);
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(true));
+        let q = engine.handle(&quantize_req());
+        assert_eq!(q.req("cached").unwrap(), &Json::Bool(true));
+    }
+
+    #[test]
+    fn rtn_method_served_and_cached_separately() {
+        let engine = Engine::new(tiny_store(), cfg());
+        let req = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "tiny")
+            .set("wbits", 4usize)
+            .set("method", "rtn");
+        let r = engine.handle(&req);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(false));
+        // RTN reports real per-layer rows too (zero flips by definition).
+        assert_eq!(r.req("layers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(r.req("flips").unwrap().as_usize().unwrap(), 0);
+        // Different method ⇒ different cache key than "squant".
+        let r = engine.handle(&quantize_req());
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(false));
+        assert_eq!(engine.cache.len(), 2);
+    }
+
+    #[test]
+    fn bad_requests_are_rejected() {
+        let engine = Engine::new(tiny_store(), cfg());
+        for req in [
+            Json::obj().set("cmd", "quantize"), // missing model
+            Json::obj().set("cmd", "quantize").set("model", "nope"),
+            Json::obj().set("cmd", "quantize").set("model", "tiny").set("wbits", 1usize),
+            Json::obj()
+                .set("cmd", "quantize")
+                .set("model", "tiny")
+                .set("method", "gdfq"),
+            Json::obj().set("cmd", "frobnicate"),
+        ] {
+            let r = engine.handle(&req);
+            assert_eq!(r.req("ok").unwrap(), &Json::Bool(false), "{}", r.dump());
+        }
+        assert_eq!(engine.metrics.errors.load(Ordering::Relaxed), 5);
+    }
+}

@@ -1,0 +1,176 @@
+//! Bounded job scheduler: a fixed worker pool (reusing
+//! [`crate::util::pool::ThreadPool`]) fronted by an admission limit.
+//!
+//! Capacity = workers + queue depth.  [`Scheduler::try_submit`] reserves a
+//! slot with a CAS loop, so concurrent submitters can never overshoot; when
+//! the system is full it returns [`Submit::Busy`] immediately with a retry
+//! hint instead of queueing unboundedly — the serving layer turns that into
+//! `{"ok":false,"error":"busy","retry_ms":...}` backpressure.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::util::pool::ThreadPool;
+
+/// Admission result.
+#[derive(Debug)]
+pub enum Submit {
+    Accepted,
+    /// System full; suggested client backoff.
+    Busy { retry_ms: u64 },
+}
+
+impl Submit {
+    pub fn is_busy(&self) -> bool {
+        matches!(self, Submit::Busy { .. })
+    }
+}
+
+/// Decrements the in-system count when the job finishes — including on
+/// panic, so a crashing job cannot leak admission capacity.
+struct SlotGuard(Arc<AtomicUsize>);
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+pub struct Scheduler {
+    pool: ThreadPool,
+    workers: usize,
+    queue_depth: usize,
+    in_system: Arc<AtomicUsize>,
+}
+
+impl Scheduler {
+    pub fn new(workers: usize, queue_depth: usize) -> Scheduler {
+        let workers = workers.max(1);
+        Scheduler {
+            pool: ThreadPool::new(workers),
+            workers,
+            queue_depth,
+            in_system: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Jobs admitted but not yet finished (queued + running).
+    pub fn pending(&self) -> usize {
+        self.in_system.load(Ordering::SeqCst)
+    }
+
+    /// Max jobs in the system before backpressure kicks in.
+    pub fn capacity(&self) -> usize {
+        self.workers + self.queue_depth
+    }
+
+    /// Rough drain estimate for rejected clients: ~25 ms per queued job
+    /// ahead of them, clamped to [25, 2000] ms.
+    fn retry_hint(&self) -> u64 {
+        let queued = self.pending().saturating_sub(self.workers) as u64;
+        (25 * (queued + 1)).clamp(25, 2000)
+    }
+
+    /// Admit and run `f` on the pool, or reject with a busy hint.
+    pub fn try_submit<F: FnOnce() + Send + 'static>(&self, f: F) -> Submit {
+        let cap = self.capacity();
+        let mut cur = self.in_system.load(Ordering::SeqCst);
+        loop {
+            if cur >= cap {
+                return Submit::Busy { retry_ms: self.retry_hint() };
+            }
+            match self.in_system.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        let guard = SlotGuard(Arc::clone(&self.in_system));
+        self.pool.submit(move || {
+            let _guard = guard;
+            f();
+        });
+        Submit::Accepted
+    }
+
+    /// Block until every admitted job has finished (tests / shutdown).
+    pub fn wait_idle(&self) {
+        self.pool.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+    use std::time::Duration;
+
+    fn hold_job(release: &Arc<AtomicBool>) -> impl FnOnce() + Send + 'static {
+        let release = Arc::clone(release);
+        move || {
+            while !release.load(Ordering::SeqCst) {
+                thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let sched = Scheduler::new(1, 1); // capacity 2
+        let release = Arc::new(AtomicBool::new(false));
+        assert!(!sched.try_submit(hold_job(&release)).is_busy()); // running
+        assert!(!sched.try_submit(hold_job(&release)).is_busy()); // queued
+        match sched.try_submit(|| {}) {
+            Submit::Busy { retry_ms } => assert!(retry_ms >= 25),
+            Submit::Accepted => panic!("expected busy"),
+        }
+        assert_eq!(sched.pending(), 2);
+
+        release.store(true, Ordering::SeqCst);
+        sched.wait_idle();
+        assert_eq!(sched.pending(), 0);
+        assert!(!sched.try_submit(|| {}).is_busy(), "capacity recovered");
+        sched.wait_idle();
+    }
+
+    #[test]
+    fn jobs_actually_run() {
+        let sched = Scheduler::new(4, 16);
+        let count = Arc::new(AtomicUsize::new(0));
+        let mut accepted = 0;
+        for _ in 0..20 {
+            let c = Arc::clone(&count);
+            if !sched
+                .try_submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+                .is_busy()
+            {
+                accepted += 1;
+            }
+        }
+        sched.wait_idle();
+        assert_eq!(accepted, 20, "capacity 20 admits all");
+        assert_eq!(count.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn capacity_floor_one_worker() {
+        let sched = Scheduler::new(0, 0);
+        assert_eq!(sched.workers(), 1);
+        assert_eq!(sched.capacity(), 1);
+    }
+}

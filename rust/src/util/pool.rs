@@ -96,7 +96,13 @@ impl ThreadPool {
                     };
                     match job {
                         Ok(job) => {
-                            job();
+                            // Contain panics: a panicking job must not kill
+                            // the worker or leak the pending count, or the
+                            // pool (and the serving scheduler above it)
+                            // deadlocks with queued jobs nobody will run.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(job),
+                            );
                             let (lock, cv) = &*pending;
                             let mut cnt = lock.lock().unwrap();
                             *cnt -= 1;
@@ -119,6 +125,18 @@ impl ThreadPool {
             *lock.lock().unwrap() += 1;
         }
         self.tx.as_ref().unwrap().send(Box::new(f)).unwrap();
+    }
+
+    /// Jobs submitted but not yet finished (queued + running) — the
+    /// admission signal for the serving scheduler's backpressure.
+    pub fn pending(&self) -> usize {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap()
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
     }
 
     /// Block until every submitted job has finished.
@@ -174,6 +192,20 @@ mod tests {
         }
         pool.wait();
         assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(1);
+        pool.submit(|| panic!("job blew up"));
+        pool.wait(); // must not hang: the panic still decrements pending
+        let ran = Arc::new(AtomicU64::new(0));
+        let r = Arc::clone(&ran);
+        pool.submit(move || {
+            r.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait();
+        assert_eq!(ran.load(Ordering::Relaxed), 1, "worker survived the panic");
     }
 
     #[test]

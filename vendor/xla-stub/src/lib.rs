@@ -1,0 +1,160 @@
+//! API-compatible stub of the `xla` / PJRT bindings used by
+//! `squant::runtime`.
+//!
+//! The native XLA runtime is not vendored in this repository, so this crate
+//! provides just enough surface for the dependent code to compile.
+//! [`PjRtClient::cpu`] always fails, which the runtime layer surfaces as
+//! "PJRT platform: unavailable"; every downstream method is therefore
+//! unreachable in practice but still type-checks against the real bindings'
+//! signatures.  Handle types carry an `Rc` marker so they stay `!Send`/
+//! `!Sync`, matching the real crate's thread-confinement contract — code
+//! that compiles against the stub won't break when the real bindings are
+//! swapped in.
+
+use std::path::Path;
+use std::rc::Rc;
+
+/// Error type; the dependent code only formats it with `{:?}`.
+#[derive(Clone, Debug)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>(what: &str) -> Result<T, XlaError> {
+    Err(XlaError(format!(
+        "{what}: PJRT native runtime not vendored (xla stub crate)"
+    )))
+}
+
+/// PJRT client handle.  [`PjRtClient::cpu`] always errors in the stub.
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (never constructed by the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(
+        _path: impl AsRef<Path>,
+    ) -> Result<HloModuleProto, XlaError> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _not_send: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer {
+    _not_send: Rc<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host-side literal (tensor value).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
+        unavailable("Literal::array_shape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Array shape of a literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("not vendored"));
+    }
+
+    #[test]
+    fn literal_constructors_exist() {
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
