@@ -9,8 +9,9 @@
 //!   {"cmd":"stats"}                                      counters + latency
 //!   {"cmd":"shutdown"}
 //!
-//! Responses always carry `"ok"`.  `quantize`/`eval` add `"cached"` (LRU or
-//! single-flight reuse) and `"served_ms"`.  When the bounded job queue is
+//! Responses always carry `"ok"`.  `quantize`/`eval` add `"cached"`,
+//! `"source"` (`mem|disk|flight|fresh` — disk is the persistence tier that
+//! survives restarts) and `"served_ms"`.  When the bounded job queue is
 //! full the server answers `{"ok":false,"error":"busy","retry_ms":N}`
 //! instead of queueing unboundedly — clients should back off and retry.
 //!
@@ -33,24 +34,54 @@ use std::time::Duration;
 
 use crate::io::{dataset, manifest::Manifest, sqnt};
 use crate::nn::{Graph, Params};
+use crate::serve::disk::file_fingerprint;
 use crate::serve::{Engine, EngineCfg};
 use crate::util::json::Json;
 
 pub struct ModelStore {
     pub models: HashMap<String, (Graph, Params)>,
+    /// Source-file fingerprint per model (size + mtime), used by the disk
+    /// cache tier to invalidate artifacts when a zoo model is refreshed.
+    /// In-memory stores (tests) may leave this empty: absent models
+    /// fingerprint to 0.
+    pub fingerprints: HashMap<String, u64>,
     pub test: dataset::Dataset,
 }
 
 impl ModelStore {
     pub fn load(manifest: &Manifest) -> Result<ModelStore> {
         let mut models = HashMap::new();
+        let mut fingerprints = HashMap::new();
         for (name, entry) in &manifest.models {
             let c = sqnt::load(&entry.sqnt)?;
             let graph = Graph::from_header(&c.header)?;
             models.insert(name.clone(), (graph, c.params));
+            fingerprints.insert(name.clone(), file_fingerprint(&entry.sqnt));
         }
         let test = dataset::load(&manifest.test_bin)?;
-        Ok(ModelStore { models, test })
+        Ok(ModelStore { models, fingerprints, test })
+    }
+
+    /// Load models directly from SQNT container files (no manifest) —
+    /// fingerprints come from the files, exactly as `load` computes them.
+    pub fn from_sqnt_files(
+        entries: &[(String, std::path::PathBuf)],
+        test: dataset::Dataset,
+    ) -> Result<ModelStore> {
+        let mut models = HashMap::new();
+        let mut fingerprints = HashMap::new();
+        for (name, path) in entries {
+            let c = sqnt::load(path)?;
+            let graph = Graph::from_header(&c.header)?;
+            models.insert(name.clone(), (graph, c.params));
+            fingerprints.insert(name.clone(), file_fingerprint(path));
+        }
+        Ok(ModelStore { models, fingerprints, test })
+    }
+
+    /// Current source fingerprint of a model (0 for in-memory models).
+    pub fn fingerprint(&self, model: &str) -> u64 {
+        self.fingerprints.get(model).copied().unwrap_or(0)
     }
 }
 
@@ -69,15 +100,20 @@ fn dispatch(engine: &Arc<Engine>, req: &Json, stop: &AtomicBool) -> Json {
 /// Serve on `addr` until a `shutdown` request arrives (CLI entry point).
 pub fn serve(store: Arc<ModelStore>, addr: &str, cfg: EngineCfg) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
+    let disk_desc = match &cfg.cache_dir {
+        Some(dir) => format!(", disk cache {dir:?} / {} MB", cfg.cache_disk_mb),
+        None => String::new(),
+    };
     println!(
-        "squant coordinator listening on {} ({} workers, queue {}, cache {} entries / {} MB)",
+        "squant coordinator listening on {} ({} workers, queue {}, cache {} entries / {} MB{})",
         listener.local_addr()?,
         cfg.workers.max(1),
         cfg.queue_depth,
         cfg.cache_cap,
-        cfg.cache_mb
+        cfg.cache_mb,
+        disk_desc
     );
-    let engine = Engine::new(store, cfg);
+    let engine = Engine::new(store, cfg)?;
     run(listener, engine, Arc::new(AtomicBool::new(false)))
 }
 
@@ -121,7 +157,7 @@ pub fn spawn(
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let engine = Engine::new(store, cfg);
+    let engine = Engine::new(store, cfg)?;
     let stop2 = Arc::clone(&stop);
     let thread = thread::spawn(move || {
         let _ = run(listener, engine, stop2);
@@ -158,6 +194,9 @@ fn run(
     for h in conns {
         let _ = h.join();
     }
+    // Flush admitted jobs (including pending disk spills) before returning:
+    // a restart over the same --cache-dir must not scan half-written state.
+    engine.wait_idle();
     Ok(())
 }
 
@@ -252,16 +291,22 @@ mod tests {
             images: Tensor::zeros(&[8, 3, 8, 8]),
             labels: vec![0; 8],
         };
-        Arc::new(ModelStore { models, test })
+        Arc::new(ModelStore { models, fingerprints: HashMap::new(), test })
     }
 
     fn test_cfg() -> EngineCfg {
-        EngineCfg { workers: 2, queue_depth: 8, cache_cap: 8, cache_mb: 64 }
+        EngineCfg {
+            workers: 2,
+            queue_depth: 8,
+            cache_cap: 8,
+            cache_mb: 64,
+            ..EngineCfg::default()
+        }
     }
 
     #[test]
     fn request_dispatch() {
-        let engine = Engine::new(tiny_store(), test_cfg());
+        let engine = Engine::new(tiny_store(), test_cfg()).unwrap();
         let stop = AtomicBool::new(false);
         let r = dispatch(&engine, &Json::parse(r#"{"cmd":"ping"}"#).unwrap(),
                          &stop);

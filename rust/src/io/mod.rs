@@ -9,8 +9,9 @@ pub mod sqnt;
 use anyhow::{bail, Result};
 
 /// Read a little-endian u32 from a byte slice at offset, advancing it.
+/// All bounds math is checked: `pos` may come from untrusted header fields.
 pub(crate) fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
-    if *pos + 4 > buf.len() {
+    if buf.len().checked_sub(*pos).is_none_or(|rest| rest < 4) {
         bail!("truncated file at byte {}", *pos);
     }
     let v = u32::from_le_bytes([buf[*pos], buf[*pos + 1], buf[*pos + 2], buf[*pos + 3]]);
@@ -18,16 +19,20 @@ pub(crate) fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
     Ok(v)
 }
 
-/// Reinterpret a little-endian byte run as f32s.
+/// Reinterpret a little-endian byte run as f32s (checked bounds — `n` and
+/// `pos` may both come from an untrusted tensor table).
 pub(crate) fn read_f32s(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<f32>> {
-    if *pos + 4 * n > buf.len() {
-        bail!("truncated float payload: want {n} floats at byte {}", *pos);
-    }
+    let nbytes = n
+        .checked_mul(4)
+        .filter(|nb| buf.len().checked_sub(*pos).is_some_and(|rest| rest >= *nb))
+        .ok_or_else(|| {
+            anyhow::anyhow!("truncated float payload: want {n} floats at byte {}", *pos)
+        })?;
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
         let o = *pos + 4 * i;
         out.push(f32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]]));
     }
-    *pos += 4 * n;
+    *pos += nbytes;
     Ok(out)
 }

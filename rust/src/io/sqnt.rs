@@ -37,6 +37,56 @@ impl Container {
     }
 }
 
+/// One parsed row of the header's tensor table, offsets validated against
+/// a payload of `payload_floats` f32s: every span must fit, spans must not
+/// overlap, and all arithmetic is checked (headers can be adversarial).
+struct TableRow {
+    name: String,
+    shape: Vec<usize>,
+    offset: usize,
+    numel: usize,
+}
+
+fn parse_tensor_table(header: &Json, payload_floats: usize) -> Result<Vec<TableRow>> {
+    let mut rows = Vec::new();
+    for t in header.req("tensors")?.as_arr()? {
+        let name = t.req("name")?.as_str()?.to_string();
+        let shape = t.req("shape")?.usize_vec()?;
+        let offset = t.req("offset")?.as_usize()?;
+        let numel = t.req("numel")?.as_usize()?;
+        let prod = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .with_context(|| format!("tensor {name}: shape {shape:?} overflows"))?;
+        if numel != prod {
+            bail!("tensor {name}: numel {numel} != shape {shape:?}");
+        }
+        if offset.checked_add(numel).is_none_or(|e| e > payload_floats) {
+            bail!(
+                "tensor {name}: span {offset}+{numel} floats exceeds \
+                 payload of {payload_floats}"
+            );
+        }
+        rows.push(TableRow { name, shape, offset, numel });
+    }
+    let mut spans: Vec<(usize, usize, usize)> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.offset, r.offset + r.numel, i))
+        .collect();
+    spans.sort_unstable();
+    for w in spans.windows(2) {
+        if w[1].0 < w[0].1 {
+            bail!(
+                "tensors {} and {} overlap in the payload",
+                rows[w[0].2].name,
+                rows[w[1].2].name
+            );
+        }
+    }
+    Ok(rows)
+}
+
 pub fn load(path: impl AsRef<Path>) -> Result<Container> {
     let buf = std::fs::read(path.as_ref())
         .with_context(|| format!("reading {:?}", path.as_ref()))?;
@@ -50,54 +100,107 @@ pub fn load(path: impl AsRef<Path>) -> Result<Container> {
         bail!("unsupported SQNT version {version}");
     }
     let hlen = read_u32(&buf, &mut pos)? as usize;
-    if pos + hlen > buf.len() {
-        bail!("truncated header");
-    }
-    let header = Json::parse(std::str::from_utf8(&buf[pos..pos + hlen])?)?;
-    pos += hlen;
+    let header_end = pos
+        .checked_add(hlen)
+        .filter(|&e| e <= buf.len())
+        .context("truncated header")?;
+    let header = Json::parse(std::str::from_utf8(&buf[pos..header_end])?)?;
+    let payload_start = header_end;
 
+    let payload_floats = (buf.len() - payload_start) / 4;
     let mut params = HashMap::new();
     let mut order = Vec::new();
-    let payload_start = pos;
-    for t in header.req("tensors")?.as_arr()? {
-        let name = t.req("name")?.as_str()?.to_string();
-        let shape = t.req("shape")?.usize_vec()?;
-        let offset = t.req("offset")?.as_usize()?;
-        let numel = t.req("numel")?.as_usize()?;
-        if numel != shape.iter().product::<usize>() {
-            bail!("tensor {name}: numel {numel} != shape {shape:?}");
-        }
-        let mut p = payload_start + 4 * offset;
-        let data = read_f32s(&buf, &mut p, numel)?;
-        params.insert(name.clone(), Tensor::from_vec(&shape, data));
-        order.push(name);
+    for row in parse_tensor_table(&header, payload_floats)? {
+        let mut p = payload_start + 4 * row.offset;
+        let data = read_f32s(&buf, &mut p, row.numel)?;
+        params.insert(row.name.clone(), Tensor::from_vec(&row.shape, data));
+        order.push(row.name);
     }
     Ok(Container { header, params, order })
 }
 
+/// Rebuild a `tensors` table for `params` in the given name order, with
+/// contiguous offsets.  Use when composing a fresh header (e.g. artifact
+/// files) or when tensor shapes changed since the header was written.
+pub fn rebuild_tensor_table(
+    params: &HashMap<String, Tensor>,
+    order: &[String],
+) -> Result<Json> {
+    let mut table = Vec::with_capacity(order.len());
+    let mut offset = 0usize;
+    for name in order {
+        let t = params
+            .get(name)
+            .with_context(|| format!("missing tensor {name}"))?;
+        let numel = t.data.len();
+        table.push(
+            Json::obj()
+                .set("name", name.as_str())
+                .set(
+                    "shape",
+                    Json::Arr(t.shape.iter().map(|&d| Json::from(d)).collect()),
+                )
+                .set("offset", offset)
+                .set("numel", numel),
+        );
+        offset += numel;
+    }
+    Ok(Json::Arr(table))
+}
+
 /// Write a container: `header` must contain a `tensors` table consistent
 /// with `params` (use [`rebuild_tensor_table`] when shapes changed).
+///
+/// Payloads are written at each entry's *declared* offset, so a permuted
+/// tensor table round-trips exactly; overlapping or gapped layouts are
+/// rejected rather than silently corrupted (the old writer ignored offsets
+/// and wrote payloads back-to-back in table order).
 pub fn save(path: impl AsRef<Path>, header: &Json,
             params: &HashMap<String, Tensor>) -> Result<()> {
     let hbytes = header.dump().into_bytes();
-    let mut out = Vec::new();
+    // Bounding every span by the summed tensor sizes (plus the no-overlap
+    // check) admits exactly the permutations of a contiguous layout, so the
+    // payload allocation can never exceed the data actually being written.
+    let sum_floats = header
+        .req("tensors")?
+        .as_arr()?
+        .iter()
+        .try_fold(0usize, |a, t| {
+            a.checked_add(t.req("numel")?.as_usize()?)
+                .context("tensor table payload size overflows")
+        })?;
+    let rows = parse_tensor_table(header, sum_floats)?;
+    let total_bytes = sum_floats
+        .checked_mul(4)
+        .context("tensor table payload size overflows")?;
+    let mut payload = vec![0u8; total_bytes];
+    for row in &rows {
+        let tensor = params
+            .get(&row.name)
+            .with_context(|| format!("missing tensor {}", row.name))?;
+        if row.shape != tensor.shape {
+            bail!(
+                "tensor {}: header shape {:?} != {:?}",
+                row.name, row.shape, tensor.shape
+            );
+        }
+        if tensor.data.len() != row.numel {
+            bail!(
+                "tensor {}: header numel {} != {} data values",
+                row.name, row.numel, tensor.data.len()
+            );
+        }
+        for (i, v) in tensor.data.iter().enumerate() {
+            let o = 4 * (row.offset + i);
+            payload[o..o + 4].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut out = Vec::with_capacity(12 + hbytes.len() + payload.len());
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&(hbytes.len() as u32).to_le_bytes());
     out.extend_from_slice(&hbytes);
-    for t in header.req("tensors")?.as_arr()? {
-        let name = t.req("name")?.as_str()?;
-        let tensor = params
-            .get(name)
-            .with_context(|| format!("missing tensor {name}"))?;
-        let shape = t.req("shape")?.usize_vec()?;
-        if shape != tensor.shape {
-            bail!("tensor {name}: header shape {shape:?} != {:?}", tensor.shape);
-        }
-        for v in &tensor.data {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
-    }
+    out.extend_from_slice(&payload);
     std::fs::write(path.as_ref(), out)
         .with_context(|| format!("writing {:?}", path.as_ref()))?;
     Ok(())
@@ -154,5 +257,71 @@ mod tests {
         let mut params = HashMap::new();
         params.insert("w".to_string(), Tensor::zeros(&[1, 1]));
         assert!(save(dir.join("x.sqnt"), &tiny_header(), &params).is_err());
+    }
+
+    /// Regression: `save` used to write payloads back-to-back in table
+    /// order, ignoring declared offsets — a permuted table (here "b" first
+    /// in the table but at offset 6, after "a") silently swapped tensor
+    /// contents on round-trip.
+    #[test]
+    fn permuted_tensor_table_round_trips() {
+        let dir = std::env::temp_dir().join("sqnt_test_perm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("perm.sqnt");
+        let header = Json::parse(
+            r#"{"name":"t","input_shape":[1,2,2],"num_classes":2,
+                "nodes":[{"id":0,"op":"input","inputs":[],"attrs":{},"params":{}}],
+                "tensors":[{"name":"b","shape":[2,2],"offset":6,"numel":4},
+                           {"name":"a","shape":[2,3],"offset":0,"numel":6}],
+                "meta":{}}"#,
+        )
+        .unwrap();
+        let mut params = HashMap::new();
+        params.insert(
+            "a".to_string(),
+            Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
+        );
+        params.insert(
+            "b".to_string(),
+            Tensor::from_vec(&[2, 2], vec![7., 8., 9., 10.]),
+        );
+        save(&path, &header, &params).unwrap();
+        let c = load(&path).unwrap();
+        assert_eq!(c.params["a"].data, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(c.params["b"].data, vec![7., 8., 9., 10.]);
+        assert_eq!(c.order, vec!["b", "a"], "table order preserved");
+    }
+
+    #[test]
+    fn save_rejects_overlapping_offsets() {
+        let dir = std::env::temp_dir().join("sqnt_test_overlap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let header = Json::parse(
+            r#"{"name":"t","tensors":[
+                {"name":"a","shape":[4],"offset":0,"numel":4},
+                {"name":"b","shape":[4],"offset":2,"numel":4}]}"#,
+        )
+        .unwrap();
+        let mut params = HashMap::new();
+        params.insert("a".to_string(), Tensor::zeros(&[4]));
+        params.insert("b".to_string(), Tensor::zeros(&[4]));
+        let err = save(dir.join("x.sqnt"), &header, &params).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err:#}");
+    }
+
+    #[test]
+    fn rebuild_tensor_table_is_contiguous() {
+        let mut params = HashMap::new();
+        params.insert("a".to_string(), Tensor::zeros(&[2, 3]));
+        params.insert("b".to_string(), Tensor::zeros(&[4]));
+        let table =
+            rebuild_tensor_table(&params, &["b".to_string(), "a".to_string()])
+                .unwrap();
+        let rows = table.as_arr().unwrap();
+        assert_eq!(rows[0].req("name").unwrap().as_str().unwrap(), "b");
+        assert_eq!(rows[0].req("offset").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(rows[1].req("offset").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(rows[1].req("numel").unwrap().as_usize().unwrap(), 6);
+        assert!(rebuild_tensor_table(&params, &["nope".to_string()]).is_err());
     }
 }

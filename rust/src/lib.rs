@@ -7,8 +7,8 @@
 //! analyzer ([`hessian`]), the PJRT runtime that executes the AOT-compiled
 //! JAX/Pallas artifacts ([`runtime`]), the on-the-fly quantization
 //! coordinator ([`coordinator`]), and the serving subsystem ([`serve`]:
-//! artifact cache, single-flight dedup, bounded scheduler, metrics) behind
-//! the TCP service.
+//! in-memory artifact cache, disk persistence tier, single-flight dedup,
+//! bounded scheduler, metrics) behind the TCP service.
 //!
 //! Python never runs on this path: `make artifacts` produces HLO text +
 //! SQNT weight containers once; this crate is self-contained afterwards.

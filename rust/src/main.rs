@@ -8,11 +8,15 @@
 //!   squant e2e                           end-to-end driver (quantize + eval,
 //!                                        native and PJRT paths)
 //!   squant serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
-//!                [--cache-cap N] [--cache-mb MB]   TCP quantization service
-//!                (cache + single-flight + bounded scheduler; see serve/)
+//!                [--cache-cap N] [--cache-mb MB]
+//!                [--cache-dir DIR] [--cache-disk-mb MB]
+//!                TCP quantization service (mem LRU + disk persistence +
+//!                single-flight + bounded scheduler; see serve/)
 //!   squant bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--reqs N]
-//!                load-generate against a serve instance: req/s, hit-rate,
-//!                latency quantiles, busy rejections
+//!                [--restart-warm]   load-generate against a serve instance:
+//!                req/s, hit-rate, latency quantiles, busy rejections; with
+//!                --spawn --cache-dir --restart-warm, also restart the
+//!                server and measure warm-start disk hits
 //!
 //! Every command takes --artifacts DIR (default ./artifacts).
 
@@ -34,6 +38,14 @@ fn load_model(man: &Manifest, name: &str)
     let graph = Graph::from_header(&c.header)?;
     let params = c.params.clone();
     Ok((graph, params, c))
+}
+
+/// Screen user-supplied bit-widths before any quantizer math runs
+/// (`quant::qrange` shift-underflows on 0 bits and degenerates on 1).
+fn check_bits(wbits: usize, abits: usize) -> Result<()> {
+    squant::quant::validate_wbits(wbits).map_err(|e| anyhow::anyhow!(e))?;
+    squant::quant::validate_abits(abits).map_err(|e| anyhow::anyhow!(e))?;
+    Ok(())
 }
 
 fn parse_method(s: &str) -> Result<Method> {
@@ -92,14 +104,22 @@ COMMANDS:
   e2e     [--model M] [--wbits B] [--abits A]   full end-to-end driver
   serve   [--addr HOST:PORT] [--workers N] [--queue-depth N]
           [--cache-cap N] [--cache-mb MB]       TCP quantization service
+          [--cache-dir DIR] [--cache-disk-mb MB]
           protocol verbs: ping models quantize eval warm stats shutdown
           (quantize/eval hit an LRU artifact cache; identical concurrent
           requests share one run; a full queue answers
           {\"ok\":false,\"error\":\"busy\",\"retry_ms\":N})
+          --cache-dir enables the disk persistence tier: artifacts are
+          spilled as versioned SQNT files and survive restarts, bounded
+          by --cache-disk-mb (default 1024); stale artifacts (source
+          model file changed) are invalidated automatically
   bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--reqs N]
           [--models A,B] [--wbits 8,4] [--eval-every N] [--samples N]
-          [--seed S]    load-generate against a server; prints req/s,
-          cache hit-rate, p50/p95/p99 latency and busy rejections
+          [--seed S] [--restart-warm]   load-generate against a server;
+          prints req/s, cache hit-rate, p50/p95/p99 latency and busy
+          rejections.  --restart-warm (with --spawn and --cache-dir)
+          restarts the spawned server after the load phase and replays
+          every key once to measure disk-tier warm-start
 
 METHODS: squant squant-e squant-ek squant-ec rtn dfq zeroq dsg gdfq
          adaround dsg-adaround fp32
@@ -154,6 +174,7 @@ fn cmd_quantize(artifacts: &str, args: &mut Args) -> Result<()> {
     let threads = args.usize_or("threads", default_threads())?;
     let offload = args.flag("offload");
     args.finish()?;
+    check_bits(bits, 0)?;
     let man = Manifest::load(artifacts)?;
     let (graph, params, _) = load_model(&man, &model)?;
 
@@ -195,6 +216,7 @@ fn cmd_eval(artifacts: &str, args: &mut Args) -> Result<()> {
     let method = parse_method(&args.str_or("method", "squant"))?;
     let calib_iters = args.usize_or("calib-iters", 24)?;
     args.finish()?;
+    check_bits(wbits, abits)?;
     let man = Manifest::load(artifacts)?;
     let (graph, params, _) = load_model(&man, &model)?;
     let mut test = dataset::load(&man.test_bin)?;
@@ -223,6 +245,7 @@ fn cmd_e2e(artifacts: &str, args: &mut Args) -> Result<()> {
     let wbits = args.usize_or("wbits", 4)?;
     let abits = args.usize_or("abits", 8)?;
     args.finish()?;
+    check_bits(wbits, abits)?;
     let man = Manifest::load(artifacts)?;
     let (graph, params, container) = load_model(&man, &model)?;
     let test = dataset::load(&man.test_bin)?;
@@ -356,6 +379,8 @@ fn serve_cfg(args: &mut Args) -> Result<EngineCfg> {
         queue_depth: args.usize_or("queue-depth", defaults.queue_depth)?,
         cache_cap: args.usize_or("cache-cap", defaults.cache_cap)?,
         cache_mb: args.usize_or("cache-mb", defaults.cache_mb)?,
+        cache_dir: args.opt("cache-dir").map(std::path::PathBuf::from),
+        cache_disk_mb: args.usize_or("cache-disk-mb", defaults.cache_disk_mb)?,
     })
 }
 
@@ -387,14 +412,21 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let samples = args.usize_or("samples", 64)?;
     let seed = args.u64_or("seed", 7)?;
     let spawn = args.flag("spawn");
+    let restart_warm = args.flag("restart-warm");
     let cfg = serve_cfg(args)?;
     args.finish()?;
+    if restart_warm && (!spawn || cfg.cache_dir.is_none()) {
+        bail!(
+            "--restart-warm needs --spawn and --cache-dir \
+             (the disk tier is what survives the restart)"
+        );
+    }
 
     // Either target a running server (--addr) or self-host one (--spawn).
     let server = if spawn {
         let man = Manifest::load(artifacts)?;
         let store = server::ModelStore::load(&man).context("loading models")?;
-        Some(server::spawn(std::sync::Arc::new(store), "127.0.0.1:0", cfg)?)
+        Some(server::spawn(std::sync::Arc::new(store), "127.0.0.1:0", cfg.clone())?)
     } else {
         None
     };
@@ -428,17 +460,29 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     if wbits.is_empty() {
         bail!("--wbits list is empty");
     }
+    for &wb in wbits.iter() {
+        squant::quant::validate_wbits(wb)
+            .map_err(|e| anyhow::anyhow!("--wbits: {e}"))?;
+    }
 
-    let cache_counts = |stats: &Json| -> Result<(f64, f64, f64)> {
+    // (mem hits, misses, shared, disk hits) — disk hits are served requests
+    // too, so they belong in the hit-rate alongside mem/flight reuse.
+    let cache_counts = |stats: &Json| -> Result<(f64, f64, f64, f64)> {
         let c = stats.req("cache")?;
+        let disk_hits = c
+            .req("disk")?
+            .get("hits")
+            .and_then(|h| h.as_f64().ok())
+            .unwrap_or(0.0);
         Ok((
             c.req("hits")?.as_f64()?,
             c.req("misses")?.as_f64()?,
             c.req("shared")?.as_f64()?,
+            disk_hits,
         ))
     };
     let stats0 = probe.call(&Json::parse(r#"{"cmd":"stats"}"#)?)?;
-    let (h0, m0, s0) = cache_counts(&stats0)?;
+    let (h0, m0, s0, d0) = cache_counts(&stats0)?;
 
     let hist = Arc::new(Histogram::new());
     let busy = Arc::new(AtomicU64::new(0));
@@ -518,11 +562,11 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let wall_s = t0.elapsed().as_secs_f64();
 
     let stats1 = probe.call(&Json::parse(r#"{"cmd":"stats"}"#)?)?;
-    let (h1, m1, s1) = cache_counts(&stats1)?;
-    let (hits, misses, shared) = (h1 - h0, m1 - m0, s1 - s0);
-    let lookups = hits + misses + shared;
+    let (h1, m1, s1, d1) = cache_counts(&stats1)?;
+    let (hits, misses, shared, disk) = (h1 - h0, m1 - m0, s1 - s0, d1 - d0);
+    let lookups = hits + misses + shared + disk;
     let hit_rate = if lookups > 0.0 {
-        (hits + shared) / lookups * 100.0
+        (hits + shared + disk) / lookups * 100.0
     } else {
         0.0
     };
@@ -538,13 +582,61 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         hist.max_ms()
     );
     println!(
-        "  cache      : {hit_rate:.1}% hit-rate (hits {hits:.0}, shared {shared:.0}, misses {misses:.0})"
+        "  cache      : {hit_rate:.1}% hit-rate (mem {hits:.0}, shared {shared:.0}, \
+         disk {disk:.0}, misses {misses:.0})"
     );
     println!(
         "  rejected   : {} busy, {} errors",
         busy.load(Ordering::Relaxed),
         errors.load(Ordering::Relaxed)
     );
+
+    if restart_warm {
+        // Cold process, warm disk: stop the spawned server, respawn it over
+        // the same --cache-dir, and replay every (model, wbits) key once.
+        // Disk hits mean the restart skipped the SQuant recompute entirely.
+        let handle = server.expect("checked: --restart-warm implies --spawn");
+        let _ = probe.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);
+        handle.join();
+        let man = Manifest::load(artifacts)?;
+        let store = server::ModelStore::load(&man).context("loading models")?;
+        let handle =
+            server::spawn(std::sync::Arc::new(store), "127.0.0.1:0", cfg)?;
+        let mut client = server::Client::connect(&handle.addr.to_string())?;
+        let warm_hist = Histogram::new();
+        let (mut disk_hits, mut recomputed) = (0usize, 0usize);
+        for model in models.iter() {
+            for &wb in wbits.iter() {
+                let req = Json::obj()
+                    .set("cmd", "quantize")
+                    .set("model", model.as_str())
+                    .set("wbits", wb);
+                let t = std::time::Instant::now();
+                let resp = client.call(&req)?;
+                warm_hist.record_ms(t.elapsed().as_secs_f64() * 1e3);
+                if resp.get("source").and_then(|s| s.as_str().ok())
+                    == Some("disk")
+                {
+                    disk_hits += 1;
+                } else {
+                    recomputed += 1;
+                }
+            }
+        }
+        println!(
+            "  restart-warm: {} keys replayed after restart — {} disk hits, \
+             {} recomputed; p50 {:.2} ms  p95 {:.2} ms  max {:.2} ms",
+            disk_hits + recomputed,
+            disk_hits,
+            recomputed,
+            warm_hist.quantile_ms(0.50),
+            warm_hist.quantile_ms(0.95),
+            warm_hist.max_ms()
+        );
+        let _ = client.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);
+        handle.join();
+        return Ok(());
+    }
 
     if let Some(handle) = server {
         let _ = probe.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);

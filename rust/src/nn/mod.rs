@@ -215,10 +215,12 @@ fn parse_node(nj: &Json) -> Result<Node> {
     Ok(Node { id, op, inputs })
 }
 
-/// Build a tiny conv-bn-relu-gap-linear graph programmatically (test helper,
-/// also used by unit tests in other modules).
-pub fn tiny_test_graph(cin: usize, cmid: usize, classes: usize) -> (Graph, Params) {
-    let header = format!(
+/// IR header JSON for the tiny test graph — shared by [`tiny_test_graph`]
+/// and integration tests that write the same model as a real SQNT
+/// container (its empty `tensors`/`meta` slots are meant to be replaced
+/// via `Json::set`).
+pub fn tiny_test_header(cin: usize, cmid: usize, classes: usize) -> String {
+    format!(
         r#"{{"name":"tiny","input_shape":[{cin},8,8],"num_classes":{classes},
         "nodes":[
          {{"id":0,"op":"input","inputs":[],"attrs":{{}},"params":{{}}}},
@@ -234,7 +236,13 @@ pub fn tiny_test_graph(cin: usize, cmid: usize, classes: usize) -> (Graph, Param
            "attrs":{{"cin":{cmid},"cout":{classes}}},
            "params":{{"weight":"wfc","bias":"bfc"}}}}],
         "tensors":[],"meta":{{}}}}"#
-    );
+    )
+}
+
+/// Build a tiny conv-bn-relu-gap-linear graph programmatically (test helper,
+/// also used by unit tests in other modules).
+pub fn tiny_test_graph(cin: usize, cmid: usize, classes: usize) -> (Graph, Params) {
+    let header = tiny_test_header(cin, cmid, classes);
     let graph = Graph::from_header(&Json::parse(&header).unwrap()).unwrap();
     let mut rng = crate::util::rng::Rng::new(99);
     let mut params: Params = HashMap::new();

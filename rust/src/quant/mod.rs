@@ -6,9 +6,43 @@ use crate::tensor::Tensor;
 use crate::util::rn;
 
 /// Symmetric signed grid: (-qmax, qmax) with qmax = 2^{b-1} - 1.
+///
+/// Callers must pass `bits` in [`MIN_BITS`]..=[`MAX_BITS`]: `bits == 0`
+/// underflows the shift and `bits == 1` collapses the grid to a single
+/// level (qmax = 0), which poisons every scale with a division by zero.
+/// User-supplied bit-widths are screened at the CLI and serve request
+/// boundaries via [`validate_wbits`] / [`validate_abits`] before any code
+/// path reaches here.
 pub fn qrange(bits: usize) -> (f32, f32) {
     let qmax = ((1usize << (bits - 1)) - 1) as f32;
     (-qmax, qmax)
+}
+
+/// Smallest bit-width with a usable symmetric grid (see [`qrange`]).
+pub const MIN_BITS: usize = 2;
+/// Largest supported bit-width (grid values stay exact in f32).
+pub const MAX_BITS: usize = 16;
+
+/// Validate a user-supplied weight bit-width.  `Err` carries a message
+/// ready for a CLI error or a `{"ok":false,...}` JSON response.
+pub fn validate_wbits(bits: usize) -> Result<(), String> {
+    if (MIN_BITS..=MAX_BITS).contains(&bits) {
+        Ok(())
+    } else {
+        Err(format!("wbits {bits} out of range {MIN_BITS}..={MAX_BITS}"))
+    }
+}
+
+/// Validate a user-supplied activation bit-width (0 disables activation
+/// quantization).
+pub fn validate_abits(bits: usize) -> Result<(), String> {
+    if bits == 0 || (MIN_BITS..=MAX_BITS).contains(&bits) {
+        Ok(())
+    } else {
+        Err(format!(
+            "abits {bits} out of range (0 = off, else {MIN_BITS}..={MAX_BITS})"
+        ))
+    }
 }
 
 /// How per-channel weight scales are chosen.
@@ -140,6 +174,21 @@ mod tests {
         assert_eq!(qrange(4), (-7.0, 7.0));
         assert_eq!(qrange(8), (-127.0, 127.0));
         assert_eq!(qrange(3), (-3.0, 3.0));
+    }
+
+    #[test]
+    fn bit_width_validation_screens_degenerate_grids() {
+        // bits 0 shift-underflows qrange, bits 1 makes qmax = 0: both must
+        // be rejected before reaching the grid math.
+        assert!(validate_wbits(0).is_err());
+        assert!(validate_wbits(1).is_err());
+        assert!(validate_wbits(17).is_err());
+        assert!(validate_wbits(2).is_ok());
+        assert!(validate_wbits(16).is_ok());
+        assert!(validate_abits(0).is_ok(), "abits 0 means disabled");
+        assert!(validate_abits(1).is_err());
+        assert!(validate_abits(8).is_ok());
+        assert!(validate_abits(17).is_err());
     }
 
     #[test]

@@ -98,10 +98,15 @@ impl Cache {
 
     /// Insert (or replace), then evict LRU entries until both the entry cap
     /// and the byte budget hold.  Entries larger than the whole budget are
-    /// not cached at all.
-    pub fn put(&self, key: QuantKey, entry: Arc<CacheEntry>) {
+    /// not cached at all.  Returns the evicted entries so a persistence
+    /// tier can spill them to disk instead of dropping the work.
+    pub fn put(
+        &self,
+        key: QuantKey,
+        entry: Arc<CacheEntry>,
+    ) -> Vec<(QuantKey, Arc<CacheEntry>)> {
         if self.cap == 0 || entry.bytes > self.byte_budget {
-            return;
+            return Vec::new();
         }
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
@@ -111,6 +116,7 @@ impl Cache {
             inner.bytes -= old.bytes;
         }
         inner.bytes += added;
+        let mut evicted = Vec::new();
         while inner.map.len() > self.cap || inner.bytes > self.byte_budget {
             let victim = inner
                 .map
@@ -121,8 +127,10 @@ impl Cache {
             if let Some((gone, _)) = inner.map.remove(&victim) {
                 inner.bytes -= gone.bytes;
                 inner.evictions += 1;
+                evicted.push((victim, gone));
             }
         }
+        evicted
     }
 
     pub fn len(&self) -> usize {
@@ -221,6 +229,16 @@ mod tests {
         assert!(cache.bytes() > b1);
         cache.put(key("a"), entry(10));
         assert_eq!(cache.bytes(), b1);
+    }
+
+    #[test]
+    fn put_returns_evicted_entries_for_spill() {
+        let cache = Cache::new(2, usize::MAX);
+        assert!(cache.put(key("a"), entry(4)).is_empty());
+        assert!(cache.put(key("b"), entry(4)).is_empty());
+        let evicted = cache.put(key("c"), entry(4));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].0, key("a"));
     }
 
     #[test]

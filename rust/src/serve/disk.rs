@@ -1,0 +1,662 @@
+//! Disk-backed persistence tier under the in-memory LRU artifact cache.
+//!
+//! Quantized artifacts are cheap to serialize (Params + activation ranges +
+//! QuantReport), so every freshly-computed or mem-evicted [`CacheEntry`] is
+//! written to the cache directory as a versioned SQNT container and
+//! reloaded on a memory miss (mem-miss → disk-hit → promote).  On startup
+//! the directory is scanned to rebuild the warm set, so a restarted server
+//! answers previously-seen requests without re-paying the SQuant cost.
+//!
+//! Artifact files are ordinary SQNT v1 containers (written and parsed by
+//! [`crate::io::sqnt`]) whose header carries an `artifact` object instead
+//! of a model IR:
+//!
+//! ```text
+//!   {"name": "<key label>",
+//!    "artifact": {"version": 1,
+//!                 "model": ..., "wbits": ..., "abits": ..., "method": ...,
+//!                 "fingerprint": "<hex source-model fingerprint>",
+//!                 "report": {"total_ms", "wall_ms", "layers": [...]},
+//!                 "act": {"bits", "ranges": [[node, lo, hi], ...]} | null},
+//!    "tensors": [...]}        // contiguous table over the Params payload
+//! ```
+//!
+//! Staleness: every artifact embeds a fingerprint of its source model file
+//! (size + mtime); a refreshed zoo model changes the fingerprint, and the
+//! stale artifact is deleted at startup scan or on load rather than served.
+//! The tier is bounded by a byte budget (`--cache-disk-mb`); over budget,
+//! least-recently-used artifact files are deleted.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::fs::{self, File};
+use std::io::Read as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::SystemTime;
+
+use super::cache::{params_bytes, CacheEntry, QuantKey};
+use super::QuantMethod;
+use crate::coordinator::{LayerReport, QuantReport};
+use crate::io::sqnt;
+use crate::nn::engine::ActQuant;
+use crate::util::json::Json;
+
+/// Artifact meta-schema version.  Bumped on schema changes; mismatched
+/// artifacts are dropped and recomputed, never migrated in place.
+pub const ARTIFACT_VERSION: usize = 1;
+
+/// Headers larger than this are rejected during the startup scan (a cache
+/// directory is writable by others; don't let one file OOM the scan).
+const MAX_HEADER_BYTES: usize = 1 << 26;
+
+/// Fingerprint of a source model file: size + mtime folded through FNV-1a.
+/// A refreshed zoo model (new bytes or new timestamp) changes this, which
+/// invalidates every artifact derived from the old file.  Missing files
+/// fingerprint to 0 (in-memory test stores use the same default).
+pub fn file_fingerprint(path: &Path) -> u64 {
+    let Ok(md) = fs::metadata(path) else {
+        return 0;
+    };
+    let (secs, nanos) = md
+        .modified()
+        .ok()
+        .and_then(|t| t.duration_since(SystemTime::UNIX_EPOCH).ok())
+        .map(|d| (d.as_secs(), u64::from(d.subsec_nanos())))
+        .unwrap_or((0, 0));
+    let mut bytes = [0u8; 24];
+    for (slot, word) in [md.len(), secs, nanos].into_iter().enumerate() {
+        bytes[8 * slot..8 * (slot + 1)].copy_from_slice(&word.to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Filesystem-safe slug of a cache-key label.
+fn sanitize(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+        .collect()
+}
+
+struct FileMeta {
+    path: PathBuf,
+    bytes: u64,
+    /// Recency tick for LRU file pruning (monotonic per cache).
+    tick: u64,
+}
+
+struct Index {
+    files: HashMap<QuantKey, FileMeta>,
+    bytes: u64,
+    tick: u64,
+}
+
+/// What a disk lookup found.
+pub enum Lookup {
+    /// Valid artifact decoded; ready to promote into the memory cache.
+    Hit(Arc<CacheEntry>),
+    /// An artifact existed but was stale (fingerprint mismatch) or corrupt;
+    /// it has been deleted.
+    Stale,
+    /// Nothing on disk for this key.
+    Miss,
+}
+
+/// The persistence tier: an LRU-pruned directory of artifact files indexed
+/// by [`QuantKey`].  All index operations take one mutex; file payload
+/// encode/decode happens outside it.
+pub struct DiskCache {
+    dir: PathBuf,
+    budget: u64,
+    inner: Mutex<Index>,
+    tmp_seq: AtomicU64,
+    restored: usize,
+    dropped_at_open: usize,
+}
+
+impl DiskCache {
+    /// Open (creating if needed) a cache directory and rebuild the warm-set
+    /// index from the artifacts already present.  `fingerprints` maps every
+    /// currently-loaded model to its source fingerprint; artifacts for
+    /// unknown models or mismatched fingerprints are deleted here.
+    pub fn open(
+        dir: impl AsRef<Path>,
+        budget_bytes: u64,
+        fingerprints: &HashMap<String, u64>,
+    ) -> Result<DiskCache> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {dir:?}"))?;
+        let mut kept: Vec<(QuantKey, PathBuf, u64, SystemTime)> = Vec::new();
+        let mut dropped = 0usize;
+        for entry in fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if !name.ends_with(".sqnt") {
+                // Stray temp files from an interrupted spill are garbage.
+                if name.starts_with(".tmp-") {
+                    let _ = fs::remove_file(&path);
+                }
+                continue;
+            }
+            match scan_artifact(&path, fingerprints) {
+                Ok((key, bytes, mtime)) => kept.push((key, path, bytes, mtime)),
+                Err(_) => {
+                    let _ = fs::remove_file(&path);
+                    dropped += 1;
+                }
+            }
+        }
+        // Oldest first, so LRU ticks reflect file age across the restart.
+        kept.sort_by_key(|(_, _, _, mtime)| *mtime);
+        let mut index =
+            Index { files: HashMap::new(), bytes: 0, tick: 0 };
+        for (key, path, bytes, _) in kept {
+            index.tick += 1;
+            let tick = index.tick;
+            if let Some(old) = index.files.insert(key, FileMeta { path, bytes, tick }) {
+                // Two files decoding to the same key: keep the newer one.
+                index.bytes -= old.bytes;
+                let _ = fs::remove_file(&old.path);
+                dropped += 1;
+            }
+            index.bytes += bytes;
+        }
+        // Prune to budget *before* reporting the warm set, so `restored`
+        // counts exactly the artifacts that are actually servable.
+        prune(&mut index, budget_bytes);
+        let restored = index.files.len();
+        Ok(DiskCache {
+            dir,
+            budget: budget_bytes,
+            inner: Mutex::new(index),
+            tmp_seq: AtomicU64::new(0),
+            restored,
+            dropped_at_open: dropped,
+        })
+    }
+
+    /// Look up `key`; a valid artifact must match the current source-model
+    /// `fingerprint` or it is invalidated on the spot.
+    pub fn load(&self, key: &QuantKey, fingerprint: u64) -> Lookup {
+        let path = {
+            let inner = self.inner.lock().unwrap();
+            match inner.files.get(key) {
+                Some(meta) => meta.path.clone(),
+                None => return Lookup::Miss,
+            }
+        };
+        match sqnt::load(&path).and_then(|c| decode_entry(c, key)) {
+            Ok((entry, fp)) if fp == fingerprint => {
+                let mut inner = self.inner.lock().unwrap();
+                inner.tick += 1;
+                let tick = inner.tick;
+                if let Some(meta) = inner.files.get_mut(key) {
+                    meta.tick = tick;
+                }
+                Lookup::Hit(entry)
+            }
+            Ok(_) => {
+                // Stale fingerprint: drop the artifact so the slot
+                // recomputes instead of serving bits from an old model.
+                self.forget(key, &path);
+                Lookup::Stale
+            }
+            Err(e) => {
+                // Only destroy the file when its *content* is bad.  A
+                // transient I/O failure (fd exhaustion, a momentary lock)
+                // must not wipe a valid warm set — except NotFound, where
+                // the file is already gone and the index entry is a lie.
+                let io = e.chain().find_map(|c| c.downcast_ref::<std::io::Error>());
+                match io {
+                    Some(ioe) if ioe.kind() != std::io::ErrorKind::NotFound => {
+                        Lookup::Miss
+                    }
+                    _ => {
+                        self.forget(key, &path);
+                        Lookup::Stale
+                    }
+                }
+            }
+        }
+    }
+
+    /// Write an artifact (atomically: temp file + rename), then prune LRU
+    /// files until the byte budget holds.  Returns false when the artifact
+    /// alone exceeds the whole budget and was not kept.
+    pub fn store(
+        &self,
+        key: &QuantKey,
+        fingerprint: u64,
+        entry: &CacheEntry,
+    ) -> Result<bool> {
+        let header = encode_header(key, fingerprint, entry)?;
+        let label = key.label();
+        let path = self.dir.join(format!(
+            "{}-{:016x}.sqnt",
+            sanitize(&label),
+            fnv1a(label.as_bytes())
+        ));
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        sqnt::save(&tmp, &header, &entry.params)?;
+        let bytes = fs::metadata(&tmp)?.len();
+        if bytes > self.budget {
+            let _ = fs::remove_file(&tmp);
+            return Ok(false);
+        }
+        fs::rename(&tmp, &path)?;
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) =
+            inner.files.insert(key.clone(), FileMeta { path, bytes, tick })
+        {
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += bytes;
+        prune(&mut inner, self.budget);
+        Ok(true)
+    }
+
+    pub fn contains(&self, key: &QuantKey) -> bool {
+        self.inner.lock().unwrap().files.contains_key(key)
+    }
+
+    /// Artifact files currently indexed.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Artifacts restored by the startup scan.
+    pub fn restored(&self) -> usize {
+        self.restored
+    }
+
+    /// Stale/corrupt artifacts deleted by the startup scan.
+    pub fn dropped_at_open(&self) -> usize {
+        self.dropped_at_open
+    }
+
+    fn forget(&self, key: &QuantKey, path: &Path) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(meta) = inner.files.remove(key) {
+            inner.bytes -= meta.bytes;
+        }
+        let _ = fs::remove_file(path);
+    }
+}
+
+/// Delete least-recently-used files until the byte budget holds.
+fn prune(inner: &mut Index, budget: u64) {
+    while inner.bytes > budget {
+        let victim = inner
+            .files
+            .iter()
+            .min_by_key(|(_, meta)| meta.tick)
+            .map(|(k, _)| k.clone());
+        let Some(victim) = victim else { break };
+        if let Some(meta) = inner.files.remove(&victim) {
+            inner.bytes -= meta.bytes;
+            let _ = fs::remove_file(&meta.path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact codec (SQNT header encode/decode)
+// ---------------------------------------------------------------------------
+
+/// Read just magic + version + header JSON of a container (the startup scan
+/// must not pay a full payload read per artifact).
+fn read_header_only(path: &Path) -> Result<Json> {
+    let mut f = File::open(path)?;
+    let mut fixed = [0u8; 12];
+    f.read_exact(&mut fixed)?;
+    if &fixed[0..4] != sqnt::MAGIC {
+        bail!("not a SQNT container: {path:?}");
+    }
+    let version = u32::from_le_bytes([fixed[4], fixed[5], fixed[6], fixed[7]]);
+    if version != sqnt::VERSION {
+        bail!("unsupported SQNT version {version}");
+    }
+    let hlen = u32::from_le_bytes([fixed[8], fixed[9], fixed[10], fixed[11]]) as usize;
+    if hlen > MAX_HEADER_BYTES {
+        bail!("oversized header ({hlen} bytes)");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    Json::parse(std::str::from_utf8(&hbuf)?)
+}
+
+/// Validate one on-disk artifact during the startup scan; errors (corrupt,
+/// wrong version, unknown model, stale fingerprint) mean "delete it".
+fn scan_artifact(
+    path: &Path,
+    fingerprints: &HashMap<String, u64>,
+) -> Result<(QuantKey, u64, SystemTime)> {
+    let header = read_header_only(path)?;
+    let (key, fp) = artifact_meta(&header)?;
+    match fingerprints.get(&key.model) {
+        Some(&current) if current == fp => {}
+        Some(_) => bail!("stale fingerprint for model {}", key.model),
+        None => bail!("artifact for unknown model {}", key.model),
+    }
+    let md = fs::metadata(path)?;
+    let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+    Ok((key, md.len(), mtime))
+}
+
+/// Parse the `artifact` meta object: (cache key, source fingerprint).
+fn artifact_meta(header: &Json) -> Result<(QuantKey, u64)> {
+    let a = header.req("artifact")?;
+    let version = a.req("version")?.as_usize()?;
+    if version != ARTIFACT_VERSION {
+        bail!("artifact version {version} != {ARTIFACT_VERSION}");
+    }
+    let key = QuantKey {
+        model: a.req("model")?.as_str()?.to_string(),
+        wbits: a.req("wbits")?.as_usize()?,
+        abits: a.req("abits")?.as_usize()?,
+        method: QuantMethod::parse(a.req("method")?.as_str()?)
+            .map_err(|e| anyhow!(e))?,
+    };
+    let fp = u64::from_str_radix(a.req("fingerprint")?.as_str()?, 16)
+        .context("bad artifact fingerprint")?;
+    Ok((key, fp))
+}
+
+fn encode_header(key: &QuantKey, fingerprint: u64, entry: &CacheEntry) -> Result<Json> {
+    let mut order: Vec<String> = entry.params.keys().cloned().collect();
+    order.sort();
+    let tensors = sqnt::rebuild_tensor_table(&entry.params, &order)?;
+    let layers: Vec<Json> = entry
+        .report
+        .layers
+        .iter()
+        .map(|l| {
+            Json::obj()
+                .set("weight", l.weight.as_str())
+                .set("m", l.m)
+                .set("n", l.n)
+                .set("k", l.k)
+                .set("ms", l.ms)
+                .set("flips_k", l.flips_k)
+                .set("flips_c", l.flips_c)
+        })
+        .collect();
+    let report = Json::obj()
+        .set("total_ms", entry.report.total_ms)
+        .set("wall_ms", entry.report.wall_ms)
+        .set("layers", Json::Arr(layers));
+    let act = match &entry.act {
+        Some(a) => {
+            let mut rows: Vec<(usize, f32, f32)> =
+                a.ranges.iter().map(|(&id, &(lo, hi))| (id, lo, hi)).collect();
+            rows.sort_by_key(|r| r.0);
+            Json::obj().set("bits", a.bits).set(
+                "ranges",
+                Json::Arr(
+                    rows.into_iter()
+                        .map(|(id, lo, hi)| {
+                            Json::Arr(vec![
+                                Json::from(id),
+                                Json::from(f64::from(lo)),
+                                Json::from(f64::from(hi)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )
+        }
+        None => Json::Null,
+    };
+    Ok(Json::obj()
+        .set("name", key.label())
+        .set(
+            "artifact",
+            Json::obj()
+                .set("version", ARTIFACT_VERSION)
+                .set("model", key.model.as_str())
+                .set("wbits", key.wbits)
+                .set("abits", key.abits)
+                .set("method", key.method.label())
+                .set("fingerprint", format!("{fingerprint:016x}"))
+                .set("report", report)
+                .set("act", act),
+        )
+        .set("tensors", tensors))
+}
+
+/// Rebuild a [`CacheEntry`] from a loaded artifact container; the embedded
+/// key must match the requested one (guards against hash-named file
+/// collisions and hand-copied artifacts).
+fn decode_entry(
+    c: sqnt::Container,
+    key: &QuantKey,
+) -> Result<(Arc<CacheEntry>, u64)> {
+    let (file_key, fp) = artifact_meta(&c.header)?;
+    if &file_key != key {
+        bail!(
+            "artifact key mismatch: file holds {}, wanted {}",
+            file_key.label(),
+            key.label()
+        );
+    }
+    let a = c.header.req("artifact")?;
+    let r = a.req("report")?;
+    let mut layers = Vec::new();
+    for l in r.req("layers")?.as_arr()? {
+        layers.push(LayerReport {
+            weight: l.req("weight")?.as_str()?.to_string(),
+            m: l.req("m")?.as_usize()?,
+            n: l.req("n")?.as_usize()?,
+            k: l.req("k")?.as_usize()?,
+            ms: l.req("ms")?.as_f64()?,
+            flips_k: l.req("flips_k")?.as_usize()?,
+            flips_c: l.req("flips_c")?.as_usize()?,
+        });
+    }
+    let report = QuantReport {
+        layers,
+        total_ms: r.req("total_ms")?.as_f64()?,
+        wall_ms: r.req("wall_ms")?.as_f64()?,
+    };
+    let aj = a.req("act")?;
+    let act = if matches!(aj, Json::Null) {
+        None
+    } else {
+        let bits = aj.req("bits")?.as_usize()?;
+        let mut ranges = HashMap::new();
+        for row in aj.req("ranges")?.as_arr()? {
+            let row = row.as_arr()?;
+            if row.len() != 3 {
+                bail!("bad activation range row");
+            }
+            ranges.insert(
+                row[0].as_usize()?,
+                (row[1].as_f64()? as f32, row[2].as_f64()? as f32),
+            );
+        }
+        Some(ActQuant { bits, ranges })
+    };
+    let bytes = params_bytes(&c.params);
+    Ok((Arc::new(CacheEntry { params: c.params, act, report, bytes }), fp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Params;
+    use crate::tensor::Tensor;
+
+    fn key(model: &str, wbits: usize) -> QuantKey {
+        QuantKey {
+            model: model.to_string(),
+            wbits,
+            abits: 8,
+            method: QuantMethod::Squant { enable_k: true, enable_c: true },
+        }
+    }
+
+    fn entry(floats: usize) -> CacheEntry {
+        let mut params = Params::new();
+        let mut w = Tensor::zeros(&[floats]);
+        for (i, v) in w.data.iter_mut().enumerate() {
+            *v = i as f32 * 0.5;
+        }
+        params.insert("w".to_string(), w);
+        let mut ranges = HashMap::new();
+        ranges.insert(1usize, (-0.5f32, 2.5f32));
+        let report = QuantReport {
+            layers: vec![LayerReport {
+                weight: "w".to_string(),
+                m: 1,
+                n: 1,
+                k: floats,
+                ms: 0.25,
+                flips_k: 3,
+                flips_c: 1,
+            }],
+            total_ms: 0.25,
+            wall_ms: 0.5,
+        };
+        let bytes = params_bytes(&params);
+        CacheEntry { params, act: Some(ActQuant { bits: 8, ranges }), report, bytes }
+    }
+
+    fn temp_cache_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("squant_disk_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn fps(model: &str, fp: u64) -> HashMap<String, u64> {
+        let mut m = HashMap::new();
+        m.insert(model.to_string(), fp);
+        m
+    }
+
+    #[test]
+    fn store_load_round_trip_with_act_and_report() {
+        let dir = temp_cache_dir("rt");
+        let cache = DiskCache::open(&dir, 1 << 20, &fps("m", 7)).unwrap();
+        let k = key("m", 4);
+        assert!(matches!(cache.load(&k, 7), Lookup::Miss));
+        assert!(cache.store(&k, 7, &entry(16)).unwrap());
+        let Lookup::Hit(e) = cache.load(&k, 7) else {
+            panic!("expected disk hit");
+        };
+        assert_eq!(e.params["w"].data[3], 1.5);
+        assert_eq!(e.report.layers.len(), 1);
+        assert_eq!(e.report.layers[0].flips_k, 3);
+        assert_eq!(e.report.wall_ms, 0.5);
+        let act = e.act.as_ref().unwrap();
+        assert_eq!(act.bits, 8);
+        assert_eq!(act.ranges[&1], (-0.5, 2.5));
+        assert_eq!(cache.len(), 1);
+        assert!(cache.bytes() > 0);
+    }
+
+    #[test]
+    fn stale_fingerprint_invalidates_artifact() {
+        let dir = temp_cache_dir("stale");
+        let cache = DiskCache::open(&dir, 1 << 20, &fps("m", 7)).unwrap();
+        let k = key("m", 4);
+        cache.store(&k, 7, &entry(8)).unwrap();
+        // The model file changed: fingerprint 7 → 8.
+        assert!(matches!(cache.load(&k, 8), Lookup::Stale));
+        assert_eq!(cache.len(), 0, "stale artifact deleted");
+        assert!(matches!(cache.load(&k, 8), Lookup::Miss));
+    }
+
+    #[test]
+    fn reopen_restores_warm_set_and_drops_stale() {
+        let dir = temp_cache_dir("reopen");
+        {
+            let cache = DiskCache::open(&dir, 1 << 20, &fps("m", 7)).unwrap();
+            cache.store(&key("m", 4), 7, &entry(8)).unwrap();
+            cache.store(&key("m", 8), 7, &entry(8)).unwrap();
+        }
+        let cache = DiskCache::open(&dir, 1 << 20, &fps("m", 7)).unwrap();
+        assert_eq!(cache.restored(), 2);
+        assert_eq!(cache.dropped_at_open(), 0);
+        assert!(matches!(cache.load(&key("m", 4), 7), Lookup::Hit(_)));
+
+        // A refreshed model zoo (new fingerprint) drops everything at scan.
+        let cache = DiskCache::open(&dir, 1 << 20, &fps("m", 9)).unwrap();
+        assert_eq!(cache.restored(), 0);
+        assert_eq!(cache.dropped_at_open(), 2);
+        assert!(matches!(cache.load(&key("m", 4), 9), Lookup::Miss));
+    }
+
+    #[test]
+    fn byte_budget_prunes_lru_files() {
+        let dir = temp_cache_dir("budget");
+        let fp = fps("m", 7);
+        let probe = DiskCache::open(&dir, u64::MAX, &fp).unwrap();
+        probe.store(&key("m", 2), 7, &entry(64)).unwrap();
+        let one = probe.bytes();
+        // Budget fits two artifacts of this size, not three.
+        let cache = DiskCache::open(&dir, one * 2 + one / 2, &fp).unwrap();
+        cache.store(&key("m", 3), 7, &entry(64)).unwrap();
+        cache.store(&key("m", 4), 7, &entry(64)).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(!cache.contains(&key("m", 2)), "oldest file pruned");
+        assert!(cache.bytes() <= cache.budget());
+        // An artifact alone over the whole budget is refused.
+        let tiny = DiskCache::open(&temp_cache_dir("tiny"), 16, &fp).unwrap();
+        assert!(!tiny.store(&key("m", 5), 7, &entry(64)).unwrap());
+        assert_eq!(tiny.len(), 0);
+    }
+
+    #[test]
+    fn corrupt_artifact_is_dropped_not_served() {
+        let dir = temp_cache_dir("corrupt");
+        let fp = fps("m", 7);
+        let k = key("m", 4);
+        let path = {
+            let cache = DiskCache::open(&dir, 1 << 20, &fp).unwrap();
+            cache.store(&k, 7, &entry(8)).unwrap();
+            fs::read_dir(&dir).unwrap().next().unwrap().unwrap().path()
+        };
+        // Truncate the payload; the reopened cache restores the file (the
+        // header is intact) but the full load must fail cleanly.
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let cache = DiskCache::open(&dir, 1 << 20, &fp).unwrap();
+        assert_eq!(cache.restored(), 1);
+        assert!(matches!(cache.load(&k, 7), Lookup::Stale));
+        assert_eq!(cache.len(), 0);
+    }
+}

@@ -116,6 +116,15 @@ pub struct Metrics {
     pub cache_misses: AtomicU64,
     /// Requests that piggy-backed on an identical in-flight computation.
     pub flight_shared: AtomicU64,
+    /// Mem-miss requests answered from the disk tier (no recompute).
+    pub disk_hits: AtomicU64,
+    /// Mem-miss requests the disk tier could not answer.
+    pub disk_misses: AtomicU64,
+    /// Artifacts written to the disk tier.
+    pub disk_spills: AtomicU64,
+    /// Stale artifacts dropped (source-model fingerprint changed, or the
+    /// file was corrupt) — at startup scan or on load.
+    pub disk_invalidated: AtomicU64,
     pub rejected_busy: AtomicU64,
     pub errors: AtomicU64,
     pub lat_all: Histogram,
@@ -137,6 +146,10 @@ impl Metrics {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             flight_shared: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            disk_misses: AtomicU64::new(0),
+            disk_spills: AtomicU64::new(0),
+            disk_invalidated: AtomicU64::new(0),
             rejected_busy: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             lat_all: Histogram::new(),

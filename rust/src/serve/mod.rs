@@ -5,8 +5,12 @@
 //! ```text
 //!   coordinator::server (line-JSON protocol)
 //!        └── serve::Engine::handle
-//!              ├── cache   — LRU of quantized Params + report, keyed by
-//!              │             (model, wbits, abits, method)
+//!              ├── cache   — in-memory LRU of quantized Params + report,
+//!              │             keyed by (model, wbits, abits, method)
+//!              ├── disk    — persistence tier under the LRU: spills fresh
+//!              │             and evicted artifacts as versioned SQNT files,
+//!              │             answers mem-misses across restarts, and
+//!              │             invalidates on source-model fingerprint change
 //!              ├── flight  — single-flight dedup: N concurrent identical
 //!              │             requests share one SQuant run
 //!              ├── sched   — bounded queue + fixed worker pool; full ⇒
@@ -20,10 +24,14 @@
 //! `--workers` no matter how many connections are open.
 
 pub mod cache;
+pub mod disk;
 pub mod flight;
 pub mod metrics;
 pub mod sched;
 
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -34,20 +42,21 @@ use crate::coordinator::{self, LayerReport, QuantReport};
 use crate::eval;
 use crate::io::dataset::Dataset;
 use crate::nn::actrange::data_free_ranges;
-use crate::quant::ScaleMethod;
+use crate::quant::{validate_abits, validate_wbits, ScaleMethod};
 use crate::squant::SquantOpts;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::pool::default_threads;
 
 use cache::{params_bytes, Cache, CacheEntry, QuantKey};
+use disk::{DiskCache, Lookup};
 use flight::{Flight, Role};
 use metrics::Metrics;
 use sched::{Scheduler, Submit};
 
 /// Serving configuration (CLI: `--workers`, `--queue-depth`, `--cache-cap`,
-/// `--cache-mb`).
-#[derive(Clone, Copy, Debug)]
+/// `--cache-mb`, `--cache-dir`, `--cache-disk-mb`).
+#[derive(Clone, Debug)]
 pub struct EngineCfg {
     /// Worker threads executing quantize/eval jobs.
     pub workers: usize,
@@ -57,6 +66,10 @@ pub struct EngineCfg {
     pub cache_cap: usize,
     /// Max cached artifact payload (megabytes).
     pub cache_mb: usize,
+    /// Directory for the disk persistence tier (None disables it).
+    pub cache_dir: Option<PathBuf>,
+    /// Byte budget of the disk tier (megabytes of artifact files).
+    pub cache_disk_mb: usize,
 }
 
 impl Default for EngineCfg {
@@ -66,6 +79,8 @@ impl Default for EngineCfg {
             queue_depth: 32,
             cache_cap: 32,
             cache_mb: 256,
+            cache_dir: None,
+            cache_disk_mb: 1024,
         }
     }
 }
@@ -135,15 +150,35 @@ impl ServeError {
     }
 }
 
-/// Where a quantized artifact came from (metrics + the `cached` flag).
+/// Where a quantized artifact came from (metrics + the `cached`/`source`
+/// response fields).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Source {
-    /// Straight out of the LRU cache.
+    /// Straight out of the in-memory LRU cache.
     Hit,
     /// Joined an identical in-flight computation.
     Shared,
+    /// Reloaded from the disk persistence tier (and promoted to memory).
+    Disk,
     /// Computed fresh by this request.
     Computed,
+}
+
+impl Source {
+    /// Wire name for the `source` response field.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Source::Hit => "mem",
+            Source::Shared => "flight",
+            Source::Disk => "disk",
+            Source::Computed => "fresh",
+        }
+    }
+
+    /// Anything that skipped a fresh SQuant run counts as cached.
+    pub fn is_cached(&self) -> bool {
+        !matches!(self, Source::Computed)
+    }
 }
 
 type QuantOutcome = Result<Arc<CacheEntry>, ServeError>;
@@ -153,6 +188,8 @@ type QuantOutcome = Result<Arc<CacheEntry>, ServeError>;
 pub struct Engine {
     store: Arc<ModelStore>,
     cache: Cache,
+    /// Persistence tier under the LRU (None when `--cache-dir` is unset).
+    disk: Option<DiskCache>,
     flight: Flight<QuantKey, QuantOutcome>,
     sched: Scheduler,
     pub metrics: Metrics,
@@ -162,16 +199,37 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(store: Arc<ModelStore>, cfg: EngineCfg) -> Arc<Engine> {
+    /// Build the engine; with `cache_dir` set this scans the directory to
+    /// rebuild the warm set (dropping artifacts whose source model
+    /// fingerprint changed since they were written).
+    pub fn new(store: Arc<ModelStore>, cfg: EngineCfg) -> Result<Arc<Engine>> {
         let workers = cfg.workers.max(1);
-        Arc::new(Engine {
+        let metrics = Metrics::new();
+        let disk = match &cfg.cache_dir {
+            Some(dir) => {
+                let fps: HashMap<String, u64> = store
+                    .models
+                    .keys()
+                    .map(|m| (m.clone(), store.fingerprint(m)))
+                    .collect();
+                let budget = (cfg.cache_disk_mb as u64).saturating_mul(1 << 20);
+                let d = DiskCache::open(dir, budget, &fps)?;
+                metrics
+                    .disk_invalidated
+                    .store(d.dropped_at_open() as u64, Ordering::Relaxed);
+                Some(d)
+            }
+            None => None,
+        };
+        Ok(Arc::new(Engine {
             store,
             cache: Cache::new(cfg.cache_cap, cfg.cache_mb.saturating_mul(1 << 20)),
+            disk,
             flight: Flight::new(),
             sched: Scheduler::new(workers, cfg.queue_depth),
-            metrics: Metrics::new(),
+            metrics,
             machine_threads: default_threads(),
-        })
+        }))
     }
 
     /// Per-job internal parallelism, adaptive to load: an idle server gives
@@ -184,6 +242,14 @@ impl Engine {
 
     pub fn store(&self) -> &ModelStore {
         &self.store
+    }
+
+    /// Block until every admitted job — including the write-through disk
+    /// spills that run after a response is sent — has finished.  The server
+    /// calls this on shutdown so a restart over the same cache directory
+    /// never scans half-written artifacts.
+    pub fn wait_idle(&self) {
+        self.sched.wait_idle();
     }
 
     /// Dispatch one protocol request (everything except `shutdown`, which
@@ -242,14 +308,12 @@ impl Engine {
         if !self.store.models.contains_key(&model) {
             return Err(ServeError::Failed(format!("unknown model '{model}'")));
         }
+        // Degenerate bit-widths (0 shift-underflows qrange, 1 collapses the
+        // grid) must never reach the quantizer from the wire.
         let wbits = req.get("wbits").and_then(|b| b.as_usize().ok()).unwrap_or(8);
-        if !(2..=16).contains(&wbits) {
-            return Err(ServeError::Failed(format!("wbits {wbits} out of range 2..=16")));
-        }
+        validate_wbits(wbits).map_err(ServeError::Failed)?;
         let abits = req.get("abits").and_then(|b| b.as_usize().ok()).unwrap_or(0);
-        if abits > 16 {
-            return Err(ServeError::Failed(format!("abits {abits} out of range 0..=16")));
-        }
+        validate_abits(abits).map_err(ServeError::Failed)?;
         let method = QuantMethod::parse(
             req.get("method").and_then(|m| m.as_str().ok()).unwrap_or("squant"),
         )
@@ -282,7 +346,8 @@ impl Engine {
                             .map(|l| l.flips_k + l.flips_c)
                             .sum::<usize>(),
                     )
-                    .set("cached", matches!(src, Source::Hit | Source::Shared))
+                    .set("cached", src.is_cached())
+                    .set("source", src.label())
                     .set("served_ms", t0.elapsed().as_secs_f64() * 1e3)
             }
             Err(e) => e.to_json(),
@@ -324,7 +389,8 @@ impl Engine {
                     .set("wbits", key.wbits)
                     .set("abits", key.abits)
                     .set("quant_ms", entry.report.wall_ms)
-                    .set("cached", matches!(src, Source::Hit | Source::Shared))
+                    .set("cached", src.is_cached())
+                    .set("source", src.label())
                     .set("served_ms", t0.elapsed().as_secs_f64() * 1e3),
                 Ok(Err(msg)) => ServeError::Failed(msg).to_json(),
                 Err(_) => ServeError::Failed("eval worker dropped".into()).to_json(),
@@ -343,7 +409,8 @@ impl Engine {
             return Json::obj()
                 .set("ok", true)
                 .set("key", key.label())
-                .set("cached", true);
+                .set("cached", true)
+                .set("source", "mem");
         }
         if !self.flight.try_lead(&key) {
             return Json::obj()
@@ -352,10 +419,19 @@ impl Engine {
                 .set("queued", true)
                 .set("inflight", true);
         }
+        // A disk artifact warms the memory tier without a worker slot.
+        if let Some(entry) = self.disk_probe(&key) {
+            self.flight.complete(&key, Ok(entry));
+            return Json::obj()
+                .set("ok", true)
+                .set("key", key.label())
+                .set("cached", true)
+                .set("source", "disk");
+        }
         let eng = Arc::clone(self);
         let k = key.clone();
         match self.sched.try_submit(move || {
-            let _ = eng.compute_and_finish(&k);
+            eng.compute_and_finish(&k, None);
         }) {
             Submit::Busy { retry_ms } => {
                 let err = ServeError::Busy { retry_ms };
@@ -393,7 +469,41 @@ impl Engine {
                     .set("bytes", self.cache.bytes())
                     .set("evictions", self.cache.evictions() as usize)
                     .set("cap", self.cache.cap())
-                    .set("byte_budget", self.cache.byte_budget()),
+                    .set("byte_budget", self.cache.byte_budget())
+                    .set(
+                        "disk",
+                        match &self.disk {
+                            Some(d) => Json::obj()
+                                .set("enabled", true)
+                                .set(
+                                    "hits",
+                                    self.metrics.disk_hits.load(Ordering::Relaxed)
+                                        as usize,
+                                )
+                                .set(
+                                    "misses",
+                                    self.metrics.disk_misses.load(Ordering::Relaxed)
+                                        as usize,
+                                )
+                                .set(
+                                    "spills",
+                                    self.metrics.disk_spills.load(Ordering::Relaxed)
+                                        as usize,
+                                )
+                                .set(
+                                    "invalidated",
+                                    self.metrics
+                                        .disk_invalidated
+                                        .load(Ordering::Relaxed)
+                                        as usize,
+                                )
+                                .set("files", d.len())
+                                .set("bytes", d.bytes() as usize)
+                                .set("budget", d.budget() as usize)
+                                .set("restored", d.restored()),
+                            None => Json::obj().set("enabled", false),
+                        },
+                    ),
             )
             .set(
                 "sched",
@@ -414,8 +524,8 @@ impl Engine {
 
     // ---- quantization pipeline ---------------------------------------------
 
-    /// Get the quantized artifact for `key`: cache → single-flight →
-    /// scheduled compute, in that order.
+    /// Get the quantized artifact for `key`: memory cache → single-flight →
+    /// disk tier → scheduled compute, in that order.
     pub fn quantized(
         self: &Arc<Self>,
         key: &QuantKey,
@@ -442,11 +552,17 @@ impl Engine {
                     self.flight.complete(key, Ok(Arc::clone(&e)));
                     return Ok((e, Source::Hit));
                 }
+                // Disk tier: a valid artifact answers the miss without
+                // touching the worker pool (decode is I/O, not SQuant).
+                if let Some(e) = self.disk_probe(key) {
+                    self.flight.complete(key, Ok(Arc::clone(&e)));
+                    return Ok((e, Source::Disk));
+                }
                 let (tx, rx) = mpsc::channel();
                 let eng = Arc::clone(self);
                 let k = key.clone();
                 match self.sched.try_submit(move || {
-                    let _ = tx.send(eng.compute_and_finish(&k));
+                    eng.compute_and_finish(&k, Some(tx));
                 }) {
                     Submit::Busy { retry_ms } => {
                         let err = ServeError::Busy { retry_ms };
@@ -478,12 +594,19 @@ impl Engine {
     }
 
     /// Worker-side: compute, publish to cache, release single-flight
-    /// waiters.  Cache fill happens before `complete` so no request can
-    /// observe "not in flight, not cached" for a finished key.  Compute
-    /// panics are converted to errors so `complete` always runs — a
-    /// stranded flight key would block every future request for it (warm
-    /// submits this without a receive-side recovery path).
-    fn compute_and_finish(&self, key: &QuantKey) -> QuantOutcome {
+    /// waiters and the requester (via `done`), then spill to disk.  Cache
+    /// fill happens before `complete` so no request can observe "not in
+    /// flight, not cached" for a finished key; the write-through disk
+    /// spill happens strictly *after* `complete` and `done`, so neither
+    /// the requester nor any waiter blocks on the artifact file write.
+    /// Compute panics are converted to errors so `complete` always runs —
+    /// a stranded flight key would block every future request for it
+    /// (warm submits this without a receive-side recovery path).
+    fn compute_and_finish(
+        &self,
+        key: &QuantKey,
+        done: Option<mpsc::Sender<QuantOutcome>>,
+    ) {
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.compute_entry(key)
         }))
@@ -492,11 +615,69 @@ impl Engine {
                 "quantize job panicked for {}", key.label()
             )))
         });
-        if let Ok(entry) = &res {
-            self.cache.put(key.clone(), Arc::clone(entry));
-        }
+        let evicted = match &res {
+            Ok(entry) => self.cache.put(key.clone(), Arc::clone(entry)),
+            Err(_) => Vec::new(),
+        };
         self.flight.complete(key, res.clone());
-        res
+        if let Some(tx) = done {
+            let _ = tx.send(res.clone());
+        }
+        if let Ok(entry) = &res {
+            self.spill(key, entry);
+            self.spill_evicted(evicted);
+        }
+    }
+
+    // ---- disk tier ---------------------------------------------------------
+
+    /// Probe the disk tier on a memory miss.  A valid artifact is promoted
+    /// into the memory cache; stale/corrupt artifacts count as
+    /// invalidations (the file is already deleted by [`DiskCache::load`]).
+    fn disk_probe(&self, key: &QuantKey) -> Option<Arc<CacheEntry>> {
+        let disk = self.disk.as_ref()?;
+        match disk.load(key, self.store.fingerprint(&key.model)) {
+            Lookup::Hit(entry) => {
+                self.metrics.disk_hits.fetch_add(1, Ordering::Relaxed);
+                let evicted = self.cache.put(key.clone(), Arc::clone(&entry));
+                self.spill_evicted(evicted);
+                Some(entry)
+            }
+            Lookup::Stale => {
+                self.metrics.disk_invalidated.fetch_add(1, Ordering::Relaxed);
+                self.metrics.disk_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Lookup::Miss => {
+                self.metrics.disk_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Persist one artifact (best-effort: a full disk must not fail the
+    /// request that computed the artifact).
+    fn spill(&self, key: &QuantKey, entry: &CacheEntry) {
+        let Some(disk) = &self.disk else { return };
+        match disk.store(key, self.store.fingerprint(&key.model), entry) {
+            Ok(true) => {
+                self.metrics.disk_spills.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(false) => {} // larger than the whole disk budget
+            Err(e) => eprintln!("disk spill failed for {}: {e:#}", key.label()),
+        }
+    }
+
+    /// Mem-evicted entries land on disk too.  Write-through means they
+    /// usually already have a file; this catches artifacts the disk tier
+    /// pruned while they were memory-resident.
+    fn spill_evicted(&self, evicted: Vec<(QuantKey, Arc<CacheEntry>)>) {
+        let Some(disk) = &self.disk else { return };
+        for (k, e) in evicted {
+            if !disk.contains(&k) {
+                self.spill(&k, &e);
+            }
+        }
     }
 
     fn compute_entry(&self, key: &QuantKey) -> QuantOutcome {
@@ -605,18 +786,39 @@ mod tests {
     use std::time::Duration;
 
     fn tiny_store() -> Arc<ModelStore> {
+        tiny_store_fp(0)
+    }
+
+    /// In-memory store whose single model reports `fp` as its source
+    /// fingerprint (simulates touching the model file between restarts).
+    fn tiny_store_fp(fp: u64) -> Arc<ModelStore> {
         let (g, p) = tiny_test_graph(3, 4, 10);
         let mut models = HashMap::new();
         models.insert("tiny".to_string(), (g, p));
+        let mut fingerprints = HashMap::new();
+        fingerprints.insert("tiny".to_string(), fp);
         let test = Dataset {
             images: Tensor::zeros(&[8, 3, 8, 8]),
             labels: vec![0; 8],
         };
-        Arc::new(ModelStore { models, test })
+        Arc::new(ModelStore { models, fingerprints, test })
     }
 
     fn cfg() -> EngineCfg {
-        EngineCfg { workers: 2, queue_depth: 8, cache_cap: 4, cache_mb: 64 }
+        EngineCfg {
+            workers: 2,
+            queue_depth: 8,
+            cache_cap: 4,
+            cache_mb: 64,
+            ..EngineCfg::default()
+        }
+    }
+
+    fn disk_cfg(tag: &str) -> EngineCfg {
+        let dir = std::env::temp_dir()
+            .join(format!("squant_engine_disk_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        EngineCfg { cache_dir: Some(dir), cache_disk_mb: 64, ..cfg() }
     }
 
     fn quantize_req() -> Json {
@@ -625,7 +827,7 @@ mod tests {
 
     #[test]
     fn quantize_twice_hits_cache() {
-        let engine = Engine::new(tiny_store(), cfg());
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
         let r1 = engine.handle(&quantize_req());
         assert_eq!(r1.req("ok").unwrap(), &Json::Bool(true), "{}", r1.dump());
         assert_eq!(r1.req("cached").unwrap(), &Json::Bool(false));
@@ -643,7 +845,7 @@ mod tests {
 
     #[test]
     fn eval_reuses_quantize_cache() {
-        let engine = Engine::new(tiny_store(), cfg());
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
         let r1 = engine.handle(&quantize_req());
         assert_eq!(r1.req("ok").unwrap(), &Json::Bool(true), "{}", r1.dump());
         let ev = Json::obj()
@@ -662,7 +864,8 @@ mod tests {
     #[test]
     fn saturated_queue_returns_busy() {
         let engine =
-            Engine::new(tiny_store(), EngineCfg { workers: 1, queue_depth: 0, ..cfg() });
+            Engine::new(tiny_store(), EngineCfg { workers: 1, queue_depth: 0, ..cfg() })
+                .unwrap();
         // Occupy the single worker slot directly.
         let release = Arc::new(AtomicBool::new(false));
         let r2 = Arc::clone(&release);
@@ -692,7 +895,7 @@ mod tests {
 
     #[test]
     fn warm_prefetches_into_cache() {
-        let engine = Engine::new(tiny_store(), cfg());
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
         let warm = Json::obj().set("cmd", "warm").set("model", "tiny").set("wbits", 4usize);
         let r = engine.handle(&warm);
         assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
@@ -707,7 +910,7 @@ mod tests {
 
     #[test]
     fn rtn_method_served_and_cached_separately() {
-        let engine = Engine::new(tiny_store(), cfg());
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
         let req = Json::obj()
             .set("cmd", "quantize")
             .set("model", "tiny")
@@ -727,11 +930,19 @@ mod tests {
 
     #[test]
     fn bad_requests_are_rejected() {
-        let engine = Engine::new(tiny_store(), cfg());
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
         for req in [
             Json::obj().set("cmd", "quantize"), // missing model
             Json::obj().set("cmd", "quantize").set("model", "nope"),
             Json::obj().set("cmd", "quantize").set("model", "tiny").set("wbits", 1usize),
+            // wbits 0 shift-underflows qrange if it ever gets through.
+            Json::obj().set("cmd", "quantize").set("model", "tiny").set("wbits", 0usize),
+            // abits 1 collapses the activation grid to one level.
+            Json::obj()
+                .set("cmd", "quantize")
+                .set("model", "tiny")
+                .set("wbits", 4usize)
+                .set("abits", 1usize),
             Json::obj()
                 .set("cmd", "quantize")
                 .set("model", "tiny")
@@ -741,6 +952,119 @@ mod tests {
             let r = engine.handle(&req);
             assert_eq!(r.req("ok").unwrap(), &Json::Bool(false), "{}", r.dump());
         }
-        assert_eq!(engine.metrics.errors.load(Ordering::Relaxed), 5);
+        assert_eq!(engine.metrics.errors.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn disk_tier_survives_engine_restart() {
+        let cfg = disk_cfg("restart");
+        let r1 = {
+            let engine = Engine::new(tiny_store(), cfg.clone()).unwrap();
+            let r = engine.handle(&quantize_req());
+            assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+            assert_eq!(r.req("source").unwrap().as_str().unwrap(), "fresh");
+            // The spill runs after the response is sent; flush it before
+            // asserting and before "restarting" over the same directory.
+            engine.wait_idle();
+            assert_eq!(
+                engine.metrics.disk_spills.load(Ordering::Relaxed),
+                1,
+                "fresh artifact written through to disk"
+            );
+            r
+        };
+        // "Restart": a brand-new engine over the same cache directory must
+        // answer from disk, with the report intact, and promote to memory.
+        let engine = Engine::new(tiny_store(), cfg).unwrap();
+        assert_eq!(engine.cache.len(), 0);
+        let r2 = engine.handle(&quantize_req());
+        assert_eq!(r2.req("ok").unwrap(), &Json::Bool(true), "{}", r2.dump());
+        assert_eq!(r2.req("cached").unwrap(), &Json::Bool(true));
+        assert_eq!(r2.req("source").unwrap().as_str().unwrap(), "disk");
+        assert_eq!(
+            r2.req("layers").unwrap().as_usize().unwrap(),
+            r1.req("layers").unwrap().as_usize().unwrap()
+        );
+        assert_eq!(
+            r2.req("flips").unwrap().as_usize().unwrap(),
+            r1.req("flips").unwrap().as_usize().unwrap()
+        );
+        let r3 = engine.handle(&quantize_req());
+        assert_eq!(r3.req("source").unwrap().as_str().unwrap(), "mem");
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let disk = stats.req("cache").unwrap().req("disk").unwrap();
+        assert_eq!(disk.req("enabled").unwrap(), &Json::Bool(true));
+        assert_eq!(disk.req("hits").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(disk.req("restored").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn mem_evicted_artifact_comes_back_from_disk() {
+        // cache_cap 1: the second key evicts the first from memory; the
+        // first must then be answered by the disk tier, not recomputed.
+        let engine = Engine::new(
+            tiny_store(),
+            EngineCfg { cache_cap: 1, ..disk_cfg("evict") },
+        )
+        .unwrap();
+        let w4 = quantize_req();
+        let w8 = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "tiny")
+            .set("wbits", 8usize);
+        assert_eq!(
+            engine.handle(&w4).req("source").unwrap().as_str().unwrap(),
+            "fresh"
+        );
+        assert_eq!(
+            engine.handle(&w8).req("source").unwrap().as_str().unwrap(),
+            "fresh"
+        );
+        assert_eq!(engine.cache.len(), 1);
+        // Flush the async write-through spills before relying on disk.
+        engine.wait_idle();
+        let r = engine.handle(&w4);
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(true));
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "disk");
+    }
+
+    #[test]
+    fn fingerprint_change_invalidates_disk_artifacts() {
+        let cfg = disk_cfg("fp");
+        {
+            let engine = Engine::new(tiny_store_fp(1), cfg.clone()).unwrap();
+            let r = engine.handle(&quantize_req());
+            assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+            engine.wait_idle();
+        }
+        // The model file "changed" (fingerprint 1 → 2): the startup scan
+        // must drop the stale artifact and the request must recompute.
+        let engine = Engine::new(tiny_store_fp(2), cfg).unwrap();
+        let r = engine.handle(&quantize_req());
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(false));
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "fresh");
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let disk = stats.req("cache").unwrap().req("disk").unwrap();
+        assert!(disk.req("invalidated").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(disk.req("hits").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn warm_prefetch_uses_disk_tier() {
+        let cfg = disk_cfg("warm");
+        {
+            let engine = Engine::new(tiny_store(), cfg.clone()).unwrap();
+            engine.handle(&quantize_req());
+            engine.wait_idle();
+        }
+        let engine = Engine::new(tiny_store(), cfg).unwrap();
+        let warm =
+            Json::obj().set("cmd", "warm").set("model", "tiny").set("wbits", 4usize);
+        let r = engine.handle(&warm);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "disk");
+        // Promoted synchronously: a follow-up quantize is a memory hit.
+        let r = engine.handle(&quantize_req());
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "mem");
     }
 }

@@ -23,9 +23,17 @@ impl Json {
         Json::Obj(Vec::new())
     }
 
+    /// Set `key` on an object: replaces an existing entry in place (keeping
+    /// its position) or appends a new one, so rebuilding a parsed header
+    /// never produces duplicate keys.
     pub fn set(mut self, key: &str, val: impl Into<Json>) -> Json {
         if let Json::Obj(ref mut kv) = self {
-            kv.push((key.to_string(), val.into()));
+            let val = val.into();
+            if let Some(slot) = kv.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = val;
+            } else {
+                kv.push((key.to_string(), val));
+            }
         }
         self
     }
@@ -395,6 +403,12 @@ mod tests {
     fn builder() {
         let j = Json::obj().set("x", 3usize).set("y", "s");
         assert_eq!(j.dump(), r#"{"x":3,"y":"s"}"#);
+    }
+
+    #[test]
+    fn set_replaces_existing_key_in_place() {
+        let j = Json::obj().set("x", 1usize).set("y", 2usize).set("x", 9usize);
+        assert_eq!(j.dump(), r#"{"x":9,"y":2}"#);
     }
 
     #[test]

@@ -1,31 +1,51 @@
-//! Integration test for the serving subsystem over real TCP: ephemeral
+//! Integration tests for the serving subsystem over real TCP: ephemeral
 //! port, ping → quantize → quantize (same key) → eval → stats, asserting
 //! the repeat is a cache hit and strictly faster, and that `shutdown`
 //! stops the server without needing an extra nudge connection.
+//!
+//! The restart test exercises the disk persistence tier end-to-end with a
+//! real model file: quantize, kill the server, respawn over the same
+//! `--cache-dir` and require a disk hit (no SQuant recompute) — then touch
+//! the model file and require the stale artifact to be invalidated.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use squant::coordinator::server::{spawn, Client, ModelStore};
 use squant::io::dataset::Dataset;
+use squant::io::sqnt;
 use squant::nn::tiny_test_graph;
 use squant::serve::EngineCfg;
 use squant::tensor::Tensor;
 use squant::util::json::Json;
 
+fn test_dataset() -> Dataset {
+    Dataset {
+        images: Tensor::zeros(&[8, 3, 8, 8]),
+        labels: vec![0; 8],
+    }
+}
+
 fn tiny_store() -> Arc<ModelStore> {
     let (g, p) = tiny_test_graph(3, 4, 10);
     let mut models = HashMap::new();
     models.insert("tiny".to_string(), (g, p));
-    let test = Dataset {
-        images: Tensor::zeros(&[8, 3, 8, 8]),
-        labels: vec![0; 8],
-    };
-    Arc::new(ModelStore { models, test })
+    Arc::new(ModelStore {
+        models,
+        fingerprints: HashMap::new(),
+        test: test_dataset(),
+    })
 }
 
 fn cfg() -> EngineCfg {
-    EngineCfg { workers: 2, queue_depth: 8, cache_cap: 8, cache_mb: 64 }
+    EngineCfg {
+        workers: 2,
+        queue_depth: 8,
+        cache_cap: 8,
+        cache_mb: 64,
+        ..EngineCfg::default()
+    }
 }
 
 #[test]
@@ -43,6 +63,7 @@ fn serve_end_to_end_cache_and_stats() {
     let r1 = client.call(&quantize).unwrap();
     assert_eq!(r1.req("ok").unwrap(), &Json::Bool(true), "{}", r1.dump());
     assert_eq!(r1.req("cached").unwrap(), &Json::Bool(false));
+    assert_eq!(r1.req("source").unwrap().as_str().unwrap(), "fresh");
     assert_eq!(r1.req("layers").unwrap().as_usize().unwrap(), 2);
     let first_ms = r1.req("served_ms").unwrap().as_f64().unwrap();
 
@@ -55,6 +76,7 @@ fn serve_end_to_end_cache_and_stats() {
         let r2 = client.call(&quantize).unwrap();
         assert_eq!(r2.req("ok").unwrap(), &Json::Bool(true), "{}", r2.dump());
         assert_eq!(r2.req("cached").unwrap(), &Json::Bool(true));
+        assert_eq!(r2.req("source").unwrap().as_str().unwrap(), "mem");
         second_ms = second_ms.min(r2.req("served_ms").unwrap().as_f64().unwrap());
     }
     assert!(
@@ -82,6 +104,9 @@ fn serve_end_to_end_cache_and_stats() {
     assert!(cache.req("hits").unwrap().as_usize().unwrap() >= 6, "{}", stats.dump());
     assert_eq!(cache.req("misses").unwrap().as_usize().unwrap(), 1);
     assert_eq!(cache.req("entries").unwrap().as_usize().unwrap(), 1);
+    // No --cache-dir on this server: the disk tier reports disabled.
+    let disk = cache.req("disk").unwrap();
+    assert_eq!(disk.req("enabled").unwrap(), &Json::Bool(false));
     let reqs = stats.req("metrics").unwrap().req("requests").unwrap();
     assert_eq!(reqs.req("quantize").unwrap().as_usize().unwrap(), 6);
     assert_eq!(reqs.req("eval").unwrap().as_usize().unwrap(), 1);
@@ -121,6 +146,22 @@ fn unknown_model_and_bad_json_are_errors() {
         .unwrap();
     assert_eq!(r.req("ok").unwrap(), &Json::Bool(false));
 
+    // Degenerate bit-widths come back as clean JSON errors, not a panic in
+    // qrange's shift (wbits 0 used to abort the worker).
+    for req in [
+        Json::obj().set("cmd", "quantize").set("model", "tiny").set("wbits", 0usize),
+        Json::obj().set("cmd", "quantize").set("model", "tiny").set("wbits", 1usize),
+        Json::obj()
+            .set("cmd", "eval")
+            .set("model", "tiny")
+            .set("wbits", 4usize)
+            .set("abits", 1usize),
+    ] {
+        let r = client.call(&req).unwrap();
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(false), "{}", r.dump());
+        assert!(r.req("error").unwrap().as_str().unwrap().contains("bits"));
+    }
+
     // Malformed JSON still gets a one-line error response.
     use std::io::{BufRead, BufReader, Write};
     let mut raw = std::net::TcpStream::connect(handle.addr).unwrap();
@@ -131,4 +172,118 @@ fn unknown_model_and_bad_json_are_errors() {
     assert_eq!(resp.req("ok").unwrap(), &Json::Bool(false));
 
     handle.join();
+}
+
+// ---------------------------------------------------------------------------
+// disk persistence tier across server restarts
+// ---------------------------------------------------------------------------
+
+/// Write the tiny model as a real SQNT container (same IR the in-memory
+/// stores use, via `nn::tiny_test_header`).  `rev` lands in the header
+/// meta with a rev-dependent length, so each revision changes the file
+/// size — and therefore its fingerprint — even when the filesystem mtime
+/// granularity is coarse.
+fn write_tiny_model(path: &Path, rev: usize) {
+    let (_, params) = tiny_test_graph(3, 4, 10);
+    let mut order: Vec<String> = params.keys().cloned().collect();
+    order.sort();
+    let header = Json::parse(&squant::nn::tiny_test_header(3, 4, 10))
+        .unwrap()
+        .set("tensors", sqnt::rebuild_tensor_table(&params, &order).unwrap())
+        .set("meta", Json::obj().set("rev", "r".repeat(rev + 1)));
+    sqnt::save(path, &header, &params).unwrap();
+}
+
+fn file_store(model_path: &PathBuf) -> Arc<ModelStore> {
+    Arc::new(
+        ModelStore::from_sqnt_files(
+            &[("tiny".to_string(), model_path.clone())],
+            test_dataset(),
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn restart_warm_start_and_fingerprint_invalidation() {
+    let dir = std::env::temp_dir()
+        .join(format!("squant_restart_warm_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("tiny.sqnt");
+    write_tiny_model(&model_path, 0);
+    let cfg = EngineCfg {
+        cache_dir: Some(dir.join("cache")),
+        cache_disk_mb: 64,
+        ..cfg()
+    };
+    let quantize = Json::obj()
+        .set("cmd", "quantize")
+        .set("model", "tiny")
+        .set("wbits", 4usize);
+    let shutdown = Json::parse(r#"{"cmd":"shutdown"}"#).unwrap();
+
+    // 1. Cold start: the artifact is computed fresh and spilled to disk.
+    let fresh_flips;
+    {
+        let handle = spawn(file_store(&model_path), "127.0.0.1:0", cfg.clone())
+            .unwrap();
+        let mut client = Client::connect(&handle.addr.to_string()).unwrap();
+        let r = client.call(&quantize).unwrap();
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(false));
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "fresh");
+        fresh_flips = r.req("flips").unwrap().as_usize().unwrap();
+        let _ = client.call(&shutdown).unwrap();
+        handle.join();
+    }
+
+    // 2. Restart over the same cache dir: the same request must be served
+    //    from disk (no SQuant recompute) with the full report intact.
+    {
+        let handle = spawn(file_store(&model_path), "127.0.0.1:0", cfg.clone())
+            .unwrap();
+        let mut client = Client::connect(&handle.addr.to_string()).unwrap();
+        let r = client.call(&quantize).unwrap();
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(true));
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "disk");
+        assert_eq!(r.req("layers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(r.req("flips").unwrap().as_usize().unwrap(), fresh_flips);
+
+        let stats = client
+            .call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap())
+            .unwrap();
+        let disk = stats.req("cache").unwrap().req("disk").unwrap();
+        assert_eq!(disk.req("enabled").unwrap(), &Json::Bool(true));
+        assert_eq!(disk.req("restored").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(disk.req("hits").unwrap().as_usize().unwrap(), 1);
+        let _ = client.call(&shutdown).unwrap();
+        handle.join();
+    }
+
+    // 3. Touch the model file: the cached artifact is now stale and must be
+    //    invalidated — the request recomputes instead of serving old bits.
+    write_tiny_model(&model_path, 1);
+    {
+        let handle = spawn(file_store(&model_path), "127.0.0.1:0", cfg).unwrap();
+        let mut client = Client::connect(&handle.addr.to_string()).unwrap();
+        let r = client.call(&quantize).unwrap();
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(false));
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "fresh");
+
+        let stats = client
+            .call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap())
+            .unwrap();
+        let disk = stats.req("cache").unwrap().req("disk").unwrap();
+        assert!(
+            disk.req("invalidated").unwrap().as_usize().unwrap() >= 1,
+            "{}",
+            stats.dump()
+        );
+        assert_eq!(disk.req("restored").unwrap().as_usize().unwrap(), 0);
+        let _ = client.call(&shutdown).unwrap();
+        handle.join();
+    }
 }

@@ -1,0 +1,157 @@
+//! Adversarial/corrupted SQNT containers: every malformed input must come
+//! back as a clean `Err`, never a panic or a silently-corrupted tensor.
+//! The disk cache tier feeds artifact files straight into this codec, and
+//! a cache directory is ordinary mutable filesystem state — so the decoder
+//! is a trust boundary.
+
+use squant::io::sqnt;
+use std::path::PathBuf;
+
+/// Assemble raw container bytes: magic | version | header_len | header |
+/// f32le payload.
+fn container(version: u32, header: &str, floats: &[f32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"SQNT");
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for v in floats {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn write_case(tag: &str, bytes: &[u8]) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("sqnt_adversarial_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}.sqnt"));
+    std::fs::write(&path, bytes).unwrap();
+    path
+}
+
+/// Load must error (not panic); the message should mention `needle` so the
+/// operator can tell which validation fired.
+fn assert_rejected(tag: &str, bytes: &[u8], needle: &str) {
+    let path = write_case(tag, bytes);
+    let err = match sqnt::load(&path) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("{tag}: load unexpectedly succeeded"),
+    };
+    assert!(
+        err.to_lowercase().contains(needle),
+        "{tag}: error {err:?} should mention {needle:?}"
+    );
+}
+
+fn header_with_table(table: &str) -> String {
+    format!(r#"{{"name":"t","tensors":[{table}]}}"#)
+}
+
+#[test]
+fn truncated_payload_is_an_error() {
+    let h = header_with_table(r#"{"name":"w","shape":[6],"offset":0,"numel":6}"#);
+    // Declares 6 floats, ships 4.
+    assert_rejected(
+        "truncated_payload",
+        &container(1, &h, &[1., 2., 3., 4.]),
+        "exceeds payload",
+    );
+}
+
+#[test]
+fn offset_past_end_is_an_error() {
+    let h = header_with_table(r#"{"name":"w","shape":[2],"offset":1000,"numel":2}"#);
+    assert_rejected(
+        "offset_past_end",
+        &container(1, &h, &[0.0; 4]),
+        "exceeds payload",
+    );
+}
+
+#[test]
+fn overlapping_offsets_are_an_error() {
+    let h = header_with_table(
+        r#"{"name":"a","shape":[4],"offset":0,"numel":4},
+           {"name":"b","shape":[4],"offset":2,"numel":4}"#,
+    );
+    assert_rejected(
+        "overlapping_offsets",
+        &container(1, &h, &[0.0; 6]),
+        "overlap",
+    );
+}
+
+#[test]
+fn oversized_header_is_an_error() {
+    // header_len claims almost 4 GiB in a 40-byte file; the old unchecked
+    // `pos + hlen` could wrap instead of failing.
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"SQNT");
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    bytes.extend_from_slice(&[b'{'; 28]);
+    assert_rejected("oversized_header", &bytes, "truncated header");
+}
+
+#[test]
+fn huge_offset_overflow_is_an_error() {
+    // offset saturates to usize::MAX through the JSON f64 path; the old
+    // `payload_start + 4 * offset` arithmetic overflowed and panicked.
+    let h = header_with_table(
+        r#"{"name":"w","shape":[4],"offset":1e300,"numel":4}"#,
+    );
+    assert_rejected(
+        "huge_offset",
+        &container(1, &h, &[0.0; 4]),
+        "exceeds payload",
+    );
+}
+
+#[test]
+fn shape_product_overflow_is_an_error() {
+    let h = header_with_table(
+        r#"{"name":"w","shape":[100000000000,100000000000],"offset":0,"numel":4}"#,
+    );
+    assert_rejected(
+        "shape_overflow",
+        &container(1, &h, &[0.0; 4]),
+        "overflow",
+    );
+}
+
+#[test]
+fn numel_shape_mismatch_is_an_error() {
+    let h = header_with_table(r#"{"name":"w","shape":[2,2],"offset":0,"numel":5}"#);
+    assert_rejected(
+        "numel_mismatch",
+        &container(1, &h, &[0.0; 5]),
+        "numel",
+    );
+}
+
+#[test]
+fn wrong_version_and_magic_are_errors() {
+    let h = header_with_table(r#"{"name":"w","shape":[1],"offset":0,"numel":1}"#);
+    assert_rejected("wrong_version", &container(9, &h, &[0.0]), "version");
+    let mut bad_magic = container(1, &h, &[0.0]);
+    bad_magic[0..4].copy_from_slice(b"NOPE");
+    assert_rejected("bad_magic", &bad_magic, "not a sqnt container");
+}
+
+#[test]
+fn valid_gapped_payload_still_loads() {
+    // Gaps (non-contiguous but in-bounds, non-overlapping) are legal on
+    // load — only writes require a gap-free permutation.
+    let h = header_with_table(
+        r#"{"name":"a","shape":[2],"offset":4,"numel":2},
+           {"name":"b","shape":[2],"offset":0,"numel":2}"#,
+    );
+    let path = write_case(
+        "gapped_ok",
+        &container(1, &h, &[9., 8., 0., 0., 1., 2.]),
+    );
+    let c = sqnt::load(&path).unwrap();
+    assert_eq!(c.params["a"].data, vec![1., 2.]);
+    assert_eq!(c.params["b"].data, vec![9., 8.]);
+}
