@@ -18,8 +18,10 @@ pub mod server;
 use anyhow::{Context, Result};
 use std::time::Instant;
 
+use crate::baselines::rtn;
 use crate::io::manifest::{Manifest, SquantShape};
 use crate::nn::{Graph, Params, QuantLayer};
+use crate::quant::spec::{Method, QuantSpec};
 use crate::quant::{channel_scales, QuantConfig};
 use crate::runtime::Runtime;
 use crate::squant::{squant, SquantOpts, SquantResult};
@@ -33,6 +35,9 @@ pub struct LayerReport {
     pub m: usize,
     pub n: usize,
     pub k: usize,
+    /// Effective weight bit-width of this layer (32 = left at FP32) — the
+    /// per-layer mixed-precision story in one column.
+    pub bits: usize,
     pub ms: f64,
     pub flips_k: usize,
     pub flips_c: usize,
@@ -87,6 +92,7 @@ pub fn quantize_model(
             m: layer.m,
             n: layer.n,
             k: layer.k,
+            bits: opts.bits,
             ms,
             flips_k: res.flips_k,
             flips_c: res.flips_c,
@@ -95,6 +101,78 @@ pub fn quantize_model(
         out.insert(layer.weight, res.wq);
     }
     (out, QuantReport { layers: reports, total_ms, wall_ms })
+}
+
+/// Quantize every conv/linear layer according to a [`QuantSpec`], layers in
+/// parallel — the serving engine's compute path and the substrate behind
+/// per-layer mixed precision.  Each layer resolves its effective
+/// (bit-width, method) from the spec's overrides; `fp32` layers are left
+/// untouched (reported at 32 bits with zero flips), `rtn` layers go through
+/// the dedicated baseline, and SQuant layers run the requested stage set.
+/// The spec's scale method applies to every quantized layer.
+///
+/// Callers validate the spec at the boundary ([`QuantSpec::validate`] +
+/// `validate_layers`); this only refuses methods with no per-layer path.
+pub fn quantize_model_spec(
+    graph: &Graph,
+    params: &Params,
+    spec: &QuantSpec,
+    threads: usize,
+) -> Result<(Params, QuantReport), String> {
+    let layers = graph.quant_layers();
+    let t0 = Instant::now();
+    type LayerOut = (QuantLayer, usize, Option<Tensor>, usize, usize, f64);
+    let results: Vec<Result<LayerOut, String>> =
+        parallel_map(layers.len(), threads, |i| {
+            let layer = layers[i].clone();
+            let w = &params[&layer.weight];
+            let (bits, method) = spec.effective(&layer.weight);
+            let lt = Instant::now();
+            let (bits, wq, fk, fc) = match method {
+                Method::Fp32 => (32, None, 0, 0),
+                Method::Rtn => {
+                    (bits, Some(rtn::quantize_layer(w, bits, spec.scale)), 0, 0)
+                }
+                Method::Squant { enable_k, enable_c } => {
+                    let cfg = QuantConfig { bits, scale: spec.scale };
+                    let scales = channel_scales(w, cfg);
+                    let res =
+                        squant(w, &scales, SquantOpts { bits, enable_k, enable_c });
+                    (bits, Some(res.wq), res.flips_k, res.flips_c)
+                }
+                other => {
+                    return Err(format!(
+                        "method '{}' has no per-layer quantization path",
+                        other.label()
+                    ))
+                }
+            };
+            let ms = lt.elapsed().as_secs_f64() * 1e3;
+            Ok((layer, bits, wq, fk, fc, ms))
+        });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut out = params.clone();
+    let mut reports = Vec::new();
+    let mut total_ms = 0.0;
+    for r in results {
+        let (layer, bits, wq, flips_k, flips_c, ms) = r?;
+        reports.push(LayerReport {
+            weight: layer.weight.clone(),
+            m: layer.m,
+            n: layer.n,
+            k: layer.k,
+            bits,
+            ms,
+            flips_k,
+            flips_c,
+        });
+        total_ms += ms;
+        if let Some(wq) = wq {
+            out.insert(layer.weight, wq);
+        }
+    }
+    Ok((out, QuantReport { layers: reports, total_ms, wall_ms }))
 }
 
 /// Quantize via the AOT JAX/Pallas artifacts (PJRT offload).  Layers whose
@@ -138,6 +216,7 @@ pub fn quantize_model_offload(
             m: layer.m,
             n: layer.n,
             k: layer.k,
+            bits,
             ms,
             flips_k: fk,
             flips_c: fc,
@@ -171,5 +250,51 @@ mod tests {
         let (_, r) = quantize_model(&g, &p, SquantOpts::full(8), 2);
         assert!(r.avg_layer_ms() >= 0.0);
         assert!(r.wall_ms <= r.total_ms + 50.0); // sanity
+    }
+
+    #[test]
+    fn uniform_spec_matches_squant_opts_path() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let (q1, r1) = quantize_model(&g, &p, SquantOpts::full(4), 2);
+        let spec = QuantSpec::uniform(Method::squant_full(), 4, 0);
+        let (q2, r2) = quantize_model_spec(&g, &p, &spec, 2).unwrap();
+        assert_eq!(q1["w1"].data, q2["w1"].data);
+        assert_eq!(q1["wfc"].data, q2["wfc"].data);
+        assert_eq!(r1.layers.len(), r2.layers.len());
+        assert!(r2.layers.iter().all(|l| l.bits == 4));
+        for (a, b) in r1.layers.iter().zip(&r2.layers) {
+            assert_eq!((a.flips_k, a.flips_c), (b.flips_k, b.flips_c));
+        }
+    }
+
+    #[test]
+    fn spec_overrides_flow_per_layer() {
+        use crate::quant::spec::LayerOverride;
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        // Base w4 SQuant; the classifier at w8, the conv left at FP32.
+        let spec = QuantSpec::uniform(Method::squant_full(), 4, 0)
+            .with_override("wfc", LayerOverride { wbits: Some(8), method: None })
+            .with_override(
+                "w1",
+                LayerOverride { wbits: None, method: Some(Method::Fp32) },
+            );
+        let (q, r) = quantize_model_spec(&g, &p, &spec, 1).unwrap();
+        // FP32 override: the conv weight is bit-identical to the source.
+        assert_eq!(q["w1"].data, p["w1"].data);
+        // w8 override: matches a uniform w8 run of the same layer.
+        let (q8, _) = quantize_model(&g, &p, SquantOpts::full(8), 1);
+        assert_eq!(q["wfc"].data, q8["wfc"].data);
+        let by_name: std::collections::HashMap<&str, &LayerReport> =
+            r.layers.iter().map(|l| (l.weight.as_str(), l)).collect();
+        assert_eq!(by_name["w1"].bits, 32);
+        assert_eq!(by_name["w1"].flips_k + by_name["w1"].flips_c, 0);
+        assert_eq!(by_name["wfc"].bits, 8);
+    }
+
+    #[test]
+    fn spec_rejects_whole_model_methods() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let spec = QuantSpec::uniform(Method::Dfq, 4, 0);
+        assert!(quantize_model_spec(&g, &p, &spec, 1).is_err());
     }
 }

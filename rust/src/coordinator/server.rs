@@ -2,18 +2,29 @@
 //!
 //! Protocol (one JSON object per line, response is one JSON line):
 //!   {"cmd":"ping"}
-//!   {"cmd":"models"}
-//!   {"cmd":"quantize","model":"miniresnet18","wbits":4[,"abits":A][,"method":"squant|squant-e|squant-ek|squant-ec|rtn"]}
+//!   {"cmd":"models"}          names + per-model quantizable layer names
+//!   {"cmd":"quantize","model":"miniresnet18","wbits":4[,"abits":A][,"method":M][,"scale":S]}
+//!   {"cmd":"quantize","model":"miniresnet18","spec":{"wbits":4,"abits":8,
+//!        "method":"squant","scale":"max-abs",
+//!        "layers":{"conv1":{"wbits":8},"fc":{"wbits":8,"method":"rtn"}}}}
 //!   {"cmd":"eval","model":"miniresnet18","wbits":4,"abits":8,"samples":512}
 //!   {"cmd":"warm","model":"miniresnet18","wbits":4}      prefetch into cache
 //!   {"cmd":"stats"}                                      counters + latency
 //!   {"cmd":"shutdown"}
 //!
+//! `quantize`/`eval`/`warm` all take either the legacy flat fields
+//! (`wbits`/`abits`/`method`/`scale`) or a `spec` — a canonical
+//! [`crate::quant::spec::QuantSpec`] as an object or a spec string
+//! (`"w4a8:squant:max-abs;fc=w8"`).  Both forms canonicalize to the same
+//! cache key; the spec form additionally expresses per-layer bit-width /
+//! stage-set overrides (mixed precision) and the scale method.
+//!
 //! Responses always carry `"ok"`.  `quantize`/`eval` add `"cached"`,
-//! `"source"` (`mem|disk|flight|fresh` — disk is the persistence tier that
-//! survives restarts) and `"served_ms"`.  When the bounded job queue is
-//! full the server answers `{"ok":false,"error":"busy","retry_ms":N}`
-//! instead of queueing unboundedly — clients should back off and retry.
+//! `"spec"` (the canonical spec served), `"source"` (`mem|disk|flight|
+//! fresh` — disk is the persistence tier that survives restarts) and
+//! `"served_ms"`.  When the bounded job queue is full the server answers
+//! `{"ok":false,"error":"busy","retry_ms":N}` instead of queueing
+//! unboundedly — clients should back off and retry.
 //!
 //! This module is a thin protocol layer: every request is dispatched to
 //! [`crate::serve::Engine`], which owns the artifact cache, single-flight

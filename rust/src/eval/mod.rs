@@ -9,75 +9,20 @@ use anyhow::Result;
 use std::time::Instant;
 
 use crate::baselines::synth::SynthConfig;
-use crate::baselines::{adaround, dfq, dsg, gdfq, rtn, synth, zeroq};
+use crate::baselines::{adaround, dfq, dsg, gdfq, synth, zeroq};
 use crate::hessian::empirical_xxt;
+use crate::io::dataset::Dataset;
 use crate::nn::actrange::data_free_ranges;
 use crate::nn::engine::{forward, ActQuant};
 use crate::nn::{Graph, Op, Params};
-use crate::io::dataset::Dataset;
-use crate::quant::{channel_scales, QuantConfig, ScaleMethod};
-use crate::squant::{squant, SquantOpts};
+use crate::quant::spec::QuantSpec;
 use crate::tensor::Tensor;
 use crate::util::pool::parallel_map;
 
-/// Every quantization method the tables compare.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    Fp32,
-    /// Plain per-channel round-to-nearest (baselines::rtn) — numerically
-    /// identical to `Squant { enable_k: false, enable_c: false }` (both are
-    /// max-abs scales + RTN; asserted by `rtn_method_matches_squant_e`),
-    /// but routed through the dedicated baseline for clarity.
-    Rtn,
-    /// DFQ (Nagel'19): fold + equalize + bias correct + RTN.
-    Dfq,
-    /// ZeroQ-lite.
-    ZeroQ,
-    /// DSG-lite.
-    Dsg,
-    /// GDFQ-lite.
-    Gdfq,
-    /// SQuant with configurable stages (Table 4 ablation).
-    Squant { enable_k: bool, enable_c: bool },
-    /// ZeroQ/DSG synthetic data + AdaRound-lite (Table 5).
-    AdaRound { diverse: bool },
-}
-
-impl Method {
-    pub fn squant_full() -> Method {
-        Method::Squant { enable_k: true, enable_c: true }
-    }
-
-    pub fn name(&self) -> String {
-        match self {
-            Method::Fp32 => "Baseline".into(),
-            Method::Rtn => "RTN".into(),
-            Method::Dfq => "DFQ".into(),
-            Method::ZeroQ => "ZeroQ".into(),
-            Method::Dsg => "DSG".into(),
-            Method::Gdfq => "GDFQ".into(),
-            Method::Squant { enable_k, enable_c } => {
-                SquantOpts { bits: 0, enable_k: *enable_k, enable_c: *enable_c }
-                    .label()
-                    .into()
-            }
-            Method::AdaRound { diverse: false } => "ZeroQ+AdaRound".into(),
-            Method::AdaRound { diverse: true } => "DSG+AdaRound".into(),
-        }
-    }
-
-    /// Paper-table metadata: does the method need back-propagation (here:
-    /// iterative synthetic-data generation) / synthetic data / fine-tuning?
-    pub fn no_bp(&self) -> bool {
-        matches!(
-            self,
-            Method::Fp32 | Method::Rtn | Method::Dfq | Method::Squant { .. }
-        )
-    }
-    pub fn no_ft(&self) -> bool {
-        !matches!(self, Method::Gdfq)
-    }
-}
+/// The one method enum (every row label that appears in the paper's
+/// tables) lives with the canonical spec; re-exported here so table code
+/// keeps reading `eval::Method`.
+pub use crate::quant::spec::Method;
 
 /// A quantized model ready for evaluation.
 pub struct Quantized {
@@ -103,6 +48,8 @@ impl Default for CalibCfg {
 }
 
 /// Apply `method` at (wbits, abits) — abits == 0 means FP32 activations.
+/// Thin wrapper over [`quantize_with_spec`] with a uniform (no-override,
+/// max-abs) spec.
 pub fn quantize_with(
     method: Method,
     graph: &Graph,
@@ -111,18 +58,60 @@ pub fn quantize_with(
     abits: usize,
     calib: CalibCfg,
 ) -> Result<Quantized> {
+    quantize_with_spec(&QuantSpec::uniform(method, wbits, abits), graph, params, calib)
+}
+
+/// Quantize a model according to a full [`QuantSpec`].  Per-layer methods
+/// (fp32/rtn/squant*) honour per-layer bit-width/stage overrides and the
+/// spec's scale method via [`crate::coordinator::quantize_model_spec`]; the
+/// calibration baselines stay whole-model (the spec validator rejects
+/// overrides for them).
+pub fn quantize_with_spec(
+    spec: &QuantSpec,
+    graph: &Graph,
+    params: &Params,
+    calib: CalibCfg,
+) -> Result<Quantized> {
+    spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+    spec.validate_layers(graph.quant_layers().iter().map(|l| l.weight.as_str()))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let (wbits, abits) = (spec.wbits, spec.abits);
     let t0 = Instant::now();
-    let mut out = match method {
-        Method::Fp32 => Quantized {
+    let mut out = if spec.method == Method::Fp32 && !spec.has_overrides() {
+        // The FP32 baseline row: no weight change, no activation grid.
+        Quantized {
             graph: graph.clone(),
             params: params.clone(),
             act: None,
             quant_ms: 0.0,
-        },
-        Method::Rtn => {
-            let p = rtn::quantize_model(graph, params, wbits, ScaleMethod::MaxAbs);
-            let act = (abits > 0).then(|| data_free_ranges(graph, &p, abits));
-            Quantized { graph: graph.clone(), params: p, act, quant_ms: 0.0 }
+        }
+    } else if spec.method.per_layer() {
+        let (p, _report) =
+            crate::coordinator::quantize_model_spec(graph, params, spec, 1)
+                .map_err(|e| anyhow::anyhow!(e))?;
+        let act = (abits > 0).then(|| data_free_ranges(graph, &p, abits));
+        Quantized { graph: graph.clone(), params: p, act, quant_ms: 0.0 }
+    } else {
+        quantize_calibrated(spec.method, graph, params, wbits, abits, calib)?
+    };
+    out.quant_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(out)
+}
+
+/// The whole-model calibration baselines (synthetic data / BN statistics)
+/// behind [`quantize_with_spec`] — no per-layer path, so never any
+/// overrides.
+fn quantize_calibrated(
+    method: Method,
+    graph: &Graph,
+    params: &Params,
+    wbits: usize,
+    abits: usize,
+    calib: CalibCfg,
+) -> Result<Quantized> {
+    Ok(match method {
+        Method::Fp32 | Method::Rtn | Method::Squant { .. } => {
+            unreachable!("per-layer methods never reach quantize_calibrated")
         }
         Method::Dfq => {
             let r = dfq::quantize_model(graph, params, wbits);
@@ -155,18 +144,6 @@ pub fn quantize_with(
                 graph: graph.clone(), params: r.params, act: r.act,
                 quant_ms: 0.0,
             }
-        }
-        Method::Squant { enable_k, enable_c } => {
-            let opts = SquantOpts { bits: wbits, enable_k, enable_c };
-            let mut p = params.clone();
-            for layer in graph.quant_layers() {
-                let w = &params[&layer.weight];
-                let scales = channel_scales(w, QuantConfig::new(wbits));
-                let res = squant(w, &scales, opts);
-                p.insert(layer.weight.clone(), res.wq);
-            }
-            let act = (abits > 0).then(|| data_free_ranges(graph, &p, abits));
-            Quantized { graph: graph.clone(), params: p, act, quant_ms: 0.0 }
         }
         Method::AdaRound { diverse } => {
             let cfg = if diverse {
@@ -208,15 +185,18 @@ pub fn quantize_with(
             };
             Quantized { graph: graph.clone(), params: p, act, quant_ms: 0.0 }
         }
-    };
-    out.quant_ms = t0.elapsed().as_secs_f64() * 1e3;
-    Ok(out)
+    })
 }
 
 /// If a model was quantized via a plain-RTN-style path, mirror the paper's
 /// DFQ row at W4A4 collapsing — kept for completeness (unused helper).
 pub fn quantize_rtn_only(graph: &Graph, params: &Params, wbits: usize) -> Params {
-    rtn::quantize_model(graph, params, wbits, ScaleMethod::MaxAbs)
+    crate::baselines::rtn::quantize_model(
+        graph,
+        params,
+        wbits,
+        crate::quant::ScaleMethod::MaxAbs,
+    )
 }
 
 /// Top-1 accuracy over a dataset (parallel over batches).
@@ -317,6 +297,32 @@ mod tests {
             );
         }
         assert_eq!(Method::Rtn.name(), "RTN");
+    }
+
+    /// Per-layer overrides flow through the spec path: the overridden
+    /// layer matches a uniform run at the override bits, the rest match
+    /// the base bits, and bogus layer names are rejected at the boundary.
+    #[test]
+    fn spec_overrides_reach_quantize_with_spec() {
+        use crate::quant::spec::LayerOverride;
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let calib = CalibCfg { batch: 4, iters: 2, seed: 1 };
+        let spec = QuantSpec::uniform(Method::squant_full(), 4, 0)
+            .with_override("wfc", LayerOverride { wbits: Some(8), method: None });
+        let mixed = quantize_with_spec(&spec, &g, &p, calib).unwrap();
+        let w4 = quantize_with(Method::squant_full(), &g, &p, 4, 0, calib).unwrap();
+        let w8 = quantize_with(Method::squant_full(), &g, &p, 8, 0, calib).unwrap();
+        assert_eq!(mixed.params["w1"].data, w4.params["w1"].data);
+        assert_eq!(mixed.params["wfc"].data, w8.params["wfc"].data);
+
+        let bad = QuantSpec::uniform(Method::squant_full(), 4, 0)
+            .with_override("nope", LayerOverride { wbits: Some(8), method: None });
+        let err = quantize_with_spec(&bad, &g, &p, calib).unwrap_err();
+        assert!(err.to_string().contains("unknown layer"), "{err:#}");
+        // Overrides on whole-model calibration baselines are rejected too.
+        let bad = QuantSpec::uniform(Method::Dfq, 4, 0)
+            .with_override("w1", LayerOverride { wbits: Some(8), method: None });
+        assert!(quantize_with_spec(&bad, &g, &p, calib).is_err());
     }
 
     #[test]

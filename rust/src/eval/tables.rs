@@ -65,7 +65,7 @@ fn acc_row(
                         default_threads())?;
     Ok(AccRow {
         arch: arch.to_string(),
-        method: method.name(),
+        method: method.name().to_string(),
         no_bp: method.no_bp(),
         no_ft: method.no_ft(),
         wbits,

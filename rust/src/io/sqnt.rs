@@ -3,7 +3,9 @@
 //! Layout: b"SQNT" | version u32 | header_len u32 | header JSON | f32le
 //! payload.  The header embeds the model IR (nodes) and the tensor table
 //! (name, shape, offset-in-floats, numel).  The writer is used to export
-//! quantized models back to disk.
+//! quantized models back to disk.  The serving disk tier reuses the same
+//! container with an `artifact` header object (carrying the canonical
+//! quantization spec) instead of a model IR — see `serve::disk`.
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;

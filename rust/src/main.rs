@@ -4,7 +4,9 @@
 //!   squant info                          artifact + runtime status
 //!   squant zoo                           list models + FP32 accuracy
 //!   squant quantize --model M --bits B   on-the-fly SQuant + per-layer report
+//!                [--scale S] [--layer-bits n=b,...] [--spec SPEC]
 //!   squant eval --model M --wbits B [--abits A] [--method squant|rtn|dfq|...]
+//!                [--scale S] [--layer-bits n=b,...] [--spec SPEC]
 //!   squant e2e                           end-to-end driver (quantize + eval,
 //!                                        native and PJRT paths)
 //!   squant serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
@@ -13,19 +15,28 @@
 //!                TCP quantization service (mem LRU + disk persistence +
 //!                single-flight + bounded scheduler; see serve/)
 //!   squant bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--reqs N]
-//!                [--restart-warm]   load-generate against a serve instance:
+//!                [--restart-warm] [--mixed-keys]
+//!                load-generate against a serve instance:
 //!                req/s, hit-rate, latency quantiles, busy rejections; with
 //!                --spawn --cache-dir --restart-warm, also restart the
 //!                server and measure warm-start disk hits
 //!
+//! Quantization is described everywhere by ONE canonical spec
+//! (`quant::spec::QuantSpec`): `--spec "w4a8:squant:max-abs;fc=w8"` is the
+//! string form; `--wbits/--abits/--method/--scale/--layer-bits` assemble
+//! the same spec from flags.  Per-layer overrides are the mixed-precision
+//! lever (e.g. first/last layers at 8 bits, the rest at 4).
+//!
 //! Every command takes --artifacts DIR (default ./artifacts).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use squant::coordinator::{self, server};
-use squant::eval::{self, report::AccRow, CalibCfg, Method};
+use squant::eval::{self, report::AccRow, CalibCfg};
 use squant::io::{dataset, manifest::Manifest, sqnt};
 use squant::nn::Graph;
+use squant::quant::spec::{self, LayerOverride, Method, QuantSpec};
+use squant::quant::ScaleMethod;
 use squant::serve::EngineCfg;
 use squant::squant as sq;
 use squant::util::cli::Args;
@@ -40,32 +51,63 @@ fn load_model(man: &Manifest, name: &str)
     Ok((graph, params, c))
 }
 
-/// Screen user-supplied bit-widths before any quantizer math runs
-/// (`quant::qrange` shift-underflows on 0 bits and degenerates on 1).
-fn check_bits(wbits: usize, abits: usize) -> Result<()> {
-    squant::quant::validate_wbits(wbits).map_err(|e| anyhow::anyhow!(e))?;
-    squant::quant::validate_abits(abits).map_err(|e| anyhow::anyhow!(e))?;
-    Ok(())
-}
-
-fn parse_method(s: &str) -> Result<Method> {
-    Ok(match s {
-        "squant" => Method::squant_full(),
-        "squant-e" => Method::Squant { enable_k: false, enable_c: false },
-        "squant-ek" => Method::Squant { enable_k: true, enable_c: false },
-        "squant-ec" => Method::Squant { enable_k: false, enable_c: true },
-        // The dedicated RTN baseline (bit-identical to SQuant-E; see
-        // eval::tests::rtn_method_matches_squant_e).
-        "rtn" => Method::Rtn,
-        "dfq" => Method::Dfq,
-        "zeroq" => Method::ZeroQ,
-        "dsg" => Method::Dsg,
-        "gdfq" => Method::Gdfq,
-        "adaround" => Method::AdaRound { diverse: false },
-        "dsg-adaround" => Method::AdaRound { diverse: true },
-        "fp32" => Method::Fp32,
-        other => bail!("unknown method '{other}'"),
-    })
+/// Build the quantization spec from CLI flags: either `--spec` (the full
+/// canonical form, see `quant::spec`) or the flat
+/// `--<wbits_key>/--abits/--method/--scale` flags, plus
+/// `--layer-bits name=bits,...` mixed-precision overrides on top of either
+/// form.  Everything routes through the one spec parser and the one
+/// validation point in `quant::spec` — there is no CLI-private method or
+/// bit-width screening anymore.
+fn spec_from_cli(
+    args: &mut Args,
+    wbits_key: &str,
+    def_wbits: usize,
+    def_abits: usize,
+) -> Result<QuantSpec> {
+    let spec_str = args.opt("spec");
+    let wbits = args.opt(wbits_key);
+    let abits = args.opt("abits");
+    let method = args.opt("method");
+    let scale = args.opt("scale");
+    let mut spec = match spec_str {
+        Some(s) => {
+            if wbits.is_some() || abits.is_some() || method.is_some() || scale.is_some() {
+                bail!(
+                    "--spec already carries bits/method/scale; \
+                     drop --{wbits_key}/--abits/--method/--scale"
+                );
+            }
+            QuantSpec::parse(&s).map_err(|e| anyhow!(e))?
+        }
+        None => QuantSpec {
+            wbits: match wbits {
+                Some(v) => v.parse().map_err(|e| anyhow!("--{wbits_key}: {e}"))?,
+                None => def_wbits,
+            },
+            abits: match abits {
+                Some(v) => v.parse().map_err(|e| anyhow!("--abits: {e}"))?,
+                None => def_abits,
+            },
+            method: Method::parse(method.as_deref().unwrap_or("squant"))
+                .map_err(|e| anyhow!(e))?,
+            scale: spec::parse_scale(scale.as_deref().unwrap_or("max-abs"))
+                .map_err(|e| anyhow!(e))?,
+            overrides: Vec::new(),
+        },
+    };
+    for part in args.list_or("layer-bits", "") {
+        let (name, bits) = part.split_once('=').ok_or_else(|| {
+            anyhow!("--layer-bits: expected name=bits, got '{part}'")
+        })?;
+        let bits: usize = bits
+            .parse()
+            .map_err(|e| anyhow!("--layer-bits {name}: {e}"))?;
+        spec = spec
+            .with_override(name, LayerOverride { wbits: Some(bits), method: None });
+    }
+    let spec = spec.normalized();
+    spec.validate().map_err(|e| anyhow!(e))?;
+    Ok(spec)
 }
 
 fn main() -> Result<()> {
@@ -99,30 +141,42 @@ COMMANDS:
   info                         artifact inventory + PJRT platform
   zoo                          models + stored FP32 test accuracy
   quantize --model M --bits B  SQuant the model, print per-layer timing
-          [--threads T] [--offload]
+          [--threads T] [--offload] [--scale S] [--layer-bits n=b,...]
+          [--spec SPEC]
   eval    --model M --wbits B [--abits A] [--method NAME] [--samples N]
+          [--scale S] [--layer-bits n=b,...] [--spec SPEC]
   e2e     [--model M] [--wbits B] [--abits A]   full end-to-end driver
   serve   [--addr HOST:PORT] [--workers N] [--queue-depth N]
           [--cache-cap N] [--cache-mb MB]       TCP quantization service
           [--cache-dir DIR] [--cache-disk-mb MB]
           protocol verbs: ping models quantize eval warm stats shutdown
-          (quantize/eval hit an LRU artifact cache; identical concurrent
-          requests share one run; a full queue answers
-          {\"ok\":false,\"error\":\"busy\",\"retry_ms\":N})
+          (quantize/eval/warm take the flat wbits/abits/method/scale
+          fields or a \"spec\" object/string; quantize/eval hit an LRU
+          artifact cache; identical concurrent requests share one run; a
+          full queue answers {\"ok\":false,\"error\":\"busy\",\"retry_ms\":N})
           --cache-dir enables the disk persistence tier: artifacts are
           spilled as versioned SQNT files and survive restarts, bounded
           by --cache-disk-mb (default 1024); stale artifacts (source
           model file changed) are invalidated automatically
   bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--reqs N]
           [--models A,B] [--wbits 8,4] [--eval-every N] [--samples N]
-          [--seed S] [--restart-warm]   load-generate against a server;
-          prints req/s, cache hit-rate, p50/p95/p99 latency and busy
-          rejections.  --restart-warm (with --spawn and --cache-dir)
-          restarts the spawned server after the load phase and replays
-          every key once to measure disk-tier warm-start
+          [--seed S] [--restart-warm] [--mixed-keys]
+          load-generate against a server; prints req/s, cache hit-rate,
+          p50/p95/p99 latency and busy rejections.  --mixed-keys samples
+          heterogeneous specs (bits x stage sets x scales x per-layer
+          overrides) instead of uniform keys.  --restart-warm (with
+          --spawn and --cache-dir) restarts the spawned server after the
+          load phase and replays every key once to measure disk-tier
+          warm-start
+
+SPEC:   w<W>a<A>:<method>:<scale>[;<layer>=<override>]*
+        e.g. \"w4a8:squant:max-abs;conv1=w8;fc=w8/rtn\" — overrides are
+        w<bits>, <method>, or w<bits>/<method>; scale is max-abs,
+        mse-grid or mse-grid@<steps>.  --layer-bits name=bits,... adds
+        bit-width overrides on top of either form.
 
 METHODS: squant squant-e squant-ek squant-ec rtn dfq zeroq dsg gdfq
-         adaround dsg-adaround fp32
+         adaround dsg-adaround fp32  (serve accepts the squant*/rtn family)
 ";
 
 fn cmd_info(artifacts: &str, args: &mut Args) -> Result<()> {
@@ -170,34 +224,43 @@ fn cmd_zoo(artifacts: &str, args: &mut Args) -> Result<()> {
 
 fn cmd_quantize(artifacts: &str, args: &mut Args) -> Result<()> {
     let model = args.str_or("model", "miniresnet18");
-    let bits = args.usize_or("bits", 4)?;
     let threads = args.usize_or("threads", default_threads())?;
     let offload = args.flag("offload");
+    let spec = spec_from_cli(args, "bits", 4, 0)?;
     args.finish()?;
-    check_bits(bits, 0)?;
     let man = Manifest::load(artifacts)?;
     let (graph, params, _) = load_model(&man, &model)?;
+    spec.validate_layers(graph.quant_layers().iter().map(|l| l.weight.as_str()))
+        .map_err(|e| anyhow!(e))?;
 
     let report = if offload {
+        if spec != QuantSpec::uniform(Method::squant_full(), spec.wbits, 0) {
+            bail!(
+                "--offload runs the AOT full-SQuant artifacts; method \
+                 variants, mse-grid scales and per-layer overrides need \
+                 the native path"
+            );
+        }
         let rt = squant::runtime::Runtime::cpu()?;
         let (_, report, offloaded) = coordinator::quantize_model_offload(
-            &graph, &params, bits, &man, &rt)?;
+            &graph, &params, spec.wbits, &man, &rt)?;
         println!("offloaded {offloaded}/{} layers to PJRT", report.layers.len());
         report
     } else {
         let (_, report) =
-            coordinator::quantize_model(&graph, &params,
-                                        sq::SquantOpts::full(bits), threads);
+            coordinator::quantize_model_spec(&graph, &params, &spec, threads)
+                .map_err(|e| anyhow!(e))?;
         report
     };
+    println!("spec: {}", spec.canonical());
     println!(
-        "| {:<14} | {:>4} {:>4} {:>3} | {:>9} | {:>6} | {:>6} |",
-        "layer", "M", "N", "K", "ms", "flipK", "flipC"
+        "| {:<14} | {:>4} {:>4} {:>3} | {:>4} | {:>9} | {:>6} | {:>6} |",
+        "layer", "M", "N", "K", "bits", "ms", "flipK", "flipC"
     );
     for l in &report.layers {
         println!(
-            "| {:<14} | {:>4} {:>4} {:>3} | {:>9.3} | {:>6} | {:>6} |",
-            l.weight, l.m, l.n, l.k, l.ms, l.flips_k, l.flips_c
+            "| {:<14} | {:>4} {:>4} {:>3} | {:>4} | {:>9.3} | {:>6} | {:>6} |",
+            l.weight, l.m, l.n, l.k, l.bits, l.ms, l.flips_k, l.flips_c
         );
     }
     println!(
@@ -210,29 +273,27 @@ fn cmd_quantize(artifacts: &str, args: &mut Args) -> Result<()> {
 
 fn cmd_eval(artifacts: &str, args: &mut Args) -> Result<()> {
     let model = args.str_or("model", "miniresnet18");
-    let wbits = args.usize_or("wbits", 4)?;
-    let abits = args.usize_or("abits", 0)?;
     let samples = args.usize_or("samples", usize::MAX)?;
-    let method = parse_method(&args.str_or("method", "squant"))?;
     let calib_iters = args.usize_or("calib-iters", 24)?;
+    let spec = spec_from_cli(args, "wbits", 4, 0)?;
     args.finish()?;
-    check_bits(wbits, abits)?;
     let man = Manifest::load(artifacts)?;
     let (graph, params, _) = load_model(&man, &model)?;
     let mut test = dataset::load(&man.test_bin)?;
     test.truncate(samples);
 
     let calib = CalibCfg { iters: calib_iters, ..CalibCfg::default() };
-    let q = eval::quantize_with(method, &graph, &params, wbits, abits, calib)?;
+    let q = eval::quantize_with_spec(&spec, &graph, &params, calib)?;
     let acc = eval::accuracy(&q.graph, &q.params, q.act.as_ref(), &test, 128,
                              default_threads())?;
+    println!("spec: {}", spec.canonical());
     let row = AccRow {
         arch: model,
-        method: method.name(),
-        no_bp: method.no_bp(),
-        no_ft: method.no_ft(),
-        wbits,
-        abits,
+        method: spec.method.name().to_string(),
+        no_bp: spec.method.no_bp(),
+        no_ft: spec.method.no_ft(),
+        wbits: spec.wbits,
+        abits: spec.abits,
         top1: acc,
         quant_ms: q.quant_ms,
     };
@@ -245,7 +306,9 @@ fn cmd_e2e(artifacts: &str, args: &mut Args) -> Result<()> {
     let wbits = args.usize_or("wbits", 4)?;
     let abits = args.usize_or("abits", 8)?;
     args.finish()?;
-    check_bits(wbits, abits)?;
+    QuantSpec::uniform(Method::squant_full(), wbits, abits)
+        .validate()
+        .map_err(|e| anyhow!(e))?;
     let man = Manifest::load(artifacts)?;
     let (graph, params, container) = load_model(&man, &model)?;
     let test = dataset::load(&man.test_bin)?;
@@ -393,6 +456,37 @@ fn cmd_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     server::serve(std::sync::Arc::new(store), &addr, cfg)
 }
 
+/// One random heterogeneous spec for `bench-serve --mixed-keys`: bits from
+/// the `--wbits` list, a random on-the-fly method (stage sets + rtn),
+/// occasionally an mse-grid scale, occasionally a per-layer bit-width
+/// override on a real layer of the target model.
+fn sample_spec(
+    rng: &mut squant::util::rng::Rng,
+    wbits: &[usize],
+    layers: Option<&[String]>,
+) -> QuantSpec {
+    const METHODS: [&str; 5] =
+        ["squant", "squant-e", "squant-ek", "squant-ec", "rtn"];
+    let method =
+        Method::parse(METHODS[rng.below(METHODS.len())]).expect("known method");
+    let mut spec = QuantSpec::uniform(method, wbits[rng.below(wbits.len())], 0);
+    if rng.below(4) == 0 {
+        spec.scale =
+            ScaleMethod::MseGrid { steps: spec::DEFAULT_MSE_GRID_STEPS };
+    }
+    if let Some(names) = layers {
+        if !names.is_empty() && rng.below(4) == 0 {
+            let layer = names[rng.below(names.len())].clone();
+            let ob = wbits[rng.below(wbits.len())];
+            spec = spec.with_override(
+                &layer,
+                LayerOverride { wbits: Some(ob), method: None },
+            );
+        }
+    }
+    spec.normalized()
+}
+
 /// Load generator: hammer a serve instance with a mixed quantize/eval
 /// workload and report throughput, latency quantiles and cache hit-rate —
 /// the serving benchmark trajectory for ROADMAP's scale goal.
@@ -400,8 +494,9 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     use squant::serve::metrics::Histogram;
     use squant::util::json::Json;
     use squant::util::rng::Rng;
+    use std::collections::{BTreeSet, HashMap};
     use std::sync::atomic::{AtomicU64, Ordering};
-    use std::sync::Arc;
+    use std::sync::{Arc, Mutex};
 
     let addr = args.str_or("addr", "127.0.0.1:7433");
     let conns = args.usize_or("conns", 8)?.max(1);
@@ -413,6 +508,7 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let seed = args.u64_or("seed", 7)?;
     let spawn = args.flag("spawn");
     let restart_warm = args.flag("restart-warm");
+    let mixed = args.flag("mixed-keys");
     let cfg = serve_cfg(args)?;
     args.finish()?;
     if restart_warm && (!spawn || cfg.cache_dir.is_none()) {
@@ -438,9 +534,10 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let mut probe = server::Client::connect(&addr).context(
         "connecting (start `squant serve` first, or pass --spawn)",
     )?;
+    let models_resp = probe.call(&Json::parse(r#"{"cmd":"models"}"#)?)?;
     let models: Arc<Vec<String>> = Arc::new(if model_list.is_empty() {
-        let resp = probe.call(&Json::parse(r#"{"cmd":"models"}"#)?)?;
-        resp.req("models")?
+        models_resp
+            .req("models")?
             .as_arr()?
             .iter()
             .map(|j| Ok(j.as_str()?.to_string()))
@@ -451,19 +548,41 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     if models.is_empty() {
         bail!("server has no models loaded");
     }
+    // --mixed-keys samples per-layer overrides, which need real layer
+    // names; the `models` verb lists them per model.
+    let mut layer_names: HashMap<String, Vec<String>> = HashMap::new();
+    if mixed {
+        if let Some(lj) = models_resp.get("layers") {
+            for (name, arr) in lj.as_obj()? {
+                layer_names.insert(
+                    name.clone(),
+                    arr.as_arr()?
+                        .iter()
+                        .map(|j| Ok(j.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                );
+            }
+        }
+    }
+    let layer_names = Arc::new(layer_names);
     let wbits: Arc<Vec<usize>> = Arc::new(
         wbits_list
             .iter()
-            .map(|s| s.parse::<usize>().map_err(|e| anyhow::anyhow!("--wbits: {e}")))
+            .map(|s| s.parse::<usize>().map_err(|e| anyhow!("--wbits: {e}")))
             .collect::<Result<Vec<_>>>()?,
     );
     if wbits.is_empty() {
         bail!("--wbits list is empty");
     }
     for &wb in wbits.iter() {
-        squant::quant::validate_wbits(wb)
-            .map_err(|e| anyhow::anyhow!("--wbits: {e}"))?;
+        QuantSpec::uniform(Method::squant_full(), wb, 0)
+            .validate()
+            .map_err(|e| anyhow!("--wbits: {e}"))?;
     }
+    // Every spec sent in --mixed-keys mode, so --restart-warm can replay
+    // exactly the heterogeneous key set.
+    let sent: Arc<Mutex<BTreeSet<(String, String)>>> =
+        Arc::new(Mutex::new(BTreeSet::new()));
 
     // (mem hits, misses, shared, disk hits) — disk hits are served requests
     // too, so they belong in the hit-rate alongside mem/flight reuse.
@@ -491,14 +610,17 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
 
     println!(
         "bench-serve: {conns} conns x {reqs} reqs against {addr} \
-         (models {:?}, wbits {:?}, eval every {eval_every})",
-        models, wbits
+         (models {:?}, wbits {:?}, eval every {eval_every}{})",
+        models,
+        wbits,
+        if mixed { ", mixed keys" } else { "" }
     );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for ci in 0..conns {
         let (addr, models, wbits) = (addr.clone(), Arc::clone(&models),
                                      Arc::clone(&wbits));
+        let (layer_names, sent) = (Arc::clone(&layer_names), Arc::clone(&sent));
         let (hist, busy, errors, done) =
             (Arc::clone(&hist), Arc::clone(&busy), Arc::clone(&errors),
              Arc::clone(&done));
@@ -511,7 +633,29 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
             for i in 0..reqs {
                 let model = models[rng.below(models.len())].clone();
                 let wb = wbits[rng.below(wbits.len())];
-                let req = if eval_every > 0 && (i + 1) % eval_every == 0 {
+                let is_eval = eval_every > 0 && (i + 1) % eval_every == 0;
+                // In --mixed-keys mode, the (model, canonical spec) key of
+                // this request — recorded for --restart-warm replay only
+                // once the server answers ok (a busy/error response never
+                // computed or spilled anything, so replaying it would be
+                // a guaranteed recompute, not a warm-start measurement).
+                let mut replay_key: Option<(String, String)> = None;
+                let req = if mixed {
+                    // Heterogeneous spec traffic: bits x stage sets x
+                    // scale methods x per-layer overrides, so hit-rate /
+                    // latency numbers cover spec-diverse workloads.
+                    let spec = sample_spec(
+                        &mut rng,
+                        &wbits,
+                        layer_names.get(&model).map(|v| v.as_slice()),
+                    );
+                    replay_key = Some((model.clone(), spec.canonical()));
+                    let r = Json::obj()
+                        .set("cmd", if is_eval { "eval" } else { "quantize" })
+                        .set("model", model)
+                        .set("spec", spec.to_json());
+                    if is_eval { r.set("samples", samples) } else { r }
+                } else if is_eval {
                     Json::obj()
                         .set("cmd", "eval")
                         .set("model", model)
@@ -535,6 +679,9 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
                             // down exactly when the server is overloaded.
                             hist.record_ms(rt.elapsed().as_secs_f64() * 1e3);
                             done.fetch_add(1, Ordering::Relaxed);
+                            if let Some(k) = replay_key.take() {
+                                sent.lock().unwrap().insert(k);
+                            }
                         } else {
                             let is_busy = resp
                                 .get("error")
@@ -605,22 +752,44 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         let mut client = server::Client::connect(&handle.addr.to_string())?;
         let warm_hist = Histogram::new();
         let (mut disk_hits, mut recomputed) = (0usize, 0usize);
-        for model in models.iter() {
-            for &wb in wbits.iter() {
-                let req = Json::obj()
-                    .set("cmd", "quantize")
-                    .set("model", model.as_str())
-                    .set("wbits", wb);
-                let t = std::time::Instant::now();
-                let resp = client.call(&req)?;
-                warm_hist.record_ms(t.elapsed().as_secs_f64() * 1e3);
-                if resp.get("source").and_then(|s| s.as_str().ok())
-                    == Some("disk")
-                {
-                    disk_hits += 1;
-                } else {
-                    recomputed += 1;
+        // Mixed mode replays exactly the heterogeneous specs that were
+        // sent (as canonical spec strings); legacy mode replays the
+        // models x wbits grid.
+        let replay: Vec<Json> = if mixed {
+            sent.lock()
+                .unwrap()
+                .iter()
+                .map(|(model, spec)| {
+                    Json::obj()
+                        .set("cmd", "quantize")
+                        .set("model", model.as_str())
+                        .set("spec", spec.as_str())
+                })
+                .collect()
+        } else {
+            let mut v = Vec::new();
+            for model in models.iter() {
+                for &wb in wbits.iter() {
+                    v.push(
+                        Json::obj()
+                            .set("cmd", "quantize")
+                            .set("model", model.as_str())
+                            .set("wbits", wb),
+                    );
                 }
+            }
+            v
+        };
+        for req in &replay {
+            let t = std::time::Instant::now();
+            let resp = client.call(req)?;
+            warm_hist.record_ms(t.elapsed().as_secs_f64() * 1e3);
+            if resp.get("source").and_then(|s| s.as_str().ok())
+                == Some("disk")
+            {
+                disk_hits += 1;
+            } else {
+                recomputed += 1;
             }
         }
         println!(

@@ -1,6 +1,10 @@
 //! Fixed-point quantization substrate shared by SQuant and every baseline:
 //! symmetric per-channel weight grids, scale selection (max-abs or
-//! MSE-optimal search), fake-quant, and the (M, N, K) weight view.
+//! MSE-optimal search), fake-quant, and the (M, N, K) weight view — plus
+//! [`spec`], the canonical [`spec::QuantSpec`] description of "how to
+//! quantize" shared by the CLI, the protocol and the artifact cache.
+
+pub mod spec;
 
 use crate::tensor::Tensor;
 use crate::util::rn;
@@ -46,7 +50,7 @@ pub fn validate_abits(bits: usize) -> Result<(), String> {
 }
 
 /// How per-channel weight scales are chosen.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ScaleMethod {
     /// s = max|w| / qmax (the paper's setting).
     MaxAbs,

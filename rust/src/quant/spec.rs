@@ -1,0 +1,907 @@
+//! The canonical quantization spec — ONE description of "how to quantize"
+//! shared by the CLI, the line-JSON protocol, the serving cache key and the
+//! on-disk artifact header.
+//!
+//! A [`QuantSpec`] carries the base weight/activation bit-widths, the
+//! quantization [`Method`] (with SQuant stage flags), the per-channel
+//! [`ScaleMethod`], and optional per-layer overrides of bit-width and/or
+//! method — the mixed-precision lever: SQuant's objective decomposes per
+//! element/kernel/channel and is solved layer-by-layer with no cross-layer
+//! coupling, so assigning different bits or stage sets per layer is a
+//! paper-faithful extension.
+//!
+//! Three interchangeable forms, all canonicalized through this module:
+//!
+//! * **String** (CLI `--spec`, also accepted on the wire):
+//!   `w<W>a<A>:<method>:<scale>[;<layer>=<override>]*`, e.g.
+//!   `w4a8:squant:max-abs;w1=w8;wfc=w8/rtn`.  Overrides are
+//!   `w<bits>`, `<method>`, or `w<bits>/<method>`.
+//! * **JSON** (protocol `spec` field):
+//!   `{"wbits":4,"abits":8,"method":"squant","scale":"max-abs",
+//!     "layers":{"w1":{"wbits":8},"wfc":{"wbits":8,"method":"rtn"}}}`.
+//! * **Legacy flat fields** (`wbits`/`abits`/`method`/`scale` at request
+//!   top level) — parsed by [`QuantSpec::from_request`] and canonicalized
+//!   into the same spec, so legacy and spec-form requests for the same
+//!   parameters produce identical cache keys.
+//!
+//! [`QuantSpec::canonical`] is deterministic (overrides sorted by layer
+//! name, no-op overrides dropped by [`QuantSpec::normalized`]), and
+//! [`QuantSpec::key_hash`] is a stable FNV-1a over that canonical string —
+//! safe to persist in artifact file names.
+//!
+//! [`QuantSpec::validate`] is the one validation point in the crate: every
+//! request boundary (CLI command, serve request, artifact decode) goes
+//! through it before any quantizer math runs.
+
+use super::{validate_abits, validate_wbits, ScaleMethod};
+use crate::util::fnv1a;
+use crate::util::json::Json;
+
+/// Every quantization method in the crate — the single enum behind the
+/// paper tables (`eval`), the CLI and the serving path.  The on-the-fly
+/// family ([`Method::servable`]) is additionally usable per-layer and over
+/// the wire; calibration baselines stay whole-model and CLI-only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Fp32,
+    /// Plain per-channel round-to-nearest (baselines::rtn) — numerically
+    /// identical to `Squant { enable_k: false, enable_c: false }` (both are
+    /// max-abs scales + RTN; asserted by `rtn_method_matches_squant_e`),
+    /// but routed through the dedicated baseline for clarity.
+    Rtn,
+    /// DFQ (Nagel'19): fold + equalize + bias correct + RTN.
+    Dfq,
+    /// ZeroQ-lite.
+    ZeroQ,
+    /// DSG-lite.
+    Dsg,
+    /// GDFQ-lite.
+    Gdfq,
+    /// SQuant with configurable stages (Table 4 ablation).
+    Squant { enable_k: bool, enable_c: bool },
+    /// ZeroQ/DSG synthetic data + AdaRound-lite (Table 5).
+    AdaRound { diverse: bool },
+}
+
+/// Paper-style label of a SQuant stage set ("SQuant-E", "SQuant-E&K&C", …).
+/// The stage flags alone determine the label — no bit-width involved.
+pub fn squant_stage_label(enable_k: bool, enable_c: bool) -> &'static str {
+    match (enable_k, enable_c) {
+        (false, false) => "SQuant-E",
+        (true, false) => "SQuant-E&K",
+        (false, true) => "SQuant-E&C",
+        (true, true) => "SQuant-E&K&C",
+    }
+}
+
+impl Method {
+    pub fn squant_full() -> Method {
+        Method::Squant { enable_k: true, enable_c: true }
+    }
+
+    /// Canonical wire name — what `parse` accepts and every spec form
+    /// prints.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Fp32 => "fp32",
+            Method::Rtn => "rtn",
+            Method::Dfq => "dfq",
+            Method::ZeroQ => "zeroq",
+            Method::Dsg => "dsg",
+            Method::Gdfq => "gdfq",
+            Method::Squant { enable_k: true, enable_c: true } => "squant",
+            Method::Squant { enable_k: false, enable_c: false } => "squant-e",
+            Method::Squant { enable_k: true, enable_c: false } => "squant-ek",
+            Method::Squant { enable_k: false, enable_c: true } => "squant-ec",
+            Method::AdaRound { diverse: false } => "adaround",
+            Method::AdaRound { diverse: true } => "dsg-adaround",
+        }
+    }
+
+    /// THE method parser — the CLI, the protocol and the artifact decoder
+    /// all route through here (there is deliberately no other string →
+    /// method conversion in the crate).
+    pub fn parse(s: &str) -> Result<Method, String> {
+        Ok(match s {
+            "fp32" => Method::Fp32,
+            "rtn" => Method::Rtn,
+            "dfq" => Method::Dfq,
+            "zeroq" => Method::ZeroQ,
+            "dsg" => Method::Dsg,
+            "gdfq" => Method::Gdfq,
+            "squant" => Method::Squant { enable_k: true, enable_c: true },
+            "squant-e" => Method::Squant { enable_k: false, enable_c: false },
+            "squant-ek" => Method::Squant { enable_k: true, enable_c: false },
+            "squant-ec" => Method::Squant { enable_k: false, enable_c: true },
+            "adaround" => Method::AdaRound { diverse: false },
+            "dsg-adaround" => Method::AdaRound { diverse: true },
+            other => {
+                return Err(format!(
+                    "unknown method '{other}' (expected squant|squant-e|\
+                     squant-ek|squant-ec|rtn|dfq|zeroq|dsg|gdfq|adaround|\
+                     dsg-adaround|fp32)"
+                ))
+            }
+        })
+    }
+
+    /// Paper-table display name (the `Method` column of Tables 1-5).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp32 => "Baseline",
+            Method::Rtn => "RTN",
+            Method::Dfq => "DFQ",
+            Method::ZeroQ => "ZeroQ",
+            Method::Dsg => "DSG",
+            Method::Gdfq => "GDFQ",
+            Method::Squant { enable_k, enable_c } => {
+                squant_stage_label(*enable_k, *enable_c)
+            }
+            Method::AdaRound { diverse: false } => "ZeroQ+AdaRound",
+            Method::AdaRound { diverse: true } => "DSG+AdaRound",
+        }
+    }
+
+    /// Paper-table metadata: does the method need back-propagation (here:
+    /// iterative synthetic-data generation) / synthetic data / fine-tuning?
+    pub fn no_bp(&self) -> bool {
+        matches!(
+            self,
+            Method::Fp32 | Method::Rtn | Method::Dfq | Method::Squant { .. }
+        )
+    }
+    pub fn no_ft(&self) -> bool {
+        !matches!(self, Method::Gdfq)
+    }
+
+    /// Methods that quantize layer-by-layer with no cross-layer coupling —
+    /// the only ones usable as per-layer overrides (and the only base
+    /// methods a spec with overrides may carry).
+    pub fn per_layer(&self) -> bool {
+        matches!(self, Method::Fp32 | Method::Rtn | Method::Squant { .. })
+    }
+
+    /// The on-the-fly family the serving path accepts as a base method
+    /// (calibration baselines need synthetic data and stay CLI-only).
+    pub fn servable(&self) -> bool {
+        matches!(self, Method::Rtn | Method::Squant { .. })
+    }
+}
+
+/// Default grid-search resolution when a spec says `mse-grid` without an
+/// explicit step count (matches the ZeroQ baseline's setting).
+pub const DEFAULT_MSE_GRID_STEPS: usize = 32;
+
+/// Largest accepted `mse-grid@N`: the search is O(steps × weights) per
+/// channel, and specs arrive over the wire — an absurd step count must not
+/// become a CPU amplification vector.
+pub const MAX_MSE_GRID_STEPS: usize = 4096;
+
+/// Parse a scale-method token: `max-abs`, `mse-grid` or `mse-grid@<steps>`.
+pub fn parse_scale(s: &str) -> Result<ScaleMethod, String> {
+    match s {
+        "max-abs" => Ok(ScaleMethod::MaxAbs),
+        "mse-grid" => Ok(ScaleMethod::MseGrid { steps: DEFAULT_MSE_GRID_STEPS }),
+        other => match other.strip_prefix("mse-grid@") {
+            Some(n) => n
+                .parse::<usize>()
+                .map(|steps| ScaleMethod::MseGrid { steps })
+                .map_err(|e| format!("bad mse-grid steps '{n}': {e}")),
+            None => Err(format!(
+                "unknown scale method '{other}' \
+                 (expected max-abs|mse-grid|mse-grid@<steps>)"
+            )),
+        },
+    }
+}
+
+/// Canonical token of a scale method (`mse-grid` always prints its steps).
+pub fn scale_label(s: ScaleMethod) -> String {
+    match s {
+        ScaleMethod::MaxAbs => "max-abs".to_string(),
+        ScaleMethod::MseGrid { steps } => format!("mse-grid@{steps}"),
+    }
+}
+
+/// Per-layer override: replace the base bit-width and/or method for one
+/// named layer.  An override with both fields `None` is invalid (validate
+/// rejects it; `normalized` drops it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub struct LayerOverride {
+    pub wbits: Option<usize>,
+    pub method: Option<Method>,
+}
+
+impl LayerOverride {
+    fn canonical(&self) -> String {
+        match (self.wbits, self.method) {
+            (Some(b), Some(m)) => format!("w{b}/{}", m.label()),
+            (Some(b), None) => format!("w{b}"),
+            (None, Some(m)) => m.label().to_string(),
+            (None, None) => String::new(),
+        }
+    }
+
+    fn parse(s: &str) -> Result<LayerOverride, String> {
+        let (bits_part, method_part) = match s.split_once('/') {
+            Some((b, m)) => (Some(b), Some(m)),
+            None if s.starts_with('w')
+                && s[1..].chars().all(|c| c.is_ascii_digit())
+                && s.len() > 1 =>
+            {
+                (Some(s), None)
+            }
+            None => (None, Some(s)),
+        };
+        let wbits = match bits_part {
+            Some(b) => {
+                let digits = b.strip_prefix('w').ok_or_else(|| {
+                    format!("override '{s}': expected w<bits> before '/'")
+                })?;
+                Some(digits.parse::<usize>().map_err(|e| {
+                    format!("override '{s}': bad bit-width: {e}")
+                })?)
+            }
+            None => None,
+        };
+        let method = match method_part {
+            Some(m) => Some(Method::parse(m)?),
+            None => None,
+        };
+        Ok(LayerOverride { wbits, method })
+    }
+}
+
+/// The canonical quantization spec (see module docs for the three forms).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct QuantSpec {
+    /// Base weight bit-width.
+    pub wbits: usize,
+    /// Activation bit-width (0 = FP32 activations).
+    pub abits: usize,
+    /// Base method.
+    pub method: Method,
+    /// How per-channel weight scales are chosen (applies to every layer).
+    pub scale: ScaleMethod,
+    /// Per-layer overrides, **sorted by layer name** (the canonicalization
+    /// invariant — use [`QuantSpec::with_override`] to keep it).
+    pub overrides: Vec<(String, LayerOverride)>,
+}
+
+impl QuantSpec {
+    /// A spec with no overrides and max-abs scales — the legacy
+    /// `(method, wbits, abits)` tuple in spec form.
+    pub fn uniform(method: Method, wbits: usize, abits: usize) -> QuantSpec {
+        QuantSpec {
+            wbits,
+            abits,
+            method,
+            scale: ScaleMethod::MaxAbs,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Insert (or merge into) the override for `layer`, keeping the list
+    /// sorted by layer name.
+    pub fn with_override(mut self, layer: &str, ov: LayerOverride) -> QuantSpec {
+        match self.overrides.binary_search_by(|(l, _)| l.as_str().cmp(layer)) {
+            Ok(i) => {
+                let slot = &mut self.overrides[i].1;
+                if ov.wbits.is_some() {
+                    slot.wbits = ov.wbits;
+                }
+                if ov.method.is_some() {
+                    slot.method = ov.method;
+                }
+            }
+            Err(i) => self.overrides.insert(i, (layer.to_string(), ov)),
+        }
+        self
+    }
+
+    /// Drop no-op overrides (fields equal to the base, a bit-width on a
+    /// layer whose effective method is fp32 — bits are meaningless there —
+    /// or empty overrides) so that semantically identical specs
+    /// canonicalize — and hash — the same.  `parse`/`from_json`/
+    /// `from_request` apply this automatically.
+    pub fn normalized(mut self) -> QuantSpec {
+        for (_, ov) in &mut self.overrides {
+            if ov.method == Some(self.method) {
+                ov.method = None;
+            }
+            // An fp32 layer has no bit-width: `w8/fp32` and `fp32` are the
+            // same computation and must share one cache key.
+            if ov.method.unwrap_or(self.method) == Method::Fp32 {
+                ov.wbits = None;
+            }
+            if ov.wbits == Some(self.wbits) {
+                ov.wbits = None;
+            }
+        }
+        self.overrides
+            .retain(|(_, ov)| ov.wbits.is_some() || ov.method.is_some());
+        self
+    }
+
+    pub fn has_overrides(&self) -> bool {
+        !self.overrides.is_empty()
+    }
+
+    /// Resolved (bit-width, method) for one layer.
+    pub fn effective(&self, layer: &str) -> (usize, Method) {
+        match self
+            .overrides
+            .binary_search_by(|(l, _)| l.as_str().cmp(layer))
+        {
+            Ok(i) => {
+                let ov = &self.overrides[i].1;
+                (ov.wbits.unwrap_or(self.wbits), ov.method.unwrap_or(self.method))
+            }
+            Err(_) => (self.wbits, self.method),
+        }
+    }
+
+    // ---- canonical string form -------------------------------------------
+
+    /// Deterministic canonical string: same spec ⇒ same string, regardless
+    /// of which form (string, JSON in any field order, legacy flat fields)
+    /// it arrived in.
+    pub fn canonical(&self) -> String {
+        let mut s = format!(
+            "w{}a{}:{}:{}",
+            self.wbits,
+            self.abits,
+            self.method.label(),
+            scale_label(self.scale)
+        );
+        for (layer, ov) in &self.overrides {
+            s.push(';');
+            s.push_str(layer);
+            s.push('=');
+            s.push_str(&ov.canonical());
+        }
+        s
+    }
+
+    /// Stable 64-bit key hash over the canonical string (FNV-1a — safe to
+    /// persist in artifact file names across builds).
+    pub fn key_hash(&self) -> u64 {
+        fnv1a(self.canonical().as_bytes())
+    }
+
+    /// THE spec parser (string form).  Accepts shorthand (`w4` for
+    /// `w4a0`, method defaulting to `squant`, scale to `max-abs`) and
+    /// returns the normalized spec; `canonical()` of the result re-parses
+    /// to an equal spec.
+    pub fn parse(s: &str) -> Result<QuantSpec, String> {
+        let mut parts = s.split(';');
+        let base = parts.next().unwrap_or("");
+        let mut fields = base.split(':');
+        let bits = fields.next().unwrap_or("");
+        let (wbits, abits) = parse_bits(bits)?;
+        let method = match fields.next() {
+            Some(m) if !m.is_empty() => Method::parse(m)?,
+            _ => Method::squant_full(),
+        };
+        let scale = match fields.next() {
+            Some(sc) if !sc.is_empty() => parse_scale(sc)?,
+            _ => ScaleMethod::MaxAbs,
+        };
+        if fields.next().is_some() {
+            return Err(format!("spec '{s}': too many ':' fields in base"));
+        }
+        let mut spec = QuantSpec { wbits, abits, method, scale, overrides: Vec::new() };
+        for ov in parts {
+            let (layer, setting) = ov
+                .split_once('=')
+                .ok_or_else(|| format!("override '{ov}': expected <layer>=<setting>"))?;
+            if layer.is_empty() {
+                return Err(format!("override '{ov}': empty layer name"));
+            }
+            if spec.overrides.iter().any(|(l, _)| l == layer) {
+                return Err(format!("duplicate override for layer '{layer}'"));
+            }
+            spec = spec.with_override(layer, LayerOverride::parse(setting)?);
+        }
+        Ok(spec.normalized())
+    }
+
+    // ---- JSON form --------------------------------------------------------
+
+    /// Canonical JSON form (fields in fixed order, overrides sorted).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("wbits", self.wbits)
+            .set("abits", self.abits)
+            .set("method", self.method.label())
+            .set("scale", scale_label(self.scale));
+        if !self.overrides.is_empty() {
+            let mut layers = Json::obj();
+            for (layer, ov) in &self.overrides {
+                let mut o = Json::obj();
+                if let Some(b) = ov.wbits {
+                    o = o.set("wbits", b);
+                }
+                if let Some(m) = ov.method {
+                    o = o.set("method", m.label());
+                }
+                layers = layers.set(layer, o);
+            }
+            j = j.set("layers", layers);
+        }
+        j
+    }
+
+    /// Parse a `spec` value: either a spec string or a spec object.  Field
+    /// order never matters — overrides are sorted on the way in, so key
+    /// hashes are stable across JSON serializations.
+    pub fn from_json(j: &Json) -> Result<QuantSpec, String> {
+        if let Ok(s) = j.as_str() {
+            return QuantSpec::parse(s);
+        }
+        let kv = j
+            .as_obj()
+            .map_err(|_| "spec must be a string or an object".to_string())?;
+        let mut spec = QuantSpec::uniform(Method::squant_full(), 8, 0);
+        let mut layers: Option<&Json> = None;
+        for (k, v) in kv {
+            match k.as_str() {
+                "wbits" => {
+                    spec.wbits = v
+                        .as_usize()
+                        .map_err(|_| "spec.wbits must be a number".to_string())?
+                }
+                "abits" => {
+                    spec.abits = v
+                        .as_usize()
+                        .map_err(|_| "spec.abits must be a number".to_string())?
+                }
+                "method" => {
+                    spec.method = Method::parse(
+                        v.as_str()
+                            .map_err(|_| "spec.method must be a string".to_string())?,
+                    )?
+                }
+                "scale" => {
+                    spec.scale = parse_scale(
+                        v.as_str()
+                            .map_err(|_| "spec.scale must be a string".to_string())?,
+                    )?
+                }
+                "layers" => layers = Some(v),
+                other => return Err(format!("unknown spec field '{other}'")),
+            }
+        }
+        if let Some(lj) = layers {
+            let lkv = lj
+                .as_obj()
+                .map_err(|_| "spec.layers must be an object".to_string())?;
+            for (layer, oj) in lkv {
+                if spec.overrides.iter().any(|(l, _)| l == layer) {
+                    return Err(format!("duplicate override for layer '{layer}'"));
+                }
+                let okv = oj.as_obj().map_err(|_| {
+                    format!("spec.layers.{layer} must be an object")
+                })?;
+                let mut ov = LayerOverride::default();
+                for (k, v) in okv {
+                    match k.as_str() {
+                        "wbits" => {
+                            ov.wbits = Some(v.as_usize().map_err(|_| {
+                                format!("spec.layers.{layer}.wbits must be a number")
+                            })?)
+                        }
+                        "method" => {
+                            ov.method = Some(Method::parse(v.as_str().map_err(
+                                |_| {
+                                    format!(
+                                        "spec.layers.{layer}.method must be a string"
+                                    )
+                                },
+                            )?)?)
+                        }
+                        other => {
+                            return Err(format!(
+                                "unknown override field '{other}' for layer '{layer}'"
+                            ))
+                        }
+                    }
+                }
+                spec = spec.with_override(layer, ov);
+            }
+        }
+        Ok(spec.normalized())
+    }
+
+    /// Build a validated spec from a protocol request: the `spec` field
+    /// (string or object) when present, otherwise the legacy flat fields
+    /// `wbits`/`abits`/`method`/`scale` with their historical defaults
+    /// (w8, a0, squant, max-abs).  Both routes canonicalize into the same
+    /// spec, so both produce identical cache keys.  A request carrying
+    /// `spec` *and* flat fields is ambiguous and rejected (mirroring the
+    /// CLI's `--spec` + flat-flag conflict error) — silently preferring one
+    /// would serve different bits than the caller believes they asked for.
+    pub fn from_request(req: &Json) -> Result<QuantSpec, String> {
+        let spec = match req.get("spec") {
+            Some(sj) => {
+                for key in ["wbits", "abits", "method", "scale"] {
+                    if req.get(key).is_some() {
+                        return Err(format!(
+                            "request carries both 'spec' and flat '{key}'; \
+                             send one form"
+                        ));
+                    }
+                }
+                QuantSpec::from_json(sj)?
+            }
+            None => {
+                let num = |key: &str, default: usize| -> Result<usize, String> {
+                    match req.get(key) {
+                        Some(v) => v
+                            .as_usize()
+                            .map_err(|_| format!("'{key}' must be a number")),
+                        None => Ok(default),
+                    }
+                };
+                let txt = |key: &str, default: &str| -> Result<String, String> {
+                    match req.get(key) {
+                        Some(v) => v
+                            .as_str()
+                            .map(String::from)
+                            .map_err(|_| format!("'{key}' must be a string")),
+                        None => Ok(default.to_string()),
+                    }
+                };
+                QuantSpec {
+                    wbits: num("wbits", 8)?,
+                    abits: num("abits", 0)?,
+                    method: Method::parse(&txt("method", "squant")?)?,
+                    scale: parse_scale(&txt("scale", "max-abs")?)?,
+                    overrides: Vec::new(),
+                }
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    // ---- validation -------------------------------------------------------
+
+    /// The single validation point: bit-width ranges (subsumes the old
+    /// per-call-site `validate_wbits`/`validate_abits` screening), scale
+    /// sanity, and override consistency.  Layer-name existence is checked
+    /// separately by [`QuantSpec::validate_layers`] (it needs the model).
+    pub fn validate(&self) -> Result<(), String> {
+        // Degenerate bit-widths (0 shift-underflows qrange, 1 collapses the
+        // grid) must never reach the quantizer from any boundary.
+        validate_wbits(self.wbits)?;
+        validate_abits(self.abits)?;
+        if let ScaleMethod::MseGrid { steps } = self.scale {
+            if steps == 0 || steps > MAX_MSE_GRID_STEPS {
+                return Err(format!(
+                    "mse-grid steps {steps} out of range 1..={MAX_MSE_GRID_STEPS}"
+                ));
+            }
+        }
+        if self.scale != ScaleMethod::MaxAbs && !self.method.per_layer() {
+            return Err(format!(
+                "scale '{}' only applies to per-layer methods; '{}' \
+                 chooses its own scales",
+                scale_label(self.scale),
+                self.method.label()
+            ));
+        }
+        if !self.overrides.is_empty() && !self.method.per_layer() {
+            return Err(format!(
+                "per-layer overrides need a per-layer base method \
+                 (squant*/rtn/fp32), not '{}'",
+                self.method.label()
+            ));
+        }
+        let mut prev: Option<&str> = None;
+        for (layer, ov) in &self.overrides {
+            if layer.is_empty() {
+                return Err("override with empty layer name".to_string());
+            }
+            if let Some(p) = prev {
+                if p >= layer.as_str() {
+                    return Err(format!(
+                        "overrides not sorted/unique at layer '{layer}' \
+                         (use with_override)"
+                    ));
+                }
+            }
+            prev = Some(layer.as_str());
+            if ov.wbits.is_none() && ov.method.is_none() {
+                return Err(format!("override for '{layer}' sets nothing"));
+            }
+            if let Some(b) = ov.wbits {
+                validate_wbits(b)
+                    .map_err(|e| format!("override for '{layer}': {e}"))?;
+            }
+            if let Some(m) = ov.method {
+                if !m.per_layer() {
+                    return Err(format!(
+                        "override for '{layer}': method '{}' is not \
+                         per-layer (use squant*/rtn/fp32)",
+                        m.label()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Reject overrides naming layers the model does not have — called at
+    /// the boundary once the target model is known.
+    pub fn validate_layers<'a, I>(&self, known: I) -> Result<(), String>
+    where
+        I: IntoIterator<Item = &'a str>,
+    {
+        if self.overrides.is_empty() {
+            return Ok(());
+        }
+        let known: std::collections::HashSet<&str> = known.into_iter().collect();
+        for (layer, _) in &self.overrides {
+            if !known.contains(layer.as_str()) {
+                let mut names: Vec<&str> = known.iter().copied().collect();
+                names.sort_unstable();
+                return Err(format!(
+                    "unknown layer '{layer}' in override (model has: {})",
+                    names.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse the `w<W>[a<A>]` bits token of the string form.
+fn parse_bits(s: &str) -> Result<(usize, usize), String> {
+    let rest = s
+        .strip_prefix('w')
+        .ok_or_else(|| format!("spec must start with w<bits>, got '{s}'"))?;
+    let (w, a) = match rest.split_once('a') {
+        Some((w, a)) => (w, Some(a)),
+        None => (rest, None),
+    };
+    let wbits = w
+        .parse::<usize>()
+        .map_err(|e| format!("bad wbits in '{s}': {e}"))?;
+    let abits = match a {
+        Some(a) => a
+            .parse::<usize>()
+            .map_err(|e| format!("bad abits in '{s}': {e}"))?,
+        None => 0,
+    };
+    Ok((wbits, abits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_labels_round_trip() {
+        for m in [
+            Method::Fp32,
+            Method::Rtn,
+            Method::Dfq,
+            Method::ZeroQ,
+            Method::Dsg,
+            Method::Gdfq,
+            Method::Squant { enable_k: true, enable_c: true },
+            Method::Squant { enable_k: false, enable_c: false },
+            Method::Squant { enable_k: true, enable_c: false },
+            Method::Squant { enable_k: false, enable_c: true },
+            Method::AdaRound { diverse: false },
+            Method::AdaRound { diverse: true },
+        ] {
+            assert_eq!(Method::parse(m.label()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn stage_labels_need_no_bits() {
+        assert_eq!(squant_stage_label(false, false), "SQuant-E");
+        assert_eq!(squant_stage_label(true, true), "SQuant-E&K&C");
+        assert_eq!(Method::squant_full().name(), "SQuant-E&K&C");
+        assert_eq!(
+            Method::Squant { enable_k: true, enable_c: false }.name(),
+            "SQuant-E&K"
+        );
+    }
+
+    #[test]
+    fn parse_shorthand_and_canonical() {
+        let s = QuantSpec::parse("w4").unwrap();
+        assert_eq!(s, QuantSpec::uniform(Method::squant_full(), 4, 0));
+        assert_eq!(s.canonical(), "w4a0:squant:max-abs");
+
+        let s = QuantSpec::parse("w4a8:rtn").unwrap();
+        assert_eq!(s.method, Method::Rtn);
+        assert_eq!(s.abits, 8);
+
+        let s = QuantSpec::parse("w4a8:squant:mse-grid").unwrap();
+        assert_eq!(s.scale, ScaleMethod::MseGrid { steps: DEFAULT_MSE_GRID_STEPS });
+        assert_eq!(s.canonical(), "w4a8:squant:mse-grid@32");
+    }
+
+    #[test]
+    fn canonical_round_trips_with_overrides() {
+        let spec = QuantSpec::parse("w4a8:squant:max-abs;wfc=w8/rtn;w1=w8").unwrap();
+        // Overrides sorted by layer name regardless of input order.
+        assert_eq!(spec.canonical(), "w4a8:squant:max-abs;w1=w8;wfc=w8/rtn");
+        let back = QuantSpec::parse(&spec.canonical()).unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(spec.key_hash(), back.key_hash());
+        assert_eq!(spec.effective("w1"), (8, Method::squant_full()));
+        assert_eq!(spec.effective("wfc"), (8, Method::Rtn));
+        assert_eq!(spec.effective("other"), (4, Method::squant_full()));
+    }
+
+    #[test]
+    fn override_settings_parse_all_shapes() {
+        let spec = QuantSpec::parse("w4:squant;a=w8;b=rtn;c=w3/rtn").unwrap();
+        assert_eq!(
+            spec.overrides,
+            vec![
+                ("a".into(), LayerOverride { wbits: Some(8), method: None }),
+                ("b".into(), LayerOverride { wbits: None, method: Some(Method::Rtn) }),
+                (
+                    "c".into(),
+                    LayerOverride { wbits: Some(3), method: Some(Method::Rtn) }
+                ),
+            ]
+        );
+    }
+
+    #[test]
+    fn normalization_drops_noop_overrides() {
+        let spec = QuantSpec::parse("w4:squant;a=w4;b=squant;c=w8").unwrap();
+        assert_eq!(spec.overrides.len(), 1);
+        assert_eq!(spec.canonical(), "w4a0:squant:max-abs;c=w8");
+        // Semantically identical specs hash identically.
+        assert_eq!(
+            spec.key_hash(),
+            QuantSpec::parse("w4;c=w8").unwrap().key_hash()
+        );
+        // An fp32 layer has no bit-width: `w8/fp32` and `fp32` are the same
+        // computation, so they normalize to one canonical form / one key.
+        let a = QuantSpec::parse("w4;c=w8/fp32").unwrap();
+        let b = QuantSpec::parse("w4;c=fp32").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.canonical(), "w4a0:squant:max-abs;c=fp32");
+        assert_eq!(a.key_hash(), b.key_hash());
+    }
+
+    #[test]
+    fn json_field_order_does_not_change_hash() {
+        let a = QuantSpec::from_json(
+            &Json::parse(
+                r#"{"wbits":4,"abits":8,"method":"squant",
+                    "layers":{"w1":{"wbits":8},"wfc":{"method":"rtn"}}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let b = QuantSpec::from_json(
+            &Json::parse(
+                r#"{"layers":{"wfc":{"method":"rtn"},"w1":{"wbits":8}},
+                    "method":"squant","abits":8,"wbits":4}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.key_hash(), b.key_hash());
+        // And the JSON form round-trips through to_json.
+        let c = QuantSpec::from_json(&a.to_json()).unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn spec_string_accepted_in_json_position() {
+        let a = QuantSpec::from_json(&Json::Str("w4a8:rtn".into())).unwrap();
+        assert_eq!(a, QuantSpec::uniform(Method::Rtn, 4, 8));
+    }
+
+    #[test]
+    fn legacy_flat_request_matches_spec_request() {
+        let legacy = Json::parse(
+            r#"{"cmd":"quantize","model":"m","wbits":4,"abits":8,"method":"squant"}"#,
+        )
+        .unwrap();
+        let spec = Json::parse(
+            r#"{"cmd":"quantize","model":"m","spec":{"wbits":4,"abits":8}}"#,
+        )
+        .unwrap();
+        let a = QuantSpec::from_request(&legacy).unwrap();
+        let b = QuantSpec::from_request(&spec).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.key_hash(), b.key_hash());
+        // Flat defaults: w8 a0 squant max-abs.
+        let d = QuantSpec::from_request(
+            &Json::parse(r#"{"cmd":"quantize","model":"m"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(d, QuantSpec::uniform(Method::squant_full(), 8, 0));
+        // Both forms at once is ambiguous and rejected, never silently
+        // resolved in favour of one.
+        let conflicted = Json::parse(
+            r#"{"cmd":"quantize","model":"m","spec":"w4","wbits":8}"#,
+        )
+        .unwrap();
+        let err = QuantSpec::from_request(&conflicted).unwrap_err();
+        assert!(err.contains("both 'spec' and flat 'wbits'"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        // Degenerate bit-widths.
+        assert!(QuantSpec::uniform(Method::Rtn, 0, 0).validate().is_err());
+        assert!(QuantSpec::uniform(Method::Rtn, 1, 0).validate().is_err());
+        assert!(QuantSpec::uniform(Method::Rtn, 4, 1).validate().is_err());
+        assert!(QuantSpec::uniform(Method::Rtn, 4, 0).validate().is_ok());
+        // mse-grid step bounds.
+        let mut s = QuantSpec::uniform(Method::Rtn, 4, 0);
+        s.scale = ScaleMethod::MseGrid { steps: 0 };
+        assert!(s.validate().is_err());
+        s.scale = ScaleMethod::MseGrid { steps: MAX_MSE_GRID_STEPS + 1 };
+        assert!(s.validate().is_err());
+        s.scale = ScaleMethod::MseGrid { steps: 32 };
+        assert!(s.validate().is_ok());
+        // Overrides on a whole-model base method.
+        let s = QuantSpec::uniform(Method::Dfq, 4, 0)
+            .with_override("a", LayerOverride { wbits: Some(8), method: None });
+        assert!(s.validate().is_err());
+        // Override with a non-per-layer method.
+        let s = QuantSpec::uniform(Method::squant_full(), 4, 0).with_override(
+            "a",
+            LayerOverride { wbits: None, method: Some(Method::Gdfq) },
+        );
+        assert!(s.validate().is_err());
+        // Override bit-width screened like the base.
+        let s = QuantSpec::uniform(Method::squant_full(), 4, 0)
+            .with_override("a", LayerOverride { wbits: Some(1), method: None });
+        assert!(s.validate().is_err());
+        // Bad strings never parse.
+        assert!(QuantSpec::parse("4a8").is_err());
+        assert!(QuantSpec::parse("w4a8:squant:max-abs:extra").is_err());
+        assert!(QuantSpec::parse("w4;=w8").is_err());
+        assert!(QuantSpec::parse("w4;a=w8;a=w3").is_err());
+        assert!(QuantSpec::from_json(
+            &Json::parse(r#"{"wbitz":4}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn unknown_layer_overrides_rejected_at_boundary() {
+        let spec = QuantSpec::parse("w4;nope=w8").unwrap();
+        assert!(spec.validate().is_ok(), "names need the model to check");
+        let err = spec.validate_layers(["w1", "wfc"]).unwrap_err();
+        assert!(err.contains("unknown layer 'nope'"), "{err}");
+        assert!(spec.validate_layers(["nope", "w1"]).is_ok());
+        // Uniform specs never care about layer names.
+        assert!(QuantSpec::uniform(Method::Rtn, 4, 0)
+            .validate_layers(std::iter::empty())
+            .is_ok());
+    }
+
+    #[test]
+    fn with_override_merges_and_sorts() {
+        let spec = QuantSpec::uniform(Method::squant_full(), 4, 0)
+            .with_override("b", LayerOverride { wbits: Some(8), method: None })
+            .with_override("a", LayerOverride { wbits: None, method: Some(Method::Rtn) })
+            .with_override("b", LayerOverride { wbits: None, method: Some(Method::Fp32) });
+        assert_eq!(spec.overrides.len(), 2);
+        assert_eq!(spec.overrides[0].0, "a");
+        assert_eq!(
+            spec.overrides[1].1,
+            LayerOverride { wbits: Some(8), method: Some(Method::Fp32) }
+        );
+        assert!(spec.validate().is_ok());
+    }
+}

@@ -1,4 +1,4 @@
-//! LRU cache of quantized artifacts keyed by (model, wbits, abits, method).
+//! LRU cache of quantized artifacts keyed by (model, [`QuantSpec`]).
 //!
 //! Entries hold the dequantized [`Params`], the activation ranges (when
 //! abits > 0) and the per-layer [`QuantReport`], so a cache hit answers
@@ -11,29 +11,28 @@
 //! entries) and keeps the structure a single flat map.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
 use std::sync::Arc;
+use std::sync::Mutex;
 
-use super::QuantMethod;
 use crate::coordinator::QuantReport;
 use crate::nn::engine::ActQuant;
 use crate::nn::Params;
+use crate::quant::spec::QuantSpec;
 
-/// Cache key: everything that changes the quantized artifact.
+/// Cache key: the model plus the full canonical quantization spec —
+/// everything that changes the quantized artifact (bits, method/stages,
+/// scale method, per-layer overrides).  Two requests arriving in different
+/// forms (legacy flat fields, spec string, spec JSON in any field order)
+/// for the same parameters canonicalize to the same key.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct QuantKey {
     pub model: String,
-    pub wbits: usize,
-    pub abits: usize,
-    pub method: QuantMethod,
+    pub spec: QuantSpec,
 }
 
 impl QuantKey {
     pub fn label(&self) -> String {
-        format!(
-            "{}:w{}a{}:{}",
-            self.model, self.wbits, self.abits, self.method.label()
-        )
+        format!("{}:{}", self.model, self.spec.canonical())
     }
 }
 
@@ -163,12 +162,12 @@ mod tests {
     use super::*;
     use crate::tensor::Tensor;
 
+    use crate::quant::spec::Method;
+
     fn key(name: &str) -> QuantKey {
         QuantKey {
             model: name.to_string(),
-            wbits: 4,
-            abits: 0,
-            method: QuantMethod::Squant { enable_k: true, enable_c: true },
+            spec: QuantSpec::uniform(Method::squant_full(), 4, 0),
         }
     }
 

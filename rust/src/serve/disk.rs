@@ -13,10 +13,13 @@
 //!
 //! ```text
 //!   {"name": "<key label>",
-//!    "artifact": {"version": 1,
-//!                 "model": ..., "wbits": ..., "abits": ..., "method": ...,
+//!    "artifact": {"version": 2,
+//!                 "model": ...,
+//!                 "spec": {"wbits", "abits", "method", "scale",
+//!                          "layers": {...} (when overridden)},
 //!                 "fingerprint": "<hex source-model fingerprint>",
-//!                 "report": {"total_ms", "wall_ms", "layers": [...]},
+//!                 "report": {"total_ms", "wall_ms",
+//!                            "layers": [{.., "bits", "flips_k", ...}]},
 //!                 "act": {"bits", "ranges": [[node, lo, hi], ...]} | null},
 //!    "tensors": [...]}        // contiguous table over the Params payload
 //! ```
@@ -37,15 +40,19 @@ use std::sync::{Arc, Mutex};
 use std::time::SystemTime;
 
 use super::cache::{params_bytes, CacheEntry, QuantKey};
-use super::QuantMethod;
 use crate::coordinator::{LayerReport, QuantReport};
 use crate::io::sqnt;
 use crate::nn::engine::ActQuant;
+use crate::quant::spec::QuantSpec;
+use crate::util::fnv1a;
 use crate::util::json::Json;
 
 /// Artifact meta-schema version.  Bumped on schema changes; mismatched
 /// artifacts are dropped and recomputed, never migrated in place.
-pub const ARTIFACT_VERSION: usize = 1;
+/// v2: the flat `wbits`/`abits`/`method` triple became a canonical `spec`
+/// object (per-layer overrides + scale method), and report layer rows
+/// carry their effective `bits`.
+pub const ARTIFACT_VERSION: usize = 2;
 
 /// Headers larger than this are rejected during the startup scan (a cache
 /// directory is writable by others; don't let one file OOM the scan).
@@ -70,14 +77,6 @@ pub fn file_fingerprint(path: &Path) -> u64 {
         bytes[8 * slot..8 * (slot + 1)].copy_from_slice(&word.to_le_bytes());
     }
     fnv1a(&bytes)
-}
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
 }
 
 /// Filesystem-safe slug of a cache-key label.
@@ -377,19 +376,18 @@ fn scan_artifact(
 }
 
 /// Parse the `artifact` meta object: (cache key, source fingerprint).
+/// The embedded spec is re-validated — a cache directory is writable by
+/// others, and a hand-edited spec must not smuggle degenerate bit-widths
+/// past the request boundary.
 fn artifact_meta(header: &Json) -> Result<(QuantKey, u64)> {
     let a = header.req("artifact")?;
     let version = a.req("version")?.as_usize()?;
     if version != ARTIFACT_VERSION {
         bail!("artifact version {version} != {ARTIFACT_VERSION}");
     }
-    let key = QuantKey {
-        model: a.req("model")?.as_str()?.to_string(),
-        wbits: a.req("wbits")?.as_usize()?,
-        abits: a.req("abits")?.as_usize()?,
-        method: QuantMethod::parse(a.req("method")?.as_str()?)
-            .map_err(|e| anyhow!(e))?,
-    };
+    let spec = QuantSpec::from_json(a.req("spec")?).map_err(|e| anyhow!(e))?;
+    spec.validate().map_err(|e| anyhow!(e))?;
+    let key = QuantKey { model: a.req("model")?.as_str()?.to_string(), spec };
     let fp = u64::from_str_radix(a.req("fingerprint")?.as_str()?, 16)
         .context("bad artifact fingerprint")?;
     Ok((key, fp))
@@ -409,6 +407,7 @@ fn encode_header(key: &QuantKey, fingerprint: u64, entry: &CacheEntry) -> Result
                 .set("m", l.m)
                 .set("n", l.n)
                 .set("k", l.k)
+                .set("bits", l.bits)
                 .set("ms", l.ms)
                 .set("flips_k", l.flips_k)
                 .set("flips_c", l.flips_c)
@@ -447,9 +446,7 @@ fn encode_header(key: &QuantKey, fingerprint: u64, entry: &CacheEntry) -> Result
             Json::obj()
                 .set("version", ARTIFACT_VERSION)
                 .set("model", key.model.as_str())
-                .set("wbits", key.wbits)
-                .set("abits", key.abits)
-                .set("method", key.method.label())
+                .set("spec", key.spec.to_json())
                 .set("fingerprint", format!("{fingerprint:016x}"))
                 .set("report", report)
                 .set("act", act),
@@ -481,6 +478,7 @@ fn decode_entry(
             m: l.req("m")?.as_usize()?,
             n: l.req("n")?.as_usize()?,
             k: l.req("k")?.as_usize()?,
+            bits: l.req("bits")?.as_usize()?,
             ms: l.req("ms")?.as_f64()?,
             flips_k: l.req("flips_k")?.as_usize()?,
             flips_c: l.req("flips_c")?.as_usize()?,
@@ -519,12 +517,12 @@ mod tests {
     use crate::nn::Params;
     use crate::tensor::Tensor;
 
+    use crate::quant::spec::Method;
+
     fn key(model: &str, wbits: usize) -> QuantKey {
         QuantKey {
             model: model.to_string(),
-            wbits,
-            abits: 8,
-            method: QuantMethod::Squant { enable_k: true, enable_c: true },
+            spec: QuantSpec::uniform(Method::squant_full(), wbits, 8),
         }
     }
 
@@ -543,6 +541,7 @@ mod tests {
                 m: 1,
                 n: 1,
                 k: floats,
+                bits: 4,
                 ms: 0.25,
                 flips_k: 3,
                 flips_c: 1,
@@ -580,6 +579,7 @@ mod tests {
         assert_eq!(e.params["w"].data[3], 1.5);
         assert_eq!(e.report.layers.len(), 1);
         assert_eq!(e.report.layers[0].flips_k, 3);
+        assert_eq!(e.report.layers[0].bits, 4);
         assert_eq!(e.report.wall_ms, 0.5);
         let act = e.act.as_ref().unwrap();
         assert_eq!(act.bits, 8);
@@ -638,6 +638,58 @@ mod tests {
         let tiny = DiskCache::open(&temp_cache_dir("tiny"), 16, &fp).unwrap();
         assert!(!tiny.store(&key("m", 5), 7, &entry(64)).unwrap());
         assert_eq!(tiny.len(), 0);
+    }
+
+    /// Spec-rich keys (per-layer overrides + mse-grid scales) are first
+    ///-class artifacts: they round-trip through the disk tier and never
+    /// collide with the uniform key of the same model/bits.
+    #[test]
+    fn spec_rich_key_round_trips_and_does_not_collide() {
+        use crate::quant::spec::LayerOverride;
+        let dir = temp_cache_dir("specrich");
+        let cache = DiskCache::open(&dir, 1 << 20, &fps("m", 7)).unwrap();
+        let mut spec = QuantSpec::uniform(Method::squant_full(), 4, 8)
+            .with_override("w", LayerOverride { wbits: Some(8), method: None });
+        spec.scale = crate::quant::ScaleMethod::MseGrid { steps: 32 };
+        let rich = QuantKey { model: "m".to_string(), spec };
+        cache.store(&rich, 7, &entry(16)).unwrap();
+        // The uniform key of the same (model, wbits, abits) is a miss.
+        assert!(matches!(cache.load(&key("m", 4), 7), Lookup::Miss));
+        let Lookup::Hit(e) = cache.load(&rich, 7) else {
+            panic!("expected disk hit for the spec-rich key");
+        };
+        assert_eq!(e.params["w"].data[3], 1.5);
+        // And the full spec survives a directory rescan.
+        drop(cache);
+        let cache = DiskCache::open(&dir, 1 << 20, &fps("m", 7)).unwrap();
+        assert_eq!(cache.restored(), 1);
+        assert!(matches!(cache.load(&rich, 7), Lookup::Hit(_)));
+    }
+
+    /// Old-schema artifacts (version != ARTIFACT_VERSION) are dropped at
+    /// the startup scan and recomputed, never migrated in place.
+    #[test]
+    fn version_mismatch_drops_artifact_at_open() {
+        let dir = temp_cache_dir("vbump");
+        let fp = fps("m", 7);
+        let k = key("m", 4);
+        let path = {
+            let cache = DiskCache::open(&dir, 1 << 20, &fp).unwrap();
+            cache.store(&k, 7, &entry(8)).unwrap();
+            fs::read_dir(&dir).unwrap().next().unwrap().unwrap().path()
+        };
+        // Rewrite the container with its artifact version knocked back.
+        let c = sqnt::load(&path).unwrap();
+        let a = c.header.req("artifact").unwrap().clone();
+        let header = c
+            .header
+            .clone()
+            .set("artifact", a.set("version", ARTIFACT_VERSION - 1));
+        sqnt::save(&path, &header, &c.params).unwrap();
+        let cache = DiskCache::open(&dir, 1 << 20, &fp).unwrap();
+        assert_eq!(cache.restored(), 0);
+        assert_eq!(cache.dropped_at_open(), 1);
+        assert!(matches!(cache.load(&k, 7), Lookup::Miss));
     }
 
     #[test]

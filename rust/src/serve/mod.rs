@@ -6,7 +6,7 @@
 //!   coordinator::server (line-JSON protocol)
 //!        └── serve::Engine::handle
 //!              ├── cache   — in-memory LRU of quantized Params + report,
-//!              │             keyed by (model, wbits, abits, method)
+//!              │             keyed by (model, canonical QuantSpec)
 //!              ├── disk    — persistence tier under the LRU: spills fresh
 //!              │             and evicted artifacts as versioned SQNT files,
 //!              │             answers mem-misses across restarts, and
@@ -36,14 +36,12 @@ use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::baselines::rtn;
+use crate::coordinator;
 use crate::coordinator::server::ModelStore;
-use crate::coordinator::{self, LayerReport, QuantReport};
 use crate::eval;
 use crate::io::dataset::Dataset;
 use crate::nn::actrange::data_free_ranges;
-use crate::quant::{validate_abits, validate_wbits, ScaleMethod};
-use crate::squant::SquantOpts;
+use crate::quant::spec::QuantSpec;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::pool::default_threads;
@@ -82,49 +80,6 @@ impl Default for EngineCfg {
             cache_dir: None,
             cache_disk_mb: 1024,
         }
-    }
-}
-
-/// Serving-path quantization methods (the on-the-fly family; calibration
-/// baselines stay CLI-only).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum QuantMethod {
-    Squant { enable_k: bool, enable_c: bool },
-    Rtn,
-}
-
-impl QuantMethod {
-    /// Canonical wire name (the CLI/protocol `method` string).
-    pub fn label(&self) -> &'static str {
-        match self {
-            QuantMethod::Squant { enable_k: true, enable_c: true } => "squant",
-            QuantMethod::Squant { enable_k: false, enable_c: false } => {
-                "squant-e"
-            }
-            QuantMethod::Squant { enable_k: true, enable_c: false } => {
-                "squant-ek"
-            }
-            QuantMethod::Squant { enable_k: false, enable_c: true } => {
-                "squant-ec"
-            }
-            QuantMethod::Rtn => "rtn",
-        }
-    }
-
-    pub fn parse(s: &str) -> Result<QuantMethod, String> {
-        Ok(match s {
-            "squant" => QuantMethod::Squant { enable_k: true, enable_c: true },
-            "squant-e" => QuantMethod::Squant { enable_k: false, enable_c: false },
-            "squant-ek" => QuantMethod::Squant { enable_k: true, enable_c: false },
-            "squant-ec" => QuantMethod::Squant { enable_k: false, enable_c: true },
-            "rtn" => QuantMethod::Rtn,
-            other => {
-                return Err(format!(
-                    "unknown serving method '{other}' \
-                     (expected squant|squant-e|squant-ek|squant-ec|rtn)"
-                ))
-            }
-        })
     }
 }
 
@@ -271,10 +226,30 @@ impl Engine {
                 let mut names: Vec<String> =
                     self.store.models.keys().cloned().collect();
                 names.sort();
-                Json::obj().set("ok", true).set(
-                    "models",
-                    Json::Arr(names.into_iter().map(Json::Str).collect()),
-                )
+                // Per-model quantizable layer names, so clients (and
+                // bench-serve --mixed-keys) can build per-layer override
+                // specs without guessing.
+                let mut layers = Json::obj();
+                for name in &names {
+                    let (graph, _) = &self.store.models[name];
+                    layers = layers.set(
+                        name,
+                        Json::Arr(
+                            graph
+                                .quant_layers()
+                                .into_iter()
+                                .map(|l| Json::Str(l.weight))
+                                .collect(),
+                        ),
+                    );
+                }
+                Json::obj()
+                    .set("ok", true)
+                    .set(
+                        "models",
+                        Json::Arr(names.into_iter().map(Json::Str).collect()),
+                    )
+                    .set("layers", layers)
             }
             "quantize" => self.do_quantize(req),
             "eval" => self.do_eval(req),
@@ -299,26 +274,37 @@ impl Engine {
 
     // ---- request handlers --------------------------------------------------
 
+    /// Parse + validate one request into a cache key.  The spec comes from
+    /// the `spec` field (string or object) or the legacy flat fields — both
+    /// canonicalize through [`QuantSpec::from_request`], so both forms of
+    /// the same parameters produce identical keys.  Validation (degenerate
+    /// bit-widths, scale sanity, override consistency) happens inside
+    /// `from_request`; this adds the serve-only policies: the base method
+    /// must be in the on-the-fly family, and overrides must name layers the
+    /// model actually has.
     fn key_from(&self, req: &Json) -> Result<QuantKey, ServeError> {
         let model = req
             .get("model")
             .and_then(|m| m.as_str().ok())
             .map(String::from)
             .ok_or_else(|| ServeError::Failed("missing 'model'".into()))?;
-        if !self.store.models.contains_key(&model) {
+        let Some((graph, _)) = self.store.models.get(&model) else {
             return Err(ServeError::Failed(format!("unknown model '{model}'")));
+        };
+        let spec = QuantSpec::from_request(req).map_err(ServeError::Failed)?;
+        if !spec.method.servable() {
+            return Err(ServeError::Failed(format!(
+                "method '{}' is not servable \
+                 (expected squant|squant-e|squant-ek|squant-ec|rtn)",
+                spec.method.label()
+            )));
         }
-        // Degenerate bit-widths (0 shift-underflows qrange, 1 collapses the
-        // grid) must never reach the quantizer from the wire.
-        let wbits = req.get("wbits").and_then(|b| b.as_usize().ok()).unwrap_or(8);
-        validate_wbits(wbits).map_err(ServeError::Failed)?;
-        let abits = req.get("abits").and_then(|b| b.as_usize().ok()).unwrap_or(0);
-        validate_abits(abits).map_err(ServeError::Failed)?;
-        let method = QuantMethod::parse(
-            req.get("method").and_then(|m| m.as_str().ok()).unwrap_or("squant"),
-        )
-        .map_err(ServeError::Failed)?;
-        Ok(QuantKey { model, wbits, abits, method })
+        if spec.has_overrides() {
+            let layers = graph.quant_layers();
+            spec.validate_layers(layers.iter().map(|l| l.weight.as_str()))
+                .map_err(ServeError::Failed)?;
+        }
+        Ok(QuantKey { model, spec })
     }
 
     fn do_quantize(self: &Arc<Self>, req: &Json) -> Json {
@@ -333,8 +319,10 @@ impl Engine {
                 Json::obj()
                     .set("ok", true)
                     .set("model", key.model.as_str())
-                    .set("wbits", key.wbits)
-                    .set("method", key.method.label())
+                    .set("wbits", key.spec.wbits)
+                    .set("abits", key.spec.abits)
+                    .set("method", key.spec.method.label())
+                    .set("spec", key.spec.canonical())
                     .set("layers", r.layers.len())
                     .set("total_ms", r.total_ms)
                     .set("wall_ms", r.wall_ms)
@@ -386,8 +374,9 @@ impl Engine {
                     .set("model", key.model.as_str())
                     .set("top1", acc)
                     .set("samples", n)
-                    .set("wbits", key.wbits)
-                    .set("abits", key.abits)
+                    .set("wbits", key.spec.wbits)
+                    .set("abits", key.spec.abits)
+                    .set("spec", key.spec.canonical())
                     .set("quant_ms", entry.report.wall_ms)
                     .set("cached", src.is_cached())
                     .set("source", src.label())
@@ -686,44 +675,18 @@ impl Engine {
             .models
             .get(&key.model)
             .ok_or_else(|| ServeError::Failed(format!("unknown model '{}'", key.model)))?;
-        let t0 = Instant::now();
-        let (qparams, report) = match key.method {
-            QuantMethod::Squant { enable_k, enable_c } => {
-                let opts = SquantOpts { bits: key.wbits, enable_k, enable_c };
-                coordinator::quantize_model(graph, params, opts, self.job_threads())
-            }
-            QuantMethod::Rtn => {
-                // baselines::rtn per layer, so the protocol's per-layer
-                // timing report holds for this method too (the whole-model
-                // baseline API has no per-layer timing).
-                let layers = graph.quant_layers();
-                let mut p = params.clone();
-                let mut reports = Vec::with_capacity(layers.len());
-                let mut total_ms = 0.0;
-                for layer in &layers {
-                    let lt = Instant::now();
-                    let w = &params[&layer.weight];
-                    let wq =
-                        rtn::quantize_layer(w, key.wbits, ScaleMethod::MaxAbs);
-                    p.insert(layer.weight.clone(), wq);
-                    let ms = lt.elapsed().as_secs_f64() * 1e3;
-                    total_ms += ms;
-                    reports.push(LayerReport {
-                        weight: layer.weight.clone(),
-                        m: layer.m,
-                        n: layer.n,
-                        k: layer.k,
-                        ms,
-                        flips_k: 0,
-                        flips_c: 0,
-                    });
-                }
-                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-                (p, QuantReport { layers: reports, total_ms, wall_ms })
-            }
-        };
-        let act =
-            (key.abits > 0).then(|| data_free_ranges(graph, &qparams, key.abits));
+        // One per-layer compute path for every servable spec — squant stage
+        // sets, rtn, mse-grid scales and per-layer overrides all resolve
+        // inside the coordinator, with per-layer timing/bits in the report.
+        let (qparams, report) = coordinator::quantize_model_spec(
+            graph,
+            params,
+            &key.spec,
+            self.job_threads(),
+        )
+        .map_err(ServeError::Failed)?;
+        let abits = key.spec.abits;
+        let act = (abits > 0).then(|| data_free_ranges(graph, &qparams, abits));
         let bytes = params_bytes(&qparams);
         Ok(Arc::new(CacheEntry { params: qparams, act, report, bytes }))
     }
@@ -953,6 +916,165 @@ mod tests {
             assert_eq!(r.req("ok").unwrap(), &Json::Bool(false), "{}", r.dump());
         }
         assert_eq!(engine.metrics.errors.load(Ordering::Relaxed), 7);
+    }
+
+    /// Acceptance: a `quantize` request in legacy flat form and in `spec`
+    /// form (any JSON field order) for the same parameters produces the
+    /// SAME cache key — the second request is a memory hit, not a second
+    /// compute.
+    #[test]
+    fn legacy_and_spec_forms_share_one_cache_key() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        let legacy = Json::parse(
+            r#"{"cmd":"quantize","model":"tiny","wbits":4,"abits":8,"method":"squant"}"#,
+        )
+        .unwrap();
+        let r1 = engine.handle(&legacy);
+        assert_eq!(r1.req("ok").unwrap(), &Json::Bool(true), "{}", r1.dump());
+        assert_eq!(r1.req("cached").unwrap(), &Json::Bool(false));
+        assert_eq!(
+            r1.req("spec").unwrap().as_str().unwrap(),
+            "w4a8:squant:max-abs"
+        );
+        // Same parameters as a spec object, fields deliberately reordered.
+        let spec_form = Json::parse(
+            r#"{"cmd":"quantize","model":"tiny",
+                "spec":{"method":"squant","abits":8,"wbits":4}}"#,
+        )
+        .unwrap();
+        let r2 = engine.handle(&spec_form);
+        assert_eq!(r2.req("cached").unwrap(), &Json::Bool(true), "{}", r2.dump());
+        assert_eq!(r2.req("source").unwrap().as_str().unwrap(), "mem");
+        // And the spec string form resolves to the same key too.
+        let str_form = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "tiny")
+            .set("spec", "w4a8:squant:max-abs");
+        let r3 = engine.handle(&str_form);
+        assert_eq!(r3.req("source").unwrap().as_str().unwrap(), "mem");
+        assert_eq!(engine.cache.len(), 1);
+    }
+
+    /// mse-grid scales are servable and never collide with max-abs
+    /// artifacts for the same (model, bits, method).
+    #[test]
+    fn scale_method_is_part_of_the_cache_key() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        let r1 = engine.handle(&quantize_req());
+        assert_eq!(r1.req("cached").unwrap(), &Json::Bool(false));
+        let mse = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "tiny")
+            .set("wbits", 4usize)
+            .set("scale", "mse-grid");
+        let r2 = engine.handle(&mse);
+        assert_eq!(r2.req("ok").unwrap(), &Json::Bool(true), "{}", r2.dump());
+        assert_eq!(r2.req("cached").unwrap(), &Json::Bool(false), "distinct key");
+        assert_eq!(
+            r2.req("spec").unwrap().as_str().unwrap(),
+            "w4a0:squant:mse-grid@32"
+        );
+        assert_eq!(engine.cache.len(), 2);
+        // Both artifacts live under their own canonical keys.
+        let k_max = QuantKey {
+            model: "tiny".into(),
+            spec: QuantSpec::parse("w4").unwrap(),
+        };
+        let k_mse = QuantKey {
+            model: "tiny".into(),
+            spec: QuantSpec::parse("w4:squant:mse-grid").unwrap(),
+        };
+        assert!(engine.cache.get(&k_max).is_some());
+        assert!(engine.cache.get(&k_mse).is_some());
+        // A repeat of the mse-grid request is now a memory hit.
+        let r3 = engine.handle(&mse);
+        assert_eq!(r3.req("source").unwrap().as_str().unwrap(), "mem");
+    }
+
+    /// The new capability end-to-end at the engine level: one request
+    /// quantizes the classifier at 8 bits and the conv at 4 — cached under
+    /// its own key, with the per-layer report reflecting the mix.
+    #[test]
+    fn per_layer_override_serves_mixed_precision() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        let req = Json::parse(
+            r#"{"cmd":"quantize","model":"tiny",
+                "spec":{"wbits":4,"layers":{"wfc":{"wbits":8}}}}"#,
+        )
+        .unwrap();
+        let r = engine.handle(&req);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("layers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            r.req("spec").unwrap().as_str().unwrap(),
+            "w4a0:squant:max-abs;wfc=w8"
+        );
+        // Distinct key from the uniform request.
+        let r2 = engine.handle(&quantize_req());
+        assert_eq!(r2.req("cached").unwrap(), &Json::Bool(false));
+        assert_eq!(engine.cache.len(), 2);
+        // The overridden layer matches a uniform w8 run; the base layer
+        // matches the uniform w4 run.
+        let w8 = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "tiny")
+            .set("wbits", 8usize);
+        engine.handle(&w8);
+        let get = |spec: &str| {
+            engine
+                .cache
+                .get(&QuantKey {
+                    model: "tiny".into(),
+                    spec: QuantSpec::parse(spec).unwrap(),
+                })
+                .unwrap()
+        };
+        let mixed = get("w4;wfc=w8");
+        assert_eq!(mixed.params["wfc"].data, get("w8").params["wfc"].data);
+        assert_eq!(mixed.params["w1"].data, get("w4").params["w1"].data);
+        let by_name: std::collections::HashMap<&str, usize> = mixed
+            .report
+            .layers
+            .iter()
+            .map(|l| (l.weight.as_str(), l.bits))
+            .collect();
+        assert_eq!(by_name["w1"], 4);
+        assert_eq!(by_name["wfc"], 8);
+    }
+
+    #[test]
+    fn override_naming_unknown_layer_is_rejected() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        let req = Json::parse(
+            r#"{"cmd":"quantize","model":"tiny",
+                "spec":{"wbits":4,"layers":{"nope":{"wbits":8}}}}"#,
+        )
+        .unwrap();
+        let r = engine.handle(&req);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(false), "{}", r.dump());
+        assert!(r
+            .req("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("unknown layer 'nope'"));
+        assert_eq!(engine.cache.len(), 0, "nothing computed");
+    }
+
+    /// `models` lists each model's quantizable layers so clients can build
+    /// override specs without guessing names.
+    #[test]
+    fn models_response_carries_layer_names() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        let r = engine.handle(&Json::obj().set("cmd", "models"));
+        let layers = r.req("layers").unwrap().req("tiny").unwrap();
+        let names: Vec<&str> = layers
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["w1", "wfc"]);
     }
 
     #[test]

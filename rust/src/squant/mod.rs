@@ -48,12 +48,7 @@ impl SquantOpts {
         SquantOpts { bits, enable_k: false, enable_c: true }
     }
     pub fn label(&self) -> &'static str {
-        match (self.enable_k, self.enable_c) {
-            (false, false) => "SQuant-E",
-            (true, false) => "SQuant-E&K",
-            (false, true) => "SQuant-E&C",
-            (true, true) => "SQuant-E&K&C",
-        }
+        crate::quant::spec::squant_stage_label(self.enable_k, self.enable_c)
     }
 }
 

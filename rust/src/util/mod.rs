@@ -32,6 +32,17 @@ pub fn sign(x: f32) -> f32 {
     }
 }
 
+/// FNV-1a 64-bit hash — the crate-wide stable key hash (spec key hashes,
+/// artifact file names, model fingerprints).  Deliberately not `DefaultHasher`:
+/// the value is persisted on disk, so it must be stable across Rust versions.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -204,6 +204,96 @@ fn file_store(model_path: &PathBuf) -> Arc<ModelStore> {
     )
 }
 
+/// Acceptance: a per-layer-override request round-trips through disk spill
+/// → server restart → warm hit.  The spec-form request (mixed precision:
+/// classifier at 8 bits over a 4-bit base) is computed once, spilled as a
+/// versioned SQNT artifact, restored by the startup scan of a brand-new
+/// process, answered to `warm` straight from disk, and then served from
+/// memory — no SQuant recompute anywhere after the first request.
+#[test]
+fn per_layer_override_round_trips_disk_restart_warm() {
+    let dir = std::env::temp_dir()
+        .join(format!("squant_override_warm_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("tiny.sqnt");
+    write_tiny_model(&model_path, 0);
+    let cfg = EngineCfg {
+        cache_dir: Some(dir.join("cache")),
+        cache_disk_mb: 64,
+        ..cfg()
+    };
+    let spec = Json::parse(
+        r#"{"wbits":4,"abits":8,"method":"squant","scale":"max-abs",
+            "layers":{"wfc":{"wbits":8}}}"#,
+    )
+    .unwrap();
+    let canonical = "w4a8:squant:max-abs;wfc=w8";
+    let quantize = Json::obj()
+        .set("cmd", "quantize")
+        .set("model", "tiny")
+        .set("spec", spec.clone());
+    let shutdown = Json::parse(r#"{"cmd":"shutdown"}"#).unwrap();
+
+    // 1. Compute fresh, check the canonical spec echo, spill to disk.
+    let fresh_flips;
+    {
+        let handle = spawn(file_store(&model_path), "127.0.0.1:0", cfg.clone())
+            .unwrap();
+        let mut client = Client::connect(&handle.addr.to_string()).unwrap();
+        let r = client.call(&quantize).unwrap();
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "fresh");
+        assert_eq!(r.req("spec").unwrap().as_str().unwrap(), canonical);
+        fresh_flips = r.req("flips").unwrap().as_usize().unwrap();
+        let _ = client.call(&shutdown).unwrap();
+        handle.join();
+    }
+
+    // 2. Restart: `warm` with the same spec must land from disk, and the
+    //    follow-up quantize is then a memory hit with the report intact.
+    {
+        let handle = spawn(file_store(&model_path), "127.0.0.1:0", cfg.clone())
+            .unwrap();
+        let mut client = Client::connect(&handle.addr.to_string()).unwrap();
+        let warm = Json::obj()
+            .set("cmd", "warm")
+            .set("model", "tiny")
+            .set("spec", spec.clone());
+        let r = client.call(&warm).unwrap();
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "disk");
+
+        // The spec string form resolves to the same key: memory hit.
+        let r = client
+            .call(
+                &Json::obj()
+                    .set("cmd", "quantize")
+                    .set("model", "tiny")
+                    .set("spec", canonical),
+            )
+            .unwrap();
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "mem");
+        assert_eq!(r.req("layers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(r.req("flips").unwrap().as_usize().unwrap(), fresh_flips);
+
+        // The uniform w4 key is a different artifact: nothing warm for it.
+        let r = client
+            .call(
+                &Json::obj()
+                    .set("cmd", "quantize")
+                    .set("model", "tiny")
+                    .set("wbits", 4usize)
+                    .set("abits", 8usize),
+            )
+            .unwrap();
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(false), "{}", r.dump());
+        let _ = client.call(&shutdown).unwrap();
+        handle.join();
+    }
+}
+
 #[test]
 fn restart_warm_start_and_fingerprint_invalidation() {
     let dir = std::env::temp_dir()

@@ -1,0 +1,261 @@
+//! Property tests for the canonical quantization spec (`quant::spec`):
+//!
+//!  * parse → canonical string → parse round-trips to the same spec and
+//!    the same stable key hash;
+//!  * the JSON form is field-order independent (same spec, same hash, no
+//!    matter how the object is serialized) and round-trips via to_json;
+//!  * legacy flat-field requests and `spec`-form requests for the same
+//!    parameters canonicalize to the same spec (identical cache keys);
+//!  * per-layer overrides naming unknown layers are rejected at the
+//!    boundary.
+
+use squant::quant::spec::{
+    parse_scale, scale_label, LayerOverride, Method, QuantSpec,
+};
+use squant::quant::ScaleMethod;
+use squant::util::json::Json;
+use squant::util::prop::{forall, Case};
+
+const ALL_METHODS: [&str; 12] = [
+    "fp32",
+    "rtn",
+    "dfq",
+    "zeroq",
+    "dsg",
+    "gdfq",
+    "squant",
+    "squant-e",
+    "squant-ek",
+    "squant-ec",
+    "adaround",
+    "dsg-adaround",
+];
+
+const PER_LAYER_METHODS: [&str; 6] =
+    ["fp32", "rtn", "squant", "squant-e", "squant-ek", "squant-ec"];
+
+const LAYER_POOL: [&str; 5] = ["w1", "wfc", "conv1", "layer2.0.conv", "fc"];
+
+fn rand_bits(case: &mut Case) -> usize {
+    2 + case.rng.below(15)
+}
+
+/// A random valid spec.  Overrides and non-max-abs scales only appear on
+/// per-layer base methods (the validator's rule).
+fn rand_spec(case: &mut Case) -> QuantSpec {
+    let method =
+        Method::parse(ALL_METHODS[case.rng.below(ALL_METHODS.len())]).unwrap();
+    let abits = if case.rng.below(2) == 0 { 0 } else { rand_bits(case) };
+    let mut spec = QuantSpec::uniform(method, rand_bits(case), abits);
+    if method.per_layer() {
+        if case.rng.below(3) == 0 {
+            spec.scale = ScaleMethod::MseGrid { steps: 1 + case.rng.below(64) };
+        }
+        let n_overrides = case.rng.below(LAYER_POOL.len()).min(case.size);
+        for _ in 0..n_overrides {
+            let layer = LAYER_POOL[case.rng.below(LAYER_POOL.len())];
+            let ov = match case.rng.below(3) {
+                0 => LayerOverride { wbits: Some(rand_bits(case)), method: None },
+                1 => LayerOverride {
+                    wbits: None,
+                    method: Some(
+                        Method::parse(
+                            PER_LAYER_METHODS
+                                [case.rng.below(PER_LAYER_METHODS.len())],
+                        )
+                        .unwrap(),
+                    ),
+                },
+                _ => LayerOverride {
+                    wbits: Some(rand_bits(case)),
+                    method: Some(
+                        Method::parse(
+                            PER_LAYER_METHODS
+                                [case.rng.below(PER_LAYER_METHODS.len())],
+                        )
+                        .unwrap(),
+                    ),
+                },
+            };
+            spec = spec.with_override(layer, ov);
+        }
+    }
+    spec.normalized()
+}
+
+#[test]
+fn canonical_string_round_trips() {
+    forall("spec-canonical-round-trip", 1923, 300, 5, |case| {
+        let spec = rand_spec(case);
+        spec.validate().map_err(|e| format!("generated spec invalid: {e}"))?;
+        let canon = spec.canonical();
+        let back = QuantSpec::parse(&canon)
+            .map_err(|e| format!("canonical '{canon}' failed to parse: {e}"))?;
+        if back != spec {
+            return Err(format!("'{canon}' parsed to {back:?}, wanted {spec:?}"));
+        }
+        if back.key_hash() != spec.key_hash() {
+            return Err(format!("hash changed across round-trip of '{canon}'"));
+        }
+        if back.canonical() != canon {
+            return Err(format!("canonical not a fixed point: '{canon}'"));
+        }
+        Ok(())
+    });
+}
+
+/// Reverse every object's field order (recursively) — a different but
+/// equivalent JSON serialization of the same value.
+fn reverse_fields(j: &Json) -> Json {
+    match j {
+        Json::Obj(kv) => Json::Obj(
+            kv.iter()
+                .rev()
+                .map(|(k, v)| (k.clone(), reverse_fields(v)))
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(items.iter().map(reverse_fields).collect()),
+        other => other.clone(),
+    }
+}
+
+#[test]
+fn json_form_is_field_order_independent() {
+    forall("spec-json-field-order", 0x5eed, 300, 5, |case| {
+        let spec = rand_spec(case);
+        let j = spec.to_json();
+        let a = QuantSpec::from_json(&j)
+            .map_err(|e| format!("to_json not parseable: {e}"))?;
+        let b = QuantSpec::from_json(&reverse_fields(&j))
+            .map_err(|e| format!("reversed JSON not parseable: {e}"))?;
+        if a != spec || b != spec {
+            return Err(format!("JSON round-trip drifted for {}", spec.canonical()));
+        }
+        if a.key_hash() != b.key_hash() {
+            return Err("field order changed the key hash".to_string());
+        }
+        // Serialize → reparse (through the wire codec) too.
+        let c = QuantSpec::from_json(&Json::parse(&j.dump()).unwrap())
+            .map_err(|e| format!("dumped JSON not parseable: {e}"))?;
+        if c != spec {
+            return Err("dump/parse drifted".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn legacy_flat_and_spec_requests_hash_identically() {
+    forall("spec-legacy-equivalence", 7, 200, 4, |case| {
+        // Uniform specs are exactly what the legacy flat form can express.
+        let method =
+            Method::parse(ALL_METHODS[case.rng.below(ALL_METHODS.len())]).unwrap();
+        let mut spec = QuantSpec::uniform(method, rand_bits(case), {
+            if case.rng.below(2) == 0 {
+                0
+            } else {
+                rand_bits(case)
+            }
+        });
+        if method.per_layer() && case.rng.below(3) == 0 {
+            spec.scale = ScaleMethod::MseGrid { steps: 1 + case.rng.below(64) };
+        }
+        let flat = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "m")
+            .set("wbits", spec.wbits)
+            .set("abits", spec.abits)
+            .set("method", spec.method.label())
+            .set("scale", scale_label(spec.scale));
+        let spec_obj = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "m")
+            .set("spec", spec.to_json());
+        let spec_str = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "m")
+            .set("spec", spec.canonical());
+        let a = QuantSpec::from_request(&flat)
+            .map_err(|e| format!("flat form rejected: {e}"))?;
+        let b = QuantSpec::from_request(&spec_obj)
+            .map_err(|e| format!("spec object rejected: {e}"))?;
+        let c = QuantSpec::from_request(&spec_str)
+            .map_err(|e| format!("spec string rejected: {e}"))?;
+        if a != spec || b != spec || c != spec {
+            return Err(format!(
+                "request forms disagree for {}: flat={}, obj={}, str={}",
+                spec.canonical(),
+                a.canonical(),
+                b.canonical(),
+                c.canonical()
+            ));
+        }
+        if a.key_hash() != b.key_hash() || b.key_hash() != c.key_hash() {
+            return Err("request forms hash differently".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn unknown_layer_overrides_rejected() {
+    forall("spec-unknown-layer", 99, 200, 4, |case| {
+        let mut spec = rand_spec(case);
+        if !spec.method.per_layer() {
+            return Ok(()); // no overrides possible
+        }
+        spec = spec.with_override(
+            "definitely-not-a-layer",
+            LayerOverride { wbits: Some(8), method: None },
+        );
+        let spec = spec.normalized();
+        match spec.validate_layers(LAYER_POOL.iter().copied()) {
+            Err(e) if e.contains("unknown layer") => Ok(()),
+            Err(e) => Err(format!("wrong error: {e}")),
+            Ok(()) => Err("unknown layer accepted".to_string()),
+        }
+    });
+}
+
+#[test]
+fn distinct_specs_hash_distinctly_in_practice() {
+    // Not a cryptographic claim — just a regression guard that the spec
+    // pool used across the suite doesn't collide under FNV-1a.
+    use std::collections::HashMap;
+    let mut seen: HashMap<u64, String> = HashMap::new();
+    for w in [2usize, 3, 4, 8, 16] {
+        for a in [0usize, 4, 8] {
+            for m in ["squant", "squant-e", "rtn"] {
+                for sc in ["max-abs", "mse-grid@32"] {
+                    for ov in ["", ";wfc=w8", ";w1=fp32;wfc=w8"] {
+                        let s =
+                            QuantSpec::parse(&format!("w{w}a{a}:{m}:{sc}{ov}"))
+                                .unwrap();
+                        let canon = s.canonical();
+                        if let Some(prev) =
+                            seen.insert(s.key_hash(), canon.clone())
+                        {
+                            if prev != canon {
+                                panic!("hash collision: '{prev}' vs '{canon}'");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(seen.len() > 200);
+}
+
+#[test]
+fn scale_tokens_round_trip() {
+    for s in ["max-abs", "mse-grid@7", "mse-grid@32"] {
+        assert_eq!(scale_label(parse_scale(s).unwrap()), s);
+    }
+    assert_eq!(
+        parse_scale("mse-grid").unwrap(),
+        ScaleMethod::MseGrid { steps: 32 }
+    );
+    assert!(parse_scale("mse").is_err());
+    assert!(parse_scale("mse-grid@x").is_err());
+}
