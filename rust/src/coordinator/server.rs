@@ -26,17 +26,29 @@
 //! `{"ok":false,"error":"busy","retry_ms":N}` instead of queueing
 //! unboundedly — clients should back off and retry.
 //!
-//! This module is a thin protocol layer: every request is dispatched to
-//! [`crate::serve::Engine`], which owns the artifact cache, single-flight
-//! deduplication, the bounded worker pool and the metrics (see
-//! `rust/src/serve/`).  Connection threads only parse/serialize lines; the
-//! accept loop polls non-blockingly so `shutdown` takes effect without
-//! needing one more connection, and joins every connection thread before
-//! returning.
+//! This module is a thin *protocol adapter* between two subsystems:
+//!
+//! * [`crate::serve::net`] — the event-driven connection layer.  One
+//!   reactor thread owns the listener and every connection (nonblocking
+//!   I/O, newline framing, write queues, idle/slow-loris reaping,
+//!   `--max-conns` admission); there is no thread per connection, so total
+//!   thread count is `1 + --workers` regardless of open connections.
+//! * [`crate::serve::Engine`] — cache, disk tier, single-flight, bounded
+//!   worker pool and metrics.  The adapter parses each framed line and
+//!   hands it to [`Engine::submit`], the non-blocking dispatch path:
+//!   fast requests answer inline, slow ones complete from a worker thread
+//!   through the reactor's completion channel + wakeup.
+//!
+//! The only verb handled here is `shutdown`: it flips the reactor's stop
+//! handle (waking the poller immediately — shutdown latency is flush time,
+//! not a poll timeout), and the reactor drains owed responses before the
+//! engine flushes its remaining jobs (including pending disk spills).
+//! Pipelined requests on one connection are answered strictly in order;
+//! requests on different connections proceed concurrently.
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -46,15 +58,16 @@ use std::time::Duration;
 use crate::io::{dataset, manifest::Manifest, sqnt};
 use crate::nn::{Graph, Params};
 use crate::serve::disk::file_fingerprint;
+use crate::serve::net::{NetCfg, Reactor, StopHandle};
 use crate::serve::{Engine, EngineCfg};
 use crate::util::json::Json;
 
 pub struct ModelStore {
     pub models: HashMap<String, (Graph, Params)>,
-    /// Source-file fingerprint per model (size + mtime), used by the disk
-    /// cache tier to invalidate artifacts when a zoo model is refreshed.
-    /// In-memory stores (tests) may leave this empty: absent models
-    /// fingerprint to 0.
+    /// Source-file fingerprint per model (size + content hash), used by
+    /// the disk cache tier to invalidate artifacts when a zoo model is
+    /// refreshed.  In-memory stores (tests) may leave this empty: absent
+    /// models fingerprint to 0.
     pub fingerprints: HashMap<String, u64>,
     pub test: dataset::Dataset,
 }
@@ -94,11 +107,29 @@ impl ModelStore {
     pub fn fingerprint(&self, model: &str) -> u64 {
         self.fingerprints.get(model).copied().unwrap_or(0)
     }
+
+    /// The in-memory single-model store used by the test suites and
+    /// `bench-serve --tiny` (the CI smoke job): one model named "tiny"
+    /// (the small conv+fc test graph), an 8-image all-zero dataset, no
+    /// fingerprints.  One definition, so the smoke job and the tests can
+    /// never drift apart.
+    pub fn tiny() -> Arc<ModelStore> {
+        let (g, p) = crate::nn::tiny_test_graph(3, 4, 10);
+        let mut models = HashMap::new();
+        models.insert("tiny".to_string(), (g, p));
+        let test = dataset::Dataset {
+            images: crate::tensor::Tensor::zeros(&[8, 3, 8, 8]),
+            labels: vec![0; 8],
+        };
+        Arc::new(ModelStore { models, fingerprints: HashMap::new(), test })
+    }
 }
 
-/// Dispatch one request: `shutdown` flips the server's stop flag, anything
-/// else goes to the engine.
-fn dispatch(engine: &Arc<Engine>, req: &Json, stop: &AtomicBool) -> Json {
+/// Dispatch one request synchronously: `shutdown` flips the server's stop
+/// flag, anything else goes to the engine.  This is the blocking
+/// counterpart of the reactor's dispatcher, kept as the public API for
+/// tests and direct (non-TCP) dispatch.
+pub fn dispatch(engine: &Arc<Engine>, req: &Json, stop: &AtomicBool) -> Json {
     let cmd = req.get("cmd").and_then(|c| c.as_str().ok()).unwrap_or("");
     if cmd == "shutdown" {
         engine.metrics.count_cmd("shutdown");
@@ -106,6 +137,15 @@ fn dispatch(engine: &Arc<Engine>, req: &Json, stop: &AtomicBool) -> Json {
         return Json::obj().set("ok", true).set("bye", true);
     }
     engine.handle(req)
+}
+
+/// Net-layer slice of the serving configuration.
+fn net_cfg(cfg: &EngineCfg) -> NetCfg {
+    NetCfg {
+        max_conns: cfg.max_conns,
+        idle_timeout: (cfg.idle_timeout_ms > 0)
+            .then(|| Duration::from_millis(cfg.idle_timeout_ms)),
+    }
 }
 
 /// Serve on `addr` until a `shutdown` request arrives (CLI entry point).
@@ -116,32 +156,38 @@ pub fn serve(store: Arc<ModelStore>, addr: &str, cfg: EngineCfg) -> Result<()> {
         None => String::new(),
     };
     println!(
-        "squant coordinator listening on {} ({} workers, queue {}, cache {} entries / {} MB{})",
+        "squant coordinator listening on {} ({} workers, queue {}, cache {} \
+         entries / {} MB{}, max {} conns, idle timeout {} ms)",
         listener.local_addr()?,
         cfg.workers.max(1),
         cfg.queue_depth,
         cfg.cache_cap,
         cfg.cache_mb,
-        disk_desc
+        disk_desc,
+        cfg.max_conns,
+        cfg.idle_timeout_ms,
     );
-    let engine = Engine::new(store, cfg)?;
-    run(listener, engine, Arc::new(AtomicBool::new(false)))
+    let engine = Engine::new(store, cfg.clone())?;
+    let reactor = Reactor::new(listener, net_cfg(&cfg), Arc::clone(&engine.metrics))?;
+    run(reactor, engine)
 }
 
 /// A background server (tests, examples, `bench-serve --spawn`).
 pub struct ServerHandle {
     pub addr: SocketAddr,
-    stop: Arc<AtomicBool>,
+    stop: StopHandle,
     thread: Option<thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Ask the accept loop to exit (same effect as a `shutdown` request).
+    /// Ask the reactor to exit (same effect as a `shutdown` request); the
+    /// poller is woken immediately.
     pub fn stop(&self) {
-        self.stop.store(true, Ordering::SeqCst);
+        self.stop.request();
     }
 
-    /// Stop and wait for the accept loop + all connection threads.
+    /// Stop and wait for the reactor thread (which drains owed responses
+    /// and flushes engine jobs before returning).
     pub fn join(mut self) {
         self.stop();
         if let Some(t) = self.thread.take() {
@@ -167,101 +213,42 @@ pub fn spawn(
 ) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    let stop = Arc::new(AtomicBool::new(false));
-    let engine = Engine::new(store, cfg)?;
-    let stop2 = Arc::clone(&stop);
+    let engine = Engine::new(store, cfg.clone())?;
+    let reactor = Reactor::new(listener, net_cfg(&cfg), Arc::clone(&engine.metrics))?;
+    let stop = reactor.stop_handle();
     let thread = thread::spawn(move || {
-        let _ = run(listener, engine, stop2);
+        let _ = run(reactor, engine);
     });
     Ok(ServerHandle { addr: local, stop, thread: Some(thread) })
 }
 
-/// Accept loop: non-blocking accept + stop-flag poll, so `shutdown` exits
-/// promptly without the "one more connection" nudge the old blocking loop
-/// needed.  Connection threads are tracked and joined before returning.
-fn run(
-    listener: TcpListener,
-    engine: Arc<Engine>,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
-    listener.set_nonblocking(true)?;
-    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
-    while !stop.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((conn, _)) => {
-                let engine = Arc::clone(&engine);
-                let stop = Arc::clone(&stop);
-                conns.push(thread::spawn(move || {
-                    let _ = handle_conn(&engine, conn, &stop);
-                }));
+/// Drive the reactor with the protocol dispatcher until a stop is
+/// requested, then flush the engine (admitted jobs incl. pending disk
+/// spills) so a restart over the same `--cache-dir` never scans
+/// half-written state.
+fn run(reactor: Reactor, engine: Arc<Engine>) -> Result<()> {
+    let stop = reactor.stop_handle();
+    let eng = Arc::clone(&engine);
+    reactor.run(move |line, respond| {
+        let req = match Json::parse(line) {
+            Ok(req) => req,
+            Err(e) => {
+                respond(
+                    Json::obj().set("ok", false).set("error", format!("{e:#}")),
+                );
+                return;
             }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                thread::sleep(Duration::from_millis(10));
-            }
-            Err(_) => thread::sleep(Duration::from_millis(10)),
+        };
+        let cmd = req.get("cmd").and_then(|c| c.as_str().ok()).unwrap_or("");
+        if cmd == "shutdown" {
+            eng.metrics.count_cmd("shutdown");
+            stop.request();
+            respond(Json::obj().set("ok", true).set("bye", true));
+            return;
         }
-        conns.retain(|h| !h.is_finished());
-    }
-    for h in conns {
-        let _ = h.join();
-    }
-    // Flush admitted jobs (including pending disk spills) before returning:
-    // a restart over the same --cache-dir must not scan half-written state.
+        eng.submit(&req, respond);
+    })?;
     engine.wait_idle();
-    Ok(())
-}
-
-/// One connection: read a JSON line, answer a JSON line.  Reads use a short
-/// timeout so an idle connection notices shutdown.  Framing is done on raw
-/// bytes (not `read_line`) so a timeout firing mid multi-byte UTF-8
-/// character cannot discard an accumulated partial line — `read_line`'s
-/// append-to-string guard truncates on invalid UTF-8, which would desync
-/// the protocol.
-fn handle_conn(engine: &Arc<Engine>, mut conn: TcpStream, stop: &AtomicBool)
-               -> Result<()> {
-    conn.set_read_timeout(Some(Duration::from_millis(200)))?;
-    let mut writer = conn.try_clone()?;
-    let mut pending: Vec<u8> = Vec::new();
-    let mut chunk = [0u8; 4096];
-    loop {
-        match conn.read(&mut chunk) {
-            Ok(0) => break, // EOF
-            Ok(n) => {
-                pending.extend_from_slice(&chunk[..n]);
-                while let Some(pos) = pending.iter().position(|&b| b == b'\n') {
-                    let line: Vec<u8> = pending.drain(..=pos).collect();
-                    let text = String::from_utf8_lossy(&line);
-                    let text = text.trim();
-                    if text.is_empty() {
-                        continue;
-                    }
-                    let resp = match Json::parse(text) {
-                        Ok(req) => dispatch(engine, &req, stop),
-                        Err(e) => Json::obj()
-                            .set("ok", false)
-                            .set("error", format!("{e:#}")),
-                    };
-                    writer.write_all(resp.dump().as_bytes())?;
-                    writer.write_all(b"\n")?;
-                    if stop.load(Ordering::SeqCst) {
-                        return Ok(());
-                    }
-                }
-            }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    ErrorKind::WouldBlock | ErrorKind::TimedOut
-                ) =>
-            {
-                if stop.load(Ordering::SeqCst) {
-                    break;
-                }
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => return Err(e.into()),
-        }
-    }
     Ok(())
 }
 
@@ -278,6 +265,14 @@ impl Client {
         })
     }
 
+    /// Optional read timeout for subsequent [`Client::call`]s; `None`
+    /// blocks indefinitely (the default).  Load generators set this so a
+    /// wedged server turns into a clean failure instead of a hang.
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
     pub fn call(&mut self, req: &Json) -> Result<Json> {
         self.stream.write_all(req.dump().as_bytes())?;
         self.stream.write_all(b"\n")?;
@@ -291,18 +286,9 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::tiny_test_graph;
-    use crate::tensor::Tensor;
 
     fn tiny_store() -> Arc<ModelStore> {
-        let (g, p) = tiny_test_graph(3, 4, 10);
-        let mut models = HashMap::new();
-        models.insert("tiny".to_string(), (g, p));
-        let test = dataset::Dataset {
-            images: Tensor::zeros(&[8, 3, 8, 8]),
-            labels: vec![0; 8],
-        };
-        Arc::new(ModelStore { models, fingerprints: HashMap::new(), test })
+        ModelStore::tiny()
     }
 
     fn test_cfg() -> EngineCfg {

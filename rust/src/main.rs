@@ -12,14 +12,22 @@
 //!   squant serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
 //!                [--cache-cap N] [--cache-mb MB]
 //!                [--cache-dir DIR] [--cache-disk-mb MB]
-//!                TCP quantization service (mem LRU + disk persistence +
-//!                single-flight + bounded scheduler; see serve/)
-//!   squant bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--reqs N]
-//!                [--restart-warm] [--mixed-keys]
+//!                [--max-conns N] [--idle-timeout-ms MS]
+//!                TCP quantization service (event-driven serve/net reactor
+//!                over mem LRU + disk persistence + single-flight +
+//!                bounded scheduler; total threads = 1 + --workers)
+//!   squant bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--idle M]
+//!                [--reqs N] [--restart-warm] [--mixed-keys] [--tiny]
+//!                [--strict]
 //!                load-generate against a serve instance:
-//!                req/s, hit-rate, latency quantiles, busy rejections; with
-//!                --spawn --cache-dir --restart-warm, also restart the
-//!                server and measure warm-start disk hits
+//!                req/s, hit-rate, latency quantiles, busy rejections and
+//!                connection gauges; --idle M keeps M of the N connections
+//!                open and silent while the rest drive load (the
+//!                connection-scaling scenario); with --spawn --cache-dir
+//!                --restart-warm, also restart the server and measure
+//!                warm-start disk hits; --tiny serves an in-memory test
+//!                model (no artifacts needed); --strict exits non-zero on
+//!                any error or dropped idle conn
 //!
 //! Quantization is described everywhere by ONE canonical spec
 //! (`quant::spec::QuantSpec`): `--spec "w4a8:squant:max-abs;fc=w8"` is the
@@ -149,6 +157,7 @@ COMMANDS:
   serve   [--addr HOST:PORT] [--workers N] [--queue-depth N]
           [--cache-cap N] [--cache-mb MB]       TCP quantization service
           [--cache-dir DIR] [--cache-disk-mb MB]
+          [--max-conns N] [--idle-timeout-ms MS]
           protocol verbs: ping models quantize eval warm stats shutdown
           (quantize/eval/warm take the flat wbits/abits/method/scale
           fields or a \"spec\" object/string; quantize/eval hit an LRU
@@ -157,17 +166,28 @@ COMMANDS:
           --cache-dir enables the disk persistence tier: artifacts are
           spilled as versioned SQNT files and survive restarts, bounded
           by --cache-disk-mb (default 1024); stale artifacts (source
-          model file changed) are invalidated automatically
-  bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--reqs N]
-          [--models A,B] [--wbits 8,4] [--eval-every N] [--samples N]
-          [--seed S] [--restart-warm] [--mixed-keys]
+          model file content changed) are invalidated automatically.
+          connections are served by an event-driven reactor (epoll/poll),
+          not a thread each: --max-conns (default 1024) bounds open
+          connections (excess get one \"overloaded\" error line) and
+          --idle-timeout-ms (default 60000, 0 disables) reaps idle and
+          slow-loris connections; both show up under stats \"conns\"
+  bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--idle M]
+          [--reqs N] [--models A,B] [--wbits 8,4] [--eval-every N]
+          [--samples N] [--seed S] [--restart-warm] [--mixed-keys]
+          [--tiny] [--strict]
           load-generate against a server; prints req/s, cache hit-rate,
-          p50/p95/p99 latency and busy rejections.  --mixed-keys samples
-          heterogeneous specs (bits x stage sets x scales x per-layer
-          overrides) instead of uniform keys.  --restart-warm (with
-          --spawn and --cache-dir) restarts the spawned server after the
-          load phase and replays every key once to measure disk-tier
-          warm-start
+          p50/p95/p99 latency, busy rejections and connection gauges.
+          --idle M opens N conns but keeps M of them silent while the
+          hot subset drives the load — the connection-scaling scenario
+          (idle conns must stay alive and cost no threads).  --mixed-keys
+          samples heterogeneous specs (bits x stage sets x scales x
+          per-layer overrides) instead of uniform keys.  --restart-warm
+          (with --spawn and --cache-dir) restarts the spawned server
+          after the load phase and replays every key once to measure
+          disk-tier warm-start.  --tiny spawns over an in-memory test
+          model, so no artifacts are needed (CI smoke).  --strict exits
+          non-zero on request errors or dropped idle conns
 
 SPEC:   w<W>a<A>:<method>:<scale>[;<layer>=<override>]*
         e.g. \"w4a8:squant:max-abs;conv1=w8;fc=w8/rtn\" — overrides are
@@ -444,6 +464,8 @@ fn serve_cfg(args: &mut Args) -> Result<EngineCfg> {
         cache_mb: args.usize_or("cache-mb", defaults.cache_mb)?,
         cache_dir: args.opt("cache-dir").map(std::path::PathBuf::from),
         cache_disk_mb: args.usize_or("cache-disk-mb", defaults.cache_disk_mb)?,
+        max_conns: args.usize_or("max-conns", defaults.max_conns)?,
+        idle_timeout_ms: args.u64_or("idle-timeout-ms", defaults.idle_timeout_ms)?,
     })
 }
 
@@ -500,6 +522,8 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
 
     let addr = args.str_or("addr", "127.0.0.1:7433");
     let conns = args.usize_or("conns", 8)?.max(1);
+    let idle = args.usize_or("idle", 0)?.min(conns);
+    let hot = conns - idle;
     let reqs = args.usize_or("reqs", 64)?.max(1);
     let model_list = args.list_or("models", "");
     let wbits_list = args.list_or("wbits", "8,4");
@@ -509,6 +533,8 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let spawn = args.flag("spawn");
     let restart_warm = args.flag("restart-warm");
     let mixed = args.flag("mixed-keys");
+    let tiny = args.flag("tiny");
+    let strict = args.flag("strict");
     let cfg = serve_cfg(args)?;
     args.finish()?;
     if restart_warm && (!spawn || cfg.cache_dir.is_none()) {
@@ -517,12 +543,23 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
              (the disk tier is what survives the restart)"
         );
     }
+    if tiny && !spawn {
+        bail!("--tiny only makes sense with --spawn (it picks the spawned store)");
+    }
+
+    let build_store = || -> Result<std::sync::Arc<server::ModelStore>> {
+        if tiny {
+            // The in-memory test model — no artifacts needed (CI smoke).
+            return Ok(server::ModelStore::tiny());
+        }
+        let man = Manifest::load(artifacts)?;
+        let store = server::ModelStore::load(&man).context("loading models")?;
+        Ok(std::sync::Arc::new(store))
+    };
 
     // Either target a running server (--addr) or self-host one (--spawn).
     let server = if spawn {
-        let man = Manifest::load(artifacts)?;
-        let store = server::ModelStore::load(&man).context("loading models")?;
-        Some(server::spawn(std::sync::Arc::new(store), "127.0.0.1:0", cfg.clone())?)
+        Some(server::spawn(build_store()?, "127.0.0.1:0", cfg.clone())?)
     } else {
         None
     };
@@ -608,16 +645,27 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let errors = Arc::new(AtomicU64::new(0));
     let done = Arc::new(AtomicU64::new(0));
 
+    // The connection-scaling scenario: open the idle set first — these
+    // stay connected and silent for the whole load phase.  With the
+    // reactor they cost one registration each (no thread, no worker slot,
+    // no per-conn timer); they are pinged at the end to prove they
+    // survived.
+    let mut idle_conns = Vec::new();
+    for _ in 0..idle {
+        idle_conns
+            .push(server::Client::connect(&addr).context("opening idle conn")?);
+    }
+
     println!(
-        "bench-serve: {conns} conns x {reqs} reqs against {addr} \
-         (models {:?}, wbits {:?}, eval every {eval_every}{})",
+        "bench-serve: {hot} hot + {idle} idle conns x {reqs} reqs against \
+         {addr} (models {:?}, wbits {:?}, eval every {eval_every}{})",
         models,
         wbits,
         if mixed { ", mixed keys" } else { "" }
     );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
-    for ci in 0..conns {
+    for ci in 0..hot {
         let (addr, models, wbits) = (addr.clone(), Arc::clone(&models),
                                      Arc::clone(&wbits));
         let (layer_names, sent) = (Arc::clone(&layer_names), Arc::clone(&sent));
@@ -737,6 +785,44 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         busy.load(Ordering::Relaxed),
         errors.load(Ordering::Relaxed)
     );
+    if let Ok(conns_stats) = stats1.req("conns") {
+        println!(
+            "  conns      : active {}, peak {}, rejected {}, idle-closed {}",
+            conns_stats.req("active")?.as_usize()?,
+            conns_stats.req("peak")?.as_usize()?,
+            conns_stats.req("rejected")?.as_usize()?,
+            conns_stats.req("idle_closed")?.as_usize()?,
+        );
+    }
+    // Prove the idle set survived the load phase: every silent connection
+    // must still answer a ping (i.e. the server held N mostly-idle conns
+    // without reaping or wedging them).  The ping gets a read timeout so a
+    // wedged-but-open conn counts as dead instead of hanging the bench
+    // (and the --strict CI job) forever.
+    let mut idle_alive = 0usize;
+    for c in idle_conns.iter_mut() {
+        let _ = c.set_timeout(Some(std::time::Duration::from_secs(5)));
+        let ok = c
+            .call(&Json::parse(r#"{"cmd":"ping"}"#)?)
+            .map(|r| matches!(r.get("ok"), Some(Json::Bool(true))))
+            .unwrap_or(false);
+        if ok {
+            idle_alive += 1;
+        }
+    }
+    if idle > 0 {
+        println!("  idle conns : {idle_alive}/{idle} alive after the load phase");
+    }
+    drop(idle_conns);
+    if strict {
+        let errs = errors.load(Ordering::Relaxed);
+        if errs > 0 {
+            bail!("--strict: {errs} request errors during the load phase");
+        }
+        if idle_alive < idle {
+            bail!("--strict: only {idle_alive}/{idle} idle conns survived");
+        }
+    }
 
     if restart_warm {
         // Cold process, warm disk: stop the spawned server, respawn it over
@@ -745,10 +831,7 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         let handle = server.expect("checked: --restart-warm implies --spawn");
         let _ = probe.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);
         handle.join();
-        let man = Manifest::load(artifacts)?;
-        let store = server::ModelStore::load(&man).context("loading models")?;
-        let handle =
-            server::spawn(std::sync::Arc::new(store), "127.0.0.1:0", cfg)?;
+        let handle = server::spawn(build_store()?, "127.0.0.1:0", cfg)?;
         let mut client = server::Client::connect(&handle.addr.to_string())?;
         let warm_hist = Histogram::new();
         let (mut disk_hits, mut recomputed) = (0usize, 0usize);

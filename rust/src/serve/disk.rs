@@ -25,10 +25,12 @@
 //! ```
 //!
 //! Staleness: every artifact embeds a fingerprint of its source model file
-//! (size + mtime); a refreshed zoo model changes the fingerprint, and the
-//! stale artifact is deleted at startup scan or on load rather than served.
-//! The tier is bounded by a byte budget (`--cache-disk-mb`); over budget,
-//! least-recently-used artifact files are deleted.
+//! (FNV-1a over the file's size and full content); a refreshed zoo model
+//! with different bytes changes the fingerprint and the stale artifact is
+//! deleted at startup scan or on load rather than served — while a
+//! byte-identical republish (same content, new mtime) keeps every artifact
+//! valid.  The tier is bounded by a byte budget (`--cache-disk-mb`); over
+//! budget, least-recently-used artifact files are deleted.
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -44,39 +46,51 @@ use crate::coordinator::{LayerReport, QuantReport};
 use crate::io::sqnt;
 use crate::nn::engine::ActQuant;
 use crate::quant::spec::QuantSpec;
-use crate::util::fnv1a;
 use crate::util::json::Json;
+use crate::util::{fnv1a, Fnv1a};
 
 /// Artifact meta-schema version.  Bumped on schema changes; mismatched
 /// artifacts are dropped and recomputed, never migrated in place.
 /// v2: the flat `wbits`/`abits`/`method` triple became a canonical `spec`
 /// object (per-layer overrides + scale method), and report layer rows
 /// carry their effective `bits`.
-pub const ARTIFACT_VERSION: usize = 2;
+/// v3: `fingerprint` is FNV-1a over the source file's size + content
+/// (was size + mtime) — fingerprints from the two schemes are
+/// incomparable, so v2 artifacts are dropped rather than spuriously
+/// invalidated one by one.
+pub const ARTIFACT_VERSION: usize = 3;
 
 /// Headers larger than this are rejected during the startup scan (a cache
 /// directory is writable by others; don't let one file OOM the scan).
 const MAX_HEADER_BYTES: usize = 1 << 26;
 
-/// Fingerprint of a source model file: size + mtime folded through FNV-1a.
-/// A refreshed zoo model (new bytes or new timestamp) changes this, which
-/// invalidates every artifact derived from the old file.  Missing files
+/// Fingerprint of a source model file: FNV-1a over its size and full
+/// content, streamed in chunks.  Content-addressed, so a byte-identical
+/// zoo republish (same bytes, fresh mtime) keeps every derived artifact
+/// valid, while any real change to the file invalidates them.  The size
+/// is folded in first as a cheap discriminator; hashing happens once per
+/// model at store load, so the cost is one extra sequential read of a
+/// file that was just loaded anyway.  Missing/unreadable files
 /// fingerprint to 0 (in-memory test stores use the same default).
 pub fn file_fingerprint(path: &Path) -> u64 {
     let Ok(md) = fs::metadata(path) else {
         return 0;
     };
-    let (secs, nanos) = md
-        .modified()
-        .ok()
-        .and_then(|t| t.duration_since(SystemTime::UNIX_EPOCH).ok())
-        .map(|d| (d.as_secs(), u64::from(d.subsec_nanos())))
-        .unwrap_or((0, 0));
-    let mut bytes = [0u8; 24];
-    for (slot, word) in [md.len(), secs, nanos].into_iter().enumerate() {
-        bytes[8 * slot..8 * (slot + 1)].copy_from_slice(&word.to_le_bytes());
+    let Ok(mut f) = File::open(path) else {
+        return 0;
+    };
+    let mut h = Fnv1a::new();
+    h.update(&md.len().to_le_bytes());
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        match f.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => h.update(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return 0,
+        }
     }
-    fnv1a(&bytes)
+    h.finish()
 }
 
 /// Filesystem-safe slug of a cache-key label.
@@ -690,6 +704,28 @@ mod tests {
         assert_eq!(cache.restored(), 0);
         assert_eq!(cache.dropped_at_open(), 1);
         assert!(matches!(cache.load(&k, 7), Lookup::Miss));
+    }
+
+    /// Content-hash fingerprints: a byte-identical republish (same
+    /// content, fresh mtime) keeps the fingerprint — and therefore every
+    /// derived artifact — valid; changing a single byte changes it.
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let dir = temp_cache_dir("fp_content");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.bin");
+        fs::write(&path, b"zoo model payload v1").unwrap();
+        let fp1 = file_fingerprint(&path);
+        assert_ne!(fp1, 0);
+        // Republish identical bytes: mtime moves, fingerprint must not.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        fs::write(&path, b"zoo model payload v1").unwrap();
+        assert_eq!(file_fingerprint(&path), fp1, "byte-identical republish");
+        // A real content change (same length!) is detected.
+        fs::write(&path, b"zoo model payload v2").unwrap();
+        assert_ne!(file_fingerprint(&path), fp1, "content change");
+        // Missing files fingerprint to 0, matching in-memory stores.
+        assert_eq!(file_fingerprint(&dir.join("nope.bin")), 0);
     }
 
     #[test]

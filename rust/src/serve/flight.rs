@@ -1,29 +1,45 @@
 //! Single-flight deduplication: N concurrent requests for the same key
 //! share one computation.
 //!
-//! The first caller to [`Flight::lead_or_wait`] for a key becomes the
-//! *leader* and must eventually call [`Flight::complete`] (with a success
-//! or an error value — errors propagate to waiters too, so a failed leader
-//! never strands them).  Every caller that arrives while the key is in
-//! flight blocks on the slot's condvar and receives a clone of the
-//! leader's result.  `complete` removes the key, so later requests go back
-//! through the cache / recompute path.
+//! The first caller to [`Flight::lead_or_wait`] (or
+//! [`Flight::lead_or_subscribe`]) for a key becomes the *leader* and must
+//! eventually call [`Flight::complete`] (with a success or an error value —
+//! errors propagate to waiters too, so a failed leader never strands
+//! them).  Callers that arrive while the key is in flight either block on
+//! the slot's condvar (`lead_or_wait`, the synchronous connection-thread
+//! path) or register a callback (`lead_or_subscribe`, the reactor path —
+//! the event loop must never park a thread per waiter).  `complete` wakes
+//! every blocked waiter, fires every subscriber with a clone of the
+//! result, and retires the key, so later requests go back through the
+//! cache / recompute path.
 //!
 //! Lock order: the registry mutex is never held while a slot mutex is
-//! held, so there is no ordering cycle.
+//! held, and subscriber callbacks run outside both locks, so a callback
+//! may re-enter the flight (e.g. an eval chaining a second stage) without
+//! deadlocking.
 
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::{Arc, Condvar, Mutex};
 
+type Subscriber<V> = Box<dyn FnOnce(V) + Send>;
+
+struct SlotState<V> {
+    val: Option<V>,
+    subs: Vec<Subscriber<V>>,
+}
+
 struct Slot<V> {
-    val: Mutex<Option<V>>,
+    state: Mutex<SlotState<V>>,
     cv: Condvar,
 }
 
 impl<V> Slot<V> {
     fn new() -> Slot<V> {
-        Slot { val: Mutex::new(None), cv: Condvar::new() }
+        Slot {
+            state: Mutex::new(SlotState { val: None, subs: Vec::new() }),
+            cv: Condvar::new(),
+        }
     }
 }
 
@@ -33,6 +49,17 @@ pub enum Role<V> {
     Leader,
     /// Another caller computed it; here is a clone of the result.
     Shared(V),
+}
+
+/// What a caller got back from [`Flight::lead_or_subscribe`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum AsyncRole {
+    /// Caller owns the computation and must call [`Flight::complete`];
+    /// its subscriber callback was *not* consumed.
+    Leader,
+    /// The callback is registered (or already fired, if the leader
+    /// completed during the call) and will receive a clone of the result.
+    Subscribed,
 }
 
 /// Per-key in-flight computation registry.
@@ -69,11 +96,51 @@ impl<K: Eq + Hash + Clone, V: Clone> Flight<K, V> {
                 }
             }
         };
-        let mut guard = slot.val.lock().unwrap();
-        while guard.is_none() {
+        let mut guard = slot.state.lock().unwrap();
+        while guard.val.is_none() {
             guard = slot.cv.wait(guard).unwrap();
         }
-        Role::Shared(guard.as_ref().unwrap().clone())
+        Role::Shared(guard.val.as_ref().unwrap().clone())
+    }
+
+    /// Non-blocking counterpart of [`Flight::lead_or_wait`]: become the
+    /// leader (the callback is dropped unused), or attach `sub` to the
+    /// in-flight slot.  If the leader completed between the registry and
+    /// slot locks, `sub` fires immediately with the published result —
+    /// a subscriber is never silently lost.
+    pub fn lead_or_subscribe<F>(&self, key: &K, sub: F) -> AsyncRole
+    where
+        F: FnOnce(V) + Send + 'static,
+    {
+        let slot = {
+            let mut map = self.inner.lock().unwrap();
+            match map.get(key) {
+                Some(slot) => Arc::clone(slot),
+                None => {
+                    map.insert(key.clone(), Arc::new(Slot::new()));
+                    return AsyncRole::Leader;
+                }
+            }
+        };
+        let mut sub = Some(sub);
+        let ready = {
+            let mut st = slot.state.lock().unwrap();
+            match &st.val {
+                Some(v) => Some(v.clone()),
+                None => {
+                    st.subs.push(Box::new(sub.take().unwrap()));
+                    None
+                }
+            }
+        };
+        if let Some(v) = ready {
+            // Completed while we were acquiring the slot: deliver now,
+            // outside the locks.
+            if let Some(s) = sub.take() {
+                s(v);
+            }
+        }
+        AsyncRole::Subscribed
     }
 
     /// Become the leader for `key` without blocking; returns false if the
@@ -88,12 +155,20 @@ impl<K: Eq + Hash + Clone, V: Clone> Flight<K, V> {
         }
     }
 
-    /// Publish the leader's result: wakes every waiter and retires the key.
+    /// Publish the leader's result: wakes every blocked waiter, fires
+    /// every subscriber (outside all locks), and retires the key.
     pub fn complete(&self, key: &K, val: V) {
         let slot = self.inner.lock().unwrap().remove(key);
         if let Some(slot) = slot {
-            *slot.val.lock().unwrap() = Some(val);
-            slot.cv.notify_all();
+            let subs = {
+                let mut st = slot.state.lock().unwrap();
+                st.val = Some(val.clone());
+                slot.cv.notify_all();
+                std::mem::take(&mut st.subs)
+            };
+            for sub in subs {
+                sub(val.clone());
+            }
         }
     }
 }
@@ -102,6 +177,7 @@ impl<K: Eq + Hash + Clone, V: Clone> Flight<K, V> {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
     use std::thread;
     use std::time::Duration;
 
@@ -173,5 +249,58 @@ mod tests {
         let flight: Flight<u32, u32> = Flight::new();
         flight.complete(&9, 1);
         assert_eq!(flight.in_flight(), 0);
+    }
+
+    /// The reactor path: subscribers never block — callbacks fire on
+    /// `complete`, and blocked `lead_or_wait` waiters coexist with them.
+    #[test]
+    fn subscribers_fire_on_complete_without_blocking() {
+        let flight: Arc<Flight<u32, u32>> = Arc::new(Flight::new());
+        let (tx, rx) = mpsc::channel();
+        assert_eq!(
+            flight.lead_or_subscribe(&3, {
+                let tx = tx.clone();
+                move |v| tx.send(("lost leader sub", v)).unwrap()
+            }),
+            AsyncRole::Leader,
+            "first caller leads; its callback is dropped unused"
+        );
+        for tag in ["a", "b"] {
+            let tx = tx.clone();
+            assert_eq!(
+                flight.lead_or_subscribe(&3, move |v| tx.send((tag, v)).unwrap()),
+                AsyncRole::Subscribed
+            );
+        }
+        assert!(rx.try_recv().is_err(), "nothing fires before complete");
+        flight.complete(&3, 99);
+        let mut got: Vec<(&str, u32)> = vec![rx.recv().unwrap(), rx.recv().unwrap()];
+        got.sort();
+        assert_eq!(got, vec![("a", 99), ("b", 99)]);
+        assert!(
+            rx.try_recv().is_err(),
+            "the leader's unused callback must never fire"
+        );
+        assert_eq!(flight.in_flight(), 0);
+    }
+
+    /// A subscriber callback may re-enter the flight (second-stage chain)
+    /// without deadlocking, because callbacks run outside the locks.
+    #[test]
+    fn subscriber_may_reenter_flight() {
+        let flight: Arc<Flight<u32, u32>> = Arc::new(Flight::new());
+        assert!(flight.try_lead(&1));
+        let f = Arc::clone(&flight);
+        let (tx, rx) = mpsc::channel();
+        assert_eq!(
+            flight.lead_or_subscribe(&1, move |v| {
+                assert!(f.try_lead(&2), "re-entry for another key works");
+                f.complete(&2, v + 1);
+                tx.send(v).unwrap();
+            }),
+            AsyncRole::Subscribed
+        );
+        flight.complete(&1, 10);
+        assert_eq!(rx.recv().unwrap(), 10);
     }
 }

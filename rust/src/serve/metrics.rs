@@ -127,6 +127,14 @@ pub struct Metrics {
     pub disk_invalidated: AtomicU64,
     pub rejected_busy: AtomicU64,
     pub errors: AtomicU64,
+    /// Open connections right now (gauge, maintained by the reactor).
+    pub conns_active: AtomicU64,
+    /// High-water mark of `conns_active`.
+    pub conns_peak: AtomicU64,
+    /// Connections refused at accept because `--max-conns` was reached.
+    pub conns_rejected: AtomicU64,
+    /// Connections reaped by the idle / slow-loris timeout.
+    pub conns_idle_closed: AtomicU64,
     pub lat_all: Histogram,
     pub lat_quantize: Histogram,
     pub lat_eval: Histogram,
@@ -152,6 +160,10 @@ impl Metrics {
             disk_invalidated: AtomicU64::new(0),
             rejected_busy: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            conns_active: AtomicU64::new(0),
+            conns_peak: AtomicU64::new(0),
+            conns_rejected: AtomicU64::new(0),
+            conns_idle_closed: AtomicU64::new(0),
             lat_all: Histogram::new(),
             lat_quantize: Histogram::new(),
             lat_eval: Histogram::new(),
@@ -172,6 +184,19 @@ impl Metrics {
 
     pub fn requests_total(&self) -> u64 {
         self.by_cmd.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Connection gauges (maintained by the `serve::net` reactor), exposed
+    /// as the `conns` block of the `stats` verb.
+    pub fn conns_json(&self) -> Json {
+        Json::obj()
+            .set("active", self.conns_active.load(Ordering::Relaxed) as usize)
+            .set("peak", self.conns_peak.load(Ordering::Relaxed) as usize)
+            .set("rejected", self.conns_rejected.load(Ordering::Relaxed) as usize)
+            .set(
+                "idle_closed",
+                self.conns_idle_closed.load(Ordering::Relaxed) as usize,
+            )
     }
 
     pub fn to_json(&self) -> Json {

@@ -3,37 +3,54 @@
 //! Layering (request → response):
 //!
 //! ```text
-//!   coordinator::server (line-JSON protocol)
-//!        └── serve::Engine::handle
-//!              ├── cache   — in-memory LRU of quantized Params + report,
-//!              │             keyed by (model, canonical QuantSpec)
-//!              ├── disk    — persistence tier under the LRU: spills fresh
-//!              │             and evicted artifacts as versioned SQNT files,
-//!              │             answers mem-misses across restarts, and
-//!              │             invalidates on source-model fingerprint change
-//!              ├── flight  — single-flight dedup: N concurrent identical
-//!              │             requests share one SQuant run
-//!              ├── sched   — bounded queue + fixed worker pool; full ⇒
-//!              │             {"ok":false,"error":"busy","retry_ms":...}
-//!              └── metrics — counters + log-scale latency histograms,
-//!                            exposed via {"cmd":"stats"}
+//!   serve::net — event-driven reactor: one thread owns the listener and
+//!        │       every connection (epoll/poll readiness, nonblocking
+//!        │       framing, write queues, idle reaping, completion wakeup)
+//!        └── coordinator::server (line-JSON protocol adapter)
+//!              └── serve::Engine::submit (async) / ::handle (sync)
+//!                    ├── cache   — in-memory LRU of quantized Params +
+//!                    │             report, keyed by (model, QuantSpec)
+//!                    ├── disk    — persistence tier under the LRU: spills
+//!                    │             fresh and evicted artifacts as versioned
+//!                    │             SQNT files, answers mem-misses across
+//!                    │             restarts, and invalidates on
+//!                    │             source-model fingerprint change
+//!                    ├── flight  — single-flight dedup: N concurrent
+//!                    │             identical requests share one SQuant run
+//!                    ├── sched   — bounded queue + fixed worker pool;
+//!                    │             full ⇒ {"ok":false,"error":"busy",
+//!                    │             "retry_ms":...}
+//!                    └── metrics — counters + latency histograms + conns
+//!                                  gauges, exposed via {"cmd":"stats"}
 //! ```
 //!
 //! The engine owns all heavy compute: quantization *and* accuracy
 //! evaluation run as scheduler jobs, so total CPU pressure is bounded by
 //! `--workers` no matter how many connections are open.
+//!
+//! Two request paths share every tier:
+//!
+//! * **Synchronous** — [`Engine::handle`] computes (or waits) on the
+//!   calling thread.  Used by tests, direct dispatch and anything that can
+//!   afford to block.
+//! * **Asynchronous** — [`Engine::submit`] never blocks: fast requests
+//!   resolve inline, slow ones are scheduled and the `done` callback fires
+//!   from a worker when the job completes.  This is the path the
+//!   [`net`] reactor drives — one event-loop thread, responses delivered
+//!   through a completion channel + poller wakeup.
 
 pub mod cache;
 pub mod disk;
 pub mod flight;
 pub mod metrics;
+pub mod net;
 pub mod sched;
 
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator;
@@ -48,12 +65,13 @@ use crate::util::pool::default_threads;
 
 use cache::{params_bytes, Cache, CacheEntry, QuantKey};
 use disk::{DiskCache, Lookup};
-use flight::{Flight, Role};
+use flight::{AsyncRole, Flight, Role};
 use metrics::Metrics;
 use sched::{Scheduler, Submit};
 
 /// Serving configuration (CLI: `--workers`, `--queue-depth`, `--cache-cap`,
-/// `--cache-mb`, `--cache-dir`, `--cache-disk-mb`).
+/// `--cache-mb`, `--cache-dir`, `--cache-disk-mb`, `--max-conns`,
+/// `--idle-timeout-ms`).
 #[derive(Clone, Debug)]
 pub struct EngineCfg {
     /// Worker threads executing quantize/eval jobs.
@@ -68,6 +86,11 @@ pub struct EngineCfg {
     pub cache_dir: Option<PathBuf>,
     /// Byte budget of the disk tier (megabytes of artifact files).
     pub cache_disk_mb: usize,
+    /// Max open connections at the net layer (0 = unlimited); excess
+    /// accepts get one `overloaded` error line and are dropped.
+    pub max_conns: usize,
+    /// Idle / slow-loris connection reap timeout in ms (0 = disabled).
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for EngineCfg {
@@ -79,9 +102,19 @@ impl Default for EngineCfg {
             cache_mb: 256,
             cache_dir: None,
             cache_disk_mb: 1024,
+            max_conns: 1024,
+            idle_timeout_ms: 60_000,
         }
     }
 }
+
+/// One-shot response callback for the async path ([`Engine::submit`]).
+/// Must be called exactly once; may fire inline or from a worker thread.
+pub type Done = Box<dyn FnOnce(Json) + Send + 'static>;
+
+/// Continuation receiving the artifact (or error) for one cache key.
+type QuantCont =
+    Box<dyn FnOnce(Result<(Arc<CacheEntry>, Source), ServeError>) + Send + 'static>;
 
 /// Serving-layer error, cloneable so single-flight can fan it out.
 #[derive(Clone, Debug)]
@@ -138,6 +171,75 @@ impl Source {
 
 type QuantOutcome = Result<Arc<CacheEntry>, ServeError>;
 
+/// Everything the async accuracy stage needs, bundled so it can hop onto
+/// a worker in one move.
+struct EvalTask {
+    key: QuantKey,
+    entry: Arc<CacheEntry>,
+    src: Source,
+    t0: Instant,
+    samples: usize,
+    batch: usize,
+}
+
+fn eval_params(req: &Json) -> (usize, usize) {
+    let samples =
+        req.get("samples").and_then(|b| b.as_usize().ok()).unwrap_or(512);
+    let batch = req.get("batch").and_then(|b| b.as_usize().ok()).unwrap_or(64);
+    (samples, batch)
+}
+
+/// The `quantize` success response (shared by the sync and async paths).
+fn quantize_response(
+    key: &QuantKey,
+    t0: Instant,
+    entry: &CacheEntry,
+    src: Source,
+) -> Json {
+    let r = &entry.report;
+    Json::obj()
+        .set("ok", true)
+        .set("model", key.model.as_str())
+        .set("wbits", key.spec.wbits)
+        .set("abits", key.spec.abits)
+        .set("method", key.spec.method.label())
+        .set("spec", key.spec.canonical())
+        .set("layers", r.layers.len())
+        .set("total_ms", r.total_ms)
+        .set("wall_ms", r.wall_ms)
+        .set("avg_layer_ms", r.avg_layer_ms())
+        .set(
+            "flips",
+            r.layers.iter().map(|l| l.flips_k + l.flips_c).sum::<usize>(),
+        )
+        .set("cached", src.is_cached())
+        .set("source", src.label())
+        .set("served_ms", t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// The `eval` success response (shared by the sync and async paths).
+fn eval_response(
+    key: &QuantKey,
+    t0: Instant,
+    entry: &CacheEntry,
+    src: Source,
+    acc: f64,
+    n: usize,
+) -> Json {
+    Json::obj()
+        .set("ok", true)
+        .set("model", key.model.as_str())
+        .set("top1", acc)
+        .set("samples", n)
+        .set("wbits", key.spec.wbits)
+        .set("abits", key.spec.abits)
+        .set("spec", key.spec.canonical())
+        .set("quant_ms", entry.report.wall_ms)
+        .set("cached", src.is_cached())
+        .set("source", src.label())
+        .set("served_ms", t0.elapsed().as_secs_f64() * 1e3)
+}
+
 /// The serving engine: model store + cache + single-flight + scheduler +
 /// metrics.  Shared as `Arc<Engine>` between all connection threads.
 pub struct Engine {
@@ -147,7 +249,8 @@ pub struct Engine {
     disk: Option<DiskCache>,
     flight: Flight<QuantKey, QuantOutcome>,
     sched: Scheduler,
-    pub metrics: Metrics,
+    /// Shared with the net reactor, which maintains the `conns.*` gauges.
+    pub metrics: Arc<Metrics>,
     /// Total hardware threads; each job's internal parallelism is sized
     /// from this and the current load (see [`Engine::job_threads`]).
     machine_threads: usize,
@@ -159,7 +262,7 @@ impl Engine {
     /// fingerprint changed since they were written).
     pub fn new(store: Arc<ModelStore>, cfg: EngineCfg) -> Result<Arc<Engine>> {
         let workers = cfg.workers.max(1);
-        let metrics = Metrics::new();
+        let metrics = Arc::new(Metrics::new());
         let disk = match &cfg.cache_dir {
             Some(dir) => {
                 let fps: HashMap<String, u64> = store
@@ -207,8 +310,10 @@ impl Engine {
         self.sched.wait_idle();
     }
 
-    /// Dispatch one protocol request (everything except `shutdown`, which
-    /// needs the server's stop flag).
+    /// Dispatch one protocol request synchronously (everything except
+    /// `shutdown`, which needs the server's stop flag).  May block the
+    /// calling thread on compute; the reactor uses [`Engine::submit`]
+    /// instead.
     pub fn handle(self: &Arc<Self>, req: &Json) -> Json {
         let cmd = req
             .get("cmd")
@@ -218,6 +323,52 @@ impl Engine {
         self.metrics.count_cmd(&cmd);
         let t0 = Instant::now();
         let resp = match cmd.as_str() {
+            "quantize" => self.do_quantize(req),
+            "eval" => self.do_eval(req),
+            _ => self.simple_cmd(&cmd, req),
+        };
+        self.finish(&cmd, t0, &resp);
+        resp
+    }
+
+    /// Dispatch one protocol request asynchronously: never blocks the
+    /// caller.  `done` is called exactly once with the response — inline
+    /// for fast requests (cache hits, stats, rejections), or from a
+    /// scheduler worker once the artifact/accuracy job completes.  This is
+    /// the submit half of the submit/complete split the net reactor needs;
+    /// metrics (per-cmd counts, latency histograms, error counts) are
+    /// recorded at completion time, identically to the sync path.
+    pub fn submit(self: &Arc<Self>, req: &Json, done: Done) {
+        let cmd = req
+            .get("cmd")
+            .and_then(|c| c.as_str().ok())
+            .unwrap_or("")
+            .to_string();
+        self.metrics.count_cmd(&cmd);
+        let t0 = Instant::now();
+        let done: Done = {
+            let eng = Arc::clone(self);
+            let cmd = cmd.clone();
+            Box::new(move |resp: Json| {
+                eng.finish(&cmd, t0, &resp);
+                done(resp);
+            })
+        };
+        match cmd.as_str() {
+            "quantize" => self.quantize_async(req, done),
+            "eval" => self.eval_async(req, done),
+            "warm" => self.warm_async(req, done),
+            _ => done(self.simple_cmd(&cmd, req)),
+        }
+    }
+
+    /// The verbs that never touch compute or artifact I/O: answered inline
+    /// on either path.  (`warm` is sync-only here — its async counterpart
+    /// is [`Engine::warm_async`], because `do_warm`'s disk probe reads and
+    /// decodes artifact files, which must never run on the reactor
+    /// thread.)
+    fn simple_cmd(self: &Arc<Self>, cmd: &str, req: &Json) -> Json {
+        match cmd {
             "ping" => Json::obj()
                 .set("ok", true)
                 .set("pong", true)
@@ -251,17 +402,19 @@ impl Engine {
                     )
                     .set("layers", layers)
             }
-            "quantize" => self.do_quantize(req),
-            "eval" => self.do_eval(req),
             "warm" => self.do_warm(req),
             "stats" => self.stats_json(),
             other => Json::obj()
                 .set("ok", false)
                 .set("error", format!("unknown cmd '{other}'")),
-        };
+        }
+    }
+
+    /// Completion-side accounting, shared by both dispatch paths.
+    fn finish(&self, cmd: &str, t0: Instant, resp: &Json) {
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         self.metrics.lat_all.record_ms(ms);
-        match cmd.as_str() {
+        match cmd {
             "quantize" => self.metrics.lat_quantize.record_ms(ms),
             "eval" => self.metrics.lat_eval.record_ms(ms),
             _ => {}
@@ -269,7 +422,6 @@ impl Engine {
         if matches!(resp.get("ok"), Some(Json::Bool(false))) {
             self.metrics.errors.fetch_add(1, Ordering::Relaxed);
         }
-        resp
     }
 
     // ---- request handlers --------------------------------------------------
@@ -314,32 +466,29 @@ impl Engine {
         };
         let t0 = Instant::now();
         match self.quantized(&key) {
-            Ok((entry, src)) => {
-                let r = &entry.report;
-                Json::obj()
-                    .set("ok", true)
-                    .set("model", key.model.as_str())
-                    .set("wbits", key.spec.wbits)
-                    .set("abits", key.spec.abits)
-                    .set("method", key.spec.method.label())
-                    .set("spec", key.spec.canonical())
-                    .set("layers", r.layers.len())
-                    .set("total_ms", r.total_ms)
-                    .set("wall_ms", r.wall_ms)
-                    .set("avg_layer_ms", r.avg_layer_ms())
-                    .set(
-                        "flips",
-                        r.layers
-                            .iter()
-                            .map(|l| l.flips_k + l.flips_c)
-                            .sum::<usize>(),
-                    )
-                    .set("cached", src.is_cached())
-                    .set("source", src.label())
-                    .set("served_ms", t0.elapsed().as_secs_f64() * 1e3)
-            }
+            Ok((entry, src)) => quantize_response(&key, t0, &entry, src),
             Err(e) => e.to_json(),
         }
+    }
+
+    /// Async `quantize`: resolves inline on a memory hit, otherwise the
+    /// response is delivered from the worker that finishes the artifact.
+    fn quantize_async(self: &Arc<Self>, req: &Json, done: Done) {
+        let key = match self.key_from(req) {
+            Ok(k) => k,
+            Err(e) => return done(e.to_json()),
+        };
+        let t0 = Instant::now();
+        let k = key.clone();
+        self.quantized_async(
+            &key,
+            Box::new(move |res| {
+                done(match res {
+                    Ok((entry, src)) => quantize_response(&k, t0, &entry, src),
+                    Err(e) => e.to_json(),
+                })
+            }),
+        );
     }
 
     fn do_eval(self: &Arc<Self>, req: &Json) -> Json {
@@ -347,9 +496,7 @@ impl Engine {
             Ok(k) => k,
             Err(e) => return e.to_json(),
         };
-        let samples =
-            req.get("samples").and_then(|b| b.as_usize().ok()).unwrap_or(512);
-        let batch = req.get("batch").and_then(|b| b.as_usize().ok()).unwrap_or(64);
+        let (samples, batch) = eval_params(req);
         let t0 = Instant::now();
         let (entry, src) = match self.quantized(&key) {
             Ok(x) => x,
@@ -369,22 +516,71 @@ impl Engine {
                 ServeError::Busy { retry_ms }.to_json()
             }
             Submit::Accepted => match rx.recv() {
-                Ok(Ok((acc, n))) => Json::obj()
-                    .set("ok", true)
-                    .set("model", key.model.as_str())
-                    .set("top1", acc)
-                    .set("samples", n)
-                    .set("wbits", key.spec.wbits)
-                    .set("abits", key.spec.abits)
-                    .set("spec", key.spec.canonical())
-                    .set("quant_ms", entry.report.wall_ms)
-                    .set("cached", src.is_cached())
-                    .set("source", src.label())
-                    .set("served_ms", t0.elapsed().as_secs_f64() * 1e3),
+                Ok(Ok((acc, n))) => eval_response(&key, t0, &entry, src, acc, n),
                 Ok(Err(msg)) => ServeError::Failed(msg).to_json(),
                 Err(_) => ServeError::Failed("eval worker dropped".into()).to_json(),
             },
         }
+    }
+
+    /// Async `eval`: artifact stage via [`Engine::quantized_async`], then
+    /// the accuracy stage.  When the artifact continuation already runs on
+    /// a worker (fresh compute or disk decode), accuracy runs inline in
+    /// that job; from the reactor thread (memory hit) or a leader's
+    /// completion fan-out (shared), it is submitted as its own job so the
+    /// event loop / leader worker never runs unbounded compute.
+    fn eval_async(self: &Arc<Self>, req: &Json, done: Done) {
+        let key = match self.key_from(req) {
+            Ok(k) => k,
+            Err(e) => return done(e.to_json()),
+        };
+        let (samples, batch) = eval_params(req);
+        let t0 = Instant::now();
+        let eng = Arc::clone(self);
+        let k = key.clone();
+        self.quantized_async(
+            &key,
+            Box::new(move |res| {
+                let (entry, src) = match res {
+                    Ok(x) => x,
+                    Err(e) => return done(e.to_json()),
+                };
+                let task = EvalTask { key: k, entry, src, t0, samples, batch };
+                match src {
+                    Source::Computed | Source::Disk => eng.eval_stage(task, done),
+                    Source::Hit | Source::Shared => match eng.sched.try_reserve() {
+                        Err(retry_ms) => {
+                            eng.metrics
+                                .rejected_busy
+                                .fetch_add(1, Ordering::Relaxed);
+                            done(ServeError::Busy { retry_ms }.to_json());
+                        }
+                        Ok(ticket) => {
+                            let eng2 = Arc::clone(&eng);
+                            eng.sched.submit_reserved(ticket, move || {
+                                eng2.eval_stage(task, done);
+                            });
+                        }
+                    },
+                }
+            }),
+        );
+    }
+
+    /// Accuracy stage of an async eval (already admitted / on a worker).
+    fn eval_stage(&self, task: EvalTask, done: Done) {
+        let resp = match self.run_accuracy(
+            &task.key,
+            &task.entry,
+            task.samples,
+            task.batch,
+        ) {
+            Ok((acc, n)) => {
+                eval_response(&task.key, task.t0, &task.entry, task.src, acc, n)
+            }
+            Err(msg) => ServeError::Failed(msg).to_json(),
+        };
+        done(resp);
     }
 
     /// `{"cmd":"warm","model":...,"wbits":...}` — prefetch into the cache
@@ -420,7 +616,7 @@ impl Engine {
         let eng = Arc::clone(self);
         let k = key.clone();
         match self.sched.try_submit(move || {
-            eng.compute_and_finish(&k, None);
+            eng.compute_and_finish(&k, None::<fn(QuantOutcome)>);
         }) {
             Submit::Busy { retry_ms } => {
                 let err = ServeError::Busy { retry_ms };
@@ -434,6 +630,74 @@ impl Engine {
                     .set("ok", true)
                     .set("key", key.label())
                     .set("queued", true)
+            }
+        }
+    }
+
+    /// Async `warm`: the cheap checks (memory cache, in-flight dedup) run
+    /// inline; the disk probe and any compute run on a worker, because
+    /// artifact file decode must never block the reactor thread.  Response
+    /// semantics match [`Engine::do_warm`] — a disk hit answers
+    /// `source:"disk"` (after the probe), a miss answers `queued` as soon
+    /// as the probe fails, before the compute finishes — with one
+    /// deliberate divergence: under a saturated scheduler the sync path
+    /// can still serve a disk hit (it probes on the caller's thread, no
+    /// slot needed), while this path busy-rejects, because probing would
+    /// otherwise do file I/O on the reactor thread.  Warm is an advisory
+    /// prefetch; a busy-rejected client simply retries.
+    fn warm_async(self: &Arc<Self>, req: &Json, done: Done) {
+        let key = match self.key_from(req) {
+            Ok(k) => k,
+            Err(e) => return done(e.to_json()),
+        };
+        if self.cache.contains(&key) {
+            return done(
+                Json::obj()
+                    .set("ok", true)
+                    .set("key", key.label())
+                    .set("cached", true)
+                    .set("source", "mem"),
+            );
+        }
+        if !self.flight.try_lead(&key) {
+            return done(
+                Json::obj()
+                    .set("ok", true)
+                    .set("key", key.label())
+                    .set("queued", true)
+                    .set("inflight", true),
+            );
+        }
+        match self.sched.try_reserve() {
+            Err(retry_ms) => {
+                let err = ServeError::Busy { retry_ms };
+                self.flight.complete(&key, Err(err.clone()));
+                self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                done(err.to_json());
+            }
+            Ok(ticket) => {
+                let eng = Arc::clone(self);
+                let k = key.clone();
+                self.sched.submit_reserved(ticket, move || {
+                    if let Some(entry) = eng.disk_probe(&k) {
+                        eng.flight.complete(&k, Ok(entry));
+                        return done(
+                            Json::obj()
+                                .set("ok", true)
+                                .set("key", k.label())
+                                .set("cached", true)
+                                .set("source", "disk"),
+                        );
+                    }
+                    eng.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    done(
+                        Json::obj()
+                            .set("ok", true)
+                            .set("key", k.label())
+                            .set("queued", true),
+                    );
+                    eng.compute_and_finish(&k, None::<fn(QuantOutcome)>);
+                });
             }
         }
     }
@@ -509,6 +773,7 @@ impl Engine {
                 "flight",
                 Json::obj().set("in_flight", self.flight.in_flight()),
             )
+            .set("conns", self.metrics.conns_json())
     }
 
     // ---- quantization pipeline ---------------------------------------------
@@ -551,7 +816,12 @@ impl Engine {
                 let eng = Arc::clone(self);
                 let k = key.clone();
                 match self.sched.try_submit(move || {
-                    eng.compute_and_finish(&k, Some(tx));
+                    eng.compute_and_finish(
+                        &k,
+                        Some(move |res: QuantOutcome| {
+                            let _ = tx.send(res);
+                        }),
+                    );
                 }) {
                     Submit::Busy { retry_ms } => {
                         let err = ServeError::Busy { retry_ms };
@@ -582,19 +852,104 @@ impl Engine {
         }
     }
 
+    /// Non-blocking counterpart of [`Engine::quantized`]: memory cache →
+    /// single-flight subscription → scheduled (disk probe + compute), with
+    /// `cont` fired exactly once — inline for hits, from the leader's
+    /// worker or the leader's completion fan-out otherwise.  Unlike the
+    /// sync path, the disk probe runs inside the worker job: the reactor
+    /// thread must never block on artifact file I/O.
+    fn quantized_async(self: &Arc<Self>, key: &QuantKey, cont: QuantCont) {
+        if let Some(e) = self.cache.get(key) {
+            self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+            cont(Ok((e, Source::Hit)));
+            return;
+        }
+        // The continuation is needed by whichever role wins: parked in a
+        // shared one-shot cell so the subscriber closure and the leader
+        // arm can both reach it without double-resolution.
+        let cell: Arc<Mutex<Option<QuantCont>>> = Arc::new(Mutex::new(Some(cont)));
+        let sub = {
+            let eng = Arc::clone(self);
+            let cell = Arc::clone(&cell);
+            move |res: QuantOutcome| {
+                let Some(cont) = cell.lock().unwrap().take() else { return };
+                // Only a successfully shared artifact counts toward the
+                // reuse stats (see the sync path).
+                if res.is_ok() {
+                    eng.metrics.flight_shared.fetch_add(1, Ordering::Relaxed);
+                }
+                cont(res.map(|e| (e, Source::Shared)));
+            }
+        };
+        match self.flight.lead_or_subscribe(key, sub) {
+            AsyncRole::Subscribed => {}
+            AsyncRole::Leader => {
+                let cont = cell
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("leader owns the unconsumed continuation");
+                // A completed previous leader may have filled the cache
+                // while we raced for leadership.
+                if let Some(e) = self.cache.get(key) {
+                    self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    self.flight.complete(key, Ok(Arc::clone(&e)));
+                    cont(Ok((e, Source::Hit)));
+                    return;
+                }
+                match self.sched.try_reserve() {
+                    Err(retry_ms) => {
+                        let err = ServeError::Busy { retry_ms };
+                        self.flight.complete(key, Err(err.clone()));
+                        self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                        cont(Err(err));
+                    }
+                    Ok(ticket) => {
+                        let eng = Arc::clone(self);
+                        let k = key.clone();
+                        self.sched.submit_reserved(ticket, move || {
+                            eng.leader_job(&k, cont);
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Leader's worker job on the async path: disk tier first (decode is
+    /// I/O + deserialization, a worker's job — never the reactor's), then
+    /// a full compute.
+    fn leader_job(&self, key: &QuantKey, cont: QuantCont) {
+        if let Some(e) = self.disk_probe(key) {
+            self.flight.complete(key, Ok(Arc::clone(&e)));
+            cont(Ok((e, Source::Disk)));
+            return;
+        }
+        // Only an actual compute counts as a miss — disk hits are neither
+        // hit nor miss and busy-rejected leaders never ran anything,
+        // matching the sync path's accounting exactly.
+        self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+        self.compute_and_finish(
+            key,
+            Some(move |res: QuantOutcome| {
+                cont(res.map(|e| (e, Source::Computed)));
+            }),
+        );
+    }
+
     /// Worker-side: compute, publish to cache, release single-flight
-    /// waiters and the requester (via `done`), then spill to disk.  Cache
-    /// fill happens before `complete` so no request can observe "not in
-    /// flight, not cached" for a finished key; the write-through disk
-    /// spill happens strictly *after* `complete` and `done`, so neither
-    /// the requester nor any waiter blocks on the artifact file write.
-    /// Compute panics are converted to errors so `complete` always runs —
-    /// a stranded flight key would block every future request for it
-    /// (warm submits this without a receive-side recovery path).
-    fn compute_and_finish(
+    /// waiters and the requester (via `notify`), then spill to disk.
+    /// Cache fill happens before `complete` so no request can observe
+    /// "not in flight, not cached" for a finished key; the write-through
+    /// disk spill happens strictly *after* `complete` and `notify`, so
+    /// neither the requester nor any waiter blocks on the artifact file
+    /// write.  Compute panics are converted to errors so `complete` always
+    /// runs — a stranded flight key would block every future request for
+    /// it (warm submits this without a receive-side recovery path).
+    fn compute_and_finish<N: FnOnce(QuantOutcome)>(
         &self,
         key: &QuantKey,
-        done: Option<mpsc::Sender<QuantOutcome>>,
+        notify: Option<N>,
     ) {
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.compute_entry(key)
@@ -609,8 +964,8 @@ impl Engine {
             Err(_) => Vec::new(),
         };
         self.flight.complete(key, res.clone());
-        if let Some(tx) = done {
-            let _ = tx.send(res.clone());
+        if let Some(notify) = notify {
+            notify(res.clone());
         }
         if let Ok(entry) = &res {
             self.spill(key, entry);
@@ -1169,6 +1524,118 @@ mod tests {
         let disk = stats.req("cache").unwrap().req("disk").unwrap();
         assert!(disk.req("invalidated").unwrap().as_usize().unwrap() >= 1);
         assert_eq!(disk.req("hits").unwrap().as_usize().unwrap(), 0);
+    }
+
+    /// The async submit/complete path answers identically to the sync
+    /// path: miss → fresh (completion fires from a worker), repeat →
+    /// inline mem hit, eval chains its accuracy stage, and the metrics
+    /// counters agree with the sync ones.
+    #[test]
+    fn submit_async_path_matches_sync_semantics() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        let call = |req: &Json| {
+            let (tx, rx) = mpsc::channel();
+            engine.submit(req, Box::new(move |resp| tx.send(resp).unwrap()));
+            rx.recv_timeout(Duration::from_secs(60)).expect("response delivered")
+        };
+        let r1 = call(&quantize_req());
+        assert_eq!(r1.req("ok").unwrap(), &Json::Bool(true), "{}", r1.dump());
+        assert_eq!(r1.req("source").unwrap().as_str().unwrap(), "fresh");
+        let r2 = call(&quantize_req());
+        assert_eq!(r2.req("source").unwrap().as_str().unwrap(), "mem");
+        let ev = Json::obj()
+            .set("cmd", "eval")
+            .set("model", "tiny")
+            .set("wbits", 4usize)
+            .set("samples", 8usize);
+        let r3 = call(&ev);
+        assert_eq!(r3.req("ok").unwrap(), &Json::Bool(true), "{}", r3.dump());
+        assert_eq!(r3.req("cached").unwrap(), &Json::Bool(true));
+        let top1 = r3.req("top1").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&top1));
+
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let cache = stats.req("cache").unwrap();
+        assert_eq!(cache.req("hits").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(cache.req("misses").unwrap().as_usize().unwrap(), 1);
+        let lat = stats.req("metrics").unwrap().req("latency").unwrap();
+        assert_eq!(
+            lat.req("quantize").unwrap().req("count").unwrap().as_usize().unwrap(),
+            2,
+            "async completions record latency too"
+        );
+    }
+
+    /// Async single-flight: a second submit for an in-flight key
+    /// subscribes instead of recomputing, and resolves as `flight` when
+    /// the leader publishes.
+    #[test]
+    fn submit_async_shares_inflight_computation() {
+        let engine = Engine::new(
+            tiny_store(),
+            EngineCfg { workers: 1, queue_depth: 8, ..cfg() },
+        )
+        .unwrap();
+        // Pin the single worker so the leader's job stays queued while the
+        // second request arrives.
+        let release = Arc::new(AtomicBool::new(false));
+        let r2 = Arc::clone(&release);
+        assert!(!engine
+            .sched
+            .try_submit(move || {
+                while !r2.load(Ordering::SeqCst) {
+                    thread::sleep(Duration::from_millis(1));
+                }
+            })
+            .is_busy());
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..2 {
+            let tx = tx.clone();
+            engine.submit(&quantize_req(), Box::new(move |r| tx.send(r).unwrap()));
+        }
+        assert_eq!(engine.flight.in_flight(), 1, "one computation for two reqs");
+        release.store(true, Ordering::SeqCst);
+        let a = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let b = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let mut sources = [
+            a.req("source").unwrap().as_str().unwrap().to_string(),
+            b.req("source").unwrap().as_str().unwrap().to_string(),
+        ];
+        sources.sort();
+        assert_eq!(sources, ["flight".to_string(), "fresh".to_string()]);
+        engine.sched.wait_idle();
+    }
+
+    /// Async busy: a saturated queue answers inline (no blocking, no
+    /// stranded flight key), and the slot recovers.
+    #[test]
+    fn submit_async_busy_rejects_inline() {
+        let engine = Engine::new(
+            tiny_store(),
+            EngineCfg { workers: 1, queue_depth: 0, ..cfg() },
+        )
+        .unwrap();
+        let release = Arc::new(AtomicBool::new(false));
+        let r2 = Arc::clone(&release);
+        assert!(!engine
+            .sched
+            .try_submit(move || {
+                while !r2.load(Ordering::SeqCst) {
+                    thread::sleep(Duration::from_millis(1));
+                }
+            })
+            .is_busy());
+        let (tx, rx) = mpsc::channel();
+        engine.submit(&quantize_req(), Box::new(move |r| tx.send(r).unwrap()));
+        let resp = rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(resp.req("error").unwrap().as_str().unwrap(), "busy");
+        assert_eq!(engine.flight.in_flight(), 0, "busy leader released its key");
+        release.store(true, Ordering::SeqCst);
+        engine.sched.wait_idle();
+        let (tx, rx) = mpsc::channel();
+        engine.submit(&quantize_req(), Box::new(move |r| tx.send(r).unwrap()));
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true), "{}", resp.dump());
     }
 
     #[test]

@@ -1,0 +1,419 @@
+//! Per-connection state machine for the reactor: owned buffers, newline
+//! framing, a write queue, and the bookkeeping the reactor needs to decide
+//! poll interest, idle reaping and close.
+//!
+//! Framing is done on raw bytes (never `read_line`): a read returning
+//! mid multi-byte UTF-8 character must not corrupt an accumulated partial
+//! line, so bytes are only converted to text once a full `\n`-terminated
+//! frame exists.  Requests on one connection are dispatched strictly one at
+//! a time (`inflight`), which preserves the thread-per-connection era
+//! guarantee that pipelined requests are answered in arrival order — the
+//! protocol has no request ids, so order *is* the correlation.
+//!
+//! Abuse guards: a line longer than [`MAX_LINE`] stops reads and gets one
+//! error response — emitted only after every previously accepted request
+//! has been answered (order is the correlation) — then the connection is
+//! closed; a client that pipelines more than [`MAX_PIPELINE`] unanswered
+//! requests stops being read until the queue drains; a write queue above
+//! [`MAX_WBUF`], or one the client stops draining for a full idle period,
+//! kills the connection.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::poller::Interest;
+
+/// Longest accepted request line (bytes, newline included).
+pub const MAX_LINE: usize = 1 << 20;
+/// Unanswered pipelined requests before the reactor stops reading a conn.
+pub const MAX_PIPELINE: usize = 64;
+/// Write-queue cap: a client this far behind on reads is gone.
+pub const MAX_WBUF: usize = 8 << 20;
+
+pub(super) struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    /// Scan offset into `rbuf`: everything before it holds no newline.
+    scan: usize,
+    /// An oversized line was received: reading has stopped, and one error
+    /// response will be emitted — strictly *after* every previously
+    /// accepted request has been answered (order is the protocol's only
+    /// correlation) — followed by close.  See [`Conn::settle_overflow`].
+    overflow: bool,
+    /// When the current partial line started arriving (slow-loris guard).
+    line_started: Option<Instant>,
+    reqq: VecDeque<String>,
+    /// A request from this conn is at the engine; serialized per conn.
+    pub inflight: bool,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    pub seen_eof: bool,
+    /// Fatal: I/O error, oversized write queue, or flushed-and-done close.
+    pub dead: bool,
+    close_after_flush: bool,
+    pub last_active: Instant,
+    /// Interest currently registered with the poller.
+    pub registered: Interest,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, now: Instant) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        // Responses are one small line each; coalescing hurts latency.
+        let _ = stream.set_nodelay(true);
+        Ok(Conn {
+            stream,
+            rbuf: Vec::new(),
+            scan: 0,
+            overflow: false,
+            line_started: None,
+            reqq: VecDeque::new(),
+            inflight: false,
+            wbuf: Vec::new(),
+            wpos: 0,
+            seen_eof: false,
+            dead: false,
+            close_after_flush: false,
+            last_active: now,
+            registered: Interest::READ,
+        })
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Drain the socket into the frame queue.  Returns once the socket
+    /// would block, EOF is seen, or the pipeline cap is reached.
+    pub fn on_readable(&mut self, now: Instant) {
+        let mut chunk = [0u8; 16384];
+        while !self.dead
+            && !self.close_after_flush
+            && !self.overflow
+            && self.reqq.len() < MAX_PIPELINE
+        {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.seen_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.last_active = now;
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    self.extract_lines(now);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Split complete `\n`-terminated frames out of `rbuf`, stopping at
+    /// the pipeline cap — one socket read full of tiny lines must not
+    /// queue more than [`MAX_PIPELINE`] unanswered requests.  Capped-out
+    /// frames stay in `rbuf` (with `scan` reset so their newlines are
+    /// found later) and are extracted as the queue drains (see
+    /// [`Conn::next_request`]).
+    fn extract_lines(&mut self, now: Instant) {
+        loop {
+            if self.reqq.len() >= MAX_PIPELINE {
+                self.scan = 0;
+                break;
+            }
+            let Some(off) = self.rbuf[self.scan..].iter().position(|&b| b == b'\n')
+            else {
+                self.scan = self.rbuf.len();
+                break;
+            };
+            let pos = self.scan + off;
+            let line: Vec<u8> = self.rbuf.drain(..=pos).collect();
+            self.scan = 0;
+            let text = String::from_utf8_lossy(&line);
+            let text = text.trim();
+            if !text.is_empty() {
+                self.reqq.push_back(text.to_string());
+            }
+        }
+        if self.rbuf.is_empty() {
+            self.line_started = None;
+        } else if self.scan == self.rbuf.len() {
+            // A pure partial line (no pending complete frames): the
+            // slow-loris deadline and the single-line size guard apply.
+            if self.line_started.is_none() {
+                self.line_started = Some(now);
+            }
+            if self.rbuf.len() > MAX_LINE {
+                self.rbuf.clear();
+                self.scan = 0;
+                self.line_started = None;
+                self.overflow = true;
+            }
+        }
+    }
+
+    /// Once an overflowed conn has answered and flushed everything it
+    /// accepted *before* the oversized line, emit the protocol error and
+    /// arrange the close.  Called by the reactor whenever the conn's
+    /// state may have advanced; a no-op otherwise.
+    pub fn settle_overflow(&mut self) {
+        if self.overflow
+            && !self.inflight
+            && self.reqq.is_empty()
+            && !self.wants_write()
+        {
+            self.overflow = false;
+            self.push_response(
+                "{\"ok\":false,\"error\":\"request line exceeds 1 MB\"}",
+            );
+            self.close_after_flush = true;
+            self.flush();
+        }
+    }
+
+    /// Next queued request, if this conn has no request in flight.
+    pub fn next_request(&mut self) -> Option<String> {
+        if self.inflight || self.close_after_flush {
+            return None;
+        }
+        let line = self.reqq.pop_front();
+        if line.is_some() && !self.rbuf.is_empty() {
+            // Frames backlogged past the pipeline cap parse as the queue
+            // drains, so a capped burst is served in full, just bounded.
+            self.extract_lines(Instant::now());
+        }
+        line
+    }
+
+    /// Queue one response line for writing.
+    pub fn push_response(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+        if self.wbuf.len() - self.wpos > MAX_WBUF {
+            self.dead = true; // reader gone; don't buffer unboundedly
+        }
+    }
+
+    /// Write queued bytes until the socket would block or the queue is dry.
+    pub fn flush(&mut self) {
+        while self.wpos < self.wbuf.len() && !self.dead {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    // Write progress counts as activity: only a queue the
+                    // client stops draining entirely expires (see
+                    // `idle_expired`).
+                    self.last_active = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+            if self.close_after_flush {
+                self.dead = true;
+            }
+        } else if self.wpos > (64 << 10) {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+    }
+
+    pub fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    /// The poll interest this conn should be registered with right now.
+    pub fn desired_interest(&self) -> Interest {
+        let read = !self.seen_eof
+            && !self.dead
+            && !self.close_after_flush
+            && !self.overflow
+            && self.reqq.len() < MAX_PIPELINE;
+        Interest::rw(read, self.wants_write())
+    }
+
+    /// Closable: fatal error, or the client is gone and every accepted
+    /// request has been answered and flushed (half-close support — EOF with
+    /// work pending keeps the conn alive until the responses are out).
+    pub fn finished(&self) -> bool {
+        self.dead
+            || (self.seen_eof
+                && self.reqq.is_empty()
+                && !self.inflight
+                && !self.wants_write())
+    }
+
+    /// Idle-timeout check: a conn with no traffic and no pending work, one
+    /// dribbling a partial line (write-side slow loris), or one that has
+    /// stopped reading its responses entirely (read-side loris: the write
+    /// queue makes no progress for a full idle period — `flush` refreshes
+    /// `last_active` on every successful write, so only a truly stalled
+    /// client expires).
+    pub fn idle_expired(&self, now: Instant, idle: Duration) -> bool {
+        if self.wants_write() {
+            return now.duration_since(self.last_active) >= idle;
+        }
+        if self.inflight || !self.reqq.is_empty() {
+            return false;
+        }
+        if let Some(t0) = self.line_started {
+            if now.duration_since(t0) >= idle {
+                return true;
+            }
+        }
+        now.duration_since(self.last_active) >= idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, Conn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, Conn::new(server, Instant::now()).unwrap())
+    }
+
+    #[test]
+    fn frames_pipelined_and_partial_lines() {
+        let (mut client, mut conn) = pair();
+        client.write_all(b"{\"a\":1}\n{\"b\":2}\n{\"c\"").unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        conn.on_readable(Instant::now());
+        assert_eq!(conn.next_request().as_deref(), Some("{\"a\":1}"));
+        conn.inflight = true;
+        assert!(conn.next_request().is_none(), "serialized per conn");
+        conn.inflight = false;
+        assert_eq!(conn.next_request().as_deref(), Some("{\"b\":2}"));
+        assert!(conn.next_request().is_none(), "third line incomplete");
+
+        // Finish the partial line — including a multi-byte char split
+        // across reads — and it frames cleanly.
+        client.write_all(b":\"caf\xc3").unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        conn.on_readable(Instant::now());
+        assert!(conn.next_request().is_none());
+        client.write_all(b"\xa9\"}\n").unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        conn.on_readable(Instant::now());
+        assert_eq!(conn.next_request().as_deref(), Some("{\"c\":\"caf\u{e9}\"}"));
+    }
+
+    #[test]
+    fn write_queue_survives_partial_writes() {
+        let (mut client, mut conn) = pair();
+        conn.push_response("{\"ok\":true}");
+        assert!(conn.wants_write());
+        conn.flush();
+        assert!(!conn.wants_write(), "small response flushes in one go");
+        let mut buf = [0u8; 64];
+        let n = client.read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"{\"ok\":true}\n");
+    }
+
+    #[test]
+    fn eof_with_pending_work_is_not_finished() {
+        let (client, mut conn) = pair();
+        drop(client); // client closes both directions
+        conn.on_readable(Instant::now());
+        assert!(conn.seen_eof);
+        assert!(conn.finished(), "no pending work: close");
+
+        let (client2, mut conn2) = pair();
+        client2.shutdown(std::net::Shutdown::Write).unwrap();
+        conn2.inflight = true; // a request is still at the engine
+        conn2.on_readable(Instant::now());
+        assert!(conn2.seen_eof);
+        assert!(!conn2.finished(), "response still owed");
+        conn2.inflight = false;
+        conn2.push_response("{\"ok\":true}");
+        assert!(!conn2.finished(), "unflushed response");
+        conn2.flush();
+        assert!(conn2.finished());
+    }
+
+    #[test]
+    fn oversized_line_answers_error_then_closes() {
+        let (_client, mut conn) = pair();
+        // Inject directly (sending 1 MB through a socketpair in a unit
+        // test is slow): the guard lives in extract_lines.
+        conn.rbuf = vec![b'x'; MAX_LINE + 1];
+        conn.extract_lines(Instant::now());
+        assert!(!conn.desired_interest().read, "no more reads");
+        // While a previously accepted request is still in flight, the
+        // error must NOT jump the response queue — order is the
+        // protocol's only correlation.
+        conn.inflight = true;
+        conn.settle_overflow();
+        assert!(!conn.wants_write(), "error deferred behind owed response");
+        conn.inflight = false;
+        conn.settle_overflow();
+        assert!(conn.dead, "error flushed, then closed");
+    }
+
+    /// One socket read stuffed with tiny lines must not blow past the
+    /// pipeline cap — the backlog stays buffered and parses (in order) as
+    /// the queue drains.
+    #[test]
+    fn pipeline_cap_bounds_a_single_burst() {
+        let (mut client, mut conn) = pair();
+        let total = MAX_PIPELINE * 3;
+        let mut burst = Vec::new();
+        for i in 0..total {
+            burst.extend_from_slice(format!("{{\"i\":{i}}}\n").as_bytes());
+        }
+        client.write_all(&burst).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        conn.on_readable(Instant::now());
+        assert_eq!(conn.reqq.len(), MAX_PIPELINE, "capped at the pipeline limit");
+        assert!(!conn.desired_interest().read, "reads pause at the cap");
+        let mut seen = 0usize;
+        while let Some(line) = conn.next_request() {
+            assert_eq!(line, format!("{{\"i\":{seen}}}"));
+            seen += 1;
+            if conn.reqq.is_empty() {
+                conn.on_readable(Instant::now());
+            }
+        }
+        assert_eq!(seen, total, "backlog served in full, in order");
+    }
+
+    #[test]
+    fn idle_and_loris_expiry() {
+        let (mut client, mut conn) = pair();
+        let idle = Duration::from_millis(100);
+        let now = Instant::now();
+        assert!(!conn.idle_expired(now, idle));
+        assert!(conn.idle_expired(now + Duration::from_millis(150), idle));
+
+        // A trickling partial line is not "active": the line deadline
+        // still fires even though bytes keep arriving.
+        client.write_all(b"{\"cmd\"").unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let t = Instant::now();
+        conn.on_readable(t);
+        assert!(!conn.idle_expired(t, idle));
+        assert!(conn.idle_expired(t + Duration::from_millis(150), idle));
+
+        // But a conn with queued work is never idle-reaped.
+        conn.inflight = true;
+        assert!(!conn.idle_expired(t + Duration::from_millis(500), idle));
+    }
+}

@@ -1,0 +1,574 @@
+//! Event-driven connection subsystem: a single-threaded reactor that owns
+//! the listener and every connection, replacing thread-per-connection I/O.
+//!
+//! ```text
+//!   accept ──► Conn (nonblocking, owned buffers, newline framing)
+//!     │            │ framed line
+//!     │            ▼
+//!     │       dispatch(line, respond)      ── reactor thread
+//!     │            │
+//!     │            ├─ fast path: respond(..) called inline
+//!     │            └─ slow path: Engine schedules the job; a worker calls
+//!     │               respond(..) when done
+//!     │                      │
+//!     │                      ▼
+//!     │       completion channel ──► waker (self-pipe) ──► poller wakes,
+//!     │       response is queued on the conn and flushed
+//!     ▼
+//!   poller (epoll / poll / tick — see poller.rs)
+//! ```
+//!
+//! The reactor never blocks on a socket and never runs engine compute: its
+//! only work is framing, dispatch hand-off, response flushing and timers.
+//! Total thread count for the server is therefore `1 + --workers`,
+//! regardless of how many connections are open.
+//!
+//! Ordering: requests on one connection are dispatched one at a time, so
+//! pipelined requests are answered strictly in arrival order (the protocol
+//! has no request ids).  Requests on *different* connections proceed
+//! concurrently, bounded by the engine's scheduler.
+//!
+//! Overload and abuse: `max_conns` caps open connections (excess accepts
+//! get one `overloaded` error line and are dropped, counted in
+//! `conns.rejected`); `idle_timeout` reaps connections with no traffic and
+//! no pending work, including slow-loris partial lines (counted in
+//! `conns.idle_closed`).  A stop request (shutdown verb or
+//! [`StopHandle::request`]) wakes the poller immediately — shutdown
+//! latency is wake + flush, not a poll-timeout sleep.
+
+mod conn;
+pub mod poller;
+pub mod wake;
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::metrics::Metrics;
+use super::Done;
+use conn::Conn;
+use poller::{Interest, Poller, RawFd};
+use wake::Waker;
+
+/// Poller token of the listener; connections use their id.
+const LISTEN: usize = 0;
+/// First connection id (ids are never reused, so a late completion for a
+/// closed connection can never be delivered to a new one).
+const FIRST_CONN: u64 = 1;
+/// Flush grace during graceful shutdown: how long a conn with *no*
+/// in-flight work gets to drain its write queue.  In-flight engine jobs
+/// are waited for without this cap (they always complete — panics are
+/// contained), so an owed response is never dropped just because the
+/// compute was slow; only a client that stops reading forfeits its bytes.
+const DRAIN_MAX: Duration = Duration::from_secs(2);
+
+#[cfg(unix)]
+fn raw_fd<T: std::os::fd::AsRawFd>(x: &T) -> RawFd {
+    x.as_raw_fd()
+}
+#[cfg(not(unix))]
+fn raw_fd<T>(_: &T) -> RawFd {
+    -1
+}
+
+/// Net-layer configuration (carved out of `EngineCfg` by the server).
+#[derive(Clone, Copy, Debug)]
+pub struct NetCfg {
+    /// Max open connections; 0 means unlimited.
+    pub max_conns: usize,
+    /// Idle/slow-loris reap timeout; `None` disables reaping.
+    pub idle_timeout: Option<Duration>,
+}
+
+/// Asks the reactor to exit; cloneable, callable from any thread.
+#[derive(Clone)]
+pub struct StopHandle {
+    flag: Arc<AtomicBool>,
+    waker: Waker,
+}
+
+impl StopHandle {
+    pub fn request(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        self.waker.wake();
+    }
+
+    pub fn requested(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// The connection reactor.  Construct with [`Reactor::new`], then drive it
+/// to completion with [`Reactor::run`] on a dedicated thread.
+pub struct Reactor {
+    poller: Poller,
+    listener: TcpListener,
+    conns: HashMap<u64, Conn>,
+    next_id: u64,
+    tx: mpsc::Sender<(u64, Json)>,
+    rx: mpsc::Receiver<(u64, Json)>,
+    waker: Waker,
+    stop: Arc<AtomicBool>,
+    cfg: NetCfg,
+    metrics: Arc<Metrics>,
+}
+
+impl Reactor {
+    pub fn new(
+        listener: TcpListener,
+        cfg: NetCfg,
+        metrics: Arc<Metrics>,
+    ) -> io::Result<Reactor> {
+        let poller = Poller::new()?;
+        let waker = poller.waker();
+        let (tx, rx) = mpsc::channel();
+        Ok(Reactor {
+            poller,
+            listener,
+            conns: HashMap::new(),
+            next_id: FIRST_CONN,
+            tx,
+            rx,
+            waker,
+            stop: Arc::new(AtomicBool::new(false)),
+            cfg,
+            metrics,
+        })
+    }
+
+    pub fn local_addr(&self) -> io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    pub fn stop_handle(&self) -> StopHandle {
+        StopHandle { flag: Arc::clone(&self.stop), waker: self.waker.clone() }
+    }
+
+    /// A `respond` callback for connection `id`: pushes the response onto
+    /// the completion channel and wakes the poller.  Exactly-once, callable
+    /// from any thread; responses for closed connections are dropped.
+    /// Responses delivered inline on the reactor thread skip the wake —
+    /// `pump` drains the channel before the next poll anyway, and the
+    /// pipe write + spurious wakeup would otherwise tax every cache hit.
+    fn responder(&self, id: u64) -> Done {
+        let tx = self.tx.clone();
+        let waker = self.waker.clone();
+        let reactor_thread = std::thread::current().id();
+        Box::new(move |resp: Json| {
+            let _ = tx.send((id, resp));
+            if std::thread::current().id() != reactor_thread {
+                waker.wake();
+            }
+        })
+    }
+
+    /// Drive the reactor until a stop is requested.  `dispatch` is called
+    /// on the reactor thread with each framed request line; it must arrange
+    /// for its `Done` argument to be called exactly once (inline or from
+    /// another thread) and must not block.
+    pub fn run<D: FnMut(&str, Done)>(mut self, mut dispatch: D) -> io::Result<()> {
+        self.listener.set_nonblocking(true)?;
+        self.poller
+            .register(raw_fd(&self.listener), LISTEN, Interest::READ)?;
+        let mut events = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            self.poller.wait(&mut events, self.poll_timeout())?;
+            let now = Instant::now();
+            let mut ready: VecDeque<u64> = VecDeque::new();
+            for ev in &events {
+                if ev.token == LISTEN {
+                    self.accept_ready(now);
+                } else {
+                    let id = ev.token as u64;
+                    if let Some(c) = self.conns.get_mut(&id) {
+                        if ev.readable {
+                            c.on_readable(now);
+                        }
+                        if ev.writable {
+                            c.flush();
+                        }
+                        ready.push_back(id);
+                    }
+                }
+            }
+            self.pump(ready, &mut dispatch);
+            self.reap_idle(now);
+            self.update_gauges();
+        }
+        self.drain();
+        Ok(())
+    }
+
+    /// Poll timeout: block indefinitely (wake-driven) unless idle reaping
+    /// needs a timer tick.
+    fn poll_timeout(&self) -> Option<Duration> {
+        match self.cfg.idle_timeout {
+            Some(idle) if !self.conns.is_empty() => Some(
+                (idle / 4)
+                    .clamp(Duration::from_millis(25), Duration::from_millis(1000)),
+            ),
+            _ => None,
+        }
+    }
+
+    fn accept_ready(&mut self, now: Instant) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.cfg.max_conns > 0 && self.conns.len() >= self.cfg.max_conns {
+                        self.metrics.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                        // Best-effort one-line rejection; the socket is
+                        // fresh so this cannot block meaningfully.
+                        let mut s = stream;
+                        let _ = s.write_all(
+                            b"{\"ok\":false,\"error\":\"overloaded\"}\n",
+                        );
+                        continue;
+                    }
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    let Ok(c) = Conn::new(stream, now) else { continue };
+                    let fd = raw_fd(c.stream());
+                    if self.poller.register(fd, id as usize, Interest::READ).is_ok() {
+                        self.conns.insert(id, c);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    // Persistent accept failures (EMFILE under fd
+                    // pressure, aborted handshakes) leave the listener
+                    // readable under level-triggered polling: back off
+                    // briefly instead of hot-spinning the reactor, like
+                    // the old accept loop did.
+                    std::thread::sleep(Duration::from_millis(10));
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Apply completed responses and dispatch queued requests until the
+    /// ready set settles.  Inline responders land on the completion channel
+    /// during `dispatch`, so the loop keeps draining until quiescent.
+    fn pump<D: FnMut(&str, Done)>(&mut self, mut ready: VecDeque<u64>, dispatch: &mut D) {
+        loop {
+            while let Ok((id, resp)) = self.rx.try_recv() {
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.inflight = false;
+                    c.push_response(&resp.dump());
+                    if !ready.contains(&id) {
+                        ready.push_back(id);
+                    }
+                }
+            }
+            let Some(id) = ready.pop_front() else { break };
+            // Once a stop is requested, no further queued lines are
+            // dispatched (they are dropped, exactly like the old server
+            // dropped lines after its stop flag flipped) — only responses
+            // already owed keep flowing.  Without this, a pipelined
+            // "shutdown" followed by more requests would keep admitting
+            // work that `wait_idle` then blocks on.
+            let line = if self.stop.load(Ordering::SeqCst) {
+                None
+            } else {
+                self.conns.get_mut(&id).and_then(|c| c.next_request())
+            };
+            if let Some(line) = line {
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.inflight = true;
+                }
+                let respond = self.responder(id);
+                dispatch(&line, respond);
+            }
+            if let Some(c) = self.conns.get_mut(&id) {
+                c.flush();
+                c.settle_overflow();
+            }
+            self.finalize(id);
+        }
+    }
+
+    /// Close a finished conn, or re-sync its poller registration with the
+    /// interest it wants now.  A conn with no interest at all (e.g. EOF
+    /// seen, response still being computed) is *deregistered* so a fully
+    /// closed peer cannot spin the poller with hangup events, and is
+    /// re-registered once it has bytes to write.
+    fn finalize(&mut self, id: u64) {
+        let Some(c) = self.conns.get(&id) else { return };
+        if c.finished() {
+            self.close_conn(id);
+            return;
+        }
+        let want = c.desired_interest();
+        let have = c.registered;
+        if want == have {
+            return;
+        }
+        let fd = raw_fd(c.stream());
+        let token = id as usize;
+        let none = !want.read && !want.write;
+        let had_none = !have.read && !have.write;
+        let ok = if none {
+            self.poller.deregister(fd, token).is_ok()
+        } else if had_none {
+            self.poller.register(fd, token, want).is_ok()
+        } else {
+            self.poller.modify(fd, token, want).is_ok()
+        };
+        if ok {
+            if let Some(c) = self.conns.get_mut(&id) {
+                c.registered = want;
+            }
+        }
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        if let Some(c) = self.conns.remove(&id) {
+            let have = c.registered;
+            if have.read || have.write {
+                let _ = self.poller.deregister(raw_fd(c.stream()), id as usize);
+            }
+        }
+    }
+
+    fn reap_idle(&mut self, now: Instant) {
+        let Some(idle) = self.cfg.idle_timeout else { return };
+        let expired: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.idle_expired(now, idle))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            self.metrics.conns_idle_closed.fetch_add(1, Ordering::Relaxed);
+            self.close_conn(id);
+        }
+    }
+
+    fn update_gauges(&self) {
+        let n = self.conns.len() as u64;
+        self.metrics.conns_active.store(n, Ordering::Relaxed);
+        self.metrics.conns_peak.fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// Graceful exit: stop reading and accepting, deliver every response
+    /// already owed, and flush write queues.  In-flight engine jobs are
+    /// waited for however long they take (their responses are owed and
+    /// the jobs always terminate); once nothing is in flight, stalled
+    /// clients get [`DRAIN_MAX`] of flush grace before being cut off.
+    /// Queued-but-undispatched pipeline lines are dropped, exactly like
+    /// the thread-per-connection server dropped lines after its stop flag
+    /// flipped.
+    fn drain(&mut self) {
+        // Armed only while no response is owed by a worker; reset
+        // whenever one still is.
+        let mut flush_deadline: Option<Instant> = None;
+        let mut events = Vec::new();
+        loop {
+            while let Ok((id, resp)) = self.rx.try_recv() {
+                if let Some(c) = self.conns.get_mut(&id) {
+                    c.inflight = false;
+                    c.push_response(&resp.dump());
+                }
+            }
+            for c in self.conns.values_mut() {
+                c.flush();
+            }
+            let done: Vec<u64> = self
+                .conns
+                .iter()
+                .filter(|(_, c)| c.dead || (!c.inflight && !c.wants_write()))
+                .map(|(&id, _)| id)
+                .collect();
+            for id in done {
+                self.close_conn(id);
+            }
+            if self.conns.is_empty() {
+                break;
+            }
+            if self.conns.values().any(|c| c.inflight) {
+                flush_deadline = None;
+            } else {
+                let d = *flush_deadline
+                    .get_or_insert_with(|| Instant::now() + DRAIN_MAX);
+                if Instant::now() >= d {
+                    break;
+                }
+            }
+            if self
+                .poller
+                .wait(&mut events, Some(Duration::from_millis(20)))
+                .is_err()
+            {
+                break;
+            }
+        }
+        let remaining: Vec<u64> = self.conns.keys().copied().collect();
+        for id in remaining {
+            self.close_conn(id);
+        }
+        self.update_gauges();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+    use std::thread;
+
+    /// Spawn a reactor whose dispatcher echoes `{"echo":<line>}`; odd
+    /// requests are answered inline, even ones from a worker thread 10 ms
+    /// later (exercising the completion channel + waker path).
+    fn echo_server(cfg: NetCfg) -> (std::net::SocketAddr, StopHandle, thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let reactor = Reactor::new(listener, cfg, metrics).unwrap();
+        let addr = reactor.local_addr().unwrap();
+        let stop = reactor.stop_handle();
+        let mut n = 0usize;
+        let t = thread::spawn(move || {
+            reactor
+                .run(move |line, respond| {
+                    n += 1;
+                    let resp = Json::obj().set("echo", line).set("n", n);
+                    if n % 2 == 0 {
+                        thread::spawn(move || {
+                            thread::sleep(Duration::from_millis(10));
+                            respond(resp);
+                        });
+                    } else {
+                        respond(resp);
+                    }
+                })
+                .unwrap();
+        });
+        (addr, stop, t)
+    }
+
+    fn default_cfg() -> NetCfg {
+        NetCfg { max_conns: 0, idle_timeout: None }
+    }
+
+    #[test]
+    fn pipelined_requests_answer_in_order() {
+        let (addr, stop, t) = echo_server(default_cfg());
+        let mut c = TcpStream::connect(addr).unwrap();
+        // One TCP segment, four requests; responses must come back in
+        // order even though even-numbered ones complete off-thread.
+        c.write_all(b"\"a\"\n\"b\"\n\"c\"\n\"d\"\n").unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        for expect in ["\"a\"", "\"b\"", "\"c\"", "\"d\""] {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim()).unwrap();
+            assert_eq!(j.req("echo").unwrap().as_str().unwrap(), expect);
+        }
+        stop.request();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn byte_by_byte_request_still_frames() {
+        let (addr, stop, t) = echo_server(default_cfg());
+        let mut c = TcpStream::connect(addr).unwrap();
+        for b in "\"caf\u{e9}\"\n".as_bytes() {
+            c.write_all(&[*b]).unwrap();
+            thread::sleep(Duration::from_millis(2));
+        }
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.req("echo").unwrap().as_str().unwrap(), "\"caf\u{e9}\"");
+        stop.request();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn half_closed_socket_still_receives_response() {
+        let (addr, stop, t) = echo_server(default_cfg());
+        let mut c = TcpStream::connect(addr).unwrap();
+        // Request #2 on the dispatcher counter resolves off-thread; use two
+        // so the half-close lands while a response is pending.
+        c.write_all(b"\"x\"\n\"y\"\n").unwrap();
+        c.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut all = String::new();
+        c.try_clone().unwrap().read_to_string(&mut all).unwrap();
+        let lines: Vec<&str> = all.lines().collect();
+        assert_eq!(lines.len(), 2, "both responses delivered: {all:?}");
+        assert!(lines[1].contains("\"y\""));
+        stop.request();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn idle_conns_are_reaped_and_counted() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let cfg =
+            NetCfg { max_conns: 0, idle_timeout: Some(Duration::from_millis(80)) };
+        let reactor = Reactor::new(listener, cfg, Arc::clone(&metrics)).unwrap();
+        let addr = reactor.local_addr().unwrap();
+        let stop = reactor.stop_handle();
+        let t = thread::spawn(move || {
+            reactor.run(|_line, respond| respond(Json::obj())).unwrap();
+        });
+        // Connects and never writes: must be reaped without holding
+        // resources past the idle timeout.
+        let mut silent = TcpStream::connect(addr).unwrap();
+        thread::sleep(Duration::from_millis(400));
+        let mut buf = [0u8; 8];
+        let n = silent.read(&mut buf).unwrap();
+        assert_eq!(n, 0, "server closed the idle conn");
+        assert!(metrics.conns_idle_closed.load(Ordering::Relaxed) >= 1);
+        assert_eq!(metrics.conns_active.load(Ordering::Relaxed), 0);
+        stop.request();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn max_conns_rejects_with_one_error_line() {
+        let (addr, stop, t) = echo_server(NetCfg {
+            max_conns: 2,
+            idle_timeout: None,
+        });
+        let keep1 = TcpStream::connect(addr).unwrap();
+        let keep2 = TcpStream::connect(addr).unwrap();
+        thread::sleep(Duration::from_millis(50)); // let the reactor accept
+        let extra = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(extra);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.req("error").unwrap().as_str().unwrap(), "overloaded");
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "then closed");
+        drop((keep1, keep2));
+        stop.request();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn stop_wakes_a_blocked_reactor_immediately() {
+        let (addr, stop, t) = echo_server(default_cfg());
+        let _idle1 = TcpStream::connect(addr).unwrap();
+        let _idle2 = TcpStream::connect(addr).unwrap();
+        thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        stop.request();
+        t.join().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "shutdown must wake the poller, not wait out a timeout ({:?})",
+            t0.elapsed()
+        );
+    }
+}

@@ -36,6 +36,13 @@ impl Drop for SlotGuard {
     }
 }
 
+/// A reserved admission slot (see [`Scheduler::try_reserve`]).  Consumed
+/// by [`Scheduler::submit_reserved`]; dropping it unused releases the
+/// slot immediately.
+pub struct Ticket {
+    guard: SlotGuard,
+}
+
 pub struct Scheduler {
     pool: ThreadPool,
     workers: usize,
@@ -79,13 +86,18 @@ impl Scheduler {
         (25 * (queued + 1)).clamp(25, 2000)
     }
 
-    /// Admit and run `f` on the pool, or reject with a busy hint.
-    pub fn try_submit<F: FnOnce() + Send + 'static>(&self, f: F) -> Submit {
+    /// Reserve one admission slot without submitting work yet, or fail
+    /// with a retry hint.  The async serving path needs this split: it
+    /// must know admission succeeded *before* moving its one-shot
+    /// completion callback into the job closure (a rejected `try_submit`
+    /// would swallow the closure, and with it the client's response).
+    /// Dropping an unused ticket releases the slot.
+    pub fn try_reserve(&self) -> Result<Ticket, u64> {
         let cap = self.capacity();
         let mut cur = self.in_system.load(Ordering::SeqCst);
         loop {
             if cur >= cap {
-                return Submit::Busy { retry_ms: self.retry_hint() };
+                return Err(self.retry_hint());
             }
             match self.in_system.compare_exchange(
                 cur,
@@ -97,12 +109,28 @@ impl Scheduler {
                 Err(now) => cur = now,
             }
         }
-        let guard = SlotGuard(Arc::clone(&self.in_system));
+        Ok(Ticket { guard: SlotGuard(Arc::clone(&self.in_system)) })
+    }
+
+    /// Run `f` on the pool under an already-reserved slot; the slot is
+    /// released when the job finishes (panics included).
+    pub fn submit_reserved<F: FnOnce() + Send + 'static>(&self, ticket: Ticket, f: F) {
+        let guard = ticket.guard;
         self.pool.submit(move || {
             let _guard = guard;
             f();
         });
-        Submit::Accepted
+    }
+
+    /// Admit and run `f` on the pool, or reject with a busy hint.
+    pub fn try_submit<F: FnOnce() + Send + 'static>(&self, f: F) -> Submit {
+        match self.try_reserve() {
+            Err(retry_ms) => Submit::Busy { retry_ms },
+            Ok(ticket) => {
+                self.submit_reserved(ticket, f);
+                Submit::Accepted
+            }
+        }
     }
 
     /// Block until every admitted job has finished (tests / shutdown).
@@ -172,5 +200,22 @@ mod tests {
         let sched = Scheduler::new(0, 0);
         assert_eq!(sched.workers(), 1);
         assert_eq!(sched.capacity(), 1);
+    }
+
+    #[test]
+    fn dropped_ticket_releases_its_slot() {
+        let sched = Scheduler::new(1, 0); // capacity 1
+        let ticket = sched.try_reserve().unwrap();
+        assert!(sched.try_reserve().is_err(), "slot held by the ticket");
+        drop(ticket);
+        let ticket = sched.try_reserve().expect("slot came back");
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r = Arc::clone(&ran);
+        sched.submit_reserved(ticket, move || {
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+        sched.wait_idle();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        assert_eq!(sched.pending(), 0, "slot released after the job");
     }
 }

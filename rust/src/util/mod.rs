@@ -36,11 +36,38 @@ pub fn sign(x: f32) -> f32 {
 /// artifact file names, model fingerprints).  Deliberately not `DefaultHasher`:
 /// the value is persisted on disk, so it must be stable across Rust versions.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Incremental form of [`fnv1a`], for hashing streams (e.g. model files read
+/// in chunks) without buffering them whole.  Feeding the same bytes in any
+/// chunking produces the same hash as the one-shot function.
+pub struct Fnv1a {
+    h: u64,
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
     }
-    h
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a { h: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h = (self.h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
 }
 
 #[cfg(test)]
@@ -62,5 +89,15 @@ mod tests {
         assert_eq!(sign(0.0), 0.0);
         assert_eq!(sign(1e-30), 1.0);
         assert_eq!(sign(-1e-30), -1.0);
+    }
+
+    #[test]
+    fn fnv1a_incremental_matches_one_shot() {
+        let data = b"squant artifact fingerprint";
+        let mut h = Fnv1a::new();
+        h.update(&data[..7]);
+        h.update(&data[7..]);
+        assert_eq!(h.finish(), fnv1a(data));
+        assert_eq!(Fnv1a::new().finish(), fnv1a(b""));
     }
 }

@@ -8,7 +8,6 @@
 //! `--cache-dir` and require a disk hit (no SQuant recompute) — then touch
 //! the model file and require the stale artifact to be invalidated.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -28,14 +27,7 @@ fn test_dataset() -> Dataset {
 }
 
 fn tiny_store() -> Arc<ModelStore> {
-    let (g, p) = tiny_test_graph(3, 4, 10);
-    let mut models = HashMap::new();
-    models.insert("tiny".to_string(), (g, p));
-    Arc::new(ModelStore {
-        models,
-        fingerprints: HashMap::new(),
-        test: test_dataset(),
-    })
+    ModelStore::tiny()
 }
 
 fn cfg() -> EngineCfg {
