@@ -190,7 +190,7 @@ pub fn quantize_model(graph: &Graph, params: &Params, bits: usize) -> DfqResult 
     // (per-channel quantization largely obviates equalization; Nagel'19's
     // contribution is making per-tensor viable).  This is also what makes
     // DFQ collapse at low bits in the paper's Table 1.
-    let mut quantized: Params = HashMap::new();
+    let mut quantized = Params::new();
     for layer in g2.quant_layers() {
         let w = &p[&layer.weight];
         let (m, _, _) = mnk_of(&w.shape);
@@ -235,21 +235,21 @@ mod tests {
         let g = crate::nn::Graph::from_header(
             &crate::util::json::Json::parse(header).unwrap()).unwrap();
         let mut rng = Rng::new(3);
-        let mut params: Params = HashMap::new();
+        let mut params = Params::new();
         // Unbalanced channel ranges to give equalization something to do.
         let mut wa = Tensor::zeros(&[4, 2, 3, 3]);
         rng.fill_normal(&mut wa.data, 0.2);
         for v in &mut wa.data[0..18] {
             *v *= 8.0; // channel 0 much larger
         }
-        params.insert("wa".into(), wa);
+        params.insert("wa", wa);
         let mut wb = Tensor::zeros(&[3, 4, 3, 3]);
         rng.fill_normal(&mut wb.data, 0.2);
-        params.insert("wb".into(), wb);
-        params.insert("g".into(), Tensor::filled(&[4], 1.2));
-        params.insert("b".into(), Tensor::filled(&[4], 0.1));
-        params.insert("m".into(), Tensor::filled(&[4], 0.05));
-        params.insert("v".into(), Tensor::filled(&[4], 0.8));
+        params.insert("wb", wb);
+        params.insert("g", Tensor::filled(&[4], 1.2));
+        params.insert("b", Tensor::filled(&[4], 0.1));
+        params.insert("m", Tensor::filled(&[4], 0.05));
+        params.insert("v", Tensor::filled(&[4], 0.8));
 
         let mut x = Tensor::zeros(&[2, 2, 6, 6]);
         rng.fill_normal(&mut x.data, 1.0);

@@ -2,27 +2,40 @@
 //!
 //! The paper's pitch (§3.4): SQuant's M·N sub-problems are independent, so a
 //! whole network quantizes in milliseconds on an inference-only device.
-//! This module is that device-side service:
+//! This module is that device-side service, structured as a
+//! **plan / execute / assemble** split so every caller shares one
+//! per-layer compute path:
 //!
-//!  * [`quantize_model`] — per-layer parallel SQuant over a loaded model,
-//!    with per-layer timing (Table 3's "sum of all layer quantization
-//!    time" and the ~ms/layer claim);
-//!  * [`quantize_model_offload`] — the same work routed through the AOT
-//!    JAX/Pallas HLO artifacts on the PJRT device (cross-validated
+//!  * [`plan_layers`] — resolve a [`QuantSpec`] against a graph into
+//!    independent [`LayerTask`]s, each carrying a predicted cost
+//!    (`M·N·K × bits` weight-element-bits) — the serving scheduler's
+//!    admission and interleaving unit;
+//!  * [`run_layer_task`] — execute one task (timing measured inside,
+//!    including scale computation, so per-layer `ms` is comparable across
+//!    the native, serving and offload paths);
+//!  * [`assemble`] — fold [`LayerOutcome`]s back into Arc-shared
+//!    [`Params`] + a [`QuantReport`] (untouched FP32 layers keep pointing
+//!    at the source tensors);
+//!  * [`quantize_model`] / [`quantize_model_spec`] — thin
+//!    `parallel_map` shims over the planner for the CLI / tests (the
+//!    serving engine instead spreads the same tasks across its one
+//!    persistent pool — see `serve`);
+//!  * [`quantize_model_offload`] — the same planner routed through the
+//!    AOT JAX/Pallas HLO artifacts on the PJRT device (cross-validated
 //!    bit-exact against the native path in rust/tests/);
 //!  * [`server`] — a line-JSON TCP service exposing quantize/eval to
 //!    external clients (see examples/onthefly_service.rs).
 
 pub mod server;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::time::Instant;
 
 use crate::baselines::rtn;
 use crate::io::manifest::{Manifest, SquantShape};
 use crate::nn::{Graph, Params, QuantLayer};
 use crate::quant::spec::{Method, QuantSpec};
-use crate::quant::{channel_scales, QuantConfig};
+use crate::quant::{channel_scales, QuantConfig, ScaleMethod};
 use crate::runtime::Runtime;
 use crate::squant::{squant, SquantOpts, SquantResult};
 use crate::tensor::Tensor;
@@ -103,80 +116,165 @@ pub fn quantize_model(
     (out, QuantReport { layers: reports, total_ms, wall_ms })
 }
 
-/// Quantize every conv/linear layer according to a [`QuantSpec`], layers in
-/// parallel — the serving engine's compute path and the substrate behind
-/// per-layer mixed precision.  Each layer resolves its effective
-/// (bit-width, method) from the spec's overrides; `fp32` layers are left
-/// untouched (reported at 32 bits with zero flips), `rtn` layers go through
-/// the dedicated baseline, and SQuant layers run the requested stage set.
-/// The spec's scale method applies to every quantized layer.
+// ---------------------------------------------------------------------------
+// Plan / execute / assemble
+// ---------------------------------------------------------------------------
+
+/// One independent unit of quantization work: a single layer resolved
+/// against a spec's per-layer overrides.  Tasks are what the serving
+/// scheduler admits, weighs and interleaves.
+#[derive(Clone, Debug)]
+pub struct LayerTask {
+    pub layer: QuantLayer,
+    /// Effective weight bit-width (the spec's base or the layer override;
+    /// unused for [`Method::Fp32`]).
+    pub bits: usize,
+    /// Effective per-layer method (fp32 / rtn / squant stage set only —
+    /// [`plan_layers`] rejects everything else).
+    pub method: Method,
+    pub scale: ScaleMethod,
+    /// Predicted cost in weight-element-bits: `M·N·K × bits` (0 for FP32
+    /// layers, which copy nothing and compute nothing).  The serving
+    /// layer admits and schedules in these units.
+    pub cost: u64,
+}
+
+/// Result of one executed [`LayerTask`].
+#[derive(Clone, Debug)]
+pub struct LayerOutcome {
+    pub report: LayerReport,
+    /// Replacement dequantized weight; `None` leaves the layer untouched
+    /// (FP32), so the assembled [`Params`] keep sharing the source tensor.
+    pub wq: Option<Tensor>,
+}
+
+/// Resolve a [`QuantSpec`] into one [`LayerTask`] per quantizable layer.
 ///
 /// Callers validate the spec at the boundary ([`QuantSpec::validate`] +
 /// `validate_layers`); this only refuses methods with no per-layer path.
-pub fn quantize_model_spec(
+pub fn plan_layers(
     graph: &Graph,
-    params: &Params,
     spec: &QuantSpec,
-    threads: usize,
-) -> Result<(Params, QuantReport), String> {
-    let layers = graph.quant_layers();
-    let t0 = Instant::now();
-    type LayerOut = (QuantLayer, usize, Option<Tensor>, usize, usize, f64);
-    let results: Vec<Result<LayerOut, String>> =
-        parallel_map(layers.len(), threads, |i| {
-            let layer = layers[i].clone();
-            let w = &params[&layer.weight];
+) -> Result<Vec<LayerTask>, String> {
+    graph
+        .quant_layers()
+        .into_iter()
+        .map(|layer| {
             let (bits, method) = spec.effective(&layer.weight);
-            let lt = Instant::now();
-            let (bits, wq, fk, fc) = match method {
-                Method::Fp32 => (32, None, 0, 0),
-                Method::Rtn => {
-                    (bits, Some(rtn::quantize_layer(w, bits, spec.scale)), 0, 0)
-                }
-                Method::Squant { enable_k, enable_c } => {
-                    let cfg = QuantConfig { bits, scale: spec.scale };
-                    let scales = channel_scales(w, cfg);
-                    let res =
-                        squant(w, &scales, SquantOpts { bits, enable_k, enable_c });
-                    (bits, Some(res.wq), res.flips_k, res.flips_c)
-                }
+            match method {
+                Method::Fp32 | Method::Rtn | Method::Squant { .. } => {}
                 other => {
                     return Err(format!(
                         "method '{}' has no per-layer quantization path",
                         other.label()
                     ))
                 }
+            }
+            let cost = if method == Method::Fp32 {
+                0
+            } else {
+                (layer.m * layer.n * layer.k) as u64 * bits as u64
             };
-            let ms = lt.elapsed().as_secs_f64() * 1e3;
-            Ok((layer, bits, wq, fk, fc, ms))
-        });
-    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            Ok(LayerTask { layer, bits, method, scale: spec.scale, cost })
+        })
+        .collect()
+}
 
-    let mut out = params.clone();
-    let mut reports = Vec::new();
-    let mut total_ms = 0.0;
-    for r in results {
-        let (layer, bits, wq, flips_k, flips_c, ms) = r?;
-        reports.push(LayerReport {
-            weight: layer.weight.clone(),
-            m: layer.m,
-            n: layer.n,
-            k: layer.k,
+/// Execute one layer task against its weight tensor.  The per-layer timer
+/// covers everything the task computes — scale search included — so `ms`
+/// is comparable across the native, serving and offload paths.
+pub fn run_layer_task(task: &LayerTask, w: &Tensor) -> LayerOutcome {
+    let lt = Instant::now();
+    let (bits, wq, flips_k, flips_c) = match task.method {
+        Method::Fp32 => (32, None, 0, 0),
+        Method::Rtn => (
+            task.bits,
+            Some(rtn::quantize_layer(w, task.bits, task.scale)),
+            0,
+            0,
+        ),
+        Method::Squant { enable_k, enable_c } => {
+            let cfg = QuantConfig { bits: task.bits, scale: task.scale };
+            let scales = channel_scales(w, cfg);
+            let res = squant(
+                w,
+                &scales,
+                SquantOpts { bits: task.bits, enable_k, enable_c },
+            );
+            (task.bits, Some(res.wq), res.flips_k, res.flips_c)
+        }
+        _ => unreachable!("plan_layers only emits per-layer methods"),
+    };
+    let ms = lt.elapsed().as_secs_f64() * 1e3;
+    LayerOutcome {
+        report: LayerReport {
+            weight: task.layer.weight.clone(),
+            m: task.layer.m,
+            n: task.layer.n,
+            k: task.layer.k,
             bits,
             ms,
             flips_k,
             flips_c,
-        });
-        total_ms += ms;
-        if let Some(wq) = wq {
-            out.insert(layer.weight, wq);
-        }
+        },
+        wq,
     }
-    Ok((out, QuantReport { layers: reports, total_ms, wall_ms }))
+}
+
+/// Fold executed layer outcomes back into fresh [`Params`] plus the
+/// [`QuantReport`].  `base` is Arc-share-cloned: FP32 layers and
+/// non-weight tensors in the result point at the very same tensors as
+/// `base` (no deep copy anywhere on this path).
+pub fn assemble(
+    base: &Params,
+    outcomes: Vec<LayerOutcome>,
+    wall_ms: f64,
+) -> (Params, QuantReport) {
+    let mut out = base.clone();
+    let mut layers = Vec::with_capacity(outcomes.len());
+    let mut total_ms = 0.0;
+    for o in outcomes {
+        total_ms += o.report.ms;
+        if let Some(wq) = o.wq {
+            out.insert(o.report.weight.clone(), wq);
+        }
+        layers.push(o.report);
+    }
+    (out, QuantReport { layers, total_ms, wall_ms })
+}
+
+/// Quantize every conv/linear layer according to a [`QuantSpec`], layers in
+/// parallel — the CLI/tests shim over [`plan_layers`] +
+/// [`run_layer_task`] + [`assemble`] (the serving engine drives the same
+/// planner through its persistent weighted pool instead).  Each layer
+/// resolves its effective (bit-width, method) from the spec's overrides;
+/// `fp32` layers are left untouched (reported at 32 bits with zero
+/// flips), `rtn` layers go through the dedicated baseline, and SQuant
+/// layers run the requested stage set.  The spec's scale method applies
+/// to every quantized layer.
+pub fn quantize_model_spec(
+    graph: &Graph,
+    params: &Params,
+    spec: &QuantSpec,
+    threads: usize,
+) -> Result<(Params, QuantReport), String> {
+    let tasks = plan_layers(graph, spec)?;
+    let t0 = Instant::now();
+    let outcomes: Vec<LayerOutcome> = parallel_map(tasks.len(), threads, |i| {
+        run_layer_task(&tasks[i], &params[&tasks[i].layer.weight])
+    });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(assemble(params, outcomes, wall_ms))
 }
 
 /// Quantize via the AOT JAX/Pallas artifacts (PJRT offload).  Layers whose
 /// (M, N, K, bits) shape has no artifact fall back to the native path.
+///
+/// The work list comes from the same [`plan_layers`] planner as every
+/// other path, and the per-layer timer starts *before* the scale
+/// computation on both branches (it used to start after `channel_scales`
+/// here while the native paths timed it inside — per-layer `ms` was not
+/// comparable across paths).
 pub fn quantize_model_offload(
     graph: &Graph,
     params: &Params,
@@ -184,47 +282,50 @@ pub fn quantize_model_offload(
     manifest: &Manifest,
     rt: &Runtime,
 ) -> Result<(Params, QuantReport, usize)> {
-    let layers = graph.quant_layers();
-    let mut out = params.clone();
-    let mut reports = Vec::new();
+    let spec = QuantSpec::uniform(Method::squant_full(), bits, 0);
+    let tasks = plan_layers(graph, &spec).map_err(|e| anyhow!(e))?;
+    let mut outcomes = Vec::with_capacity(tasks.len());
     let mut offloaded = 0usize;
     let t0 = Instant::now();
-    let mut total_ms = 0.0;
-    for layer in &layers {
+    for task in &tasks {
+        let layer = &task.layer;
         let w = &params[&layer.weight];
-        let scales = channel_scales(w, QuantConfig::new(bits));
-        let lt = Instant::now();
         let shape = SquantShape { m: layer.m, n: layer.n, k: layer.k, bits };
-        let (wq, fk, fc) = if let Some(path) = manifest.squant.get(&shape) {
-            // AOT path: (w, s) -> (q, wq).
+        let outcome = if let Some(path) = manifest.squant.get(&shape) {
+            // AOT path: (w, s) -> (q, wq), scales timed inside like the
+            // native branch.
+            let lt = Instant::now();
+            let scales = channel_scales(w, QuantConfig::new(bits));
             let w3 = Tensor::from_vec(&[layer.m, layer.n, layer.k],
                                       w.data.clone());
-            let s = Tensor::from_vec(&[layer.m], scales.clone());
+            let s = Tensor::from_vec(&[layer.m], scales);
             let outs = rt
                 .run(path, &[&w3, &s])
                 .with_context(|| format!("offload {}", layer.weight))?;
             offloaded += 1;
-            (Tensor::from_vec(&w.shape, outs[1].data.clone()), 0, 0)
+            let wq = Tensor::from_vec(&w.shape, outs[1].data.clone());
+            let ms = lt.elapsed().as_secs_f64() * 1e3;
+            LayerOutcome {
+                report: LayerReport {
+                    weight: layer.weight.clone(),
+                    m: layer.m,
+                    n: layer.n,
+                    k: layer.k,
+                    bits,
+                    ms,
+                    flips_k: 0,
+                    flips_c: 0,
+                },
+                wq: Some(wq),
+            }
         } else {
-            let res = squant(w, &scales, SquantOpts::full(bits));
-            (res.wq, res.flips_k, res.flips_c)
+            run_layer_task(task, w)
         };
-        let ms = lt.elapsed().as_secs_f64() * 1e3;
-        total_ms += ms;
-        reports.push(LayerReport {
-            weight: layer.weight.clone(),
-            m: layer.m,
-            n: layer.n,
-            k: layer.k,
-            bits,
-            ms,
-            flips_k: fk,
-            flips_c: fc,
-        });
-        out.insert(layer.weight.clone(), wq);
+        outcomes.push(outcome);
     }
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    Ok((out, QuantReport { layers: reports, total_ms, wall_ms }, offloaded))
+    let (out, report) = assemble(params, outcomes, wall_ms);
+    Ok((out, report, offloaded))
 }
 
 #[cfg(test)]
@@ -296,5 +397,62 @@ mod tests {
         let (g, p) = tiny_test_graph(3, 4, 10);
         let spec = QuantSpec::uniform(Method::Dfq, 4, 0);
         assert!(quantize_model_spec(&g, &p, &spec, 1).is_err());
+        assert!(plan_layers(&g, &spec).is_err());
+    }
+
+    /// The planner's predicted cost is M·N·K × bits weight-element-bits,
+    /// except FP32 layers which cost nothing (no compute, no copy).
+    #[test]
+    fn plan_costs_follow_mnk_times_bits() {
+        use crate::quant::spec::LayerOverride;
+        let (g, _) = tiny_test_graph(3, 4, 10);
+        let spec = QuantSpec::uniform(Method::squant_full(), 4, 0)
+            .with_override("wfc", LayerOverride { wbits: Some(8), method: None })
+            .with_override(
+                "w1",
+                LayerOverride { wbits: None, method: Some(Method::Fp32) },
+            );
+        let tasks = plan_layers(&g, &spec).unwrap();
+        let by_name: std::collections::HashMap<&str, &LayerTask> =
+            tasks.iter().map(|t| (t.layer.weight.as_str(), t)).collect();
+        assert_eq!(by_name["w1"].cost, 0, "fp32 layers cost nothing");
+        assert_eq!(by_name["wfc"].cost, (10 * 4 * 1 * 8) as u64);
+        let uniform = plan_layers(
+            &g,
+            &QuantSpec::uniform(Method::squant_full(), 4, 0),
+        )
+        .unwrap();
+        assert_eq!(
+            uniform.iter().map(|t| t.cost).sum::<u64>(),
+            (4 * 3 * 9 * 4 + 10 * 4 * 1 * 4) as u64
+        );
+    }
+
+    /// `assemble` structurally shares untouched tensors with the base
+    /// params: an FP32-override layer's weight (and every non-weight
+    /// tensor) is the SAME `Arc` allocation, not a copy.
+    #[test]
+    fn assemble_shares_untouched_tensors_with_base() {
+        use crate::quant::spec::LayerOverride;
+        use std::sync::Arc;
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let spec = QuantSpec::uniform(Method::squant_full(), 4, 0)
+            .with_override(
+                "w1",
+                LayerOverride { wbits: None, method: Some(Method::Fp32) },
+            );
+        let (q, _) = quantize_model_spec(&g, &p, &spec, 2).unwrap();
+        assert!(
+            Arc::ptr_eq(q.shared("w1").unwrap(), p.shared("w1").unwrap()),
+            "fp32 layer shares the source tensor allocation"
+        );
+        assert!(
+            Arc::ptr_eq(q.shared("g1").unwrap(), p.shared("g1").unwrap()),
+            "non-weight tensors share too"
+        );
+        assert!(
+            !Arc::ptr_eq(q.shared("wfc").unwrap(), p.shared("wfc").unwrap()),
+            "quantized layers get fresh tensors"
+        );
     }
 }

@@ -63,9 +63,11 @@ pub fn quantize_with(
 
 /// Quantize a model according to a full [`QuantSpec`].  Per-layer methods
 /// (fp32/rtn/squant*) honour per-layer bit-width/stage overrides and the
-/// spec's scale method via [`crate::coordinator::quantize_model_spec`]; the
-/// calibration baselines stay whole-model (the spec validator rejects
-/// overrides for them).
+/// spec's scale method via [`crate::coordinator::quantize_model_spec`] —
+/// the CLI-side shim over the same plan/execute/assemble pipeline the
+/// serving engine drives (results are pinned bit-identical between the
+/// two); the calibration baselines stay whole-model (the spec validator
+/// rejects overrides for them).
 pub fn quantize_with_spec(
     spec: &QuantSpec,
     graph: &Graph,
@@ -79,6 +81,8 @@ pub fn quantize_with_spec(
     let t0 = Instant::now();
     let mut out = if spec.method == Method::Fp32 && !spec.has_overrides() {
         // The FP32 baseline row: no weight change, no activation grid.
+        // `Params::clone` is an Arc-share (O(entries)), so this row costs
+        // nothing per evaluation no matter the model size.
         Quantized {
             graph: graph.clone(),
             params: params.clone(),

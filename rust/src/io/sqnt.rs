@@ -8,20 +8,22 @@
 //! quantization spec) instead of a model IR — see `serve::disk`.
 
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
 use std::path::Path;
 
 use super::{read_f32s, read_u32};
+use crate::nn::Params;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
 pub const MAGIC: &[u8; 4] = b"SQNT";
 pub const VERSION: u32 = 1;
 
-/// A parsed container: IR header (raw JSON) + named parameter tensors.
+/// A parsed container: IR header (raw JSON) + named parameter tensors
+/// (Arc-shared [`Params`], so a loaded model's payloads flow into the
+/// serving store and quantization flights without copies).
 pub struct Container {
     pub header: Json,
-    pub params: HashMap<String, Tensor>,
+    pub params: Params,
     /// Tensor-table order (the AOT forward HLO's parameter order).
     pub order: Vec<String>,
 }
@@ -110,7 +112,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<Container> {
     let payload_start = header_end;
 
     let payload_floats = (buf.len() - payload_start) / 4;
-    let mut params = HashMap::new();
+    let mut params = Params::new();
     let mut order = Vec::new();
     for row in parse_tensor_table(&header, payload_floats)? {
         let mut p = payload_start + 4 * row.offset;
@@ -124,10 +126,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<Container> {
 /// Rebuild a `tensors` table for `params` in the given name order, with
 /// contiguous offsets.  Use when composing a fresh header (e.g. artifact
 /// files) or when tensor shapes changed since the header was written.
-pub fn rebuild_tensor_table(
-    params: &HashMap<String, Tensor>,
-    order: &[String],
-) -> Result<Json> {
+pub fn rebuild_tensor_table(params: &Params, order: &[String]) -> Result<Json> {
     let mut table = Vec::with_capacity(order.len());
     let mut offset = 0usize;
     for name in order {
@@ -157,8 +156,7 @@ pub fn rebuild_tensor_table(
 /// tensor table round-trips exactly; overlapping or gapped layouts are
 /// rejected rather than silently corrupted (the old writer ignored offsets
 /// and wrote payloads back-to-back in table order).
-pub fn save(path: impl AsRef<Path>, header: &Json,
-            params: &HashMap<String, Tensor>) -> Result<()> {
+pub fn save(path: impl AsRef<Path>, header: &Json, params: &Params) -> Result<()> {
     let hbytes = header.dump().into_bytes();
     // Bounding every span by the summed tensor sizes (plus the no-overlap
     // check) admits exactly the permutations of a contiguous layout, so the
@@ -227,7 +225,7 @@ mod tests {
         let dir = std::env::temp_dir().join("sqnt_test_rt");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.sqnt");
-        let mut params = HashMap::new();
+        let mut params = Params::new();
         params.insert(
             "w".to_string(),
             Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
@@ -256,7 +254,7 @@ mod tests {
     fn save_rejects_shape_mismatch() {
         let dir = std::env::temp_dir().join("sqnt_test_shape");
         std::fs::create_dir_all(&dir).unwrap();
-        let mut params = HashMap::new();
+        let mut params = Params::new();
         params.insert("w".to_string(), Tensor::zeros(&[1, 1]));
         assert!(save(dir.join("x.sqnt"), &tiny_header(), &params).is_err());
     }
@@ -278,7 +276,7 @@ mod tests {
                 "meta":{}}"#,
         )
         .unwrap();
-        let mut params = HashMap::new();
+        let mut params = Params::new();
         params.insert(
             "a".to_string(),
             Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
@@ -304,7 +302,7 @@ mod tests {
                 {"name":"b","shape":[4],"offset":2,"numel":4}]}"#,
         )
         .unwrap();
-        let mut params = HashMap::new();
+        let mut params = Params::new();
         params.insert("a".to_string(), Tensor::zeros(&[4]));
         params.insert("b".to_string(), Tensor::zeros(&[4]));
         let err = save(dir.join("x.sqnt"), &header, &params).unwrap_err();
@@ -313,7 +311,7 @@ mod tests {
 
     #[test]
     fn rebuild_tensor_table_is_contiguous() {
-        let mut params = HashMap::new();
+        let mut params = Params::new();
         params.insert("a".to_string(), Tensor::zeros(&[2, 3]));
         params.insert("b".to_string(), Tensor::zeros(&[4]));
         let table =

@@ -794,6 +794,30 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
             conns_stats.req("idle_closed")?.as_usize()?,
         );
     }
+    // Layer-task pipeline observability: the scheduler's live task/cost
+    // gauges plus the server-side queue-wait vs compute split for the
+    // quantize flights this run produced.
+    if let Ok(tasks) = stats1.req("tasks") {
+        println!(
+            "  tasks      : queued {}, running {}, cost units in system {}",
+            tasks.req("queued")?.as_usize()?,
+            tasks.req("running")?.as_usize()?,
+            tasks.req("cost_units")?.as_usize()?,
+        );
+    }
+    if let Ok(lat) = stats1.req("metrics").and_then(|m| m.req("latency")) {
+        if let (Ok(q), Ok(c)) = (lat.req("queue"), lat.req("compute")) {
+            println!(
+                "  flight lat : queue p50 {:.2} ms p95 {:.2} ms | \
+                 compute p50 {:.2} ms p95 {:.2} ms ({} flights)",
+                q.req("p50_ms")?.as_f64()?,
+                q.req("p95_ms")?.as_f64()?,
+                c.req("p50_ms")?.as_f64()?,
+                c.req("p95_ms")?.as_f64()?,
+                c.req("count")?.as_usize()?,
+            );
+        }
+    }
     // Prove the idle set survived the load phase: every silent connection
     // must still answer a ping (i.e. the server held N mostly-idle conns
     // without reaping or wedging them).  The ping gets a read timeout so a

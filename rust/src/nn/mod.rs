@@ -13,11 +13,117 @@ pub mod statprop;
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
-pub type Params = HashMap<String, Tensor>;
+/// Named parameter tensors with structurally shared payloads.
+///
+/// Values are `Arc<Tensor>`, so `Params::clone()` is O(entries) and shares
+/// every tensor with the source — the serving path hands one model's
+/// weights to many concurrent quantization flights, caches and artifact
+/// entries without duplicating the FP32 payloads.  Mutation is
+/// copy-on-write per tensor: [`Params::get_mut`] clones a tensor only if
+/// it is shared ([`Arc::make_mut`]), and [`Params::insert`] simply
+/// replaces the slot, leaving other holders of the old `Arc` untouched.
+///
+/// The read API mirrors the old `HashMap<String, Tensor>` alias
+/// (indexing and [`Params::get`] yield `&Tensor`); [`Params::shared`]
+/// exposes the `Arc` itself for structural-sharing-aware callers
+/// (cache byte accounting, pointer-equality tests).
+#[derive(Clone, Debug, Default)]
+pub struct Params {
+    map: HashMap<String, Arc<Tensor>>,
+}
+
+impl Params {
+    pub fn new() -> Params {
+        Params::default()
+    }
+
+    /// Insert or replace a tensor.  Accepts an owned [`Tensor`] or an
+    /// already-shared `Arc<Tensor>` (the latter preserves sharing).
+    pub fn insert(
+        &mut self,
+        name: impl Into<String>,
+        t: impl Into<Arc<Tensor>>,
+    ) -> Option<Arc<Tensor>> {
+        self.map.insert(name.into(), t.into())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name).map(|t| t.as_ref())
+    }
+
+    /// The shared handle itself (for Arc-aware callers).
+    pub fn shared(&self, name: &str) -> Option<&Arc<Tensor>> {
+        self.map.get(name)
+    }
+
+    /// Copy-on-write mutable access: clones the tensor first if any other
+    /// `Params`/cache entry still shares it.
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.map.get_mut(name).map(Arc::make_mut)
+    }
+
+    pub fn contains_key(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = &Arc<Tensor>> {
+        self.map.values()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Arc<Tensor>)> {
+        self.map.iter()
+    }
+}
+
+impl<S: AsRef<str>> std::ops::Index<S> for Params {
+    type Output = Tensor;
+    fn index(&self, name: S) -> &Tensor {
+        let name = name.as_ref();
+        self.get(name)
+            .unwrap_or_else(|| panic!("no parameter tensor named '{name}'"))
+    }
+}
+
+impl IntoIterator for Params {
+    type Item = (String, Arc<Tensor>);
+    type IntoIter = std::collections::hash_map::IntoIter<String, Arc<Tensor>>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.map.into_iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a Params {
+    type Item = (&'a String, &'a Arc<Tensor>);
+    type IntoIter = std::collections::hash_map::Iter<'a, String, Arc<Tensor>>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.map.iter()
+    }
+}
+
+impl FromIterator<(String, Tensor)> for Params {
+    fn from_iter<I: IntoIterator<Item = (String, Tensor)>>(it: I) -> Params {
+        Params {
+            map: it.into_iter().map(|(k, v)| (k, Arc::new(v))).collect(),
+        }
+    }
+}
 
 /// One IR operation.  Parameter tensors are referenced by name.
 #[derive(Clone, Debug)]
@@ -245,18 +351,18 @@ pub fn tiny_test_graph(cin: usize, cmid: usize, classes: usize) -> (Graph, Param
     let header = tiny_test_header(cin, cmid, classes);
     let graph = Graph::from_header(&Json::parse(&header).unwrap()).unwrap();
     let mut rng = crate::util::rng::Rng::new(99);
-    let mut params: Params = HashMap::new();
+    let mut params = Params::new();
     let mut w1 = Tensor::zeros(&[cmid, cin, 3, 3]);
     rng.fill_normal(&mut w1.data, 0.3);
-    params.insert("w1".into(), w1);
-    params.insert("g1".into(), Tensor::filled(&[cmid], 1.0));
-    params.insert("b1".into(), Tensor::zeros(&[cmid]));
-    params.insert("m1".into(), Tensor::zeros(&[cmid]));
-    params.insert("v1".into(), Tensor::filled(&[cmid], 1.0));
+    params.insert("w1", w1);
+    params.insert("g1", Tensor::filled(&[cmid], 1.0));
+    params.insert("b1", Tensor::zeros(&[cmid]));
+    params.insert("m1", Tensor::zeros(&[cmid]));
+    params.insert("v1", Tensor::filled(&[cmid], 1.0));
     let mut wfc = Tensor::zeros(&[classes, cmid]);
     rng.fill_normal(&mut wfc.data, 0.3);
-    params.insert("wfc".into(), wfc);
-    params.insert("bfc".into(), Tensor::zeros(&[classes]));
+    params.insert("wfc", wfc);
+    params.insert("bfc", Tensor::zeros(&[classes]));
     (graph, params)
 }
 

@@ -6,6 +6,13 @@
 //! least-recently-used, bounded by an entry cap *and* a byte budget
 //! (quantized Params for the zoo models run to megabytes each).
 //!
+//! The byte budget counts **unique bytes**: [`Params`] values are
+//! Arc-shared tensors, so an FP32-override layer (or any tensor shared
+//! between sibling mixed-precision entries, the model store and in-flight
+//! requests) occupies its payload once no matter how many cache entries
+//! reference it.  The cache keeps a per-allocation refcount and
+//! charges/discharges a tensor only on its first/last reference.
+//!
 //! Recency is a monotonic tick per entry; eviction scans for the minimum
 //! tick — O(n) per eviction, which is fine at serving cache sizes (tens of
 //! entries) and keeps the structure a single flat map.
@@ -13,6 +20,8 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::sync::Mutex;
+
+use crate::tensor::Tensor;
 
 use crate::coordinator::QuantReport;
 use crate::nn::engine::ActQuant;
@@ -45,15 +54,82 @@ pub struct CacheEntry {
     pub bytes: usize,
 }
 
-/// Approximate byte footprint of a parameter set (f32 payload + map slack).
+/// Approximate byte footprint of a parameter set (f32 payload + map
+/// slack), counting every tensor — shared or not.  This is the *full*
+/// footprint stored on [`CacheEntry::bytes`] (used by the disk tier and
+/// the oversize screen); the in-memory budget instead charges unique
+/// bytes (see module docs).
 pub fn params_bytes(p: &Params) -> usize {
-    p.values().map(|t| t.data.len() * 4 + 64).sum()
+    p.values().map(|t| tensor_bytes(t)).sum()
+}
+
+fn tensor_bytes(t: &Tensor) -> usize {
+    t.data.len() * 4 + 64
+}
+
+/// Refcounted byte accounting per tensor allocation (keyed by the Arc's
+/// pointer): a tensor is charged against the budget on its first
+/// reference from any resident entry and discharged on its last.
+/// Allocations in `exempt` (the model store's own tensors, alive for the
+/// engine's whole lifetime regardless of caching) are never charged —
+/// an entry that mostly shares the store's FP32 payloads costs the cache
+/// only its freshly quantized layers.
+#[derive(Default)]
+struct UniqueBytes {
+    refs: HashMap<usize, (usize, usize)>, // ptr -> (bytes, refcount)
+    exempt: std::collections::HashSet<usize>,
+    total: usize,
+}
+
+impl UniqueBytes {
+    fn charge(&mut self, params: &Params) {
+        for t in params.values() {
+            let ptr = Arc::as_ptr(t) as usize;
+            if self.exempt.contains(&ptr) {
+                continue;
+            }
+            let slot = self.refs.entry(ptr).or_insert((tensor_bytes(t), 0));
+            if slot.1 == 0 {
+                self.total += slot.0;
+            }
+            slot.1 += 1;
+        }
+    }
+
+    fn discharge(&mut self, params: &Params) {
+        for t in params.values() {
+            let ptr = Arc::as_ptr(t) as usize;
+            let Some(slot) = self.refs.get_mut(&ptr) else { continue };
+            slot.1 -= 1;
+            if slot.1 == 0 {
+                self.total -= slot.0;
+                self.refs.remove(&ptr);
+            }
+        }
+    }
+
+    /// What this entry would occupy if it were the only resident one:
+    /// its distinct non-exempt allocations, each counted once.  This is
+    /// the oversize screen — an entry whose standalone footprint exceeds
+    /// the budget could never stay resident even after evicting
+    /// everything else.
+    fn standalone(&self, params: &Params) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        params
+            .values()
+            .filter(|t| {
+                let ptr = Arc::as_ptr(t) as usize;
+                !self.exempt.contains(&ptr) && seen.insert(ptr)
+            })
+            .map(|t| tensor_bytes(t))
+            .sum()
+    }
 }
 
 struct Inner {
     map: HashMap<QuantKey, (Arc<CacheEntry>, u64)>,
     tick: u64,
-    bytes: usize,
+    bytes: UniqueBytes,
     evictions: u64,
 }
 
@@ -71,7 +147,7 @@ impl Cache {
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 tick: 0,
-                bytes: 0,
+                bytes: UniqueBytes::default(),
                 evictions: 0,
             }),
             cap,
@@ -95,28 +171,48 @@ impl Cache {
         self.inner.lock().unwrap().map.contains_key(key)
     }
 
+    /// Mark tensors that live independently of the cache (the model
+    /// store's params) as budget-exempt: entries referencing them are
+    /// charged only for their own fresh payloads.  Call before the first
+    /// `put` (the engine does, at construction).
+    pub fn exempt_baseline<'a, I>(&self, tensors: I)
+    where
+        I: IntoIterator<Item = &'a Arc<Tensor>>,
+    {
+        let mut inner = self.inner.lock().unwrap();
+        for t in tensors {
+            inner.bytes.exempt.insert(Arc::as_ptr(t) as usize);
+        }
+    }
+
     /// Insert (or replace), then evict LRU entries until both the entry cap
-    /// and the byte budget hold.  Entries larger than the whole budget are
-    /// not cached at all.  Returns the evicted entries so a persistence
-    /// tier can spill them to disk instead of dropping the work.
+    /// and the unique-byte budget hold.  Entries whose *standalone* unique
+    /// footprint (distinct non-exempt allocations — what they'd occupy
+    /// alone) exceeds the whole budget are not cached at all; everything
+    /// smaller can in principle fit after evictions.  Returns the evicted
+    /// entries so a persistence tier can spill them to disk instead of
+    /// dropping the work.
     pub fn put(
         &self,
         key: QuantKey,
         entry: Arc<CacheEntry>,
     ) -> Vec<(QuantKey, Arc<CacheEntry>)> {
-        if self.cap == 0 || entry.bytes > self.byte_budget {
+        if self.cap == 0 {
             return Vec::new();
         }
         let mut inner = self.inner.lock().unwrap();
+        if inner.bytes.standalone(&entry.params) > self.byte_budget {
+            return Vec::new();
+        }
         inner.tick += 1;
         let tick = inner.tick;
-        let added = entry.bytes;
+        inner.bytes.charge(&entry.params);
         if let Some((old, _)) = inner.map.insert(key, (entry, tick)) {
-            inner.bytes -= old.bytes;
+            inner.bytes.discharge(&old.params);
         }
-        inner.bytes += added;
         let mut evicted = Vec::new();
-        while inner.map.len() > self.cap || inner.bytes > self.byte_budget {
+        while inner.map.len() > self.cap || inner.bytes.total > self.byte_budget
+        {
             let victim = inner
                 .map
                 .iter()
@@ -124,7 +220,7 @@ impl Cache {
                 .map(|(k, _)| k.clone());
             let Some(victim) = victim else { break };
             if let Some((gone, _)) = inner.map.remove(&victim) {
-                inner.bytes -= gone.bytes;
+                inner.bytes.discharge(&gone.params);
                 inner.evictions += 1;
                 evicted.push((victim, gone));
             }
@@ -140,8 +236,10 @@ impl Cache {
         self.len() == 0
     }
 
+    /// Unique resident bytes: every distinct tensor allocation referenced
+    /// by at least one entry, counted once.
     pub fn bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+        self.inner.lock().unwrap().bytes.total
     }
 
     pub fn evictions(&self) -> u64 {
@@ -238,6 +336,96 @@ mod tests {
         let evicted = cache.put(key("c"), entry(4));
         assert_eq!(evicted.len(), 1);
         assert_eq!(evicted[0].0, key("a"));
+    }
+
+    /// Structural sharing: two entries referencing the SAME `Arc<Tensor>`
+    /// (e.g. an FP32-override layer shared with a sibling key) charge its
+    /// payload once; evicting one keeps the other's charge; evicting both
+    /// releases it.
+    #[test]
+    fn shared_tensors_are_charged_once() {
+        fn key_w(name: &str, wbits: usize) -> QuantKey {
+            QuantKey {
+                model: name.to_string(),
+                spec: QuantSpec::uniform(Method::squant_full(), wbits, 0),
+            }
+        }
+        fn entry_with(params: Params) -> Arc<CacheEntry> {
+            let bytes = params_bytes(&params);
+            Arc::new(CacheEntry {
+                params,
+                act: None,
+                report: QuantReport {
+                    layers: Vec::new(),
+                    total_ms: 0.0,
+                    wall_ms: 0.0,
+                },
+                bytes,
+            })
+        }
+        let shared = Arc::new(Tensor::zeros(&[100])); // 464 bytes
+        let mut p1 = Params::new();
+        p1.insert("fp32", Arc::clone(&shared));
+        let mut p2 = Params::new();
+        p2.insert("fp32", Arc::clone(&shared));
+        p2.insert("own", Tensor::zeros(&[100]));
+
+        let cache = Cache::new(16, usize::MAX);
+        cache.put(key_w("m", 4), entry_with(p1));
+        assert_eq!(cache.bytes(), 464);
+        cache.put(key_w("m", 8), entry_with(p2));
+        assert_eq!(cache.bytes(), 928, "shared tensor not double-charged");
+
+        // Evict the w4 entry by shrinking the cap indirectly: replace it
+        // so the old copy discharges — shared tensor stays charged via w8.
+        let mut p3 = Params::new();
+        p3.insert("other", Tensor::zeros(&[100]));
+        cache.put(key_w("m", 4), entry_with(p3));
+        assert_eq!(
+            cache.bytes(),
+            1392,
+            "swap discharges only the replaced entry's unshared reference"
+        );
+
+        let cache2 = Cache::new(1, usize::MAX);
+        let mut q1 = Params::new();
+        q1.insert("fp32", Arc::clone(&shared));
+        let mut q2 = Params::new();
+        q2.insert("fp32", Arc::clone(&shared));
+        cache2.put(key_w("a", 4), entry_with(q1));
+        let evicted = cache2.put(key_w("b", 4), entry_with(q2));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(cache2.bytes(), 464, "survivor keeps the charge");
+    }
+
+    /// Budget-exempt baseline: store-shared tensors cost the cache
+    /// nothing, so an entry whose FULL footprint dwarfs the budget is
+    /// still cacheable when its own fresh payload fits — the
+    /// mostly-FP32-override scenario the unique-byte accounting exists
+    /// for.
+    #[test]
+    fn exempt_baseline_tensors_are_free() {
+        let store_w = Arc::new(Tensor::zeros(&[1000])); // 4064 B "fp32 layer"
+        let cache = Cache::new(16, 500); // budget far below the store tensor
+        cache.exempt_baseline([&store_w]);
+        let mut params = Params::new();
+        params.insert("fp32", Arc::clone(&store_w));
+        params.insert("own", Tensor::zeros(&[100])); // 464 B fresh payload
+        let bytes = params_bytes(&params); // full footprint: 4528 B
+        let entry = Arc::new(CacheEntry {
+            params,
+            act: None,
+            report: QuantReport {
+                layers: Vec::new(),
+                total_ms: 0.0,
+                wall_ms: 0.0,
+            },
+            bytes,
+        });
+        assert!(entry.bytes > 500, "full footprint exceeds the budget");
+        cache.put(key("m"), Arc::clone(&entry));
+        assert_eq!(cache.len(), 1, "standalone screen ignores exempt bytes");
+        assert_eq!(cache.bytes(), 464, "only the fresh payload is charged");
     }
 
     #[test]

@@ -138,6 +138,12 @@ pub struct Metrics {
     pub lat_all: Histogram,
     pub lat_quantize: Histogram,
     pub lat_eval: Histogram,
+    /// Quantize flights: admission → first layer task starts (scheduler
+    /// queue wait).
+    pub lat_queue: Histogram,
+    /// Quantize flights: first layer task starts → artifact assembled
+    /// (pure compute + task interleaving).
+    pub lat_compute: Histogram,
 }
 
 impl Default for Metrics {
@@ -167,6 +173,8 @@ impl Metrics {
             lat_all: Histogram::new(),
             lat_quantize: Histogram::new(),
             lat_eval: Histogram::new(),
+            lat_queue: Histogram::new(),
+            lat_compute: Histogram::new(),
         }
     }
 
@@ -214,7 +222,9 @@ impl Metrics {
                 Json::obj()
                     .set("all", self.lat_all.to_json())
                     .set("quantize", self.lat_quantize.to_json())
-                    .set("eval", self.lat_eval.to_json()),
+                    .set("eval", self.lat_eval.to_json())
+                    .set("queue", self.lat_queue.to_json())
+                    .set("compute", self.lat_compute.to_json()),
             )
     }
 }

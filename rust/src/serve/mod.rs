@@ -25,8 +25,21 @@
 //! ```
 //!
 //! The engine owns all heavy compute: quantization *and* accuracy
-//! evaluation run as scheduler jobs, so total CPU pressure is bounded by
-//! `--workers` no matter how many connections are open.
+//! evaluation run on the one persistent worker pool, so total CPU
+//! pressure is bounded by `--workers` no matter how many connections are
+//! open — and no code on the request path ever spawns a thread.
+//!
+//! **Layer-task pipeline.**  A quantize flight is not one opaque job: the
+//! engine plans it into per-layer tasks (`coordinator::plan_layers`, cost
+//! `M·N·K × bits` each), admits the flight by total predicted cost
+//! (`sched::try_admit`), then spreads the tasks over the pool with
+//! virtual-time keys (`vnow() + cost prefix sums`), so tasks from all
+//! in-flight requests interleave cost-fairly instead of head-of-line
+//! blocking on whole requests.  Each flight's [`Assembly`] tracks
+//! multi-task completion: the last task home assembles the artifact
+//! (Arc-sharing untouched tensors with the model store), fills the cache,
+//! completes the single-flight key, notifies the requester, spills to
+//! disk, and only then releases the flight's admission ticket.
 //!
 //! Two request paths share every tier:
 //!
@@ -35,7 +48,7 @@
 //!   afford to block.
 //! * **Asynchronous** — [`Engine::submit`] never blocks: fast requests
 //!   resolve inline, slow ones are scheduled and the `done` callback fires
-//!   from a worker when the job completes.  This is the path the
+//!   from a worker when the flight completes.  This is the path the
 //!   [`net`] reactor drives — one event-loop thread, responses delivered
 //!   through a completion channel + poller wakeup.
 
@@ -49,15 +62,17 @@ pub mod sched;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator;
 use crate::coordinator::server::ModelStore;
+use crate::coordinator::{LayerOutcome, LayerTask};
 use crate::eval;
 use crate::io::dataset::Dataset;
 use crate::nn::actrange::data_free_ranges;
+use crate::nn::Params;
 use crate::quant::spec::QuantSpec;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -67,7 +82,7 @@ use cache::{params_bytes, Cache, CacheEntry, QuantKey};
 use disk::{DiskCache, Lookup};
 use flight::{AsyncRole, Flight, Role};
 use metrics::Metrics;
-use sched::{Scheduler, Submit};
+use sched::{CostTicket, Scheduler, Submit, COST_UNIT};
 
 /// Serving configuration (CLI: `--workers`, `--queue-depth`, `--cache-cap`,
 /// `--cache-mb`, `--cache-dir`, `--cache-disk-mb`, `--max-conns`,
@@ -182,6 +197,36 @@ struct EvalTask {
     batch: usize,
 }
 
+/// Multi-task completion state for one admitted quantize flight.
+///
+/// Every layer task holds an `Arc<Assembly>`; each stores its
+/// [`LayerOutcome`] into its slot and decrements `remaining`.  The task
+/// that brings `remaining` to zero — the *last task home* — assembles the
+/// artifact and publishes it (see [`Engine::finish_assembly`]).  The
+/// admission [`CostTicket`] lives here so the flight's predicted cost
+/// stays reserved until the artifact is published.
+struct Assembly {
+    key: QuantKey,
+    /// The model's source params, Arc-share-cloned: assembly replaces
+    /// only the quantized layers, everything else keeps pointing at the
+    /// store's tensors.
+    base: Params,
+    abits: usize,
+    /// One slot per planned layer task; `None` after completion means the
+    /// task panicked.
+    slots: Mutex<Vec<Option<LayerOutcome>>>,
+    remaining: AtomicUsize,
+    /// When the flight was admitted (queue-wait starts here).
+    t_admit: Instant,
+    /// When the first layer task started (queue-wait ends, compute
+    /// starts).
+    t_first: Mutex<Option<Instant>>,
+    /// The requester's continuation (sync waiter channel or async
+    /// response glue); fired exactly once by the last task home.
+    notify: Mutex<Option<QuantCont>>,
+    ticket: Mutex<Option<CostTicket>>,
+}
+
 fn eval_params(req: &Json) -> (usize, usize) {
     let samples =
         req.get("samples").and_then(|b| b.as_usize().ok()).unwrap_or(512);
@@ -251,9 +296,6 @@ pub struct Engine {
     sched: Scheduler,
     /// Shared with the net reactor, which maintains the `conns.*` gauges.
     pub metrics: Arc<Metrics>,
-    /// Total hardware threads; each job's internal parallelism is sized
-    /// from this and the current load (see [`Engine::job_threads`]).
-    machine_threads: usize,
 }
 
 impl Engine {
@@ -279,23 +321,22 @@ impl Engine {
             }
             None => None,
         };
+        let cache =
+            Cache::new(cfg.cache_cap, cfg.cache_mb.saturating_mul(1 << 20));
+        // The store's tensors are alive for the engine's whole lifetime:
+        // entries sharing them (FP32/override layers, BN params) are
+        // charged only for their freshly quantized payloads.
+        for (_, params) in store.models.values() {
+            cache.exempt_baseline(params.values());
+        }
         Ok(Arc::new(Engine {
             store,
-            cache: Cache::new(cfg.cache_cap, cfg.cache_mb.saturating_mul(1 << 20)),
+            cache,
             disk,
             flight: Flight::new(),
             sched: Scheduler::new(workers, cfg.queue_depth),
             metrics,
-            machine_threads: default_threads(),
         }))
-    }
-
-    /// Per-job internal parallelism, adaptive to load: an idle server gives
-    /// a lone request the whole machine (matching the pre-subsystem
-    /// latency); under concurrent load the cores are split between the
-    /// admitted jobs.
-    fn job_threads(&self) -> usize {
-        (self.machine_threads / self.sched.pending().max(1)).max(1)
     }
 
     pub fn store(&self) -> &ModelStore {
@@ -613,24 +654,14 @@ impl Engine {
                 .set("cached", true)
                 .set("source", "disk");
         }
-        let eng = Arc::clone(self);
-        let k = key.clone();
-        match self.sched.try_submit(move || {
-            eng.compute_and_finish(&k, None::<fn(QuantOutcome)>);
-        }) {
-            Submit::Busy { retry_ms } => {
-                let err = ServeError::Busy { retry_ms };
-                self.flight.complete(&key, Err(err.clone()));
-                self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
-                err.to_json()
-            }
-            Submit::Accepted => {
-                self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
-                Json::obj()
-                    .set("ok", true)
-                    .set("key", key.label())
-                    .set("queued", true)
-            }
+        // The flight machinery completes the key and counts the metrics
+        // on either arm; warm has no requester to notify.
+        match self.start_flight(&key, Box::new(|_| {})) {
+            Err(e) => e.to_json(),
+            Ok(()) => Json::obj()
+                .set("ok", true)
+                .set("key", key.label())
+                .set("queued", true),
         }
     }
 
@@ -668,36 +699,31 @@ impl Engine {
                     .set("inflight", true),
             );
         }
-        match self.sched.try_reserve() {
-            Err(retry_ms) => {
-                let err = ServeError::Busy { retry_ms };
-                self.flight.complete(&key, Err(err.clone()));
-                self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
-                done(err.to_json());
-            }
-            Ok(ticket) => {
-                let eng = Arc::clone(self);
-                let k = key.clone();
-                self.sched.submit_reserved(ticket, move || {
-                    if let Some(entry) = eng.disk_probe(&k) {
-                        eng.flight.complete(&k, Ok(entry));
-                        return done(
-                            Json::obj()
+        match self.admit_flight(&key) {
+            Err(e) => done(e.to_json()),
+            Ok((tasks, ticket)) => {
+                // Warm answers at probe resolution (disk hit or queued) and
+                // has no requester to notify when the compute completes.
+                let label = key.label();
+                self.probe_then_spawn(
+                    &key,
+                    tasks,
+                    ticket,
+                    Box::new(move |hit| {
+                        done(match hit {
+                            Some(_) => Json::obj()
                                 .set("ok", true)
-                                .set("key", k.label())
+                                .set("key", label)
                                 .set("cached", true)
                                 .set("source", "disk"),
-                        );
-                    }
-                    eng.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
-                    done(
-                        Json::obj()
-                            .set("ok", true)
-                            .set("key", k.label())
-                            .set("queued", true),
-                    );
-                    eng.compute_and_finish(&k, None::<fn(QuantOutcome)>);
-                });
+                            None => Json::obj()
+                                .set("ok", true)
+                                .set("key", label)
+                                .set("queued", true),
+                        });
+                        None
+                    }),
+                );
             }
         }
     }
@@ -765,8 +791,25 @@ impl Engine {
                     .set("queue_depth", self.sched.queue_depth())
                     .set("pending", self.sched.pending())
                     .set(
+                        "cost_capacity_units",
+                        (self.sched.cost_capacity() / COST_UNIT) as usize,
+                    )
+                    .set(
                         "rejected_busy",
                         self.metrics.rejected_busy.load(Ordering::Relaxed) as usize,
+                    ),
+            )
+            // Layer-task gauges: the scheduler's live view of the one
+            // persistent pool plus the admitted-but-unfinished predicted
+            // cost (in COST_UNITs, rounded up).
+            .set(
+                "tasks",
+                Json::obj()
+                    .set("queued", self.sched.tasks_queued())
+                    .set("running", self.sched.tasks_running())
+                    .set(
+                        "cost_units",
+                        self.sched.cost_pending().div_ceil(COST_UNIT) as usize,
                     ),
             )
             .set(
@@ -812,40 +855,25 @@ impl Engine {
                     self.flight.complete(key, Ok(Arc::clone(&e)));
                     return Ok((e, Source::Disk));
                 }
+                // Plan → admit by cost → fan layer tasks over the pool;
+                // the last task home assembles and fires the channel.
                 let (tx, rx) = mpsc::channel();
-                let eng = Arc::clone(self);
-                let k = key.clone();
-                match self.sched.try_submit(move || {
-                    eng.compute_and_finish(
-                        &k,
-                        Some(move |res: QuantOutcome| {
-                            let _ = tx.send(res);
-                        }),
-                    );
-                }) {
-                    Submit::Busy { retry_ms } => {
-                        let err = ServeError::Busy { retry_ms };
+                let _ = self.start_flight(
+                    key,
+                    Box::new(move |res| {
+                        let _ = tx.send(res);
+                    }),
+                );
+                match rx.recv() {
+                    Ok(res) => res,
+                    Err(_) => {
+                        // The continuation was dropped unfired (pool torn
+                        // down mid-flight): release any waiters instead of
+                        // stranding the key forever.
+                        let err =
+                            ServeError::Failed("quantize worker dropped".into());
                         self.flight.complete(key, Err(err.clone()));
-                        self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
                         Err(err)
-                    }
-                    Submit::Accepted => {
-                        // Only an admitted compute counts as a miss;
-                        // busy-rejected leaders never ran anything.
-                        self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
-                        match rx.recv() {
-                            Ok(res) => res.map(|e| (e, Source::Computed)),
-                            Err(_) => {
-                                // The worker died before sending (a panic
-                                // inside the job): release any waiters
-                                // instead of stranding the key forever.
-                                let err = ServeError::Failed(
-                                    "quantize worker dropped".into(),
-                                );
-                                self.flight.complete(key, Err(err.clone()));
-                                Err(err)
-                            }
-                        }
                     }
                 }
             }
@@ -897,80 +925,310 @@ impl Engine {
                     cont(Ok((e, Source::Hit)));
                     return;
                 }
-                match self.sched.try_reserve() {
-                    Err(retry_ms) => {
-                        let err = ServeError::Busy { retry_ms };
-                        self.flight.complete(key, Err(err.clone()));
-                        self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
-                        cont(Err(err));
-                    }
-                    Ok(ticket) => {
-                        let eng = Arc::clone(self);
-                        let k = key.clone();
-                        self.sched.submit_reserved(ticket, move || {
-                            eng.leader_job(&k, cont);
-                        });
-                    }
-                }
+                self.start_flight_with_probe(key, cont);
             }
         }
     }
 
-    /// Leader's worker job on the async path: disk tier first (decode is
-    /// I/O + deserialization, a worker's job — never the reactor's), then
-    /// a full compute.
-    fn leader_job(&self, key: &QuantKey, cont: QuantCont) {
-        if let Some(e) = self.disk_probe(key) {
-            self.flight.complete(key, Ok(Arc::clone(&e)));
-            cont(Ok((e, Source::Disk)));
-            return;
-        }
-        // Only an actual compute counts as a miss — disk hits are neither
-        // hit nor miss and busy-rejected leaders never ran anything,
-        // matching the sync path's accounting exactly.
-        self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
-        self.compute_and_finish(
-            key,
-            Some(move |res: QuantOutcome| {
-                cont(res.map(|e| (e, Source::Computed)));
-            }),
-        );
+    // ---- layer-task flight machinery ---------------------------------------
+
+    /// Resolve the flight's spec into layer tasks (cheap — no tensor
+    /// work, safe on the reactor thread).
+    fn plan_flight(&self, key: &QuantKey) -> Result<Vec<LayerTask>, ServeError> {
+        let (graph, _) = self.store.models.get(&key.model).ok_or_else(|| {
+            ServeError::Failed(format!("unknown model '{}'", key.model))
+        })?;
+        coordinator::plan_layers(graph, &key.spec).map_err(ServeError::Failed)
     }
 
-    /// Worker-side: compute, publish to cache, release single-flight
-    /// waiters and the requester (via `notify`), then spill to disk.
-    /// Cache fill happens before `complete` so no request can observe
-    /// "not in flight, not cached" for a finished key; the write-through
-    /// disk spill happens strictly *after* `complete` and `notify`, so
-    /// neither the requester nor any waiter blocks on the artifact file
-    /// write.  Compute panics are converted to errors so `complete` always
-    /// runs — a stranded flight key would block every future request for
-    /// it (warm submits this without a receive-side recovery path).
-    fn compute_and_finish<N: FnOnce(QuantOutcome)>(
+    /// Publish a pre-compute failure: release waiters, then the requester.
+    fn fail_flight(&self, key: &QuantKey, err: ServeError, cont: QuantCont) {
+        self.flight.complete(key, Err(err.clone()));
+        cont(Err(err));
+    }
+
+    /// The one admission sequence every flight goes through: plan the
+    /// layer tasks, sum their predicted cost, reserve slot + cost.  On
+    /// failure (plan error / busy) the flight key is completed with the
+    /// error — the caller only has to deliver it to its requester.
+    fn admit_flight(
         &self,
         key: &QuantKey,
-        notify: Option<N>,
+    ) -> Result<(Vec<LayerTask>, CostTicket), ServeError> {
+        let tasks = self.plan_flight(key).inspect_err(|e| {
+            self.flight.complete(key, Err(e.clone()));
+        })?;
+        let cost = tasks.iter().map(|t| t.cost).sum();
+        match self.sched.try_admit(cost) {
+            Ok(ticket) => Ok((tasks, ticket)),
+            Err(retry_ms) => {
+                let err = ServeError::Busy { retry_ms };
+                self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                self.flight.complete(key, Err(err.clone()));
+                Err(err)
+            }
+        }
+    }
+
+    /// Plan, admit by predicted cost and fan out a flight this engine
+    /// leads, the disk tier having already been probed by the caller (the
+    /// sync path probes on the calling thread).  On success the layer
+    /// tasks are queued and `cont` fires from the last task's worker; on
+    /// failure (plan error / busy) the flight is completed with the
+    /// error, `cont` fires inline, and the error is also returned for
+    /// callers that answer synchronously (`warm`).
+    fn start_flight(
+        self: &Arc<Self>,
+        key: &QuantKey,
+        cont: QuantCont,
+    ) -> Result<(), ServeError> {
+        match self.admit_flight(key) {
+            Err(e) => {
+                cont(Err(e.clone()));
+                Err(e)
+            }
+            Ok((tasks, ticket)) => {
+                // Only an admitted compute counts as a miss; busy-rejected
+                // leaders never ran anything.
+                self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                self.spawn_tasks(key, tasks, ticket, Instant::now(), cont);
+                Ok(())
+            }
+        }
+    }
+
+    /// Probe-then-spawn prologue for an admitted flight, as the flight's
+    /// first pool job — artifact file decode must never run on the
+    /// reactor thread.  A disk hit completes the flight, releases the
+    /// admission ticket without spawning any layer task, and hands the
+    /// entry to `on_probe(Some(entry))`; a miss counts the cache miss and
+    /// fans out the layer tasks with the continuation `on_probe(None)`
+    /// returns (None = fire-and-forget, e.g. `warm`).
+    fn probe_then_spawn(
+        self: &Arc<Self>,
+        key: &QuantKey,
+        tasks: Vec<LayerTask>,
+        ticket: CostTicket,
+        on_probe: Box<
+            dyn FnOnce(Option<Arc<CacheEntry>>) -> Option<QuantCont> + Send,
+        >,
     ) {
+        let t_admit = Instant::now();
+        let eng = Arc::clone(self);
+        let k = key.clone();
+        self.sched.submit_task(self.sched.vnow(), move || {
+            if let Some(e) = eng.disk_probe(&k) {
+                eng.flight.complete(&k, Ok(Arc::clone(&e)));
+                drop(ticket);
+                on_probe(Some(e));
+                return;
+            }
+            // Only an actual compute counts as a miss — disk hits are
+            // neither hit nor miss, matching the sync path.
+            eng.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+            let cont = on_probe(None).unwrap_or_else(|| Box::new(|_| {}));
+            eng.spawn_tasks(&k, tasks, ticket, t_admit, cont);
+        });
+    }
+
+    /// Async-path counterpart of [`Engine::start_flight`]: admits first
+    /// (inline, so a busy rejection answers without touching a worker),
+    /// then probes the disk tier on a worker before fanning out.
+    fn start_flight_with_probe(self: &Arc<Self>, key: &QuantKey, cont: QuantCont) {
+        match self.admit_flight(key) {
+            Err(e) => cont(Err(e)),
+            Ok((tasks, ticket)) => self.probe_then_spawn(
+                key,
+                tasks,
+                ticket,
+                Box::new(move |hit| match hit {
+                    Some(e) => {
+                        cont(Ok((e, Source::Disk)));
+                        None
+                    }
+                    None => Some(cont),
+                }),
+            ),
+        }
+    }
+
+    /// Fan an admitted flight's layer tasks over the persistent pool with
+    /// virtual-time keys (`vnow() + cost prefix sums`), so tasks from
+    /// concurrent flights interleave by predicted cost.  The weight
+    /// tensors are bound up front as `Arc` clones — no payload copies,
+    /// and a missing tensor fails the whole flight before any task runs.
+    fn spawn_tasks(
+        self: &Arc<Self>,
+        key: &QuantKey,
+        tasks: Vec<LayerTask>,
+        ticket: CostTicket,
+        t_admit: Instant,
+        cont: QuantCont,
+    ) {
+        // The store is immutable for the engine's lifetime and admission
+        // already planned against this model's graph, so the lookup can
+        // only succeed (plan_flight rejected unknown models pre-ticket).
+        let (_, params) = self
+            .store
+            .models
+            .get(&key.model)
+            .expect("model validated at admission");
+        let mut bound = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            match params.shared(&task.layer.weight) {
+                Some(w) => bound.push((task, Arc::clone(w))),
+                None => {
+                    let weight = task.layer.weight.clone();
+                    drop(ticket);
+                    return self.fail_flight(
+                        key,
+                        ServeError::Failed(format!(
+                            "missing weight tensor '{weight}'"
+                        )),
+                        cont,
+                    );
+                }
+            }
+        }
+        let asm = Arc::new(Assembly {
+            key: key.clone(),
+            base: params.clone(),
+            abits: key.spec.abits,
+            slots: Mutex::new((0..bound.len()).map(|_| None).collect()),
+            remaining: AtomicUsize::new(bound.len()),
+            t_admit,
+            t_first: Mutex::new(None),
+            notify: Mutex::new(Some(cont)),
+            ticket: Mutex::new(Some(ticket)),
+        });
+        if asm.remaining.load(Ordering::Relaxed) == 0 {
+            // Degenerate model with no quantizable layers: nothing to
+            // interleave, assemble as one task.
+            let eng = Arc::clone(self);
+            let a = Arc::clone(&asm);
+            self.sched
+                .submit_task(self.sched.vnow(), move || eng.finish_assembly(&a));
+            return;
+        }
+        let mut vkey = self.sched.vnow();
+        for (i, (task, w)) in bound.into_iter().enumerate() {
+            let start = vkey;
+            vkey = vkey.saturating_add(task.cost);
+            let eng = Arc::clone(self);
+            let a = Arc::clone(&asm);
+            self.sched.submit_task(start, move || {
+                a.t_first.lock().unwrap().get_or_insert_with(Instant::now);
+                // Contain per-task panics: a `None` slot fails the flight
+                // at assembly instead of stranding the single-flight key.
+                let out =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || coordinator::run_layer_task(&task, &w),
+                    ))
+                    .ok();
+                a.slots.lock().unwrap()[i] = out;
+                if a.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    eng.finish_assembly(&a);
+                }
+            });
+        }
+    }
+
+    /// Last-task-home completion: assemble the artifact, record the
+    /// queue/compute latency split, publish to cache, release
+    /// single-flight waiters and the requester, spill to disk, and only
+    /// then release the flight's admission ticket.  Cache fill happens
+    /// before `complete` so no request can observe "not in flight, not
+    /// cached" for a finished key; the write-through disk spill happens
+    /// strictly *after* `complete` and the notify, so neither the
+    /// requester nor any waiter blocks on the artifact file write.
+    /// Assembly panics are converted to errors so `complete` always runs.
+    fn finish_assembly(&self, asm: &Assembly) {
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.compute_entry(key)
+            self.assemble_entry(asm)
         }))
         .unwrap_or_else(|_| {
             Err(ServeError::Failed(format!(
-                "quantize job panicked for {}", key.label()
+                "quantize assembly panicked for {}",
+                asm.key.label()
             )))
         });
+        // One queue/compute sample per flight that produced an artifact —
+        // failed flights (task panic, vanished model) would skew the
+        // split with near-zero compute times exactly when things go wrong.
+        if res.is_ok() {
+            let now = Instant::now();
+            let t_first = asm.t_first.lock().unwrap().unwrap_or(now);
+            self.metrics
+                .lat_queue
+                .record_ms((t_first - asm.t_admit).as_secs_f64() * 1e3);
+            self.metrics
+                .lat_compute
+                .record_ms((now - t_first).as_secs_f64() * 1e3);
+        }
         let evicted = match &res {
-            Ok(entry) => self.cache.put(key.clone(), Arc::clone(entry)),
+            Ok(entry) => self.cache.put(asm.key.clone(), Arc::clone(entry)),
             Err(_) => Vec::new(),
         };
-        self.flight.complete(key, res.clone());
-        if let Some(notify) = notify {
-            notify(res.clone());
+        self.flight.complete(&asm.key, res.clone());
+        // The artifact is published: release the admission ticket BEFORE
+        // the notify — an async eval's continuation runs its accuracy
+        // stage inline here, and holding the flight's whole predicted
+        // cost through it would wedge the cost axis for seconds.
+        drop(asm.ticket.lock().unwrap().take());
+        if let Some(notify) = asm.notify.lock().unwrap().take() {
+            notify(res.clone().map(|e| (e, Source::Computed)));
         }
+        // Write-through spill stays after the notify so the requester
+        // never blocks on the artifact file write (an inline eval delays
+        // persistence, but spilling is best-effort by design).
         if let Ok(entry) = &res {
-            self.spill(key, entry);
+            self.spill(&asm.key, entry);
             self.spill_evicted(evicted);
         }
+    }
+
+    /// Fold the flight's layer outcomes into a cache entry.  Untouched
+    /// (FP32) layers and non-weight tensors stay Arc-shared with the
+    /// model store — the entry, the store and sibling mixed-precision
+    /// entries all point at one allocation.
+    fn assemble_entry(&self, asm: &Assembly) -> QuantOutcome {
+        let outcomes: Vec<LayerOutcome> = {
+            let mut slots = asm.slots.lock().unwrap();
+            let mut v = Vec::with_capacity(slots.len());
+            for (i, s) in slots.iter_mut().enumerate() {
+                match s.take() {
+                    Some(o) => v.push(o),
+                    None => {
+                        return Err(ServeError::Failed(format!(
+                            "layer task {i} panicked for {}",
+                            asm.key.label()
+                        )))
+                    }
+                }
+            }
+            v
+        };
+        let wall_ms = asm
+            .t_first
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        let (qparams, report) = coordinator::assemble(&asm.base, outcomes, wall_ms);
+        let act = if asm.abits > 0 {
+            let (graph, _) =
+                self.store.models.get(&asm.key.model).ok_or_else(|| {
+                    ServeError::Failed(format!(
+                        "unknown model '{}'",
+                        asm.key.model
+                    ))
+                })?;
+            Some(data_free_ranges(graph, &qparams, asm.abits))
+        } else {
+            None
+        };
+        let bytes = params_bytes(&qparams);
+        Ok(Arc::new(CacheEntry { params: qparams, act, report, bytes }))
     }
 
     // ---- disk tier ---------------------------------------------------------
@@ -1024,28 +1282,6 @@ impl Engine {
         }
     }
 
-    fn compute_entry(&self, key: &QuantKey) -> QuantOutcome {
-        let (graph, params) = self
-            .store
-            .models
-            .get(&key.model)
-            .ok_or_else(|| ServeError::Failed(format!("unknown model '{}'", key.model)))?;
-        // One per-layer compute path for every servable spec — squant stage
-        // sets, rtn, mse-grid scales and per-layer overrides all resolve
-        // inside the coordinator, with per-layer timing/bits in the report.
-        let (qparams, report) = coordinator::quantize_model_spec(
-            graph,
-            params,
-            &key.spec,
-            self.job_threads(),
-        )
-        .map_err(ServeError::Failed)?;
-        let abits = key.spec.abits;
-        let act = (abits > 0).then(|| data_free_ranges(graph, &qparams, abits));
-        let bytes = params_bytes(&qparams);
-        Ok(Arc::new(CacheEntry { params: qparams, act, report, bytes }))
-    }
-
     fn run_accuracy(
         &self,
         key: &QuantKey,
@@ -1062,13 +1298,16 @@ impl Engine {
             .test_subset(samples)
             .ok_or_else(|| "no test data loaded".to_string())?;
         let n = ds.len();
+        // threads = 1: accuracy runs inline on the one admitted worker —
+        // no scoped thread team on the request path.  Concurrent eval
+        // requests parallelize across workers instead of inside one.
         let acc = eval::accuracy(
             graph,
             &entry.params,
             entry.act.as_ref(),
             &ds,
             batch.max(1),
-            self.job_threads(),
+            1,
         )
         .map_err(|e| format!("{e:#}"))?;
         Ok((acc, n))
@@ -1636,6 +1875,166 @@ mod tests {
         engine.submit(&quantize_req(), Box::new(move |r| tx.send(r).unwrap()));
         let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true), "{}", resp.dump());
+    }
+
+    /// Layer-task pipeline acceptance #1: N concurrent quantizes of
+    /// distinct keys all finish while the engine spawns ZERO new threads —
+    /// layer tasks from every flight interleave on the one pre-spawned
+    /// pool (the old path forked a scoped `parallel_map` team inside each
+    /// worker job).  Thread count is read from /proc as in
+    /// rust/tests/net_reactor.rs; a small slack absorbs unrelated test
+    /// threads in the shared harness process.
+    #[test]
+    fn concurrent_distinct_keys_share_one_pool_without_new_threads() {
+        let engine = Engine::new(
+            tiny_store(),
+            EngineCfg { workers: 2, queue_depth: 16, cache_cap: 16, ..cfg() },
+        )
+        .unwrap();
+        #[cfg(target_os = "linux")]
+        let base = std::fs::read_dir("/proc/self/task").unwrap().count();
+        let specs =
+            ["w4", "w8", "w4:rtn", "w4:squant-ek", "w8;wfc=w4", "w4a8"];
+        let (tx, rx) = mpsc::channel();
+        for s in specs {
+            let tx = tx.clone();
+            let req = Json::obj()
+                .set("cmd", "quantize")
+                .set("model", "tiny")
+                .set("spec", s);
+            engine.submit(&req, Box::new(move |r| tx.send(r).unwrap()));
+        }
+        #[cfg(target_os = "linux")]
+        let mut peak = 0usize;
+        let mut got = 0usize;
+        while got < specs.len() {
+            #[cfg(target_os = "linux")]
+            {
+                peak = peak
+                    .max(std::fs::read_dir("/proc/self/task").unwrap().count());
+            }
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(resp) => {
+                    assert_eq!(
+                        resp.req("ok").unwrap(),
+                        &Json::Bool(true),
+                        "{}",
+                        resp.dump()
+                    );
+                    assert_eq!(
+                        resp.req("source").unwrap().as_str().unwrap(),
+                        "fresh"
+                    );
+                    got += 1;
+                }
+                Err(e) => panic!("flight never completed: {e}"),
+            }
+        }
+        engine.sched.wait_idle();
+        #[cfg(target_os = "linux")]
+        assert!(
+            peak <= base + 3,
+            "6 concurrent flights must not fork thread teams: \
+             base {base}, peak {peak}"
+        );
+        assert_eq!(engine.cache.len(), specs.len(), "all keys cached");
+    }
+
+    /// Layer-task pipeline acceptance #2 (pinned): artifacts produced by
+    /// the task pipeline are bit-identical to a `threads = 1` serial run
+    /// of the same planner, for plain, mixed-stage, mse-grid and
+    /// override'd (w8/rtn/fp32) specs.
+    #[test]
+    fn layer_task_artifacts_bit_identical_to_serial() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        for spec_s in [
+            "w4",
+            "w8a8",
+            "w4:squant-ek:mse-grid",
+            "w4;wfc=w8/rtn",
+            "w4;w1=fp32",
+        ] {
+            let req = Json::obj()
+                .set("cmd", "quantize")
+                .set("model", "tiny")
+                .set("spec", spec_s);
+            let r = engine.handle(&req);
+            assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+            let spec = QuantSpec::parse(spec_s).unwrap();
+            let entry = engine
+                .cache
+                .get(&QuantKey { model: "tiny".into(), spec: spec.clone() })
+                .expect(spec_s);
+            let (serial, serial_report) =
+                coordinator::quantize_model_spec(&g, &p, &spec, 1).unwrap();
+            for layer in g.quant_layers() {
+                assert_eq!(
+                    entry.params[&layer.weight].data,
+                    serial[&layer.weight].data,
+                    "{spec_s}: {} diverges from the serial path",
+                    layer.weight
+                );
+            }
+            let flips = |rep: &coordinator::QuantReport| {
+                rep.layers
+                    .iter()
+                    .map(|l| (l.weight.clone(), (l.bits, l.flips_k, l.flips_c)))
+                    .collect::<std::collections::BTreeMap<_, _>>()
+            };
+            assert_eq!(flips(&entry.report), flips(&serial_report), "{spec_s}");
+        }
+    }
+
+    /// Layer-task pipeline acceptance #3: an FP32-override layer is ONE
+    /// `Arc<Tensor>` allocation shared between the model store, the cache
+    /// entry and sibling mixed-precision entries — and the cache's
+    /// unique-byte accounting charges it once.
+    #[test]
+    fn fp32_override_layer_shares_one_arc_allocation() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        for spec_s in ["w4;w1=fp32", "w8;w1=fp32"] {
+            let req = Json::obj()
+                .set("cmd", "quantize")
+                .set("model", "tiny")
+                .set("spec", spec_s);
+            let r = engine.handle(&req);
+            assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        }
+        let get = |s: &str| {
+            engine
+                .cache
+                .get(&QuantKey {
+                    model: "tiny".into(),
+                    spec: QuantSpec::parse(s).unwrap(),
+                })
+                .unwrap()
+        };
+        let (e4, e8) = (get("w4;w1=fp32"), get("w8;w1=fp32"));
+        let (_, store_params) = &engine.store.models["tiny"];
+        assert!(
+            Arc::ptr_eq(
+                e4.params.shared("w1").unwrap(),
+                store_params.shared("w1").unwrap()
+            ),
+            "request params share the store's tensor"
+        );
+        assert!(
+            Arc::ptr_eq(
+                e4.params.shared("w1").unwrap(),
+                e8.params.shared("w1").unwrap()
+            ),
+            "sibling mixed-precision keys share it too"
+        );
+        // Unique-byte accounting: resident bytes are strictly less than
+        // the sum of the entries' full footprints (w1 + the bn tensors
+        // are all shared).
+        assert!(
+            engine.cache.bytes() < e4.bytes + e8.bytes,
+            "unique {} vs full {}",
+            engine.cache.bytes(),
+            e4.bytes + e8.bytes
+        );
     }
 
     #[test]

@@ -1,16 +1,35 @@
 //! Bounded job scheduler: a fixed worker pool (reusing
-//! [`crate::util::pool::ThreadPool`]) fronted by an admission limit.
+//! [`crate::util::pool::ThreadPool`]) fronted by a two-dimensional
+//! admission limit — request slots *and* predicted cost units.
 //!
-//! Capacity = workers + queue depth.  [`Scheduler::try_submit`] reserves a
-//! slot with a CAS loop, so concurrent submitters can never overshoot; when
-//! the system is full it returns [`Submit::Busy`] immediately with a retry
-//! hint instead of queueing unboundedly — the serving layer turns that into
-//! `{"ok":false,"error":"busy","retry_ms":...}` backpressure.
+//! Slot capacity = workers + queue depth, reserved with a CAS loop so
+//! concurrent submitters can never overshoot.  Quantize flights
+//! additionally declare their predicted cost (Σ layer `M·N·K × bits`, see
+//! [`crate::coordinator::plan_layers`]) and are admitted only while the
+//! total cost in the system stays under
+//! `(workers + queue_depth) × COST_UNIT` — so one giant model consumes
+//! the budget many small requests would, instead of counting as "one
+//! job".  Admission is work-conserving: a flight is admitted whenever
+//! the cost axis has *any* headroom (its own cost may overshoot the
+//! budget by one flight), so an over-budget model is never starved
+//! waiting for an exact-idle instant.  When full on either axis the
+//! scheduler returns
+//! [`Submit::Busy`] immediately with a retry hint scaled by the *queued
+//! cost*, not the queued request count — the serving layer turns that
+//! into `{"ok":false,"error":"busy","retry_ms":...}` backpressure.
+//!
+//! Admitted flights then spread their layer tasks over the pool through
+//! [`Scheduler::submit_task`] (weighted, no extra slot accounting: the
+//! task volume is bounded by the flight's [`CostTicket`]).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::util::pool::ThreadPool;
+
+/// One admission cost unit in weight-element-bits (1 Mi ≈ one mid-sized
+/// conv layer at 8 bits).  `retry_ms` scales at 25 ms per queued unit.
+pub const COST_UNIT: u64 = 1 << 20;
 
 /// Admission result.
 #[derive(Debug)]
@@ -43,11 +62,32 @@ pub struct Ticket {
     guard: SlotGuard,
 }
 
+/// Releases reserved cost units when dropped.
+struct CostGuard {
+    cost: u64,
+    in_system: Arc<AtomicU64>,
+}
+
+impl Drop for CostGuard {
+    fn drop(&mut self) {
+        self.in_system.fetch_sub(self.cost, Ordering::SeqCst);
+    }
+}
+
+/// An admitted quantize flight: one request slot plus its predicted cost
+/// units (see [`Scheduler::try_admit`]).  Held by the flight's assembly
+/// until the artifact is published; dropping it releases both dimensions.
+pub struct CostTicket {
+    _slot: Ticket,
+    _cost: CostGuard,
+}
+
 pub struct Scheduler {
     pool: ThreadPool,
     workers: usize,
     queue_depth: usize,
     in_system: Arc<AtomicUsize>,
+    cost_in_system: Arc<AtomicU64>,
 }
 
 impl Scheduler {
@@ -58,6 +98,7 @@ impl Scheduler {
             workers,
             queue_depth,
             in_system: Arc::new(AtomicUsize::new(0)),
+            cost_in_system: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -79,11 +120,34 @@ impl Scheduler {
         self.workers + self.queue_depth
     }
 
-    /// Rough drain estimate for rejected clients: ~25 ms per queued job
-    /// ahead of them, clamped to [25, 2000] ms.
+    /// Predicted cost units currently admitted and unfinished.
+    pub fn cost_pending(&self) -> u64 {
+        self.cost_in_system.load(Ordering::SeqCst)
+    }
+
+    /// Cost budget: one [`COST_UNIT`] per admission slot.
+    pub fn cost_capacity(&self) -> u64 {
+        (self.capacity() as u64).saturating_mul(COST_UNIT)
+    }
+
+    /// Layer tasks waiting in the pool queue (gauge).
+    pub fn tasks_queued(&self) -> usize {
+        self.pool.queued()
+    }
+
+    /// Layer tasks executing right now (gauge).
+    pub fn tasks_running(&self) -> usize {
+        self.pool.running()
+    }
+
+    /// Rough drain estimate for rejected clients, scaled by the *queued
+    /// cost* ahead of them: ~25 ms per queued cost unit (with the queued
+    /// request count as a floor for cost-free jobs), clamped to
+    /// [25, 2000] ms.
     fn retry_hint(&self) -> u64 {
-        let queued = self.pending().saturating_sub(self.workers) as u64;
-        (25 * (queued + 1)).clamp(25, 2000)
+        let queued_jobs = self.pending().saturating_sub(self.workers) as u64;
+        let queued_units = self.cost_pending() / COST_UNIT;
+        (25 * (queued_jobs.max(queued_units) + 1)).clamp(25, 2000)
     }
 
     /// Reserve one admission slot without submitting work yet, or fail
@@ -112,11 +176,64 @@ impl Scheduler {
         Ok(Ticket { guard: SlotGuard(Arc::clone(&self.in_system)) })
     }
 
+    /// Admit a quantize flight of `cost` predicted units: reserves one
+    /// request slot *and* the cost, or fails with a retry hint.  Admission
+    /// requires free slot capacity and *any* headroom on the cost axis
+    /// (`cost_in_system < cost_capacity`) — the incoming flight's own cost
+    /// may overshoot the budget by one flight, a deliberate work-conserving
+    /// rule: a model bigger than the whole budget is admitted the moment
+    /// the axis has headroom rather than waiting for an exact-idle instant
+    /// it might never observe under sustained small-flight traffic.
+    /// Dropping the ticket releases both dimensions; hold it until the
+    /// flight's artifact is published.
+    pub fn try_admit(&self, cost: u64) -> Result<CostTicket, u64> {
+        let slot = self.try_reserve()?;
+        let mut cur = self.cost_in_system.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.cost_capacity() {
+                // `slot` drops here, releasing the request slot.
+                return Err(self.retry_hint());
+            }
+            match self.cost_in_system.compare_exchange(
+                cur,
+                cur.saturating_add(cost),
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        Ok(CostTicket {
+            _slot: slot,
+            _cost: CostGuard {
+                cost,
+                in_system: Arc::clone(&self.cost_in_system),
+            },
+        })
+    }
+
+    /// Submit one layer task of an already-admitted flight at virtual time
+    /// `key` (see [`ThreadPool::submit_at`]).  No slot accounting: task
+    /// volume is bounded by the flight's [`CostTicket`].
+    pub fn submit_task<F: FnOnce() + Send + 'static>(&self, key: u64, f: F) {
+        self.pool.submit_at(key, f);
+    }
+
+    /// The pool's current virtual time — the base for a new flight's task
+    /// keys (`vnow() + cost prefix sums`).
+    pub fn vnow(&self) -> u64 {
+        self.pool.vnow()
+    }
+
     /// Run `f` on the pool under an already-reserved slot; the slot is
-    /// released when the job finishes (panics included).
+    /// released when the job finishes (panics included).  Slot jobs are
+    /// weighted at one [`COST_UNIT`] of virtual time, so a sustained
+    /// stream of them (eval accuracy runs) interleaves fairly with
+    /// admitted flights' layer tasks instead of starving their tails.
     pub fn submit_reserved<F: FnOnce() + Send + 'static>(&self, ticket: Ticket, f: F) {
         let guard = ticket.guard;
-        self.pool.submit(move || {
+        self.pool.submit_weighted(COST_UNIT, move || {
             let _guard = guard;
             f();
         });
@@ -200,6 +317,69 @@ mod tests {
         let sched = Scheduler::new(0, 0);
         assert_eq!(sched.workers(), 1);
         assert_eq!(sched.capacity(), 1);
+    }
+
+    /// Cost admission: the budget is slots × COST_UNIT; a flight is
+    /// admitted whenever the cost axis has headroom (even an oversized
+    /// one — work-conserving, no starvation); once the axis is at or over
+    /// budget everything bounces; releasing the ticket restores both the
+    /// slot and the cost.
+    #[test]
+    fn cost_admission_bounds_and_headroom_rule() {
+        let sched = Scheduler::new(1, 1); // 2 slots, budget 2 * COST_UNIT
+        // A flight costing 10x the whole budget is admitted while the
+        // axis has headroom (here: idle).
+        let big = sched.try_admit(10 * COST_UNIT).expect("headroom admits");
+        assert_eq!(sched.cost_pending(), 10 * COST_UNIT);
+        // Now the cost axis is saturated: even a 1-unit flight bounces,
+        // with a retry hint scaled by the queued cost (clamped to 2 s).
+        let retry = sched.try_admit(1).expect_err("cost budget exhausted");
+        assert!(
+            retry >= 25 * 10,
+            "retry ({retry} ms) scales with the 10 queued cost units, \
+             not the single queued request"
+        );
+        assert_eq!(sched.pending(), 1, "the bounced flight freed its slot");
+        drop(big);
+        assert_eq!(sched.cost_pending(), 0);
+        assert_eq!(sched.pending(), 0);
+        // Two small flights fit the budget side by side.
+        let a = sched.try_admit(COST_UNIT).expect("fits");
+        let b = sched.try_admit(COST_UNIT).expect("fits next to a");
+        assert!(sched.try_admit(1).is_err(), "slots exhausted (2/2)");
+        drop((a, b));
+        sched.wait_idle();
+    }
+
+    /// Slot exhaustion rejects a cost admission even when the cost axis
+    /// has room (both dimensions must admit).
+    #[test]
+    fn cost_admission_requires_a_slot() {
+        let sched = Scheduler::new(1, 0); // 1 slot
+        let slot = sched.try_reserve().unwrap();
+        assert!(sched.try_admit(1).is_err(), "no slot left");
+        drop(slot);
+        let t = sched.try_admit(1).expect("slot back");
+        drop(t);
+    }
+
+    /// submit_task runs on the pool without consuming admission slots.
+    #[test]
+    fn submit_task_bypasses_slot_accounting() {
+        let sched = Scheduler::new(1, 0);
+        let ticket = sched.try_admit(5).unwrap();
+        let ran = Arc::new(AtomicUsize::new(0));
+        for i in 0..4 {
+            let r = Arc::clone(&ran);
+            sched.submit_task(i, move || {
+                r.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        sched.wait_idle();
+        assert_eq!(ran.load(Ordering::SeqCst), 4);
+        assert_eq!(sched.pending(), 1, "only the ticket's slot is held");
+        drop(ticket);
+        assert_eq!(sched.pending(), 0);
     }
 
     #[test]

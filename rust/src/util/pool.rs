@@ -2,12 +2,20 @@
 //!
 //! Two primitives:
 //!  * [`parallel_for`] — scoped fork-join over an index range, used by the
-//!    coordinator to quantize layers/channels concurrently;
-//!  * [`ThreadPool`] — a persistent pool with a submission queue, used by the
-//!    long-lived on-the-fly service.
+//!    CLI-side coordinator shim to quantize layers/channels concurrently;
+//!  * [`ThreadPool`] — a persistent pool with a *weighted* submission
+//!    queue, used by the long-lived on-the-fly service.  Jobs carry a
+//!    virtual-time key ([`ThreadPool::submit_at`]); workers always run the
+//!    smallest key first, so layer tasks from concurrent requests
+//!    interleave by predicted cost (start-time fair queueing) instead of
+//!    strict FIFO head-of-line blocking.  Plain [`ThreadPool::submit`]
+//!    enqueues at the current virtual time, which keeps unweighted jobs
+//!    FIFO among themselves.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 /// Number of worker threads to use by default.
@@ -73,65 +81,204 @@ unsafe impl<T> Send for SendPtr<T> {}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// A fixed-size thread pool with a shared FIFO queue.
+/// How a submission picks its virtual-time key (see [`ThreadPool`]).
+enum Key {
+    /// At the current virtual time (plain [`ThreadPool::submit`]).
+    Now,
+    /// Explicit key, clamped up to the current virtual time.
+    At(u64),
+    /// At the shared flow tag, advancing it by the given weight.
+    Flow(u64),
+}
+
+/// One queued job ordered by (virtual-time key, submission seq).  The seq
+/// tiebreak keeps equal-key jobs FIFO and makes the order total.
+struct QueuedJob {
+    key: u64,
+    seq: u64,
+    job: Job,
+}
+
+impl PartialEq for QueuedJob {
+    fn eq(&self, other: &Self) -> bool {
+        (self.key, self.seq) == (other.key, other.seq)
+    }
+}
+impl Eq for QueuedJob {}
+impl PartialOrd for QueuedJob {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedJob {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.key, self.seq).cmp(&(other.key, other.seq))
+    }
+}
+
+struct PoolState {
+    /// Min-heap on (key, seq) via `Reverse`.
+    heap: BinaryHeap<Reverse<QueuedJob>>,
+    /// Jobs accepted but not yet finished (queued + running).
+    pending: usize,
+    /// Jobs currently executing on a worker.
+    running: usize,
+    /// Virtual time: the largest key handed to a worker so far.  New
+    /// unweighted submissions and freshly admitted weighted batches start
+    /// here, so nobody can schedule themselves into the already-consumed
+    /// past (or starve behind an unbounded future).
+    vtime: u64,
+    /// Finish tag of the shared "flow" of [`ThreadPool::submit_weighted`]
+    /// jobs: each such job starts at `max(vtime, flow_tag)` and advances
+    /// the tag by its weight, so a sustained stream of them climbs past
+    /// explicitly-keyed batch tails instead of camping at `vtime` and
+    /// starving them.
+    flow_tag: u64,
+    seq: u64,
+    closed: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for jobs.
+    work: Condvar,
+    /// `wait()` parks here until `pending == 0`.
+    idle: Condvar,
+}
+
+/// A fixed-size thread pool with a weighted (virtual-time ordered)
+/// submission queue.  See the module docs for the scheduling model.
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    shared: Arc<PoolShared>,
     workers: Vec<thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
 }
 
 impl ThreadPool {
     pub fn new(threads: usize) -> Self {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                heap: BinaryHeap::new(),
+                pending: 0,
+                running: 0,
+                vtime: 0,
+                flow_tag: 0,
+                seq: 0,
+                closed: false,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        });
         let workers = (0..threads.max(1))
             .map(|_| {
-                let rx = Arc::clone(&rx);
-                let pending = Arc::clone(&pending);
+                let shared = Arc::clone(&shared);
                 thread::spawn(move || loop {
                     let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(job) => {
-                            // Contain panics: a panicking job must not kill
-                            // the worker or leak the pending count, or the
-                            // pool (and the serving scheduler above it)
-                            // deadlocks with queued jobs nobody will run.
-                            let _ = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(job),
-                            );
-                            let (lock, cv) = &*pending;
-                            let mut cnt = lock.lock().unwrap();
-                            *cnt -= 1;
-                            if *cnt == 0 {
-                                cv.notify_all();
+                        let mut st = shared.state.lock().unwrap();
+                        loop {
+                            if let Some(Reverse(qj)) = st.heap.pop() {
+                                st.vtime = st.vtime.max(qj.key);
+                                st.running += 1;
+                                break Some(qj.job);
                             }
+                            if st.closed {
+                                break None;
+                            }
+                            st = shared.work.wait(st).unwrap();
                         }
-                        Err(_) => break,
+                    };
+                    let Some(job) = job else { break };
+                    // Contain panics: a panicking job must not kill the
+                    // worker or leak the pending count, or the pool (and
+                    // the serving scheduler above it) deadlocks with
+                    // queued jobs nobody will run.
+                    let _ = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(job),
+                    );
+                    let mut st = shared.state.lock().unwrap();
+                    st.running -= 1;
+                    st.pending -= 1;
+                    if st.pending == 0 {
+                        shared.idle.notify_all();
                     }
                 })
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, pending }
+        ThreadPool { shared, workers }
     }
 
-    /// Submit a job.
+    /// Submit a job at the current virtual time (FIFO among plain
+    /// submissions).  NOTE: a *sustained* stream of plain jobs camps at
+    /// `vtime` and can starve explicitly-keyed batch tails — recurring
+    /// job sources should use [`ThreadPool::submit_weighted`] instead.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        {
-            let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
+        self.push(Key::Now, Box::new(f));
+    }
+
+    /// Submit a job that consumes `weight` units of virtual time: it is
+    /// enqueued at the shared flow tag (`max(vtime, flow_tag)`), which
+    /// then advances by `weight`.  Successive weighted jobs get strictly
+    /// increasing keys, so a stream of them interleaves fairly with
+    /// explicitly-keyed batches instead of perpetually outranking their
+    /// tails.
+    pub fn submit_weighted<F: FnOnce() + Send + 'static>(&self, weight: u64, f: F) {
+        self.push(Key::Flow(weight), Box::new(f));
+    }
+
+    /// Submit a job at an explicit virtual-time `key` (clamped up to the
+    /// current virtual time).  Callers spreading a batch of tasks assign
+    /// each task `vnow() + cost-prefix-sum`, which interleaves concurrent
+    /// batches by cost instead of queueing them back-to-back.
+    pub fn submit_at<F: FnOnce() + Send + 'static>(&self, key: u64, f: F) {
+        self.push(Key::At(key), Box::new(f));
+    }
+
+    /// Enqueue under the state lock.  The pending count and the queue are
+    /// updated atomically, and a closed queue (shutdown race) drops the
+    /// job *without* counting it — the old two-step
+    /// `pending += 1; tx.send().unwrap()` could panic after the increment
+    /// and leave `wait()` deadlocked on a job no worker would ever run.
+    fn push(&self, key: Key, job: Job) {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return;
         }
-        self.tx.as_ref().unwrap().send(Box::new(f)).unwrap();
+        let key = match key {
+            Key::Now => st.vtime,
+            Key::At(k) => k.max(st.vtime),
+            Key::Flow(weight) => {
+                let k = st.flow_tag.max(st.vtime);
+                st.flow_tag = k.saturating_add(weight);
+                k
+            }
+        };
+        st.seq += 1;
+        let seq = st.seq;
+        st.pending += 1;
+        st.heap.push(Reverse(QueuedJob { key, seq, job }));
+        drop(st);
+        self.shared.work.notify_one();
     }
 
     /// Jobs submitted but not yet finished (queued + running) — the
     /// admission signal for the serving scheduler's backpressure.
     pub fn pending(&self) -> usize {
-        let (lock, _) = &*self.pending;
-        *lock.lock().unwrap()
+        self.shared.state.lock().unwrap().pending
+    }
+
+    /// Jobs waiting in the queue (not yet picked up by a worker).
+    pub fn queued(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.pending - st.running
+    }
+
+    /// Jobs currently executing on a worker.
+    pub fn running(&self) -> usize {
+        self.shared.state.lock().unwrap().running
+    }
+
+    /// Current virtual time (the largest key a worker has started on).
+    pub fn vnow(&self) -> u64 {
+        self.shared.state.lock().unwrap().vtime
     }
 
     /// Number of worker threads.
@@ -141,17 +288,20 @@ impl ThreadPool {
 
     /// Block until every submitted job has finished.
     pub fn wait(&self) {
-        let (lock, cv) = &*self.pending;
-        let mut cnt = lock.lock().unwrap();
-        while *cnt > 0 {
-            cnt = cv.wait(cnt).unwrap();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.shared.idle.wait(st).unwrap();
         }
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.tx.take(); // close queue
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.shared.work.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -215,5 +365,117 @@ mod tests {
         pool.submit(|| {});
         pool.wait();
         pool.wait();
+    }
+
+    /// Weighted submission is start-time fair queueing: with the single
+    /// worker pinned, two queued batches execute strictly by virtual-time
+    /// key — a cheap batch admitted later overtakes the expensive tail of
+    /// an earlier one instead of waiting for the whole batch.
+    #[test]
+    fn weighted_batches_interleave_by_virtual_time() {
+        let pool = ThreadPool::new(1);
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        pool.submit(move || {
+            while !g.load(Ordering::SeqCst) {
+                thread::sleep(std::time::Duration::from_millis(1));
+            }
+        });
+        // Wait for the worker to pick up the gate job so the batches below
+        // are queued (not running) when the gate opens.
+        while pool.running() == 0 {
+            thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let order = Arc::new(Mutex::new(Vec::new()));
+        // Batch A: one huge layer then cost-100 tail; batch B: three cheap
+        // layers.  Keys are vnow() + cost prefix sums per batch.
+        for (tag, key) in
+            [("a0", 0u64), ("a1", 1000), ("b0", 0), ("b1", 10), ("b2", 20)]
+        {
+            let order = Arc::clone(&order);
+            pool.submit_at(key, move || {
+                order.lock().unwrap().push(tag);
+            });
+        }
+        gate.store(true, Ordering::SeqCst);
+        pool.wait();
+        assert_eq!(
+            *order.lock().unwrap(),
+            vec!["a0", "b0", "b1", "b2", "a1"],
+            "cheap batch B overtakes batch A's expensive tail"
+        );
+    }
+
+    /// A stream of flow-weighted jobs cannot starve an explicitly-keyed
+    /// batch tail: each flow job advances the shared tag by its weight,
+    /// so the tail (key = 3 weights ahead) runs after exactly three of
+    /// them, not after all ten.
+    #[test]
+    fn weighted_flow_cannot_starve_batch_tails() {
+        let pool = ThreadPool::new(1);
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        pool.submit(move || {
+            while !g.load(Ordering::SeqCst) {
+                thread::sleep(std::time::Duration::from_millis(1));
+            }
+        });
+        while pool.running() == 0 {
+            thread::sleep(std::time::Duration::from_millis(1));
+        }
+        const W: u64 = 100;
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o = Arc::clone(&order);
+        pool.submit_at(3 * W, move || o.lock().unwrap().push(usize::MAX));
+        for i in 0..10usize {
+            let o = Arc::clone(&order);
+            pool.submit_weighted(W, move || o.lock().unwrap().push(i));
+        }
+        gate.store(true, Ordering::SeqCst);
+        pool.wait();
+        let order = order.lock().unwrap();
+        let tail_pos = order.iter().position(|&x| x == usize::MAX).unwrap();
+        assert_eq!(
+            tail_pos, 3,
+            "tail ran after 3 flow jobs (flow keys 0,100,200 then tie at \
+             300 broken by seq), got order {order:?}"
+        );
+    }
+
+    /// Regression (shutdown race): submitting after the queue closed must
+    /// drop the job without counting it — the old implementation bumped
+    /// `pending` first and panicked on the dead channel, leaving `wait()`
+    /// deadlocked.
+    #[test]
+    fn submit_after_close_neither_panics_nor_leaks_pending() {
+        let pool = ThreadPool::new(1);
+        pool.shared.state.lock().unwrap().closed = true;
+        pool.shared.work.notify_all();
+        pool.submit(|| panic!("must never run"));
+        assert_eq!(pool.pending(), 0, "dropped job was not counted");
+        pool.wait(); // must return immediately, not deadlock
+    }
+
+    #[test]
+    fn pool_gauges_track_queue_and_running() {
+        let pool = ThreadPool::new(1);
+        let release = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let r = Arc::clone(&release);
+        pool.submit(move || {
+            while !r.load(Ordering::SeqCst) {
+                thread::sleep(std::time::Duration::from_millis(1));
+            }
+        });
+        while pool.running() != 1 {
+            thread::sleep(std::time::Duration::from_millis(1));
+        }
+        pool.submit(|| {});
+        assert_eq!(pool.pending(), 2);
+        assert_eq!(pool.queued(), 1);
+        release.store(true, Ordering::SeqCst);
+        pool.wait();
+        assert_eq!(pool.pending(), 0);
+        assert_eq!(pool.queued(), 0);
+        assert_eq!(pool.running(), 0);
     }
 }

@@ -128,6 +128,76 @@ fn serve_end_to_end_cache_and_stats() {
     handle.join();
 }
 
+/// The layer-task pipeline's observability surface, end-to-end over TCP:
+/// after a burst of concurrent distinct-key quantizes, `stats` exposes the
+/// task gauges (`tasks {queued, running, cost_units}`), the scheduler's
+/// cost capacity, and a per-flight queue/compute latency split with one
+/// sample per fresh artifact.
+#[test]
+fn stats_expose_layer_task_pipeline() {
+    let handle = spawn(tiny_store(), "127.0.0.1:0", cfg()).unwrap();
+    let addr = handle.addr.to_string();
+    let mut threads = Vec::new();
+    for wbits in [2usize, 3, 4, 5, 6, 8] {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let req = Json::obj()
+                .set("cmd", "quantize")
+                .set("model", "tiny")
+                .set("wbits", wbits);
+            let r = client.call(&req).unwrap();
+            assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+            assert_eq!(r.req("source").unwrap().as_str().unwrap(), "fresh");
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let mut client = Client::connect(&addr).unwrap();
+    // All six flights answered, so the gauges drain to zero — but the
+    // response fires from inside the last layer task's job, a hair before
+    // the job retires its admission ticket, so poll briefly.
+    let stats = {
+        let mut stats = None;
+        for _ in 0..100 {
+            let s = client
+                .call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap())
+                .unwrap();
+            let t = s.req("tasks").unwrap();
+            let drained = t.req("queued").unwrap().as_usize().unwrap() == 0
+                && t.req("running").unwrap().as_usize().unwrap() == 0
+                && t.req("cost_units").unwrap().as_usize().unwrap() == 0;
+            stats = Some(s);
+            if drained {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        stats.unwrap()
+    };
+    let tasks = stats.req("tasks").unwrap();
+    assert_eq!(tasks.req("queued").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(tasks.req("running").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(tasks.req("cost_units").unwrap().as_usize().unwrap(), 0);
+    let sched = stats.req("sched").unwrap();
+    assert_eq!(
+        sched.req("cost_capacity_units").unwrap().as_usize().unwrap(),
+        cfg().workers + cfg().queue_depth,
+        "one cost unit per admission slot"
+    );
+    // Every fresh flight recorded one queue-wait and one compute sample.
+    let lat = stats.req("metrics").unwrap().req("latency").unwrap();
+    assert_eq!(lat.req("queue").unwrap().req("count").unwrap().as_usize().unwrap(), 6);
+    assert_eq!(
+        lat.req("compute").unwrap().req("count").unwrap().as_usize().unwrap(),
+        6
+    );
+    let r = client.call(&Json::parse(r#"{"cmd":"shutdown"}"#).unwrap()).unwrap();
+    assert_eq!(r.req("ok").unwrap(), &Json::Bool(true));
+    handle.join();
+}
+
 #[test]
 fn unknown_model_and_bad_json_are_errors() {
     let handle = spawn(tiny_store(), "127.0.0.1:0", cfg()).unwrap();
