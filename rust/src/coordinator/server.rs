@@ -8,22 +8,33 @@
 //!        "method":"squant","scale":"max-abs",
 //!        "layers":{"conv1":{"wbits":8},"fc":{"wbits":8,"method":"rtn"}}}}
 //!   {"cmd":"eval","model":"miniresnet18","wbits":4,"abits":8,"samples":512}
+//!   {"cmd":"predict","model":"miniresnet18","wbits":4,"input":[...]}
 //!   {"cmd":"warm","model":"miniresnet18","wbits":4}      prefetch into cache
 //!   {"cmd":"stats"}                                      counters + latency
 //!   {"cmd":"shutdown"}
 //!
-//! `quantize`/`eval`/`warm` all take either the legacy flat fields
-//! (`wbits`/`abits`/`method`/`scale`) or a `spec` — a canonical
+//! `quantize`/`eval`/`predict`/`warm` all take either the legacy flat
+//! fields (`wbits`/`abits`/`method`/`scale`) or a `spec` — a canonical
 //! [`crate::quant::spec::QuantSpec`] as an object or a spec string
 //! (`"w4a8:squant:max-abs;fc=w8"`).  Both forms canonicalize to the same
 //! cache key; the spec form additionally expresses per-layer bit-width /
 //! stage-set overrides (mixed precision) and the scale method.
 //!
-//! Responses always carry `"ok"`.  `quantize`/`eval` add `"cached"`,
-//! `"spec"` (the canonical spec served), `"source"` (`mem|disk|flight|
-//! fresh` — disk is the persistence tier that survives restarts) and
-//! `"served_ms"`.  When the bounded job queue is full the server answers
-//! `{"ok":false,"error":"busy","retry_ms":N}` instead of queueing
+//! `predict` runs one inference over the quantized artifact: `input` is a
+//! flat row-major `[C, H, W]` float array matching the model's input
+//! shape; the response carries `"logits"`, `"argmax"`, `"batch"` (how
+//! many concurrent requests shared the forward pass) and
+//! `"batch_wait_ms"`.  Concurrent predicts for the same (model, spec) are
+//! coalesced by the engine's batch collector (`--batch-window-us`,
+//! `--max-batch` — see `serve/batch.rs`) into one stacked forward; an
+//! uncached key quantizes first (single-flight), then predicts.
+//!
+//! Responses always carry `"ok"`.  `quantize`/`eval`/`predict` add
+//! `"cached"`, `"spec"` (the canonical spec served), `"source"`
+//! (`mem|disk|flight|fresh` — disk is the persistence tier that survives
+//! restarts) and `"served_ms"`.  When the bounded job queue is full —
+//! or a connection exceeds its `--conn-rps` token bucket — the server
+//! answers `{"ok":false,"error":"busy","retry_ms":N}` instead of queueing
 //! unboundedly — clients should back off and retry.
 //!
 //! This module is a thin *protocol adapter* between two subsystems:
@@ -31,8 +42,10 @@
 //! * [`crate::serve::net`] — the event-driven connection layer.  One
 //!   reactor thread owns the listener and every connection (nonblocking
 //!   I/O, newline framing, write queues, idle/slow-loris reaping,
-//!   `--max-conns` admission); there is no thread per connection, so total
-//!   thread count is `1 + --workers` regardless of open connections.
+//!   `--max-conns` admission, per-connection `--conn-rps` rate limiting);
+//!   there is no thread per connection, so total thread count is
+//!   `1 + --workers` plus the engine's one predict batch collector,
+//!   regardless of open connections.
 //! * [`crate::serve::Engine`] — cache, disk tier, single-flight, bounded
 //!   worker pool and metrics.  The adapter parses each framed line and
 //!   hands it to [`Engine::submit`], the non-blocking dispatch path:
@@ -145,6 +158,7 @@ fn net_cfg(cfg: &EngineCfg) -> NetCfg {
         max_conns: cfg.max_conns,
         idle_timeout: (cfg.idle_timeout_ms > 0)
             .then(|| Duration::from_millis(cfg.idle_timeout_ms)),
+        conn_rps: cfg.conn_rps,
     }
 }
 
@@ -157,7 +171,8 @@ pub fn serve(store: Arc<ModelStore>, addr: &str, cfg: EngineCfg) -> Result<()> {
     };
     println!(
         "squant coordinator listening on {} ({} workers, queue {}, cache {} \
-         entries / {} MB{}, max {} conns, idle timeout {} ms)",
+         entries / {} MB{}, max {} conns, idle timeout {} ms, batch window \
+         {} us / max {}, conn rps {})",
         listener.local_addr()?,
         cfg.workers.max(1),
         cfg.queue_depth,
@@ -166,6 +181,9 @@ pub fn serve(store: Arc<ModelStore>, addr: &str, cfg: EngineCfg) -> Result<()> {
         disk_desc,
         cfg.max_conns,
         cfg.idle_timeout_ms,
+        cfg.batch_window_us,
+        cfg.max_batch,
+        cfg.conn_rps,
     );
     let engine = Engine::new(store, cfg.clone())?;
     let reactor = Reactor::new(listener, net_cfg(&cfg), Arc::clone(&engine.metrics))?;

@@ -13,12 +13,14 @@
 //!                [--cache-cap N] [--cache-mb MB]
 //!                [--cache-dir DIR] [--cache-disk-mb MB]
 //!                [--max-conns N] [--idle-timeout-ms MS]
-//!                TCP quantization service (event-driven serve/net reactor
-//!                over mem LRU + disk persistence + single-flight +
-//!                bounded scheduler; total threads = 1 + --workers)
+//!                [--batch-window-us US] [--max-batch N] [--conn-rps R]
+//!                TCP quantization + inference service (event-driven
+//!                serve/net reactor over mem LRU + disk persistence +
+//!                single-flight + bounded scheduler + predict batch
+//!                collector; total threads = 2 + --workers)
 //!   squant bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--idle M]
 //!                [--reqs N] [--restart-warm] [--mixed-keys] [--tiny]
-//!                [--strict]
+//!                [--predict] [--pipeline D] [--strict]
 //!                load-generate against a serve instance:
 //!                req/s, hit-rate, latency quantiles, busy rejections and
 //!                connection gauges; --idle M keeps M of the N connections
@@ -26,8 +28,12 @@
 //!                connection-scaling scenario); with --spawn --cache-dir
 //!                --restart-warm, also restart the server and measure
 //!                warm-start disk hits; --tiny serves an in-memory test
-//!                model (no artifacts needed); --strict exits non-zero on
-//!                any error or dropped idle conn
+//!                model (no artifacts needed); --predict drives open-loop
+//!                inference traffic (pipelined --pipeline deep per conn)
+//!                and reports the server's batch-size distribution
+//!                alongside the latency split; --strict exits non-zero on
+//!                any error or dropped idle conn.  Every run writes a
+//!                BENCH_serve.json snapshot for cross-PR comparison.
 //!
 //! Quantization is described everywhere by ONE canonical spec
 //! (`quant::spec::QuantSpec`): `--spec "w4a8:squant:max-abs;fc=w8"` is the
@@ -158,26 +164,37 @@ COMMANDS:
           [--cache-cap N] [--cache-mb MB]       TCP quantization service
           [--cache-dir DIR] [--cache-disk-mb MB]
           [--max-conns N] [--idle-timeout-ms MS]
-          protocol verbs: ping models quantize eval warm stats shutdown
-          (quantize/eval/warm take the flat wbits/abits/method/scale
-          fields or a \"spec\" object/string; quantize/eval hit an LRU
-          artifact cache; identical concurrent requests share one run; a
-          full queue answers {\"ok\":false,\"error\":\"busy\",\"retry_ms\":N})
+          [--batch-window-us US] [--max-batch N] [--conn-rps R]
+          protocol verbs: ping models quantize eval predict warm stats
+          shutdown (quantize/eval/predict/warm take the flat
+          wbits/abits/method/scale fields or a \"spec\" object/string;
+          quantize/eval/predict hit an LRU artifact cache; identical
+          concurrent requests share one run; a full queue answers
+          {\"ok\":false,\"error\":\"busy\",\"retry_ms\":N})
+          predict runs one inference over the quantized artifact:
+          concurrent predicts for the same (model, spec) are coalesced
+          within --batch-window-us (default 2000) up to --max-batch
+          (default 32) into one stacked forward pass; an uncached key
+          quantizes first (single-flight), then predicts.
           --cache-dir enables the disk persistence tier: artifacts are
           spilled as versioned SQNT files and survive restarts, bounded
           by --cache-disk-mb (default 1024); stale artifacts (source
           model file content changed) are invalidated automatically.
           connections are served by an event-driven reactor (epoll/poll),
           not a thread each: --max-conns (default 1024) bounds open
-          connections (excess get one \"overloaded\" error line) and
+          connections (excess get one \"overloaded\" error line),
           --idle-timeout-ms (default 60000, 0 disables) reaps idle and
-          slow-loris connections; both show up under stats \"conns\"
+          slow-loris connections, and --conn-rps (default 0 = off) token-
+          buckets each connection (over-limit requests answer busy +
+          retry_ms); all show up under stats \"conns\"
   bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--idle M]
           [--reqs N] [--models A,B] [--wbits 8,4] [--eval-every N]
           [--samples N] [--seed S] [--restart-warm] [--mixed-keys]
-          [--tiny] [--strict]
+          [--tiny] [--predict] [--pipeline D] [--strict]
           load-generate against a server; prints req/s, cache hit-rate,
-          p50/p95/p99 latency, busy rejections and connection gauges.
+          p50/p95/p99 latency, busy rejections and connection gauges,
+          and writes a BENCH_serve.json snapshot (req/s, quantiles,
+          hit-rate, mean batch size) for cross-PR regression tracking.
           --idle M opens N conns but keeps M of them silent while the
           hot subset drives the load — the connection-scaling scenario
           (idle conns must stay alive and cost no threads).  --mixed-keys
@@ -186,8 +203,12 @@ COMMANDS:
           (with --spawn and --cache-dir) restarts the spawned server
           after the load phase and replays every key once to measure
           disk-tier warm-start.  --tiny spawns over an in-memory test
-          model, so no artifacts are needed (CI smoke).  --strict exits
-          non-zero on request errors or dropped idle conns
+          model, so no artifacts are needed (CI smoke).  --predict sends
+          inference traffic instead of quantize/eval: each hot conn keeps
+          --pipeline D (default 4) requests in flight (open-loop), so
+          concurrent inputs coalesce into batched forwards; reports the
+          batch-size distribution and flush reasons alongside latency.
+          --strict exits non-zero on request errors or dropped idle conns
 
 SPEC:   w<W>a<A>:<method>:<scale>[;<layer>=<override>]*
         e.g. \"w4a8:squant:max-abs;conv1=w8;fc=w8/rtn\" — overrides are
@@ -466,6 +487,9 @@ fn serve_cfg(args: &mut Args) -> Result<EngineCfg> {
         cache_disk_mb: args.usize_or("cache-disk-mb", defaults.cache_disk_mb)?,
         max_conns: args.usize_or("max-conns", defaults.max_conns)?,
         idle_timeout_ms: args.u64_or("idle-timeout-ms", defaults.idle_timeout_ms)?,
+        batch_window_us: args.u64_or("batch-window-us", defaults.batch_window_us)?,
+        max_batch: args.usize_or("max-batch", defaults.max_batch)?,
+        conn_rps: args.u64_or("conn-rps", defaults.conn_rps)?,
     })
 }
 
@@ -534,6 +558,11 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let restart_warm = args.flag("restart-warm");
     let mixed = args.flag("mixed-keys");
     let tiny = args.flag("tiny");
+    let predict = args.flag("predict");
+    // Pipelining depth for --predict (open-loop load): how many requests
+    // each hot conn keeps in flight.  Capped at the server's per-conn
+    // pipeline limit so a deep setting cannot wedge on TCP buffers.
+    let pipeline = args.usize_or("pipeline", 4)?.clamp(1, 64);
     let strict = args.flag("strict");
     let cfg = serve_cfg(args)?;
     args.finish()?;
@@ -616,6 +645,16 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
             .validate()
             .map_err(|e| anyhow!("--wbits: {e}"))?;
     }
+    // Flat per-image input length, reported by the `models` verb, so
+    // --predict can size its random input vectors.
+    let input_len = if predict {
+        match models_resp.get("input_len").and_then(|v| v.as_usize().ok()) {
+            Some(n) if n > 0 => n,
+            _ => bail!("server does not report input_len (needed by --predict)"),
+        }
+    } else {
+        0
+    };
     // Every spec sent in --mixed-keys mode, so --restart-warm can replay
     // exactly the heterogeneous key set.
     let sent: Arc<Mutex<BTreeSet<(String, String)>>> =
@@ -644,6 +683,10 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let busy = Arc::new(AtomicU64::new(0));
     let errors = Arc::new(AtomicU64::new(0));
     let done = Arc::new(AtomicU64::new(0));
+    // Client-observed batching (--predict): sum and count of the "batch"
+    // field on ok responses, i.e. the mean batch a *request* landed in.
+    let batch_sum = Arc::new(AtomicU64::new(0));
+    let batch_obs = Arc::new(AtomicU64::new(0));
 
     // The connection-scaling scenario: open the idle set first — these
     // stay connected and silent for the whole load phase.  With the
@@ -656,13 +699,22 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
             .push(server::Client::connect(&addr).context("opening idle conn")?);
     }
 
-    println!(
-        "bench-serve: {hot} hot + {idle} idle conns x {reqs} reqs against \
-         {addr} (models {:?}, wbits {:?}, eval every {eval_every}{})",
-        models,
-        wbits,
-        if mixed { ", mixed keys" } else { "" }
-    );
+    if predict {
+        println!(
+            "bench-serve --predict: {hot} hot + {idle} idle conns x {reqs} \
+             reqs against {addr} (models {:?}, wbits {:?}, pipeline \
+             {pipeline})",
+            models, wbits
+        );
+    } else {
+        println!(
+            "bench-serve: {hot} hot + {idle} idle conns x {reqs} reqs against \
+             {addr} (models {:?}, wbits {:?}, eval every {eval_every}{})",
+            models,
+            wbits,
+            if mixed { ", mixed keys" } else { "" }
+        );
+    }
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for ci in 0..hot {
@@ -672,6 +724,101 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         let (hist, busy, errors, done) =
             (Arc::clone(&hist), Arc::clone(&busy), Arc::clone(&errors),
              Arc::clone(&done));
+        if predict {
+            // Open-loop inference load: each hot conn keeps `pipeline`
+            // predict requests in flight over one raw pipelined socket
+            // (responses come back strictly in arrival order, so the
+            // send-time queue lines up with the reads).  Concurrent
+            // in-flight inputs for the same key are what the server's
+            // batch collector coalesces.
+            let (batch_sum, batch_obs) =
+                (Arc::clone(&batch_sum), Arc::clone(&batch_obs));
+            handles.push(std::thread::spawn(move || {
+                use std::io::{BufRead, BufReader, Write};
+                let mut rng = Rng::new(seed + ci as u64);
+                let Ok(mut writer) = std::net::TcpStream::connect(&addr) else {
+                    errors.fetch_add(reqs as u64, Ordering::Relaxed);
+                    return;
+                };
+                let Ok(rstream) = writer.try_clone() else {
+                    errors.fetch_add(reqs as u64, Ordering::Relaxed);
+                    return;
+                };
+                let mut reader = BufReader::new(rstream);
+                let mut sent_at: std::collections::VecDeque<std::time::Instant> =
+                    std::collections::VecDeque::new();
+                let mut to_send = reqs;
+                let mut to_recv = reqs;
+                while to_recv > 0 {
+                    while to_send > 0 && sent_at.len() < pipeline {
+                        let model = models[rng.below(models.len())].clone();
+                        let wb = wbits[rng.below(wbits.len())];
+                        let mut input = vec![0.0f32; input_len];
+                        rng.fill_normal(&mut input, 1.0);
+                        let req = Json::obj()
+                            .set("cmd", "predict")
+                            .set("model", model)
+                            .set("wbits", wb)
+                            .set(
+                                "input",
+                                Json::Arr(
+                                    input
+                                        .iter()
+                                        .map(|v| Json::Num(*v as f64))
+                                        .collect(),
+                                ),
+                            );
+                        let line = req.dump();
+                        if writer
+                            .write_all(line.as_bytes())
+                            .and_then(|()| writer.write_all(b"\n"))
+                            .is_err()
+                        {
+                            errors.fetch_add(to_recv as u64, Ordering::Relaxed);
+                            return;
+                        }
+                        sent_at.push_back(std::time::Instant::now());
+                        to_send -= 1;
+                    }
+                    let mut line = String::new();
+                    match reader.read_line(&mut line) {
+                        Ok(n) if n > 0 => {}
+                        _ => {
+                            errors.fetch_add(to_recv as u64, Ordering::Relaxed);
+                            return;
+                        }
+                    }
+                    let t_sent = sent_at
+                        .pop_front()
+                        .unwrap_or_else(std::time::Instant::now);
+                    to_recv -= 1;
+                    let Ok(resp) = Json::parse(line.trim()) else {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    };
+                    if matches!(resp.get("ok"), Some(Json::Bool(true))) {
+                        hist.record_ms(t_sent.elapsed().as_secs_f64() * 1e3);
+                        done.fetch_add(1, Ordering::Relaxed);
+                        if let Some(b) =
+                            resp.get("batch").and_then(|b| b.as_usize().ok())
+                        {
+                            batch_sum.fetch_add(b as u64, Ordering::Relaxed);
+                            batch_obs.fetch_add(1, Ordering::Relaxed);
+                        }
+                    } else if resp
+                        .get("error")
+                        .and_then(|e| e.as_str().ok())
+                        .map(|e| e == "busy")
+                        .unwrap_or(false)
+                    {
+                        busy.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }));
+            continue;
+        }
         handles.push(std::thread::spawn(move || {
             let mut rng = Rng::new(seed + ci as u64);
             let Ok(mut client) = server::Client::connect(&addr) else {
@@ -817,6 +964,89 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
                 c.req("count")?.as_usize()?,
             );
         }
+    }
+    // Server-side batching picture (--predict): inputs per batch, flush
+    // reasons, and the batch-size distribution, next to the client-observed
+    // mean batch (what a *request* experienced).
+    let server_mean_batch = stats1
+        .get("metrics")
+        .and_then(|m| m.get("predict"))
+        .and_then(|p| p.get("mean_batch"))
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or(0.0);
+    if predict {
+        if let Some(p) = stats1.get("metrics").and_then(|m| m.get("predict")) {
+            let g = |k: &str| {
+                p.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+            };
+            println!(
+                "  batching   : {:.0} inputs in {:.0} batches (mean {:.2}), \
+                 flushed {:.0} on window / {:.0} on max-batch",
+                g("inputs"),
+                g("batches"),
+                g("mean_batch"),
+                g("flush_timeout"),
+                g("flush_full"),
+            );
+            if let Some(bs) = p.get("batch_size") {
+                let b = |k: &str| {
+                    bs.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+                };
+                println!(
+                    "  batch size : p50 {:.1}  p95 {:.1}  mean {:.2}  max {:.0}",
+                    b("p50"),
+                    b("p95"),
+                    b("mean"),
+                    b("max"),
+                );
+            }
+        }
+        let obs = batch_obs.load(Ordering::Relaxed);
+        if obs > 0 {
+            println!(
+                "  batch seen : mean {:.2} across {obs} ok responses \
+                 (request-weighted)",
+                batch_sum.load(Ordering::Relaxed) as f64 / obs as f64
+            );
+        }
+        if let Ok(lat) = stats1.req("metrics").and_then(|m| m.req("latency")) {
+            if let (Ok(p), Ok(w)) = (lat.req("predict"), lat.req("batch_wait")) {
+                println!(
+                    "  predict lat: served p50 {:.2} ms p95 {:.2} ms | \
+                     batch wait p50 {:.2} ms p95 {:.2} ms",
+                    p.req("p50_ms")?.as_f64()?,
+                    p.req("p95_ms")?.as_f64()?,
+                    w.req("p50_ms")?.as_f64()?,
+                    w.req("p95_ms")?.as_f64()?,
+                );
+            }
+        }
+    }
+    // The cross-PR perf trajectory: one JSON snapshot per run, fixed name,
+    // so successive PRs can diff req/s, tail latency, hit-rate and batching
+    // without scraping stdout.
+    let snapshot = Json::obj()
+        .set("bench", "bench-serve")
+        .set("mode", if predict { "predict" } else { "quantize-eval" })
+        .set("conns", conns)
+        .set("idle", idle)
+        .set("reqs_per_conn", reqs)
+        .set("pipeline", if predict { pipeline } else { 1 })
+        .set("ok", n as usize)
+        .set("busy", busy.load(Ordering::Relaxed) as usize)
+        .set("errors", errors.load(Ordering::Relaxed) as usize)
+        .set("wall_s", wall_s)
+        .set("req_s", n as f64 / wall_s.max(1e-9))
+        .set("p50_ms", hist.quantile_ms(0.50))
+        .set("p95_ms", hist.quantile_ms(0.95))
+        .set("p99_ms", hist.quantile_ms(0.99))
+        .set("max_ms", hist.max_ms())
+        .set("hit_rate_pct", hit_rate)
+        .set("mean_batch", server_mean_batch);
+    const BENCH_PATH: &str = "BENCH_serve.json";
+    match std::fs::write(BENCH_PATH, snapshot.dump() + "\n") {
+        Ok(()) => println!("  snapshot   : wrote {BENCH_PATH}"),
+        Err(e) => eprintln!("  snapshot   : failed to write {BENCH_PATH}: {e}"),
     }
     // Prove the idle set survived the load phase: every silent connection
     // must still answer a ping (i.e. the server held N mostly-idle conns

@@ -2,8 +2,14 @@
 //!
 //! Executes a [`Graph`] batch-at-a-time: convs are im2col + blocked matmul
 //! (per group), BN is a folded affine in eval mode, pooling follows the
-//! count-include-pad convention shared with the JAX executor.  Two optional
-//! features drive the experiments:
+//! count-include-pad convention shared with the JAX executor.  The batch
+//! dimension is first-class: a `(B, C, H, W)` input runs one im2col +
+//! matmul per layer for all B images, and every image's result is
+//! bit-identical to running it alone at `B = 1` (each row is an
+//! independent matmul row — no cross-image reduction anywhere), which is
+//! what lets the serving layer's predict batch collector coalesce
+//! concurrent requests into one stacked forward without changing any
+//! answer.  Two optional features drive the experiments:
 //!
 //!  * **activation quantization** — a per-node fake-quant applied to every
 //!    conv/linear *input* (per-tensor affine, the paper's activation scheme);

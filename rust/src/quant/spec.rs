@@ -24,6 +24,15 @@
 //!   into the same spec, so legacy and spec-form requests for the same
 //!   parameters produce identical cache keys.
 //!
+//! Every serving verb that names an artifact — `quantize`, `eval`, `warm`
+//! and (since the predict workload landed) `predict` — accepts any of the
+//! three forms; the canonical spec string is the cache key, so a `predict`
+//! and a `quantize` for the same parameters share one artifact and one
+//! single-flight.  `predict` requests for the same `(model, spec)` key are
+//! additionally coalesced into batched forwards by the serving layer
+//! (`--batch-window-us` / `--max-batch`); the spec is the batching key, so
+//! mixed-precision traffic batches per spec, never across specs.
+//!
 //! [`QuantSpec::canonical`] is deterministic (overrides sorted by layer
 //! name, no-op overrides dropped by [`QuantSpec::normalized`]), and
 //! [`QuantSpec::key_hash`] is a stable FNV-1a over that canonical string —

@@ -1,0 +1,407 @@
+//! Dynamic batching for the `predict` verb — the inference-side analogue
+//! of the layer-task pipeline.
+//!
+//! `predict` traffic is many tiny requests for the *same* cached artifact:
+//! one forward pass per request wastes the batched matmul the engine
+//! already has (`nn::engine::forward` runs one im2col + GEMM per layer for
+//! a whole (B, C, H, W) stack).  The [`Batcher`] coalesces concurrent
+//! inputs per (model, spec) key inside a small collection window:
+//!
+//!  * every input enqueues under the key's [`Pending`] batch and arms a
+//!    deadline `now + window` (the FIRST input arms it — later inputs ride
+//!    the existing window, so worst-case added latency is one window);
+//!  * a batch flushes when the window expires ([`FlushReason::Window`],
+//!    driven by one collector thread sleeping until the earliest
+//!    deadline), when it reaches `max_batch` ([`FlushReason::Full`],
+//!    flushed inline by the enqueueing caller), or at shutdown
+//!    ([`FlushReason::Shutdown`] — owed responses still get answered);
+//!  * flushing hands the whole [`Batch`] (items in arrival order) to the
+//!    executor closure the engine installed, which admits it by cost and
+//!    runs ONE stacked forward on the worker pool, fanning logits rows
+//!    back per item.
+//!
+//! The batcher itself never blocks a caller and never runs model compute:
+//! enqueue is O(1) under one mutex, and the executor is expected to be
+//! non-blocking too (the engine's is — cost admission + pool submission).
+//! The collector thread is the one extra thread the serve process carries
+//! beyond `1 + --workers` (it sleeps except when a window expires).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::cache::{CacheEntry, QuantKey};
+use super::ServeError;
+
+/// Collection policy: how long the first input of a batch waits for
+/// company, and how many inputs a batch may hold.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCfg {
+    /// Collection window armed by the first input of a batch.  A zero
+    /// window disables coalescing: every input flushes immediately as a
+    /// batch of one.
+    pub window: Duration,
+    /// Flush as soon as a batch holds this many inputs (clamped to ≥ 1).
+    pub max_batch: usize,
+}
+
+impl BatchCfg {
+    pub fn new(window_us: u64, max_batch: usize) -> BatchCfg {
+        BatchCfg {
+            window: Duration::from_micros(window_us),
+            max_batch: max_batch.max(1),
+        }
+    }
+}
+
+/// Why a batch left the collector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The collection window expired.
+    Window,
+    /// The batch reached `max_batch`.
+    Full,
+    /// The batcher is shutting down; owed items still execute.
+    Shutdown,
+}
+
+/// One input waiting in a batch, with its per-item completion callback.
+pub struct BatchItem {
+    /// Flat (C·H·W) input row, validated by the engine before enqueue.
+    pub input: Vec<f32>,
+    /// Receives this item's logits row (or the batch-wide error).
+    pub done: PredictDone,
+    /// Enqueue instant — the engine turns `flushed_at - enqueued` into the
+    /// batch-wait histogram sample.
+    pub enqueued: Instant,
+}
+
+/// Per-item result: one logits row out of the stacked forward, plus the
+/// batch context the response echoes.
+pub struct PredictOutcome {
+    pub logits: Vec<f32>,
+    /// Size of the batch this input rode in.
+    pub batch: usize,
+    /// Enqueue → flush (time spent waiting for co-batched traffic).
+    pub wait_ms: f64,
+}
+
+pub type PredictDone =
+    Box<dyn FnOnce(Result<PredictOutcome, ServeError>) + Send + 'static>;
+
+/// A flushed batch, handed to the executor in arrival order.
+pub struct Batch {
+    pub key: QuantKey,
+    pub entry: Arc<CacheEntry>,
+    pub items: Vec<BatchItem>,
+    pub reason: FlushReason,
+}
+
+struct Pending {
+    entry: Arc<CacheEntry>,
+    items: Vec<BatchItem>,
+    deadline: Instant,
+}
+
+struct State {
+    pending: HashMap<QuantKey, Pending>,
+    stopped: bool,
+}
+
+type Executor = Box<dyn Fn(Batch) + Send + Sync + 'static>;
+
+struct Shared {
+    state: Mutex<State>,
+    /// Wakes the collector when a new (earlier) deadline is armed or the
+    /// batcher stops.
+    cv: Condvar,
+    cfg: BatchCfg,
+    exec: Executor,
+}
+
+/// Per-key batch collector.  One instance per engine; `enqueue` is called
+/// from artifact-resolution continuations (reactor or worker threads), the
+/// collector thread owns window expiry.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    collector: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl Batcher {
+    pub fn new<F>(cfg: BatchCfg, exec: F) -> Batcher
+    where
+        F: Fn(Batch) + Send + Sync + 'static,
+    {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                pending: HashMap::new(),
+                stopped: false,
+            }),
+            cv: Condvar::new(),
+            cfg,
+            exec: Box::new(exec),
+        });
+        let s = Arc::clone(&shared);
+        let collector = thread::Builder::new()
+            .name("squant-batch".into())
+            .spawn(move || Self::collect(&s))
+            .expect("spawn batch collector");
+        Batcher {
+            shared,
+            collector: Mutex::new(Some(collector)),
+        }
+    }
+
+    /// Add one input under `key`'s batch.  Flushes inline when the batch
+    /// fills (or when the window is zero); otherwise the collector thread
+    /// flushes it when the window armed by the batch's first input
+    /// expires.  Never blocks on model compute.
+    pub fn enqueue(
+        &self,
+        key: QuantKey,
+        entry: Arc<CacheEntry>,
+        input: Vec<f32>,
+        done: PredictDone,
+    ) {
+        let item = BatchItem { input, done, enqueued: Instant::now() };
+        let flush = {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.stopped {
+                drop(st);
+                done_err(item.done);
+                return;
+            }
+            let deadline = item.enqueued + self.shared.cfg.window;
+            let slot = st.pending.entry(key.clone()).or_insert_with(|| {
+                Pending { entry: Arc::clone(&entry), items: Vec::new(), deadline }
+            });
+            slot.items.push(item);
+            let full = slot.items.len() >= self.shared.cfg.max_batch
+                || self.shared.cfg.window.is_zero();
+            if full {
+                let p = st.pending.remove(&key).unwrap();
+                let reason = if p.items.len() >= self.shared.cfg.max_batch {
+                    FlushReason::Full
+                } else {
+                    FlushReason::Window
+                };
+                Some(Batch { key, entry: p.entry, items: p.items, reason })
+            } else {
+                None
+            }
+        };
+        match flush {
+            Some(batch) => (self.shared.exec)(batch),
+            // A fresh window may now be the earliest deadline.
+            None => self.shared.cv.notify_all(),
+        }
+    }
+
+    /// Batches currently collecting (gauge for `stats`).
+    pub fn pending(&self) -> usize {
+        self.shared.state.lock().unwrap().pending.len()
+    }
+
+    /// The collection policy this batcher was built with (for `stats`).
+    pub fn cfg(&self) -> BatchCfg {
+        self.shared.cfg
+    }
+
+    fn collect(shared: &Arc<Shared>) {
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let due: Vec<QuantKey> = st
+                .pending
+                .iter()
+                .filter(|(_, p)| st.stopped || p.deadline <= now)
+                .map(|(k, _)| k.clone())
+                .collect();
+            if !due.is_empty() {
+                let stopped = st.stopped;
+                let batches: Vec<Batch> = due
+                    .into_iter()
+                    .filter_map(|k| {
+                        st.pending.remove(&k).map(|p| Batch {
+                            key: k,
+                            entry: p.entry,
+                            items: p.items,
+                            reason: if stopped {
+                                FlushReason::Shutdown
+                            } else {
+                                FlushReason::Window
+                            },
+                        })
+                    })
+                    .collect();
+                drop(st);
+                for b in batches {
+                    (shared.exec)(b);
+                }
+                st = shared.state.lock().unwrap();
+                continue;
+            }
+            if st.stopped {
+                break;
+            }
+            let next = st.pending.values().map(|p| p.deadline).min();
+            st = match next {
+                Some(d) => {
+                    let wait = d.saturating_duration_since(now);
+                    shared.cv.wait_timeout(st, wait).unwrap().0
+                }
+                None => shared.cv.wait(st).unwrap(),
+            };
+        }
+    }
+}
+
+fn done_err(done: PredictDone) {
+    done(Err(ServeError::Failed("server shutting down".into())));
+}
+
+/// Answer every item of `batch` with the same error (used when the
+/// executor can no longer reach its engine).
+pub fn fail_batch(batch: Batch, err: ServeError) {
+    for item in batch.items {
+        (item.done)(Err(err.clone()));
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stopped = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.collector.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::QuantReport;
+    use crate::nn::Params;
+    use crate::quant::spec::{Method, QuantSpec};
+    use std::sync::mpsc;
+
+    fn key(model: &str) -> QuantKey {
+        QuantKey {
+            model: model.to_string(),
+            spec: QuantSpec::uniform(Method::squant_full(), 4, 0),
+        }
+    }
+
+    fn entry() -> Arc<CacheEntry> {
+        Arc::new(CacheEntry {
+            params: Params::new(),
+            act: None,
+            report: QuantReport {
+                layers: Vec::new(),
+                total_ms: 0.0,
+                wall_ms: 0.0,
+            },
+            bytes: 0,
+        })
+    }
+
+    fn noop_done() -> PredictDone {
+        Box::new(|_| {})
+    }
+
+    #[test]
+    fn window_expiry_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel::<(usize, FlushReason)>();
+        let b = Batcher::new(BatchCfg::new(5_000, 64), move |batch: Batch| {
+            tx.send((batch.items.len(), batch.reason)).unwrap();
+        });
+        b.enqueue(key("m"), entry(), vec![1.0], noop_done());
+        b.enqueue(key("m"), entry(), vec![2.0], noop_done());
+        let (n, reason) =
+            rx.recv_timeout(Duration::from_secs(10)).expect("window flush");
+        assert_eq!(n, 2);
+        assert_eq!(reason, FlushReason::Window);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn max_batch_flushes_inline_before_window() {
+        let (tx, rx) = mpsc::channel::<(usize, FlushReason)>();
+        // A window far longer than the test: only Full can flush in time.
+        let b =
+            Batcher::new(BatchCfg::new(60_000_000, 3), move |batch: Batch| {
+                tx.send((batch.items.len(), batch.reason)).unwrap();
+            });
+        for v in 0..3 {
+            b.enqueue(key("m"), entry(), vec![v as f32], noop_done());
+        }
+        let (n, reason) =
+            rx.recv_timeout(Duration::from_secs(5)).expect("full flush");
+        assert_eq!(n, 3);
+        assert_eq!(reason, FlushReason::Full);
+    }
+
+    #[test]
+    fn zero_window_disables_coalescing() {
+        let (tx, rx) = mpsc::channel::<usize>();
+        let b = Batcher::new(BatchCfg::new(0, 64), move |batch: Batch| {
+            tx.send(batch.items.len()).unwrap();
+        });
+        b.enqueue(key("m"), entry(), vec![1.0], noop_done());
+        b.enqueue(key("m"), entry(), vec![2.0], noop_done());
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), 1);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_batch_separately() {
+        let (tx, rx) = mpsc::channel::<(String, usize)>();
+        let b = Batcher::new(BatchCfg::new(5_000, 64), move |batch: Batch| {
+            tx.send((batch.key.model.clone(), batch.items.len())).unwrap();
+        });
+        b.enqueue(key("a"), entry(), vec![1.0], noop_done());
+        b.enqueue(key("b"), entry(), vec![2.0], noop_done());
+        b.enqueue(key("a"), entry(), vec![3.0], noop_done());
+        let mut sizes = std::collections::HashMap::new();
+        for _ in 0..2 {
+            let (m, n) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            sizes.insert(m, n);
+        }
+        assert_eq!(sizes["a"], 2);
+        assert_eq!(sizes["b"], 1);
+    }
+
+    #[test]
+    fn items_keep_arrival_order() {
+        let (tx, rx) = mpsc::channel::<Vec<f32>>();
+        let b = Batcher::new(BatchCfg::new(5_000, 64), move |batch: Batch| {
+            tx.send(batch.items.iter().map(|i| i.input[0]).collect())
+                .unwrap();
+        });
+        for v in 0..5 {
+            b.enqueue(key("m"), entry(), vec![v as f32], noop_done());
+        }
+        let order = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(order, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn shutdown_flushes_owed_batches() {
+        let (tx, rx) = mpsc::channel::<FlushReason>();
+        let b =
+            Batcher::new(BatchCfg::new(60_000_000, 64), move |batch: Batch| {
+                tx.send(batch.reason).unwrap();
+            });
+        b.enqueue(key("m"), entry(), vec![1.0], noop_done());
+        drop(b);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            FlushReason::Shutdown
+        );
+    }
+}

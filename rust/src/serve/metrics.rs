@@ -101,11 +101,44 @@ impl Histogram {
             .set("mean_ms", self.mean_ms())
             .set("max_ms", self.max_ms())
     }
+
+    /// Mean in raw recorded units (for histograms that count things other
+    /// than microseconds, e.g. batch sizes).
+    pub fn mean_raw(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max_raw(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Quantile estimate in raw units (geometric midpoint of the bucket).
+    pub fn quantile_raw(&self, q: f64) -> f64 {
+        self.quantile_ms(q) * 1e3
+    }
+
+    /// JSON view in raw units — used for the batch-size distribution,
+    /// where "1.5" means "batches of 1–2 inputs", not microseconds.
+    pub fn to_json_raw(&self) -> Json {
+        Json::obj()
+            .set("count", self.count() as usize)
+            .set("p50", self.quantile_raw(0.50))
+            .set("p95", self.quantile_raw(0.95))
+            .set("mean", self.mean_raw())
+            .set("max", self.max_raw() as usize)
+    }
 }
 
 /// Protocol verbs tracked individually; anything else lands in "other".
-pub const CMDS: [&str; 8] =
-    ["ping", "models", "quantize", "eval", "warm", "stats", "shutdown", "other"];
+pub const CMDS: [&str; 9] = [
+    "ping", "models", "quantize", "eval", "predict", "warm", "stats",
+    "shutdown", "other",
+];
 
 /// All serving counters + latency histograms.  Every field is atomic so the
 /// request hot path never takes a lock for accounting.
@@ -135,13 +168,31 @@ pub struct Metrics {
     pub conns_rejected: AtomicU64,
     /// Connections reaped by the idle / slow-loris timeout.
     pub conns_idle_closed: AtomicU64,
+    /// Requests answered `busy` by the per-connection `--conn-rps` token
+    /// bucket (rejected in the reactor; the engine never saw them).
+    pub conns_rate_limited: AtomicU64,
+    /// Inputs served through `predict` (one per request, so
+    /// `predict_inputs / predict_batches` is the exact mean batch size).
+    pub predict_inputs: AtomicU64,
+    /// Batched forward passes executed by the predict collector.
+    pub predict_batches: AtomicU64,
+    /// Batches flushed because the collection window expired.
+    pub batch_flush_timeout: AtomicU64,
+    /// Batches flushed because they reached `--max-batch`.
+    pub batch_flush_full: AtomicU64,
     pub lat_all: Histogram,
     pub lat_quantize: Histogram,
     pub lat_eval: Histogram,
-    /// Quantize flights: admission → first layer task starts (scheduler
-    /// queue wait).
+    pub lat_predict: Histogram,
+    /// Predict requests: enqueue into the batch collector → batch flushed
+    /// (time spent waiting for co-batched traffic).
+    pub lat_batch_wait: Histogram,
+    /// Batch size distribution (raw input counts, not microseconds).
+    pub batch_size: Histogram,
+    /// Admitted flights (quantize, eval, predict batches): admission →
+    /// first pool task starts (scheduler queue wait).
     pub lat_queue: Histogram,
-    /// Quantize flights: first layer task starts → artifact assembled
+    /// Admitted flights: first pool task starts → result assembled
     /// (pure compute + task interleaving).
     pub lat_compute: Histogram,
 }
@@ -170,9 +221,17 @@ impl Metrics {
             conns_peak: AtomicU64::new(0),
             conns_rejected: AtomicU64::new(0),
             conns_idle_closed: AtomicU64::new(0),
+            conns_rate_limited: AtomicU64::new(0),
+            predict_inputs: AtomicU64::new(0),
+            predict_batches: AtomicU64::new(0),
+            batch_flush_timeout: AtomicU64::new(0),
+            batch_flush_full: AtomicU64::new(0),
             lat_all: Histogram::new(),
             lat_quantize: Histogram::new(),
             lat_eval: Histogram::new(),
+            lat_predict: Histogram::new(),
+            lat_batch_wait: Histogram::new(),
+            batch_size: Histogram::new(),
             lat_queue: Histogram::new(),
             lat_compute: Histogram::new(),
         }
@@ -205,6 +264,10 @@ impl Metrics {
                 "idle_closed",
                 self.conns_idle_closed.load(Ordering::Relaxed) as usize,
             )
+            .set(
+                "rate_limited",
+                self.conns_rate_limited.load(Ordering::Relaxed) as usize,
+            )
     }
 
     pub fn to_json(&self) -> Json {
@@ -212,17 +275,40 @@ impl Metrics {
         for (i, name) in CMDS.iter().enumerate() {
             cmds = cmds.set(name, self.by_cmd[i].load(Ordering::Relaxed) as usize);
         }
+        let inputs = self.predict_inputs.load(Ordering::Relaxed);
+        let batches = self.predict_batches.load(Ordering::Relaxed);
+        let mean_batch =
+            if batches == 0 { 0.0 } else { inputs as f64 / batches as f64 };
         Json::obj()
             .set("uptime_s", self.uptime_s())
             .set("requests_total", self.requests_total() as usize)
             .set("requests", cmds)
             .set("errors", self.errors.load(Ordering::Relaxed) as usize)
             .set(
+                "predict",
+                Json::obj()
+                    .set("inputs", inputs as usize)
+                    .set("batches", batches as usize)
+                    .set("mean_batch", mean_batch)
+                    .set(
+                        "flush_timeout",
+                        self.batch_flush_timeout.load(Ordering::Relaxed)
+                            as usize,
+                    )
+                    .set(
+                        "flush_full",
+                        self.batch_flush_full.load(Ordering::Relaxed) as usize,
+                    )
+                    .set("batch_size", self.batch_size.to_json_raw()),
+            )
+            .set(
                 "latency",
                 Json::obj()
                     .set("all", self.lat_all.to_json())
                     .set("quantize", self.lat_quantize.to_json())
                     .set("eval", self.lat_eval.to_json())
+                    .set("predict", self.lat_predict.to_json())
+                    .set("batch_wait", self.lat_batch_wait.to_json())
                     .set("queue", self.lat_queue.to_json())
                     .set("compute", self.lat_compute.to_json()),
             )
@@ -262,6 +348,37 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile_ms(0.99), 0.0);
         assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn raw_view_counts_things_not_microseconds() {
+        let h = Histogram::new();
+        for size in [1u64, 1, 2, 4, 8] {
+            h.record_us(size);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max_raw(), 8);
+        assert!((h.mean_raw() - 3.2).abs() < 1e-9);
+        let j = h.to_json_raw();
+        assert_eq!(j.req("count").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.req("max").unwrap().as_usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn predict_block_reports_exact_mean_batch() {
+        let m = Metrics::new();
+        m.predict_inputs.fetch_add(6, Ordering::Relaxed);
+        m.predict_batches.fetch_add(2, Ordering::Relaxed);
+        let j = m.to_json();
+        let p = j.req("predict").unwrap();
+        assert_eq!(p.req("inputs").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(p.req("batches").unwrap().as_usize().unwrap(), 2);
+        assert!(
+            (p.req("mean_batch").unwrap().as_f64().unwrap() - 3.0).abs()
+                < 1e-9
+        );
+        assert!(j.req("latency").unwrap().req("predict").is_ok());
+        assert!(j.req("latency").unwrap().req("batch_wait").is_ok());
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //!                    │             source-model fingerprint change
 //!                    ├── flight  — single-flight dedup: N concurrent
 //!                    │             identical requests share one SQuant run
+//!                    ├── batch   — dynamic batching for `predict`: inputs
+//!                    │             for the same (model, spec) coalesce
+//!                    │             within `--batch-window-us` into one
+//!                    │             stacked forward pass
 //!                    ├── sched   — bounded queue + fixed worker pool;
 //!                    │             full ⇒ {"ok":false,"error":"busy",
 //!                    │             "retry_ms":...}
@@ -51,7 +55,20 @@
 //!   from a worker when the flight completes.  This is the path the
 //!   [`net`] reactor drives — one event-loop thread, responses delivered
 //!   through a completion channel + poller wakeup.
+//!
+//! **Inference serving.**  `predict` runs a forward pass against a cached
+//! artifact.  Artifact resolution reuses the whole quantize pipeline
+//! (mem → disk → single-flight quantize on miss), then the input joins
+//! the [`batch::Batcher`]: concurrent inputs for the same (model, spec)
+//! coalesce inside `--batch-window-us` (or until `--max-batch`) into ONE
+//! stacked `(B, C, H, W)` forward — one batched im2col/matmul per layer —
+//! admitted on the same cost axis as quantize flights (batched
+//! `M·N·K × bits`) and executed as a pool task, with logits fanned back
+//! per request in arrival order.  `eval`'s accuracy work is fanned the
+//! same way: per-batch weighted tasks with last-batch-home aggregation,
+//! so one eval no longer pins a worker for its whole run.
 
+pub mod batch;
 pub mod cache;
 pub mod disk;
 pub mod flight;
@@ -69,27 +86,27 @@ use std::time::Instant;
 use crate::coordinator;
 use crate::coordinator::server::ModelStore;
 use crate::coordinator::{LayerOutcome, LayerTask};
-use crate::eval;
-use crate::io::dataset::Dataset;
 use crate::nn::actrange::data_free_ranges;
+use crate::nn::engine::forward;
 use crate::nn::Params;
-use crate::quant::spec::QuantSpec;
+use crate::quant::spec::{Method, QuantSpec};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::pool::default_threads;
 
+use batch::{BatchCfg, Batcher, FlushReason, PredictDone, PredictOutcome};
 use cache::{params_bytes, Cache, CacheEntry, QuantKey};
 use disk::{DiskCache, Lookup};
 use flight::{AsyncRole, Flight, Role};
 use metrics::Metrics;
-use sched::{CostTicket, Scheduler, Submit, COST_UNIT};
+use sched::{CostTicket, Scheduler, COST_UNIT};
 
 /// Serving configuration (CLI: `--workers`, `--queue-depth`, `--cache-cap`,
 /// `--cache-mb`, `--cache-dir`, `--cache-disk-mb`, `--max-conns`,
-/// `--idle-timeout-ms`).
+/// `--idle-timeout-ms`, `--batch-window-us`, `--max-batch`, `--conn-rps`).
 #[derive(Clone, Debug)]
 pub struct EngineCfg {
-    /// Worker threads executing quantize/eval jobs.
+    /// Worker threads executing quantize/eval/predict jobs.
     pub workers: usize,
     /// Jobs allowed to wait beyond the running ones before `busy`.
     pub queue_depth: usize,
@@ -106,6 +123,14 @@ pub struct EngineCfg {
     pub max_conns: usize,
     /// Idle / slow-loris connection reap timeout in ms (0 = disabled).
     pub idle_timeout_ms: u64,
+    /// Predict batching: how long the first input of a batch waits for
+    /// company, in microseconds (0 = no coalescing).
+    pub batch_window_us: u64,
+    /// Predict batching: flush as soon as a batch holds this many inputs.
+    pub max_batch: usize,
+    /// Per-connection request rate limit (token bucket, requests/second;
+    /// 0 = unlimited).  Over-limit requests answer `busy` + `retry_ms`.
+    pub conn_rps: u64,
 }
 
 impl Default for EngineCfg {
@@ -119,6 +144,9 @@ impl Default for EngineCfg {
             cache_disk_mb: 1024,
             max_conns: 1024,
             idle_timeout_ms: 60_000,
+            batch_window_us: 2_000,
+            max_batch: 32,
+            conn_rps: 0,
         }
     }
 }
@@ -186,8 +214,8 @@ impl Source {
 
 type QuantOutcome = Result<Arc<CacheEntry>, ServeError>;
 
-/// Everything the async accuracy stage needs, bundled so it can hop onto
-/// a worker in one move.
+/// Everything the accuracy stage needs, bundled so admission can fan it
+/// over the pool in one move.
 struct EvalTask {
     key: QuantKey,
     entry: Arc<CacheEntry>,
@@ -195,6 +223,30 @@ struct EvalTask {
     t0: Instant,
     samples: usize,
     batch: usize,
+}
+
+/// Multi-task completion state for one admitted eval fan — the accuracy
+/// analogue of [`Assembly`].  Each per-batch forward task adds its
+/// correct-prediction count and decrements `remaining`; the last batch
+/// home computes the accuracy, records the queue/compute split, answers
+/// the requester and releases the admission ticket
+/// (see [`Engine::finish_eval_fan`]).
+struct EvalFan {
+    task: EvalTask,
+    /// Samples actually evaluated: `min(samples, test set size)`.
+    n: usize,
+    correct: AtomicUsize,
+    /// First forward failure wins; later batches still run (their tasks
+    /// are already queued) but the response reports the error.
+    failed: Mutex<Option<String>>,
+    remaining: AtomicUsize,
+    /// When the fan was admitted (queue-wait starts here).
+    t_admit: Instant,
+    /// When the first batch task started (queue-wait ends).
+    t_first: Mutex<Option<Instant>>,
+    /// Fired exactly once by the last batch home.
+    done: Mutex<Option<Done>>,
+    ticket: Mutex<Option<CostTicket>>,
 }
 
 /// Multi-task completion state for one admitted quantize flight.
@@ -285,8 +337,45 @@ fn eval_response(
         .set("served_ms", t0.elapsed().as_secs_f64() * 1e3)
 }
 
+/// The `predict` success response (shared by the sync and async paths).
+fn predict_response(
+    key: &QuantKey,
+    t0: Instant,
+    src: Source,
+    out: PredictOutcome,
+) -> Json {
+    let argmax = out
+        .logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| {
+            a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Json::obj()
+        .set("ok", true)
+        .set("model", key.model.as_str())
+        .set("spec", key.spec.canonical())
+        .set("wbits", key.spec.wbits)
+        .set("abits", key.spec.abits)
+        .set("argmax", argmax)
+        .set(
+            "logits",
+            Json::Arr(
+                out.logits.into_iter().map(|v| Json::Num(v as f64)).collect(),
+            ),
+        )
+        .set("batch", out.batch)
+        .set("batch_wait_ms", out.wait_ms)
+        .set("cached", src.is_cached())
+        .set("source", src.label())
+        .set("served_ms", t0.elapsed().as_secs_f64() * 1e3)
+}
+
 /// The serving engine: model store + cache + single-flight + scheduler +
-/// metrics.  Shared as `Arc<Engine>` between all connection threads.
+/// batcher + metrics.  Shared as `Arc<Engine>` between all connection
+/// threads.
 pub struct Engine {
     store: Arc<ModelStore>,
     cache: Cache,
@@ -294,6 +383,11 @@ pub struct Engine {
     disk: Option<DiskCache>,
     flight: Flight<QuantKey, QuantOutcome>,
     sched: Scheduler,
+    /// Per-(model, spec) predict batch collector.  Its executor holds a
+    /// `Weak<Engine>`, so the shutdown flush in `Batcher::drop` (which
+    /// runs while the engine is being torn down) fails owed items
+    /// instead of touching a half-dropped engine or its pool.
+    batcher: Batcher,
     /// Shared with the net reactor, which maintains the `conns.*` gauges.
     pub metrics: Arc<Metrics>,
 }
@@ -329,13 +423,27 @@ impl Engine {
         for (_, params) in store.models.values() {
             cache.exempt_baseline(params.values());
         }
-        Ok(Arc::new(Engine {
-            store,
-            cache,
-            disk,
-            flight: Flight::new(),
-            sched: Scheduler::new(workers, cfg.queue_depth),
-            metrics,
+        let bcfg = BatchCfg::new(cfg.batch_window_us, cfg.max_batch);
+        // The batcher's executor needs the engine it lives inside — a weak
+        // cycle: flushes after the engine is gone (shutdown) fail their
+        // items instead of computing against a half-dropped engine.
+        Ok(Arc::new_cyclic(|weak: &std::sync::Weak<Engine>| {
+            let w = weak.clone();
+            Engine {
+                store,
+                cache,
+                disk,
+                flight: Flight::new(),
+                sched: Scheduler::new(workers, cfg.queue_depth),
+                batcher: Batcher::new(bcfg, move |b| match w.upgrade() {
+                    Some(eng) => eng.exec_batch(b),
+                    None => batch::fail_batch(
+                        b,
+                        ServeError::Failed("engine shut down".into()),
+                    ),
+                }),
+                metrics,
+            }
         }))
     }
 
@@ -366,6 +474,7 @@ impl Engine {
         let resp = match cmd.as_str() {
             "quantize" => self.do_quantize(req),
             "eval" => self.do_eval(req),
+            "predict" => self.do_predict(req),
             _ => self.simple_cmd(&cmd, req),
         };
         self.finish(&cmd, t0, &resp);
@@ -398,6 +507,7 @@ impl Engine {
         match cmd.as_str() {
             "quantize" => self.quantize_async(req, done),
             "eval" => self.eval_async(req, done),
+            "predict" => self.predict_async(req, done),
             "warm" => self.warm_async(req, done),
             _ => done(self.simple_cmd(&cmd, req)),
         }
@@ -435,6 +545,11 @@ impl Engine {
                         ),
                     );
                 }
+                // Flat per-image input length (product of the dataset's
+                // [C, H, W]), so predict clients can size their `input`
+                // arrays without guessing.
+                let input_len: usize =
+                    self.store.test.images.shape[1..].iter().product();
                 Json::obj()
                     .set("ok", true)
                     .set(
@@ -442,6 +557,7 @@ impl Engine {
                         Json::Arr(names.into_iter().map(Json::Str).collect()),
                     )
                     .set("layers", layers)
+                    .set("input_len", input_len)
             }
             "warm" => self.do_warm(req),
             "stats" => self.stats_json(),
@@ -458,6 +574,7 @@ impl Engine {
         match cmd {
             "quantize" => self.metrics.lat_quantize.record_ms(ms),
             "eval" => self.metrics.lat_eval.record_ms(ms),
+            "predict" => self.metrics.lat_predict.record_ms(ms),
             _ => {}
         }
         if matches!(resp.get("ok"), Some(Json::Bool(false))) {
@@ -543,33 +660,25 @@ impl Engine {
             Ok(x) => x,
             Err(e) => return e.to_json(),
         };
-        // Accuracy also runs under the bounded worker pool, so eval traffic
-        // cannot oversubscribe the machine either.
+        // The fan answers from the last batch's worker; park on a channel
+        // to keep this path synchronous.
         let (tx, rx) = mpsc::channel();
-        let eng = Arc::clone(self);
-        let k = key.clone();
-        let entry2 = Arc::clone(&entry);
-        match self.sched.try_submit(move || {
-            let _ = tx.send(eng.run_accuracy(&k, &entry2, samples, batch));
-        }) {
-            Submit::Busy { retry_ms } => {
-                self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
-                ServeError::Busy { retry_ms }.to_json()
-            }
-            Submit::Accepted => match rx.recv() {
-                Ok(Ok((acc, n))) => eval_response(&key, t0, &entry, src, acc, n),
-                Ok(Err(msg)) => ServeError::Failed(msg).to_json(),
-                Err(_) => ServeError::Failed("eval worker dropped".into()).to_json(),
-            },
-        }
+        self.eval_fan(
+            EvalTask { key, entry, src, t0, samples, batch },
+            Box::new(move |resp| {
+                let _ = tx.send(resp);
+            }),
+        );
+        rx.recv().unwrap_or_else(|_| {
+            ServeError::Failed("eval worker dropped".into()).to_json()
+        })
     }
 
     /// Async `eval`: artifact stage via [`Engine::quantized_async`], then
-    /// the accuracy stage.  When the artifact continuation already runs on
-    /// a worker (fresh compute or disk decode), accuracy runs inline in
-    /// that job; from the reactor thread (memory hit) or a leader's
-    /// completion fan-out (shared), it is submitted as its own job so the
-    /// event loop / leader worker never runs unbounded compute.
+    /// the accuracy stage fans over the pool ([`Engine::eval_fan`]).
+    /// Admission and task submission are non-blocking, so the continuation
+    /// is safe on the reactor thread (memory hit) and on a leader's worker
+    /// or completion fan-out alike.
     fn eval_async(self: &Arc<Self>, req: &Json, done: Done) {
         let key = match self.key_from(req) {
             Ok(k) => k,
@@ -581,47 +690,365 @@ impl Engine {
         let k = key.clone();
         self.quantized_async(
             &key,
+            Box::new(move |res| match res {
+                Ok((entry, src)) => eng.eval_fan(
+                    EvalTask { key: k, entry, src, t0, samples, batch },
+                    done,
+                ),
+                Err(e) => done(e.to_json()),
+            }),
+        );
+    }
+
+    /// Admit one eval and fan its accuracy batches over the pool as
+    /// weighted tasks — the inference analogue of [`Engine::spawn_tasks`].
+    /// Each batch is one stacked forward at cost `batch size × per-input
+    /// forward cost`, queued at cost prefix-sum virtual-time keys, so
+    /// concurrent evals, quantize flights and predict batches all
+    /// interleave by predicted work instead of one eval pinning a worker
+    /// for its whole run.  Never blocks the caller; `done` fires from the
+    /// last batch's worker ([`Engine::finish_eval_fan`]).
+    fn eval_fan(self: &Arc<Self>, task: EvalTask, done: Done) {
+        let n = task.samples.min(self.store.test.len());
+        if n == 0 {
+            return done(
+                ServeError::Failed("no test data loaded".into()).to_json(),
+            );
+        }
+        let per = match self.infer_cost_per_input(&task.key) {
+            Ok(c) => c,
+            Err(e) => return done(e.to_json()),
+        };
+        match self.sched.try_admit(per.saturating_mul(n as u64)) {
+            Err(retry_ms) => {
+                self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                done(ServeError::Busy { retry_ms }.to_json());
+            }
+            Ok(ticket) => {
+                let batch = task.batch.max(1);
+                let nb = n.div_ceil(batch);
+                let fan = Arc::new(EvalFan {
+                    task,
+                    n,
+                    correct: AtomicUsize::new(0),
+                    failed: Mutex::new(None),
+                    remaining: AtomicUsize::new(nb),
+                    t_admit: Instant::now(),
+                    t_first: Mutex::new(None),
+                    done: Mutex::new(Some(done)),
+                    ticket: Mutex::new(Some(ticket)),
+                });
+                let mut vkey = self.sched.vnow();
+                for bi in 0..nb {
+                    let start = vkey;
+                    let bn = batch.min(n - bi * batch);
+                    vkey = vkey.saturating_add(per.saturating_mul(bn as u64));
+                    let eng = Arc::clone(self);
+                    let f = Arc::clone(&fan);
+                    self.sched.submit_task(start, move || {
+                        f.t_first
+                            .lock()
+                            .unwrap()
+                            .get_or_insert_with(Instant::now);
+                        match eng.eval_batch(&f, bi * batch, bn) {
+                            Ok(c) => {
+                                f.correct.fetch_add(c, Ordering::Relaxed);
+                            }
+                            Err(msg) => {
+                                f.failed.lock().unwrap().get_or_insert(msg);
+                            }
+                        }
+                        if f.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            eng.finish_eval_fan(&f);
+                        }
+                    });
+                }
+            }
+        }
+    }
+
+    /// One stacked forward over test images `[start, start+len)`: the
+    /// per-batch body of `eval::accuracy`, run as its own pool task.
+    /// Returns the batch's correct top-1 count; panics are contained so a
+    /// bad batch fails the fan instead of stranding its requester.
+    fn eval_batch(
+        &self,
+        fan: &EvalFan,
+        start: usize,
+        len: usize,
+    ) -> Result<usize, String> {
+        let key = &fan.task.key;
+        let (graph, _) = self
+            .store
+            .models
+            .get(&key.model)
+            .ok_or_else(|| format!("unknown model '{}'", key.model))?;
+        let (x, labels) = self.store.test.batch(start, len);
+        let entry = &fan.task.entry;
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forward(graph, &entry.params, &x, entry.act.as_ref(), None)
+        }))
+        .map_err(|_| format!("eval batch panicked for {}", key.label()))?
+        .map_err(|e| format!("{e:#}"))?;
+        let preds = out.logits.argmax_rows();
+        Ok(preds
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| **p == **l as usize)
+            .count())
+    }
+
+    /// Last-batch-home completion for an eval fan: record the
+    /// queue/compute split, release the admission ticket, answer the
+    /// requester (the accuracy analogue of [`Engine::finish_assembly`]).
+    fn finish_eval_fan(&self, fan: &EvalFan) {
+        let failed = fan.failed.lock().unwrap().take();
+        // One queue/compute sample per fan that produced an accuracy —
+        // matching the quantize flight policy of not skewing the split
+        // with failed runs.
+        if failed.is_none() {
+            let now = Instant::now();
+            let t_first = fan.t_first.lock().unwrap().unwrap_or(now);
+            self.metrics
+                .lat_queue
+                .record_ms((t_first - fan.t_admit).as_secs_f64() * 1e3);
+            self.metrics
+                .lat_compute
+                .record_ms((now - t_first).as_secs_f64() * 1e3);
+        }
+        drop(fan.ticket.lock().unwrap().take());
+        let Some(done) = fan.done.lock().unwrap().take() else { return };
+        let t = &fan.task;
+        done(match failed {
+            None => {
+                let acc =
+                    fan.correct.load(Ordering::Relaxed) as f64 / fan.n as f64;
+                eval_response(&t.key, t.t0, &t.entry, t.src, acc, fan.n)
+            }
+            Some(msg) => ServeError::Failed(msg).to_json(),
+        });
+    }
+
+    // ---- predict -----------------------------------------------------------
+
+    /// Parse + validate the `input` field: a flat f32 array of exactly
+    /// C·H·W elements (the serve dataset's per-image shape).
+    fn predict_input(&self, req: &Json) -> Result<Vec<f32>, ServeError> {
+        let arr = match req.get("input") {
+            Some(Json::Arr(a)) => a,
+            Some(_) => {
+                return Err(ServeError::Failed(
+                    "'input' must be an array of numbers".into(),
+                ))
+            }
+            None => return Err(ServeError::Failed("missing 'input'".into())),
+        };
+        let mut input = Vec::with_capacity(arr.len());
+        for v in arr {
+            input.push(v.as_f64().map_err(|_| {
+                ServeError::Failed("'input' must be an array of numbers".into())
+            })? as f32);
+        }
+        let shape = &self.store.test.images.shape;
+        let per: usize = shape[1..].iter().product();
+        if input.len() != per {
+            return Err(ServeError::Failed(format!(
+                "input has {} elements, model expects {} ({:?})",
+                input.len(),
+                per,
+                &shape[1..]
+            )));
+        }
+        Ok(input)
+    }
+
+    /// Sync `predict` for [`Engine::handle`]: parks the async path on a
+    /// channel (the batch executor answers from a pool worker, never the
+    /// calling thread, so this cannot self-deadlock).
+    fn do_predict(self: &Arc<Self>, req: &Json) -> Json {
+        let (tx, rx) = mpsc::channel();
+        self.predict_async(
+            req,
+            Box::new(move |resp| {
+                let _ = tx.send(resp);
+            }),
+        );
+        rx.recv().unwrap_or_else(|_| {
+            ServeError::Failed("predict worker dropped".into()).to_json()
+        })
+    }
+
+    /// Async `predict`: resolve the artifact exactly like quantize
+    /// (mem → disk → single-flight quantize on miss — a cold key
+    /// quantizes and THEN predicts, all through the same flight
+    /// machinery), then enqueue the input under the key's batch.  The
+    /// response fires from the worker that runs the flushed batch's
+    /// stacked forward ([`Engine::exec_batch`]).
+    fn predict_async(self: &Arc<Self>, req: &Json, done: Done) {
+        let key = match self.key_from(req) {
+            Ok(k) => k,
+            Err(e) => return done(e.to_json()),
+        };
+        let input = match self.predict_input(req) {
+            Ok(i) => i,
+            Err(e) => return done(e.to_json()),
+        };
+        let t0 = Instant::now();
+        let eng = Arc::clone(self);
+        let k = key.clone();
+        self.quantized_async(
+            &key,
             Box::new(move |res| {
                 let (entry, src) = match res {
                     Ok(x) => x,
                     Err(e) => return done(e.to_json()),
                 };
-                let task = EvalTask { key: k, entry, src, t0, samples, batch };
-                match src {
-                    Source::Computed | Source::Disk => eng.eval_stage(task, done),
-                    Source::Hit | Source::Shared => match eng.sched.try_reserve() {
-                        Err(retry_ms) => {
-                            eng.metrics
-                                .rejected_busy
-                                .fetch_add(1, Ordering::Relaxed);
-                            done(ServeError::Busy { retry_ms }.to_json());
-                        }
-                        Ok(ticket) => {
-                            let eng2 = Arc::clone(&eng);
-                            eng.sched.submit_reserved(ticket, move || {
-                                eng2.eval_stage(task, done);
-                            });
-                        }
-                    },
-                }
+                let key2 = k.clone();
+                let pd: PredictDone = Box::new(move |out| {
+                    done(match out {
+                        Ok(out) => predict_response(&key2, t0, src, out),
+                        Err(e) => e.to_json(),
+                    })
+                });
+                eng.batcher.enqueue(k, entry, input, pd);
             }),
         );
     }
 
-    /// Accuracy stage of an async eval (already admitted / on a worker).
-    fn eval_stage(&self, task: EvalTask, done: Done) {
-        let resp = match self.run_accuracy(
-            &task.key,
-            &task.entry,
-            task.samples,
-            task.batch,
-        ) {
-            Ok((acc, n)) => {
-                eval_response(&task.key, task.t0, &task.entry, task.src, acc, n)
+    /// Predicted cost of ONE forward-pass input for `key`, in the
+    /// scheduler's weight-element-bit currency: Σ over layers of
+    /// `M·N·K × bits`, with FP32 layers counted at 32 bits — inference
+    /// runs every layer, unlike quantization where FP32 layers cost
+    /// nothing.  Eval fans and predict batches are admitted at
+    /// `inputs × this`, on the same cost axis as quantize flights.
+    fn infer_cost_per_input(&self, key: &QuantKey) -> Result<u64, ServeError> {
+        let tasks = self.plan_flight(key)?;
+        Ok(tasks
+            .iter()
+            .map(|t| {
+                let mnk = (t.layer.m * t.layer.n * t.layer.k) as u64;
+                let bits =
+                    if t.method == Method::Fp32 { 32 } else { t.bits as u64 };
+                mnk.saturating_mul(bits)
+            })
+            .fold(0u64, |a, c| a.saturating_add(c)))
+    }
+
+    /// Executor installed on the [`Batcher`]: admit one flushed batch by
+    /// its batched forward cost, then run it as ONE weighted pool task —
+    /// stack the inputs into a `(B, C, H, W)` tensor, one batched forward
+    /// (one im2col + GEMM per layer), fan the logits rows back per item
+    /// in arrival order.  Runs on the collector thread or inline on an
+    /// enqueueing caller (max-batch flush — possibly the reactor), so it
+    /// must never block: an admission failure busy-rejects the whole
+    /// batch instead of waiting.
+    fn exec_batch(self: &Arc<Self>, b: batch::Batch) {
+        match b.reason {
+            FlushReason::Window => {
+                self.metrics.batch_flush_timeout.fetch_add(1, Ordering::Relaxed);
             }
-            Err(msg) => ServeError::Failed(msg).to_json(),
+            FlushReason::Full => {
+                self.metrics.batch_flush_full.fetch_add(1, Ordering::Relaxed);
+            }
+            FlushReason::Shutdown => {}
+        }
+        let per = match self.infer_cost_per_input(&b.key) {
+            Ok(c) => c,
+            Err(e) => return batch::fail_batch(b, e),
         };
-        done(resp);
+        let cost = per.saturating_mul(b.items.len() as u64);
+        let ticket = match self.sched.try_admit(cost) {
+            Ok(t) => t,
+            Err(retry_ms) => {
+                self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                return batch::fail_batch(b, ServeError::Busy { retry_ms });
+            }
+        };
+        let t_admit = Instant::now();
+        let eng = Arc::clone(self);
+        self.sched.submit_task(self.sched.vnow(), move || {
+            // Held through the forward: the batch's predicted cost stays
+            // reserved until its logits are fanned out.
+            let _ticket = ticket;
+            let t_first = Instant::now();
+            let n = b.items.len();
+            eng.metrics.predict_batches.fetch_add(1, Ordering::Relaxed);
+            eng.metrics.predict_inputs.fetch_add(n as u64, Ordering::Relaxed);
+            // Raw units (inputs per batch), not microseconds.
+            eng.metrics.batch_size.record_us(n as u64);
+            let inputs: Vec<&[f32]> =
+                b.items.iter().map(|i| i.input.as_slice()).collect();
+            let fwd = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || eng.run_batch_forward(&b.key, &b.entry, &inputs),
+            ))
+            .unwrap_or_else(|_| {
+                Err(format!("predict batch panicked for {}", b.key.label()))
+            });
+            drop(inputs);
+            if fwd.is_ok() {
+                let now = Instant::now();
+                eng.metrics
+                    .lat_queue
+                    .record_ms((t_first - t_admit).as_secs_f64() * 1e3);
+                eng.metrics
+                    .lat_compute
+                    .record_ms((now - t_first).as_secs_f64() * 1e3);
+            }
+            match fwd {
+                Ok(rows) => {
+                    for (item, logits) in b.items.into_iter().zip(rows) {
+                        let wait_ms =
+                            (t_first - item.enqueued).as_secs_f64() * 1e3;
+                        eng.metrics.lat_batch_wait.record_ms(wait_ms);
+                        (item.done)(Ok(PredictOutcome {
+                            logits,
+                            batch: n,
+                            wait_ms,
+                        }));
+                    }
+                }
+                Err(msg) => {
+                    let err = ServeError::Failed(msg);
+                    for item in b.items {
+                        (item.done)(Err(err.clone()));
+                    }
+                }
+            }
+        });
+    }
+
+    /// One stacked forward for a predict batch: rows are flat (C·H·W)
+    /// inputs in arrival order, output is one logits row per input.
+    /// Bit-identical to running each input as its own batch of one —
+    /// `forward` treats batch images independently (per-image im2col for
+    /// convs, per-row matmul for linear layers), which the engine tests
+    /// pin.
+    fn run_batch_forward(
+        &self,
+        key: &QuantKey,
+        entry: &CacheEntry,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let (graph, _) = self
+            .store
+            .models
+            .get(&key.model)
+            .ok_or_else(|| format!("unknown model '{}'", key.model))?;
+        let img = &self.store.test.images.shape;
+        let mut shape = vec![inputs.len()];
+        shape.extend_from_slice(&img[1..]);
+        let per: usize = img[1..].iter().product();
+        let mut data = Vec::with_capacity(inputs.len() * per);
+        for row in inputs {
+            data.extend_from_slice(row);
+        }
+        let x = Tensor::from_vec(&shape, data);
+        let out = forward(graph, &entry.params, &x, entry.act.as_ref(), None)
+            .map_err(|e| format!("{e:#}"))?;
+        let ncls = out.logits.shape[1];
+        Ok((0..inputs.len())
+            .map(|r| out.logits.data[r * ncls..(r + 1) * ncls].to_vec())
+            .collect())
     }
 
     /// `{"cmd":"warm","model":...,"wbits":...}` — prefetch into the cache
@@ -815,6 +1242,18 @@ impl Engine {
             .set(
                 "flight",
                 Json::obj().set("in_flight", self.flight.in_flight()),
+            )
+            // Predict batching gauges + policy (counters and the
+            // batch-size distribution live under metrics.predict).
+            .set(
+                "batch",
+                Json::obj()
+                    .set("pending", self.batcher.pending())
+                    .set(
+                        "window_us",
+                        self.batcher.cfg().window.as_micros() as usize,
+                    )
+                    .set("max_batch", self.batcher.cfg().max_batch),
             )
             .set("conns", self.metrics.conns_json())
     }
@@ -1135,14 +1574,14 @@ impl Engine {
 
     /// Last-task-home completion: assemble the artifact, record the
     /// queue/compute latency split, publish to cache, release
-    /// single-flight waiters and the requester, spill to disk, and only
-    /// then release the flight's admission ticket.  Cache fill happens
-    /// before `complete` so no request can observe "not in flight, not
-    /// cached" for a finished key; the write-through disk spill happens
-    /// strictly *after* `complete` and the notify, so neither the
-    /// requester nor any waiter blocks on the artifact file write.
-    /// Assembly panics are converted to errors so `complete` always runs.
-    fn finish_assembly(&self, asm: &Assembly) {
+    /// single-flight waiters and the requester, queue the disk spill, and
+    /// release the flight's admission ticket.  Cache fill happens before
+    /// `complete` so no request can observe "not in flight, not cached"
+    /// for a finished key; the write-through disk spill is queued as its
+    /// own background pool job ([`Engine::spill_bg`]), so the last task
+    /// home pays no file I/O at all.  Assembly panics are converted to
+    /// errors so `complete` always runs.
+    fn finish_assembly(self: &Arc<Self>, asm: &Assembly) {
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.assemble_entry(asm)
         }))
@@ -1178,12 +1617,15 @@ impl Engine {
         if let Some(notify) = asm.notify.lock().unwrap().take() {
             notify(res.clone().map(|e| (e, Source::Computed)));
         }
-        // Write-through spill stays after the notify so the requester
-        // never blocks on the artifact file write (an inline eval delays
-        // persistence, but spilling is best-effort by design).
+        // Write-through spill runs as a background pool job: neither the
+        // requester nor this worker's next task waits on file I/O
+        // (spilling is best-effort by design; `wait_idle` still covers
+        // the queued job, so shutdown never truncates a spill).
         if let Ok(entry) = &res {
-            self.spill(&asm.key, entry);
-            self.spill_evicted(evicted);
+            self.spill_bg(
+                Some((asm.key.clone(), Arc::clone(entry))),
+                evicted,
+            );
         }
     }
 
@@ -1236,13 +1678,13 @@ impl Engine {
     /// Probe the disk tier on a memory miss.  A valid artifact is promoted
     /// into the memory cache; stale/corrupt artifacts count as
     /// invalidations (the file is already deleted by [`DiskCache::load`]).
-    fn disk_probe(&self, key: &QuantKey) -> Option<Arc<CacheEntry>> {
+    fn disk_probe(self: &Arc<Self>, key: &QuantKey) -> Option<Arc<CacheEntry>> {
         let disk = self.disk.as_ref()?;
         match disk.load(key, self.store.fingerprint(&key.model)) {
             Lookup::Hit(entry) => {
                 self.metrics.disk_hits.fetch_add(1, Ordering::Relaxed);
                 let evicted = self.cache.put(key.clone(), Arc::clone(&entry));
-                self.spill_evicted(evicted);
+                self.spill_bg(None, evicted);
                 Some(entry)
             }
             Lookup::Stale => {
@@ -1255,6 +1697,28 @@ impl Engine {
                 None
             }
         }
+    }
+
+    /// Queue artifact persistence as a background pool job, off the
+    /// request path: the caller (last task home, disk promote) returns
+    /// immediately and a worker pays the encode + file write later.
+    /// `wait_idle` covers the queued job, so restart-over-the-same-dir
+    /// semantics are unchanged.  No-op without a disk tier or work.
+    fn spill_bg(
+        self: &Arc<Self>,
+        fresh: Option<(QuantKey, Arc<CacheEntry>)>,
+        evicted: Vec<(QuantKey, Arc<CacheEntry>)>,
+    ) {
+        if self.disk.is_none() || (fresh.is_none() && evicted.is_empty()) {
+            return;
+        }
+        let eng = Arc::clone(self);
+        self.sched.submit_task(self.sched.vnow(), move || {
+            if let Some((k, e)) = fresh {
+                eng.spill(&k, &e);
+            }
+            eng.spill_evicted(evicted);
+        });
     }
 
     /// Persist one artifact (best-effort: a full disk must not fail the
@@ -1281,61 +1745,12 @@ impl Engine {
             }
         }
     }
-
-    fn run_accuracy(
-        &self,
-        key: &QuantKey,
-        entry: &CacheEntry,
-        samples: usize,
-        batch: usize,
-    ) -> Result<(f64, usize), String> {
-        let (graph, _) = self
-            .store
-            .models
-            .get(&key.model)
-            .ok_or_else(|| format!("unknown model '{}'", key.model))?;
-        let ds = self
-            .test_subset(samples)
-            .ok_or_else(|| "no test data loaded".to_string())?;
-        let n = ds.len();
-        // threads = 1: accuracy runs inline on the one admitted worker —
-        // no scoped thread team on the request path.  Concurrent eval
-        // requests parallelize across workers instead of inside one.
-        let acc = eval::accuracy(
-            graph,
-            &entry.params,
-            entry.act.as_ref(),
-            &ds,
-            batch.max(1),
-            1,
-        )
-        .map_err(|e| format!("{e:#}"))?;
-        Ok((acc, n))
-    }
-
-    /// First `samples` test images without cloning the whole set.
-    fn test_subset(&self, samples: usize) -> Option<Dataset> {
-        let total = self.store.test.len();
-        let n = samples.min(total);
-        if n == 0 {
-            return None;
-        }
-        let mut shape = self.store.test.images.shape.clone();
-        shape[0] = n;
-        let per: usize = shape[1..].iter().product();
-        Some(Dataset {
-            images: Tensor::from_vec(
-                &shape,
-                self.store.test.images.data[..n * per].to_vec(),
-            ),
-            labels: self.store.test.labels[..n].to_vec(),
-        })
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::io::dataset::Dataset;
     use crate::nn::tiny_test_graph;
     use std::collections::HashMap;
     use std::sync::atomic::AtomicBool;
@@ -2054,5 +2469,255 @@ mod tests {
         // Promoted synchronously: a follow-up quantize is a memory hit.
         let r = engine.handle(&quantize_req());
         assert_eq!(r.req("source").unwrap().as_str().unwrap(), "mem");
+    }
+
+    // ---- predict -----------------------------------------------------------
+
+    /// One deterministic (C·H·W) input per index, matching the tiny
+    /// store's 3×8×8 test images.
+    fn predict_inputs(n: usize) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::rng::Rng::new(7);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; 3 * 8 * 8];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    fn predict_req(input: &[f32]) -> Json {
+        Json::obj()
+            .set("cmd", "predict")
+            .set("model", "tiny")
+            .set("wbits", 4usize)
+            .set(
+                "input",
+                Json::Arr(
+                    input.iter().map(|v| Json::Num(*v as f64)).collect(),
+                ),
+            )
+    }
+
+    fn logits_of(resp: &Json) -> Vec<f32> {
+        match resp.req("logits").unwrap() {
+            Json::Arr(a) => {
+                a.iter().map(|v| v.as_f64().unwrap() as f32).collect()
+            }
+            other => panic!("logits not an array: {}", other.dump()),
+        }
+    }
+
+    /// Predict acceptance (pinned): a batched predict's logits are
+    /// bit-identical to running each input as its own single-image
+    /// forward against the serial CLI-path artifact of the same
+    /// (model, spec).
+    #[test]
+    fn batched_predict_bit_identical_to_single_forwards() {
+        let engine = Engine::new(
+            tiny_store(),
+            EngineCfg {
+                // A long window with max_batch = 4: the 4th enqueue
+                // flushes the whole set as ONE full batch.
+                batch_window_us: 60_000_000,
+                max_batch: 4,
+                ..cfg()
+            },
+        )
+        .unwrap();
+        // Artifact in memory first, so every predict enqueues inline.
+        let r = engine.handle(&quantize_req());
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+
+        let inputs = predict_inputs(4);
+        let (tx, rx) = mpsc::channel();
+        for (i, input) in inputs.iter().enumerate() {
+            let tx = tx.clone();
+            engine.submit(
+                &predict_req(input),
+                Box::new(move |resp| tx.send((i, resp)).unwrap()),
+            );
+        }
+        let mut got: Vec<Option<Json>> = vec![None, None, None, None];
+        for _ in 0..4 {
+            let (i, resp) =
+                rx.recv_timeout(Duration::from_secs(60)).expect("predicted");
+            assert_eq!(
+                resp.req("ok").unwrap(),
+                &Json::Bool(true),
+                "{}",
+                resp.dump()
+            );
+            assert_eq!(
+                resp.req("batch").unwrap().as_usize().unwrap(),
+                4,
+                "all four inputs rode one stacked forward"
+            );
+            got[i] = Some(resp);
+        }
+
+        // Reference: serial quantize + one single-image forward per input.
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let spec = QuantSpec::parse("w4").unwrap();
+        let (qp, _) = coordinator::quantize_model_spec(&g, &p, &spec, 1).unwrap();
+        for (i, input) in inputs.iter().enumerate() {
+            let x = Tensor::from_vec(&[1, 3, 8, 8], input.clone());
+            let out = forward(&g, &qp, &x, None, None).unwrap();
+            let resp = got[i].as_ref().unwrap();
+            assert_eq!(
+                logits_of(resp),
+                out.logits.data,
+                "input {i}: batched logits diverge from single forward"
+            );
+            assert_eq!(
+                resp.req("argmax").unwrap().as_usize().unwrap(),
+                out.logits.argmax_rows()[0]
+            );
+        }
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let pred = stats.req("metrics").unwrap().req("predict").unwrap();
+        assert_eq!(pred.req("inputs").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(pred.req("batches").unwrap().as_usize().unwrap(), 1);
+        assert!(
+            (pred.req("mean_batch").unwrap().as_f64().unwrap() - 4.0).abs()
+                < 1e-9
+        );
+        assert_eq!(pred.req("flush_full").unwrap().as_usize().unwrap(), 1);
+        engine.wait_idle();
+    }
+
+    /// Predict against an uncached key quantizes first (through
+    /// single-flight) and then predicts — one request, `source:"fresh"`.
+    #[test]
+    fn predict_uncached_key_quantizes_then_predicts() {
+        let engine = Engine::new(
+            tiny_store(),
+            EngineCfg { batch_window_us: 0, ..cfg() },
+        )
+        .unwrap();
+        let inputs = predict_inputs(1);
+        let r = engine.handle(&predict_req(&inputs[0]));
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("source").unwrap().as_str().unwrap(), "fresh");
+        assert_eq!(r.req("cached").unwrap(), &Json::Bool(false));
+        assert_eq!(logits_of(&r).len(), 10);
+        // The quantize ran exactly once; the repeat is a memory hit.
+        let r2 = engine.handle(&predict_req(&inputs[0]));
+        assert_eq!(r2.req("source").unwrap().as_str().unwrap(), "mem");
+        assert_eq!(logits_of(&r2), logits_of(&r), "same input, same logits");
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let cache = stats.req("cache").unwrap();
+        assert_eq!(cache.req("misses").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(cache.req("hits").unwrap().as_usize().unwrap(), 1);
+        engine.wait_idle();
+    }
+
+    /// The batch window flushes a partial batch on timeout: two inputs
+    /// inside one window answer as a batch of 2 with a Window flush.
+    #[test]
+    fn predict_window_timeout_flushes_partial_batch() {
+        let engine = Engine::new(
+            tiny_store(),
+            EngineCfg {
+                batch_window_us: 200_000, // far above two submit() calls
+                max_batch: 32,
+                ..cfg()
+            },
+        )
+        .unwrap();
+        engine.handle(&quantize_req());
+        let inputs = predict_inputs(2);
+        let (tx, rx) = mpsc::channel();
+        for input in &inputs {
+            let tx = tx.clone();
+            engine.submit(
+                &predict_req(input),
+                Box::new(move |resp| tx.send(resp).unwrap()),
+            );
+        }
+        for _ in 0..2 {
+            let resp =
+                rx.recv_timeout(Duration::from_secs(60)).expect("flushed");
+            assert_eq!(
+                resp.req("ok").unwrap(),
+                &Json::Bool(true),
+                "{}",
+                resp.dump()
+            );
+            assert_eq!(resp.req("batch").unwrap().as_usize().unwrap(), 2);
+            assert!(
+                resp.req("batch_wait_ms").unwrap().as_f64().unwrap() >= 0.0
+            );
+        }
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let pred = stats.req("metrics").unwrap().req("predict").unwrap();
+        assert_eq!(pred.req("flush_timeout").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(pred.req("flush_full").unwrap().as_usize().unwrap(), 0);
+        engine.wait_idle();
+    }
+
+    #[test]
+    fn predict_rejects_bad_inputs() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        let no_input =
+            Json::obj().set("cmd", "predict").set("model", "tiny").set("wbits", 4usize);
+        let r = engine.handle(&no_input);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(false));
+        assert!(r.req("error").unwrap().as_str().unwrap().contains("input"));
+        let short = predict_req(&[1.0, 2.0]);
+        let r = engine.handle(&short);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(false));
+        assert!(
+            r.req("error").unwrap().as_str().unwrap().contains("192"),
+            "{}",
+            r.dump()
+        );
+        // Bad requests never touched the scheduler or the batcher.
+        assert_eq!(engine.batcher.pending(), 0);
+        assert_eq!(engine.sched.pending(), 0);
+    }
+
+    /// Eval fan: accuracy over the pool matches the serial
+    /// `eval::accuracy` result for the same artifact, including with an
+    /// odd batch size that leaves a short tail batch.
+    #[test]
+    fn eval_fan_matches_serial_accuracy() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let mut models = HashMap::new();
+        models.insert("tiny".to_string(), (g.clone(), p.clone()));
+        let mut fingerprints = HashMap::new();
+        fingerprints.insert("tiny".to_string(), 0);
+        // Non-trivial images/labels so the accuracy is not degenerate.
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut images = Tensor::zeros(&[8, 3, 8, 8]);
+        rng.fill_normal(&mut images.data, 1.0);
+        let labels: Vec<u32> = (0..8).map(|i| i % 10).collect();
+        let test = Dataset { images: images.clone(), labels: labels.clone() };
+        let engine = Engine::new(
+            Arc::new(ModelStore { models, fingerprints, test }),
+            cfg(),
+        )
+        .unwrap();
+        let ev = Json::obj()
+            .set("cmd", "eval")
+            .set("model", "tiny")
+            .set("wbits", 4usize)
+            .set("samples", 8usize)
+            .set("batch", 3usize); // batches of 3, 3, 2
+        let r = engine.handle(&ev);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("samples").unwrap().as_usize().unwrap(), 8);
+
+        let spec = QuantSpec::parse("w4").unwrap();
+        let (qp, _) = coordinator::quantize_model_spec(&g, &p, &spec, 1).unwrap();
+        let ds = Dataset { images, labels };
+        let want = crate::eval::accuracy(&g, &qp, None, &ds, 3, 1).unwrap();
+        assert!(
+            (r.req("top1").unwrap().as_f64().unwrap() - want).abs() < 1e-12,
+            "fanned accuracy {} != serial {}",
+            r.req("top1").unwrap().as_f64().unwrap(),
+            want
+        );
+        engine.wait_idle();
     }
 }

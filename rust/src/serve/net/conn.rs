@@ -16,7 +16,11 @@
 //! closed; a client that pipelines more than [`MAX_PIPELINE`] unanswered
 //! requests stops being read until the queue drains; a write queue above
 //! [`MAX_WBUF`], or one the client stops draining for a full idle period,
-//! kills the connection.
+//! kills the connection.  With `--conn-rps` set, each connection carries a
+//! [`TokenBucket`]: over-limit requests are answered
+//! `{"ok":false,"error":"busy","retry_ms":N}` in pipeline order without
+//! ever reaching the engine (the connection stays open — rate limiting is
+//! backpressure, not punishment).
 
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
@@ -31,6 +35,40 @@ pub const MAX_LINE: usize = 1 << 20;
 pub const MAX_PIPELINE: usize = 64;
 /// Write-queue cap: a client this far behind on reads is gone.
 pub const MAX_WBUF: usize = 8 << 20;
+
+/// Per-connection request rate limiter (`--conn-rps`): a token bucket with
+/// capacity = one second of burst, refilled continuously at `rps` tokens
+/// per second.  Time is passed in, never read, so tests can drive it with
+/// synthetic clocks.
+pub(super) struct TokenBucket {
+    rps: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rps: u64, now: Instant) -> TokenBucket {
+        let rps = rps as f64;
+        TokenBucket { rps, tokens: rps, last: now }
+    }
+
+    /// Take one token, or report how many milliseconds until one refills.
+    /// The hint is exact for a lone client (ceil of the deficit / rate) and
+    /// a lower bound otherwise, matching the scheduler's `retry_ms`
+    /// contract: "not before".
+    pub fn take(&mut self, now: Instant) -> Result<(), u64> {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rps).min(self.rps);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            let ms = ((1.0 - self.tokens) / self.rps * 1e3).ceil() as u64;
+            Err(ms.max(1))
+        }
+    }
+}
 
 pub(super) struct Conn {
     stream: TcpStream,
@@ -56,10 +94,12 @@ pub(super) struct Conn {
     pub last_active: Instant,
     /// Interest currently registered with the poller.
     pub registered: Interest,
+    /// `--conn-rps` token bucket; `None` when unlimited.
+    limit: Option<TokenBucket>,
 }
 
 impl Conn {
-    pub fn new(stream: TcpStream, now: Instant) -> std::io::Result<Conn> {
+    pub fn new(stream: TcpStream, now: Instant, conn_rps: u64) -> std::io::Result<Conn> {
         stream.set_nonblocking(true)?;
         // Responses are one small line each; coalescing hurts latency.
         let _ = stream.set_nodelay(true);
@@ -78,7 +118,18 @@ impl Conn {
             close_after_flush: false,
             last_active: now,
             registered: Interest::READ,
+            limit: (conn_rps > 0).then(|| TokenBucket::new(conn_rps, now)),
         })
+    }
+
+    /// Rate-limit gate for one dequeued request: `Ok` to dispatch,
+    /// `Err(retry_ms)` to answer `busy` without touching the engine.
+    /// Always `Ok` when `--conn-rps` is 0 (no bucket).
+    pub fn take_token(&mut self, now: Instant) -> Result<(), u64> {
+        match &mut self.limit {
+            None => Ok(()),
+            Some(b) => b.take(now),
+        }
     }
 
     pub fn stream(&self) -> &TcpStream {
@@ -288,7 +339,7 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
         let (server, _) = listener.accept().unwrap();
-        (client, Conn::new(server, Instant::now()).unwrap())
+        (client, Conn::new(server, Instant::now(), 0).unwrap())
     }
 
     #[test]
@@ -393,6 +444,44 @@ mod tests {
             }
         }
         assert_eq!(seen, total, "backlog served in full, in order");
+    }
+
+    /// Bucket semantics on a synthetic clock: a burst of `rps` passes,
+    /// request `rps + 1` is rejected with a usable retry hint, and tokens
+    /// refill at exactly `rps` per second (capacity-capped).
+    #[test]
+    fn token_bucket_burst_refill_and_retry_hint() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(4, t0);
+        for _ in 0..4 {
+            assert!(b.take(t0).is_ok(), "full bucket admits a burst of rps");
+        }
+        let retry = b.take(t0).unwrap_err();
+        // Empty bucket at 4 rps: next token is 250 ms out.
+        assert_eq!(retry, 250);
+        // 100 ms refills 0.4 tokens — still short of one.
+        let t1 = t0 + Duration::from_millis(100);
+        assert_eq!(b.take(t1).unwrap_err(), 150);
+        // Another 200 ms brings the total refill to 1.2 tokens: one take
+        // passes, the fractional remainder does not admit a second.
+        let t2 = t1 + Duration::from_millis(200);
+        assert!(b.take(t2).is_ok());
+        assert!(b.take(t2).is_err(), "and only one");
+        // A long quiet period refills to capacity, never beyond it.
+        let t3 = t2 + Duration::from_secs(60);
+        for _ in 0..4 {
+            assert!(b.take(t3).is_ok());
+        }
+        assert!(b.take(t3).is_err(), "capacity stays rps, not rps * idle");
+    }
+
+    #[test]
+    fn conn_without_limit_never_rate_limits() {
+        let (_client, mut conn) = pair(); // pair() builds with conn_rps = 0
+        let now = Instant::now();
+        for _ in 0..10_000 {
+            assert!(conn.take_token(now).is_ok());
+        }
     }
 
     #[test]

@@ -20,7 +20,8 @@
 //!
 //! The reactor never blocks on a socket and never runs engine compute: its
 //! only work is framing, dispatch hand-off, response flushing and timers.
-//! Total thread count for the server is therefore `1 + --workers`,
+//! Total thread count for the server is therefore `1 + --workers` (plus
+//! the engine's one predict batch collector — see `serve/batch.rs`),
 //! regardless of how many connections are open.
 //!
 //! Ordering: requests on one connection are dispatched one at a time, so
@@ -32,7 +33,11 @@
 //! get one `overloaded` error line and are dropped, counted in
 //! `conns.rejected`); `idle_timeout` reaps connections with no traffic and
 //! no pending work, including slow-loris partial lines (counted in
-//! `conns.idle_closed`).  A stop request (shutdown verb or
+//! `conns.idle_closed`).  With `--conn-rps` set, each connection carries a
+//! token bucket (see `conn.rs`); over-limit requests are answered
+//! `{"ok":false,"error":"busy","retry_ms":N}` in pipeline order without
+//! reaching the engine (counted in `conns.rate_limited`).  A stop request
+//! (shutdown verb or
 //! [`StopHandle::request`]) wakes the poller immediately — shutdown
 //! latency is wake + flush, not a poll-timeout sleep.
 
@@ -83,6 +88,9 @@ pub struct NetCfg {
     pub max_conns: usize,
     /// Idle/slow-loris reap timeout; `None` disables reaping.
     pub idle_timeout: Option<Duration>,
+    /// Per-connection request rate limit (requests/second, token bucket);
+    /// 0 disables.  Over-limit requests answer `busy` + `retry_ms`.
+    pub conn_rps: u64,
 }
 
 /// Asks the reactor to exit; cloneable, callable from any thread.
@@ -232,7 +240,9 @@ impl Reactor {
                     }
                     let id = self.next_id;
                     self.next_id += 1;
-                    let Ok(c) = Conn::new(stream, now) else { continue };
+                    let Ok(c) = Conn::new(stream, now, self.cfg.conn_rps) else {
+                        continue;
+                    };
                     let fd = raw_fd(c.stream());
                     if self.poller.register(fd, id as usize, Interest::READ).is_ok() {
                         self.conns.insert(id, c);
@@ -280,11 +290,28 @@ impl Reactor {
                 self.conns.get_mut(&id).and_then(|c| c.next_request())
             };
             if let Some(line) = line {
+                // --conn-rps gate: an over-limit request is answered
+                // `busy` + `retry_ms` here, through the same responder
+                // path as a dispatched one (so ordering, inflight
+                // serialization and re-queueing all work unchanged) —
+                // the engine never sees it.
+                let gate = match self.conns.get_mut(&id) {
+                    Some(c) => c.take_token(Instant::now()),
+                    None => Ok(()),
+                };
                 if let Some(c) = self.conns.get_mut(&id) {
                     c.inflight = true;
                 }
                 let respond = self.responder(id);
-                dispatch(&line, respond);
+                match gate {
+                    Ok(()) => dispatch(&line, respond),
+                    Err(retry_ms) => {
+                        self.metrics
+                            .conns_rate_limited
+                            .fetch_add(1, Ordering::Relaxed);
+                        respond(super::ServeError::Busy { retry_ms }.to_json());
+                    }
+                }
             }
             if let Some(c) = self.conns.get_mut(&id) {
                 c.flush();
@@ -454,7 +481,7 @@ mod tests {
     }
 
     fn default_cfg() -> NetCfg {
-        NetCfg { max_conns: 0, idle_timeout: None }
+        NetCfg { max_conns: 0, idle_timeout: None, conn_rps: 0 }
     }
 
     #[test]
@@ -514,7 +541,11 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let metrics = Arc::new(Metrics::new());
         let cfg =
-            NetCfg { max_conns: 0, idle_timeout: Some(Duration::from_millis(80)) };
+            NetCfg {
+                max_conns: 0,
+                idle_timeout: Some(Duration::from_millis(80)),
+                conn_rps: 0,
+            };
         let reactor = Reactor::new(listener, cfg, Arc::clone(&metrics)).unwrap();
         let addr = reactor.local_addr().unwrap();
         let stop = reactor.stop_handle();
@@ -539,6 +570,7 @@ mod tests {
         let (addr, stop, t) = echo_server(NetCfg {
             max_conns: 2,
             idle_timeout: None,
+            conn_rps: 0,
         });
         let keep1 = TcpStream::connect(addr).unwrap();
         let keep2 = TcpStream::connect(addr).unwrap();
@@ -552,6 +584,58 @@ mod tests {
         line.clear();
         assert_eq!(r.read_line(&mut line).unwrap(), 0, "then closed");
         drop((keep1, keep2));
+        stop.request();
+        t.join().unwrap();
+    }
+
+    /// With `conn_rps: 2`, a pipelined burst of four on one connection
+    /// gets two real answers then two in-order `busy` lines, the engine
+    /// never sees the rejected pair, and a second connection's fresh
+    /// bucket is unaffected (the limit is per connection, not global).
+    #[test]
+    fn conn_rps_limits_per_connection_in_pipeline_order() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let cfg = NetCfg { max_conns: 0, idle_timeout: None, conn_rps: 2 };
+        let reactor = Reactor::new(listener, cfg, Arc::clone(&metrics)).unwrap();
+        let addr = reactor.local_addr().unwrap();
+        let stop = reactor.stop_handle();
+        let dispatched = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let seen = Arc::clone(&dispatched);
+        let t = thread::spawn(move || {
+            reactor
+                .run(move |_line, respond| {
+                    seen.fetch_add(1, Ordering::Relaxed);
+                    respond(Json::obj().set("ok", true));
+                })
+                .unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"{}\n{}\n{}\n{}\n").unwrap();
+        let mut r = BufReader::new(c);
+        for i in 0..4 {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim()).unwrap();
+            if i < 2 {
+                assert!(j.get("error").is_none(), "request {i} admitted");
+            } else {
+                assert_eq!(j.req("error").unwrap().as_str().unwrap(), "busy");
+                assert!(j.req("retry_ms").unwrap().as_usize().unwrap() >= 1);
+            }
+        }
+        assert_eq!(dispatched.load(Ordering::Relaxed), 2, "engine never saw the rest");
+        assert_eq!(metrics.conns_rate_limited.load(Ordering::Relaxed), 2);
+        // A new connection gets its own bucket.
+        let mut c2 = TcpStream::connect(addr).unwrap();
+        c2.write_all(b"{}\n{}\n").unwrap();
+        let mut r2 = BufReader::new(c2);
+        for _ in 0..2 {
+            let mut line = String::new();
+            r2.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim()).unwrap();
+            assert!(j.get("error").is_none());
+        }
         stop.request();
         t.join().unwrap();
     }

@@ -5,7 +5,10 @@
 //! Slot capacity = workers + queue depth, reserved with a CAS loop so
 //! concurrent submitters can never overshoot.  Quantize flights
 //! additionally declare their predicted cost (Σ layer `M·N·K × bits`, see
-//! [`crate::coordinator::plan_layers`]) and are admitted only while the
+//! [`crate::coordinator::plan_layers`]); inference work is admitted in
+//! the *same* currency — an eval fan or predict batch costs
+//! `inputs × Σ layer M·N·K × bits` (fp32 layers at 32 bits, since the
+//! forward pass runs them too) — and both are admitted only while the
 //! total cost in the system stays under
 //! `(workers + queue_depth) × COST_UNIT` — so one giant model consumes
 //! the budget many small requests would, instead of counting as "one

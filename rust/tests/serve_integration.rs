@@ -198,6 +198,139 @@ fn stats_expose_layer_task_pipeline() {
     handle.join();
 }
 
+/// Predict over real TCP: responses carry each connection's own logits.
+///
+/// Round 1 (server A: 2 s window, max-batch 2): two connections submit
+/// different inputs concurrently; the collector coalesces them into one
+/// stacked forward (`batch == 2` on both responses).  Round 2 (server B:
+/// zero window, so every input runs alone): the same inputs are replayed
+/// sequentially and must produce byte-for-byte the same logits — proving
+/// both that the batched rows were fanned back to the right connection
+/// and that batching never changes an answer.  Quantization is
+/// deterministic, so two servers over the same store build identical
+/// artifacts.
+#[test]
+fn predict_batches_across_connections_and_maps_logits_back() {
+    let batch_cfg = EngineCfg {
+        batch_window_us: 2_000_000,
+        max_batch: 2,
+        ..cfg()
+    };
+    let handle = spawn(tiny_store(), "127.0.0.1:0", batch_cfg).unwrap();
+    let addr = handle.addr.to_string();
+
+    let input = |seed: u64| -> Vec<f64> {
+        let mut rng = squant::util::rng::Rng::new(seed);
+        let mut v = vec![0.0f32; 3 * 8 * 8];
+        rng.fill_normal(&mut v, 1.0);
+        v.into_iter().map(|x| x as f64).collect()
+    };
+    let predict_req = |inp: &[f64]| {
+        Json::obj()
+            .set("cmd", "predict")
+            .set("model", "tiny")
+            .set("wbits", 4usize)
+            .set("input", Json::Arr(inp.iter().map(|&x| Json::Num(x)).collect()))
+    };
+    let logits_of = |resp: &Json| -> Vec<f64> {
+        resp.req("logits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.as_f64().unwrap())
+            .collect()
+    };
+
+    // Warm the artifact first so both predicts enter the collector
+    // together instead of racing the quantize flight.
+    let mut probe = Client::connect(&addr).unwrap();
+    let r = probe
+        .call(&Json::obj().set("cmd", "warm").set("model", "tiny").set("wbits", 4usize))
+        .unwrap();
+    assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+
+    let (ia, ib) = (input(11), input(22));
+    let mut threads = Vec::new();
+    for inp in [ia.clone(), ib.clone()] {
+        let addr = addr.clone();
+        let req = predict_req(&inp);
+        threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            client.call(&req).unwrap()
+        }));
+    }
+    let batched: Vec<Json> =
+        threads.into_iter().map(|t| t.join().unwrap()).collect();
+    for r in &batched {
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(
+            r.req("batch").unwrap().as_usize().unwrap(),
+            2,
+            "both inputs coalesced into one forward: {}",
+            r.dump()
+        );
+    }
+    let (la, lb) = (logits_of(&batched[0]), logits_of(&batched[1]));
+    assert_eq!(la.len(), 10);
+    assert_ne!(la, lb, "distinct inputs produce distinct logits");
+
+    // `stats` exposes the predict counters and batching metrics.
+    let stats = probe.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    let m = stats.req("metrics").unwrap();
+    assert_eq!(
+        m.req("requests").unwrap().req("predict").unwrap().as_usize().unwrap(),
+        2
+    );
+    let p = m.req("predict").unwrap();
+    assert_eq!(p.req("inputs").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(p.req("batches").unwrap().as_usize().unwrap(), 1);
+    assert!((p.req("mean_batch").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+    assert_eq!(p.req("flush_full").unwrap().as_usize().unwrap(), 1);
+    let lat = m.req("latency").unwrap();
+    assert_eq!(
+        lat.req("predict").unwrap().req("count").unwrap().as_usize().unwrap(),
+        2
+    );
+    assert_eq!(
+        lat.req("batch_wait").unwrap().req("count").unwrap().as_usize().unwrap(),
+        2
+    );
+    let _ = probe.call(&Json::parse(r#"{"cmd":"shutdown"}"#).unwrap());
+    handle.join();
+
+    // Round 2: zero window — every input runs alone, and pipelined
+    // requests on one connection come back in arrival order with the
+    // right logits (order is the protocol's correlation).
+    let single_cfg = EngineCfg { batch_window_us: 0, max_batch: 32, ..cfg() };
+    let handle = spawn(tiny_store(), "127.0.0.1:0", single_cfg).unwrap();
+    use std::io::{BufRead, BufReader, Write};
+    let mut raw = std::net::TcpStream::connect(handle.addr).unwrap();
+    let mut lines = Vec::new();
+    for inp in [&ia, &ib, &ia] {
+        lines.push(predict_req(inp).dump());
+    }
+    raw.write_all((lines.join("\n") + "\n").as_bytes()).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+    let mut singles = Vec::new();
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        singles.push(Json::parse(line.trim()).unwrap());
+    }
+    for r in &singles {
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        assert_eq!(r.req("batch").unwrap().as_usize().unwrap(), 1);
+    }
+    assert_eq!(logits_of(&singles[0]), la, "batched row == solo forward (a)");
+    assert_eq!(logits_of(&singles[1]), lb, "batched row == solo forward (b)");
+    assert_eq!(logits_of(&singles[2]), la, "pipelined replay keeps order");
+
+    let mut client = Client::connect(&handle.addr.to_string()).unwrap();
+    let _ = client.call(&Json::parse(r#"{"cmd":"shutdown"}"#).unwrap());
+    handle.join();
+}
+
 #[test]
 fn unknown_model_and_bad_json_are_errors() {
     let handle = spawn(tiny_store(), "127.0.0.1:0", cfg()).unwrap();
