@@ -1,0 +1,168 @@
+//! Packed-kernel microbenchmarks: f32 matmul vs the integer qgemm path
+//! (i8 and nibble-packed i4), plus the runtime costs the packed path adds
+//! (weight packing, activation quantization) and a served predict tail
+//! latency over the tiny in-memory model.
+//!
+//! Writes a BENCH_kernels.json snapshot (GFLOP/s per kernel, pack /
+//! act-quantize ms, serve p50/p99 ms) for cross-PR regression tracking.
+
+use squant::coordinator::server;
+use squant::quant::{channel_scales, quantize_rtn, quantize_rtn_packed, QuantConfig};
+use squant::serve::EngineCfg;
+use squant::tensor::matmul::matmul_into;
+use squant::tensor::qgemm::{act_grid, qgemm_into, quantize_acts};
+use squant::tensor::{QTensor, Tensor};
+use squant::util::bench::bench;
+use squant::util::json::Json;
+use squant::util::rng::Rng;
+
+/// One GEMM shape benched across the three kernels.  (m, k, n) is the
+/// post-im2col view of a conv layer: m = cout, k = cin*kh*kw, n = spatial.
+struct Case {
+    name: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+const CASES: &[Case] = &[
+    Case { name: "conv3x3_64", m: 64, k: 576, n: 1024 },
+    Case { name: "fc_256", m: 256, k: 256, n: 64 },
+];
+
+fn gflops(m: usize, k: usize, n: usize, median_ns: u128) -> f64 {
+    (2 * m * k * n) as f64 / (median_ns as f64 / 1e9) / 1e9
+}
+
+fn bench_case(c: &Case) -> Json {
+    let (m, k, n) = (c.m, c.k, c.n);
+    let mut rng = Rng::new(42);
+    let mut w = Tensor::zeros(&[m, k]);
+    rng.fill_normal(&mut w.data, 0.3);
+    let x: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    // f32 reference: the blocked matmul the fake-quant path runs.
+    let mut dst = vec![0.0f32; m * n];
+    let st = bench(&format!("{} f32 matmul", c.name), 2, 7, || {
+        matmul_into(&w.data, &x, &mut dst, m, k, n);
+    });
+    let f32_gfs = gflops(m, k, n, st.median_ns);
+    println!("{st}   ({f32_gfs:.2} GFLOP/s)");
+
+    // Packed kernels: same shape from a quantized weight + u8 panel.
+    let g = act_grid(8, -1.0, 1.0).expect("symmetric 8-bit grid");
+    let mut panel = vec![0u8; k * n];
+    quantize_acts(&x, g, &mut panel);
+    let mut case = Json::obj()
+        .set("m", m)
+        .set("k", k)
+        .set("n", n)
+        .set("f32_gflops", f32_gfs);
+    for bits in [8usize, 4] {
+        let scales = channel_scales(&w, QuantConfig::new(bits));
+        let qt = quantize_rtn_packed(&w, &scales, bits).expect("packable bits");
+        let st = bench(&format!("{} qgemm int{bits}", c.name), 2, 7, || {
+            qgemm_into(&qt, 0, m, &panel, k, n, g.scale, g.zp, &mut dst);
+        });
+        let gfs = gflops(m, k, n, st.median_ns);
+        println!(
+            "{st}   ({gfs:.2} GFLOP/s, {:.2}x f32)",
+            gfs / f32_gfs.max(1e-9)
+        );
+        case = case.set(&format!("int{bits}_gflops"), gfs);
+    }
+
+    // The packed path's runtime overheads: packing the weight grid once at
+    // quantize time, and quantizing activations on every forward.
+    let scales = channel_scales(&w, QuantConfig::new(8));
+    let grid = quantize_rtn(&w, &scales, 8);
+    let st = bench(&format!("{} pack w8", c.name), 2, 7, || {
+        let _ = QTensor::from_grid(&grid, &scales, 8).unwrap();
+    });
+    println!("{st}");
+    case = case.set("pack_ms", st.median_ms());
+    let st = bench(&format!("{} quantize acts", c.name), 2, 7, || {
+        quantize_acts(&x, g, &mut panel);
+    });
+    println!("{st}");
+    case.set("quantize_acts_ms", st.median_ms())
+}
+
+/// Serve-side tail latency: spawn the tiny in-memory model, drive packed
+/// predicts (wbits 8 / abits 8) over one connection, report p50/p99.
+fn bench_serve_predict() -> anyhow::Result<Json> {
+    let handle = server::spawn(
+        server::ModelStore::tiny(),
+        "127.0.0.1:0",
+        EngineCfg::default(),
+    )?;
+    let mut client = server::Client::connect(&handle.addr.to_string())?;
+    let input_len = 3 * 8 * 8;
+    let mut rng = Rng::new(7);
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let reqs = 48usize;
+    for i in 0..reqs {
+        let mut input = vec![0.0f32; input_len];
+        rng.fill_normal(&mut input, 1.0);
+        let req = Json::obj()
+            .set("cmd", "predict")
+            .set("model", "tiny")
+            .set("wbits", 8usize)
+            .set("abits", 8usize)
+            .set(
+                "input",
+                Json::Arr(input.iter().map(|v| Json::Num(*v as f64)).collect()),
+            );
+        let t0 = std::time::Instant::now();
+        let resp = client.call(&req)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(
+            matches!(resp.get("ok"), Some(Json::Bool(true))),
+            "predict {i} failed: {}",
+            resp.dump()
+        );
+        // Skip the first request: it pays the quantize+pack warm-up.
+        if i > 0 {
+            lat_ms.push(ms);
+        }
+    }
+    let stats = client.call(&Json::parse(r#"{"cmd":"stats"}"#)?)?;
+    let int8 = stats
+        .get("metrics")
+        .and_then(|m| m.get("kernel"))
+        .and_then(|k| k.get("int8"))
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or(0.0);
+    let _ = client.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);
+    handle.join();
+    anyhow::ensure!(int8 > 0.0, "serve bench never hit the packed i8 kernel");
+    lat_ms.sort_by(|a, b| a.total_cmp(b));
+    let q = |p: f64| lat_ms[((lat_ms.len() as f64 * p) as usize).min(lat_ms.len() - 1)];
+    let (p50, p99) = (q(0.50), q(0.99));
+    println!(
+        "serve predict (w8a8, tiny)                   reqs={}  p50={p50:.2} ms  \
+         p99={p99:.2} ms  kernel.int8={int8:.0}",
+        lat_ms.len()
+    );
+    Ok(Json::obj()
+        .set("reqs", lat_ms.len())
+        .set("p50_ms", p50)
+        .set("p99_ms", p99)
+        .set("kernel_int8", int8 as usize))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut kernels = Json::obj();
+    for c in CASES {
+        kernels = kernels.set(c.name, bench_case(c));
+    }
+    let serve = bench_serve_predict()?;
+    let snapshot = Json::obj()
+        .set("bench", "kernels")
+        .set("gemm", kernels)
+        .set("serve_predict", serve);
+    const BENCH_PATH: &str = "BENCH_kernels.json";
+    std::fs::write(BENCH_PATH, snapshot.dump() + "\n")?;
+    println!("wrote {BENCH_PATH}");
+    Ok(())
+}

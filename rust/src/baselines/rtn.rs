@@ -5,13 +5,28 @@ use crate::nn::{Graph, Params};
 use crate::quant::{channel_scales, dequant, quantize_rtn, QuantConfig, ScaleMethod};
 use crate::tensor::Tensor;
 
+/// Per-channel RTN of a single weight tensor, returning the integer-domain
+/// result: grid values + per-channel scales alongside the dequantized f32
+/// tensor.  The packed execution path builds its `QTensor` from the same
+/// grid the f32 tensor is dequantized from, so the two representations are
+/// two views of one quantization.
+pub fn quantize_layer_q(
+    w: &Tensor,
+    bits: usize,
+    scale: ScaleMethod,
+) -> (Tensor, Vec<f32>, Tensor) {
+    let cfg = QuantConfig { bits, scale };
+    let scales = channel_scales(w, cfg);
+    let q = quantize_rtn(w, &scales, bits);
+    let wq = dequant(&q, &scales);
+    (q, scales, wq)
+}
+
 /// Per-channel RTN of a single weight tensor (quantize + dequantize).
 /// Shared by the whole-model path below and the serving engine's
 /// per-layer-reporting path, so the two can never diverge.
 pub fn quantize_layer(w: &Tensor, bits: usize, scale: ScaleMethod) -> Tensor {
-    let cfg = QuantConfig { bits, scale };
-    let scales = channel_scales(w, cfg);
-    dequant(&quantize_rtn(w, &scales, bits), &scales)
+    quantize_layer_q(w, bits, scale).2
 }
 
 /// Quantize every conv/linear weight in place with per-channel RTN.

@@ -29,16 +29,18 @@
 pub mod server;
 
 use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::baselines::rtn;
 use crate::io::manifest::{Manifest, SquantShape};
+use crate::nn::engine::QuantizedParams;
 use crate::nn::{Graph, Params, QuantLayer};
 use crate::quant::spec::{Method, QuantSpec};
-use crate::quant::{channel_scales, QuantConfig, ScaleMethod};
+use crate::quant::{channel_scales, pack_grid, QuantConfig, ScaleMethod};
 use crate::runtime::Runtime;
 use crate::squant::{squant, SquantOpts, SquantResult};
-use crate::tensor::Tensor;
+use crate::tensor::{QTensor, Tensor};
 use crate::util::pool::parallel_map;
 
 /// Per-layer quantization record (timing + flip counts).
@@ -146,6 +148,10 @@ pub struct LayerOutcome {
     /// Replacement dequantized weight; `None` leaves the layer untouched
     /// (FP32), so the assembled [`Params`] keep sharing the source tensor.
     pub wq: Option<Tensor>,
+    /// Packed integer form of the same quantization (grid values + scales),
+    /// present when the bit-width fits packed storage (≤ 8).  `wq` is
+    /// always `packed.dequantize()` bit-for-bit — two views of one grid.
+    pub packed: Option<Arc<QTensor>>,
 }
 
 /// Resolve a [`QuantSpec`] into one [`LayerTask`] per quantizable layer.
@@ -185,14 +191,13 @@ pub fn plan_layers(
 /// is comparable across the native, serving and offload paths.
 pub fn run_layer_task(task: &LayerTask, w: &Tensor) -> LayerOutcome {
     let lt = Instant::now();
-    let (bits, wq, flips_k, flips_c) = match task.method {
-        Method::Fp32 => (32, None, 0, 0),
-        Method::Rtn => (
-            task.bits,
-            Some(rtn::quantize_layer(w, task.bits, task.scale)),
-            0,
-            0,
-        ),
+    let (bits, wq, packed, flips_k, flips_c) = match task.method {
+        Method::Fp32 => (32, None, None, 0, 0),
+        Method::Rtn => {
+            let (q, scales, wq) = rtn::quantize_layer_q(w, task.bits, task.scale);
+            let packed = pack_grid(&q, &scales, task.bits).map(Arc::new);
+            (task.bits, Some(wq), packed, 0, 0)
+        }
         Method::Squant { enable_k, enable_c } => {
             let cfg = QuantConfig { bits: task.bits, scale: task.scale };
             let scales = channel_scales(w, cfg);
@@ -201,7 +206,8 @@ pub fn run_layer_task(task: &LayerTask, w: &Tensor) -> LayerOutcome {
                 &scales,
                 SquantOpts { bits: task.bits, enable_k, enable_c },
             );
-            (task.bits, Some(res.wq), res.flips_k, res.flips_c)
+            let packed = pack_grid(&res.q, &scales, task.bits).map(Arc::new);
+            (task.bits, Some(res.wq), packed, res.flips_k, res.flips_c)
         }
         _ => unreachable!("plan_layers only emits per-layer methods"),
     };
@@ -218,7 +224,21 @@ pub fn run_layer_task(task: &LayerTask, w: &Tensor) -> LayerOutcome {
             flips_c,
         },
         wq,
+        packed,
     }
+}
+
+/// Collect the packed integer weights out of a slice of outcomes (cheap:
+/// clones `Arc` handles only) — the integer-domain companion the serving
+/// cache stores alongside the assembled f32 [`Params`].
+pub fn collect_packed(outcomes: &[LayerOutcome]) -> QuantizedParams {
+    let mut qp = QuantizedParams::new();
+    for o in outcomes {
+        if let Some(qt) = &o.packed {
+            qp.insert(o.report.weight.clone(), Arc::clone(qt));
+        }
+    }
+    qp
 }
 
 /// Fold executed layer outcomes back into fresh [`Params`] plus the
@@ -303,7 +323,12 @@ pub fn quantize_model_offload(
                 .run(path, &[&w3, &s])
                 .with_context(|| format!("offload {}", layer.weight))?;
             offloaded += 1;
+            let q = Tensor::from_vec(&w.shape, outs[0].data.clone());
             let wq = Tensor::from_vec(&w.shape, outs[1].data.clone());
+            // Device-produced grids go through the fallible constructor:
+            // a device that returns off-grid values (unlike the bit-exact
+            // native path) simply yields no packed form for the layer.
+            let packed = QTensor::from_grid(&q, &s.data, bits).ok().map(Arc::new);
             let ms = lt.elapsed().as_secs_f64() * 1e3;
             LayerOutcome {
                 report: LayerReport {
@@ -317,6 +342,7 @@ pub fn quantize_model_offload(
                     flips_c: 0,
                 },
                 wq: Some(wq),
+                packed,
             }
         } else {
             run_layer_task(task, w)
@@ -426,6 +452,56 @@ mod tests {
             uniform.iter().map(|t| t.cost).sum::<u64>(),
             (4 * 3 * 9 * 4 + 10 * 4 * 1 * 4) as u64
         );
+    }
+
+    /// Every executed low-bit layer carries a packed integer twin whose
+    /// dequantization is bit-identical to the f32 result it ships — the
+    /// invariant that makes artifact schema v4 (packed payload only)
+    /// lossless.
+    #[test]
+    fn layer_outcomes_carry_packed_weights_matching_wq() {
+        use crate::quant::spec::LayerOverride;
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        for method in [Method::squant_full(), Method::Rtn] {
+            let spec = QuantSpec::uniform(method, 4, 0)
+                .with_override("wfc", LayerOverride { wbits: Some(8), method: None });
+            let tasks = plan_layers(&g, &spec).unwrap();
+            let outcomes: Vec<LayerOutcome> =
+                tasks.iter().map(|t| run_layer_task(t, &p[&t.layer.weight])).collect();
+            for (task, o) in tasks.iter().zip(&outcomes) {
+                let qt = o.packed.as_ref().expect("bits <= 8 layers pack");
+                assert_eq!(qt.bits, task.bits);
+                assert_eq!(
+                    qt.dequantize().data,
+                    o.wq.as_ref().unwrap().data,
+                    "wq must be packed.dequantize() bit-for-bit ({})",
+                    task.layer.weight
+                );
+            }
+            let qp = collect_packed(&outcomes);
+            assert_eq!(qp.len(), 2);
+            assert!(Arc::ptr_eq(
+                qp.shared("w1").unwrap(),
+                outcomes[0].packed.as_ref().unwrap()
+            ));
+        }
+    }
+
+    /// FP32 overrides and >8-bit grids have no packed form: those layers
+    /// stay f32-only in the engine (the mixed-precision dispatch story).
+    #[test]
+    fn wide_and_fp32_layers_have_no_packed_form() {
+        use crate::quant::spec::LayerOverride;
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let spec = QuantSpec::uniform(Method::squant_full(), 16, 0).with_override(
+            "w1",
+            LayerOverride { wbits: None, method: Some(Method::Fp32) },
+        );
+        let tasks = plan_layers(&g, &spec).unwrap();
+        let outcomes: Vec<LayerOutcome> =
+            tasks.iter().map(|t| run_layer_task(t, &p[&t.layer.weight])).collect();
+        assert!(outcomes.iter().all(|o| o.packed.is_none()));
+        assert!(collect_packed(&outcomes).is_empty());
     }
 
     /// `assemble` structurally shares untouched tensors with the base

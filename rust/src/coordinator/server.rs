@@ -29,6 +29,17 @@
 //! `--max-batch` — see `serve/batch.rs`) into one stacked forward; an
 //! uncached key quantizes first (single-flight), then predicts.
 //!
+//! The response also carries `"kernel"`: `{"int8":N,"int4":N,"f32":N}` —
+//! how many conv/linear node executions of the batch's forward ran the
+//! packed integer GEMM (`tensor/qgemm.rs`; keyed by the *weight* storage
+//! width, i8 vs nibble-packed i4) vs the f32 fallback.  The packed path
+//! runs per layer when the artifact holds a packed weight AND the spec
+//! has activation bits (`abits` > 0) with a cached range for that layer;
+//! weight-only specs (`a0`), FP32/`w>8` override layers and
+//! unrepresentable activation grids fall back to f32, so a
+//! mixed-precision spec reports a mix.  The same counters accumulate
+//! server-wide under `stats` → `metrics` → `kernel`.
+//!
 //! Responses always carry `"ok"`.  `quantize`/`eval`/`predict` add
 //! `"cached"`, `"spec"` (the canonical spec served), `"source"`
 //! (`mem|disk|flight|fresh` — disk is the persistence tier that survives

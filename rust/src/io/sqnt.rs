@@ -1,18 +1,29 @@
 //! SQNT weight-container codec (mirrors python/compile/sqnt.py).
 //!
-//! Layout: b"SQNT" | version u32 | header_len u32 | header JSON | f32le
-//! payload.  The header embeds the model IR (nodes) and the tensor table
-//! (name, shape, offset-in-floats, numel).  The writer is used to export
+//! Layout: b"SQNT" | version u32 | header_len u32 | header JSON | payload.
+//! The header embeds the model IR (nodes) and the tensor table (name,
+//! shape, offset, numel).  Offsets and `numel` are in 4-byte payload
+//! *words*: an f32 row (the default) stores one f32 per word; a packed
+//! integer row (`"dtype":"q8"` / `"q4"`, written by the serving disk tier
+//! for quantized weights) stores its raw packed bytes starting at the same
+//! word offset, zero-padded to a word boundary, with `numel` = the word
+//! count and the extra fields `bits`, `qbytes` (exact packed byte length)
+//! and `scales` (per-output-channel f32 dequantize scales, carried in the
+//! header JSON).  Rows without a `dtype` field parse exactly as before, so
+//! pre-existing containers stay readable.  The writer is used to export
 //! quantized models back to disk.  The serving disk tier reuses the same
 //! container with an `artifact` header object (carrying the canonical
 //! quantization spec) instead of a model IR — see `serve::disk`.
 
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use super::{read_f32s, read_u32};
 use crate::nn::Params;
-use crate::tensor::Tensor;
+use crate::tensor::qtensor::row_bytes;
+use crate::tensor::{QTensor, Tensor};
 use crate::util::json::Json;
 
 pub const MAGIC: &[u8; 4] = b"SQNT";
@@ -20,10 +31,13 @@ pub const VERSION: u32 = 1;
 
 /// A parsed container: IR header (raw JSON) + named parameter tensors
 /// (Arc-shared [`Params`], so a loaded model's payloads flow into the
-/// serving store and quantization flights without copies).
+/// serving store and quantization flights without copies) + packed
+/// integer tensors by name (quantized-weight rows, `dtype` q8/q4).
 pub struct Container {
     pub header: Json,
     pub params: Params,
+    /// Packed integer tensors (empty for plain f32 containers).
+    pub packed: HashMap<String, Arc<QTensor>>,
     /// Tensor-table order (the AOT forward HLO's parameter order).
     pub order: Vec<String>,
 }
@@ -41,14 +55,25 @@ impl Container {
     }
 }
 
+/// How one table row's payload is encoded.
+enum RowKind {
+    /// One f32 per payload word (the default; rows without `dtype`).
+    F32,
+    /// Raw packed integer bytes (`qbytes` of them) zero-padded to the
+    /// row's word span; scales travel in the header.
+    Packed { bits: usize, qbytes: usize, scales: Vec<f32> },
+}
+
 /// One parsed row of the header's tensor table, offsets validated against
-/// a payload of `payload_floats` f32s: every span must fit, spans must not
-/// overlap, and all arithmetic is checked (headers can be adversarial).
+/// a payload of `payload_floats` 4-byte words: every span must fit, spans
+/// must not overlap, and all arithmetic is checked (headers can be
+/// adversarial).
 struct TableRow {
     name: String,
     shape: Vec<usize>,
     offset: usize,
     numel: usize,
+    kind: RowKind,
 }
 
 fn parse_tensor_table(header: &Json, payload_floats: usize) -> Result<Vec<TableRow>> {
@@ -62,16 +87,67 @@ fn parse_tensor_table(header: &Json, payload_floats: usize) -> Result<Vec<TableR
             .iter()
             .try_fold(1usize, |a, &d| a.checked_mul(d))
             .with_context(|| format!("tensor {name}: shape {shape:?} overflows"))?;
-        if numel != prod {
-            bail!("tensor {name}: numel {numel} != shape {shape:?}");
-        }
+        let dtype = match t.get("dtype") {
+            Some(d) => d.as_str()?,
+            None => "f32",
+        };
+        let kind = match dtype {
+            "f32" => {
+                if numel != prod {
+                    bail!("tensor {name}: numel {numel} != shape {shape:?}");
+                }
+                RowKind::F32
+            }
+            "q8" | "q4" => {
+                let bits = t.req("bits")?.as_usize()?;
+                let storage_ok = match dtype {
+                    "q4" => (2..=4).contains(&bits),
+                    _ => (5..=8).contains(&bits),
+                };
+                if !storage_ok {
+                    bail!("tensor {name}: dtype {dtype} incompatible with bits {bits}");
+                }
+                if shape.is_empty() || shape[0] == 0 {
+                    bail!("tensor {name}: packed rows need a nonzero row axis");
+                }
+                let qbytes = t.req("qbytes")?.as_usize()?;
+                let want = shape[0]
+                    .checked_mul(row_bytes(bits, prod / shape[0]))
+                    .with_context(|| format!("tensor {name}: packed size overflows"))?;
+                if qbytes != want {
+                    bail!("tensor {name}: qbytes {qbytes} != {want} for shape {shape:?}");
+                }
+                if numel != qbytes.div_ceil(4) {
+                    bail!(
+                        "tensor {name}: numel {numel} must be the packed word \
+                         count {}",
+                        qbytes.div_ceil(4)
+                    );
+                }
+                let scales = t
+                    .req("scales")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_f64().map(|v| v as f32))
+                    .collect::<Result<Vec<f32>, _>>()?;
+                if scales.len() != shape[0] {
+                    bail!(
+                        "tensor {name}: {} scales for {} output channels",
+                        scales.len(),
+                        shape[0]
+                    );
+                }
+                RowKind::Packed { bits, qbytes, scales }
+            }
+            other => bail!("tensor {name}: unknown dtype '{other}'"),
+        };
         if offset.checked_add(numel).is_none_or(|e| e > payload_floats) {
             bail!(
-                "tensor {name}: span {offset}+{numel} floats exceeds \
+                "tensor {name}: span {offset}+{numel} words exceeds \
                  payload of {payload_floats}"
             );
         }
-        rows.push(TableRow { name, shape, offset, numel });
+        rows.push(TableRow { name, shape, offset, numel, kind });
     }
     let mut spans: Vec<(usize, usize, usize)> = rows
         .iter()
@@ -113,50 +189,113 @@ pub fn load(path: impl AsRef<Path>) -> Result<Container> {
 
     let payload_floats = (buf.len() - payload_start) / 4;
     let mut params = Params::new();
+    let mut packed = HashMap::new();
     let mut order = Vec::new();
     for row in parse_tensor_table(&header, payload_floats)? {
-        let mut p = payload_start + 4 * row.offset;
-        let data = read_f32s(&buf, &mut p, row.numel)?;
-        params.insert(row.name.clone(), Tensor::from_vec(&row.shape, data));
+        match row.kind {
+            RowKind::F32 => {
+                let mut p = payload_start + 4 * row.offset;
+                let data = read_f32s(&buf, &mut p, row.numel)?;
+                params.insert(row.name.clone(), Tensor::from_vec(&row.shape, data));
+            }
+            RowKind::Packed { bits, qbytes, scales } => {
+                // Raw byte slice — packed payloads never round-trip through
+                // f32 values, so no bit pattern is ever altered.
+                let start = payload_start + 4 * row.offset;
+                let bytes = buf[start..start + qbytes].to_vec();
+                let qt = QTensor::from_packed(row.shape.clone(), bits, bytes, scales)
+                    .with_context(|| format!("tensor {}", row.name))?;
+                packed.insert(row.name.clone(), Arc::new(qt));
+            }
+        }
         order.push(row.name);
     }
-    Ok(Container { header, params, order })
+    Ok(Container { header, params, packed, order })
 }
 
 /// Rebuild a `tensors` table for `params` in the given name order, with
 /// contiguous offsets.  Use when composing a fresh header (e.g. artifact
 /// files) or when tensor shapes changed since the header was written.
 pub fn rebuild_tensor_table(params: &Params, order: &[String]) -> Result<Json> {
+    rebuild_tensor_table_mixed(params, &HashMap::new(), order)
+}
+
+/// Like [`rebuild_tensor_table`], but names present in `packed` become
+/// q8/q4 rows (packed payload + header scales) instead of f32 rows —
+/// the artifact-v4 layout where a quantized weight is stored *only* in
+/// its integer form.
+pub fn rebuild_tensor_table_mixed(
+    params: &Params,
+    packed: &HashMap<String, Arc<QTensor>>,
+    order: &[String],
+) -> Result<Json> {
     let mut table = Vec::with_capacity(order.len());
     let mut offset = 0usize;
     for name in order {
-        let t = params
-            .get(name)
-            .with_context(|| format!("missing tensor {name}"))?;
-        let numel = t.data.len();
-        table.push(
-            Json::obj()
-                .set("name", name.as_str())
-                .set(
-                    "shape",
-                    Json::Arr(t.shape.iter().map(|&d| Json::from(d)).collect()),
-                )
-                .set("offset", offset)
-                .set("numel", numel),
-        );
-        offset += numel;
+        if let Some(qt) = packed.get(name) {
+            let qbytes = qt.data.len();
+            let numel = qbytes.div_ceil(4);
+            let dtype = if qt.storage_bits() == 4 { "q4" } else { "q8" };
+            table.push(
+                Json::obj()
+                    .set("name", name.as_str())
+                    .set(
+                        "shape",
+                        Json::Arr(qt.shape.iter().map(|&d| Json::from(d)).collect()),
+                    )
+                    .set("offset", offset)
+                    .set("numel", numel)
+                    .set("dtype", dtype)
+                    .set("bits", qt.bits)
+                    .set("qbytes", qbytes)
+                    .set(
+                        "scales",
+                        Json::Arr(qt.scales.iter().map(|&s| Json::from(s as f64)).collect()),
+                    ),
+            );
+            offset += numel;
+        } else {
+            let t = params
+                .get(name)
+                .with_context(|| format!("missing tensor {name}"))?;
+            let numel = t.data.len();
+            table.push(
+                Json::obj()
+                    .set("name", name.as_str())
+                    .set(
+                        "shape",
+                        Json::Arr(t.shape.iter().map(|&d| Json::from(d)).collect()),
+                    )
+                    .set("offset", offset)
+                    .set("numel", numel),
+            );
+            offset += numel;
+        }
     }
     Ok(Json::Arr(table))
 }
 
 /// Write a container: `header` must contain a `tensors` table consistent
 /// with `params` (use [`rebuild_tensor_table`] when shapes changed).
+pub fn save(path: impl AsRef<Path>, header: &Json, params: &Params) -> Result<()> {
+    save_mixed(path, header, params, &HashMap::new())
+}
+
+/// Write a container holding f32 *and* packed integer rows: every q8/q4
+/// row in the header's table takes its payload from `packed`, everything
+/// else from `params` (build the header table with
+/// [`rebuild_tensor_table_mixed`]).
 ///
 /// Payloads are written at each entry's *declared* offset, so a permuted
 /// tensor table round-trips exactly; overlapping or gapped layouts are
 /// rejected rather than silently corrupted (the old writer ignored offsets
 /// and wrote payloads back-to-back in table order).
-pub fn save(path: impl AsRef<Path>, header: &Json, params: &Params) -> Result<()> {
+pub fn save_mixed(
+    path: impl AsRef<Path>,
+    header: &Json,
+    params: &Params,
+    packed: &HashMap<String, Arc<QTensor>>,
+) -> Result<()> {
     let hbytes = header.dump().into_bytes();
     // Bounding every span by the summed tensor sizes (plus the no-overlap
     // check) admits exactly the permutations of a contiguous layout, so the
@@ -175,24 +314,49 @@ pub fn save(path: impl AsRef<Path>, header: &Json, params: &Params) -> Result<()
         .context("tensor table payload size overflows")?;
     let mut payload = vec![0u8; total_bytes];
     for row in &rows {
-        let tensor = params
-            .get(&row.name)
-            .with_context(|| format!("missing tensor {}", row.name))?;
-        if row.shape != tensor.shape {
-            bail!(
-                "tensor {}: header shape {:?} != {:?}",
-                row.name, row.shape, tensor.shape
-            );
-        }
-        if tensor.data.len() != row.numel {
-            bail!(
-                "tensor {}: header numel {} != {} data values",
-                row.name, row.numel, tensor.data.len()
-            );
-        }
-        for (i, v) in tensor.data.iter().enumerate() {
-            let o = 4 * (row.offset + i);
-            payload[o..o + 4].copy_from_slice(&v.to_le_bytes());
+        match &row.kind {
+            RowKind::F32 => {
+                let tensor = params
+                    .get(&row.name)
+                    .with_context(|| format!("missing tensor {}", row.name))?;
+                if row.shape != tensor.shape {
+                    bail!(
+                        "tensor {}: header shape {:?} != {:?}",
+                        row.name, row.shape, tensor.shape
+                    );
+                }
+                if tensor.data.len() != row.numel {
+                    bail!(
+                        "tensor {}: header numel {} != {} data values",
+                        row.name, row.numel, tensor.data.len()
+                    );
+                }
+                for (i, v) in tensor.data.iter().enumerate() {
+                    let o = 4 * (row.offset + i);
+                    payload[o..o + 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            RowKind::Packed { bits, qbytes, .. } => {
+                let qt = packed
+                    .get(&row.name)
+                    .with_context(|| format!("missing packed tensor {}", row.name))?;
+                if row.shape != qt.shape {
+                    bail!(
+                        "tensor {}: header shape {:?} != {:?}",
+                        row.name, row.shape, qt.shape
+                    );
+                }
+                if qt.bits != *bits || qt.data.len() != *qbytes {
+                    bail!(
+                        "tensor {}: header bits/qbytes {}/{} != {}/{}",
+                        row.name, bits, qbytes, qt.bits,
+                        qt.data.len()
+                    );
+                }
+                let o = 4 * row.offset;
+                payload[o..o + qbytes].copy_from_slice(&qt.data);
+                // The word-padding tail (if any) stays zero.
+            }
         }
     }
     let mut out = Vec::with_capacity(12 + hbytes.len() + payload.len());
@@ -307,6 +471,93 @@ mod tests {
         params.insert("b".to_string(), Tensor::zeros(&[4]));
         let err = save(dir.join("x.sqnt"), &header, &params).unwrap_err();
         assert!(err.to_string().contains("overlap"), "{err:#}");
+    }
+
+    /// A q4 grid with an odd row length (3 values -> 2 bytes/row, so the
+    /// high nibble of each row's last byte and the final payload word's
+    /// padding tail are both exercised).
+    fn q4_fixture() -> QTensor {
+        let grid = Tensor::from_vec(&[2, 3], vec![-7., 0., 7., 3., -3., 1.]);
+        QTensor::from_grid(&grid, &[0.5, 0.25], 4).unwrap()
+    }
+
+    fn q8_fixture() -> QTensor {
+        let grid = Tensor::from_vec(&[2, 2], vec![-127., 64., 1., -2.]);
+        QTensor::from_grid(&grid, &[0.125, 2.0], 8).unwrap()
+    }
+
+    #[test]
+    fn mixed_container_round_trips_packed_rows() {
+        let dir = std::env::temp_dir().join("sqnt_test_mixed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.sqnt");
+        let qt4 = q4_fixture();
+        let qt8 = q8_fixture();
+        let mut params = Params::new();
+        params.insert(
+            "bias".to_string(),
+            Tensor::from_vec(&[3], vec![0.5, -1.5, 2.0]),
+        );
+        let mut packed = HashMap::new();
+        packed.insert("w4".to_string(), Arc::new(qt4.clone()));
+        packed.insert("w8".to_string(), Arc::new(qt8.clone()));
+        let order =
+            vec!["w4".to_string(), "bias".to_string(), "w8".to_string()];
+        let table =
+            rebuild_tensor_table_mixed(&params, &packed, &order).unwrap();
+        let header = Json::obj().set("name", "t").set("tensors", table);
+        save_mixed(&path, &header, &params, &packed).unwrap();
+        let c = load(&path).unwrap();
+        assert_eq!(c.order, order);
+        assert_eq!(c.params["bias"].data, vec![0.5, -1.5, 2.0]);
+        assert_eq!(*c.packed["w4"], qt4, "q4 row round-trips bit-exactly");
+        assert_eq!(*c.packed["w8"], qt8);
+        // Scales survive the header JSON exactly (f32 -> f64 -> text -> f32).
+        assert_eq!(c.packed["w4"].scales, vec![0.5, 0.25]);
+        assert!(
+            c.params.get("w4").is_none(),
+            "packed rows never surface as f32 params"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_packed_metadata() {
+        let parse = |tensors: &str| {
+            let h =
+                Json::parse(&format!(r#"{{"name":"t","tensors":{tensors}}}"#))
+                    .unwrap();
+            parse_tensor_table(&h, 1 << 20)
+        };
+        // bits outside the dtype's storage class
+        assert!(parse(
+            r#"[{"name":"w","shape":[2,3],"offset":0,"numel":1,
+                "dtype":"q4","bits":8,"qbytes":4,"scales":[1,1]}]"#
+        )
+        .is_err());
+        // qbytes inconsistent with shape
+        assert!(parse(
+            r#"[{"name":"w","shape":[2,3],"offset":0,"numel":2,
+                "dtype":"q4","bits":4,"qbytes":5,"scales":[1,1]}]"#
+        )
+        .is_err());
+        // scales length != output channels
+        assert!(parse(
+            r#"[{"name":"w","shape":[2,3],"offset":0,"numel":1,
+                "dtype":"q4","bits":4,"qbytes":4,"scales":[1]}]"#
+        )
+        .is_err());
+        // unknown dtype
+        assert!(parse(
+            r#"[{"name":"w","shape":[2,3],"offset":0,"numel":6,
+                "dtype":"q16","bits":16,"qbytes":12,"scales":[1,1]}]"#
+        )
+        .is_err());
+        // a consistent row parses
+        assert!(parse(
+            r#"[{"name":"w","shape":[2,3],"offset":0,"numel":1,
+                "dtype":"q4","bits":4,"qbytes":4,"scales":[1,1]}]"#
+        )
+        .is_ok());
     }
 
     #[test]

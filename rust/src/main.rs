@@ -20,7 +20,8 @@
 //!                collector; total threads = 2 + --workers)
 //!   squant bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--idle M]
 //!                [--reqs N] [--restart-warm] [--mixed-keys] [--tiny]
-//!                [--predict] [--pipeline D] [--strict]
+//!                [--predict] [--pipeline D] [--abits A] [--strict]
+//!                [--require-int8]
 //!                load-generate against a serve instance:
 //!                req/s, hit-rate, latency quantiles, busy rejections and
 //!                connection gauges; --idle M keeps M of the N connections
@@ -31,9 +32,14 @@
 //!                model (no artifacts needed); --predict drives open-loop
 //!                inference traffic (pipelined --pipeline deep per conn)
 //!                and reports the server's batch-size distribution
-//!                alongside the latency split; --strict exits non-zero on
-//!                any error or dropped idle conn.  Every run writes a
-//!                BENCH_serve.json snapshot for cross-PR comparison.
+//!                alongside the latency split; --abits A (default 8 with
+//!                --predict) quantizes activations so forwards run the
+//!                packed integer kernels (0 = f32 path); --strict exits
+//!                non-zero on any error or dropped idle conn;
+//!                --require-int8 additionally fails unless the server's
+//!                stats show kernel.int8 > 0 (the packed path really ran).
+//!                Every run writes a BENCH_serve.json snapshot for
+//!                cross-PR comparison.
 //!
 //! Quantization is described everywhere by ONE canonical spec
 //! (`quant::spec::QuantSpec`): `--spec "w4a8:squant:max-abs;fc=w8"` is the
@@ -190,7 +196,8 @@ COMMANDS:
   bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--idle M]
           [--reqs N] [--models A,B] [--wbits 8,4] [--eval-every N]
           [--samples N] [--seed S] [--restart-warm] [--mixed-keys]
-          [--tiny] [--predict] [--pipeline D] [--strict]
+          [--tiny] [--predict] [--pipeline D] [--abits A] [--strict]
+          [--require-int8]
           load-generate against a server; prints req/s, cache hit-rate,
           p50/p95/p99 latency, busy rejections and connection gauges,
           and writes a BENCH_serve.json snapshot (req/s, quantiles,
@@ -208,7 +215,12 @@ COMMANDS:
           --pipeline D (default 4) requests in flight (open-loop), so
           concurrent inputs coalesce into batched forwards; reports the
           batch-size distribution and flush reasons alongside latency.
-          --strict exits non-zero on request errors or dropped idle conns
+          --abits A (default 8 with --predict, else 0) adds activation
+          bits to each predict request so the server's forwards run the
+          packed integer kernels; the per-path dispatch counts are
+          printed (kernels line) and land in the snapshot.
+          --strict exits non-zero on request errors or dropped idle conns;
+          --require-int8 also fails unless stats report kernel.int8 > 0
 
 SPEC:   w<W>a<A>:<method>:<scale>[;<layer>=<override>]*
         e.g. \"w4a8:squant:max-abs;conv1=w8;fc=w8/rtn\" — overrides are
@@ -564,6 +576,14 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     // pipeline limit so a deep setting cannot wedge on TCP buffers.
     let pipeline = args.usize_or("pipeline", 4)?.clamp(1, 64);
     let strict = args.flag("strict");
+    // Activation bits for --predict traffic.  Non-zero makes the server run
+    // the packed integer kernels (weights stay packed, activations are
+    // quantized per request); 0 keeps the f32 reference path.  Defaults to 8
+    // in predict mode so the bench exercises the int path out of the box.
+    let abits = args.usize_or("abits", if predict { 8 } else { 0 })?;
+    // CI assertion: fail unless the server's stats show the packed i8 kernel
+    // actually dispatched at least once during the run.
+    let require_int8 = args.flag("require-int8");
     let cfg = serve_cfg(args)?;
     args.finish()?;
     if restart_warm && (!spawn || cfg.cache_dir.is_none()) {
@@ -755,7 +775,7 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
                         let wb = wbits[rng.below(wbits.len())];
                         let mut input = vec![0.0f32; input_len];
                         rng.fill_normal(&mut input, 1.0);
-                        let req = Json::obj()
+                        let mut req = Json::obj()
                             .set("cmd", "predict")
                             .set("model", model)
                             .set("wbits", wb)
@@ -768,6 +788,11 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
                                         .collect(),
                                 ),
                             );
+                        if abits > 0 {
+                            // Non-zero activation bits select the packed
+                            // integer kernel path server-side.
+                            req = req.set("abits", abits);
+                        }
                         let line = req.dump();
                         if writer
                             .write_all(line.as_bytes())
@@ -932,6 +957,17 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         busy.load(Ordering::Relaxed),
         errors.load(Ordering::Relaxed)
     );
+    // Which kernel paths the server's forwards actually dispatched: packed
+    // int8 / int4 vs the f32 fallback, per conv/linear node execution.
+    let kernel = stats1.get("metrics").and_then(|m| m.get("kernel"));
+    let kget = |k: &str| {
+        kernel
+            .and_then(|o| o.get(k))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let (k8, k4, kf) = (kget("int8"), kget("int4"), kget("f32"));
+    println!("  kernels    : int8 {k8:.0}, int4 {k4:.0}, f32 {kf:.0}");
     if let Ok(conns_stats) = stats1.req("conns") {
         println!(
             "  conns      : active {}, peak {}, rejected {}, idle-closed {}",
@@ -1042,7 +1078,14 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         .set("p99_ms", hist.quantile_ms(0.99))
         .set("max_ms", hist.max_ms())
         .set("hit_rate_pct", hit_rate)
-        .set("mean_batch", server_mean_batch);
+        .set("mean_batch", server_mean_batch)
+        .set(
+            "kernels",
+            Json::obj()
+                .set("int8", k8 as usize)
+                .set("int4", k4 as usize)
+                .set("f32", kf as usize),
+        );
     const BENCH_PATH: &str = "BENCH_serve.json";
     match std::fs::write(BENCH_PATH, snapshot.dump() + "\n") {
         Ok(()) => println!("  snapshot   : wrote {BENCH_PATH}"),
@@ -1076,6 +1119,12 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         if idle_alive < idle {
             bail!("--strict: only {idle_alive}/{idle} idle conns survived");
         }
+    }
+    if require_int8 && k8 < 1.0 {
+        bail!(
+            "--require-int8: stats kernel.int8 = {k8:.0}; \
+             the packed i8 path never ran (int4 {k4:.0}, f32 {kf:.0})"
+        );
     }
 
     if restart_warm {

@@ -19,10 +19,12 @@
 
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use super::{Graph, Op, Params};
-use crate::tensor::im2col::{im2col, out_dim};
-use crate::tensor::{matmul::matmul_bt, matmul::matmul_into, Tensor};
+use crate::tensor::im2col::{im2col, im2col_u8, out_dim};
+use crate::tensor::qgemm::{act_grid, qgemm_into, quantize_acts, ActGrid};
+use crate::tensor::{matmul::matmul_bt, matmul::matmul_into, QTensor, Tensor};
 use crate::util::rn;
 
 /// Per-tensor affine activation quantizer: node id -> (min, max) range.
@@ -50,6 +52,75 @@ impl ActQuant {
     }
 }
 
+/// Packed integer weights by tensor name — the integer-domain companion to
+/// [`Params`].  A conv/linear layer whose weight is present here (and whose
+/// node has a cached activation range representable as a u8 grid) executes
+/// on the packed qgemm path; every other layer runs the f32 path.  Mixed-
+/// precision specs (fp32 or >8-bit overrides over a low-bit base) therefore
+/// run both kernel families within one graph.
+#[derive(Clone, Debug, Default)]
+pub struct QuantizedParams {
+    map: HashMap<String, Arc<QTensor>>,
+}
+
+impl QuantizedParams {
+    pub fn new() -> QuantizedParams {
+        QuantizedParams::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, qt: impl Into<Arc<QTensor>>) {
+        self.map.insert(name.into(), qt.into());
+    }
+
+    pub fn get(&self, name: &str) -> Option<&QTensor> {
+        self.map.get(name).map(|t| t.as_ref())
+    }
+
+    /// The shared handle itself (for Arc-aware callers).
+    pub fn shared(&self, name: &str) -> Option<&Arc<QTensor>> {
+        self.map.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = &Arc<QTensor>> {
+        self.map.values()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Arc<QTensor>)> {
+        self.map.iter()
+    }
+}
+
+/// Per-kernel-path dispatch counts for one forward pass, keyed by the
+/// weight storage width actually executed (i4 nibble-packed, i8, or the
+/// f32 fallback).  Surfaced through serve metrics as `kernel.{int8,int4,
+/// f32}` so packed dispatch is observable under `stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelCounts {
+    pub int8: u64,
+    pub int4: u64,
+    pub f32: u64,
+}
+
+impl KernelCounts {
+    pub fn add(&mut self, other: KernelCounts) {
+        self.int8 += other.int8;
+        self.int4 += other.int4;
+        self.f32 += other.f32;
+    }
+}
+
 /// What to record during a forward pass.
 #[derive(Default)]
 pub struct Capture {
@@ -69,12 +140,43 @@ pub struct ForwardOut {
     pub captured: HashMap<usize, Tensor>,
     /// node id -> cloned output tensor (when requested via Capture).
     pub captured_out: HashMap<usize, Tensor>,
+    /// Which kernel path each conv/linear node dispatched to.
+    pub kernels: KernelCounts,
 }
 
-/// Run the graph on a (B, C, H, W) input batch.
+/// Run the graph on a (B, C, H, W) input batch (f32 path only — see
+/// [`forward_q`] for packed-weight dispatch).
 pub fn forward(
     graph: &Graph,
     params: &Params,
+    x: &Tensor,
+    act_quant: Option<&ActQuant>,
+    capture: Option<&Capture>,
+) -> Result<ForwardOut> {
+    forward_q(graph, params, None, x, act_quant, capture)
+}
+
+/// Run the graph on a (B, C, H, W) input batch, dispatching each
+/// conv/linear node to the packed integer kernel when possible.
+///
+/// A node takes the packed path only when all of the following hold —
+/// otherwise it falls back to the f32 path (counted in
+/// [`KernelCounts::f32`]), which keeps weight-only requests and captures
+/// numerically identical to the pre-packed engine:
+///
+///  * `qparams` holds a [`QTensor`] for the node's weight;
+///  * `act_quant` is present with a range for this node whose affine grid
+///    is u8-representable ([`act_grid`] — bits ≤ 8, zero point in range);
+///  * no activation capture is requested (the packed path never
+///    materializes the fake-quantized input tensor).
+///
+/// The packed path quantizes the raw input straight to grid q-values —
+/// the exact discretization `ActQuant::apply` performs — so its logits
+/// match the fake-quant f32 reference up to f32 accumulation order.
+pub fn forward_q(
+    graph: &Graph,
+    params: &Params,
+    qparams: Option<&QuantizedParams>,
     x: &Tensor,
     act_quant: Option<&ActQuant>,
     capture: Option<&Capture>,
@@ -85,6 +187,7 @@ pub fn forward(
     let mut vals: Vec<Option<Tensor>> = vec![None; graph.nodes.len()];
     let mut captured = HashMap::new();
     let mut captured_out = HashMap::new();
+    let mut kernels = KernelCounts::default();
 
     for node in &graph.nodes {
         let get = |i: usize| -> Result<&Tensor> {
@@ -95,38 +198,81 @@ pub fn forward(
         let out = match &node.op {
             Op::Input => x.clone(),
             Op::Conv2d { .. } | Op::Linear { .. } => {
-                let mut input = get(0)?.clone();
-                if let Some(aq) = act_quant {
-                    aq.apply(node.id, &mut input);
-                }
-                if let Some(cap) = capture {
-                    if cap.nodes.contains(&node.id) {
-                        captured.insert(node.id, input.clone());
+                let weight_name = match &node.op {
+                    Op::Conv2d { weight, .. } | Op::Linear { weight, .. } => weight,
+                    _ => unreachable!(),
+                };
+                let packed = if capture.is_none() {
+                    qparams.and_then(|qp| qp.get(weight_name)).zip(
+                        act_quant.and_then(|aq| {
+                            let &(lo, hi) = aq.ranges.get(&node.id)?;
+                            act_grid(aq.bits, lo, hi)
+                        }),
+                    )
+                } else {
+                    None
+                };
+                if let Some((qt, grid)) = packed {
+                    let input = get(0)?;
+                    let out = match &node.op {
+                        Op::Conv2d {
+                            stride, ph, pw, groups, cin, cout, kh, kw, bias, ..
+                        } => conv2d_q(
+                            input,
+                            qt,
+                            bias.as_ref().and_then(|b| params.get(b)),
+                            grid,
+                            *stride, *ph, *pw, *groups, *cin, *cout, *kh, *kw,
+                        )?,
+                        Op::Linear { bias, .. } => linear_q(
+                            input,
+                            qt,
+                            bias.as_ref().and_then(|b| params.get(b)),
+                            grid,
+                        )?,
+                        _ => unreachable!(),
+                    };
+                    if qt.storage_bits() == 4 {
+                        kernels.int4 += 1;
+                    } else {
+                        kernels.int8 += 1;
                     }
-                }
-                match &node.op {
-                    Op::Conv2d {
-                        stride, ph, pw, groups, cin, cout, kh, kw, weight, bias,
-                    } => conv2d(
-                        &input,
-                        params.get(weight).context("missing conv weight")?,
-                        bias.as_ref().map(|b| params.get(b)).flatten(),
-                        *stride, *ph, *pw, *groups, *cin, *cout, *kh, *kw,
-                    )?,
-                    Op::Linear { weight, bias, .. } => {
-                        let w = params.get(weight).context("missing fc weight")?;
-                        let mut y = matmul_bt(&input, w);
-                        if let Some(bname) = bias {
-                            let b = params.get(bname).context("missing fc bias")?;
-                            for r in 0..y.shape[0] {
-                                for (v, bv) in y.row_mut(r).iter_mut().zip(&b.data) {
-                                    *v += bv;
+                    out
+                } else {
+                    kernels.f32 += 1;
+                    let mut input = get(0)?.clone();
+                    if let Some(aq) = act_quant {
+                        aq.apply(node.id, &mut input);
+                    }
+                    if let Some(cap) = capture {
+                        if cap.nodes.contains(&node.id) {
+                            captured.insert(node.id, input.clone());
+                        }
+                    }
+                    match &node.op {
+                        Op::Conv2d {
+                            stride, ph, pw, groups, cin, cout, kh, kw, weight, bias,
+                        } => conv2d(
+                            &input,
+                            params.get(weight).context("missing conv weight")?,
+                            bias.as_ref().and_then(|b| params.get(b)),
+                            *stride, *ph, *pw, *groups, *cin, *cout, *kh, *kw,
+                        )?,
+                        Op::Linear { weight, bias, .. } => {
+                            let w = params.get(weight).context("missing fc weight")?;
+                            let mut y = matmul_bt(&input, w);
+                            if let Some(bname) = bias {
+                                let b = params.get(bname).context("missing fc bias")?;
+                                for r in 0..y.shape[0] {
+                                    for (v, bv) in y.row_mut(r).iter_mut().zip(&b.data) {
+                                        *v += bv;
+                                    }
                                 }
                             }
+                            y
                         }
-                        y
+                        _ => unreachable!(),
                     }
-                    _ => unreachable!(),
                 }
             }
             Op::BatchNorm { eps, gamma, beta, mean, var, .. } => {
@@ -181,7 +327,7 @@ pub fn forward(
         .pop()
         .flatten()
         .context("empty graph")?;
-    Ok(ForwardOut { logits, captured, captured_out })
+    Ok(ForwardOut { logits, captured, captured_out, kernels })
 }
 
 // ---------------------------------------------------------------------------
@@ -240,6 +386,105 @@ fn conv2d(
         }
     }
     Ok(out)
+}
+
+/// Packed conv: quantize the input image to u8 grid values, im2col with the
+/// zero point as the pad fill (so padded positions contribute exactly zero
+/// after zero-point correction, matching the f32 path's literal zeros), and
+/// run the integer GEMM per group with a fused dequant epilogue.  Group `g`
+/// owns QTensor rows `g·og..(g+1)·og`, so scales and row sums line up with
+/// output channels exactly as in the f32 kernel.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_q(
+    x: &Tensor,
+    w: &QTensor,
+    bias: Option<&Tensor>,
+    g: ActGrid,
+    stride: usize,
+    ph: usize,
+    pw: usize,
+    groups: usize,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+) -> Result<Tensor> {
+    let (b, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    if c != cin {
+        bail!("conv input channels {c} != {cin}");
+    }
+    if w.shape != [cout, cin / groups, kh, kw] {
+        bail!("conv qweight shape {:?} unexpected", w.shape);
+    }
+    let oh = out_dim(h, kh, stride, ph);
+    let ow = out_dim(wd, kw, stride, pw);
+    let cg = cin / groups;
+    let og = cout / groups;
+    let krows = cg * kh * kw;
+    let zp = g.zp as u8; // act_grid guarantees 0 <= zp <= levels <= 255
+    let mut out = Tensor::zeros(&[b, cout, oh, ow]);
+    let mut qimg = vec![0u8; c * h * wd];
+    for bi in 0..b {
+        let img = &x.data[bi * c * h * wd..(bi + 1) * c * h * wd];
+        quantize_acts(img, g, &mut qimg);
+        for gi in 0..groups {
+            let patches = im2col_u8(
+                &qimg[gi * cg * h * wd..(gi + 1) * cg * h * wd],
+                cg, h, wd, kh, kw, stride, ph, pw, zp,
+            );
+            let dst = &mut out.data
+                [(bi * cout + gi * og) * oh * ow..(bi * cout + (gi + 1) * og) * oh * ow];
+            qgemm_into(w, gi * og, og, &patches, krows, oh * ow, g.scale, g.zp, dst);
+        }
+        if let Some(bt) = bias {
+            for oc in 0..cout {
+                let base = (bi * cout + oc) * oh * ow;
+                let bv = bt.data[oc];
+                for v in &mut out.data[base..base + oh * ow] {
+                    *v += bv;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Packed linear: quantize the (B, K) input, transpose to a (K, B) panel so
+/// output channels are GEMM rows, run the integer GEMM, then scatter the
+/// (O, B) result back to (B, O) and add the bias.
+fn linear_q(x: &Tensor, w: &QTensor, bias: Option<&Tensor>, g: ActGrid) -> Result<Tensor> {
+    if x.ndim() != 2 {
+        bail!("linear input must be 2-D, got {:?}", x.shape);
+    }
+    let (b, k) = (x.shape[0], x.shape[1]);
+    let o = w.rows();
+    if w.row_len() != k {
+        bail!("linear qweight row len {} vs input features {k}", w.row_len());
+    }
+    let mut qx = vec![0u8; b * k];
+    quantize_acts(&x.data, g, &mut qx);
+    let mut panel = vec![0u8; k * b];
+    for bi in 0..b {
+        for kk in 0..k {
+            panel[kk * b + bi] = qx[bi * k + kk];
+        }
+    }
+    let mut yt = vec![0.0f32; o * b];
+    qgemm_into(w, 0, o, &panel, k, b, g.scale, g.zp, &mut yt);
+    let mut y = Tensor::zeros(&[b, o]);
+    for bi in 0..b {
+        for oc in 0..o {
+            y.data[bi * o + oc] = yt[oc * b + bi];
+        }
+    }
+    if let Some(bt) = bias {
+        for r in 0..b {
+            for (v, bv) in y.row_mut(r).iter_mut().zip(&bt.data) {
+                *v += bv;
+            }
+        }
+    }
+    Ok(y)
 }
 
 fn batchnorm(x: &Tensor, gamma: &[f32], beta: &[f32], mean: &[f32],
@@ -399,6 +644,123 @@ mod tests {
         let aq8 = ActQuant { bits: 8, ranges: aq.ranges.clone() };
         let fine = forward(&g, &p, &x, Some(&aq8), None).unwrap().logits;
         assert!(exact.mse(&fine) < exact.mse(&coarse));
+    }
+
+    /// Tiny graph with weights `w1`/`wfc` fake-quantized in Params and
+    /// (where a bit-width is given and packable) packed in QuantizedParams
+    /// from the same grid — the two representations the coordinator builds.
+    fn quantized_tiny(
+        bits_conv: Option<usize>,
+        bits_fc: Option<usize>,
+    ) -> (crate::nn::Graph, Params, QuantizedParams) {
+        use crate::quant::{channel_scales, dequant, pack_grid, quantize_rtn, QuantConfig};
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let mut pq = p.clone();
+        let mut qp = QuantizedParams::new();
+        for (name, bits) in [("w1", bits_conv), ("wfc", bits_fc)] {
+            if let Some(bits) = bits {
+                let w = &p[name];
+                let scales = channel_scales(w, QuantConfig::new(bits));
+                let q = quantize_rtn(w, &scales, bits);
+                pq.insert(name, dequant(&q, &scales));
+                if let Some(qt) = pack_grid(&q, &scales, bits) {
+                    qp.insert(name, qt);
+                }
+            }
+        }
+        (g, pq, qp)
+    }
+
+    fn tiny_ranges() -> HashMap<usize, (f32, f32)> {
+        let mut ranges = HashMap::new();
+        ranges.insert(1usize, (-3.0f32, 3.0f32)); // conv input
+        ranges.insert(5usize, (-3.0f32, 3.0f32)); // fc input
+        ranges
+    }
+
+    fn assert_logits_close(packed: &Tensor, reference: &Tensor) {
+        assert_eq!(packed.shape, reference.shape);
+        for (a, b) in packed.data.iter().zip(&reference.data) {
+            let tol = 1e-4 * b.abs().max(1.0);
+            assert!((a - b).abs() <= tol, "logit {a} vs reference {b}");
+        }
+        assert_eq!(packed.argmax_rows(), reference.argmax_rows(), "top-1 must be bit-identical");
+    }
+
+    #[test]
+    fn packed_forward_matches_fake_quant_reference() {
+        let mut x = Tensor::zeros(&[3, 3, 8, 8]);
+        Rng::new(11).fill_normal(&mut x.data, 1.0);
+        for &bits in &[4usize, 8] {
+            let (g, pq, qp) = quantized_tiny(Some(bits), Some(bits));
+            let aq = ActQuant { bits: 8, ranges: tiny_ranges() };
+            let reference = forward(&g, &pq, &x, Some(&aq), None).unwrap();
+            assert_eq!(reference.kernels, KernelCounts { int8: 0, int4: 0, f32: 2 });
+            let packed = forward_q(&g, &pq, Some(&qp), &x, Some(&aq), None).unwrap();
+            let want = if bits == 4 {
+                KernelCounts { int8: 0, int4: 2, f32: 0 }
+            } else {
+                KernelCounts { int8: 2, int4: 0, f32: 0 }
+            };
+            assert_eq!(packed.kernels, want, "w{bits}");
+            assert_logits_close(&packed.logits, &reference.logits);
+        }
+    }
+
+    #[test]
+    fn mixed_precision_runs_both_kernel_paths_in_one_graph() {
+        // fp32 override on fc over a w4 base: conv packs, fc stays f32.
+        let (g, pq, qp) = quantized_tiny(Some(4), None);
+        assert_eq!(qp.len(), 1);
+        let mut x = Tensor::zeros(&[2, 3, 8, 8]);
+        Rng::new(12).fill_normal(&mut x.data, 1.0);
+        let aq = ActQuant { bits: 8, ranges: tiny_ranges() };
+        let reference = forward(&g, &pq, &x, Some(&aq), None).unwrap();
+        let out = forward_q(&g, &pq, Some(&qp), &x, Some(&aq), None).unwrap();
+        assert_eq!(out.kernels, KernelCounts { int8: 0, int4: 1, f32: 1 });
+        assert_logits_close(&out.logits, &reference.logits);
+    }
+
+    #[test]
+    fn packed_falls_back_to_f32_without_act_ranges() {
+        // Weight-only spec (abits = 0): no ActQuant, so even layers with a
+        // QTensor run the f32 path and answers stay bit-identical.
+        let (g, pq, qp) = quantized_tiny(Some(8), Some(8));
+        let mut x = Tensor::zeros(&[2, 3, 8, 8]);
+        Rng::new(13).fill_normal(&mut x.data, 1.0);
+        let plain = forward(&g, &pq, &x, None, None).unwrap();
+        let out = forward_q(&g, &pq, Some(&qp), &x, None, None).unwrap();
+        assert_eq!(out.kernels, KernelCounts { int8: 0, int4: 0, f32: 2 });
+        assert_eq!(out.logits.data, plain.logits.data);
+    }
+
+    #[test]
+    fn packed_falls_back_per_node_on_unrepresentable_grid() {
+        // A range entirely above zero puts the zero point below 0: that
+        // node falls back to f32 while the other still packs.
+        let (g, pq, qp) = quantized_tiny(Some(8), Some(8));
+        let mut ranges = tiny_ranges();
+        ranges.insert(1, (1.0, 2.0));
+        let aq = ActQuant { bits: 8, ranges };
+        let mut x = Tensor::zeros(&[1, 3, 8, 8]);
+        Rng::new(14).fill_normal(&mut x.data, 1.0);
+        let reference = forward(&g, &pq, &x, Some(&aq), None).unwrap();
+        let out = forward_q(&g, &pq, Some(&qp), &x, Some(&aq), None).unwrap();
+        assert_eq!(out.kernels, KernelCounts { int8: 1, int4: 0, f32: 1 });
+        assert_logits_close(&out.logits, &reference.logits);
+    }
+
+    #[test]
+    fn capture_forces_f32_path() {
+        let (g, pq, qp) = quantized_tiny(Some(8), Some(8));
+        let mut x = Tensor::zeros(&[1, 3, 8, 8]);
+        Rng::new(15).fill_normal(&mut x.data, 1.0);
+        let aq = ActQuant { bits: 8, ranges: tiny_ranges() };
+        let mut cap = Capture::default();
+        cap.nodes.insert(1);
+        let out = forward_q(&g, &pq, Some(&qp), &x, Some(&aq), Some(&cap)).unwrap();
+        assert_eq!(out.kernels, KernelCounts { int8: 0, int4: 0, f32: 2 });
+        assert!(out.captured.contains_key(&1));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 pub mod spec;
 
+use crate::tensor::qtensor::{QTensor, MAX_PACK_BITS};
 use crate::tensor::Tensor;
 use crate::util::rn;
 
@@ -154,6 +155,36 @@ pub fn fake_quant(w: &Tensor, cfg: QuantConfig) -> Tensor {
     dequant(&q, &scales)
 }
 
+/// Pack a grid-value tensor into the integer-domain [`QTensor`]
+/// representation, or `None` when the grid is too wide for packed storage
+/// (bits > [`MAX_PACK_BITS`]) and the layer stays f32-only.
+///
+/// Panics on grids that are not valid integer grids for `bits` — every
+/// caller feeds the output of [`quantize_rtn`] or SQuant's flip search,
+/// which are on-grid by construction, so a failure here is a quantizer bug
+/// rather than a recoverable condition.
+pub fn pack_grid(q: &Tensor, scales: &[f32], bits: usize) -> Option<QTensor> {
+    if !(MIN_BITS..=MAX_PACK_BITS).contains(&bits) {
+        return None;
+    }
+    Some(QTensor::from_grid(q, scales, bits).expect("quantizer grid must be packable"))
+}
+
+/// Unpack a [`QTensor`] back to grid values + scales (inverse of
+/// [`pack_grid`]).
+pub fn unpack_grid(qt: &QTensor) -> (Tensor, Vec<f32>) {
+    (qt.to_grid(), qt.scales.clone())
+}
+
+/// RTN straight to the packed integer domain: quantize and pack in one
+/// step.  `None` for bit-widths wider than packed storage supports.
+pub fn quantize_rtn_packed(w: &Tensor, scales: &[f32], bits: usize) -> Option<QTensor> {
+    if !(MIN_BITS..=MAX_PACK_BITS).contains(&bits) {
+        return None;
+    }
+    pack_grid(&quantize_rtn(w, scales, bits), scales, bits)
+}
+
 /// Perturbation p = q - w/s in grid units, shape of w.
 pub fn perturbation(w: &Tensor, q: &Tensor, scales: &[f32]) -> Tensor {
     let (m, n, k) = mnk_of(&w.shape);
@@ -255,6 +286,27 @@ mod tests {
             scale: ScaleMethod::MseGrid { steps: 40 },
         });
         assert!(b <= a + 1e-9, "mse grid {b} vs maxabs {a}");
+    }
+
+    #[test]
+    fn pack_grid_round_trips_and_gates_wide_bits() {
+        let mut rng = Rng::new(4);
+        let mut w = Tensor::zeros(&[3, 2, 3, 3]);
+        rng.fill_normal(&mut w.data, 0.1);
+        for &bits in &[4usize, 8] {
+            let scales = channel_scales(&w, QuantConfig::new(bits));
+            let q = quantize_rtn(&w, &scales, bits);
+            let qt = quantize_rtn_packed(&w, &scales, bits).unwrap();
+            let (back, s2) = unpack_grid(&qt);
+            assert_eq!(back.data, q.data);
+            assert_eq!(s2, scales);
+            // Packed dequant is bit-identical to the f32 fake-quant result.
+            assert_eq!(qt.dequantize().data, dequant(&q, &scales).data);
+        }
+        // 16-bit grids exceed i8 storage: no packed form, f32-only layer.
+        let scales = channel_scales(&w, QuantConfig::new(16));
+        assert!(quantize_rtn_packed(&w, &scales, 16).is_none());
+        assert!(pack_grid(&quantize_rtn(&w, &scales, 16), &scales, 16).is_none());
     }
 
     #[test]

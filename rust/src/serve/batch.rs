@@ -85,6 +85,10 @@ pub struct PredictOutcome {
     pub batch: usize,
     /// Enqueue → flush (time spent waiting for co-batched traffic).
     pub wait_ms: f64,
+    /// Kernel paths the batch's forward dispatched (shared by every item
+    /// that rode in it) — surfaced on the response so callers can assert
+    /// which execution path served them.
+    pub kernels: crate::nn::engine::KernelCounts,
 }
 
 pub type PredictDone =

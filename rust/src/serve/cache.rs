@@ -11,7 +11,10 @@
 //! between sibling mixed-precision entries, the model store and in-flight
 //! requests) occupies its payload once no matter how many cache entries
 //! reference it.  The cache keeps a per-allocation refcount and
-//! charges/discharges a tensor only on its first/last reference.
+//! charges/discharges a tensor only on its first/last reference.  Packed
+//! integer weights ([`QuantizedParams`], when the entry carries them) are
+//! Arc-shared [`QTensor`]s accounted the same way in the same refcount
+//! map.
 //!
 //! Recency is a monotonic tick per entry; eviction scans for the minimum
 //! tick — O(n) per eviction, which is fine at serving cache sizes (tens of
@@ -21,10 +24,10 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::sync::Mutex;
 
-use crate::tensor::Tensor;
+use crate::tensor::{QTensor, Tensor};
 
 use crate::coordinator::QuantReport;
-use crate::nn::engine::ActQuant;
+use crate::nn::engine::{ActQuant, QuantizedParams};
 use crate::nn::Params;
 use crate::quant::spec::QuantSpec;
 
@@ -48,23 +51,50 @@ impl QuantKey {
 /// One cached quantization result.
 pub struct CacheEntry {
     pub params: Params,
+    /// Packed integer weights for the layers that quantized to <= 8 bits;
+    /// `None` when no layer packs (wide-bit or fp32-only specs).  The
+    /// packed execution path dispatches off this per layer.
+    pub qparams: Option<Arc<QuantizedParams>>,
     pub act: Option<ActQuant>,
     pub report: QuantReport,
-    /// Approximate heap footprint (tensor payloads).
+    /// Approximate heap footprint (tensor + packed payloads).
     pub bytes: usize,
 }
 
 /// Approximate byte footprint of a parameter set (f32 payload + map
-/// slack), counting every tensor — shared or not.  This is the *full*
-/// footprint stored on [`CacheEntry::bytes`] (used by the disk tier and
-/// the oversize screen); the in-memory budget instead charges unique
-/// bytes (see module docs).
+/// slack), counting every tensor — shared or not.  This is part of the
+/// *full* footprint stored on [`CacheEntry::bytes`] (used by the disk
+/// tier and the oversize screen); the in-memory budget instead charges
+/// unique bytes (see module docs).
 pub fn params_bytes(p: &Params) -> usize {
     p.values().map(|t| tensor_bytes(t)).sum()
 }
 
+/// Full byte footprint of an entry's payloads (f32 params + packed
+/// weights), counting every allocation shared or not.
+pub fn entry_payload_bytes(params: &Params, qparams: Option<&QuantizedParams>) -> usize {
+    params_bytes(params)
+        + qparams.map_or(0, |qp| qp.values().map(|qt| qt.bytes()).sum())
+}
+
 fn tensor_bytes(t: &Tensor) -> usize {
     t.data.len() * 4 + 64
+}
+
+/// Every distinct heap allocation an entry references, as (pointer, byte
+/// size) pairs: the f32 tensors plus any packed integer weights.  Both
+/// kinds live in one pointer-keyed refcount map — an allocation shared
+/// across entries is charged once no matter which side references it.
+fn allocations(entry: &CacheEntry) -> impl Iterator<Item = (usize, usize)> + '_ {
+    let tensors = entry
+        .params
+        .values()
+        .map(|t| (Arc::as_ptr(t) as usize, tensor_bytes(t)));
+    let packed = entry.qparams.iter().flat_map(|qp| {
+        qp.values()
+            .map(|qt: &Arc<QTensor>| (Arc::as_ptr(qt) as usize, qt.bytes()))
+    });
+    tensors.chain(packed)
 }
 
 /// Refcounted byte accounting per tensor allocation (keyed by the Arc's
@@ -82,13 +112,12 @@ struct UniqueBytes {
 }
 
 impl UniqueBytes {
-    fn charge(&mut self, params: &Params) {
-        for t in params.values() {
-            let ptr = Arc::as_ptr(t) as usize;
+    fn charge(&mut self, entry: &CacheEntry) {
+        for (ptr, bytes) in allocations(entry) {
             if self.exempt.contains(&ptr) {
                 continue;
             }
-            let slot = self.refs.entry(ptr).or_insert((tensor_bytes(t), 0));
+            let slot = self.refs.entry(ptr).or_insert((bytes, 0));
             if slot.1 == 0 {
                 self.total += slot.0;
             }
@@ -96,9 +125,8 @@ impl UniqueBytes {
         }
     }
 
-    fn discharge(&mut self, params: &Params) {
-        for t in params.values() {
-            let ptr = Arc::as_ptr(t) as usize;
+    fn discharge(&mut self, entry: &CacheEntry) {
+        for (ptr, _) in allocations(entry) {
             let Some(slot) = self.refs.get_mut(&ptr) else { continue };
             slot.1 -= 1;
             if slot.1 == 0 {
@@ -113,15 +141,11 @@ impl UniqueBytes {
     /// the oversize screen — an entry whose standalone footprint exceeds
     /// the budget could never stay resident even after evicting
     /// everything else.
-    fn standalone(&self, params: &Params) -> usize {
+    fn standalone(&self, entry: &CacheEntry) -> usize {
         let mut seen = std::collections::HashSet::new();
-        params
-            .values()
-            .filter(|t| {
-                let ptr = Arc::as_ptr(t) as usize;
-                !self.exempt.contains(&ptr) && seen.insert(ptr)
-            })
-            .map(|t| tensor_bytes(t))
+        allocations(entry)
+            .filter(|&(ptr, _)| !self.exempt.contains(&ptr) && seen.insert(ptr))
+            .map(|(_, bytes)| bytes)
             .sum()
     }
 }
@@ -201,14 +225,14 @@ impl Cache {
             return Vec::new();
         }
         let mut inner = self.inner.lock().unwrap();
-        if inner.bytes.standalone(&entry.params) > self.byte_budget {
+        if inner.bytes.standalone(&entry) > self.byte_budget {
             return Vec::new();
         }
         inner.tick += 1;
         let tick = inner.tick;
-        inner.bytes.charge(&entry.params);
+        inner.bytes.charge(&entry);
         if let Some((old, _)) = inner.map.insert(key, (entry, tick)) {
-            inner.bytes.discharge(&old.params);
+            inner.bytes.discharge(&old);
         }
         let mut evicted = Vec::new();
         while inner.map.len() > self.cap || inner.bytes.total > self.byte_budget
@@ -220,7 +244,7 @@ impl Cache {
                 .map(|(k, _)| k.clone());
             let Some(victim) = victim else { break };
             if let Some((gone, _)) = inner.map.remove(&victim) {
-                inner.bytes.discharge(&gone.params);
+                inner.bytes.discharge(&gone);
                 inner.evictions += 1;
                 evicted.push((victim, gone));
             }
@@ -275,6 +299,7 @@ mod tests {
         let bytes = params_bytes(&params);
         Arc::new(CacheEntry {
             params,
+            qparams: None,
             act: None,
             report: QuantReport { layers: Vec::new(), total_ms: 0.0, wall_ms: 0.0 },
             bytes,
@@ -354,6 +379,7 @@ mod tests {
             let bytes = params_bytes(&params);
             Arc::new(CacheEntry {
                 params,
+                qparams: None,
                 act: None,
                 report: QuantReport {
                     layers: Vec::new(),
@@ -414,6 +440,7 @@ mod tests {
         let bytes = params_bytes(&params); // full footprint: 4528 B
         let entry = Arc::new(CacheEntry {
             params,
+            qparams: None,
             act: None,
             report: QuantReport {
                 layers: Vec::new(),
@@ -426,6 +453,51 @@ mod tests {
         cache.put(key("m"), Arc::clone(&entry));
         assert_eq!(cache.len(), 1, "standalone screen ignores exempt bytes");
         assert_eq!(cache.bytes(), 464, "only the fresh payload is charged");
+    }
+
+    /// Packed weights participate in the same unique-byte accounting as
+    /// f32 tensors: a `QTensor` Arc shared by two entries is charged
+    /// once, and discharging the last reference releases it.
+    #[test]
+    fn packed_weights_are_charged_once() {
+        fn key_w(wbits: usize) -> QuantKey {
+            QuantKey {
+                model: "m".to_string(),
+                spec: QuantSpec::uniform(Method::squant_full(), wbits, 0),
+            }
+        }
+        let grid = Tensor::from_vec(&[2, 2], vec![1., -1., 2., -2.]);
+        let qt = Arc::new(QTensor::from_grid(&grid, &[0.5, 0.5], 8).unwrap());
+        let qbytes = qt.bytes();
+        let entry_q = || {
+            let mut qp = QuantizedParams::new();
+            qp.insert("w", Arc::clone(&qt));
+            let mut params = Params::new();
+            params.insert("w", Tensor::zeros(&[4]));
+            let qp = Arc::new(qp);
+            let bytes = entry_payload_bytes(&params, Some(&qp));
+            Arc::new(CacheEntry {
+                params,
+                qparams: Some(qp),
+                act: None,
+                report: QuantReport {
+                    layers: Vec::new(),
+                    total_ms: 0.0,
+                    wall_ms: 0.0,
+                },
+                bytes,
+            })
+        };
+        let e = entry_q();
+        assert_eq!(e.bytes, 4 * 4 + 64 + qbytes, "footprint counts packed");
+        let cache = Cache::new(16, usize::MAX);
+        cache.put(key_w(4), e);
+        let one = cache.bytes();
+        assert!(one >= qbytes, "packed payload charged");
+        cache.put(key_w(8), entry_q());
+        // The shared QTensor is charged once; each entry's own f32 tensor
+        // is fresh, so exactly one tensor footprint is added.
+        assert_eq!(cache.bytes(), one + 4 * 4 + 64);
     }
 
     #[test]

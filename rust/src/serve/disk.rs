@@ -13,7 +13,7 @@
 //!
 //! ```text
 //!   {"name": "<key label>",
-//!    "artifact": {"version": 2,
+//!    "artifact": {"version": 4,
 //!                 "model": ...,
 //!                 "spec": {"wbits", "abits", "method", "scale",
 //!                          "layers": {...} (when overridden)},
@@ -21,8 +21,16 @@
 //!                 "report": {"total_ms", "wall_ms",
 //!                            "layers": [{.., "bits", "flips_k", ...}]},
 //!                 "act": {"bits", "ranges": [[node, lo, hi], ...]} | null},
-//!    "tensors": [...]}        // contiguous table over the Params payload
+//!    "tensors": [...]}        // contiguous table over the payload
 //! ```
+//!
+//! Since v4 a weight that quantized to <= 8 bits is stored *only* in its
+//! packed integer form (a `"dtype":"q8"`/`"q4"` tensor row: raw packed
+//! bytes + per-channel scales — see [`crate::io::sqnt`]); its dequantized
+//! f32 tensor is rebuilt bit-exactly on load.  Unquantized params
+//! (biases, BN, fp32-override layers) stay f32 rows.  Packed rows make
+//! artifacts ~4-8x smaller for the quantized layers and let a reloaded
+//! entry serve the packed integer kernels directly.
 //!
 //! Staleness: every artifact embeds a fingerprint of its source model file
 //! (FNV-1a over the file's size and full content); a refreshed zoo model
@@ -41,11 +49,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::SystemTime;
 
-use super::cache::{params_bytes, CacheEntry, QuantKey};
+use super::cache::{entry_payload_bytes, CacheEntry, QuantKey};
 use crate::coordinator::{LayerReport, QuantReport};
 use crate::io::sqnt;
-use crate::nn::engine::ActQuant;
+use crate::nn::engine::{ActQuant, QuantizedParams};
 use crate::quant::spec::QuantSpec;
+use crate::tensor::QTensor;
 use crate::util::json::Json;
 use crate::util::{fnv1a, Fnv1a};
 
@@ -58,7 +67,10 @@ use crate::util::{fnv1a, Fnv1a};
 /// (was size + mtime) — fingerprints from the two schemes are
 /// incomparable, so v2 artifacts are dropped rather than spuriously
 /// invalidated one by one.
-pub const ARTIFACT_VERSION: usize = 3;
+/// v4: quantized weights are stored as packed integer rows (q8/q4 bytes
+/// + per-channel scales) instead of dequantized f32 copies; v3 artifacts
+/// are dropped and recomputed.
+pub const ARTIFACT_VERSION: usize = 4;
 
 /// Headers larger than this are rejected during the startup scan (a cache
 /// directory is writable by others; don't let one file OOM the scan).
@@ -253,7 +265,8 @@ impl DiskCache {
         fingerprint: u64,
         entry: &CacheEntry,
     ) -> Result<bool> {
-        let header = encode_header(key, fingerprint, entry)?;
+        let packed = packed_map(entry);
+        let header = encode_header(key, fingerprint, entry, &packed)?;
         let label = key.label();
         let path = self.dir.join(format!(
             "{}-{:016x}.sqnt",
@@ -265,7 +278,7 @@ impl DiskCache {
             std::process::id(),
             self.tmp_seq.fetch_add(1, Ordering::Relaxed)
         ));
-        sqnt::save(&tmp, &header, &entry.params)?;
+        sqnt::save_mixed(&tmp, &header, &entry.params, &packed)?;
         let bytes = fs::metadata(&tmp)?.len();
         if bytes > self.budget {
             let _ = fs::remove_file(&tmp);
@@ -407,10 +420,28 @@ fn artifact_meta(header: &Json) -> Result<(QuantKey, u64)> {
     Ok((key, fp))
 }
 
-fn encode_header(key: &QuantKey, fingerprint: u64, entry: &CacheEntry) -> Result<Json> {
+/// The entry's packed weights as the name-keyed map the SQNT mixed codec
+/// consumes (Arc clones only).
+fn packed_map(entry: &CacheEntry) -> HashMap<String, Arc<QTensor>> {
+    match &entry.qparams {
+        Some(qp) => {
+            qp.iter().map(|(n, t)| (n.clone(), Arc::clone(t))).collect()
+        }
+        None => HashMap::new(),
+    }
+}
+
+fn encode_header(
+    key: &QuantKey,
+    fingerprint: u64,
+    entry: &CacheEntry,
+    packed: &HashMap<String, Arc<QTensor>>,
+) -> Result<Json> {
     let mut order: Vec<String> = entry.params.keys().cloned().collect();
     order.sort();
-    let tensors = sqnt::rebuild_tensor_table(&entry.params, &order)?;
+    // Names present in `packed` become integer rows; their dequantized
+    // f32 twins in `entry.params` are NOT serialized (rebuilt on load).
+    let tensors = sqnt::rebuild_tensor_table_mixed(&entry.params, packed, &order)?;
     let layers: Vec<Json> = entry
         .report
         .layers
@@ -521,8 +552,22 @@ fn decode_entry(
         }
         Some(ActQuant { bits, ranges })
     };
-    let bytes = params_bytes(&c.params);
-    Ok((Arc::new(CacheEntry { params: c.params, act, report, bytes }), fp))
+    // Rebuild each packed weight's dequantized f32 twin (bit-exact:
+    // dequantize is the same per-channel q*scale product the artifact's
+    // writer ran) so the f32 fallback path sees the params it expects.
+    let mut params = c.params;
+    let qparams = if c.packed.is_empty() {
+        None
+    } else {
+        let mut qp = QuantizedParams::new();
+        for (name, qt) in &c.packed {
+            params.insert(name.clone(), qt.dequantize());
+            qp.insert(name.clone(), Arc::clone(qt));
+        }
+        Some(Arc::new(qp))
+    };
+    let bytes = entry_payload_bytes(&params, qparams.as_deref());
+    Ok((Arc::new(CacheEntry { params, qparams, act, report, bytes }), fp))
 }
 
 #[cfg(test)]
@@ -563,8 +608,40 @@ mod tests {
             total_ms: 0.25,
             wall_ms: 0.5,
         };
-        let bytes = params_bytes(&params);
-        CacheEntry { params, act: Some(ActQuant { bits: 8, ranges }), report, bytes }
+        let bytes = entry_payload_bytes(&params, None);
+        CacheEntry {
+            params,
+            qparams: None,
+            act: Some(ActQuant { bits: 8, ranges }),
+            report,
+            bytes,
+        }
+    }
+
+    /// An entry whose weight carries its packed integer form alongside the
+    /// dequantized f32 twin (the shape `assemble_entry` produces).
+    fn packed_entry() -> (CacheEntry, QTensor) {
+        let grid = Tensor::from_vec(&[2, 3], vec![-7., 0., 7., 3., -3., 1.]);
+        let qt = QTensor::from_grid(&grid, &[0.5, 0.25], 4).unwrap();
+        let mut params = Params::new();
+        params.insert("w".to_string(), qt.dequantize());
+        params.insert(
+            "bias".to_string(),
+            Tensor::from_vec(&[2], vec![0.25, -0.75]),
+        );
+        let mut qp = QuantizedParams::new();
+        qp.insert("w", Arc::new(qt.clone()));
+        let qp = Arc::new(qp);
+        let report = QuantReport {
+            layers: Vec::new(),
+            total_ms: 0.0,
+            wall_ms: 0.0,
+        };
+        let bytes = entry_payload_bytes(&params, Some(&qp));
+        (
+            CacheEntry { params, qparams: Some(qp), act: None, report, bytes },
+            qt,
+        )
     }
 
     fn temp_cache_dir(tag: &str) -> PathBuf {
@@ -600,6 +677,36 @@ mod tests {
         assert_eq!(act.ranges[&1], (-0.5, 2.5));
         assert_eq!(cache.len(), 1);
         assert!(cache.bytes() > 0);
+    }
+
+    /// v4: quantized weights round-trip as packed integer rows — the
+    /// reloaded entry carries the identical `QTensor`, its f32 twin is
+    /// rebuilt bit-exactly, and the artifact file itself stores no f32
+    /// copy of the weight.
+    #[test]
+    fn packed_weights_round_trip_as_integer_rows() {
+        let dir = temp_cache_dir("packed");
+        let cache = DiskCache::open(&dir, 1 << 20, &fps("m", 7)).unwrap();
+        let k = key("m", 4);
+        let (entry, qt) = packed_entry();
+        assert!(cache.store(&k, 7, &entry).unwrap());
+        let Lookup::Hit(e) = cache.load(&k, 7) else {
+            panic!("expected disk hit");
+        };
+        let qp = e.qparams.as_ref().expect("packed weights restored");
+        assert_eq!(qp.get("w").unwrap(), &qt);
+        assert_eq!(e.params["w"].data, entry.params["w"].data, "bit-exact");
+        assert_eq!(e.params["bias"].data, vec![0.25, -0.75]);
+        // The container holds "w" only as a packed row.
+        let path = fs::read_dir(&dir)
+            .unwrap()
+            .map(|d| d.unwrap().path())
+            .find(|p| p.extension().is_some_and(|e| e == "sqnt"))
+            .unwrap();
+        let c = sqnt::load(&path).unwrap();
+        assert!(c.packed.contains_key("w"));
+        assert!(c.params.get("w").is_none(), "no f32 copy on disk");
+        assert!(c.params.get("bias").is_some());
     }
 
     #[test]

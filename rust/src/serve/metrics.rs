@@ -9,6 +9,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::nn::engine::KernelCounts;
 use crate::util::json::Json;
 
 /// Buckets cover 1 µs .. ~2^27 µs (~134 s); slower requests saturate the
@@ -180,6 +181,13 @@ pub struct Metrics {
     pub batch_flush_timeout: AtomicU64,
     /// Batches flushed because they reached `--max-batch`.
     pub batch_flush_full: AtomicU64,
+    /// Conv/linear nodes executed by the packed i8 kernel (one count per
+    /// node per forward pass).
+    pub kernel_int8: AtomicU64,
+    /// Nodes executed by the nibble-packed i4 kernel.
+    pub kernel_int4: AtomicU64,
+    /// Nodes that fell back to (or were assigned) the f32 path.
+    pub kernel_f32: AtomicU64,
     pub lat_all: Histogram,
     pub lat_quantize: Histogram,
     pub lat_eval: Histogram,
@@ -226,6 +234,9 @@ impl Metrics {
             predict_batches: AtomicU64::new(0),
             batch_flush_timeout: AtomicU64::new(0),
             batch_flush_full: AtomicU64::new(0),
+            kernel_int8: AtomicU64::new(0),
+            kernel_int4: AtomicU64::new(0),
+            kernel_f32: AtomicU64::new(0),
             lat_all: Histogram::new(),
             lat_quantize: Histogram::new(),
             lat_eval: Histogram::new(),
@@ -235,6 +246,13 @@ impl Metrics {
             lat_queue: Histogram::new(),
             lat_compute: Histogram::new(),
         }
+    }
+
+    /// Fold one forward pass's kernel dispatch counts into the gauges.
+    pub fn record_kernels(&self, k: KernelCounts) {
+        self.kernel_int8.fetch_add(k.int8, Ordering::Relaxed);
+        self.kernel_int4.fetch_add(k.int4, Ordering::Relaxed);
+        self.kernel_f32.fetch_add(k.f32, Ordering::Relaxed);
     }
 
     pub fn count_cmd(&self, cmd: &str) {
@@ -300,6 +318,22 @@ impl Metrics {
                         self.batch_flush_full.load(Ordering::Relaxed) as usize,
                     )
                     .set("batch_size", self.batch_size.to_json_raw()),
+            )
+            .set(
+                "kernel",
+                Json::obj()
+                    .set(
+                        "int8",
+                        self.kernel_int8.load(Ordering::Relaxed) as usize,
+                    )
+                    .set(
+                        "int4",
+                        self.kernel_int4.load(Ordering::Relaxed) as usize,
+                    )
+                    .set(
+                        "f32",
+                        self.kernel_f32.load(Ordering::Relaxed) as usize,
+                    ),
             )
             .set(
                 "latency",
@@ -379,6 +413,18 @@ mod tests {
         );
         assert!(j.req("latency").unwrap().req("predict").is_ok());
         assert!(j.req("latency").unwrap().req("batch_wait").is_ok());
+    }
+
+    #[test]
+    fn kernel_block_reports_dispatch_counters() {
+        let m = Metrics::new();
+        m.kernel_int8.fetch_add(3, Ordering::Relaxed);
+        m.kernel_f32.fetch_add(1, Ordering::Relaxed);
+        let k = m.to_json();
+        let k = k.req("kernel").unwrap();
+        assert_eq!(k.req("int8").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(k.req("int4").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(k.req("f32").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]

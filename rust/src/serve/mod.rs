@@ -87,7 +87,7 @@ use crate::coordinator;
 use crate::coordinator::server::ModelStore;
 use crate::coordinator::{LayerOutcome, LayerTask};
 use crate::nn::actrange::data_free_ranges;
-use crate::nn::engine::forward;
+use crate::nn::engine::{forward_q, KernelCounts};
 use crate::nn::Params;
 use crate::quant::spec::{Method, QuantSpec};
 use crate::tensor::Tensor;
@@ -95,7 +95,7 @@ use crate::util::json::Json;
 use crate::util::pool::default_threads;
 
 use batch::{BatchCfg, Batcher, FlushReason, PredictDone, PredictOutcome};
-use cache::{params_bytes, Cache, CacheEntry, QuantKey};
+use cache::{entry_payload_bytes, Cache, CacheEntry, QuantKey};
 use disk::{DiskCache, Lookup};
 use flight::{AsyncRole, Flight, Role};
 use metrics::Metrics;
@@ -368,6 +368,13 @@ fn predict_response(
         )
         .set("batch", out.batch)
         .set("batch_wait_ms", out.wait_ms)
+        .set(
+            "kernel",
+            Json::obj()
+                .set("int8", out.kernels.int8 as usize)
+                .set("int4", out.kernels.int4 as usize)
+                .set("f32", out.kernels.f32 as usize),
+        )
         .set("cached", src.is_cached())
         .set("source", src.label())
         .set("served_ms", t0.elapsed().as_secs_f64() * 1e3)
@@ -786,10 +793,18 @@ impl Engine {
         let (x, labels) = self.store.test.batch(start, len);
         let entry = &fan.task.entry;
         let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            forward(graph, &entry.params, &x, entry.act.as_ref(), None)
+            forward_q(
+                graph,
+                &entry.params,
+                entry.qparams.as_deref(),
+                &x,
+                entry.act.as_ref(),
+                None,
+            )
         }))
         .map_err(|_| format!("eval batch panicked for {}", key.label()))?
         .map_err(|e| format!("{e:#}"))?;
+        self.metrics.record_kernels(out.kernels);
         let preds = out.logits.argmax_rows();
         Ok(preds
             .iter()
@@ -995,7 +1010,7 @@ impl Engine {
                     .record_ms((now - t_first).as_secs_f64() * 1e3);
             }
             match fwd {
-                Ok(rows) => {
+                Ok((rows, kernels)) => {
                     for (item, logits) in b.items.into_iter().zip(rows) {
                         let wait_ms =
                             (t_first - item.enqueued).as_secs_f64() * 1e3;
@@ -1004,6 +1019,7 @@ impl Engine {
                             logits,
                             batch: n,
                             wait_ms,
+                            kernels,
                         }));
                     }
                 }
@@ -1018,17 +1034,18 @@ impl Engine {
     }
 
     /// One stacked forward for a predict batch: rows are flat (C·H·W)
-    /// inputs in arrival order, output is one logits row per input.
-    /// Bit-identical to running each input as its own batch of one —
-    /// `forward` treats batch images independently (per-image im2col for
-    /// convs, per-row matmul for linear layers), which the engine tests
-    /// pin.
+    /// inputs in arrival order, output is one logits row per input plus
+    /// the kernel paths dispatched.  Bit-identical to running each input
+    /// as its own batch of one — the forward treats batch images
+    /// independently (per-image im2col for convs, per-row matmul for
+    /// linear layers), which the engine tests pin.  Entries carrying
+    /// packed weights execute the integer kernels per eligible layer.
     fn run_batch_forward(
         &self,
         key: &QuantKey,
         entry: &CacheEntry,
         inputs: &[&[f32]],
-    ) -> Result<Vec<Vec<f32>>, String> {
+    ) -> Result<(Vec<Vec<f32>>, KernelCounts), String> {
         let (graph, _) = self
             .store
             .models
@@ -1043,12 +1060,23 @@ impl Engine {
             data.extend_from_slice(row);
         }
         let x = Tensor::from_vec(&shape, data);
-        let out = forward(graph, &entry.params, &x, entry.act.as_ref(), None)
-            .map_err(|e| format!("{e:#}"))?;
+        let out = forward_q(
+            graph,
+            &entry.params,
+            entry.qparams.as_deref(),
+            &x,
+            entry.act.as_ref(),
+            None,
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        self.metrics.record_kernels(out.kernels);
         let ncls = out.logits.shape[1];
-        Ok((0..inputs.len())
-            .map(|r| out.logits.data[r * ncls..(r + 1) * ncls].to_vec())
-            .collect())
+        Ok((
+            (0..inputs.len())
+                .map(|r| out.logits.data[r * ncls..(r + 1) * ncls].to_vec())
+                .collect(),
+            out.kernels,
+        ))
     }
 
     /// `{"cmd":"warm","model":...,"wbits":...}` — prefetch into the cache
@@ -1656,6 +1684,10 @@ impl Engine {
             .unwrap()
             .map(|t| t.elapsed().as_secs_f64() * 1e3)
             .unwrap_or(0.0);
+        // Extract the packed integer weights before `assemble` consumes
+        // the outcomes; both views of a quantized layer share the grid
+        // (wq is packed.dequantize() bit-for-bit).
+        let packed = coordinator::collect_packed(&outcomes);
         let (qparams, report) = coordinator::assemble(&asm.base, outcomes, wall_ms);
         let act = if asm.abits > 0 {
             let (graph, _) =
@@ -1669,8 +1701,16 @@ impl Engine {
         } else {
             None
         };
-        let bytes = params_bytes(&qparams);
-        Ok(Arc::new(CacheEntry { params: qparams, act, report, bytes }))
+        let packed =
+            if packed.is_empty() { None } else { Some(Arc::new(packed)) };
+        let bytes = entry_payload_bytes(&qparams, packed.as_deref());
+        Ok(Arc::new(CacheEntry {
+            params: qparams,
+            qparams: packed,
+            act,
+            report,
+            bytes,
+        }))
     }
 
     // ---- disk tier ---------------------------------------------------------
@@ -1751,6 +1791,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::io::dataset::Dataset;
+    use crate::nn::engine::forward;
     use crate::nn::tiny_test_graph;
     use std::collections::HashMap;
     use std::sync::atomic::AtomicBool;
@@ -2718,6 +2759,99 @@ mod tests {
             r.req("top1").unwrap().as_f64().unwrap(),
             want
         );
+        engine.wait_idle();
+    }
+
+    /// Packed-path acceptance (pinned): `eval` of a w4/a8 artifact runs
+    /// the nibble-packed integer kernels end-to-end, and its top-1
+    /// accuracy equals the fake-quant f32 reference
+    /// (`eval::accuracy` over the serial artifact) exactly.
+    #[test]
+    fn packed_eval_top1_matches_fake_quant_reference() {
+        let (g, p) = tiny_test_graph(3, 4, 10);
+        let mut models = HashMap::new();
+        models.insert("tiny".to_string(), (g.clone(), p.clone()));
+        let mut fingerprints = HashMap::new();
+        fingerprints.insert("tiny".to_string(), 0);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut images = Tensor::zeros(&[8, 3, 8, 8]);
+        rng.fill_normal(&mut images.data, 1.0);
+        let labels: Vec<u32> = (0..8).map(|i| i % 10).collect();
+        let test = Dataset { images: images.clone(), labels: labels.clone() };
+        let engine = Engine::new(
+            Arc::new(ModelStore { models, fingerprints, test }),
+            cfg(),
+        )
+        .unwrap();
+        let ev = Json::obj()
+            .set("cmd", "eval")
+            .set("model", "tiny")
+            .set("wbits", 4usize)
+            .set("abits", 8usize)
+            .set("samples", 8usize)
+            .set("batch", 3usize);
+        let r = engine.handle(&ev);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+
+        // Reference: serial quantize + fake-quant f32 forward (the path
+        // `eval::accuracy` runs) with the same data-free act ranges.
+        let spec = QuantSpec::parse("w4a8").unwrap();
+        let (qp, _) =
+            coordinator::quantize_model_spec(&g, &p, &spec, 1).unwrap();
+        let act = data_free_ranges(&g, &qp, 8);
+        let ds = Dataset { images, labels };
+        let want =
+            crate::eval::accuracy(&g, &qp, Some(&act), &ds, 3, 1).unwrap();
+        assert!(
+            (r.req("top1").unwrap().as_f64().unwrap() - want).abs() < 1e-12,
+            "packed top-1 {} != fake-quant reference {}",
+            r.req("top1").unwrap().as_f64().unwrap(),
+            want
+        );
+        // Both quant layers are w4: every eval batch (3 of them) ran the
+        // nibble-packed kernel for both, nothing fell back to f32.
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let k = stats.req("metrics").unwrap().req("kernel").unwrap();
+        assert_eq!(k.req("int4").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(k.req("int8").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(k.req("f32").unwrap().as_usize().unwrap(), 0);
+        engine.wait_idle();
+    }
+
+    /// A w8/a8 predict executes the i8 kernels for both quant layers and
+    /// surfaces the dispatch on the response and the stats counters —
+    /// the protocol contract the CI int-kernel smoke asserts.
+    #[test]
+    fn predict_with_act_bits_runs_packed_kernels() {
+        let engine = Engine::new(tiny_store(), cfg()).unwrap();
+        let q = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "tiny")
+            .set("wbits", 8usize)
+            .set("abits", 8usize);
+        let r = engine.handle(&q);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        let input = predict_inputs(1).remove(0);
+        let req = Json::obj()
+            .set("cmd", "predict")
+            .set("model", "tiny")
+            .set("wbits", 8usize)
+            .set("abits", 8usize)
+            .set(
+                "input",
+                Json::Arr(
+                    input.iter().map(|v| Json::Num(*v as f64)).collect(),
+                ),
+            );
+        let r = engine.handle(&req);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+        let k = r.req("kernel").unwrap();
+        assert_eq!(k.req("int8").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(k.req("int4").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(k.req("f32").unwrap().as_usize().unwrap(), 0);
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let mk = stats.req("metrics").unwrap().req("kernel").unwrap();
+        assert_eq!(mk.req("int8").unwrap().as_usize().unwrap(), 2);
         engine.wait_idle();
     }
 }

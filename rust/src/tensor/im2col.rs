@@ -58,6 +58,55 @@ pub fn im2col(
     out
 }
 
+/// im2col over quantized u8 activations for the packed conv path:
+/// same loop structure and patch layout as [`im2col`], but padded
+/// positions are filled with `pad` (the activation grid's zero point,
+/// so a padded input contributes exactly `(zp - zp) · scale = 0` after
+/// the qgemm epilogue — matching the f32 path's literal zero padding).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_u8(
+    x: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    ph: usize,
+    pw: usize,
+    pad: u8,
+) -> Vec<u8> {
+    let oh = out_dim(h, kh, stride, ph);
+    let ow = out_dim(w, kw, stride, pw);
+    let rows = c * kh * kw;
+    let cols = oh * ow;
+    let mut out = vec![pad; rows * cols];
+    for ci in 0..c {
+        let xch = &x[ci * h * w..(ci + 1) * h * w];
+        for ki in 0..kh {
+            for kj in 0..kw {
+                let r = (ci * kh + ki) * kw + kj;
+                let orow = &mut out[r * cols..(r + 1) * cols];
+                for oy in 0..oh {
+                    let iy = (oy * stride + ki) as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // padded rows keep the zero-point value
+                    }
+                    let src = &xch[iy as usize * w..(iy as usize + 1) * w];
+                    let dst = &mut orow[oy * ow..(oy + 1) * ow];
+                    for ox in 0..ow {
+                        let ix = (ox * stride + kj) as isize - pw as isize;
+                        if ix >= 0 && ix < w as isize {
+                            dst[ox] = src[ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +139,23 @@ mod tests {
         let m = im2col(&x, 1, 5, 5, 3, 3, 2, 1, 1);
         assert_eq!(out_dim(5, 3, 2, 1), 3);
         assert_eq!(m.shape, vec![9, 9]);
+    }
+
+    #[test]
+    fn u8_variant_mirrors_f32_layout_and_fills_pad() {
+        // Same geometry as `padding_zero_border`, with a nonzero pad value.
+        let x = vec![9u8; 9]; // 1x3x3 of nines
+        let m = im2col_u8(&x, 1, 3, 3, 3, 3, 1, 1, 1, 5);
+        let f: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mf = im2col(&f, 1, 3, 3, 3, 3, 1, 1, 1);
+        assert_eq!(m.len(), mf.numel());
+        for (i, (&u, &fv)) in m.iter().zip(&mf.data).enumerate() {
+            if fv == 0.0 {
+                assert_eq!(u, 5, "padded position {i} must hold the pad value");
+            } else {
+                assert_eq!(u as f32, fv, "in-bounds position {i}");
+            }
+        }
     }
 
     #[test]

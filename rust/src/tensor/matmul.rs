@@ -35,10 +35,10 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
                 let arow = &a[i * k..(i + 1) * k];
                 let crow = &mut c[i * n..(i + 1) * n];
                 for kk in k0..k1 {
+                    // No zero-skip here: the branch defeats auto-vectorization
+                    // of the contiguous j loop and costs more than it saves
+                    // even on sparse quantized weights.
                     let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
                     let brow = &b[kk * n..(kk + 1) * n];
                     for (cv, bv) in crow.iter_mut().zip(brow) {
                         *cv += av * bv;
@@ -50,6 +50,10 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 }
 
 /// C = A @ B^T — the weight layout used by Linear ([out, in]).
+///
+/// Both operands are row-major, so each output element is a dot of two
+/// contiguous rows; the inner product runs through the 8-lane blocked
+/// [`dot`] kernel so Linear layers vectorize like the conv path.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
     assert_eq!(b.ndim(), 2);
@@ -61,15 +65,30 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
         let arow = a.row(i);
         let crow = c.row_mut(i);
         for (j, cv) in crow.iter_mut().enumerate() {
-            let brow = b.row(j);
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            *cv = acc;
+            *cv = dot(arow, b.row(j));
         }
     }
     c
+}
+
+/// K-blocked dot product: eight independent accumulator lanes over the
+/// `chunks_exact(8)` body (breaks the serial-add dependency chain so the
+/// loop auto-vectorizes), scalar tail for the remainder.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (ca, cb) in ac.by_ref().zip(bc.by_ref()) {
+        for (l, (x, y)) in lanes.iter_mut().zip(ca.iter().zip(cb)) {
+            *l += x * y;
+        }
+    }
+    let mut acc: f32 = lanes.iter().sum();
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        acc += x * y;
+    }
+    acc
 }
 
 #[cfg(test)]
@@ -134,6 +153,29 @@ mod tests {
         let c2 = matmul(&a, &bt);
         for (x, y) in c1.data.iter().zip(&c2.data) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bt_blocked_dot_matches_naive_long_k() {
+        // K > 8 exercises the lane body + tail of `dot`, not just the tail.
+        let mut rng = Rng::new(6);
+        for &(m, n, k) in &[(3, 4, 37), (2, 5, 64), (1, 1, 9)] {
+            let mut a = Tensor::zeros(&[m, k]);
+            let mut b = Tensor::zeros(&[n, k]);
+            rng.fill_normal(&mut a.data, 1.0);
+            rng.fill_normal(&mut b.data, 1.0);
+            let c = matmul_bt(&a, &b);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0f32;
+                    for kk in 0..k {
+                        s += a.at2(i, kk) * b.at2(j, kk);
+                    }
+                    let got = c.at2(i, j);
+                    assert!((s - got).abs() < 1e-3, "{s} vs {got}");
+                }
+            }
         }
     }
 }

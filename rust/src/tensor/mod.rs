@@ -6,8 +6,11 @@
 
 pub mod im2col;
 pub mod matmul;
+pub mod qgemm;
+pub mod qtensor;
 
 pub use matmul::matmul;
+pub use qtensor::QTensor;
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,300 @@
+//! Integer GEMM with a fused dequantize epilogue — the packed execution
+//! path for quantized conv/linear layers.
+//!
+//! Weights arrive as a [`QTensor`] (i8/i4 grid values + per-output-channel
+//! scales); activations are quantized at runtime onto the same per-tensor
+//! affine u8 grid `nn::engine::ActQuant` fake-quantizes with ([`act_grid`] /
+//! [`quantize_acts`] mirror its formula exactly, including the shared
+//! round-half-up `util::rn`).  The kernel accumulates `Σ wq·q` in exact
+//! i32 arithmetic and applies the affine algebra in the epilogue:
+//!
+//! ```text
+//! Σ_k wq[k]·(q[k]−zp)·s_w·s_a  =  s_w·s_a·(Σ wq·q  −  zp·Σ wq)
+//! ```
+//!
+//! so the zero-point correction is one multiply per output element using
+//! the precomputed `QTensor::row_sums`.  i32 accumulation is exact: the
+//! largest per-term magnitude is 127·255 = 32385, safe for K up to ~66k.
+//!
+//! The inner accumulation has two implementations selected at runtime: an
+//! explicit AVX2 kernel (`std::arch`, 8-wide i32 lanes held in registers
+//! across the K loop) and a portable `chunks_exact`-style fallback that
+//! auto-vectorizes.  Results are bit-identical between the two — integer
+//! math has no reassociation error — so dispatch never changes answers.
+
+use super::qtensor::QTensor;
+use crate::util::rn;
+
+/// A per-tensor affine activation grid: `v ≈ (q − zp) · scale` with
+/// `q ∈ [0, levels]`.  Mirrors `nn::engine::ActQuant::apply`.
+#[derive(Clone, Copy, Debug)]
+pub struct ActGrid {
+    pub scale: f32,
+    pub zp: i32,
+    pub levels: i32,
+}
+
+/// Build the activation grid for a cached `(lo, hi)` range at `bits`.
+///
+/// Returns `None` when the packed path cannot represent the grid: bits
+/// outside 2..=8 (u8 storage), or a zero point falling outside
+/// `[0, levels]` (possible when the range does not straddle zero), in
+/// which case callers fall back to the f32 path.
+pub fn act_grid(bits: usize, lo: f32, hi: f32) -> Option<ActGrid> {
+    if !(2..=8).contains(&bits) {
+        return None;
+    }
+    let levels = ((1usize << bits) - 1) as f32;
+    let span = (hi - lo).max(1e-8);
+    let scale = span / levels;
+    let zp = rn(-lo / scale);
+    if !(0.0..=levels).contains(&zp) || !zp.is_finite() {
+        return None;
+    }
+    Some(ActGrid { scale, zp: zp as i32, levels: levels as i32 })
+}
+
+/// Quantize activations onto the u8 grid.  The q values are exactly the
+/// ones `ActQuant::apply` would produce before its dequantize step, so the
+/// packed path consumes the same discretization the f32 reference does.
+pub fn quantize_acts(src: &[f32], g: ActGrid, dst: &mut [u8]) {
+    let (zp, levels) = (g.zp as f32, g.levels as f32);
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = (rn(v / g.scale) + zp).clamp(0.0, levels) as u8;
+    }
+}
+
+/// `dst[r, j] = Σ_k w[row0+r, k] · (panel[k, j] − zp) · s_w[row0+r] · s_a`
+/// for `r` in `0..rows` — an (rows × n) f32 output from packed weights and
+/// a row-major u8 activation panel of shape (k × n).
+///
+/// `row0` offsets into the QTensor's rows so grouped convs can run one
+/// group at a time against the group's scale/row-sum slices.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_into(
+    w: &QTensor,
+    row0: usize,
+    rows: usize,
+    panel: &[u8],
+    k: usize,
+    n: usize,
+    a_scale: f32,
+    a_zp: i32,
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(w.row_len(), k);
+    debug_assert_eq!(panel.len(), k * n);
+    debug_assert_eq!(dst.len(), rows * n);
+    let avx2 = avx2_available();
+    let mut wrow = vec![0i8; k];
+    let mut acc = vec![0i32; n];
+    let zp = a_zp as i64;
+    for r in 0..rows {
+        let gr = row0 + r;
+        w.unpack_row(gr, &mut wrow);
+        accum_row(&wrow, panel, k, n, &mut acc, avx2);
+        let rs = w.row_sums[gr] as i64;
+        let m = w.scales[gr] * a_scale;
+        let out = &mut dst[r * n..(r + 1) * n];
+        for (o, &a) in out.iter_mut().zip(acc.iter()) {
+            *o = ((a as i64 - zp * rs) as f32) * m;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// `acc[j] = Σ_k wrow[k] · panel[k·n + j]` (overwrites `acc[..n]`).
+fn accum_row(wrow: &[i8], panel: &[u8], k: usize, n: usize, acc: &mut [i32], avx2: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2 {
+        // SAFETY: `avx2` is only true when is_x86_feature_detected!("avx2")
+        // passed, and the kernel stays within the slice bounds it is given.
+        unsafe { avx2::accum_row(wrow, panel, k, n, acc) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = avx2;
+    accum_row_portable(wrow, panel, k, n, acc);
+}
+
+/// Portable fallback: contiguous j loop per k step, which LLVM
+/// auto-vectorizes the same way the f32 matmul's inner loop does.
+fn accum_row_portable(wrow: &[i8], panel: &[u8], k: usize, n: usize, acc: &mut [i32]) {
+    let acc = &mut acc[..n];
+    acc.fill(0);
+    for (kk, &wv) in wrow.iter().enumerate().take(k) {
+        let wv = wv as i32;
+        let prow = &panel[kk * n..(kk + 1) * n];
+        for (a, &p) in acc.iter_mut().zip(prow) {
+            *a += wv * p as i32;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 accumulation: 8 i32 lanes per column tile, held in a register
+    /// across the whole K loop.  Widening u8→i32 before the multiply keeps
+    /// every product exact (no `maddubs`-style i16 saturation hazard).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accum_row(wrow: &[i8], panel: &[u8], k: usize, n: usize, acc: &mut [i32]) {
+        let tiles = n - n % 8;
+        let mut j0 = 0;
+        while j0 < tiles {
+            let mut v = _mm256_setzero_si256();
+            for kk in 0..k {
+                let w = _mm256_set1_epi32(wrow[kk] as i32);
+                let p = _mm_loadl_epi64(panel.as_ptr().add(kk * n + j0) as *const __m128i);
+                let p = _mm256_cvtepu8_epi32(p);
+                v = _mm256_add_epi32(v, _mm256_mullo_epi32(w, p));
+            }
+            _mm256_storeu_si256(acc.as_mut_ptr().add(j0) as *mut __m256i, v);
+            j0 += 8;
+        }
+        for j in tiles..n {
+            let mut s = 0i32;
+            for (kk, &wv) in wrow.iter().enumerate().take(k) {
+                s += wv as i32 * panel[kk * n + j] as i32;
+            }
+            acc[j] = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{channel_scales, dequant, quantize_rtn, QuantConfig};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Reference: dequantized weights × fake-quantized activations in f32,
+    /// exactly what the engine's f32 path computes for this layer.
+    #[allow(clippy::too_many_arguments)]
+    fn check_case(
+        rows: usize,
+        k: usize,
+        n: usize,
+        wbits: usize,
+        abits: usize,
+        lo: f32,
+        hi: f32,
+        seed: u64,
+    ) {
+        let mut rng = Rng::new(seed);
+        let mut w = Tensor::zeros(&[rows, k]);
+        rng.fill_normal(&mut w.data, 0.3);
+        let scales = channel_scales(&w, QuantConfig::new(wbits));
+        let q = quantize_rtn(&w, &scales, wbits);
+        let qt = QTensor::from_grid(&q, &scales, wbits).unwrap();
+        let wd = dequant(&q, &scales);
+
+        let g = act_grid(abits, lo, hi).unwrap();
+        let x: Vec<f32> = (0..k * n).map(|_| rng.uniform(lo - 0.2, hi + 0.2)).collect();
+        let mut panel = vec![0u8; k * n];
+        quantize_acts(&x, g, &mut panel);
+        let xf: Vec<f32> =
+            panel.iter().map(|&qv| (qv as f32 - g.zp as f32) * g.scale).collect();
+
+        let mut got = vec![0.0f32; rows * n];
+        qgemm_into(&qt, 0, rows, &panel, k, n, g.scale, g.zp, &mut got);
+
+        for r in 0..rows {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += wd.data[r * k + kk] * xf[kk * n + j];
+                }
+                let got_v = got[r * n + j];
+                let tol = 1e-4 * acc.abs().max(1.0);
+                assert!(
+                    (acc - got_v).abs() <= tol,
+                    "w{wbits}a{abits} r{r} j{j}: {acc} vs {got_v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_f32_reference_odd_shapes_int8() {
+        for (i, &(m, k, n)) in
+            [(1, 1, 1), (3, 7, 5), (4, 33, 9), (5, 64, 8), (2, 17, 31)].iter().enumerate()
+        {
+            check_case(m, k, n, 8, 8, -1.0, 1.0, 100 + i as u64);
+        }
+    }
+
+    #[test]
+    fn matches_f32_reference_odd_shapes_int4() {
+        for (i, &(m, k, n)) in
+            [(2, 9, 3), (3, 27, 13), (1, 50, 7), (4, 15, 15)].iter().enumerate()
+        {
+            check_case(m, k, n, 4, 8, -2.0, 2.0, 200 + i as u64);
+        }
+    }
+
+    #[test]
+    fn asymmetric_relu_style_range() {
+        // lo = 0 (post-ReLU): zp = 0, q spans the full unsigned grid.
+        check_case(3, 21, 6, 8, 8, 0.0, 4.0, 300);
+        check_case(3, 21, 6, 4, 4, 0.0, 4.0, 301);
+    }
+
+    #[test]
+    fn row_offset_matches_full_run() {
+        let mut rng = Rng::new(9);
+        let (rows, k, n) = (6, 13, 5);
+        let mut w = Tensor::zeros(&[rows, k]);
+        rng.fill_normal(&mut w.data, 0.5);
+        let scales = channel_scales(&w, QuantConfig::new(8));
+        let q = quantize_rtn(&w, &scales, 8);
+        let qt = QTensor::from_grid(&q, &scales, 8).unwrap();
+        let g = act_grid(8, -1.0, 1.0).unwrap();
+        let x: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut panel = vec![0u8; k * n];
+        quantize_acts(&x, g, &mut panel);
+        let mut full = vec![0.0f32; rows * n];
+        qgemm_into(&qt, 0, rows, &panel, k, n, g.scale, g.zp, &mut full);
+        let mut part = vec![0.0f32; 2 * n];
+        qgemm_into(&qt, 3, 2, &panel, k, n, g.scale, g.zp, &mut part);
+        assert_eq!(part, full[3 * n..5 * n]);
+    }
+
+    #[test]
+    fn portable_kernel_is_exact_integer_math() {
+        // Pin the fallback against a hand-computed case (also covers the
+        // AVX2 kernel on x86: integer math is bit-identical across paths).
+        let wrow = [2i8, -3, 1];
+        let panel = [1u8, 2, 3, 4, 255, 0];
+        let mut acc = [0i32; 2];
+        accum_row_portable(&wrow, &panel, 3, 2, &mut acc);
+        // col0: 2*1 - 3*3 + 1*255 = 248; col1: 2*2 - 3*4 + 1*0 = -8
+        assert_eq!(acc, [248, -8]);
+        let mut acc2 = [0i32; 2];
+        accum_row(&wrow, &panel, 3, 2, &mut acc2, avx2_available());
+        assert_eq!(acc2, [248, -8]);
+    }
+
+    #[test]
+    fn act_grid_rejects_unrepresentable() {
+        assert!(act_grid(9, -1.0, 1.0).is_none(), "bits > 8");
+        assert!(act_grid(0, -1.0, 1.0).is_none());
+        // Range entirely below zero puts zp above `levels`.
+        assert!(act_grid(8, -2.0, -1.0).is_none());
+        // Range entirely above zero puts zp below 0.
+        assert!(act_grid(8, 1.0, 2.0).is_none());
+        assert!(act_grid(8, -1.0, 1.0).is_some());
+        assert!(act_grid(8, 0.0, 6.0).is_some(), "relu range has zp = 0");
+    }
+}

@@ -1,0 +1,337 @@
+//! Packed low-bit integer tensors — the on-disk and in-engine form of a
+//! quantized weight.
+//!
+//! A [`QTensor`] stores the integer grid values produced by RTN/SQuant
+//! (symmetric per-output-channel grids, see `quant::qrange`) in packed
+//! bytes: one `i8` per element for 5..=8-bit grids ("q8"), or two values
+//! per byte for 2..=4-bit grids ("q4", packed per row so rows stay
+//! byte-aligned and odd row lengths get a zero tail nibble).  Alongside the
+//! payload it carries the per-channel f32 scales and the per-row grid-value
+//! sums the integer GEMM epilogue needs for activation zero-point
+//! correction (`tensor::qgemm`).
+//!
+//! Dequantization (`q * scale[row]`) is bit-identical to `quant::dequant`
+//! on the same grid, so a packed artifact reconstructs the exact f32
+//! weights the fake-quant path would have stored.
+
+use super::Tensor;
+use anyhow::{bail, Result};
+
+/// Largest grid bit-width a QTensor can represent (i8 storage).
+pub const MAX_PACK_BITS: usize = 8;
+
+/// Packed integer tensor: grid values + per-output-channel scales.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QTensor {
+    /// Logical shape of the weight — conv `[O, I/g, KH, KW]` or linear
+    /// `[O, I]`.  `shape[0]` is the output-channel (row) axis.
+    pub shape: Vec<usize>,
+    /// Grid bit-width the values were quantized to (2..=8).
+    pub bits: usize,
+    /// Packed payload (see module docs for the q4/q8 layouts).
+    pub data: Vec<u8>,
+    /// Per-output-channel dequantize scales, `len == shape[0]`.
+    pub scales: Vec<f32>,
+    /// Per-row sums of grid values: the qgemm epilogue's zero-point
+    /// correction term (`Σ wq·(q−zp) = Σ wq·q − zp·Σ wq`).
+    pub row_sums: Vec<i32>,
+}
+
+impl QTensor {
+    /// Storage width in bits: 4 (nibble-packed) for grids up to 4 bits,
+    /// else 8 (one byte per element).
+    pub fn storage_bits(&self) -> usize {
+        storage_bits(self.bits)
+    }
+
+    /// Number of rows (output channels).
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Elements per row.
+    pub fn row_len(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Packed bytes per row.
+    pub fn row_bytes(&self) -> usize {
+        row_bytes(self.bits, self.row_len())
+    }
+
+    /// Approximate heap footprint (payload + scales + row sums + headers),
+    /// mirroring `serve::cache::tensor_bytes` for the f32 case.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len() + 4 * self.row_sums.len() + 64
+    }
+
+    /// Pack a grid-value tensor (f32 integers from `quant::quantize_rtn` or
+    /// SQuant's flip search) into a QTensor.  Rejects non-integral values,
+    /// values outside the symmetric `bits` grid, and bad scale counts.
+    pub fn from_grid(q: &Tensor, scales: &[f32], bits: usize) -> Result<QTensor> {
+        if !(2..=MAX_PACK_BITS).contains(&bits) {
+            bail!("qtensor bits {bits} out of range 2..={MAX_PACK_BITS}");
+        }
+        if q.shape.is_empty() {
+            bail!("qtensor needs a shaped tensor");
+        }
+        let rows = q.shape[0];
+        if scales.len() != rows {
+            bail!("qtensor scales len {} vs {rows} rows", scales.len());
+        }
+        let per: usize = q.shape[1..].iter().product();
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let mut grid = vec![0i8; per];
+        let rb = row_bytes(bits, per);
+        let mut data = vec![0u8; rows * rb];
+        let mut row_sums = vec![0i32; rows];
+        for r in 0..rows {
+            let src = &q.data[r * per..(r + 1) * per];
+            let mut sum = 0i32;
+            for (g, &v) in grid.iter_mut().zip(src) {
+                if v != v.trunc() || !(-qmax..=qmax).contains(&v) {
+                    bail!("grid value {v} not on the {bits}-bit integer grid");
+                }
+                *g = v as i8;
+                sum += v as i32;
+            }
+            row_sums[r] = sum;
+            pack_row(&grid, bits, &mut data[r * rb..(r + 1) * rb]);
+        }
+        Ok(QTensor { shape: q.shape.clone(), bits, data, scales: scales.to_vec(), row_sums })
+    }
+
+    /// Rebuild from already-packed bytes (the disk-load path).  Validates
+    /// payload length and scale count, and recomputes `row_sums` from the
+    /// payload so a corrupted sum can never silently skew the epilogue.
+    pub fn from_packed(
+        shape: Vec<usize>,
+        bits: usize,
+        data: Vec<u8>,
+        scales: Vec<f32>,
+    ) -> Result<QTensor> {
+        if !(2..=MAX_PACK_BITS).contains(&bits) {
+            bail!("qtensor bits {bits} out of range 2..={MAX_PACK_BITS}");
+        }
+        if shape.is_empty() {
+            bail!("qtensor needs a shaped tensor");
+        }
+        let rows = shape[0];
+        let per: usize = shape[1..].iter().product();
+        let rb = row_bytes(bits, per);
+        if data.len() != rows * rb {
+            bail!("qtensor payload {} bytes, want {} ({rows}x{rb})", data.len(), rows * rb);
+        }
+        if scales.len() != rows {
+            bail!("qtensor scales len {} vs {rows} rows", scales.len());
+        }
+        let mut qt = QTensor { shape, bits, data, scales, row_sums: vec![0; rows] };
+        let qmax = ((1i32 << (bits - 1)) - 1) as i8;
+        let mut grid = vec![0i8; per];
+        for r in 0..rows {
+            qt.unpack_row(r, &mut grid);
+            let mut sum = 0i32;
+            for &g in &grid {
+                if g < -qmax || g > qmax {
+                    bail!("packed value {g} outside the {bits}-bit grid");
+                }
+                sum += g as i32;
+            }
+            qt.row_sums[r] = sum;
+        }
+        Ok(qt)
+    }
+
+    /// Unpack row `r` into `dst[..row_len()]` as sign-extended i8 values.
+    pub fn unpack_row(&self, r: usize, dst: &mut [i8]) {
+        let per = self.row_len();
+        let dst = &mut dst[..per];
+        if self.storage_bits() == 8 {
+            for (d, &b) in dst.iter_mut().zip(&self.data[r * per..(r + 1) * per]) {
+                *d = b as i8;
+            }
+        } else {
+            let rb = self.row_bytes();
+            let row = &self.data[r * rb..(r + 1) * rb];
+            let mut i = 0;
+            for &b in row {
+                dst[i] = ((b << 4) as i8) >> 4;
+                if i + 1 < per {
+                    dst[i + 1] = (b as i8) >> 4;
+                }
+                i += 2;
+            }
+        }
+    }
+
+    /// Unpacked grid values as an f32 tensor (inverse of [`from_grid`]).
+    pub fn to_grid(&self) -> Tensor {
+        let per = self.row_len();
+        let mut out = Tensor::zeros(&self.shape);
+        let mut grid = vec![0i8; per];
+        for r in 0..self.rows() {
+            self.unpack_row(r, &mut grid);
+            for (o, &g) in out.data[r * per..(r + 1) * per].iter_mut().zip(&grid) {
+                *o = g as f32;
+            }
+        }
+        out
+    }
+
+    /// Dequantize to f32 weights — bit-identical to `quant::dequant` on the
+    /// same grid (`w = q * scale[row]`, one f32 multiply per element).
+    pub fn dequantize(&self) -> Tensor {
+        let per = self.row_len();
+        let mut out = Tensor::zeros(&self.shape);
+        let mut grid = vec![0i8; per];
+        for r in 0..self.rows() {
+            self.unpack_row(r, &mut grid);
+            let s = self.scales[r];
+            for (o, &g) in out.data[r * per..(r + 1) * per].iter_mut().zip(&grid) {
+                *o = g as f32 * s;
+            }
+        }
+        out
+    }
+}
+
+/// Storage width for a grid bit-width: nibble-packed up to 4 bits, else i8.
+pub fn storage_bits(bits: usize) -> usize {
+    if bits <= 4 {
+        4
+    } else {
+        8
+    }
+}
+
+/// Packed bytes for one row of `per` elements at `bits`.
+pub fn row_bytes(bits: usize, per: usize) -> usize {
+    if storage_bits(bits) == 4 {
+        per.div_ceil(2)
+    } else {
+        per
+    }
+}
+
+fn pack_row(grid: &[i8], bits: usize, dst: &mut [u8]) {
+    if storage_bits(bits) == 8 {
+        for (d, &g) in dst.iter_mut().zip(grid) {
+            *d = g as u8;
+        }
+    } else {
+        for (d, pair) in dst.iter_mut().zip(grid.chunks(2)) {
+            let lo = (pair[0] as u8) & 0x0f;
+            let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0f } else { 0 };
+            *d = lo | (hi << 4);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn random_grid(c: &mut crate::util::prop::Case, rows: usize, per: usize, bits: usize) -> Tensor {
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let span = (2 * qmax + 1) as usize;
+        let data: Vec<f32> =
+            (0..rows * per).map(|_| (c.rng.below(span) as i32 - qmax) as f32).collect();
+        Tensor::from_vec(&[rows, per], data)
+    }
+
+    #[test]
+    fn pack_unpack_round_trip_property() {
+        // i8 and i4 storage, odd row lengths included (nibble tails).
+        forall("qtensor-round-trip", 11, 80, 37, |c| {
+            let rows = 1 + c.rng.below(5);
+            let per = c.size;
+            let bits = [2, 3, 4, 5, 8][c.rng.below(5)];
+            let q = random_grid(c, rows, per, bits);
+            let scales: Vec<f32> = (0..rows).map(|r| 0.01 + r as f32 * 0.003).collect();
+            let qt = QTensor::from_grid(&q, &scales, bits).map_err(|e| e.to_string())?;
+            if qt.to_grid() != q {
+                return Err(format!("grid mismatch bits={bits} rows={rows} per={per}"));
+            }
+            for r in 0..rows {
+                let want: i32 = q.data[r * per..(r + 1) * per].iter().map(|&v| v as i32).sum();
+                if qt.row_sums[r] != want {
+                    return Err(format!("row_sums[{r}] {} vs {want}", qt.row_sums[r]));
+                }
+            }
+            // Disk-load path rebuilds the identical tensor from raw bytes.
+            let rebuilt =
+                QTensor::from_packed(qt.shape.clone(), bits, qt.data.clone(), qt.scales.clone())
+                    .map_err(|e| e.to_string())?;
+            if rebuilt != qt {
+                return Err("from_packed differs from from_grid".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dequantize_matches_quant_dequant_bitwise() {
+        use crate::quant::{channel_scales, dequant, quantize_rtn, QuantConfig};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        for &bits in &[4usize, 8] {
+            let mut w = Tensor::zeros(&[3, 2, 3, 3]);
+            rng.fill_normal(&mut w.data, 0.2);
+            let scales = channel_scales(&w, QuantConfig::new(bits));
+            let q = quantize_rtn(&w, &scales, bits);
+            let qt = QTensor::from_grid(&q, &scales, bits).unwrap();
+            assert_eq!(qt.dequantize().data, dequant(&q, &scales).data);
+        }
+    }
+
+    #[test]
+    fn q4_packs_two_per_byte_with_zero_tail() {
+        let q = Tensor::from_vec(&[1, 5], vec![-7.0, 7.0, -1.0, 0.0, 3.0]);
+        let qt = QTensor::from_grid(&q, &[1.0], 4).unwrap();
+        assert_eq!(qt.storage_bits(), 4);
+        assert_eq!(qt.data.len(), 3); // ceil(5/2)
+        assert_eq!(qt.data[0], 0x79); // lo=-7 (0b1001), hi=7 (0b0111)
+        assert_eq!(qt.data[2] >> 4, 0, "odd tail nibble must be zero");
+        assert_eq!(qt.row_sums, vec![2]);
+    }
+
+    #[test]
+    fn q8_is_one_byte_per_element() {
+        let q = Tensor::from_vec(&[2, 3], vec![-127.0, 0.0, 127.0, 1.0, -1.0, 64.0]);
+        let qt = QTensor::from_grid(&q, &[0.5, 0.25], 8).unwrap();
+        assert_eq!(qt.storage_bits(), 8);
+        assert_eq!(qt.data.len(), 6);
+        assert_eq!(qt.data[0] as i8, -127);
+        assert_eq!(qt.row_sums, vec![0, 64]);
+        assert_eq!(qt.dequantize().data, vec![-63.5, 0.0, 63.5, 0.25, -0.25, 16.0]);
+    }
+
+    #[test]
+    fn from_grid_rejects_bad_inputs() {
+        let q = Tensor::from_vec(&[1, 2], vec![0.5, 1.0]);
+        assert!(QTensor::from_grid(&q, &[1.0], 4).is_err(), "non-integral grid");
+        let q = Tensor::from_vec(&[1, 2], vec![9.0, 0.0]);
+        assert!(QTensor::from_grid(&q, &[1.0], 4).is_err(), "out of 4-bit range");
+        let q = Tensor::from_vec(&[1, 2], vec![1.0, 0.0]);
+        assert!(QTensor::from_grid(&q, &[1.0, 2.0], 4).is_err(), "scales len");
+        assert!(QTensor::from_grid(&q, &[1.0], 9).is_err(), "bits too wide");
+        assert!(QTensor::from_grid(&q, &[1.0], 1).is_err(), "bits too narrow");
+    }
+
+    #[test]
+    fn from_packed_rejects_bad_payload() {
+        let q = Tensor::from_vec(&[2, 2], vec![1.0, -1.0, 2.0, -2.0]);
+        let qt = QTensor::from_grid(&q, &[1.0, 1.0], 4).unwrap();
+        let bad_len = QTensor::from_packed(
+            qt.shape.clone(),
+            4,
+            qt.data[..1].to_vec(),
+            qt.scales.clone(),
+        );
+        assert!(bad_len.is_err());
+        // A q4 byte decoding to -8 is off the symmetric grid (qmin = -7).
+        let bad_val = QTensor::from_packed(vec![1, 1], 4, vec![0x08], vec![1.0]);
+        assert!(bad_val.is_err());
+    }
+}
