@@ -48,6 +48,26 @@
 //! answers `{"ok":false,"error":"busy","retry_ms":N}` instead of queueing
 //! unboundedly — clients should back off and retry.
 //!
+//! Auth: when the server was started with `--auth-token T`, **every**
+//! request object must carry `"auth":"T"` alongside `cmd`; a missing or
+//! wrong token (compared in constant time) answers
+//! `{"ok":false,"error":"auth"}` and bumps the `conns` → `auth_failed`
+//! counter.  Without `--auth-token` the field is ignored.
+//!
+//! Sharded mode (`serve --shards N`): the process you connect to is a
+//! thin single-threaded *router* that consistent-hash-routes each
+//! request — on the model name plus the spec's canonical-form hash — to
+//! one of N private worker shard processes, each a full engine speaking
+//! this same protocol on a loopback socket.  The protocol is unchanged
+//! except that `stats` returns the *cluster* rollup: per-shard counters
+//! summed (histograms merged bucket-wise, `uptime_s` maxed), `conns`
+//! replaced by the router's own connection gauges, plus a `"cluster"`
+//! object — `{"shards":N,"alive":N,"respawns":N,"per_shard":[{"shard",
+//! "alive","pid","addr","requests_total","errors"}, ...]}`.  A dead or
+//! hung shard is respawned by the router; requests that would have
+//! landed on it answer `busy` + `retry_ms` in the interim (connections
+//! are never dropped), and only that shard's hash ranges fail over.
+//!
 //! This module is a thin *protocol adapter* between two subsystems:
 //!
 //! * [`crate::serve::net`] — the event-driven connection layer.  One
@@ -82,7 +102,7 @@ use std::time::Duration;
 use crate::io::{dataset, manifest::Manifest, sqnt};
 use crate::nn::{Graph, Params};
 use crate::serve::disk::file_fingerprint;
-use crate::serve::net::{NetCfg, Reactor, StopHandle};
+use crate::serve::net::{ct_eq, NetCfg, Reactor, StopHandle};
 use crate::serve::{Engine, EngineCfg};
 use crate::util::json::Json;
 
@@ -196,9 +216,40 @@ pub fn serve(store: Arc<ModelStore>, addr: &str, cfg: EngineCfg) -> Result<()> {
         cfg.max_batch,
         cfg.conn_rps,
     );
+    let auth = cfg.auth_token.clone();
     let engine = Engine::new(store, cfg.clone())?;
     let reactor = Reactor::new(listener, net_cfg(&cfg), Arc::clone(&engine.metrics))?;
-    run(reactor, engine)
+    run(reactor, engine, auth)
+}
+
+/// Serve as worker shard `shard` for a router parent: bind first (so the
+/// router's connections land in the backlog while the engine builds),
+/// print one machine-readable ready line — `{"ok":true,"shard":I,
+/// "addr":"127.0.0.1:PORT"}` — on stdout for the router to parse, then
+/// run the ordinary protocol loop.  No human banner; stdout belongs to
+/// the parent.  `cfg.shard_slot` makes the disk tier write only owned
+/// keys (see [`crate::serve::disk::DiskCache::open_owned`]).
+pub fn serve_worker(
+    store: Arc<ModelStore>,
+    addr: &str,
+    cfg: EngineCfg,
+    shard: usize,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    println!(
+        "{}",
+        Json::obj()
+            .set("ok", true)
+            .set("shard", shard)
+            .set("addr", local.to_string())
+            .dump()
+    );
+    std::io::stdout().flush()?;
+    let auth = cfg.auth_token.clone();
+    let engine = Engine::new(store, cfg.clone())?;
+    let reactor = Reactor::new(listener, net_cfg(&cfg), Arc::clone(&engine.metrics))?;
+    run(reactor, engine, auth)
 }
 
 /// A background server (tests, examples, `bench-serve --spawn`).
@@ -242,11 +293,12 @@ pub fn spawn(
 ) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
+    let auth = cfg.auth_token.clone();
     let engine = Engine::new(store, cfg.clone())?;
     let reactor = Reactor::new(listener, net_cfg(&cfg), Arc::clone(&engine.metrics))?;
     let stop = reactor.stop_handle();
     let thread = thread::spawn(move || {
-        let _ = run(reactor, engine);
+        let _ = run(reactor, engine, auth);
     });
     Ok(ServerHandle { addr: local, stop, thread: Some(thread) })
 }
@@ -255,7 +307,7 @@ pub fn spawn(
 /// requested, then flush the engine (admitted jobs incl. pending disk
 /// spills) so a restart over the same `--cache-dir` never scans
 /// half-written state.
-fn run(reactor: Reactor, engine: Arc<Engine>) -> Result<()> {
+fn run(reactor: Reactor, engine: Arc<Engine>, auth: Option<String>) -> Result<()> {
     let stop = reactor.stop_handle();
     let eng = Arc::clone(&engine);
     reactor.run(move |line, respond| {
@@ -268,6 +320,15 @@ fn run(reactor: Reactor, engine: Arc<Engine>) -> Result<()> {
                 return;
             }
         };
+        if let Some(token) = &auth {
+            let given =
+                req.get("auth").and_then(|a| a.as_str().ok()).unwrap_or("");
+            if !ct_eq(given, token) {
+                eng.metrics.conns_auth_failed.fetch_add(1, Ordering::Relaxed);
+                respond(Json::obj().set("ok", false).set("error", "auth"));
+                return;
+            }
+        }
         let cmd = req.get("cmd").and_then(|c| c.as_str().ok()).unwrap_or("");
         if cmd == "shutdown" {
             eng.metrics.count_cmd("shutdown");
@@ -370,6 +431,49 @@ mod tests {
             .unwrap();
         assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true));
         // The accept loop must exit without another connection arriving.
+        handle.join();
+    }
+
+    /// With `--auth-token`, every request needs a matching `auth` field;
+    /// failures answer `{"ok":false,"error":"auth"}` and bump the
+    /// `auth_failed` counter without closing the connection.
+    #[test]
+    fn auth_token_gates_every_request() {
+        let cfg = EngineCfg {
+            auth_token: Some("sesame".to_string()),
+            ..test_cfg()
+        };
+        let handle = spawn(tiny_store(), "127.0.0.1:0", cfg).unwrap();
+        let addr = handle.addr.to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        // Missing, then wrong, then right — all on one connection.
+        let resp =
+            client.call(&Json::parse(r#"{"cmd":"ping"}"#).unwrap()).unwrap();
+        assert_eq!(resp.req("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(resp.req("error").unwrap().as_str().unwrap(), "auth");
+        let resp = client
+            .call(&Json::parse(r#"{"cmd":"ping","auth":"nope"}"#).unwrap())
+            .unwrap();
+        assert_eq!(resp.req("error").unwrap().as_str().unwrap(), "auth");
+        let resp = client
+            .call(&Json::parse(r#"{"cmd":"ping","auth":"sesame"}"#).unwrap())
+            .unwrap();
+        assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true));
+        let stats = client
+            .call(&Json::parse(r#"{"cmd":"stats","auth":"sesame"}"#).unwrap())
+            .unwrap();
+        let failed = stats
+            .req("conns")
+            .unwrap()
+            .req("auth_failed")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(failed, 2);
+        let resp = client
+            .call(&Json::parse(r#"{"cmd":"shutdown","auth":"sesame"}"#).unwrap())
+            .unwrap();
+        assert_eq!(resp.req("ok").unwrap(), &Json::Bool(true));
         handle.join();
     }
 }

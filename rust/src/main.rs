@@ -14,14 +14,22 @@
 //!                [--cache-dir DIR] [--cache-disk-mb MB]
 //!                [--max-conns N] [--idle-timeout-ms MS]
 //!                [--batch-window-us US] [--max-batch N] [--conn-rps R]
+//!                [--auth-token T] [--shards N] [--tiny]
 //!                TCP quantization + inference service (event-driven
 //!                serve/net reactor over mem LRU + disk persistence +
 //!                single-flight + bounded scheduler + predict batch
-//!                collector; total threads = 2 + --workers)
+//!                collector; total threads = 2 + --workers).
+//!                --shards N runs the sharded deployment instead: a
+//!                single-threaded consistent-hash router process that
+//!                spawns N private worker shard processes (each a full
+//!                engine; `stats` becomes the cluster rollup, dead
+//!                workers are respawned with only their hash ranges
+//!                failing over — see serve/shard).  --shard-worker I is
+//!                the internal worker entry the router spawns.
 //!   squant bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--idle M]
 //!                [--reqs N] [--restart-warm] [--mixed-keys] [--tiny]
 //!                [--predict] [--pipeline D] [--abits A] [--strict]
-//!                [--require-int8]
+//!                [--require-int8] [--shards N]
 //!                load-generate against a serve instance:
 //!                req/s, hit-rate, latency quantiles, busy rejections and
 //!                connection gauges; --idle M keeps M of the N connections
@@ -57,7 +65,7 @@ use squant::io::{dataset, manifest::Manifest, sqnt};
 use squant::nn::Graph;
 use squant::quant::spec::{self, LayerOverride, Method, QuantSpec};
 use squant::quant::ScaleMethod;
-use squant::serve::EngineCfg;
+use squant::serve::{shard, EngineCfg};
 use squant::squant as sq;
 use squant::util::cli::Args;
 use squant::util::pool::default_threads;
@@ -171,6 +179,7 @@ COMMANDS:
           [--cache-dir DIR] [--cache-disk-mb MB]
           [--max-conns N] [--idle-timeout-ms MS]
           [--batch-window-us US] [--max-batch N] [--conn-rps R]
+          [--auth-token T] [--shards N] [--tiny]
           protocol verbs: ping models quantize eval predict warm stats
           shutdown (quantize/eval/predict/warm take the flat
           wbits/abits/method/scale fields or a \"spec\" object/string;
@@ -192,12 +201,19 @@ COMMANDS:
           --idle-timeout-ms (default 60000, 0 disables) reaps idle and
           slow-loris connections, and --conn-rps (default 0 = off) token-
           buckets each connection (over-limit requests answer busy +
-          retry_ms); all show up under stats \"conns\"
+          retry_ms); all show up under stats \"conns\".
+          --auth-token T requires every request to carry \"auth\":\"T\"
+          (constant-time compare; failures answer error \"auth\").
+          --shards N serves the sharded deployment: a consistent-hash
+          router + N respawning worker shard processes sharing the
+          protocol, the --auth-token and (optionally) one --cache-dir;
+          stats rolls up the whole cluster.  --tiny serves the in-memory
+          test model (no artifacts needed).
   bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--idle M]
           [--reqs N] [--models A,B] [--wbits 8,4] [--eval-every N]
           [--samples N] [--seed S] [--restart-warm] [--mixed-keys]
           [--tiny] [--predict] [--pipeline D] [--abits A] [--strict]
-          [--require-int8]
+          [--require-int8] [--shards N]
           load-generate against a server; prints req/s, cache hit-rate,
           p50/p95/p99 latency, busy rejections and connection gauges,
           and writes a BENCH_serve.json snapshot (req/s, quantiles,
@@ -220,7 +236,14 @@ COMMANDS:
           packed integer kernels; the per-path dispatch counts are
           printed (kernels line) and land in the snapshot.
           --strict exits non-zero on request errors or dropped idle conns;
-          --require-int8 also fails unless stats report kernel.int8 > 0
+          --require-int8 also fails unless stats report kernel.int8 > 0.
+          --shards N (with --spawn) first measures a single-process
+          baseline, then drives the same load through a router + N
+          worker shards with one shard killed mid-load (its in-flight
+          requests must answer busy, never drop), checks the cluster
+          stats rollup against the per-shard counters, and records
+          per-shard + aggregate req/s and scaling efficiency in the
+          snapshot
 
 SPEC:   w<W>a<A>:<method>:<scale>[;<layer>=<override>]*
         e.g. \"w4a8:squant:max-abs;conv1=w8;fc=w8/rtn\" — overrides are
@@ -502,16 +525,56 @@ fn serve_cfg(args: &mut Args) -> Result<EngineCfg> {
         batch_window_us: args.u64_or("batch-window-us", defaults.batch_window_us)?,
         max_batch: args.usize_or("max-batch", defaults.max_batch)?,
         conn_rps: args.u64_or("conn-rps", defaults.conn_rps)?,
+        auth_token: args.opt("auth-token"),
+        shard_slot: None,
     })
 }
 
 fn cmd_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7433");
-    let cfg = serve_cfg(args)?;
+    let tiny = args.flag("tiny");
+    let shards = args.usize_or("shards", 0)?;
+    let shard_worker = args.opt("shard-worker");
+    let mut cfg = serve_cfg(args)?;
     args.finish()?;
-    let man = Manifest::load(artifacts)?;
-    let store = server::ModelStore::load(&man).context("loading models")?;
-    server::serve(std::sync::Arc::new(store), &addr, cfg)
+    let build_store = || -> Result<std::sync::Arc<server::ModelStore>> {
+        if tiny {
+            return Ok(server::ModelStore::tiny());
+        }
+        let man = Manifest::load(artifacts)?;
+        let store = server::ModelStore::load(&man).context("loading models")?;
+        Ok(std::sync::Arc::new(store))
+    };
+    // Internal entry: one worker shard, spawned by the router.
+    if let Some(idx) = shard_worker {
+        let idx: usize =
+            idx.parse().map_err(|e| anyhow!("--shard-worker: {e}"))?;
+        if shards == 0 {
+            bail!("--shard-worker needs --shards N (the total shard count)");
+        }
+        if idx >= shards {
+            bail!("--shard-worker {idx} out of range 0..{shards}");
+        }
+        cfg.shard_slot = Some((idx, shards));
+        return server::serve_worker(build_store()?, &addr, cfg, idx);
+    }
+    if shards > 0 {
+        let mut model_args: Vec<String> =
+            vec!["--artifacts".into(), artifacts.to_string()];
+        if tiny {
+            model_args.push("--tiny".into());
+        }
+        return shard::serve_router(shard::RouterCfg {
+            shards,
+            addr,
+            exe: std::env::current_exe()
+                .context("resolving the squant executable for worker spawn")?,
+            model_args,
+            engine: cfg,
+            health: Default::default(),
+        });
+    }
+    server::serve(build_store()?, &addr, cfg)
 }
 
 /// One random heterogeneous spec for `bench-serve --mixed-keys`: bits from
@@ -584,6 +647,9 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     // CI assertion: fail unless the server's stats show the packed i8 kernel
     // actually dispatched at least once during the run.
     let require_int8 = args.flag("require-int8");
+    // Sharded scaling mode: baseline single-process phase, then the same
+    // load through a router + N worker shards with a kill injected.
+    let shards = args.usize_or("shards", 0)?;
     let cfg = serve_cfg(args)?;
     args.finish()?;
     if restart_warm && (!spawn || cfg.cache_dir.is_none()) {
@@ -594,6 +660,15 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     }
     if tiny && !spawn {
         bail!("--tiny only makes sense with --spawn (it picks the spawned store)");
+    }
+    if shards > 0 && !spawn {
+        bail!("--shards needs --spawn (the bench hosts the router itself)");
+    }
+    if shards > 0 && restart_warm {
+        bail!("--restart-warm is not supported with --shards");
+    }
+    if cfg.auth_token.is_some() {
+        bail!("the bench client does not authenticate; drop --auth-token");
     }
 
     let build_store = || -> Result<std::sync::Arc<server::ModelStore>> {
@@ -606,15 +681,34 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         Ok(std::sync::Arc::new(store))
     };
 
-    // Either target a running server (--addr) or self-host one (--spawn).
-    let server = if spawn {
-        Some(server::spawn(build_store()?, "127.0.0.1:0", cfg.clone())?)
+    // Either target a running server (--addr) or self-host one (--spawn):
+    // a single process, or — with --shards — a router + N worker shards
+    // spawned from this very binary.
+    let (server, router) = if spawn && shards > 0 {
+        let mut model_args: Vec<String> =
+            vec!["--artifacts".into(), artifacts.to_string()];
+        if tiny {
+            model_args.push("--tiny".into());
+        }
+        let handle = shard::spawn_router(shard::RouterCfg {
+            shards,
+            addr: "127.0.0.1:0".into(),
+            exe: std::env::current_exe()
+                .context("resolving the squant executable for worker spawn")?,
+            model_args,
+            engine: cfg.clone(),
+            health: Default::default(),
+        })?;
+        (None, Some(handle))
+    } else if spawn {
+        (Some(server::spawn(build_store()?, "127.0.0.1:0", cfg.clone())?), None)
     } else {
-        None
+        (None, None)
     };
     let addr = server
         .as_ref()
         .map(|h| h.addr.to_string())
+        .or_else(|| router.as_ref().map(|h| h.addr.to_string()))
         .unwrap_or(addr);
 
     let mut probe = server::Client::connect(&addr).context(
@@ -699,15 +793,6 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     let stats0 = probe.call(&Json::parse(r#"{"cmd":"stats"}"#)?)?;
     let (h0, m0, s0, d0) = cache_counts(&stats0)?;
 
-    let hist = Arc::new(Histogram::new());
-    let busy = Arc::new(AtomicU64::new(0));
-    let errors = Arc::new(AtomicU64::new(0));
-    let done = Arc::new(AtomicU64::new(0));
-    // Client-observed batching (--predict): sum and count of the "batch"
-    // field on ok responses, i.e. the mean batch a *request* landed in.
-    let batch_sum = Arc::new(AtomicU64::new(0));
-    let batch_obs = Arc::new(AtomicU64::new(0));
-
     // The connection-scaling scenario: open the idle set first — these
     // stay connected and silent for the whole load phase.  With the
     // reactor they cost one registration each (no thread, no worker slot,
@@ -718,6 +803,259 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         idle_conns
             .push(server::Client::connect(&addr).context("opening idle conn")?);
     }
+
+    /// One load phase's client-side outcome.
+    struct LoadOut {
+        ok: u64,
+        busy: u64,
+        errors: u64,
+        wall_s: f64,
+        hist: Arc<Histogram>,
+        batch_sum: u64,
+        batch_obs: u64,
+    }
+    // The whole load phase as a function of the target address, so the
+    // sharded mode can run the identical workload (same seed, same key
+    // sequence) twice: once against a single-process baseline, once
+    // against the router.
+    let run_load = |target: &str| -> LoadOut {
+        let addr = target.to_string();
+        let hist = Arc::new(Histogram::new());
+        let busy = Arc::new(AtomicU64::new(0));
+        let errors = Arc::new(AtomicU64::new(0));
+        let done = Arc::new(AtomicU64::new(0));
+        // Client-observed batching (--predict): sum and count of the
+        // "batch" field on ok responses, i.e. the mean batch a *request*
+        // landed in.
+        let batch_sum = Arc::new(AtomicU64::new(0));
+        let batch_obs = Arc::new(AtomicU64::new(0));
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for ci in 0..hot {
+            let (addr, models, wbits) = (addr.clone(), Arc::clone(&models),
+                                         Arc::clone(&wbits));
+            let (layer_names, sent) = (Arc::clone(&layer_names), Arc::clone(&sent));
+            let (hist, busy, errors, done) =
+                (Arc::clone(&hist), Arc::clone(&busy), Arc::clone(&errors),
+                 Arc::clone(&done));
+            if predict {
+                // Open-loop inference load: each hot conn keeps `pipeline`
+                // predict requests in flight over one raw pipelined socket
+                // (responses come back strictly in arrival order, so the
+                // send-time queue lines up with the reads).  Concurrent
+                // in-flight inputs for the same key are what the server's
+                // batch collector coalesces.
+                let (batch_sum, batch_obs) =
+                    (Arc::clone(&batch_sum), Arc::clone(&batch_obs));
+                handles.push(std::thread::spawn(move || {
+                    use std::io::{BufRead, BufReader, Write};
+                    let mut rng = Rng::new(seed + ci as u64);
+                    let Ok(mut writer) = std::net::TcpStream::connect(&addr) else {
+                        errors.fetch_add(reqs as u64, Ordering::Relaxed);
+                        return;
+                    };
+                    let Ok(rstream) = writer.try_clone() else {
+                        errors.fetch_add(reqs as u64, Ordering::Relaxed);
+                        return;
+                    };
+                    let mut reader = BufReader::new(rstream);
+                    let mut sent_at: std::collections::VecDeque<std::time::Instant> =
+                        std::collections::VecDeque::new();
+                    let mut to_send = reqs;
+                    let mut to_recv = reqs;
+                    while to_recv > 0 {
+                        while to_send > 0 && sent_at.len() < pipeline {
+                            let model = models[rng.below(models.len())].clone();
+                            let wb = wbits[rng.below(wbits.len())];
+                            let mut input = vec![0.0f32; input_len];
+                            rng.fill_normal(&mut input, 1.0);
+                            let mut req = Json::obj()
+                                .set("cmd", "predict")
+                                .set("model", model)
+                                .set("wbits", wb)
+                                .set(
+                                    "input",
+                                    Json::Arr(
+                                        input
+                                            .iter()
+                                            .map(|v| Json::Num(*v as f64))
+                                            .collect(),
+                                    ),
+                                );
+                            if abits > 0 {
+                                // Non-zero activation bits select the packed
+                                // integer kernel path server-side.
+                                req = req.set("abits", abits);
+                            }
+                            let line = req.dump();
+                            if writer
+                                .write_all(line.as_bytes())
+                                .and_then(|()| writer.write_all(b"\n"))
+                                .is_err()
+                            {
+                                errors.fetch_add(to_recv as u64, Ordering::Relaxed);
+                                return;
+                            }
+                            sent_at.push_back(std::time::Instant::now());
+                            to_send -= 1;
+                        }
+                        let mut line = String::new();
+                        match reader.read_line(&mut line) {
+                            Ok(n) if n > 0 => {}
+                            _ => {
+                                errors.fetch_add(to_recv as u64, Ordering::Relaxed);
+                                return;
+                            }
+                        }
+                        let t_sent = sent_at
+                            .pop_front()
+                            .unwrap_or_else(std::time::Instant::now);
+                        to_recv -= 1;
+                        let Ok(resp) = Json::parse(line.trim()) else {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        };
+                        if matches!(resp.get("ok"), Some(Json::Bool(true))) {
+                            hist.record_ms(t_sent.elapsed().as_secs_f64() * 1e3);
+                            done.fetch_add(1, Ordering::Relaxed);
+                            if let Some(b) =
+                                resp.get("batch").and_then(|b| b.as_usize().ok())
+                            {
+                                batch_sum.fetch_add(b as u64, Ordering::Relaxed);
+                                batch_obs.fetch_add(1, Ordering::Relaxed);
+                            }
+                        } else if resp
+                            .get("error")
+                            .and_then(|e| e.as_str().ok())
+                            .map(|e| e == "busy")
+                            .unwrap_or(false)
+                        {
+                            busy.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }));
+                continue;
+            }
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(seed + ci as u64);
+                let Ok(mut client) = server::Client::connect(&addr) else {
+                    errors.fetch_add(reqs as u64, Ordering::Relaxed);
+                    return;
+                };
+                for i in 0..reqs {
+                    let model = models[rng.below(models.len())].clone();
+                    let wb = wbits[rng.below(wbits.len())];
+                    let is_eval = eval_every > 0 && (i + 1) % eval_every == 0;
+                    // In --mixed-keys mode, the (model, canonical spec) key of
+                    // this request — recorded for --restart-warm replay only
+                    // once the server answers ok (a busy/error response never
+                    // computed or spilled anything, so replaying it would be
+                    // a guaranteed recompute, not a warm-start measurement).
+                    let mut replay_key: Option<(String, String)> = None;
+                    let req = if mixed {
+                        // Heterogeneous spec traffic: bits x stage sets x
+                        // scale methods x per-layer overrides, so hit-rate /
+                        // latency numbers cover spec-diverse workloads.
+                        let spec = sample_spec(
+                            &mut rng,
+                            &wbits,
+                            layer_names.get(&model).map(|v| v.as_slice()),
+                        );
+                        replay_key = Some((model.clone(), spec.canonical()));
+                        let r = Json::obj()
+                            .set("cmd", if is_eval { "eval" } else { "quantize" })
+                            .set("model", model)
+                            .set("spec", spec.to_json());
+                        if is_eval { r.set("samples", samples) } else { r }
+                    } else if is_eval {
+                        Json::obj()
+                            .set("cmd", "eval")
+                            .set("model", model)
+                            .set("wbits", wb)
+                            .set("samples", samples)
+                    } else {
+                        Json::obj()
+                            .set("cmd", "quantize")
+                            .set("model", model)
+                            .set("wbits", wb)
+                    };
+                    let rt = std::time::Instant::now();
+                    match client.call(&req) {
+                        Ok(resp) => {
+                            let ok = matches!(resp.get("ok"),
+                                              Some(Json::Bool(true)));
+                            if ok {
+                                // Only successful responses feed the latency
+                                // quantiles / req-s figures; a busy rejection
+                                // returns in microseconds and would drag p50
+                                // down exactly when the server is overloaded.
+                                hist.record_ms(rt.elapsed().as_secs_f64() * 1e3);
+                                done.fetch_add(1, Ordering::Relaxed);
+                                if let Some(k) = replay_key.take() {
+                                    sent.lock().unwrap().insert(k);
+                                }
+                            } else {
+                                let is_busy = resp
+                                    .get("error")
+                                    .and_then(|e| e.as_str().ok())
+                                    .map(|e| e == "busy")
+                                    .unwrap_or(false);
+                                if is_busy {
+                                    busy.fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        LoadOut {
+            ok: done.load(Ordering::Relaxed),
+            busy: busy.load(Ordering::Relaxed),
+            errors: errors.load(Ordering::Relaxed),
+            wall_s: t0.elapsed().as_secs_f64(),
+            hist,
+            batch_sum: batch_sum.load(Ordering::Relaxed),
+            batch_obs: batch_obs.load(Ordering::Relaxed),
+        }
+    };
+
+    // Sharded mode: single-process baseline first — same store, same cfg,
+    // same workload and seed — so the router numbers have an
+    // apples-to-apples denominator for scaling efficiency.
+    let baseline_req_s = if shards > 0 {
+        let base = server::spawn(build_store()?, "127.0.0.1:0", cfg.clone())?;
+        let baddr = base.addr.to_string();
+        println!(
+            "bench-serve --shards {shards}: single-process baseline \
+             ({hot} conns x {reqs} reqs against {baddr})"
+        );
+        let b = run_load(&baddr);
+        if let Ok(mut c) = server::Client::connect(&baddr) {
+            let _ = c.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);
+        }
+        base.join();
+        let rs = b.ok as f64 / b.wall_s.max(1e-9);
+        println!(
+            "  baseline   : {} ok in {:.2} s  ({rs:.1} req/s, {} busy, \
+             {} errors)",
+            b.ok, b.wall_s, b.busy, b.errors
+        );
+        Some(rs)
+    } else {
+        None
+    };
 
     if predict {
         println!(
@@ -735,198 +1073,29 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
             if mixed { ", mixed keys" } else { "" }
         );
     }
-    let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    for ci in 0..hot {
-        let (addr, models, wbits) = (addr.clone(), Arc::clone(&models),
-                                     Arc::clone(&wbits));
-        let (layer_names, sent) = (Arc::clone(&layer_names), Arc::clone(&sent));
-        let (hist, busy, errors, done) =
-            (Arc::clone(&hist), Arc::clone(&busy), Arc::clone(&errors),
-             Arc::clone(&done));
-        if predict {
-            // Open-loop inference load: each hot conn keeps `pipeline`
-            // predict requests in flight over one raw pipelined socket
-            // (responses come back strictly in arrival order, so the
-            // send-time queue lines up with the reads).  Concurrent
-            // in-flight inputs for the same key are what the server's
-            // batch collector coalesces.
-            let (batch_sum, batch_obs) =
-                (Arc::clone(&batch_sum), Arc::clone(&batch_obs));
-            handles.push(std::thread::spawn(move || {
-                use std::io::{BufRead, BufReader, Write};
-                let mut rng = Rng::new(seed + ci as u64);
-                let Ok(mut writer) = std::net::TcpStream::connect(&addr) else {
-                    errors.fetch_add(reqs as u64, Ordering::Relaxed);
-                    return;
-                };
-                let Ok(rstream) = writer.try_clone() else {
-                    errors.fetch_add(reqs as u64, Ordering::Relaxed);
-                    return;
-                };
-                let mut reader = BufReader::new(rstream);
-                let mut sent_at: std::collections::VecDeque<std::time::Instant> =
-                    std::collections::VecDeque::new();
-                let mut to_send = reqs;
-                let mut to_recv = reqs;
-                while to_recv > 0 {
-                    while to_send > 0 && sent_at.len() < pipeline {
-                        let model = models[rng.below(models.len())].clone();
-                        let wb = wbits[rng.below(wbits.len())];
-                        let mut input = vec![0.0f32; input_len];
-                        rng.fill_normal(&mut input, 1.0);
-                        let mut req = Json::obj()
-                            .set("cmd", "predict")
-                            .set("model", model)
-                            .set("wbits", wb)
-                            .set(
-                                "input",
-                                Json::Arr(
-                                    input
-                                        .iter()
-                                        .map(|v| Json::Num(*v as f64))
-                                        .collect(),
-                                ),
-                            );
-                        if abits > 0 {
-                            // Non-zero activation bits select the packed
-                            // integer kernel path server-side.
-                            req = req.set("abits", abits);
-                        }
-                        let line = req.dump();
-                        if writer
-                            .write_all(line.as_bytes())
-                            .and_then(|()| writer.write_all(b"\n"))
-                            .is_err()
-                        {
-                            errors.fetch_add(to_recv as u64, Ordering::Relaxed);
-                            return;
-                        }
-                        sent_at.push_back(std::time::Instant::now());
-                        to_send -= 1;
-                    }
-                    let mut line = String::new();
-                    match reader.read_line(&mut line) {
-                        Ok(n) if n > 0 => {}
-                        _ => {
-                            errors.fetch_add(to_recv as u64, Ordering::Relaxed);
-                            return;
-                        }
-                    }
-                    let t_sent = sent_at
-                        .pop_front()
-                        .unwrap_or_else(std::time::Instant::now);
-                    to_recv -= 1;
-                    let Ok(resp) = Json::parse(line.trim()) else {
-                        errors.fetch_add(1, Ordering::Relaxed);
-                        continue;
-                    };
-                    if matches!(resp.get("ok"), Some(Json::Bool(true))) {
-                        hist.record_ms(t_sent.elapsed().as_secs_f64() * 1e3);
-                        done.fetch_add(1, Ordering::Relaxed);
-                        if let Some(b) =
-                            resp.get("batch").and_then(|b| b.as_usize().ok())
-                        {
-                            batch_sum.fetch_add(b as u64, Ordering::Relaxed);
-                            batch_obs.fetch_add(1, Ordering::Relaxed);
-                        }
-                    } else if resp
-                        .get("error")
-                        .and_then(|e| e.as_str().ok())
-                        .map(|e| e == "busy")
-                        .unwrap_or(false)
-                    {
-                        busy.fetch_add(1, Ordering::Relaxed);
-                    } else {
-                        errors.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-            }));
-            continue;
-        }
-        handles.push(std::thread::spawn(move || {
-            let mut rng = Rng::new(seed + ci as u64);
-            let Ok(mut client) = server::Client::connect(&addr) else {
-                errors.fetch_add(reqs as u64, Ordering::Relaxed);
-                return;
-            };
-            for i in 0..reqs {
-                let model = models[rng.below(models.len())].clone();
-                let wb = wbits[rng.below(wbits.len())];
-                let is_eval = eval_every > 0 && (i + 1) % eval_every == 0;
-                // In --mixed-keys mode, the (model, canonical spec) key of
-                // this request — recorded for --restart-warm replay only
-                // once the server answers ok (a busy/error response never
-                // computed or spilled anything, so replaying it would be
-                // a guaranteed recompute, not a warm-start measurement).
-                let mut replay_key: Option<(String, String)> = None;
-                let req = if mixed {
-                    // Heterogeneous spec traffic: bits x stage sets x
-                    // scale methods x per-layer overrides, so hit-rate /
-                    // latency numbers cover spec-diverse workloads.
-                    let spec = sample_spec(
-                        &mut rng,
-                        &wbits,
-                        layer_names.get(&model).map(|v| v.as_slice()),
-                    );
-                    replay_key = Some((model.clone(), spec.canonical()));
-                    let r = Json::obj()
-                        .set("cmd", if is_eval { "eval" } else { "quantize" })
-                        .set("model", model)
-                        .set("spec", spec.to_json());
-                    if is_eval { r.set("samples", samples) } else { r }
-                } else if is_eval {
-                    Json::obj()
-                        .set("cmd", "eval")
-                        .set("model", model)
-                        .set("wbits", wb)
-                        .set("samples", samples)
-                } else {
-                    Json::obj()
-                        .set("cmd", "quantize")
-                        .set("model", model)
-                        .set("wbits", wb)
-                };
-                let rt = std::time::Instant::now();
-                match client.call(&req) {
-                    Ok(resp) => {
-                        let ok = matches!(resp.get("ok"),
-                                          Some(Json::Bool(true)));
-                        if ok {
-                            // Only successful responses feed the latency
-                            // quantiles / req-s figures; a busy rejection
-                            // returns in microseconds and would drag p50
-                            // down exactly when the server is overloaded.
-                            hist.record_ms(rt.elapsed().as_secs_f64() * 1e3);
-                            done.fetch_add(1, Ordering::Relaxed);
-                            if let Some(k) = replay_key.take() {
-                                sent.lock().unwrap().insert(k);
-                            }
-                        } else {
-                            let is_busy = resp
-                                .get("error")
-                                .and_then(|e| e.as_str().ok())
-                                .map(|e| e == "busy")
-                                .unwrap_or(false);
-                            if is_busy {
-                                busy.fetch_add(1, Ordering::Relaxed);
-                            } else {
-                                errors.fetch_add(1, Ordering::Relaxed);
-                            }
-                        }
-                    }
-                    Err(_) => {
-                        errors.fetch_add(1, Ordering::Relaxed);
-                        break;
-                    }
-                }
+    // Failure injection (--shards): kill one worker mid-load over a side
+    // connection.  The router must answer the dead shard's in-flight
+    // requests with busy + retry_ms (clients back off; no connection
+    // drops, no request errors) and respawn the worker.
+    let killer = (shards > 0).then(|| {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(120));
+            if let Ok(mut c) = server::Client::connect(&addr) {
+                let _ = c.set_timeout(Some(std::time::Duration::from_secs(5)));
+                let _ = c.call(
+                    &Json::obj().set("cmd", "shard-kill").set("shard", 0usize),
+                );
             }
-        }));
+        })
+    });
+    let out = run_load(&addr);
+    if let Some(t) = killer {
+        let _ = t.join();
     }
-    for h in handles {
-        let _ = h.join();
-    }
-    let wall_s = t0.elapsed().as_secs_f64();
+    let wall_s = out.wall_s;
+    let hist = out.hist;
+    let n = out.ok;
 
     let stats1 = probe.call(&Json::parse(r#"{"cmd":"stats"}"#)?)?;
     let (h1, m1, s1, d1) = cache_counts(&stats1)?;
@@ -938,9 +1107,8 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         0.0
     };
 
-    let n = done.load(Ordering::Relaxed);
-    println!("  completed  : {n} ok responses in {wall_s:.2} s  ({:.1} req/s)",
-             n as f64 / wall_s.max(1e-9));
+    let req_s = n as f64 / wall_s.max(1e-9);
+    println!("  completed  : {n} ok responses in {wall_s:.2} s  ({req_s:.1} req/s)");
     println!(
         "  latency    : p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms",
         hist.quantile_ms(0.50),
@@ -952,11 +1120,7 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         "  cache      : {hit_rate:.1}% hit-rate (mem {hits:.0}, shared {shared:.0}, \
          disk {disk:.0}, misses {misses:.0})"
     );
-    println!(
-        "  rejected   : {} busy, {} errors",
-        busy.load(Ordering::Relaxed),
-        errors.load(Ordering::Relaxed)
-    );
+    println!("  rejected   : {} busy, {} errors", out.busy, out.errors);
     // Which kernel paths the server's forwards actually dispatched: packed
     // int8 / int4 vs the f32 fallback, per conv/linear node execution.
     let kernel = stats1.get("metrics").and_then(|m| m.get("kernel"));
@@ -976,6 +1140,40 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
             conns_stats.req("rejected")?.as_usize()?,
             conns_stats.req("idle_closed")?.as_usize()?,
         );
+    }
+    // Sharded mode: the cluster rollup must be self-consistent (the
+    // merged total equals the per-shard sum) and every shard's share of
+    // the work is reported as its own req/s.
+    let mut per_shard_rows: Vec<Json> = Vec::new();
+    if shards > 0 {
+        let cl = stats1.req("cluster").context("router stats lack 'cluster'")?;
+        let alive = cl.req("alive")?.as_usize()?;
+        let respawns = cl.req("respawns")?.as_usize()?;
+        let mut shard_sum = 0usize;
+        for p in cl.req("per_shard")?.as_arr()? {
+            let total = p.req("requests_total")?.as_usize()?;
+            shard_sum += total;
+            per_shard_rows.push(
+                Json::obj()
+                    .set("shard", p.req("shard")?.as_usize()?)
+                    .set("alive", p.req("alive")?.as_bool()?)
+                    .set("requests_total", total)
+                    .set("req_s", total as f64 / wall_s.max(1e-9)),
+            );
+        }
+        let merged_total =
+            stats1.req("metrics")?.req("requests_total")?.as_f64()? as usize;
+        println!(
+            "  cluster    : {alive}/{shards} shards alive, {respawns} \
+             respawns; merged requests_total {merged_total} vs per-shard \
+             sum {shard_sum}"
+        );
+        if merged_total != shard_sum {
+            bail!(
+                "cluster stats rollup mismatch: merged requests_total \
+                 {merged_total} != per-shard sum {shard_sum}"
+            );
+        }
     }
     // Layer-task pipeline observability: the scheduler's live task/cost
     // gauges plus the server-side queue-wait vs compute split for the
@@ -1037,12 +1235,12 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
                 );
             }
         }
-        let obs = batch_obs.load(Ordering::Relaxed);
+        let obs = out.batch_obs;
         if obs > 0 {
             println!(
                 "  batch seen : mean {:.2} across {obs} ok responses \
                  (request-weighted)",
-                batch_sum.load(Ordering::Relaxed) as f64 / obs as f64
+                out.batch_sum as f64 / obs as f64
             );
         }
         if let Ok(lat) = stats1.req("metrics").and_then(|m| m.req("latency")) {
@@ -1061,7 +1259,7 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     // The cross-PR perf trajectory: one JSON snapshot per run, fixed name,
     // so successive PRs can diff req/s, tail latency, hit-rate and batching
     // without scraping stdout.
-    let snapshot = Json::obj()
+    let mut snapshot = Json::obj()
         .set("bench", "bench-serve")
         .set("mode", if predict { "predict" } else { "quantize-eval" })
         .set("conns", conns)
@@ -1069,10 +1267,10 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         .set("reqs_per_conn", reqs)
         .set("pipeline", if predict { pipeline } else { 1 })
         .set("ok", n as usize)
-        .set("busy", busy.load(Ordering::Relaxed) as usize)
-        .set("errors", errors.load(Ordering::Relaxed) as usize)
+        .set("busy", out.busy as usize)
+        .set("errors", out.errors as usize)
         .set("wall_s", wall_s)
-        .set("req_s", n as f64 / wall_s.max(1e-9))
+        .set("req_s", req_s)
         .set("p50_ms", hist.quantile_ms(0.50))
         .set("p95_ms", hist.quantile_ms(0.95))
         .set("p99_ms", hist.quantile_ms(0.99))
@@ -1086,6 +1284,14 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
                 .set("int4", k4 as usize)
                 .set("f32", kf as usize),
         );
+    if let Some(base) = baseline_req_s {
+        snapshot = snapshot
+            .set("shards", shards)
+            .set("baseline_req_s", base)
+            .set("speedup", req_s / base.max(1e-9))
+            .set("scaling_efficiency", req_s / (base.max(1e-9) * shards as f64))
+            .set("per_shard", Json::Arr(per_shard_rows));
+    }
     const BENCH_PATH: &str = "BENCH_serve.json";
     match std::fs::write(BENCH_PATH, snapshot.dump() + "\n") {
         Ok(()) => println!("  snapshot   : wrote {BENCH_PATH}"),
@@ -1112,7 +1318,7 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     }
     drop(idle_conns);
     if strict {
-        let errs = errors.load(Ordering::Relaxed);
+        let errs = out.errors;
         if errs > 0 {
             bail!("--strict: {errs} request errors during the load phase");
         }
@@ -1194,6 +1400,12 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     }
 
     if let Some(handle) = server {
+        let _ = probe.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);
+        handle.join();
+    }
+    if let Some(handle) = router {
+        // The router drains its shards (graceful stop fans out, < 1 s
+        // budget) before the control connection sees the final reply.
         let _ = probe.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);
         handle.join();
     }

@@ -50,6 +50,7 @@ use std::sync::{Arc, Mutex};
 use std::time::SystemTime;
 
 use super::cache::{entry_payload_bytes, CacheEntry, QuantKey};
+use super::shard::{request_point, Ring, VNODES};
 use crate::coordinator::{LayerReport, QuantReport};
 use crate::io::sqnt;
 use crate::nn::engine::{ActQuant, QuantizedParams};
@@ -147,6 +148,13 @@ pub struct DiskCache {
     tmp_seq: AtomicU64,
     restored: usize,
     dropped_at_open: usize,
+    /// Sharded deployments: `(ring, my index)`. When set, [`store`] only
+    /// writes keys this shard *owns* under the all-alive ring, so N
+    /// worker processes can share one cache directory without ever
+    /// racing on the same artifact file (see [`super::shard`]).
+    ///
+    /// [`store`]: DiskCache::store
+    owner: Option<(Ring, usize)>,
 }
 
 impl DiskCache {
@@ -159,7 +167,36 @@ impl DiskCache {
         budget_bytes: u64,
         fingerprints: &HashMap<String, u64>,
     ) -> Result<DiskCache> {
-        let dir = dir.as_ref().to_path_buf();
+        Self::open_inner(dir.as_ref(), budget_bytes, fingerprints, None)
+    }
+
+    /// Open as worker shard `index` of `total` sharing the directory with
+    /// its siblings: stores are limited to keys this shard owns on the
+    /// consistent-hash ring.  Reads and the startup scan stay
+    /// unrestricted — a failed-over request can still be answered from a
+    /// dead sibling's artifacts.  Note the budget is enforced per
+    /// process: each shard's index only tracks files it scanned at open
+    /// plus its own writes, and since non-owners never store they never
+    /// prune, so worst-case directory usage is about `budget × shards`.
+    pub fn open_owned(
+        dir: impl AsRef<Path>,
+        budget_bytes: u64,
+        fingerprints: &HashMap<String, u64>,
+        index: usize,
+        total: usize,
+    ) -> Result<DiskCache> {
+        anyhow::ensure!(index < total, "shard index {index} out of range 0..{total}");
+        let owner = Some((Ring::new(total, VNODES), index));
+        Self::open_inner(dir.as_ref(), budget_bytes, fingerprints, owner)
+    }
+
+    fn open_inner(
+        dir: &Path,
+        budget_bytes: u64,
+        fingerprints: &HashMap<String, u64>,
+        owner: Option<(Ring, usize)>,
+    ) -> Result<DiskCache> {
+        let dir = dir.to_path_buf();
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating cache dir {dir:?}"))?;
         let mut kept: Vec<(QuantKey, PathBuf, u64, SystemTime)> = Vec::new();
@@ -208,6 +245,7 @@ impl DiskCache {
             tmp_seq: AtomicU64::new(0),
             restored,
             dropped_at_open: dropped,
+            owner,
         })
     }
 
@@ -258,13 +296,21 @@ impl DiskCache {
 
     /// Write an artifact (atomically: temp file + rename), then prune LRU
     /// files until the byte budget holds.  Returns false when the artifact
-    /// alone exceeds the whole budget and was not kept.
+    /// alone exceeds the whole budget and was not kept, or when this is a
+    /// worker shard and the key belongs to a sibling (see
+    /// [`DiskCache::open_owned`]).
     pub fn store(
         &self,
         key: &QuantKey,
         fingerprint: u64,
         entry: &CacheEntry,
     ) -> Result<bool> {
+        if let Some((ring, idx)) = &self.owner {
+            let point = request_point(&key.model, key.spec.key_hash());
+            if ring.owner(point) != *idx {
+                return Ok(false);
+            }
+        }
         let packed = packed_map(entry);
         let header = encode_header(key, fingerprint, entry, &packed)?;
         let label = key.label();
@@ -833,6 +879,28 @@ mod tests {
         assert_ne!(file_fingerprint(&path), fp1, "content change");
         // Missing files fingerprint to 0, matching in-memory stores.
         assert_eq!(file_fingerprint(&dir.join("nope.bin")), 0);
+    }
+
+    /// Shared-directory write discipline: a worker shard stores only the
+    /// keys it owns on the consistent-hash ring; sibling keys are refused
+    /// (yet still readable, for failover).
+    #[test]
+    fn owned_cache_stores_only_owned_keys() {
+        let total = 3;
+        let ring = Ring::new(total, VNODES);
+        let k = key("m", 4);
+        let owner = ring.owner(request_point(&k.model, k.spec.key_hash()));
+        let other = (owner + 1) % total;
+        let dir = temp_cache_dir("owned");
+        let fp = fps("m", 7);
+        let own = DiskCache::open_owned(&dir, 1 << 20, &fp, owner, total).unwrap();
+        let sib = DiskCache::open_owned(&dir, 1 << 20, &fp, other, total).unwrap();
+        assert!(!sib.store(&k, 7, &entry(8)).unwrap(), "non-owner refuses");
+        assert_eq!(sib.len(), 0);
+        assert!(own.store(&k, 7, &entry(8)).unwrap(), "owner stores");
+        // A sibling reopening the shared directory can still read it.
+        let sib = DiskCache::open_owned(&dir, 1 << 20, &fp, other, total).unwrap();
+        assert!(matches!(sib.load(&k, 7), Lookup::Hit(_)));
     }
 
     #[test]

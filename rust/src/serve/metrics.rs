@@ -93,14 +93,18 @@ impl Histogram {
         self.max_ms()
     }
 
+    /// Point-in-time copy of the histogram for merging and serialization.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj()
-            .set("count", self.count() as usize)
-            .set("p50_ms", self.quantile_ms(0.50))
-            .set("p95_ms", self.quantile_ms(0.95))
-            .set("p99_ms", self.quantile_ms(0.99))
-            .set("mean_ms", self.mean_ms())
-            .set("max_ms", self.max_ms())
+        self.snapshot().to_json()
     }
 
     /// Mean in raw recorded units (for histograms that count things other
@@ -126,12 +130,115 @@ impl Histogram {
     /// JSON view in raw units — used for the batch-size distribution,
     /// where "1.5" means "batches of 1–2 inputs", not microseconds.
     pub fn to_json_raw(&self) -> Json {
+        self.snapshot().to_json_raw()
+    }
+}
+
+/// A plain-data copy of a [`Histogram`] — mergeable across processes and
+/// round-trippable through the serialized `stats` form, which is what the
+/// shard rollup needs to aggregate latency distributions exactly instead
+/// of averaging quantiles.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; NBUCKETS],
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl HistSnapshot {
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for i in 0..NBUCKETS {
+            self.buckets[i] += other.buckets[i];
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate in raw units (geometric midpoint of the bucket),
+    /// same estimator as [`Histogram::quantile_ms`].
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return (1u64 << i) as f64 * 1.5;
+            }
+        }
+        self.max_us as f64
+    }
+
+    /// Sparse bucket encoding: `[[bucket_index, count], ...]`, zeros
+    /// omitted. Its presence is what marks an object as a histogram to
+    /// the rollup merger.
+    fn buckets_json(&self) -> Json {
+        let pairs: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::from(i), Json::from(c as usize)]))
+            .collect();
+        Json::Arr(pairs)
+    }
+
+    pub fn to_json(&self) -> Json {
         Json::obj()
-            .set("count", self.count() as usize)
-            .set("p50", self.quantile_raw(0.50))
-            .set("p95", self.quantile_raw(0.95))
-            .set("mean", self.mean_raw())
-            .set("max", self.max_raw() as usize)
+            .set("count", self.count as usize)
+            .set("p50_ms", self.quantile_us(0.50) / 1e3)
+            .set("p95_ms", self.quantile_us(0.95) / 1e3)
+            .set("p99_ms", self.quantile_us(0.99) / 1e3)
+            .set("mean_ms", self.mean_us() / 1e3)
+            .set("max_ms", self.max_us as f64 / 1e3)
+            .set("sum_us", self.sum_us as usize)
+            .set("max_us", self.max_us as usize)
+            .set("buckets", self.buckets_json())
+    }
+
+    pub fn to_json_raw(&self) -> Json {
+        Json::obj()
+            .set("count", self.count as usize)
+            .set("p50", self.quantile_us(0.50))
+            .set("p95", self.quantile_us(0.95))
+            .set("mean", self.mean_us())
+            .set("max", self.max_us as usize)
+            .set("sum_us", self.sum_us as usize)
+            .set("max_us", self.max_us as usize)
+            .set("buckets", self.buckets_json())
+    }
+
+    /// Rebuild from either serialized shape. Returns None when the
+    /// sparse `buckets` field is absent or malformed.
+    pub fn from_json(j: &Json) -> Option<HistSnapshot> {
+        let pairs = j.get("buckets")?.as_arr().ok()?;
+        let mut buckets = [0u64; NBUCKETS];
+        for p in pairs {
+            let p = p.as_arr().ok()?;
+            let i = p.first()?.as_usize().ok()?;
+            let c = p.get(1)?.as_usize().ok()?;
+            if i < NBUCKETS {
+                buckets[i] += c as u64;
+            }
+        }
+        Some(HistSnapshot {
+            buckets,
+            count: j.get("count")?.as_usize().ok()? as u64,
+            sum_us: j.get("sum_us")?.as_usize().ok()? as u64,
+            max_us: j.get("max_us")?.as_usize().ok()? as u64,
+        })
     }
 }
 
@@ -172,6 +279,9 @@ pub struct Metrics {
     /// Requests answered `busy` by the per-connection `--conn-rps` token
     /// bucket (rejected in the reactor; the engine never saw them).
     pub conns_rate_limited: AtomicU64,
+    /// Requests rejected for a missing or wrong `auth` field when the
+    /// server runs with `--auth-token`.
+    pub conns_auth_failed: AtomicU64,
     /// Inputs served through `predict` (one per request, so
     /// `predict_inputs / predict_batches` is the exact mean batch size).
     pub predict_inputs: AtomicU64,
@@ -230,6 +340,7 @@ impl Metrics {
             conns_rejected: AtomicU64::new(0),
             conns_idle_closed: AtomicU64::new(0),
             conns_rate_limited: AtomicU64::new(0),
+            conns_auth_failed: AtomicU64::new(0),
             predict_inputs: AtomicU64::new(0),
             predict_batches: AtomicU64::new(0),
             batch_flush_timeout: AtomicU64::new(0),
@@ -285,6 +396,10 @@ impl Metrics {
             .set(
                 "rate_limited",
                 self.conns_rate_limited.load(Ordering::Relaxed) as usize,
+            )
+            .set(
+                "auth_failed",
+                self.conns_auth_failed.load(Ordering::Relaxed) as usize,
             )
     }
 
@@ -346,6 +461,128 @@ impl Metrics {
                     .set("queue", self.lat_queue.to_json())
                     .set("compute", self.lat_compute.to_json()),
             )
+    }
+
+    /// Point-in-time plain-data copy of every counter and histogram.
+    pub fn snapshot(&self) -> Snapshot {
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        Snapshot {
+            uptime_s: self.uptime_s(),
+            by_cmd: std::array::from_fn(|i| c(&self.by_cmd[i])),
+            cache_hits: c(&self.cache_hits),
+            cache_misses: c(&self.cache_misses),
+            flight_shared: c(&self.flight_shared),
+            disk_hits: c(&self.disk_hits),
+            disk_misses: c(&self.disk_misses),
+            disk_spills: c(&self.disk_spills),
+            disk_invalidated: c(&self.disk_invalidated),
+            rejected_busy: c(&self.rejected_busy),
+            errors: c(&self.errors),
+            conns_active: c(&self.conns_active),
+            conns_peak: c(&self.conns_peak),
+            conns_rejected: c(&self.conns_rejected),
+            conns_idle_closed: c(&self.conns_idle_closed),
+            conns_rate_limited: c(&self.conns_rate_limited),
+            conns_auth_failed: c(&self.conns_auth_failed),
+            predict_inputs: c(&self.predict_inputs),
+            predict_batches: c(&self.predict_batches),
+            batch_flush_timeout: c(&self.batch_flush_timeout),
+            batch_flush_full: c(&self.batch_flush_full),
+            kernel_int8: c(&self.kernel_int8),
+            kernel_int4: c(&self.kernel_int4),
+            kernel_f32: c(&self.kernel_f32),
+            lat_all: self.lat_all.snapshot(),
+            lat_quantize: self.lat_quantize.snapshot(),
+            lat_eval: self.lat_eval.snapshot(),
+            lat_predict: self.lat_predict.snapshot(),
+            lat_batch_wait: self.lat_batch_wait.snapshot(),
+            batch_size: self.batch_size.snapshot(),
+            lat_queue: self.lat_queue.snapshot(),
+            lat_compute: self.lat_compute.snapshot(),
+        }
+    }
+}
+
+/// Mergeable plain-data view of [`Metrics`] — what one process (or one
+/// bench run) counted, combinable across shards or runs. Counters sum,
+/// histograms merge bucket-wise, `uptime_s` takes the max (the cluster
+/// has been up as long as its oldest member).
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub uptime_s: f64,
+    pub by_cmd: [u64; CMDS.len()],
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub flight_shared: u64,
+    pub disk_hits: u64,
+    pub disk_misses: u64,
+    pub disk_spills: u64,
+    pub disk_invalidated: u64,
+    pub rejected_busy: u64,
+    pub errors: u64,
+    pub conns_active: u64,
+    pub conns_peak: u64,
+    pub conns_rejected: u64,
+    pub conns_idle_closed: u64,
+    pub conns_rate_limited: u64,
+    pub conns_auth_failed: u64,
+    pub predict_inputs: u64,
+    pub predict_batches: u64,
+    pub batch_flush_timeout: u64,
+    pub batch_flush_full: u64,
+    pub kernel_int8: u64,
+    pub kernel_int4: u64,
+    pub kernel_f32: u64,
+    pub lat_all: HistSnapshot,
+    pub lat_quantize: HistSnapshot,
+    pub lat_eval: HistSnapshot,
+    pub lat_predict: HistSnapshot,
+    pub lat_batch_wait: HistSnapshot,
+    pub batch_size: HistSnapshot,
+    pub lat_queue: HistSnapshot,
+    pub lat_compute: HistSnapshot,
+}
+
+impl Snapshot {
+    pub fn requests_total(&self) -> u64 {
+        self.by_cmd.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &Snapshot) {
+        self.uptime_s = self.uptime_s.max(other.uptime_s);
+        for i in 0..CMDS.len() {
+            self.by_cmd[i] += other.by_cmd[i];
+        }
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.flight_shared += other.flight_shared;
+        self.disk_hits += other.disk_hits;
+        self.disk_misses += other.disk_misses;
+        self.disk_spills += other.disk_spills;
+        self.disk_invalidated += other.disk_invalidated;
+        self.rejected_busy += other.rejected_busy;
+        self.errors += other.errors;
+        self.conns_active += other.conns_active;
+        self.conns_peak += other.conns_peak;
+        self.conns_rejected += other.conns_rejected;
+        self.conns_idle_closed += other.conns_idle_closed;
+        self.conns_rate_limited += other.conns_rate_limited;
+        self.conns_auth_failed += other.conns_auth_failed;
+        self.predict_inputs += other.predict_inputs;
+        self.predict_batches += other.predict_batches;
+        self.batch_flush_timeout += other.batch_flush_timeout;
+        self.batch_flush_full += other.batch_flush_full;
+        self.kernel_int8 += other.kernel_int8;
+        self.kernel_int4 += other.kernel_int4;
+        self.kernel_f32 += other.kernel_f32;
+        self.lat_all.merge(&other.lat_all);
+        self.lat_quantize.merge(&other.lat_quantize);
+        self.lat_eval.merge(&other.lat_eval);
+        self.lat_predict.merge(&other.lat_predict);
+        self.lat_batch_wait.merge(&other.lat_batch_wait);
+        self.batch_size.merge(&other.batch_size);
+        self.lat_queue.merge(&other.lat_queue);
+        self.lat_compute.merge(&other.lat_compute);
     }
 }
 
@@ -425,6 +662,72 @@ mod tests {
         assert_eq!(k.req("int8").unwrap().as_usize().unwrap(), 3);
         assert_eq!(k.req("int4").unwrap().as_usize().unwrap(), 0);
         assert_eq!(k.req("f32").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn hist_snapshot_merge_is_exact() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for us in [10u64, 20, 5000] {
+            a.record_us(us);
+        }
+        for us in [40u64, 100_000] {
+            b.record_us(us);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 5);
+        assert_eq!(m.sum_us, 10 + 20 + 5000 + 40 + 100_000);
+        assert_eq!(m.max_us, 100_000);
+        // Bucket-wise equality against recording everything into one
+        // histogram: merging loses nothing.
+        let both = Histogram::new();
+        for us in [10u64, 20, 5000, 40, 100_000] {
+            both.record_us(us);
+        }
+        assert_eq!(m, both.snapshot());
+    }
+
+    #[test]
+    fn hist_snapshot_json_round_trip() {
+        let h = Histogram::new();
+        for us in [1u64, 7, 300, 300, 9_000_000] {
+            h.record_us(us);
+        }
+        let snap = h.snapshot();
+        assert_eq!(HistSnapshot::from_json(&snap.to_json()), Some(snap.clone()));
+        assert_eq!(HistSnapshot::from_json(&snap.to_json_raw()), Some(snap));
+        // Objects without the sparse bucket field are not histograms.
+        assert_eq!(HistSnapshot::from_json(&Json::obj().set("count", 3usize)), None);
+    }
+
+    #[test]
+    fn metrics_snapshot_merge_sums_counters() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.count_cmd("quantize");
+        a.count_cmd("stats");
+        a.cache_hits.fetch_add(4, Ordering::Relaxed);
+        a.lat_all.record_us(100);
+        b.count_cmd("quantize");
+        b.cache_hits.fetch_add(1, Ordering::Relaxed);
+        b.conns_auth_failed.fetch_add(2, Ordering::Relaxed);
+        b.lat_all.record_us(200);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.requests_total(), 3);
+        assert_eq!(m.cache_hits, 5);
+        assert_eq!(m.conns_auth_failed, 2);
+        assert_eq!(m.lat_all.count, 2);
+        assert_eq!(m.lat_all.sum_us, 300);
+    }
+
+    #[test]
+    fn auth_failed_surfaces_in_conns_block() {
+        let m = Metrics::new();
+        m.conns_auth_failed.fetch_add(3, Ordering::Relaxed);
+        let j = m.conns_json();
+        assert_eq!(j.req("auth_failed").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

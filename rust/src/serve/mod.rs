@@ -75,6 +75,7 @@ pub mod flight;
 pub mod metrics;
 pub mod net;
 pub mod sched;
+pub mod shard;
 
 use anyhow::Result;
 use std::collections::HashMap;
@@ -131,6 +132,16 @@ pub struct EngineCfg {
     /// Per-connection request rate limit (token bucket, requests/second;
     /// 0 = unlimited).  Over-limit requests answer `busy` + `retry_ms`.
     pub conn_rps: u64,
+    /// Shared-secret auth (`--auth-token`): when set, every request at
+    /// the net layer must carry a matching `"auth"` field.  Enforced by
+    /// the protocol adapter and the shard router, not the engine — the
+    /// sync [`Engine::handle`] path stays unauthenticated.
+    pub auth_token: Option<String>,
+    /// Worker-shard identity `(index, total)` under a shard router.
+    /// Gates disk-tier writes to keys this shard owns on the consistent-
+    /// hash ring, so two shards never spill the same key concurrently to
+    /// a shared `--cache-dir`.  `None` (single-process) owns everything.
+    pub shard_slot: Option<(usize, usize)>,
 }
 
 impl Default for EngineCfg {
@@ -147,6 +158,8 @@ impl Default for EngineCfg {
             batch_window_us: 2_000,
             max_batch: 32,
             conn_rps: 0,
+            auth_token: None,
+            shard_slot: None,
         }
     }
 }
@@ -414,7 +427,12 @@ impl Engine {
                     .map(|m| (m.clone(), store.fingerprint(m)))
                     .collect();
                 let budget = (cfg.cache_disk_mb as u64).saturating_mul(1 << 20);
-                let d = DiskCache::open(dir, budget, &fps)?;
+                let d = match cfg.shard_slot {
+                    Some((index, total)) => {
+                        DiskCache::open_owned(dir, budget, &fps, index, total)?
+                    }
+                    None => DiskCache::open(dir, budget, &fps)?,
+                };
                 metrics
                     .disk_invalidated
                     .store(d.dropped_at_open() as u64, Ordering::Relaxed);

@@ -73,12 +73,77 @@ const FIRST_CONN: u64 = 1;
 const DRAIN_MAX: Duration = Duration::from_secs(2);
 
 #[cfg(unix)]
-fn raw_fd<T: std::os::fd::AsRawFd>(x: &T) -> RawFd {
+pub(crate) fn raw_fd<T: std::os::fd::AsRawFd>(x: &T) -> RawFd {
     x.as_raw_fd()
 }
 #[cfg(not(unix))]
-fn raw_fd<T>(_: &T) -> RawFd {
+pub(crate) fn raw_fd<T>(_: &T) -> RawFd {
     -1
+}
+
+/// Constant-time equality for the shared-secret `auth` field: the loop
+/// shape depends only on the input lengths, never on where the strings
+/// first differ, so response timing cannot be used to guess the token
+/// byte by byte.
+pub fn ct_eq(a: &str, b: &str) -> bool {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let mut diff = a.len() ^ b.len();
+    for i in 0..a.len().max(b.len()) {
+        let x = a.get(i).copied().unwrap_or(0);
+        let y = b.get(i).copied().unwrap_or(0);
+        diff |= (x ^ y) as usize;
+    }
+    diff == 0
+}
+
+/// First poller token reserved for upstream sockets (the router's
+/// shard-pool connections).  Client connection ids are monotonically
+/// assigned from [`FIRST_CONN`] and never reused, so they can never
+/// collide with this range in any realistic process lifetime; the
+/// poller's internal wake token (`usize::MAX`) is filtered before
+/// events surface, so it cannot collide either.
+pub const UPSTREAM_BASE: usize = usize::MAX / 2;
+
+/// Hook for a second family of sockets driven by the same reactor loop —
+/// how the shard router multiplexes its per-shard connection pools onto
+/// the one thread that also owns the client sockets. All methods have
+/// no-op defaults; [`NoUpstream`] is the plain-server instantiation.
+pub trait Upstream {
+    /// Called once, after the listener is registered and before the
+    /// first poll: register pre-existing upstream sockets.
+    fn on_start(&mut self, _poller: &Poller) {}
+
+    /// Poller event for a token in the upstream range.
+    fn on_event(&mut self, _poller: &Poller, _token: usize, _readable: bool, _writable: bool) {}
+
+    /// Called every loop iteration (after events, before responses are
+    /// pumped to clients): flush queued upstream writes, run timers,
+    /// sync poller registrations.
+    fn on_tick(&mut self, _poller: &Poller) {}
+
+    /// Upper bound on the poll timeout — lets the upstream run periodic
+    /// timers (health probes) even when no socket fires.
+    fn max_timeout(&self) -> Option<Duration> {
+        None
+    }
+
+    /// Called after the loop exits, *before* the client-side drain:
+    /// collect every response still owed by upstream sockets so the
+    /// drain has them to deliver (drain itself ignores poller events).
+    fn on_stop(&mut self, _poller: &Poller) {}
+}
+
+/// No upstream sockets: the plain single-process server.
+pub struct NoUpstream;
+
+impl Upstream for NoUpstream {}
+
+fn min_timeout(a: Option<Duration>, b: Option<Duration>) -> Option<Duration> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.min(y)),
+        (x, None) => x,
+        (None, y) => y,
+    }
 }
 
 /// Net-layer configuration (carved out of `EngineCfg` by the server).
@@ -179,18 +244,38 @@ impl Reactor {
     /// on the reactor thread with each framed request line; it must arrange
     /// for its `Done` argument to be called exactly once (inline or from
     /// another thread) and must not block.
-    pub fn run<D: FnMut(&str, Done)>(mut self, mut dispatch: D) -> io::Result<()> {
+    pub fn run<D: FnMut(&str, Done)>(self, dispatch: D) -> io::Result<()> {
+        self.run_with_upstream(dispatch, &mut NoUpstream)
+    }
+
+    /// [`Reactor::run`], with a second family of sockets (tokens in the
+    /// [`UPSTREAM_BASE`] range) multiplexed onto the same thread — the
+    /// shard router's connections to its workers.  Per iteration:
+    /// upstream events fire first, then `on_tick` (flush queued upstream
+    /// writes, timers, failure handling — anything that completes a
+    /// response enqueues it on the completion channel), then `pump`
+    /// delivers completed responses and dispatches newly framed client
+    /// lines.
+    pub fn run_with_upstream<D: FnMut(&str, Done), U: Upstream>(
+        mut self,
+        mut dispatch: D,
+        upstream: &mut U,
+    ) -> io::Result<()> {
         self.listener.set_nonblocking(true)?;
         self.poller
             .register(raw_fd(&self.listener), LISTEN, Interest::READ)?;
+        upstream.on_start(&self.poller);
         let mut events = Vec::new();
         while !self.stop.load(Ordering::SeqCst) {
-            self.poller.wait(&mut events, self.poll_timeout())?;
+            let timeout = min_timeout(self.poll_timeout(), upstream.max_timeout());
+            self.poller.wait(&mut events, timeout)?;
             let now = Instant::now();
             let mut ready: VecDeque<u64> = VecDeque::new();
             for ev in &events {
                 if ev.token == LISTEN {
                     self.accept_ready(now);
+                } else if ev.token >= UPSTREAM_BASE {
+                    upstream.on_event(&self.poller, ev.token, ev.readable, ev.writable);
                 } else {
                     let id = ev.token as u64;
                     if let Some(c) = self.conns.get_mut(&id) {
@@ -204,10 +289,15 @@ impl Reactor {
                     }
                 }
             }
+            upstream.on_tick(&self.poller);
             self.pump(ready, &mut dispatch);
             self.reap_idle(now);
             self.update_gauges();
         }
+        // Let the upstream settle every response it still owes (shard
+        // drain) while the poller is still alive; the client-side drain
+        // below only flushes, it no longer dispatches.
+        upstream.on_stop(&self.poller);
         self.drain();
         Ok(())
     }
@@ -638,6 +728,16 @@ mod tests {
         }
         stop.request();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn ct_eq_compares_exactly() {
+        assert!(ct_eq("secret", "secret"));
+        assert!(ct_eq("", ""));
+        assert!(!ct_eq("secret", "secrex"));
+        assert!(!ct_eq("secret", "secre"));
+        assert!(!ct_eq("secret", "secretx"));
+        assert!(!ct_eq("", "x"));
     }
 
     #[test]

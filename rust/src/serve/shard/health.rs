@@ -1,0 +1,133 @@
+//! Per-shard health probing as a pure state machine.
+//!
+//! The router owns the sockets; this module only decides *when* to send
+//! a probe and *whether* a shard counts as hung. A probe is a `stats`
+//! request on the shard's dedicated health connection; any response (the
+//! content is irrelevant here — the rollup reads it separately) clears
+//! the pending probe. A shard is `overdue` when a probe has been
+//! outstanding longer than the configured timeout — the router treats
+//! that exactly like a socket error: fail pending requests with
+//! `busy`, kill, respawn.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy)]
+pub struct HealthCfg {
+    /// How often to probe an idle-looking shard.
+    pub period: Duration,
+    /// How long a probe may stay unanswered before the shard is hung.
+    pub timeout: Duration,
+}
+
+impl Default for HealthCfg {
+    fn default() -> HealthCfg {
+        HealthCfg {
+            period: Duration::from_millis(500),
+            timeout: Duration::from_millis(2_000),
+        }
+    }
+}
+
+pub struct HealthState {
+    cfg: HealthCfg,
+    /// Last time we saw *any* response from the shard.
+    last_ok: Instant,
+    /// When the outstanding probe was sent, if one is in flight.
+    pending_since: Option<Instant>,
+}
+
+impl HealthState {
+    pub fn new(cfg: HealthCfg, now: Instant) -> HealthState {
+        HealthState {
+            cfg,
+            last_ok: now,
+            pending_since: None,
+        }
+    }
+
+    /// Should the router send a probe now? Never while one is already
+    /// outstanding — overdue detection handles the stuck case.
+    pub fn due(&self, now: Instant) -> bool {
+        self.pending_since.is_none() && now.duration_since(self.last_ok) >= self.cfg.period
+    }
+
+    pub fn on_probe_sent(&mut self, now: Instant) {
+        self.pending_since = Some(now);
+    }
+
+    /// Any response (probe reply or regular traffic) proves liveness.
+    pub fn on_response(&mut self, now: Instant) {
+        self.last_ok = now;
+        self.pending_since = None;
+    }
+
+    /// True when the outstanding probe has aged past the timeout.
+    pub fn overdue(&self, now: Instant) -> bool {
+        matches!(self.pending_since, Some(t) if now.duration_since(t) >= self.cfg.timeout)
+    }
+
+    /// Reset after a respawn: the new process starts with a clean slate.
+    pub fn reset(&mut self, now: Instant) {
+        self.last_ok = now;
+        self.pending_since = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthCfg {
+        HealthCfg {
+            period: Duration::from_millis(100),
+            timeout: Duration::from_millis(300),
+        }
+    }
+
+    #[test]
+    fn probe_due_after_period_of_silence() {
+        let t0 = Instant::now();
+        let h = HealthState::new(cfg(), t0);
+        assert!(!h.due(t0));
+        assert!(!h.due(t0 + Duration::from_millis(50)));
+        assert!(h.due(t0 + Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn traffic_defers_probes() {
+        let t0 = Instant::now();
+        let mut h = HealthState::new(cfg(), t0);
+        h.on_response(t0 + Duration::from_millis(90));
+        assert!(!h.due(t0 + Duration::from_millis(150)));
+        assert!(h.due(t0 + Duration::from_millis(190)));
+    }
+
+    #[test]
+    fn no_double_probe_while_pending() {
+        let t0 = Instant::now();
+        let mut h = HealthState::new(cfg(), t0);
+        h.on_probe_sent(t0 + Duration::from_millis(100));
+        assert!(!h.due(t0 + Duration::from_millis(250)));
+    }
+
+    #[test]
+    fn overdue_after_timeout_then_cleared_by_response() {
+        let t0 = Instant::now();
+        let mut h = HealthState::new(cfg(), t0);
+        h.on_probe_sent(t0);
+        assert!(!h.overdue(t0 + Duration::from_millis(299)));
+        assert!(h.overdue(t0 + Duration::from_millis(300)));
+        h.on_response(t0 + Duration::from_millis(310));
+        assert!(!h.overdue(t0 + Duration::from_millis(1_000)));
+    }
+
+    #[test]
+    fn reset_clears_pending_and_restarts_clock() {
+        let t0 = Instant::now();
+        let mut h = HealthState::new(cfg(), t0);
+        h.on_probe_sent(t0);
+        h.reset(t0 + Duration::from_millis(500));
+        assert!(!h.overdue(t0 + Duration::from_millis(900)));
+        assert!(h.due(t0 + Duration::from_millis(600)));
+    }
+}

@@ -1,0 +1,167 @@
+//! Sharded multi-process serving.
+//!
+//! The single-process engine (PRs 4-7) scales to one pool on one set of
+//! cores. This module adds the horizontal step: a thin single-threaded
+//! **router** process that consistent-hash-routes each request — on
+//! `QuantSpec::key_hash` plus the model name — to one of N **worker
+//! shard** processes, each running its own full `serve::Engine` behind
+//! the existing line-JSON protocol on a loopback socket.
+//!
+//! Layout:
+//! - [`Ring`] (here): the consistent-hash ring. Pure data, shared by the
+//!   router (request routing) and the disk tier (spill ownership).
+//! - [`router`]: the router process — shard spawning, per-shard pipelined
+//!   connection pools, busy pass-through, cluster stats fan-out, failure
+//!   drain and respawn.
+//! - [`health`]: pure probe/timeout state machine per shard.
+//! - [`rollup`]: merges N same-shape per-shard `stats` JSON documents
+//!   into one cluster view (counters sum, histograms merge bucket-wise).
+//!
+//! Ownership invariant: every routable key has exactly one *owner* shard
+//! under the all-alive ring. Workers only spill keys they own to the
+//! shared `--cache-dir`, so two processes never write the same artifact
+//! concurrently even while routing has failed over around a dead shard.
+
+pub mod health;
+pub mod rollup;
+pub mod router;
+
+pub use router::{serve_router, spawn_router, RouterCfg, RouterHandle};
+
+use crate::util::fnv1a;
+
+/// Virtual nodes per shard on the ring. Enough to keep the per-shard
+/// load spread within a few percent at small N without making ring
+/// construction or the owner test measurably slow.
+pub const VNODES: usize = 64;
+
+/// The point on the ring a request hashes to. Combines the model name
+/// with the spec's canonical-form hash so distinct specs for the same
+/// model still spread across shards, while identical (model, spec)
+/// pairs always land on the same shard (preserving cache locality).
+pub fn request_point(model: &str, spec_hash: u64) -> u64 {
+    fnv1a(format!("{model}\u{1}{spec_hash:016x}").as_bytes())
+}
+
+/// Consistent-hash ring over `shards` shard indices, `vnodes` virtual
+/// points each. Points are FNV-1a hashes of a per-shard-per-vnode label,
+/// so the ring is a pure function of (shards, vnodes): every process
+/// that builds it — router, each worker's disk filter, tests — agrees
+/// on ownership without any coordination.
+pub struct Ring {
+    /// Sorted (point, shard) pairs.
+    points: Vec<(u64, usize)>,
+    shards: usize,
+}
+
+impl Ring {
+    pub fn new(shards: usize, vnodes: usize) -> Ring {
+        assert!(shards > 0, "ring needs at least one shard");
+        let mut points: Vec<(u64, usize)> = (0..shards)
+            .flat_map(|s| (0..vnodes).map(move |v| (fnv1a(format!("shard-{s}-vnode-{v}").as_bytes()), s)))
+            .collect();
+        points.sort_unstable();
+        Ring { points, shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// First ring point at or after `point` (wrapping) whose shard is
+    /// alive. Returns None only when no shard is alive. Dead shards are
+    /// skipped in ring order, so a single death re-targets exactly the
+    /// dead shard's ranges and leaves every other key's owner unchanged.
+    pub fn route(&self, point: u64, alive: &[bool]) -> Option<usize> {
+        debug_assert_eq!(alive.len(), self.shards);
+        if !alive.iter().any(|&a| a) {
+            return None;
+        }
+        let start = self.points.partition_point(|&(p, _)| p < point);
+        let n = self.points.len();
+        for i in 0..n {
+            let (_, shard) = self.points[(start + i) % n];
+            if alive[shard] {
+                return Some(shard);
+            }
+        }
+        None
+    }
+
+    /// Owner under the all-alive ring: the shard allowed to spill this
+    /// key to the shared disk tier. Stable across shard deaths — a
+    /// failed-over key is computed by the covering shard but *not*
+    /// spilled by it, so writes never race.
+    pub fn owner(&self, point: u64) -> usize {
+        let start = self.points.partition_point(|&(p, _)| p < point);
+        self.points[start % self.points.len()].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_route_is_stable_across_reconstruction() {
+        let a = Ring::new(5, VNODES);
+        let b = Ring::new(5, VNODES);
+        let alive = vec![true; 5];
+        for k in 0..1000u64 {
+            let p = request_point("m", k.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            assert_eq!(a.route(p, &alive), b.route(p, &alive));
+            assert_eq!(a.owner(p), b.owner(p));
+        }
+    }
+
+    #[test]
+    fn ring_spreads_load_roughly_evenly() {
+        let ring = Ring::new(4, VNODES);
+        let alive = vec![true; 4];
+        let mut counts = [0usize; 4];
+        for k in 0..4000u64 {
+            let p = request_point("model", k.wrapping_mul(0x100_0000_01b3));
+            counts[ring.route(p, &alive).unwrap()] += 1;
+        }
+        // With 64 vnodes each shard should land well within 2x of fair
+        // share (1000); the real spread is much tighter.
+        for &c in &counts {
+            assert!(c > 400 && c < 2000, "unbalanced ring: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn shard_death_retargets_only_its_own_range() {
+        let ring = Ring::new(4, VNODES);
+        let all = vec![true; 4];
+        let mut one_dead = vec![true; 4];
+        one_dead[2] = false;
+        for k in 0..2000u64 {
+            let p = request_point("m", k.wrapping_mul(0xdead_beef_cafe));
+            let before = ring.route(p, &all).unwrap();
+            let after = ring.route(p, &one_dead).unwrap();
+            if before != 2 {
+                assert_eq!(before, after, "key not owned by dead shard moved");
+            } else {
+                assert_ne!(after, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn route_none_when_all_dead() {
+        let ring = Ring::new(3, VNODES);
+        assert_eq!(ring.route(42, &[false, false, false]), None);
+        assert_eq!(ring.route(42, &[false, true, false]), Some(1));
+    }
+
+    #[test]
+    fn owner_matches_all_alive_route() {
+        let ring = Ring::new(6, VNODES);
+        let alive = vec![true; 6];
+        for k in 0..500u64 {
+            let p = request_point("net", k.wrapping_mul(7919));
+            assert_eq!(ring.owner(p), ring.route(p, &alive).unwrap());
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Cluster stats rollup: merge N same-shape per-shard `stats` documents
+//! into one aggregate with the *same* shape, so every existing consumer
+//! (bench-serve probes, the CI smoke steps, humans with `nc`) reads a
+//! sharded deployment exactly like a single process.
+//!
+//! Merge rules, applied recursively:
+//! - objects carrying a `"buckets"` key are serialized histograms —
+//!   merged bucket-wise via [`HistSnapshot`] and re-emitted with
+//!   recomputed quantiles (summing p95s would be meaningless);
+//! - numbers sum (counters, and capacity fields like `workers`, where
+//!   the sum *is* the cluster capacity), except `uptime_s` which takes
+//!   the max;
+//! - `mean_batch` is recomputed from the summed `inputs`/`batches`
+//!   rather than averaged;
+//! - booleans OR, strings take the first document's value.
+
+use crate::serve::metrics::HistSnapshot;
+use crate::util::json::Json;
+
+/// Keys where summing across shards is wrong and max is the honest
+/// aggregate.
+fn takes_max(key: &str) -> bool {
+    key == "uptime_s"
+}
+
+/// Merge same-shape stats documents. Returns `Json::Null` for an empty
+/// slice; a single document passes through unchanged (modulo histogram
+/// re-emission, which is shape-preserving).
+pub fn merge_stats(docs: &[Json]) -> Json {
+    match docs.len() {
+        0 => Json::Null,
+        _ => merge_values("", &docs.iter().collect::<Vec<_>>()),
+    }
+}
+
+fn merge_values(key: &str, vals: &[&Json]) -> Json {
+    let first = vals[0];
+    if first.get("buckets").is_some() {
+        return merge_hists(first, vals);
+    }
+    if first.as_obj().is_ok() {
+        // Recurse over the union of keys, first-document order first so
+        // the merged object reads like any single shard's.
+        let mut keys: Vec<&str> = Vec::new();
+        for v in vals {
+            if let Ok(o) = v.as_obj() {
+                for (k, _) in o {
+                    if !keys.contains(&k.as_str()) {
+                        keys.push(k);
+                    }
+                }
+            }
+        }
+        let mut out = Json::obj();
+        for k in keys {
+            let sub: Vec<&Json> = vals.iter().filter_map(|v| v.get(k)).collect();
+            if !sub.is_empty() {
+                out = out.set(k, merge_values(k, &sub));
+            }
+        }
+        return fixup_means(out);
+    }
+    match first {
+        Json::Num(_) => {
+            let nums = vals.iter().filter_map(|v| v.as_f64().ok());
+            let n = if takes_max(key) {
+                nums.fold(f64::MIN, f64::max)
+            } else {
+                nums.sum()
+            };
+            Json::Num(n)
+        }
+        Json::Bool(_) => Json::Bool(vals.iter().any(|v| v.as_bool().unwrap_or(false))),
+        _ => first.clone(),
+    }
+}
+
+/// Merge serialized histograms and re-emit in the same shape the inputs
+/// used (`p50_ms` marks the millisecond flavor, otherwise raw units).
+fn merge_hists(first: &Json, vals: &[&Json]) -> Json {
+    let mut acc = HistSnapshot::default();
+    for v in vals {
+        if let Some(h) = HistSnapshot::from_json(v) {
+            acc.merge(&h);
+        }
+    }
+    if first.get("p50_ms").is_some() {
+        acc.to_json()
+    } else {
+        acc.to_json_raw()
+    }
+}
+
+/// Derived means must be recomputed from the summed numerators and
+/// denominators, not summed themselves.
+fn fixup_means(obj: Json) -> Json {
+    if obj.get("mean_batch").is_none() {
+        return obj;
+    }
+    let inputs = obj.get("inputs").and_then(|v| v.as_f64().ok());
+    let batches = obj.get("batches").and_then(|v| v.as_f64().ok());
+    match (inputs, batches) {
+        (Some(i), Some(b)) => {
+            let mean = if b > 0.0 { i / b } else { 0.0 };
+            obj.set("mean_batch", mean)
+        }
+        _ => obj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::metrics::Histogram;
+
+    fn num(doc: &Json, path: &[&str]) -> f64 {
+        let mut v = doc;
+        for k in path {
+            v = v.get(k).unwrap();
+        }
+        v.as_f64().unwrap()
+    }
+
+    fn shard_doc(reqs: f64, hits: f64, lat_ms: &[u64]) -> Json {
+        let h = Histogram::new();
+        for &ms in lat_ms {
+            h.record_ms(ms as f64);
+        }
+        Json::obj()
+            .set("ok", true)
+            .set(
+                "metrics",
+                Json::obj()
+                    .set("uptime_s", 10.0_f64)
+                    .set("requests_total", reqs)
+                    .set("latency", Json::obj().set("all", h.to_json())),
+            )
+            .set("cache", Json::obj().set("hits", hits).set("enabled", false))
+    }
+
+    #[test]
+    fn counters_sum_and_uptime_maxes() {
+        let merged = merge_stats(&[shard_doc(10.0, 3.0, &[1]), shard_doc(32.0, 4.0, &[2])]);
+        assert_eq!(num(&merged, &["metrics", "requests_total"]), 42.0);
+        assert_eq!(num(&merged, &["cache", "hits"]), 7.0);
+        assert_eq!(num(&merged, &["metrics", "uptime_s"]), 10.0);
+        assert!(merged.get("ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn histograms_merge_bucket_wise() {
+        let merged =
+            merge_stats(&[shard_doc(1.0, 0.0, &[1, 1, 1]), shard_doc(1.0, 0.0, &[100, 100])]);
+        assert_eq!(num(&merged, &["metrics", "latency", "all", "count"]), 5.0);
+        // Max of the merged histogram is the max across shards, and the
+        // median stays near the majority cluster of ~1ms samples.
+        assert!(num(&merged, &["metrics", "latency", "all", "max_ms"]) >= 100.0);
+        assert!(num(&merged, &["metrics", "latency", "all", "p50_ms"]) < 100.0);
+    }
+
+    #[test]
+    fn single_doc_counters_pass_through() {
+        let merged = merge_stats(&[shard_doc(7.0, 2.0, &[5])]);
+        assert_eq!(num(&merged, &["metrics", "requests_total"]), 7.0);
+    }
+
+    #[test]
+    fn empty_slice_merges_to_null() {
+        assert!(matches!(merge_stats(&[]), Json::Null));
+    }
+
+    #[test]
+    fn mean_batch_recomputed_from_sums() {
+        let d1 = Json::obj()
+            .set("inputs", 10.0_f64)
+            .set("batches", 2.0_f64)
+            .set("mean_batch", 5.0_f64);
+        let d2 = Json::obj()
+            .set("inputs", 2.0_f64)
+            .set("batches", 2.0_f64)
+            .set("mean_batch", 1.0_f64);
+        let merged = merge_stats(&[d1, d2]);
+        assert_eq!(num(&merged, &["mean_batch"]), 3.0);
+    }
+}

@@ -1,0 +1,924 @@
+//! The router process: client-facing reactor + per-shard connection
+//! pools, multiplexed on one thread.
+//!
+//! The router spawns its N worker shards (`squant serve --shard-worker I
+//! --shards N --addr 127.0.0.1:0`), reads each worker's one-line JSON
+//! address announcement from its piped stdout, and opens a small pool of
+//! persistent loopback connections per shard: connection 0 carries only
+//! health probes (`stats` pings — kept free of data traffic so a shard
+//! that is busy computing still proves liveness), the rest carry
+//! pipelined request traffic in strict FIFO order (the line protocol has
+//! no request ids, so the k-th response on a connection answers the k-th
+//! request sent on it).
+//!
+//! Routing: `(model, QuantSpec::key_hash)` → [`super::request_point`] →
+//! [`super::Ring::route`] over the alive mask. Requests that do not
+//! parse into a spec (bad JSON fields, missing model) hash the raw line
+//! instead — they still land deterministically on one shard, whose
+//! engine then produces the same error a single-process server would.
+//!
+//! Failure handling: a socket error/EOF on any pool connection, or an
+//! overdue health probe, marks the shard down. Every response the shard
+//! still owes is answered `busy` + `retry_ms` (the client connection
+//! stays open), the child is killed and reaped, and a fresh worker is
+//! respawned; until it is up, the ring's alive mask re-targets only the
+//! dead shard's hash ranges.
+//!
+//! Shutdown: `on_stop` runs before the reactor's client drain — it
+//! collects every response still owed by the shards (bounded by
+//! [`STOP_BUDGET`]; anything not answered in time gets `busy`), then
+//! sends each shard a `shutdown` and waits for the processes (their own
+//! engines run `wait_idle`, flushing disk spills). Only then does the
+//! reactor flush client sockets and exit.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::rc::Rc;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::quant::spec::QuantSpec;
+use crate::serve::metrics::Metrics;
+use crate::serve::net::poller::{Interest, Poller};
+use crate::serve::net::{
+    ct_eq, raw_fd, NetCfg, Reactor, StopHandle, Upstream, UPSTREAM_BASE,
+};
+use crate::serve::{Done, EngineCfg, ServeError};
+use crate::util::fnv1a;
+use crate::util::json::Json;
+
+use super::health::{HealthCfg, HealthState};
+use super::rollup::merge_stats;
+use super::{request_point, Ring, VNODES};
+
+/// Pool connections per shard: one health-probe-only + the data conns.
+const DATA_CONNS: usize = 2;
+const CONNS_PER_SHARD: usize = DATA_CONNS + 1;
+/// Backoff hint sent with `busy` answers for a dead shard's in-flight
+/// requests — long enough for the respawn to come up.
+const RETRY_MS: u64 = 50;
+/// Wait between respawn attempts after a spawn failure.
+const RESPAWN_BACKOFF: Duration = Duration::from_millis(500);
+/// Poll-timeout cap while routing: bounds health/respawn timer latency.
+const TICK: Duration = Duration::from_millis(50);
+/// Graceful-stop budget for collecting owed shard responses and waiting
+/// worker exits; chosen to keep total router shutdown under a second.
+const STOP_BUDGET: Duration = Duration::from_millis(850);
+
+/// Router configuration. `engine` doubles as the worker configuration
+/// (forwarded as CLI flags) and the source of the router's own net
+/// limits (`max_conns`, idle timeout, `conn_rps`, auth token).
+#[derive(Clone)]
+pub struct RouterCfg {
+    pub shards: usize,
+    /// Address the router listens on.
+    pub addr: String,
+    /// Binary to spawn workers from. Tests pass
+    /// `env!("CARGO_BIN_EXE_squant")`; the CLI uses `current_exe()`.
+    pub exe: PathBuf,
+    /// Model-source flags forwarded verbatim to workers
+    /// (`--artifacts <dir>`, plus `--tiny` for the in-memory store).
+    pub model_args: Vec<String>,
+    pub engine: EngineCfg,
+    pub health: HealthCfg,
+}
+
+/// Completion for one forwarded request, run on the router thread.
+/// Unlike the client-facing `Done` this is not `Send` — it may capture
+/// `Rc` fan-in state (cluster stats) — and it receives the router core
+/// so a final reply can read cluster state.
+type ShardDone = Box<dyn FnOnce(&mut RouterCore, ShardReply)>;
+
+enum ShardReply {
+    Ok(Json),
+    /// The shard died before answering.
+    Failed,
+}
+
+struct ShardConn {
+    stream: TcpStream,
+    token: usize,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// FIFO of completions, one per request written and not yet answered.
+    pending: VecDeque<ShardDone>,
+    registered: Option<Interest>,
+}
+
+impl ShardConn {
+    fn want(&self) -> Interest {
+        Interest::rw(true, !self.wbuf.is_empty())
+    }
+
+    /// Queue one request line (newline appended) and its completion.
+    fn send(&mut self, line: &str, done: ShardDone) -> io::Result<()> {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+        self.pending.push_back(done);
+        self.flush()
+    }
+
+    /// Nonblocking flush of the write queue; `Err` is fatal.
+    fn flush(&mut self) -> io::Result<()> {
+        while !self.wbuf.is_empty() {
+            match self.stream.write(&self.wbuf) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    self.wbuf.drain(..n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Nonblocking read; returns the complete lines buffered so far.
+    /// `Err` (including clean EOF) is fatal for the shard.
+    fn read_lines(&mut self) -> io::Result<Vec<String>> {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => return Err(io::ErrorKind::UnexpectedEof.into()),
+                Ok(n) => self.rbuf.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(self.take_lines())
+    }
+
+    fn take_lines(&mut self) -> Vec<String> {
+        let mut lines = Vec::new();
+        while let Some(pos) = self.rbuf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = self.rbuf.drain(..=pos).collect();
+            lines.push(String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned());
+        }
+        lines
+    }
+
+    /// Blocking response collection during graceful stop: read until
+    /// every pending completion is answered or `deadline` passes.
+    /// Returns the completions to run; leftovers stay in `pending` for
+    /// the caller to fail.
+    fn drain_until(&mut self, deadline: Instant) -> Vec<(ShardDone, ShardReply)> {
+        let _ = self.flush();
+        let _ = self.stream.set_nonblocking(false);
+        let mut out = Vec::new();
+        let mut buf = [0u8; 16 * 1024];
+        while !self.pending.is_empty() {
+            for line in self.take_lines() {
+                let Some(done) = self.pending.pop_front() else { break };
+                let reply = Json::parse(line.trim())
+                    .map(ShardReply::Ok)
+                    .unwrap_or(ShardReply::Failed);
+                out.push((done, reply));
+            }
+            if self.pending.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let _ = self.stream.set_read_timeout(Some(deadline - now));
+            match self.stream.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => self.rbuf.extend_from_slice(&buf[..n]),
+            }
+        }
+        out
+    }
+}
+
+struct ShardProc {
+    child: Child,
+    /// Kept open for the process's lifetime: dropping it would close the
+    /// worker's stdout pipe (the worker only ever writes its one ready
+    /// line, but a closed pipe would turn any accidental print into a
+    /// SIGPIPE/panic).
+    _stdout: BufReader<ChildStdout>,
+    addr: SocketAddr,
+    conns: Vec<ShardConn>,
+    health: HealthState,
+    alive: bool,
+    next_respawn: Option<Instant>,
+}
+
+/// Spawn one worker, read its address announcement, open its pool.
+fn spawn_worker(cfg: &RouterCfg, index: usize) -> Result<ShardProc> {
+    let mut cmd = Command::new(&cfg.exe);
+    cmd.arg("serve")
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--shard-worker")
+        .arg(index.to_string())
+        .arg("--shards")
+        .arg(cfg.shards.to_string())
+        .args(&cfg.model_args)
+        .args(worker_flags(&cfg.engine))
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped());
+    let mut child = cmd.spawn().with_context(|| format!("spawning shard {index}"))?;
+    let mut stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+    // The worker binds its listener and announces the port *before*
+    // loading models / building the engine, so this read is near-instant.
+    let mut line = String::new();
+    stdout.read_line(&mut line)?;
+    let ready = Json::parse(line.trim())
+        .map_err(|e| anyhow!("shard {index} ready line: {e:#} ({line:?})"))?;
+    let addr: SocketAddr = ready.req("addr")?.as_str()?.parse()?;
+    let mut conns = Vec::with_capacity(CONNS_PER_SHARD);
+    for k in 0..CONNS_PER_SHARD {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to shard {index} at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true)?;
+        conns.push(ShardConn {
+            stream,
+            token: UPSTREAM_BASE + index * CONNS_PER_SHARD + k,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            pending: VecDeque::new(),
+            registered: None,
+        });
+    }
+    Ok(ShardProc {
+        child,
+        _stdout: stdout,
+        addr,
+        conns,
+        health: HealthState::new(cfg.health, Instant::now()),
+        alive: true,
+        next_respawn: None,
+    })
+}
+
+/// Worker-side engine flags derived from the shared configuration.
+/// Deliberately excluded: `--conn-rps` (client rate limiting happens at
+/// the router) and the idle timeout (the router's pool connections are
+/// long-lived and must never be reaped).
+fn worker_flags(e: &EngineCfg) -> Vec<String> {
+    let mut v: Vec<String> = vec![
+        "--workers".into(),
+        e.workers.to_string(),
+        "--queue-depth".into(),
+        e.queue_depth.to_string(),
+        "--cache-cap".into(),
+        e.cache_cap.to_string(),
+        "--cache-mb".into(),
+        e.cache_mb.to_string(),
+        "--cache-disk-mb".into(),
+        e.cache_disk_mb.to_string(),
+        "--max-conns".into(),
+        e.max_conns.to_string(),
+        "--idle-timeout-ms".into(),
+        "0".into(),
+        "--batch-window-us".into(),
+        e.batch_window_us.to_string(),
+        "--max-batch".into(),
+        e.max_batch.to_string(),
+    ];
+    if let Some(dir) = &e.cache_dir {
+        v.push("--cache-dir".into());
+        v.push(dir.display().to_string());
+    }
+    if let Some(token) = &e.auth_token {
+        v.push("--auth-token".into());
+        v.push(token.clone());
+    }
+    v
+}
+
+/// Cluster `stats` fan-in: one per client stats request, shared by the
+/// per-shard completions via `Rc`.
+struct FanState {
+    remaining: usize,
+    docs: Vec<(usize, Json)>,
+    respond: Option<Done>,
+}
+
+pub struct RouterCore {
+    cfg: RouterCfg,
+    ring: Ring,
+    shards: Vec<ShardProc>,
+    metrics: Arc<Metrics>,
+    respawns: u64,
+}
+
+impl RouterCore {
+    fn new(cfg: RouterCfg, metrics: Arc<Metrics>) -> Result<RouterCore> {
+        if cfg.shards == 0 {
+            bail!("--shards must be >= 1");
+        }
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            match spawn_worker(&cfg, i) {
+                Ok(sp) => shards.push(sp),
+                Err(e) => {
+                    // Fail-fast must not orphan the siblings already up.
+                    for sp in &mut shards {
+                        let _ = sp.child.kill();
+                        let _ = sp.child.wait();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(RouterCore {
+            ring: Ring::new(cfg.shards, VNODES),
+            cfg,
+            shards,
+            metrics,
+            respawns: 0,
+        })
+    }
+
+    fn alive_mask(&self) -> Vec<bool> {
+        self.shards.iter().map(|s| s.alive).collect()
+    }
+
+    fn auth_line(&self, cmd: &str) -> String {
+        let mut j = Json::obj().set("cmd", cmd);
+        if let Some(t) = &self.cfg.engine.auth_token {
+            j = j.set("auth", t.as_str());
+        }
+        j.dump()
+    }
+
+    /// One framed client request. Auth and parse errors answer inline;
+    /// `stats` fans out; everything else forwards raw to its shard.
+    pub fn dispatch(&mut self, line: &str, respond: Done, stop: &StopHandle) {
+        let req = match Json::parse(line) {
+            Ok(req) => req,
+            Err(e) => {
+                respond(Json::obj().set("ok", false).set("error", format!("{e:#}")));
+                return;
+            }
+        };
+        if let Some(token) = &self.cfg.engine.auth_token {
+            let ok = req
+                .get("auth")
+                .and_then(|a| a.as_str().ok())
+                .map(|a| ct_eq(a, token))
+                .unwrap_or(false);
+            if !ok {
+                self.metrics.conns_auth_failed.fetch_add(1, Ordering::Relaxed);
+                respond(Json::obj().set("ok", false).set("error", "auth"));
+                return;
+            }
+        }
+        let cmd = req.get("cmd").and_then(|c| c.as_str().ok()).unwrap_or("");
+        match cmd {
+            "shutdown" => {
+                stop.request();
+                respond(Json::obj().set("ok", true).set("bye", true));
+            }
+            "stats" => self.cluster_stats(respond),
+            "shard-kill" => self.shard_kill(&req, respond),
+            "models" => {
+                // Model listing is identical on every shard; ask the
+                // first alive one.
+                match self.shards.iter().position(|s| s.alive) {
+                    Some(s) => self.forward(s, line, data_done(respond)),
+                    None => respond(ServeError::Busy { retry_ms: RETRY_MS }.to_json()),
+                }
+            }
+            _ => {
+                let point = route_point(&req, line);
+                match self.ring.route(point, &self.alive_mask()) {
+                    Some(s) => self.forward(s, line, data_done(respond)),
+                    None => respond(ServeError::Busy { retry_ms: RETRY_MS }.to_json()),
+                }
+            }
+        }
+    }
+
+    /// Queue `line` on the shard's least-loaded data connection. A dead
+    /// target fails the completion immediately (never leaves it parked
+    /// on a connection about to be torn down).
+    fn forward(&mut self, shard: usize, line: &str, done: ShardDone) {
+        if !self.shards[shard].alive {
+            done(self, ShardReply::Failed);
+            return;
+        }
+        let sp = &mut self.shards[shard];
+        let k = (1..sp.conns.len())
+            .min_by_key(|&k| sp.conns[k].pending.len())
+            .unwrap_or(0);
+        if sp.conns[k].send(line, done).is_err() {
+            self.mark_down(shard);
+        }
+    }
+
+    /// Chaos verb for tests and the bench's kill injection:
+    /// `{"cmd":"shard-kill","shard":I}` force-kills worker I. The normal
+    /// failure path (fail pending with `busy`, respawn, re-target) takes
+    /// over exactly as for an organic crash.
+    fn shard_kill(&mut self, req: &Json, respond: Done) {
+        let Some(i) = req.get("shard").and_then(|s| s.as_usize().ok()) else {
+            respond(Json::obj().set("ok", false).set("error", "shard-kill needs 'shard'"));
+            return;
+        };
+        if i >= self.shards.len() {
+            respond(Json::obj().set("ok", false).set("error", "no such shard"));
+            return;
+        }
+        let _ = self.shards[i].child.kill();
+        self.mark_down(i);
+        respond(Json::obj().set("ok", true).set("killed", i));
+    }
+
+    /// Fan a `stats` request to every alive shard; when the last reply
+    /// (or failure) lands, merge and respond.
+    fn cluster_stats(&mut self, respond: Done) {
+        let alive: Vec<usize> =
+            (0..self.shards.len()).filter(|&s| self.shards[s].alive).collect();
+        if alive.is_empty() {
+            let doc = self.cluster_doc(Vec::new());
+            respond(doc);
+            return;
+        }
+        let fan = Rc::new(RefCell::new(FanState {
+            remaining: alive.len(),
+            docs: Vec::new(),
+            respond: Some(respond),
+        }));
+        let line = self.auth_line("stats");
+        for s in alive {
+            let fan = Rc::clone(&fan);
+            let done: ShardDone = Box::new(move |core, reply| {
+                let mut f = fan.borrow_mut();
+                if let ShardReply::Ok(doc) = reply {
+                    f.docs.push((s, doc));
+                }
+                f.remaining -= 1;
+                if f.remaining == 0 {
+                    let docs = std::mem::take(&mut f.docs);
+                    let respond = f.respond.take().expect("fan answers once");
+                    drop(f);
+                    respond(core.cluster_doc(docs));
+                }
+            });
+            self.forward(s, &line, done);
+        }
+    }
+
+    /// The cluster stats document: the per-shard docs merged into the
+    /// single-process shape (counters summed, histograms merged — see
+    /// `rollup`), with `conns` overridden by the router's own
+    /// client-facing gauges and a `cluster` block appended.
+    fn cluster_doc(&mut self, docs: Vec<(usize, Json)>) -> Json {
+        let merged = merge_stats(&docs.iter().map(|(_, d)| d.clone()).collect::<Vec<_>>());
+        let out = match merged {
+            Json::Obj(_) => merged,
+            _ => Json::obj(),
+        };
+        let shard_num = |s: usize, key: &str| -> usize {
+            docs.iter()
+                .find(|(i, _)| *i == s)
+                .and_then(|(_, d)| d.get("metrics")?.get(key))
+                .and_then(|v| v.as_usize().ok())
+                .unwrap_or(0)
+        };
+        let mut per = Vec::new();
+        for (i, sp) in self.shards.iter().enumerate() {
+            per.push(
+                Json::obj()
+                    .set("shard", i)
+                    .set("alive", sp.alive)
+                    .set("pid", sp.child.id() as usize)
+                    .set("addr", sp.addr.to_string())
+                    .set("requests_total", shard_num(i, "requests_total"))
+                    .set("errors", shard_num(i, "errors")),
+            );
+        }
+        let alive = self.shards.iter().filter(|s| s.alive).count();
+        out.set("ok", true)
+            .set("conns", self.metrics.conns_json())
+            .set(
+                "cluster",
+                Json::obj()
+                    .set("shards", self.shards.len())
+                    .set("alive", alive)
+                    .set("respawns", self.respawns as usize)
+                    .set("per_shard", Json::Arr(per)),
+            )
+    }
+
+    /// Declare a shard dead: every response it still owes answers `busy`
+    /// + `retry_ms` (clients retry; their connections never drop). The
+    /// sockets and process are reaped — and a replacement spawned — by
+    /// `reap_down` on the next tick, when the poller is in reach.
+    fn mark_down(&mut self, s: usize) {
+        if !self.shards[s].alive {
+            return;
+        }
+        self.shards[s].alive = false;
+        let mut owed: Vec<ShardDone> = Vec::new();
+        for c in &mut self.shards[s].conns {
+            owed.extend(c.pending.drain(..));
+            c.wbuf.clear();
+        }
+        for done in owed {
+            done(self, ShardReply::Failed);
+        }
+    }
+
+    /// Tear down a dead shard's sockets/process and try to respawn it.
+    fn reap_down(&mut self, s: usize, poller: &Poller, now: Instant) {
+        if self.shards[s].alive {
+            return;
+        }
+        if !self.shards[s].conns.is_empty() {
+            // Pending completions were failed by mark_down; drain
+            // defensively so a responder can never be silently dropped.
+            let owed: Vec<ShardDone> = self.shards[s]
+                .conns
+                .iter_mut()
+                .flat_map(|c| c.pending.drain(..))
+                .collect();
+            for done in owed {
+                done(self, ShardReply::Failed);
+            }
+            for c in &self.shards[s].conns {
+                if c.registered.is_some() {
+                    let _ = poller.deregister(raw_fd(&c.stream), c.token);
+                }
+            }
+            self.shards[s].conns.clear();
+            let _ = self.shards[s].child.kill();
+            let _ = self.shards[s].child.wait();
+        }
+        if let Some(t) = self.shards[s].next_respawn {
+            if now < t {
+                return;
+            }
+        }
+        match spawn_worker(&self.cfg, s) {
+            Ok(mut fresh) => {
+                for c in &mut fresh.conns {
+                    if poller.register(raw_fd(&c.stream), c.token, c.want()).is_ok() {
+                        c.registered = Some(c.want());
+                    }
+                }
+                self.shards[s] = fresh;
+                self.respawns += 1;
+            }
+            Err(_) => {
+                self.shards[s].next_respawn = Some(now + RESPAWN_BACKOFF);
+            }
+        }
+    }
+
+    /// Keep each live connection's poller registration in sync with what
+    /// it currently wants (write interest appears only while a partial
+    /// write is queued).
+    fn sync_interest(&mut self, poller: &Poller) {
+        for sp in self.shards.iter_mut().filter(|s| s.alive) {
+            for c in &mut sp.conns {
+                let want = c.want();
+                if c.registered == Some(want) {
+                    continue;
+                }
+                let fd = raw_fd(&c.stream);
+                let ok = match c.registered {
+                    None => poller.register(fd, c.token, want).is_ok(),
+                    Some(_) => poller.modify(fd, c.token, want).is_ok(),
+                };
+                if ok {
+                    c.registered = Some(want);
+                }
+            }
+        }
+    }
+
+    fn on_event(&mut self, poller: &Poller, token: usize, readable: bool, writable: bool) {
+        let idx = token - UPSTREAM_BASE;
+        let (s, k) = (idx / CONNS_PER_SHARD, idx % CONNS_PER_SHARD);
+        if s >= self.shards.len() || !self.shards[s].alive || k >= self.shards[s].conns.len() {
+            return;
+        }
+        let mut completed: Vec<(ShardDone, ShardReply)> = Vec::new();
+        let mut failed = false;
+        {
+            let c = &mut self.shards[s].conns[k];
+            if writable {
+                failed |= c.flush().is_err();
+            }
+            if readable {
+                match c.read_lines() {
+                    Ok(lines) => {
+                        for line in lines {
+                            let Some(done) = c.pending.pop_front() else { break };
+                            let reply = Json::parse(line.trim())
+                                .map(ShardReply::Ok)
+                                .unwrap_or(ShardReply::Failed);
+                            completed.push((done, reply));
+                        }
+                    }
+                    Err(_) => failed = true,
+                }
+            }
+        }
+        if !completed.is_empty() {
+            self.shards[s].health.on_response(Instant::now());
+        }
+        for (done, reply) in completed {
+            done(self, reply);
+        }
+        if failed {
+            self.mark_down(s);
+            self.reap_down(s, poller, Instant::now());
+        }
+    }
+
+    fn on_tick(&mut self, poller: &Poller) {
+        let now = Instant::now();
+        for s in 0..self.shards.len() {
+            if !self.shards[s].alive {
+                self.reap_down(s, poller, now);
+                continue;
+            }
+            let pool_err = self.shards[s].conns.iter_mut().any(|c| c.flush().is_err());
+            if pool_err {
+                self.mark_down(s);
+                self.reap_down(s, poller, now);
+                continue;
+            }
+            if self.shards[s].health.overdue(now) {
+                self.mark_down(s);
+                self.reap_down(s, poller, now);
+                continue;
+            }
+            if self.shards[s].health.due(now) {
+                let line = self.auth_line("stats");
+                // Probes ride the dedicated connection 0; receipt of any
+                // response already clears the health state.
+                let done: ShardDone = Box::new(|_core, _reply| {});
+                if self.shards[s].conns[0].send(&line, done).is_err() {
+                    self.mark_down(s);
+                    self.reap_down(s, poller, now);
+                    continue;
+                }
+                self.shards[s].health.on_probe_sent(now);
+            }
+        }
+        self.sync_interest(poller);
+    }
+
+    /// Graceful stop: collect every owed shard response (bounded), fail
+    /// the rest with `busy`, then shut the workers down and reap them.
+    fn on_stop(&mut self, poller: &Poller) {
+        let deadline = Instant::now() + STOP_BUDGET;
+        let mut completed: Vec<(ShardDone, ShardReply)> = Vec::new();
+        for sp in &mut self.shards {
+            for c in &sp.conns {
+                if c.registered.is_some() {
+                    let _ = poller.deregister(raw_fd(&c.stream), c.token);
+                }
+            }
+            if sp.alive {
+                for c in &mut sp.conns {
+                    completed.extend(c.drain_until(deadline));
+                }
+            }
+            // Anything unanswered (dead shard, or the budget ran out).
+            for c in &mut sp.conns {
+                for done in c.pending.drain(..) {
+                    completed.push((done, ShardReply::Failed));
+                }
+            }
+        }
+        for (done, reply) in completed {
+            done(self, reply);
+        }
+        let bye = self.auth_line("shutdown");
+        for sp in self.shards.iter_mut() {
+            if sp.alive {
+                if let Some(c) = sp.conns.first_mut() {
+                    let _ = c.stream.set_nonblocking(false);
+                    let _ = c.stream.write_all(bye.as_bytes());
+                    let _ = c.stream.write_all(b"\n");
+                }
+            }
+            // Bounded reap: a worker that does not exit in time (wedged
+            // mid-compute) is killed — the test asserts the router's own
+            // shutdown stays under a second.
+            while sp.child.try_wait().ok().flatten().is_none() {
+                if Instant::now() >= deadline {
+                    let _ = sp.child.kill();
+                    let _ = sp.child.wait();
+                    break;
+                }
+                thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Wrap a client responder: a shard reply passes through verbatim, a
+/// shard death answers `busy` + `retry_ms` instead of dropping the
+/// connection.
+fn data_done(respond: Done) -> ShardDone {
+    Box::new(move |_core, reply| match reply {
+        ShardReply::Ok(j) => respond(j),
+        ShardReply::Failed => respond(ServeError::Busy { retry_ms: RETRY_MS }.to_json()),
+    })
+}
+
+/// Ring point for a request: (model, canonical spec hash) when the
+/// request parses — identical keys always share a shard, preserving
+/// cache locality — else a hash of the raw line, so malformed requests
+/// still route deterministically and get their error from a real engine.
+fn route_point(req: &Json, line: &str) -> u64 {
+    let model = req.get("model").and_then(|m| m.as_str().ok());
+    match (model, QuantSpec::from_request(req)) {
+        (Some(m), Ok(spec)) => request_point(m, spec.key_hash()),
+        _ => fnv1a(line.as_bytes()),
+    }
+}
+
+struct UpstreamAdapter {
+    core: Rc<RefCell<RouterCore>>,
+}
+
+impl Upstream for UpstreamAdapter {
+    fn on_start(&mut self, poller: &Poller) {
+        self.core.borrow_mut().sync_interest(poller);
+    }
+
+    fn on_event(&mut self, poller: &Poller, token: usize, readable: bool, writable: bool) {
+        self.core.borrow_mut().on_event(poller, token, readable, writable);
+    }
+
+    fn on_tick(&mut self, poller: &Poller) {
+        self.core.borrow_mut().on_tick(poller);
+    }
+
+    fn max_timeout(&self) -> Option<Duration> {
+        Some(TICK)
+    }
+
+    fn on_stop(&mut self, poller: &Poller) {
+        self.core.borrow_mut().on_stop(poller);
+    }
+}
+
+fn drive(reactor: Reactor, core: Rc<RefCell<RouterCore>>) -> Result<()> {
+    let stop = reactor.stop_handle();
+    let dispatch_core = Rc::clone(&core);
+    let mut upstream = UpstreamAdapter { core };
+    reactor.run_with_upstream(
+        move |line, respond| dispatch_core.borrow_mut().dispatch(line, respond, &stop),
+        &mut upstream,
+    )?;
+    Ok(())
+}
+
+fn router_net_cfg(e: &EngineCfg) -> NetCfg {
+    NetCfg {
+        max_conns: e.max_conns,
+        idle_timeout: (e.idle_timeout_ms > 0)
+            .then(|| Duration::from_millis(e.idle_timeout_ms)),
+        conn_rps: e.conn_rps,
+    }
+}
+
+/// Serve as the router until a `shutdown` request arrives (CLI entry).
+pub fn serve_router(cfg: RouterCfg) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    println!(
+        "squant router listening on {} ({} shards x {} workers)",
+        listener.local_addr()?,
+        cfg.shards,
+        cfg.engine.workers.max(1),
+    );
+    let metrics = Arc::new(Metrics::new());
+    let reactor = Reactor::new(listener, router_net_cfg(&cfg.engine), Arc::clone(&metrics))?;
+    let core = Rc::new(RefCell::new(RouterCore::new(cfg, metrics)?));
+    drive(reactor, core)
+}
+
+/// A background router (tests, `bench-serve --shards`). Worker spawn
+/// failures surface here, not on the router thread.
+pub struct RouterHandle {
+    pub addr: SocketAddr,
+    stop: StopHandle,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl RouterHandle {
+    pub fn stop(&self) {
+        self.stop.request();
+    }
+
+    pub fn join(mut self) {
+        self.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RouterHandle {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+pub fn spawn_router(cfg: RouterCfg) -> Result<RouterHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    // The core is single-threaded (Rc-shared with the dispatch closure),
+    // so it is built on the router thread; readiness or the spawn error
+    // comes back over the channel.
+    let thread = thread::spawn(move || {
+        let metrics = Arc::new(Metrics::new());
+        let reactor =
+            match Reactor::new(listener, router_net_cfg(&cfg.engine), Arc::clone(&metrics)) {
+                Ok(r) => r,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.into()));
+                    return;
+                }
+            };
+        match RouterCore::new(cfg, metrics) {
+            Ok(core) => {
+                let _ = ready_tx.send(Ok(reactor.stop_handle()));
+                let _ = drive(reactor, Rc::new(RefCell::new(core)));
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+            }
+        }
+    });
+    match ready_rx.recv() {
+        Ok(Ok(stop)) => Ok(RouterHandle { addr, stop, thread: Some(thread) }),
+        Ok(Err(e)) => {
+            let _ = thread.join();
+            Err(e)
+        }
+        Err(_) => {
+            let _ = thread.join();
+            bail!("router thread died during startup")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_point_is_spec_canonical_not_textual() {
+        // Legacy flat form and spec form of the same request route to
+        // the same point (both canonicalize to the same spec).
+        let flat =
+            Json::parse(r#"{"cmd":"quantize","model":"m","wbits":4}"#).unwrap();
+        let spec =
+            Json::parse(r#"{"cmd":"quantize","model":"m","spec":"w4"}"#).unwrap();
+        assert_eq!(route_point(&flat, "x"), route_point(&spec, "y"));
+        // Different models with the same spec must not collide.
+        let other =
+            Json::parse(r#"{"cmd":"quantize","model":"n","wbits":4}"#).unwrap();
+        assert_ne!(route_point(&flat, "x"), route_point(&other, "x"));
+    }
+
+    #[test]
+    fn unparseable_requests_route_by_raw_line() {
+        let bad = Json::parse(r#"{"cmd":"quantize","wbits":99}"#).unwrap();
+        let line = r#"{"cmd":"quantize","wbits":99}"#;
+        assert_eq!(route_point(&bad, line), fnv1a(line.as_bytes()));
+    }
+
+    #[test]
+    fn worker_flags_round_trip_shared_settings() {
+        let e = EngineCfg {
+            cache_dir: Some(PathBuf::from("/tmp/squant-cache")),
+            auth_token: Some("secret".into()),
+            ..EngineCfg::default()
+        };
+        let flags = worker_flags(&e);
+        assert!(flags.windows(2).any(|w| w[0] == "--cache-dir"));
+        assert!(flags.windows(2).any(|w| w[0] == "--auth-token" && w[1] == "secret"));
+        // The router never forwards client-facing rate limits.
+        assert!(!flags.iter().any(|f| f == "--conn-rps"));
+        // Pool connections are persistent: workers must not reap them.
+        let i = flags.iter().position(|f| f == "--idle-timeout-ms").unwrap();
+        assert_eq!(flags[i + 1], "0");
+    }
+}
