@@ -11,6 +11,11 @@
 //!   {"cmd":"predict","model":"miniresnet18","wbits":4,"input":[...]}
 //!   {"cmd":"warm","model":"miniresnet18","wbits":4}      prefetch into cache
 //!   {"cmd":"stats"}                                      counters + latency
+//!   {"cmd":"trace"}                  last 16 completed request traces
+//!   {"cmd":"trace","last":N}         newest N traces
+//!   {"cmd":"trace","slowest":N}      slowest N traces by total time
+//!   {"cmd":"trace","id":"<hex>"}     one trace by its 16-hex-char id
+//!   {"cmd":"metrics-prom"}           Prometheus text exposition
 //!   {"cmd":"shutdown"}
 //!
 //! `quantize`/`eval`/`predict`/`warm` all take either the legacy flat
@@ -47,6 +52,24 @@
 //! or a connection exceeds its `--conn-rps` token bucket — the server
 //! answers `{"ok":false,"error":"busy","retry_ms":N}` instead of queueing
 //! unboundedly — clients should back off and retry.
+//!
+//! Observability: every request is traced end-to-end (unless started with
+//! `--trace-buf 0`).  A response carries `"trace"` — the request's
+//! 16-hex-char trace id — and the completed span tree (ingress, admission,
+//! flight lead/subscribe, disk probe, per-layer compute, batch wait,
+//! stacked forward with kernel counts, assemble, respond) is queryable
+//! afterwards via the `trace` verb above.  Clients may also *supply*
+//! `"trace":"<hex>"` on a request to pin its id; the shard router does
+//! exactly this, stamping one id at its ingress and forwarding it on the
+//! internal protocol line so a cross-process request reads as one tree
+//! (the router merges its own spans with the owning worker's when asked
+//! `trace` by id).  Requests slower than `--trace-slow-ms` additionally
+//! emit one structured `slow_request` log line on stderr (`--log-level`,
+//! `--log-json` — see `util/log.rs`).  `metrics-prom` answers
+//! `{"ok":true,"prom":"...","snapshot":{...}}`: `prom` is the metrics
+//! snapshot rendered in Prometheus text exposition format (under a shard
+//! router: the merged cluster totals), `snapshot` the exact flat counters
+//! the rollup merged.
 //!
 //! Auth: when the server was started with `--auth-token T`, **every**
 //! request object must carry `"auth":"T"` alongside `cmd`; a missing or
@@ -97,7 +120,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::io::{dataset, manifest::Manifest, sqnt};
 use crate::nn::{Graph, Params};
@@ -235,6 +258,10 @@ pub fn serve_worker(
     cfg: EngineCfg,
     shard: usize,
 ) -> Result<()> {
+    // A dying worker logs one structured `panic` event (with its shard id)
+    // to stderr before the process exits, so the router-side respawn has a
+    // cause attached instead of a bare EOF.
+    crate::util::log::install_panic_hook(Some(shard));
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     println!(
@@ -311,6 +338,9 @@ fn run(reactor: Reactor, engine: Arc<Engine>, auth: Option<String>) -> Result<()
     let stop = reactor.stop_handle();
     let eng = Arc::clone(&engine);
     reactor.run(move |line, respond| {
+        // Trace ingress: parse + auth below are charged to the request's
+        // leading `ingress` span (see `Engine::submit_at`).
+        let t0 = Instant::now();
         let req = match Json::parse(line) {
             Ok(req) => req,
             Err(e) => {
@@ -336,7 +366,7 @@ fn run(reactor: Reactor, engine: Arc<Engine>, auth: Option<String>) -> Result<()
             respond(Json::obj().set("ok", true).set("bye", true));
             return;
         }
-        eng.submit(&req, respond);
+        eng.submit_at(&req, t0, respond);
     })?;
     engine.wait_idle();
     Ok(())

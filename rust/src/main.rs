@@ -180,7 +180,9 @@ COMMANDS:
           [--max-conns N] [--idle-timeout-ms MS]
           [--batch-window-us US] [--max-batch N] [--conn-rps R]
           [--auth-token T] [--shards N] [--tiny]
+          [--trace-buf N] [--trace-slow-ms MS] [--log-level L] [--log-json]
           protocol verbs: ping models quantize eval predict warm stats
+          trace metrics-prom
           shutdown (quantize/eval/predict/warm take the flat
           wbits/abits/method/scale fields or a \"spec\" object/string;
           quantize/eval/predict hit an LRU artifact cache; identical
@@ -209,11 +211,26 @@ COMMANDS:
           protocol, the --auth-token and (optionally) one --cache-dir;
           stats rolls up the whole cluster.  --tiny serves the in-memory
           test model (no artifacts needed).
+          observability: every request is traced end to end (ingress,
+          admission, queue wait, per-layer compute, batch wait/forward,
+          respond) into a ring of --trace-buf completed traces (default
+          1024; 0 disables tracing).  the trace verb reads the ring:
+          {\"cmd\":\"trace\"} returns the last 16, \"last\":N / \"slowest\":N
+          select, \"id\":\"<hex>\" looks one up; under --shards the router
+          stamps the id, the worker adopts it, and the verb merges both
+          into one tree (router root, worker docs under \"children\").
+          requests slower than --trace-slow-ms emit one structured
+          slow_request log line; --log-level debug|info|warn|error and
+          --log-json select the stderr logger (shard deaths, respawns
+          and worker panics are logged structurally too).  metrics-prom
+          renders the stats counters and latency histograms in
+          Prometheus text exposition format (cluster-merged under
+          --shards).
   bench-serve [--addr HOST:PORT | --spawn] [--conns N] [--idle M]
           [--reqs N] [--models A,B] [--wbits 8,4] [--eval-every N]
           [--samples N] [--seed S] [--restart-warm] [--mixed-keys]
           [--tiny] [--predict] [--pipeline D] [--abits A] [--strict]
-          [--require-int8] [--shards N]
+          [--require-int8] [--shards N] [--trace]
           load-generate against a server; prints req/s, cache hit-rate,
           p50/p95/p99 latency, busy rejections and connection gauges,
           and writes a BENCH_serve.json snapshot (req/s, quantiles,
@@ -243,7 +260,13 @@ COMMANDS:
           requests must answer busy, never drop), checks the cluster
           stats rollup against the per-shard counters, and records
           per-shard + aggregate req/s and scaling efficiency in the
-          snapshot
+          snapshot.  --trace (with --spawn) turns on request tracing and
+          zero-threshold JSON slow-logs on the spawned target, samples
+          completed trace trees over the trace verb after the load
+          (--strict requires non-empty span trees, and merged
+          router+worker trees with --shards), measures the tracing
+          req/s overhead against a --trace-buf 0 control run
+          (single-process mode), and writes BENCH_trace.json
 
 SPEC:   w<W>a<A>:<method>:<scale>[;<layer>=<override>]*
         e.g. \"w4a8:squant:max-abs;conv1=w8;fc=w8/rtn\" — overrides are
@@ -527,6 +550,14 @@ fn serve_cfg(args: &mut Args) -> Result<EngineCfg> {
         conn_rps: args.u64_or("conn-rps", defaults.conn_rps)?,
         auth_token: args.opt("auth-token"),
         shard_slot: None,
+        trace_buf: args.usize_or("trace-buf", defaults.trace_buf)?,
+        trace_slow_ms: args
+            .opt("trace-slow-ms")
+            .map(|s| s.parse::<u64>())
+            .transpose()
+            .map_err(|e| anyhow!("--trace-slow-ms: {e}"))?,
+        log_level: args.opt("log-level"),
+        log_json: args.flag("log-json"),
     })
 }
 
@@ -650,8 +681,23 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     // Sharded scaling mode: baseline single-process phase, then the same
     // load through a router + N worker shards with a kill injected.
     let shards = args.usize_or("shards", 0)?;
-    let cfg = serve_cfg(args)?;
+    // Tracing mode: spawn the target with the trace ring on and
+    // zero-threshold JSON slow-logs, sample completed trace trees after
+    // the load, and (single-process) measure the ring's req/s overhead
+    // against a tracing-off control run.
+    let trace_mode = args.flag("trace");
+    let mut cfg = serve_cfg(args)?;
     args.finish()?;
+    if trace_mode {
+        if !spawn {
+            bail!("--trace needs --spawn (it configures the spawned server)");
+        }
+        if cfg.trace_buf == 0 {
+            bail!("--trace with --trace-buf 0 would sample an empty ring");
+        }
+        cfg.trace_slow_ms = Some(0);
+        cfg.log_json = true;
+    }
     if restart_warm && (!spawn || cfg.cache_dir.is_none()) {
         bail!(
             "--restart-warm needs --spawn and --cache-dir \
@@ -1295,7 +1341,13 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     const BENCH_PATH: &str = "BENCH_serve.json";
     match std::fs::write(BENCH_PATH, snapshot.dump() + "\n") {
         Ok(()) => println!("  snapshot   : wrote {BENCH_PATH}"),
-        Err(e) => eprintln!("  snapshot   : failed to write {BENCH_PATH}: {e}"),
+        Err(e) => squant::util::log::warn(
+            "bench_snapshot_write_failed",
+            &[
+                ("path", Json::from(BENCH_PATH)),
+                ("error", Json::from(format!("{e}"))),
+            ],
+        ),
     }
     // Prove the idle set survived the load phase: every silent connection
     // must still answer a ping (i.e. the server held N mostly-idle conns
@@ -1331,6 +1383,90 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
             "--require-int8: stats kernel.int8 = {k8:.0}; \
              the packed i8 path never ran (int4 {k4:.0}, f32 {kf:.0})"
         );
+    }
+
+    // Tracing observability (--trace): sample completed trace trees over
+    // the trace verb, assert they are real under --strict, and price the
+    // ring against a tracing-off control run.
+    if trace_mode {
+        let tr = probe.call(&Json::parse(r#"{"cmd":"trace","last":32}"#)?)?;
+        let traces = tr.req("traces")?.as_arr()?;
+        let mut with_spans = 0usize;
+        let mut merged_trees = 0usize;
+        for t in traces {
+            if !t.req("spans")?.as_arr()?.is_empty() {
+                with_spans += 1;
+            }
+            if let Some(kids) = t.get("children").and_then(|c| c.as_arr().ok()) {
+                if !kids.is_empty() {
+                    merged_trees += 1;
+                }
+            }
+        }
+        println!(
+            "  traces     : {} sampled, {} with spans, {} merged \
+             router+worker trees",
+            traces.len(),
+            with_spans,
+            merged_trees
+        );
+        if strict {
+            if with_spans == 0 {
+                bail!("--strict --trace: no non-empty trace trees sampled");
+            }
+            if shards > 0 && merged_trees == 0 {
+                bail!(
+                    "--strict --trace: no sampled trace carried worker \
+                     children under --shards"
+                );
+            }
+        }
+        // Single-process mode only: the identical load against a
+        // --trace-buf 0 control server gives the ring's throughput cost
+        // (target: under a few percent).
+        let overhead_pct = if shards == 0 {
+            let mut off = cfg.clone();
+            off.trace_buf = 0;
+            off.trace_slow_ms = None;
+            let control = server::spawn(build_store()?, "127.0.0.1:0", off)?;
+            let caddr = control.addr.to_string();
+            let c = run_load(&caddr);
+            if let Ok(mut cc) = server::Client::connect(&caddr) {
+                let _ = cc.call(&Json::parse(r#"{"cmd":"shutdown"}"#)?);
+            }
+            control.join();
+            let off_rs = c.ok as f64 / c.wall_s.max(1e-9);
+            let pct = (off_rs - req_s) / off_rs.max(1e-9) * 100.0;
+            println!(
+                "  overhead   : traced {req_s:.1} req/s vs untraced \
+                 {off_rs:.1} req/s ({pct:+.2}% cost)"
+            );
+            Some(pct)
+        } else {
+            None
+        };
+        let mut tdoc = Json::obj()
+            .set("bench", "bench-serve-trace")
+            .set("shards", shards)
+            .set("sampled", traces.len())
+            .set("with_spans", with_spans)
+            .set("merged_trees", merged_trees)
+            .set("req_s", req_s)
+            .set("traces", Json::Arr(traces.to_vec()));
+        if let Some(p) = overhead_pct {
+            tdoc = tdoc.set("overhead_pct", p);
+        }
+        const TRACE_PATH: &str = "BENCH_trace.json";
+        match std::fs::write(TRACE_PATH, tdoc.dump() + "\n") {
+            Ok(()) => println!("  trace snap : wrote {TRACE_PATH}"),
+            Err(e) => squant::util::log::warn(
+                "bench_snapshot_write_failed",
+                &[
+                    ("path", Json::from(TRACE_PATH)),
+                    ("error", Json::from(format!("{e}"))),
+                ],
+            ),
+        }
     }
 
     if restart_warm {

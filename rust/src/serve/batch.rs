@@ -85,6 +85,9 @@ pub struct PredictOutcome {
     pub batch: usize,
     /// Enqueue → flush (time spent waiting for co-batched traffic).
     pub wait_ms: f64,
+    /// Stacked forward execution time of the whole batch (shared by every
+    /// item that rode in it) — the request trace's batched-forward span.
+    pub forward_ms: f64,
     /// Kernel paths the batch's forward dispatched (shared by every item
     /// that rode in it) — surfaced on the response so callers can assert
     /// which execution path served them.

@@ -2,9 +2,11 @@
 //! histograms, surfaced through the `{"cmd":"stats"}` protocol verb.
 //!
 //! Histograms use power-of-two microsecond buckets (bucket `i` covers
-//! `[2^i, 2^{i+1})` µs), so recording is one atomic increment and the
-//! p50/p95/p99 estimates are exact to within a factor of two — plenty for
-//! a serving dashboard, and no locks on the hot path.
+//! `[2^i, 2^{i+1})` µs), so recording is one atomic increment and no
+//! locks on the hot path.  Quantiles interpolate linearly within the hit
+//! bucket, so p50/p95/p99 track the distribution well inside the
+//! factor-of-two bucket bound.  [`prometheus`] renders a [`Snapshot`] in
+//! Prometheus text exposition format for the `metrics-prom` verb.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -76,21 +78,10 @@ impl Histogram {
         self.max_us.load(Ordering::Relaxed) as f64 / 1e3
     }
 
-    /// Quantile estimate in ms (geometric midpoint of the hit bucket).
+    /// Quantile estimate in ms, with within-bucket linear interpolation
+    /// (see [`HistSnapshot::quantile_us`], the single implementation).
     pub fn quantile_ms(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut seen = 0u64;
-        for i in 0..NBUCKETS {
-            seen += self.buckets[i].load(Ordering::Relaxed);
-            if seen >= target {
-                return (1u64 << i) as f64 * 1.5 / 1e3;
-            }
-        }
-        self.max_ms()
+        self.snapshot().quantile_us(q) / 1e3
     }
 
     /// Point-in-time copy of the histogram for merging and serialization.
@@ -122,7 +113,8 @@ impl Histogram {
         self.max_us.load(Ordering::Relaxed)
     }
 
-    /// Quantile estimate in raw units (geometric midpoint of the bucket).
+    /// Quantile estimate in raw units (same interpolation as
+    /// [`HistSnapshot::quantile_us`]).
     pub fn quantile_raw(&self, q: f64) -> f64 {
         self.quantile_ms(q) * 1e3
     }
@@ -164,8 +156,12 @@ impl HistSnapshot {
         }
     }
 
-    /// Quantile estimate in raw units (geometric midpoint of the bucket),
-    /// same estimator as [`Histogram::quantile_ms`].
+    /// Quantile estimate in raw units with within-bucket linear
+    /// interpolation: the target rank's position among the hit bucket's
+    /// samples places the estimate between the bucket bounds (rank
+    /// centers at `k - 0.5`, so a lone sample reads the bucket midpoint
+    /// instead of the upper bound).  Clamped to the observed max so a
+    /// p99 never exceeds a real measurement.
     pub fn quantile_us(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -174,8 +170,15 @@ impl HistSnapshot {
         let mut seen = 0u64;
         for (i, &b) in self.buckets.iter().enumerate() {
             seen += b;
-            if seen >= target {
-                return (1u64 << i) as f64 * 1.5;
+            if b > 0 && seen >= target {
+                // Bucket i covers [2^i, 2^{i+1}) µs, except bucket 0
+                // which also holds the zero samples ([0, 2)).
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u64 << (i + 1)) as f64;
+                let into = (target - (seen - b)) as f64; // 1 ..= b
+                let frac = (into - 0.5) / b as f64;
+                let est = lo + frac * (hi - lo);
+                return est.min(self.max_us as f64);
             }
         }
         self.max_us as f64
@@ -584,6 +587,323 @@ impl Snapshot {
         self.lat_queue.merge(&other.lat_queue);
         self.lat_compute.merge(&other.lat_compute);
     }
+
+    /// Exact flat serialization — what a worker shard ships to the router
+    /// for the `metrics-prom` rollup, so the cluster render merges real
+    /// counters and buckets instead of re-parsing the pretty `stats` doc.
+    pub fn to_json(&self) -> Json {
+        let by_cmd: Vec<Json> =
+            self.by_cmd.iter().map(|&c| Json::from(c as usize)).collect();
+        Json::obj()
+            .set("uptime_s", self.uptime_s)
+            .set("by_cmd", Json::Arr(by_cmd))
+            .set("cache_hits", self.cache_hits as usize)
+            .set("cache_misses", self.cache_misses as usize)
+            .set("flight_shared", self.flight_shared as usize)
+            .set("disk_hits", self.disk_hits as usize)
+            .set("disk_misses", self.disk_misses as usize)
+            .set("disk_spills", self.disk_spills as usize)
+            .set("disk_invalidated", self.disk_invalidated as usize)
+            .set("rejected_busy", self.rejected_busy as usize)
+            .set("errors", self.errors as usize)
+            .set("conns_active", self.conns_active as usize)
+            .set("conns_peak", self.conns_peak as usize)
+            .set("conns_rejected", self.conns_rejected as usize)
+            .set("conns_idle_closed", self.conns_idle_closed as usize)
+            .set("conns_rate_limited", self.conns_rate_limited as usize)
+            .set("conns_auth_failed", self.conns_auth_failed as usize)
+            .set("predict_inputs", self.predict_inputs as usize)
+            .set("predict_batches", self.predict_batches as usize)
+            .set("batch_flush_timeout", self.batch_flush_timeout as usize)
+            .set("batch_flush_full", self.batch_flush_full as usize)
+            .set("kernel_int8", self.kernel_int8 as usize)
+            .set("kernel_int4", self.kernel_int4 as usize)
+            .set("kernel_f32", self.kernel_f32 as usize)
+            .set("lat_all", self.lat_all.to_json())
+            .set("lat_quantize", self.lat_quantize.to_json())
+            .set("lat_eval", self.lat_eval.to_json())
+            .set("lat_predict", self.lat_predict.to_json())
+            .set("lat_batch_wait", self.lat_batch_wait.to_json())
+            .set("batch_size", self.batch_size.to_json_raw())
+            .set("lat_queue", self.lat_queue.to_json())
+            .set("lat_compute", self.lat_compute.to_json())
+    }
+
+    /// Rebuild from [`Snapshot::to_json`]. Missing or malformed fields
+    /// read as zero / empty so version skew degrades instead of failing.
+    pub fn from_json(j: &Json) -> Snapshot {
+        let n = |k: &str| -> u64 {
+            j.get(k).and_then(|v| v.as_usize().ok()).unwrap_or(0) as u64
+        };
+        let h = |k: &str| -> HistSnapshot {
+            j.get(k).and_then(HistSnapshot::from_json).unwrap_or_default()
+        };
+        let mut by_cmd = [0u64; CMDS.len()];
+        if let Some(Ok(arr)) = j.get("by_cmd").map(|v| v.as_arr()) {
+            for (i, v) in arr.iter().take(CMDS.len()).enumerate() {
+                by_cmd[i] = v.as_usize().unwrap_or(0) as u64;
+            }
+        }
+        Snapshot {
+            uptime_s: j
+                .get("uptime_s")
+                .and_then(|v| v.as_f64().ok())
+                .unwrap_or(0.0),
+            by_cmd,
+            cache_hits: n("cache_hits"),
+            cache_misses: n("cache_misses"),
+            flight_shared: n("flight_shared"),
+            disk_hits: n("disk_hits"),
+            disk_misses: n("disk_misses"),
+            disk_spills: n("disk_spills"),
+            disk_invalidated: n("disk_invalidated"),
+            rejected_busy: n("rejected_busy"),
+            errors: n("errors"),
+            conns_active: n("conns_active"),
+            conns_peak: n("conns_peak"),
+            conns_rejected: n("conns_rejected"),
+            conns_idle_closed: n("conns_idle_closed"),
+            conns_rate_limited: n("conns_rate_limited"),
+            conns_auth_failed: n("conns_auth_failed"),
+            predict_inputs: n("predict_inputs"),
+            predict_batches: n("predict_batches"),
+            batch_flush_timeout: n("batch_flush_timeout"),
+            batch_flush_full: n("batch_flush_full"),
+            kernel_int8: n("kernel_int8"),
+            kernel_int4: n("kernel_int4"),
+            kernel_f32: n("kernel_f32"),
+            lat_all: h("lat_all"),
+            lat_quantize: h("lat_quantize"),
+            lat_eval: h("lat_eval"),
+            lat_predict: h("lat_predict"),
+            lat_batch_wait: h("lat_batch_wait"),
+            batch_size: h("batch_size"),
+            lat_queue: h("lat_queue"),
+            lat_compute: h("lat_compute"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+fn prom_line(out: &mut String, name: &str, labels: &[(&str, &str)], v: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, val)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{k}=\"{val}\""));
+        }
+        out.push('}');
+    }
+    // Counters are whole numbers; print them without a fraction so the
+    // output diff-compares cleanly against the JSON stats view.
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        out.push_str(&format!(" {}\n", v as i64));
+    } else {
+        out.push_str(&format!(" {v}\n"));
+    }
+}
+
+fn prom_head(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Emit one histogram family member: cumulative `_bucket` lines with
+/// upper bounds in `unit` (seconds for latency, raw for batch size),
+/// then `_sum` and `_count`.
+fn prom_hist(
+    out: &mut String,
+    name: &str,
+    path: &str,
+    shard: Option<&str>,
+    h: &HistSnapshot,
+    unit_div: f64,
+) {
+    let mut labels: Vec<(&str, &str)> = vec![("path", path)];
+    if let Some(s) = shard {
+        labels.push(("shard", s));
+    }
+    let mut cum = 0u64;
+    for (i, &b) in h.buckets.iter().enumerate() {
+        cum += b;
+        let le = (1u64 << (i + 1)) as f64 / unit_div;
+        let le_s = format!("{le}");
+        let mut bl = labels.clone();
+        bl.push(("le", le_s.as_str()));
+        prom_line(out, &format!("{name}_bucket"), &bl, cum as f64);
+    }
+    let mut inf = labels.clone();
+    inf.push(("le", "+Inf"));
+    prom_line(out, &format!("{name}_bucket"), &inf, h.count as f64);
+    prom_line(out, &format!("{name}_sum"), &labels, h.sum_us as f64 / unit_div);
+    prom_line(out, &format!("{name}_count"), &labels, h.count as f64);
+}
+
+/// Render a [`Snapshot`] in Prometheus text exposition format — the body
+/// of the `metrics-prom` verb.  A worker labels every series with its
+/// shard id; the router renders the merged cluster snapshot unlabeled.
+pub fn prometheus(s: &Snapshot, shard: Option<usize>) -> String {
+    let shard_s = shard.map(|i| i.to_string());
+    let sl = shard_s.as_deref();
+    let base: Vec<(&str, &str)> = match sl {
+        Some(v) => vec![("shard", v)],
+        None => vec![],
+    };
+    let mut out = String::with_capacity(8192);
+
+    prom_head(&mut out, "squant_uptime_seconds", "gauge", "Process uptime.");
+    prom_line(&mut out, "squant_uptime_seconds", &base, s.uptime_s);
+
+    prom_head(
+        &mut out,
+        "squant_requests_total",
+        "counter",
+        "Requests by protocol verb.",
+    );
+    for (i, cmd) in CMDS.iter().enumerate() {
+        let mut l = base.clone();
+        l.push(("cmd", cmd));
+        prom_line(&mut out, "squant_requests_total", &l, s.by_cmd[i] as f64);
+    }
+
+    let counters: [(&str, &str, u64); 14] = [
+        ("squant_errors_total", "Requests answered with an error.", s.errors),
+        ("squant_cache_hits_total", "In-memory cache hits.", s.cache_hits),
+        ("squant_cache_misses_total", "In-memory cache misses.", s.cache_misses),
+        (
+            "squant_flight_shared_total",
+            "Requests that joined an identical in-flight computation.",
+            s.flight_shared,
+        ),
+        ("squant_disk_hits_total", "Disk-tier hits.", s.disk_hits),
+        ("squant_disk_misses_total", "Disk-tier misses.", s.disk_misses),
+        ("squant_disk_spills_total", "Artifacts spilled to disk.", s.disk_spills),
+        (
+            "squant_disk_invalidated_total",
+            "Stale or corrupt disk artifacts dropped.",
+            s.disk_invalidated,
+        ),
+        (
+            "squant_rejected_busy_total",
+            "Requests rejected busy at admission.",
+            s.rejected_busy,
+        ),
+        (
+            "squant_conns_rejected_total",
+            "Connections refused at the --max-conns cap.",
+            s.conns_rejected,
+        ),
+        (
+            "squant_conns_idle_closed_total",
+            "Connections reaped by the idle timeout.",
+            s.conns_idle_closed,
+        ),
+        (
+            "squant_conns_rate_limited_total",
+            "Requests rejected by the per-connection rate limit.",
+            s.conns_rate_limited,
+        ),
+        (
+            "squant_conns_auth_failed_total",
+            "Requests rejected for a missing or wrong auth token.",
+            s.conns_auth_failed,
+        ),
+        (
+            "squant_predict_inputs_total",
+            "Inputs served through predict.",
+            s.predict_inputs,
+        ),
+    ];
+    for (name, help, v) in counters {
+        prom_head(&mut out, name, "counter", help);
+        prom_line(&mut out, name, &base, v as f64);
+    }
+
+    prom_head(
+        &mut out,
+        "squant_predict_batches_total",
+        "counter",
+        "Batched forward passes executed.",
+    );
+    prom_line(
+        &mut out,
+        "squant_predict_batches_total",
+        &base,
+        s.predict_batches as f64,
+    );
+    prom_head(
+        &mut out,
+        "squant_batch_flush_total",
+        "counter",
+        "Batch flushes by reason.",
+    );
+    for (reason, v) in
+        [("timeout", s.batch_flush_timeout), ("full", s.batch_flush_full)]
+    {
+        let mut l = base.clone();
+        l.push(("reason", reason));
+        prom_line(&mut out, "squant_batch_flush_total", &l, v as f64);
+    }
+
+    prom_head(
+        &mut out,
+        "squant_kernel_dispatch_total",
+        "counter",
+        "Forward-pass node dispatches by kernel.",
+    );
+    for (kernel, v) in
+        [("int8", s.kernel_int8), ("int4", s.kernel_int4), ("f32", s.kernel_f32)]
+    {
+        let mut l = base.clone();
+        l.push(("kernel", kernel));
+        prom_line(&mut out, "squant_kernel_dispatch_total", &l, v as f64);
+    }
+
+    prom_head(
+        &mut out,
+        "squant_conns_active",
+        "gauge",
+        "Open connections right now.",
+    );
+    prom_line(&mut out, "squant_conns_active", &base, s.conns_active as f64);
+    prom_head(
+        &mut out,
+        "squant_conns_peak",
+        "gauge",
+        "High-water mark of open connections.",
+    );
+    prom_line(&mut out, "squant_conns_peak", &base, s.conns_peak as f64);
+
+    prom_head(
+        &mut out,
+        "squant_latency_seconds",
+        "histogram",
+        "Request and stage latency by path.",
+    );
+    for (path, h) in [
+        ("all", &s.lat_all),
+        ("quantize", &s.lat_quantize),
+        ("eval", &s.lat_eval),
+        ("predict", &s.lat_predict),
+        ("batch_wait", &s.lat_batch_wait),
+        ("queue", &s.lat_queue),
+        ("compute", &s.lat_compute),
+    ] {
+        prom_hist(&mut out, "squant_latency_seconds", path, sl, h, 1e6);
+    }
+    prom_head(
+        &mut out,
+        "squant_batch_size",
+        "histogram",
+        "Inputs per executed batch.",
+    );
+    prom_hist(&mut out, "squant_batch_size", "batch", sl, &s.batch_size, 1.0);
+    out
 }
 
 #[cfg(test)]
@@ -728,6 +1048,114 @@ mod tests {
         m.conns_auth_failed.fetch_add(3, Ordering::Relaxed);
         let j = m.conns_json();
         assert_eq!(j.req("auth_failed").unwrap().as_usize().unwrap(), 3);
+    }
+
+    /// Within-bucket interpolation: ranks inside one bucket spread
+    /// linearly between its bounds instead of all reporting one point,
+    /// quantiles stay monotonic, and no estimate exceeds the observed max.
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let h = Histogram::new();
+        // 100 samples spread uniformly over bucket 10 ([1024, 2048) µs).
+        for i in 0..100u64 {
+            h.record_us(1024 + i * 10);
+        }
+        let p10 = h.quantile_ms(0.10) * 1e3;
+        let p50 = h.quantile_ms(0.50) * 1e3;
+        let p90 = h.quantile_ms(0.90) * 1e3;
+        assert!(p10 >= 1024.0 && p90 < 2048.0, "{p10} {p90}");
+        assert!(p10 < p50 && p50 < p90, "{p10} {p50} {p90}");
+        // Rank centering: the median of a uniform fill reads near the
+        // bucket midpoint, not the upper bound.
+        assert!((p50 - 1536.0).abs() < 64.0, "{p50}");
+        // A lone sample low in its bucket clamps to the real measurement
+        // instead of reporting a point above everything observed.
+        let one = Histogram::new();
+        one.record_us(1100);
+        assert_eq!(one.quantile_ms(0.50) * 1e3, 1100.0);
+        // A lone sample high in its bucket reads the bucket midpoint.
+        let hi = Histogram::new();
+        hi.record_us(1900);
+        assert_eq!(hi.quantile_ms(0.50) * 1e3, 1536.0);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_exactly() {
+        let m = Metrics::new();
+        m.count_cmd("predict");
+        m.count_cmd("predict");
+        m.count_cmd("stats");
+        m.cache_hits.fetch_add(3, Ordering::Relaxed);
+        m.kernel_int8.fetch_add(7, Ordering::Relaxed);
+        m.batch_flush_full.fetch_add(1, Ordering::Relaxed);
+        m.lat_predict.record_us(900);
+        m.batch_size.record_us(4);
+        let snap = m.snapshot();
+        let back = Snapshot::from_json(&snap.to_json());
+        assert_eq!(back.by_cmd, snap.by_cmd);
+        assert_eq!(back.cache_hits, 3);
+        assert_eq!(back.kernel_int8, 7);
+        assert_eq!(back.batch_flush_full, 1);
+        assert_eq!(back.lat_predict, snap.lat_predict);
+        assert_eq!(back.batch_size, snap.batch_size);
+        assert_eq!(back.requests_total(), 3);
+        // Merging two round-tripped snapshots is still exact.
+        let mut merged = back.clone();
+        merged.merge(&Snapshot::from_json(&snap.to_json()));
+        assert_eq!(merged.requests_total(), 6);
+        assert_eq!(merged.lat_predict.count, 2);
+    }
+
+    /// The exposition body is line-oriented prom text: every sample line
+    /// is `name{labels} value`, cumulative buckets end at `+Inf ==
+    /// _count`, and the verb's headline totals match the JSON view.
+    #[test]
+    fn prometheus_text_is_well_formed_and_consistent() {
+        let m = Metrics::new();
+        m.count_cmd("predict");
+        m.count_cmd("quantize");
+        m.count_cmd("quantize");
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        m.kernel_int8.fetch_add(5, Ordering::Relaxed);
+        m.lat_all.record_us(777);
+        let text = prometheus(&m.snapshot(), Some(2));
+        let mut requests_sum = 0.0;
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "{line}"
+                );
+                continue;
+            }
+            let (series, value) =
+                line.rsplit_once(' ').expect("sample line has a value");
+            assert!(
+                value == "+Inf" || value.parse::<f64>().is_ok(),
+                "unparseable value in {line}"
+            );
+            let name = series.split('{').next().unwrap();
+            assert!(
+                name.chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "bad metric name in {line}"
+            );
+            if name == "squant_requests_total" {
+                requests_sum += value.parse::<f64>().unwrap();
+                assert!(series.contains("shard=\"2\""), "{line}");
+                assert!(series.contains("cmd=\""), "{line}");
+            }
+        }
+        assert_eq!(requests_sum as u64, m.requests_total());
+        assert!(text.contains("squant_kernel_dispatch_total{shard=\"2\",kernel=\"int8\"} 5"));
+        // Histogram family: +Inf bucket equals _count.
+        assert!(text
+            .contains("squant_latency_seconds_bucket{path=\"all\",shard=\"2\",le=\"+Inf\"} 1"));
+        assert!(text.contains("squant_latency_seconds_count{path=\"all\",shard=\"2\"} 1"));
+        // Unlabeled render (the router's merged view) is also well-formed.
+        let merged = prometheus(&m.snapshot(), None);
+        assert!(merged.contains("squant_requests_total{cmd=\"quantize\"} 2"));
+        assert!(!merged.contains("shard=\""));
     }
 
     #[test]

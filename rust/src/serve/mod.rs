@@ -76,6 +76,7 @@ pub mod metrics;
 pub mod net;
 pub mod sched;
 pub mod shard;
+pub mod trace;
 
 use anyhow::Result;
 use std::collections::HashMap;
@@ -93,6 +94,7 @@ use crate::nn::Params;
 use crate::quant::spec::{Method, QuantSpec};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::log;
 use crate::util::pool::default_threads;
 
 use batch::{BatchCfg, Batcher, FlushReason, PredictDone, PredictOutcome};
@@ -101,10 +103,12 @@ use disk::{DiskCache, Lookup};
 use flight::{AsyncRole, Flight, Role};
 use metrics::Metrics;
 use sched::{CostTicket, Scheduler, COST_UNIT};
+use trace::{Trace, TraceRing};
 
 /// Serving configuration (CLI: `--workers`, `--queue-depth`, `--cache-cap`,
 /// `--cache-mb`, `--cache-dir`, `--cache-disk-mb`, `--max-conns`,
-/// `--idle-timeout-ms`, `--batch-window-us`, `--max-batch`, `--conn-rps`).
+/// `--idle-timeout-ms`, `--batch-window-us`, `--max-batch`, `--conn-rps`,
+/// `--trace-buf`, `--trace-slow-ms`, `--log-level`, `--log-json`).
 #[derive(Clone, Debug)]
 pub struct EngineCfg {
     /// Worker threads executing quantize/eval/predict jobs.
@@ -142,6 +146,18 @@ pub struct EngineCfg {
     /// hash ring, so two shards never spill the same key concurrently to
     /// a shared `--cache-dir`.  `None` (single-process) owns everything.
     pub shard_slot: Option<(usize, usize)>,
+    /// Completed-trace ring capacity (`--trace-buf`; 0 disables tracing —
+    /// no `Trace` objects are created on the request path at all).
+    pub trace_buf: usize,
+    /// Requests slower than this emit one structured `slow_request` log
+    /// line with their full span tree (`--trace-slow-ms`; None disables).
+    pub trace_slow_ms: Option<u64>,
+    /// Structured-logger minimum level (`--log-level`; None keeps the
+    /// process default, `info`).
+    pub log_level: Option<String>,
+    /// Emit log lines as JSON documents instead of `k=v` text
+    /// (`--log-json`).
+    pub log_json: bool,
 }
 
 impl Default for EngineCfg {
@@ -160,6 +176,10 @@ impl Default for EngineCfg {
             conn_rps: 0,
             auth_token: None,
             shard_slot: None,
+            trace_buf: 1024,
+            trace_slow_ms: None,
+            log_level: None,
+            log_json: false,
         }
     }
 }
@@ -260,6 +280,9 @@ struct EvalFan {
     /// Fired exactly once by the last batch home.
     done: Mutex<Option<Done>>,
     ticket: Mutex<Option<CostTicket>>,
+    /// The requester's trace (None when tracing is off or the fan came
+    /// from the sync path).
+    trace: Option<Arc<Trace>>,
 }
 
 /// Multi-task completion state for one admitted quantize flight.
@@ -290,6 +313,11 @@ struct Assembly {
     /// response glue); fired exactly once by the last task home.
     notify: Mutex<Option<QuantCont>>,
     ticket: Mutex<Option<CostTicket>>,
+    /// The LEADER's trace (subscribers only get a `flight_subscribe`
+    /// event; the layer/assembly spans belong to the request that paid
+    /// for the compute).  None when tracing is off or the flight came
+    /// from the sync path.
+    trace: Option<Arc<Trace>>,
 }
 
 fn eval_params(req: &Json) -> (usize, usize) {
@@ -410,6 +438,13 @@ pub struct Engine {
     batcher: Batcher,
     /// Shared with the net reactor, which maintains the `conns.*` gauges.
     pub metrics: Arc<Metrics>,
+    /// Completed request traces, queryable via the `trace` verb.
+    traces: TraceRing,
+    /// Slow-request log threshold (see [`EngineCfg::trace_slow_ms`]).
+    trace_slow_ms: Option<u64>,
+    /// This worker's shard index, stamped on trace docs and Prometheus
+    /// series so cluster rollups stay attributable.
+    shard: Option<usize>,
 }
 
 impl Engine {
@@ -418,6 +453,14 @@ impl Engine {
     /// fingerprint changed since they were written).
     pub fn new(store: Arc<ModelStore>, cfg: EngineCfg) -> Result<Arc<Engine>> {
         let workers = cfg.workers.max(1);
+        if cfg.log_level.is_some() || cfg.log_json {
+            let level = cfg
+                .log_level
+                .as_deref()
+                .and_then(log::Level::parse)
+                .unwrap_or(log::Level::Info);
+            log::init(level, cfg.log_json);
+        }
         let metrics = Arc::new(Metrics::new());
         let disk = match &cfg.cache_dir {
             Some(dir) => {
@@ -468,6 +511,9 @@ impl Engine {
                     ),
                 }),
                 metrics,
+                traces: TraceRing::new(cfg.trace_buf),
+                trace_slow_ms: cfg.trace_slow_ms,
+                shard: cfg.shard_slot.map(|(i, _)| i),
             }
         }))
     }
@@ -514,6 +560,19 @@ impl Engine {
     /// metrics (per-cmd counts, latency histograms, error counts) are
     /// recorded at completion time, identically to the sync path.
     pub fn submit(self: &Arc<Self>, req: &Json, done: Done) {
+        self.submit_at(req, Instant::now(), done);
+    }
+
+    /// [`Engine::submit`] with an explicit ingress instant: `ingress` is
+    /// when the request hit the process (the reactor finished reading +
+    /// parsing + authenticating the line), so the trace's leading
+    /// `ingress` span covers protocol overhead the engine never sees.
+    /// Tracing rides this path only — a trace id arrives from the router
+    /// via the request's `"trace"` field (one id follows the request
+    /// across processes) or is minted fresh here; the finalized span tree
+    /// lands in the ring after the response callback returns, so the
+    /// `respond` span covers the caller's write-side work too.
+    pub fn submit_at(self: &Arc<Self>, req: &Json, ingress: Instant, done: Done) {
         let cmd = req
             .get("cmd")
             .and_then(|c| c.as_str().ok())
@@ -521,18 +580,47 @@ impl Engine {
             .to_string();
         self.metrics.count_cmd(&cmd);
         let t0 = Instant::now();
+        let tr: Option<Arc<Trace>> = if self.traces.enabled() {
+            let id = req
+                .get("trace")
+                .and_then(|v| v.as_str().ok())
+                .and_then(trace::parse_id)
+                .unwrap_or_else(trace::fresh_id);
+            let t = Trace::start(id, &cmd);
+            t.span_since("ingress", ingress, None);
+            Some(t)
+        } else {
+            None
+        };
         let done: Done = {
             let eng = Arc::clone(self);
             let cmd = cmd.clone();
+            let tr = tr.clone();
             Box::new(move |resp: Json| {
                 eng.finish(&cmd, t0, &resp);
-                done(resp);
+                match tr {
+                    Some(t) => {
+                        let status = trace::status_of(&resp);
+                        let resp = resp.set("trace", trace::id_hex(t.id()));
+                        let t_resp = Instant::now();
+                        done(resp);
+                        t.span_since("respond", t_resp, None);
+                        trace::complete(
+                            &t,
+                            status,
+                            &eng.traces,
+                            eng.trace_slow_ms,
+                            eng.shard,
+                        );
+                    }
+                    None => done(resp),
+                }
             })
         };
         match cmd.as_str() {
-            "quantize" => self.quantize_async(req, done),
-            "eval" => self.eval_async(req, done),
-            "predict" => self.predict_async(req, done),
+            "quantize" => self.quantize_async(req, tr, done),
+            "eval" => self.eval_async(req, tr, done),
+            "predict" => self.predict_async(req, tr, done),
             "warm" => self.warm_async(req, done),
             _ => done(self.simple_cmd(&cmd, req)),
         }
@@ -586,6 +674,33 @@ impl Engine {
             }
             "warm" => self.do_warm(req),
             "stats" => self.stats_json(),
+            // Completed request traces: `{"cmd":"trace"}` (last 16),
+            // `{"cmd":"trace","last":N}`, `{"cmd":"trace","slowest":N}` or
+            // `{"cmd":"trace","id":"<hex>"}`.  Under a shard router the
+            // router fans this out and merges, so one id reads as one tree.
+            "trace" => {
+                let docs: Vec<Json> = self
+                    .traces
+                    .query(req)
+                    .iter()
+                    .map(|t| t.to_json(self.shard))
+                    .collect();
+                Json::obj()
+                    .set("ok", true)
+                    .set("enabled", self.traces.enabled())
+                    .set("traces", Json::Arr(docs))
+            }
+            // Prometheus text exposition of the metrics snapshot.  The
+            // `snapshot` field carries the exact flat counters so a shard
+            // router can merge workers' snapshots and re-render the
+            // cluster total without scraping text.
+            "metrics-prom" => {
+                let snap = self.metrics.snapshot();
+                Json::obj()
+                    .set("ok", true)
+                    .set("prom", metrics::prometheus(&snap, self.shard))
+                    .set("snapshot", snap.to_json())
+            }
             other => Json::obj()
                 .set("ok", false)
                 .set("error", format!("unknown cmd '{other}'")),
@@ -656,7 +771,12 @@ impl Engine {
 
     /// Async `quantize`: resolves inline on a memory hit, otherwise the
     /// response is delivered from the worker that finishes the artifact.
-    fn quantize_async(self: &Arc<Self>, req: &Json, done: Done) {
+    fn quantize_async(
+        self: &Arc<Self>,
+        req: &Json,
+        tr: Option<Arc<Trace>>,
+        done: Done,
+    ) {
         let key = match self.key_from(req) {
             Ok(k) => k,
             Err(e) => return done(e.to_json()),
@@ -665,6 +785,7 @@ impl Engine {
         let k = key.clone();
         self.quantized_async(
             &key,
+            tr,
             Box::new(move |res| {
                 done(match res {
                     Ok((entry, src)) => quantize_response(&k, t0, &entry, src),
@@ -690,6 +811,7 @@ impl Engine {
         let (tx, rx) = mpsc::channel();
         self.eval_fan(
             EvalTask { key, entry, src, t0, samples, batch },
+            None,
             Box::new(move |resp| {
                 let _ = tx.send(resp);
             }),
@@ -704,7 +826,12 @@ impl Engine {
     /// Admission and task submission are non-blocking, so the continuation
     /// is safe on the reactor thread (memory hit) and on a leader's worker
     /// or completion fan-out alike.
-    fn eval_async(self: &Arc<Self>, req: &Json, done: Done) {
+    fn eval_async(
+        self: &Arc<Self>,
+        req: &Json,
+        tr: Option<Arc<Trace>>,
+        done: Done,
+    ) {
         let key = match self.key_from(req) {
             Ok(k) => k,
             Err(e) => return done(e.to_json()),
@@ -713,11 +840,14 @@ impl Engine {
         let t0 = Instant::now();
         let eng = Arc::clone(self);
         let k = key.clone();
+        let tr2 = tr.clone();
         self.quantized_async(
             &key,
+            tr,
             Box::new(move |res| match res {
                 Ok((entry, src)) => eng.eval_fan(
                     EvalTask { key: k, entry, src, t0, samples, batch },
+                    tr2,
                     done,
                 ),
                 Err(e) => done(e.to_json()),
@@ -733,7 +863,12 @@ impl Engine {
     /// interleave by predicted work instead of one eval pinning a worker
     /// for its whole run.  Never blocks the caller; `done` fires from the
     /// last batch's worker ([`Engine::finish_eval_fan`]).
-    fn eval_fan(self: &Arc<Self>, task: EvalTask, done: Done) {
+    fn eval_fan(
+        self: &Arc<Self>,
+        task: EvalTask,
+        tr: Option<Arc<Trace>>,
+        done: Done,
+    ) {
         let n = task.samples.min(self.store.test.len());
         if n == 0 {
             return done(
@@ -747,11 +882,21 @@ impl Engine {
         match self.sched.try_admit(per.saturating_mul(n as u64)) {
             Err(retry_ms) => {
                 self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                trace::ev(
+                    &tr,
+                    "admission_busy",
+                    Some(Json::obj().set("retry_ms", retry_ms as usize)),
+                );
                 done(ServeError::Busy { retry_ms }.to_json());
             }
             Ok(ticket) => {
                 let batch = task.batch.max(1);
                 let nb = n.div_ceil(batch);
+                trace::ev(
+                    &tr,
+                    "admitted",
+                    Some(Json::obj().set("eval_batches", nb)),
+                );
                 let fan = Arc::new(EvalFan {
                     task,
                     n,
@@ -762,6 +907,7 @@ impl Engine {
                     t_first: Mutex::new(None),
                     done: Mutex::new(Some(done)),
                     ticket: Mutex::new(Some(ticket)),
+                    trace: tr,
                 });
                 let mut vkey = self.sched.vnow();
                 for bi in 0..nb {
@@ -775,6 +921,7 @@ impl Engine {
                             .lock()
                             .unwrap()
                             .get_or_insert_with(Instant::now);
+                        let tb = Instant::now();
                         match eng.eval_batch(&f, bi * batch, bn) {
                             Ok(c) => {
                                 f.correct.fetch_add(c, Ordering::Relaxed);
@@ -783,6 +930,12 @@ impl Engine {
                                 f.failed.lock().unwrap().get_or_insert(msg);
                             }
                         }
+                        trace::span_since(
+                            &f.trace,
+                            "eval_batch",
+                            tb,
+                            Some(Json::obj().set("batch", bi).set("n", bn)),
+                        );
                         if f.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                             eng.finish_eval_fan(&f);
                         }
@@ -848,6 +1001,14 @@ impl Engine {
             self.metrics
                 .lat_compute
                 .record_ms((now - t_first).as_secs_f64() * 1e3);
+            trace::span_between(
+                &fan.trace,
+                "queue_wait",
+                fan.t_admit,
+                t_first,
+                None,
+            );
+            trace::span_between(&fan.trace, "compute", t_first, now, None);
         }
         drop(fan.ticket.lock().unwrap().take());
         let Some(done) = fan.done.lock().unwrap().take() else { return };
@@ -917,7 +1078,12 @@ impl Engine {
     /// machinery), then enqueue the input under the key's batch.  The
     /// response fires from the worker that runs the flushed batch's
     /// stacked forward ([`Engine::exec_batch`]).
-    fn predict_async(self: &Arc<Self>, req: &Json, done: Done) {
+    fn predict_async(
+        self: &Arc<Self>,
+        req: &Json,
+        tr: Option<Arc<Trace>>,
+        done: Done,
+    ) {
         let key = match self.key_from(req) {
             Ok(k) => k,
             Err(e) => return done(e.to_json()),
@@ -929,17 +1095,50 @@ impl Engine {
         let t0 = Instant::now();
         let eng = Arc::clone(self);
         let k = key.clone();
+        let tr2 = tr.clone();
         self.quantized_async(
             &key,
+            tr,
             Box::new(move |res| {
                 let (entry, src) = match res {
                     Ok(x) => x,
                     Err(e) => return done(e.to_json()),
                 };
+                trace::ev(&tr2, "batch_enqueue", None);
                 let key2 = k.clone();
                 let pd: PredictDone = Box::new(move |out| {
                     done(match out {
-                        Ok(out) => predict_response(&key2, t0, src, out),
+                        Ok(out) => {
+                            // Both stages were timed by the batch's worker;
+                            // backdate them so the tree shows the item's
+                            // collector wait and the stacked forward it
+                            // rode in (the forward is shared batch-wide).
+                            trace::span_backdated(
+                                &tr2,
+                                "batch_wait",
+                                (out.wait_ms * 1e3) as u64,
+                                None,
+                            );
+                            trace::span_backdated(
+                                &tr2,
+                                "batch_forward",
+                                (out.forward_ms * 1e3) as u64,
+                                Some(
+                                    Json::obj()
+                                        .set("batch", out.batch)
+                                        .set(
+                                            "int8",
+                                            out.kernels.int8 as usize,
+                                        )
+                                        .set(
+                                            "int4",
+                                            out.kernels.int4 as usize,
+                                        )
+                                        .set("f32", out.kernels.f32 as usize),
+                                ),
+                            );
+                            predict_response(&key2, t0, src, out)
+                        }
                         Err(e) => e.to_json(),
                     })
                 });
@@ -1018,6 +1217,7 @@ impl Engine {
                 Err(format!("predict batch panicked for {}", b.key.label()))
             });
             drop(inputs);
+            let forward_ms = t_first.elapsed().as_secs_f64() * 1e3;
             if fwd.is_ok() {
                 let now = Instant::now();
                 eng.metrics
@@ -1037,6 +1237,7 @@ impl Engine {
                             logits,
                             batch: n,
                             wait_ms,
+                            forward_ms,
                             kernels,
                         }));
                     }
@@ -1182,6 +1383,7 @@ impl Engine {
                     &key,
                     tasks,
                     ticket,
+                    None,
                     Box::new(move |hit| {
                         done(match hit {
                             Some(_) => Json::obj()
@@ -1289,6 +1491,18 @@ impl Engine {
                 "flight",
                 Json::obj().set("in_flight", self.flight.in_flight()),
             )
+            // Request-tracing gauges: ring capacity/occupancy plus the
+            // slow-log threshold (None renders as 0 = disabled).
+            .set(
+                "trace",
+                Json::obj()
+                    .set("enabled", self.traces.enabled())
+                    .set("buffered", self.traces.len())
+                    .set(
+                        "slow_ms",
+                        self.trace_slow_ms.unwrap_or(0) as usize,
+                    ),
+            )
             // Predict batching gauges + policy (counters and the
             // batch-size distribution live under metrics.predict).
             .set(
@@ -1371,9 +1585,15 @@ impl Engine {
     /// worker or the leader's completion fan-out otherwise.  Unlike the
     /// sync path, the disk probe runs inside the worker job: the reactor
     /// thread must never block on artifact file I/O.
-    fn quantized_async(self: &Arc<Self>, key: &QuantKey, cont: QuantCont) {
+    fn quantized_async(
+        self: &Arc<Self>,
+        key: &QuantKey,
+        tr: Option<Arc<Trace>>,
+        cont: QuantCont,
+    ) {
         if let Some(e) = self.cache.get(key) {
             self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+            trace::ev(&tr, "cache_hit", None);
             cont(Ok((e, Source::Hit)));
             return;
         }
@@ -1384,6 +1604,7 @@ impl Engine {
         let sub = {
             let eng = Arc::clone(self);
             let cell = Arc::clone(&cell);
+            let tr = tr.clone();
             move |res: QuantOutcome| {
                 let Some(cont) = cell.lock().unwrap().take() else { return };
                 // Only a successfully shared artifact counts toward the
@@ -1391,6 +1612,7 @@ impl Engine {
                 if res.is_ok() {
                     eng.metrics.flight_shared.fetch_add(1, Ordering::Relaxed);
                 }
+                trace::ev(&tr, "flight_subscribe", None);
                 cont(res.map(|e| (e, Source::Shared)));
             }
         };
@@ -1407,10 +1629,12 @@ impl Engine {
                 if let Some(e) = self.cache.get(key) {
                     self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
                     self.flight.complete(key, Ok(Arc::clone(&e)));
+                    trace::ev(&tr, "cache_hit", None);
                     cont(Ok((e, Source::Hit)));
                     return;
                 }
-                self.start_flight_with_probe(key, cont);
+                trace::ev(&tr, "flight_lead", None);
+                self.start_flight_with_probe(key, tr, cont);
             }
         }
     }
@@ -1476,7 +1700,7 @@ impl Engine {
                 // Only an admitted compute counts as a miss; busy-rejected
                 // leaders never ran anything.
                 self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
-                self.spawn_tasks(key, tasks, ticket, Instant::now(), cont);
+                self.spawn_tasks(key, tasks, ticket, Instant::now(), None, cont);
                 Ok(())
             }
         }
@@ -1494,6 +1718,7 @@ impl Engine {
         key: &QuantKey,
         tasks: Vec<LayerTask>,
         ticket: CostTicket,
+        tr: Option<Arc<Trace>>,
         on_probe: Box<
             dyn FnOnce(Option<Arc<CacheEntry>>) -> Option<QuantCont> + Send,
         >,
@@ -1502,7 +1727,15 @@ impl Engine {
         let eng = Arc::clone(self);
         let k = key.clone();
         self.sched.submit_task(self.sched.vnow(), move || {
-            if let Some(e) = eng.disk_probe(&k) {
+            let tp = Instant::now();
+            let probed = eng.disk_probe(&k);
+            trace::span_since(
+                &tr,
+                "disk_probe",
+                tp,
+                Some(Json::obj().set("hit", probed.is_some())),
+            );
+            if let Some(e) = probed {
                 eng.flight.complete(&k, Ok(Arc::clone(&e)));
                 drop(ticket);
                 on_probe(Some(e));
@@ -1512,28 +1745,50 @@ impl Engine {
             // neither hit nor miss, matching the sync path.
             eng.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
             let cont = on_probe(None).unwrap_or_else(|| Box::new(|_| {}));
-            eng.spawn_tasks(&k, tasks, ticket, t_admit, cont);
+            eng.spawn_tasks(&k, tasks, ticket, t_admit, tr, cont);
         });
     }
 
     /// Async-path counterpart of [`Engine::start_flight`]: admits first
     /// (inline, so a busy rejection answers without touching a worker),
     /// then probes the disk tier on a worker before fanning out.
-    fn start_flight_with_probe(self: &Arc<Self>, key: &QuantKey, cont: QuantCont) {
+    fn start_flight_with_probe(
+        self: &Arc<Self>,
+        key: &QuantKey,
+        tr: Option<Arc<Trace>>,
+        cont: QuantCont,
+    ) {
         match self.admit_flight(key) {
-            Err(e) => cont(Err(e)),
-            Ok((tasks, ticket)) => self.probe_then_spawn(
-                key,
-                tasks,
-                ticket,
-                Box::new(move |hit| match hit {
-                    Some(e) => {
-                        cont(Ok((e, Source::Disk)));
-                        None
-                    }
-                    None => Some(cont),
-                }),
-            ),
+            Err(e) => {
+                if let ServeError::Busy { retry_ms } = &e {
+                    trace::ev(
+                        &tr,
+                        "admission_busy",
+                        Some(Json::obj().set("retry_ms", *retry_ms as usize)),
+                    );
+                }
+                cont(Err(e))
+            }
+            Ok((tasks, ticket)) => {
+                trace::ev(
+                    &tr,
+                    "admitted",
+                    Some(Json::obj().set("layers", tasks.len())),
+                );
+                self.probe_then_spawn(
+                    key,
+                    tasks,
+                    ticket,
+                    tr,
+                    Box::new(move |hit| match hit {
+                        Some(e) => {
+                            cont(Ok((e, Source::Disk)));
+                            None
+                        }
+                        None => Some(cont),
+                    }),
+                )
+            }
         }
     }
 
@@ -1548,6 +1803,7 @@ impl Engine {
         tasks: Vec<LayerTask>,
         ticket: CostTicket,
         t_admit: Instant,
+        tr: Option<Arc<Trace>>,
         cont: QuantCont,
     ) {
         // The store is immutable for the engine's lifetime and admission
@@ -1585,6 +1841,7 @@ impl Engine {
             t_first: Mutex::new(None),
             notify: Mutex::new(Some(cont)),
             ticket: Mutex::new(Some(ticket)),
+            trace: tr,
         });
         if asm.remaining.load(Ordering::Relaxed) == 0 {
             // Degenerate model with no quantizable layers: nothing to
@@ -1610,6 +1867,22 @@ impl Engine {
                         || coordinator::run_layer_task(&task, &w),
                     ))
                     .ok();
+                // The per-layer compute span reuses the timer inside
+                // `run_layer_task` (the report's `ms`), so the trace and
+                // the QuantReport agree to the microsecond.
+                if let Some(o) = &out {
+                    trace::span_backdated(
+                        &a.trace,
+                        "layer",
+                        (o.report.ms * 1e3) as u64,
+                        Some(
+                            Json::obj()
+                                .set("weight", o.report.weight.as_str())
+                                .set("bits", o.report.bits)
+                                .set("ms", o.report.ms),
+                        ),
+                    );
+                }
                 a.slots.lock().unwrap()[i] = out;
                 if a.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                     eng.finish_assembly(&a);
@@ -1628,6 +1901,7 @@ impl Engine {
     /// home pays no file I/O at all.  Assembly panics are converted to
     /// errors so `complete` always runs.
     fn finish_assembly(self: &Arc<Self>, asm: &Assembly) {
+        let t_asm = Instant::now();
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.assemble_entry(asm)
         }))
@@ -1637,6 +1911,7 @@ impl Engine {
                 asm.key.label()
             )))
         });
+        trace::span_since(&asm.trace, "assemble", t_asm, None);
         // One queue/compute sample per flight that produced an artifact —
         // failed flights (task panic, vanished model) would skew the
         // split with near-zero compute times exactly when things go wrong.
@@ -1649,11 +1924,24 @@ impl Engine {
             self.metrics
                 .lat_compute
                 .record_ms((now - t_first).as_secs_f64() * 1e3);
+            trace::span_between(
+                &asm.trace,
+                "queue_wait",
+                asm.t_admit,
+                t_first,
+                None,
+            );
+            trace::span_between(&asm.trace, "compute", t_first, now, None);
         }
         let evicted = match &res {
             Ok(entry) => self.cache.put(asm.key.clone(), Arc::clone(entry)),
             Err(_) => Vec::new(),
         };
+        // Recorded before `notify` fires: the requester's continuation
+        // finalizes the trace, and events pushed after that are lost.
+        if res.is_ok() && self.disk.is_some() {
+            trace::ev(&asm.trace, "spill_queued", None);
+        }
         self.flight.complete(&asm.key, res.clone());
         // The artifact is published: release the admission ticket BEFORE
         // the notify — an async eval's continuation runs its accuracy
@@ -1788,7 +2076,13 @@ impl Engine {
                 self.metrics.disk_spills.fetch_add(1, Ordering::Relaxed);
             }
             Ok(false) => {} // larger than the whole disk budget
-            Err(e) => eprintln!("disk spill failed for {}: {e:#}", key.label()),
+            Err(e) => log::warn(
+                "disk_spill_failed",
+                &[
+                    ("key", Json::from(key.label())),
+                    ("error", Json::from(format!("{e:#}"))),
+                ],
+            ),
         }
     }
 

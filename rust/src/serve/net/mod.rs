@@ -53,6 +53,7 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
+use crate::util::log;
 
 use super::metrics::Metrics;
 use super::Done;
@@ -320,6 +321,10 @@ impl Reactor {
                 Ok((stream, _)) => {
                     if self.cfg.max_conns > 0 && self.conns.len() >= self.cfg.max_conns {
                         self.metrics.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                        log::debug(
+                            "conn_rejected",
+                            &[("open", Json::from(self.conns.len()))],
+                        );
                         // Best-effort one-line rejection; the socket is
                         // fresh so this cannot block meaningfully.
                         let mut s = stream;
@@ -399,6 +404,13 @@ impl Reactor {
                         self.metrics
                             .conns_rate_limited
                             .fetch_add(1, Ordering::Relaxed);
+                        log::debug(
+                            "conn_rate_limited",
+                            &[
+                                ("conn", Json::from(id as usize)),
+                                ("retry_ms", Json::from(retry_ms as usize)),
+                            ],
+                        );
                         respond(super::ServeError::Busy { retry_ms }.to_json());
                     }
                 }
@@ -464,6 +476,7 @@ impl Reactor {
             .collect();
         for id in expired {
             self.metrics.conns_idle_closed.fetch_add(1, Ordering::Relaxed);
+            log::debug("conn_idle_closed", &[("conn", Json::from(id as usize))]);
             self.close_conn(id);
         }
     }

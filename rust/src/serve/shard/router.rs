@@ -24,6 +24,16 @@
 //! respawned; until it is up, the ring's alive mask re-targets only the
 //! dead shard's hash ranges.
 //!
+//! Observability: when tracing is on (`--trace-buf` > 0, the default)
+//! every forwarded request carries a router-generated trace id in its
+//! `"trace"` field; the owning worker adopts the id, so the `trace`
+//! verb can later merge the router's spans (ingress, route, respond —
+//! plus a `shard_failed` event on requests answered `busy` by a dying
+//! shard) with the worker's spans into one tree. `metrics-prom` fans
+//! to the workers and renders their exactly-merged snapshots as a
+//! single Prometheus page; shard deaths and respawns emit structured
+//! log lines through [`crate::util::log`].
+//!
 //! Shutdown: `on_stop` runs before the reactor's client drain — it
 //! collects every response still owed by the shards (bounded by
 //! [`STOP_BUDGET`]; anything not answered in time gets `busy`), then
@@ -45,14 +55,16 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::quant::spec::QuantSpec;
-use crate::serve::metrics::Metrics;
+use crate::serve::metrics::{self, Metrics, Snapshot};
 use crate::serve::net::poller::{Interest, Poller};
 use crate::serve::net::{
     ct_eq, raw_fd, NetCfg, Reactor, StopHandle, Upstream, UPSTREAM_BASE,
 };
+use crate::serve::trace::{self, Trace, TraceRing};
 use crate::serve::{Done, EngineCfg, ServeError};
 use crate::util::fnv1a;
 use crate::util::json::Json;
+use crate::util::log;
 
 use super::health::{HealthCfg, HealthState};
 use super::rollup::merge_stats;
@@ -287,6 +299,8 @@ fn worker_flags(e: &EngineCfg) -> Vec<String> {
         e.batch_window_us.to_string(),
         "--max-batch".into(),
         e.max_batch.to_string(),
+        "--trace-buf".into(),
+        e.trace_buf.to_string(),
     ];
     if let Some(dir) = &e.cache_dir {
         v.push("--cache-dir".into());
@@ -295,6 +309,17 @@ fn worker_flags(e: &EngineCfg) -> Vec<String> {
     if let Some(token) = &e.auth_token {
         v.push("--auth-token".into());
         v.push(token.clone());
+    }
+    if let Some(ms) = e.trace_slow_ms {
+        v.push("--trace-slow-ms".into());
+        v.push(ms.to_string());
+    }
+    if let Some(level) = &e.log_level {
+        v.push("--log-level".into());
+        v.push(level.clone());
+    }
+    if e.log_json {
+        v.push("--log-json".into());
     }
     v
 }
@@ -313,12 +338,25 @@ pub struct RouterCore {
     shards: Vec<ShardProc>,
     metrics: Arc<Metrics>,
     respawns: u64,
+    /// Completed router-side traces: one per client request the router
+    /// forwarded, each mergeable with the owning worker's trace by id.
+    traces: TraceRing,
 }
 
 impl RouterCore {
     fn new(cfg: RouterCfg, metrics: Arc<Metrics>) -> Result<RouterCore> {
         if cfg.shards == 0 {
             bail!("--shards must be >= 1");
+        }
+        if cfg.engine.log_level.is_some() || cfg.engine.log_json {
+            log::init(
+                cfg.engine
+                    .log_level
+                    .as_deref()
+                    .and_then(log::Level::parse)
+                    .unwrap_or(log::Level::Info),
+                cfg.engine.log_json,
+            );
         }
         let mut shards = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
@@ -336,6 +374,7 @@ impl RouterCore {
         }
         Ok(RouterCore {
             ring: Ring::new(cfg.shards, VNODES),
+            traces: TraceRing::new(cfg.engine.trace_buf),
             cfg,
             shards,
             metrics,
@@ -356,8 +395,11 @@ impl RouterCore {
     }
 
     /// One framed client request. Auth and parse errors answer inline;
-    /// `stats` fans out; everything else forwards raw to its shard.
+    /// `stats`, `trace` and `metrics-prom` fan out; everything else
+    /// forwards to its shard — stamped with a router-generated trace id
+    /// when tracing is on, so the worker's spans merge with ours.
     pub fn dispatch(&mut self, line: &str, respond: Done, stop: &StopHandle) {
+        let t0 = Instant::now();
         let req = match Json::parse(line) {
             Ok(req) => req,
             Err(e) => {
@@ -384,6 +426,8 @@ impl RouterCore {
                 respond(Json::obj().set("ok", true).set("bye", true));
             }
             "stats" => self.cluster_stats(respond),
+            "trace" => self.cluster_trace(&req, respond),
+            "metrics-prom" => self.cluster_prom(respond),
             "shard-kill" => self.shard_kill(&req, respond),
             "models" => {
                 // Model listing is identical on every shard; ask the
@@ -396,8 +440,35 @@ impl RouterCore {
             _ => {
                 let point = route_point(&req, line);
                 match self.ring.route(point, &self.alive_mask()) {
+                    Some(s) if self.traces.enabled() => {
+                        let tr = Trace::start(trace::fresh_id(), cmd);
+                        tr.span_since("ingress", t0, None);
+                        tr.event("route", Some(Json::obj().set("shard", s)));
+                        // Splice the id into the forwarded line so the
+                        // worker's engine adopts it instead of minting
+                        // its own.
+                        let fwd = req.set("trace", trace::id_hex(tr.id())).dump();
+                        self.forward(s, &fwd, traced_done(tr, s, respond));
+                    }
                     Some(s) => self.forward(s, line, data_done(respond)),
-                    None => respond(ServeError::Busy { retry_ms: RETRY_MS }.to_json()),
+                    None => {
+                        let resp = ServeError::Busy { retry_ms: RETRY_MS }.to_json();
+                        if self.traces.enabled() {
+                            let tr = Trace::start(trace::fresh_id(), cmd);
+                            tr.span_since("ingress", t0, None);
+                            tr.event("no_shard_alive", None);
+                            respond(resp.set("trace", trace::id_hex(tr.id())));
+                            trace::complete(
+                                &tr,
+                                "busy",
+                                &self.traces,
+                                self.cfg.engine.trace_slow_ms,
+                                None,
+                            );
+                        } else {
+                            respond(resp);
+                        }
+                    }
                 }
             }
         }
@@ -490,6 +561,13 @@ impl RouterCore {
                 .and_then(|v| v.as_usize().ok())
                 .unwrap_or(0)
         };
+        let shard_kernel = |s: usize, key: &str| -> usize {
+            docs.iter()
+                .find(|(i, _)| *i == s)
+                .and_then(|(_, d)| d.get("metrics")?.get("kernel")?.get(key))
+                .and_then(|v| v.as_usize().ok())
+                .unwrap_or(0)
+        };
         let mut per = Vec::new();
         for (i, sp) in self.shards.iter().enumerate() {
             per.push(
@@ -499,7 +577,14 @@ impl RouterCore {
                     .set("pid", sp.child.id() as usize)
                     .set("addr", sp.addr.to_string())
                     .set("requests_total", shard_num(i, "requests_total"))
-                    .set("errors", shard_num(i, "errors")),
+                    .set("errors", shard_num(i, "errors"))
+                    .set(
+                        "kernel",
+                        Json::obj()
+                            .set("int8", shard_kernel(i, "int8"))
+                            .set("int4", shard_kernel(i, "int4"))
+                            .set("f32", shard_kernel(i, "f32")),
+                    ),
             );
         }
         let alive = self.shards.iter().filter(|s| s.alive).count();
@@ -513,6 +598,152 @@ impl RouterCore {
                     .set("respawns", self.respawns as usize)
                     .set("per_shard", Json::Arr(per)),
             )
+    }
+
+    /// Fan a `trace` query to every alive shard and merge with the
+    /// router's own ring: each router trace becomes the root of a tree
+    /// whose `children` are the same-id worker traces, so a request that
+    /// crossed processes reads as one tree.
+    fn cluster_trace(&mut self, req: &Json, respond: Done) {
+        let alive: Vec<usize> =
+            (0..self.shards.len()).filter(|&s| self.shards[s].alive).collect();
+        if alive.is_empty() {
+            let doc = self.trace_doc(req, Vec::new());
+            respond(doc);
+            return;
+        }
+        let fan = Rc::new(RefCell::new(FanState {
+            remaining: alive.len(),
+            docs: Vec::new(),
+            respond: Some(respond),
+        }));
+        // Forward the query itself (selection fields intact, auth
+        // re-stamped) so each worker runs the same selection against
+        // its own ring.
+        let mut fwd = req.clone();
+        if let Some(t) = &self.cfg.engine.auth_token {
+            fwd = fwd.set("auth", t.as_str());
+        }
+        let line = fwd.dump();
+        for s in alive {
+            let fan = Rc::clone(&fan);
+            let query = req.clone();
+            let done: ShardDone = Box::new(move |core, reply| {
+                let mut f = fan.borrow_mut();
+                if let ShardReply::Ok(doc) = reply {
+                    f.docs.push((s, doc));
+                }
+                f.remaining -= 1;
+                if f.remaining == 0 {
+                    let docs = std::mem::take(&mut f.docs);
+                    let respond = f.respond.take().expect("fan answers once");
+                    drop(f);
+                    respond(core.trace_doc(&query, docs));
+                }
+            });
+            self.forward(s, &line, done);
+        }
+    }
+
+    /// Merge worker trace docs into the router's own selection. An
+    /// id-lookup that only a worker remembers (e.g. the router ring was
+    /// smaller) falls back to the bare worker docs.
+    fn trace_doc(&mut self, req: &Json, docs: Vec<(usize, Json)>) -> Json {
+        let mut workers: Vec<(String, Json)> = Vec::new();
+        for (_, d) in &docs {
+            if let Some(Ok(arr)) = d.get("traces").map(|t| t.as_arr()) {
+                for t in arr {
+                    if let Some(id) = t.get("id").and_then(|v| v.as_str().ok()) {
+                        workers.push((id.to_string(), t.clone()));
+                    }
+                }
+            }
+        }
+        let own = self.traces.query(req);
+        let mut out: Vec<Json> = Vec::new();
+        for t in &own {
+            let id = trace::id_hex(t.id);
+            let kids: Vec<Json> = workers
+                .iter()
+                .filter(|(i, _)| *i == id)
+                .map(|(_, d)| d.clone())
+                .collect();
+            out.push(t.to_json(None).set("children", Json::Arr(kids)));
+        }
+        if out.is_empty() {
+            if let Some(id) = req.get("id").and_then(|v| v.as_str().ok()) {
+                out.extend(
+                    workers
+                        .iter()
+                        .filter(|(i, _)| i.as_str() == id)
+                        .map(|(_, d)| d.clone()),
+                );
+            }
+        }
+        Json::obj()
+            .set("ok", true)
+            .set("enabled", self.traces.enabled())
+            .set("traces", Json::Arr(out))
+    }
+
+    /// Fan `metrics-prom` to every alive shard, merge the structured
+    /// snapshots exactly (counters summed, histogram buckets added) and
+    /// render one cluster-wide Prometheus page.
+    fn cluster_prom(&mut self, respond: Done) {
+        let alive: Vec<usize> =
+            (0..self.shards.len()).filter(|&s| self.shards[s].alive).collect();
+        if alive.is_empty() {
+            let doc = self.prom_doc(Vec::new());
+            respond(doc);
+            return;
+        }
+        let fan = Rc::new(RefCell::new(FanState {
+            remaining: alive.len(),
+            docs: Vec::new(),
+            respond: Some(respond),
+        }));
+        let line = self.auth_line("metrics-prom");
+        for s in alive {
+            let fan = Rc::clone(&fan);
+            let done: ShardDone = Box::new(move |core, reply| {
+                let mut f = fan.borrow_mut();
+                if let ShardReply::Ok(doc) = reply {
+                    f.docs.push((s, doc));
+                }
+                f.remaining -= 1;
+                if f.remaining == 0 {
+                    let docs = std::mem::take(&mut f.docs);
+                    let respond = f.respond.take().expect("fan answers once");
+                    drop(f);
+                    respond(core.prom_doc(docs));
+                }
+            });
+            self.forward(s, &line, done);
+        }
+    }
+
+    /// The cluster Prometheus document: worker snapshots merged exactly,
+    /// with the `conns_*` gauges replaced by the router's own
+    /// client-facing values (worker pool connections are an
+    /// implementation detail, not client load).
+    fn prom_doc(&mut self, docs: Vec<(usize, Json)>) -> Json {
+        let mut merged = Snapshot::default();
+        for (_, d) in &docs {
+            if let Some(s) = d.get("snapshot") {
+                merged.merge(&Snapshot::from_json(s));
+            }
+        }
+        let g = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed);
+        merged.conns_active = g(&self.metrics.conns_active);
+        merged.conns_peak = g(&self.metrics.conns_peak);
+        merged.conns_rejected = g(&self.metrics.conns_rejected);
+        merged.conns_idle_closed = g(&self.metrics.conns_idle_closed);
+        merged.conns_rate_limited = g(&self.metrics.conns_rate_limited);
+        merged.conns_auth_failed = g(&self.metrics.conns_auth_failed);
+        Json::obj()
+            .set("ok", true)
+            .set("prom", metrics::prometheus(&merged, None))
+            .set("snapshot", merged.to_json())
     }
 
     /// Declare a shard dead: every response it still owes answers `busy`
@@ -529,6 +760,10 @@ impl RouterCore {
             owed.extend(c.pending.drain(..));
             c.wbuf.clear();
         }
+        log::warn(
+            "shard_down",
+            &[("shard", Json::from(s)), ("owed", Json::from(owed.len()))],
+        );
         for done in owed {
             done(self, ShardReply::Failed);
         }
@@ -573,8 +808,22 @@ impl RouterCore {
                 }
                 self.shards[s] = fresh;
                 self.respawns += 1;
+                log::info(
+                    "shard_respawn",
+                    &[
+                        ("shard", Json::from(s)),
+                        ("pid", Json::from(self.shards[s].child.id() as usize)),
+                    ],
+                );
             }
-            Err(_) => {
+            Err(e) => {
+                log::warn(
+                    "shard_respawn_failed",
+                    &[
+                        ("shard", Json::from(s)),
+                        ("error", Json::from(format!("{e:#}"))),
+                    ],
+                );
                 self.shards[s].next_respawn = Some(now + RESPAWN_BACKOFF);
             }
         }
@@ -733,6 +982,37 @@ fn data_done(respond: Done) -> ShardDone {
     Box::new(move |_core, reply| match reply {
         ShardReply::Ok(j) => respond(j),
         ShardReply::Failed => respond(ServeError::Busy { retry_ms: RETRY_MS }.to_json()),
+    })
+}
+
+/// Trace-aware [`data_done`]: a shard death additionally records a
+/// `shard_failed` event (so the busy answer's trace tells the client
+/// *why*), the response is stamped with the trace id, and the finished
+/// router-side trace lands in the router's own ring.
+fn traced_done(tr: Arc<Trace>, shard: usize, respond: Done) -> ShardDone {
+    Box::new(move |core, reply| {
+        let resp = match reply {
+            ShardReply::Ok(j) => j,
+            ShardReply::Failed => {
+                tr.event(
+                    "shard_failed",
+                    Some(
+                        Json::obj()
+                            .set("shard", shard)
+                            .set("retry_ms", RETRY_MS as usize),
+                    ),
+                );
+                ServeError::Busy { retry_ms: RETRY_MS }.to_json()
+            }
+        };
+        let status = trace::status_of(&resp);
+        // Same id the worker echoed (it adopted ours), or freshly
+        // stamped on router-generated busy answers.
+        let resp = resp.set("trace", trace::id_hex(tr.id()));
+        let t_resp = Instant::now();
+        respond(resp);
+        tr.span_since("respond", t_resp, None);
+        trace::complete(&tr, status, &core.traces, core.cfg.engine.trace_slow_ms, None);
     })
 }
 
@@ -920,5 +1200,34 @@ mod tests {
         // Pool connections are persistent: workers must not reap them.
         let i = flags.iter().position(|f| f == "--idle-timeout-ms").unwrap();
         assert_eq!(flags[i + 1], "0");
+    }
+
+    #[test]
+    fn worker_flags_forward_observability_settings() {
+        let e = EngineCfg {
+            trace_buf: 64,
+            trace_slow_ms: Some(250),
+            log_level: Some("debug".into()),
+            log_json: true,
+            ..EngineCfg::default()
+        };
+        let flags = worker_flags(&e);
+        let kv = |k: &str| {
+            let i = flags.iter().position(|f| f == k).unwrap();
+            flags[i + 1].clone()
+        };
+        assert_eq!(kv("--trace-buf"), "64");
+        assert_eq!(kv("--trace-slow-ms"), "250");
+        assert_eq!(kv("--log-level"), "debug");
+        assert!(flags.iter().any(|f| f == "--log-json"));
+        // Defaults: tracing on (ring 1024), no slow threshold, no log
+        // flags — keep the spawn line minimal.
+        let d = worker_flags(&EngineCfg::default());
+        assert_eq!(
+            d[d.iter().position(|f| f == "--trace-buf").unwrap() + 1],
+            "1024"
+        );
+        assert!(!d.iter().any(|f| f == "--trace-slow-ms"));
+        assert!(!d.iter().any(|f| f == "--log-level" || f == "--log-json"));
     }
 }

@@ -1,0 +1,463 @@
+//! End-to-end request tracing: allocation-light spans, process-unique
+//! trace ids, and a bounded ring buffer of completed traces behind the
+//! `trace` protocol verb.
+//!
+//! Every request gets a trace id stamped at its ingress — the router
+//! generates one under `--shards N` and propagates it to the owning
+//! worker via a `"trace"` field on the internal protocol line, so one id
+//! follows a request across processes and the router can later merge its
+//! own spans with the worker's into a single tree.  Inside a process the
+//! live [`Trace`] is an `Arc` threaded along the request path; recording
+//! a span is a lock-push of a small struct (name is `&'static str`, the
+//! optional detail is only built for spans that carry one), and nothing
+//! is allocated at all when tracing is disabled (`--trace-buf 0`) because
+//! no `Trace` is created.
+//!
+//! Completed traces become plain-data [`DoneTrace`]s in a [`TraceRing`]
+//! (capacity `--trace-buf`, default 1024) queryable by `last`, `slowest`
+//! or exact id; requests slower than `--trace-slow-ms` additionally emit
+//! one structured log line through [`crate::util::log`].
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::{log, Fnv1a};
+
+/// Process-unique 64-bit trace id: FNV-1a over a per-process random seed
+/// (pid + boot instant) and a monotonic counter.  A respawned worker gets
+/// a fresh seed, so ids never collide across a kill + respawn.
+pub fn fresh_id() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let seed = *SEED.get_or_init(|| {
+        let mut h = Fnv1a::new();
+        h.update(&std::process::id().to_le_bytes());
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        h.update(&t.to_le_bytes());
+        h.finish()
+    });
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    let mut h = Fnv1a::new();
+    h.update(&seed.to_le_bytes());
+    h.update(&n.to_le_bytes());
+    h.finish()
+}
+
+/// Wire form of a trace id (the `"trace"` request/response field).
+pub fn id_hex(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+pub fn parse_id(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// One timed stage of a request, offsets relative to the trace start.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Stage-specific payload (layer name + bits, kernel counts, shard,
+    /// flush reason...). `None` for plain timing spans.
+    pub detail: Option<Json>,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        let doc = Json::obj()
+            .set("name", self.name)
+            .set("start_us", self.start_us as usize)
+            .set("dur_us", self.dur_us as usize);
+        match &self.detail {
+            Some(d) => doc.set("detail", d.clone()),
+            None => doc,
+        }
+    }
+}
+
+/// A live, in-progress trace; shared along the request path as
+/// `Arc<Trace>` and finalized exactly once at response time.
+pub struct Trace {
+    id: u64,
+    cmd: String,
+    start: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Trace {
+    pub fn start(id: u64, cmd: &str) -> Arc<Trace> {
+        Arc::new(Trace {
+            id,
+            cmd: cmd.to_string(),
+            start: Instant::now(),
+            spans: Mutex::new(Vec::with_capacity(8)),
+        })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn elapsed_us(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.start).as_micros() as u64
+    }
+
+    /// Record a span that started at `from` and ends now.
+    pub fn span_since(
+        &self,
+        name: &'static str,
+        from: Instant,
+        detail: Option<Json>,
+    ) {
+        let start_us = self.elapsed_us(from);
+        let dur_us = self.elapsed_us(Instant::now()).saturating_sub(start_us);
+        self.push(Span { name, start_us, dur_us, detail });
+    }
+
+    /// Record a span with both endpoints known (e.g. the queue wait
+    /// between admission and the first task start, reported by the last
+    /// task home after both instants have passed).
+    pub fn span_between(
+        &self,
+        name: &'static str,
+        from: Instant,
+        to: Instant,
+        detail: Option<Json>,
+    ) {
+        let start_us = self.elapsed_us(from);
+        let dur_us = self.elapsed_us(to).saturating_sub(start_us);
+        self.push(Span { name, start_us, dur_us, detail });
+    }
+
+    /// Record an externally-timed span ending now (e.g. a per-layer `ms`
+    /// measured inside the layer task, or a batch wait measured by the
+    /// collector): backdate the start by the known duration.
+    pub fn span_backdated(
+        &self,
+        name: &'static str,
+        dur_us: u64,
+        detail: Option<Json>,
+    ) {
+        let end_us = self.elapsed_us(Instant::now());
+        let start_us = end_us.saturating_sub(dur_us);
+        self.push(Span { name, start_us, dur_us, detail });
+    }
+
+    /// Record an instantaneous event (zero-duration span).
+    pub fn event(&self, name: &'static str, detail: Option<Json>) {
+        let at = self.elapsed_us(Instant::now());
+        self.push(Span { name, start_us: at, dur_us: 0, detail });
+    }
+
+    fn push(&self, span: Span) {
+        self.spans.lock().unwrap().push(span);
+    }
+
+    /// Freeze into the plain-data completed form. Spans report in
+    /// recording order (which is completion order, not start order).
+    pub fn finish(&self, status: &str) -> DoneTrace {
+        DoneTrace {
+            id: self.id,
+            cmd: self.cmd.clone(),
+            status: status.to_string(),
+            total_us: self.elapsed_us(Instant::now()),
+            spans: self.spans.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// Helpers that make "record if tracing is on" a one-liner at call sites
+/// threading an `Option<Arc<Trace>>`.
+pub fn ev(tr: &Option<Arc<Trace>>, name: &'static str, detail: Option<Json>) {
+    if let Some(t) = tr {
+        t.event(name, detail);
+    }
+}
+
+pub fn span_since(
+    tr: &Option<Arc<Trace>>,
+    name: &'static str,
+    from: Instant,
+    detail: Option<Json>,
+) {
+    if let Some(t) = tr {
+        t.span_since(name, from, detail);
+    }
+}
+
+pub fn span_backdated(
+    tr: &Option<Arc<Trace>>,
+    name: &'static str,
+    dur_us: u64,
+    detail: Option<Json>,
+) {
+    if let Some(t) = tr {
+        t.span_backdated(name, dur_us, detail);
+    }
+}
+
+pub fn span_between(
+    tr: &Option<Arc<Trace>>,
+    name: &'static str,
+    from: Instant,
+    to: Instant,
+    detail: Option<Json>,
+) {
+    if let Some(t) = tr {
+        t.span_between(name, from, to, detail);
+    }
+}
+
+/// A completed trace: plain data, cheap to clone out of the ring.
+#[derive(Clone, Debug)]
+pub struct DoneTrace {
+    pub id: u64,
+    pub cmd: String,
+    /// `"ok"`, `"busy"` or `"error"` — derived from the response doc.
+    pub status: String,
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+}
+
+impl DoneTrace {
+    pub fn to_json(&self, shard: Option<usize>) -> Json {
+        let spans: Vec<Json> = self.spans.iter().map(Span::to_json).collect();
+        let doc = Json::obj()
+            .set("id", id_hex(self.id))
+            .set("cmd", self.cmd.as_str())
+            .set("status", self.status.as_str())
+            .set("total_us", self.total_us as usize)
+            .set("total_ms", self.total_us as f64 / 1e3)
+            .set("spans", Json::Arr(spans));
+        match shard {
+            Some(s) => doc.set("shard", s),
+            None => doc,
+        }
+    }
+}
+
+/// Derive the trace status label from a protocol response document.
+pub fn status_of(resp: &Json) -> &'static str {
+    if matches!(resp.get("ok"), Some(Json::Bool(true))) {
+        "ok"
+    } else if resp.get("error").and_then(|e| e.as_str().ok()) == Some("busy") {
+        "busy"
+    } else {
+        "error"
+    }
+}
+
+/// Bounded ring of completed traces. Capacity 0 disables tracing
+/// entirely (no `Trace` objects are created upstream).
+pub struct TraceRing {
+    cap: usize,
+    inner: Mutex<VecDeque<DoneTrace>>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing {
+            cap,
+            inner: Mutex::new(VecDeque::with_capacity(cap.min(64))),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn push(&self, t: DoneTrace) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut buf = self.inner.lock().unwrap();
+        if buf.len() == self.cap {
+            buf.pop_front();
+        }
+        buf.push_back(t);
+    }
+
+    /// Newest-first slice of the ring.
+    pub fn last(&self, n: usize) -> Vec<DoneTrace> {
+        let buf = self.inner.lock().unwrap();
+        buf.iter().rev().take(n).cloned().collect()
+    }
+
+    /// Slowest-first by total duration.
+    pub fn slowest(&self, n: usize) -> Vec<DoneTrace> {
+        let buf = self.inner.lock().unwrap();
+        let mut all: Vec<DoneTrace> = buf.iter().cloned().collect();
+        all.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        all.truncate(n);
+        all
+    }
+
+    pub fn find(&self, id: u64) -> Option<DoneTrace> {
+        let buf = self.inner.lock().unwrap();
+        buf.iter().rev().find(|t| t.id == id).cloned()
+    }
+
+    /// Answer a `trace` verb request against this ring: exact `id` wins,
+    /// then `slowest`, then `last` (default 16, capped at the capacity).
+    pub fn query(&self, req: &Json) -> Vec<DoneTrace> {
+        if let Some(id) =
+            req.get("id").and_then(|v| v.as_str().ok()).and_then(parse_id)
+        {
+            return self.find(id).into_iter().collect();
+        }
+        if let Some(n) = req.get("slowest").and_then(|v| v.as_usize().ok()) {
+            return self.slowest(n.max(1));
+        }
+        let n = req
+            .get("last")
+            .and_then(|v| v.as_usize().ok())
+            .unwrap_or(16)
+            .max(1);
+        self.last(n)
+    }
+}
+
+/// Finalize a trace: freeze it, emit the slow-request log line when the
+/// total exceeds `slow_ms`, and land it in the ring. The one call every
+/// finished request makes (engine and router alike).
+pub fn complete(
+    tr: &Trace,
+    status: &str,
+    ring: &TraceRing,
+    slow_ms: Option<u64>,
+    shard: Option<usize>,
+) {
+    let done = tr.finish(status);
+    if let Some(ms) = slow_ms {
+        if done.total_us >= ms.saturating_mul(1000) {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("id", Json::from(id_hex(done.id))),
+                ("cmd", Json::from(done.cmd.as_str())),
+                ("status", Json::from(done.status.as_str())),
+                ("total_ms", Json::from(done.total_us as f64 / 1e3)),
+                (
+                    "spans",
+                    Json::Arr(done.spans.iter().map(Span::to_json).collect()),
+                ),
+            ];
+            if let Some(s) = shard {
+                fields.push(("shard", Json::from(s)));
+            }
+            log::warn("slow_request", &fields);
+        }
+    }
+    ring.push(done);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_hex_round_trips() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            let id = fresh_id();
+            assert!(seen.insert(id), "collision on {id:#x}");
+            assert_eq!(parse_id(&id_hex(id)), Some(id));
+        }
+        assert_eq!(parse_id("not-hex"), None);
+    }
+
+    #[test]
+    fn spans_record_relative_offsets() {
+        let tr = Trace::start(fresh_id(), "predict");
+        let t0 = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        tr.span_since("compute", t0, None);
+        tr.span_backdated("layer", 500, Some(Json::obj().set("bits", 4usize)));
+        tr.event("respond", None);
+        let done = tr.finish("ok");
+        assert_eq!(done.spans.len(), 3);
+        assert!(done.spans[0].dur_us >= 1_000, "{:?}", done.spans[0]);
+        assert_eq!(done.spans[1].dur_us, 500);
+        assert!(done.spans[1].start_us + 500 <= done.total_us + 1);
+        assert_eq!(done.spans[2].dur_us, 0);
+        assert!(done.total_us >= done.spans[0].dur_us);
+        let j = done.to_json(Some(2));
+        assert_eq!(j.req("shard").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            j.req("spans").unwrap().as_arr().unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn ring_bounds_and_queries() {
+        let ring = TraceRing::new(4);
+        assert!(ring.enabled());
+        for i in 0..6u64 {
+            let tr = Trace::start(i + 1, "q");
+            let mut d = tr.finish("ok");
+            d.total_us = (i + 1) * 100;
+            ring.push(d);
+        }
+        assert_eq!(ring.len(), 4, "ring drops oldest");
+        let last = ring.last(2);
+        assert_eq!(last[0].id, 6);
+        assert_eq!(last[1].id, 5);
+        let slow = ring.slowest(2);
+        assert_eq!(slow[0].id, 6);
+        assert!(ring.find(6).is_some());
+        assert!(ring.find(1).is_none(), "evicted");
+
+        // Verb-shaped queries.
+        let by_id = ring.query(&Json::obj().set("id", id_hex(5)));
+        assert_eq!(by_id.len(), 1);
+        assert_eq!(by_id[0].id, 5);
+        let slowest = ring.query(&Json::obj().set("slowest", 3usize));
+        assert_eq!(slowest.len(), 3);
+        assert!(slowest[0].total_us >= slowest[2].total_us);
+        assert_eq!(ring.query(&Json::obj()).len(), 4);
+    }
+
+    #[test]
+    fn disabled_ring_stays_empty() {
+        let ring = TraceRing::new(0);
+        assert!(!ring.enabled());
+        let tr = Trace::start(1, "ping");
+        ring.push(tr.finish("ok"));
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn status_derives_from_response_shape() {
+        assert_eq!(status_of(&Json::obj().set("ok", true)), "ok");
+        assert_eq!(
+            status_of(&Json::obj().set("error", "busy").set("retry_ms", 50usize)),
+            "busy"
+        );
+        assert_eq!(status_of(&Json::obj().set("error", "auth")), "error");
+    }
+
+    #[test]
+    fn complete_lands_in_ring_with_status() {
+        let ring = TraceRing::new(8);
+        let tr = Trace::start(fresh_id(), "predict");
+        tr.event("ingress", None);
+        complete(&tr, "ok", &ring, Some(0), Some(1));
+        let got = ring.find(tr.id()).expect("completed trace in ring");
+        assert_eq!(got.status, "ok");
+        assert_eq!(got.spans.len(), 1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Minimal leveled, structured logger for the serving stack.
+//!
+//! One process-global sink writing single lines to stderr — stdout is
+//! reserved for protocol use (the worker ready-line, bench snapshots).
+//! Two render modes share one call site API:
+//!
+//!  * text (default): `1723112345.123 WARN shard_down shard=2 reason=...`
+//!  * JSON (`--log-json`): `{"ts":...,"level":"warn","event":"shard_down",
+//!    "shard":2,...}` — one valid JSON document per line, so log shippers
+//!    and the bench-serve `--trace --strict` assertions can parse every
+//!    line without a grammar.
+//!
+//! The level and mode live in atomics so `init` is race-free and callers
+//! never take a lock to discover that a `debug` line is filtered out.
+//! There is deliberately no macro layer: an event name plus a small
+//! `(&str, Json)` field slice covers everything the serving paths emit.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Severity, ordered so a numeric comparison implements filtering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+static MIN_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static JSON_MODE: AtomicBool = AtomicBool::new(false);
+
+/// Configure the process logger. Safe to call more than once (last call
+/// wins); callers that never init get text mode at `info`.
+pub fn init(level: Level, json: bool) {
+    MIN_LEVEL.store(level as u8, Ordering::Relaxed);
+    JSON_MODE.store(json, Ordering::Relaxed);
+}
+
+/// Would a line at `level` be emitted? Lets callers skip building
+/// expensive field sets for filtered levels.
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= MIN_LEVEL.load(Ordering::Relaxed)
+}
+
+fn now_ts() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Render one event as a single line (no trailing newline) in the
+/// process-global mode; `log` is the emitting entry point.
+pub fn render(level: Level, event: &str, fields: &[(&str, Json)]) -> String {
+    render_with(JSON_MODE.load(Ordering::Relaxed), level, event, fields)
+}
+
+/// Mode-explicit renderer (tests use this to avoid racing on the global
+/// mode flag; the two modes must stay line-for-line equivalent in content).
+pub fn render_with(
+    json: bool,
+    level: Level,
+    event: &str,
+    fields: &[(&str, Json)],
+) -> String {
+    if json {
+        let mut doc = Json::obj()
+            .set("ts", now_ts())
+            .set("level", level.as_str())
+            .set("event", event);
+        for (k, v) in fields {
+            doc = doc.set(k, v.clone());
+        }
+        doc.dump()
+    } else {
+        let mut line = format!("{:.3} {} {}", now_ts(), level.as_str(), event);
+        for (k, v) in fields {
+            let val = match v {
+                Json::Str(s) => s.clone(),
+                other => other.dump(),
+            };
+            line.push_str(&format!(" {k}={val}"));
+        }
+        line
+    }
+}
+
+/// Emit one structured line to stderr if `level` passes the filter.
+pub fn log(level: Level, event: &str, fields: &[(&str, Json)]) {
+    if !enabled(level) {
+        return;
+    }
+    let line = render(level, event, fields);
+    let stderr = std::io::stderr();
+    let mut out = stderr.lock();
+    let _ = writeln!(out, "{line}");
+}
+
+pub fn debug(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Debug, event, fields);
+}
+
+pub fn info(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Info, event, fields);
+}
+
+pub fn warn(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Warn, event, fields);
+}
+
+pub fn error(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Error, event, fields);
+}
+
+/// Install a panic hook that logs one structured `panic` event (with the
+/// worker's shard id when given) before chaining to the previous hook —
+/// so a router reading a dead worker's stderr can explain the respawn.
+pub fn install_panic_hook(shard: Option<usize>) {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let msg = if let Some(s) = info.payload().downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = info.payload().downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        };
+        let mut fields: Vec<(&str, Json)> = vec![("message", Json::from(msg))];
+        if let Some(s) = shard {
+            fields.push(("shard", Json::from(s)));
+        }
+        let loc = info.location().map(|l| format!("{}:{}", l.file(), l.line()));
+        if let Some(l) = loc {
+            fields.push(("location", Json::from(l)));
+        }
+        log(Level::Error, "panic", &fields);
+        prev(info);
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_round_trips() {
+        for l in [Level::Debug, Level::Info, Level::Warn, Level::Error] {
+            assert_eq!(Level::parse(l.as_str()), Some(l));
+        }
+        assert_eq!(Level::parse("loud"), None);
+        assert!(Level::Debug < Level::Error);
+    }
+
+    #[test]
+    fn json_render_parses_and_carries_fields() {
+        let line = render_with(
+            true,
+            Level::Warn,
+            "shard_down",
+            &[("shard", Json::from(2usize)), ("reason", Json::from("io"))],
+        );
+        let doc = Json::parse(&line).expect("log line is one JSON doc");
+        assert_eq!(doc.req("level").unwrap().as_str().unwrap(), "warn");
+        assert_eq!(doc.req("event").unwrap().as_str().unwrap(), "shard_down");
+        assert_eq!(doc.req("shard").unwrap().as_usize().unwrap(), 2);
+        assert!(doc.req("ts").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn text_render_is_single_line_key_values() {
+        let line = render_with(
+            false,
+            Level::Info,
+            "respawn",
+            &[("shard", Json::from(1usize))],
+        );
+        assert!(line.contains("info respawn"), "{line}");
+        assert!(line.contains("shard=1"), "{line}");
+        assert!(!line.contains('\n'));
+    }
+}

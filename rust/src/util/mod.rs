@@ -1,13 +1,14 @@
 //! Self-contained utility layer.
 //!
 //! The offline vendor set ships only `xla` + `anyhow`, so the crate carries
-//! its own JSON codec, RNG, thread pool, CLI parser, bench harness and a
-//! small property-testing helper — all deliberately minimal but real
-//! (tested in each module).
+//! its own JSON codec, RNG, thread pool, CLI parser, bench harness,
+//! structured logger and a small property-testing helper — all
+//! deliberately minimal but real (tested in each module).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,547 @@
+//! Integration tests for the observability subsystem, end to end against
+//! real router + worker-shard processes: a request trace that crosses the
+//! process boundary merges into one tree under the `trace` verb; the
+//! `metrics-prom` page is valid Prometheus text whose totals match the
+//! JSON `stats` rollup; a request answered `busy` by a dying shard still
+//! yields a complete trace carrying the failure event, and the respawned
+//! shard's requests mint fresh ids with no collisions; a worker run with
+//! `--log-json --trace-slow-ms 0` emits one parseable JSON document per
+//! stderr line.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Read};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use squant::coordinator::server::Client;
+use squant::serve::shard::health::HealthCfg;
+use squant::serve::shard::{self, RouterCfg, RouterHandle};
+use squant::serve::EngineCfg;
+use squant::util::json::Json;
+
+fn engine() -> EngineCfg {
+    EngineCfg {
+        workers: 2,
+        queue_depth: 8,
+        cache_cap: 8,
+        cache_mb: 64,
+        ..EngineCfg::default()
+    }
+}
+
+fn spawn_with(
+    shards: usize,
+    engine_cfg: EngineCfg,
+    health: HealthCfg,
+) -> RouterHandle {
+    shard::spawn_router(RouterCfg {
+        shards,
+        addr: "127.0.0.1:0".into(),
+        exe: PathBuf::from(env!("CARGO_BIN_EXE_squant")),
+        model_args: vec!["--tiny".into()],
+        engine: engine_cfg,
+        health,
+    })
+    .expect("router + shards up")
+}
+
+fn spawn(shards: usize, engine_cfg: EngineCfg) -> RouterHandle {
+    spawn_with(shards, engine_cfg, Default::default())
+}
+
+fn connect(handle: &RouterHandle) -> Client {
+    let mut c = Client::connect(&handle.addr.to_string()).unwrap();
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    c
+}
+
+fn json(s: &str) -> Json {
+    Json::parse(s).unwrap()
+}
+
+fn is_ok(resp: &Json) -> bool {
+    matches!(resp.get("ok"), Some(Json::Bool(true)))
+}
+
+fn is_busy(resp: &Json) -> bool {
+    resp.get("error")
+        .and_then(|e| e.as_str().ok())
+        .map(|e| e == "busy")
+        .unwrap_or(false)
+}
+
+fn quantize(client: &mut Client, wbits: usize) -> Json {
+    client
+        .call(
+            &Json::obj()
+                .set("cmd", "quantize")
+                .set("model", "tiny")
+                .set("wbits", wbits),
+        )
+        .unwrap()
+}
+
+/// Every response through a tracing engine/router carries its trace id
+/// as 16 lowercase hex digits.
+fn trace_id(resp: &Json) -> String {
+    let id = resp
+        .req("trace")
+        .expect("traced response")
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert_eq!(id.len(), 16, "ids render as 016x hex: {id}");
+    id
+}
+
+/// `{"cmd":"trace","id":...}` must return exactly one tree for the id.
+fn trace_by_id(client: &mut Client, id: &str) -> Json {
+    let resp = client
+        .call(&Json::obj().set("cmd", "trace").set("id", id))
+        .unwrap();
+    assert!(is_ok(&resp), "{}", resp.dump());
+    assert_eq!(resp.req("enabled").unwrap(), &Json::Bool(true));
+    let traces = resp.req("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 1, "one tree per id: {}", resp.dump());
+    traces[0].clone()
+}
+
+fn span_names(doc: &Json) -> Vec<String> {
+    doc.req("spans")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|s| s.get("name").and_then(|n| n.as_str().ok()))
+        .map(str::to_string)
+        .collect()
+}
+
+fn find_span<'a>(doc: &'a Json, name: &str) -> Option<&'a Json> {
+    doc.get("spans")?
+        .as_arr()
+        .ok()?
+        .iter()
+        .find(|s| s.get("name").and_then(|n| n.as_str().ok()) == Some(name))
+}
+
+/// The acceptance path: a cold `predict` through `--shards 2` quantizes
+/// inline on the owning worker and batches the forward; the `trace` verb
+/// answers one merged tree — router spans at the root, the worker's
+/// same-id spans (admission through kernel dispatch) as its child.
+#[test]
+fn predict_through_two_shards_merges_into_one_trace_tree() {
+    let handle = spawn(2, engine());
+    let mut client = connect(&handle);
+
+    let models = client.call(&Json::obj().set("cmd", "models")).unwrap();
+    assert!(is_ok(&models), "{}", models.dump());
+    let input_len = models.req("input_len").unwrap().as_usize().unwrap();
+
+    // Cold key: the predict leads the single-flight quantize itself, so
+    // its trace carries the whole pipeline, not just the batch stages.
+    let req = Json::obj()
+        .set("cmd", "predict")
+        .set("model", "tiny")
+        .set("wbits", 8usize)
+        .set(
+            "input",
+            Json::Arr((0..input_len).map(|_| Json::from(0.0)).collect()),
+        );
+    let resp = client.call(&req).unwrap();
+    assert!(is_ok(&resp), "{}", resp.dump());
+    let id = trace_id(&resp);
+
+    let doc = trace_by_id(&mut client, &id);
+    assert_eq!(doc.req("id").unwrap().as_str().unwrap(), id);
+    assert_eq!(doc.req("cmd").unwrap().as_str().unwrap(), "predict");
+    assert_eq!(doc.req("status").unwrap().as_str().unwrap(), "ok");
+    assert!(doc.req("total_us").unwrap().as_usize().unwrap() > 0);
+    let names = span_names(&doc);
+    for need in ["ingress", "route", "respond"] {
+        assert!(
+            names.iter().any(|n| n == need),
+            "router span {need} missing: {}",
+            doc.dump()
+        );
+    }
+    let route = find_span(&doc, "route").unwrap();
+    let owner =
+        route.req("detail").unwrap().req("shard").unwrap().as_usize().unwrap();
+    assert!(owner < 2, "{}", doc.dump());
+
+    // Exactly one worker continued this id; its spans nest as the child.
+    let kids = doc.req("children").unwrap().as_arr().unwrap();
+    assert_eq!(kids.len(), 1, "{}", doc.dump());
+    let kid = &kids[0];
+    assert_eq!(kid.req("id").unwrap().as_str().unwrap(), id);
+    assert_eq!(kid.req("shard").unwrap().as_usize().unwrap(), owner);
+    assert_eq!(kid.req("status").unwrap().as_str().unwrap(), "ok");
+    let wnames = span_names(kid);
+    for need in [
+        "ingress",
+        "flight_lead",
+        "disk_probe",
+        "layer",
+        "assemble",
+        "batch_enqueue",
+        "batch_wait",
+        "batch_forward",
+        "respond",
+    ] {
+        assert!(
+            wnames.iter().any(|n| n == need),
+            "worker span {need} missing: {}",
+            kid.dump()
+        );
+    }
+    // Per-layer compute spans carry the quantization detail, and the
+    // stacked forward reports how many nodes each kernel dispatched.
+    let layer = find_span(kid, "layer").unwrap().req("detail").unwrap();
+    assert!(layer.req("bits").unwrap().as_usize().unwrap() >= 2);
+    assert!(!layer.req("weight").unwrap().as_str().unwrap().is_empty());
+    let fwd = find_span(kid, "batch_forward").unwrap().req("detail").unwrap();
+    assert!(fwd.req("batch").unwrap().as_usize().unwrap() >= 1);
+    let dispatched = fwd.req("int8").unwrap().as_usize().unwrap()
+        + fwd.req("int4").unwrap().as_usize().unwrap()
+        + fwd.req("f32").unwrap().as_usize().unwrap();
+    assert!(dispatched > 0, "forward dispatched kernels: {}", kid.dump());
+
+    handle.join();
+}
+
+/// `metrics-prom` through the router: the page parses as Prometheus text
+/// exposition, its counters match the JSON `stats` rollup exactly, and
+/// the per-shard kernel counters in `per_shard[]` sum to the merged ones.
+#[test]
+fn metrics_prom_is_valid_exposition_and_matches_stats() {
+    let handle = spawn(2, engine());
+    let mut client = connect(&handle);
+
+    for wb in 2..=5usize {
+        let r = quantize(&mut client, wb);
+        assert!(is_ok(&r), "wbits {wb}: {}", r.dump());
+    }
+    let models = client.call(&Json::obj().set("cmd", "models")).unwrap();
+    let input_len = models.req("input_len").unwrap().as_usize().unwrap();
+    let pr = client
+        .call(
+            &Json::obj()
+                .set("cmd", "predict")
+                .set("model", "tiny")
+                .set("wbits", 4usize)
+                .set(
+                    "input",
+                    Json::Arr((0..input_len).map(|_| Json::from(0.0)).collect()),
+                ),
+        )
+        .unwrap();
+    assert!(is_ok(&pr), "{}", pr.dump());
+
+    let prom = client.call(&Json::obj().set("cmd", "metrics-prom")).unwrap();
+    assert!(is_ok(&prom), "{}", prom.dump());
+    let text = prom.req("prom").unwrap().as_str().unwrap().to_string();
+
+    // Valid exposition format: every line is a HELP/TYPE comment or a
+    // `series value` sample whose value parses as a float.
+    let mut series: Vec<(String, f64)> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(
+                rest.starts_with("HELP ") || rest.starts_with("TYPE "),
+                "unexpected comment: {line:?}"
+            );
+            continue;
+        }
+        let (name, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        assert!(!name.is_empty(), "{line:?}");
+        let v: f64 = value
+            .parse()
+            .unwrap_or_else(|_| panic!("bad sample value in {line:?}"));
+        series.push((name.to_string(), v));
+    }
+    assert!(text.contains("# TYPE squant_requests_total counter"), "{text}");
+    assert!(text.contains("# TYPE squant_latency_seconds histogram"), "{text}");
+    // The cluster page is the merged snapshot — per-shard labels only
+    // appear when scraping a worker directly.
+    assert!(!text.contains("shard="), "cluster page must be merged: {text}");
+
+    let sample = |name: &str| -> usize {
+        series
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("series {name} missing"))
+            .1 as usize
+    };
+    assert_eq!(sample("squant_requests_total{cmd=\"quantize\"}"), 4);
+    assert_eq!(sample("squant_requests_total{cmd=\"predict\"}"), 1);
+
+    // The machine-readable snapshot rides along with the same counters
+    // (CMDS order pins quantize at index 2).
+    let by_cmd = prom.req("snapshot").unwrap().req("by_cmd").unwrap();
+    assert_eq!(by_cmd.as_arr().unwrap()[2].as_usize().unwrap(), 4);
+
+    // The JSON stats rollup agrees with the prom page, counter for
+    // counter (neither fan-out verb touches these).
+    let stats = client.call(&json(r#"{"cmd":"stats"}"#)).unwrap();
+    assert!(is_ok(&stats), "{}", stats.dump());
+    let reqs = stats.req("metrics").unwrap().req("requests").unwrap();
+    assert_eq!(reqs.req("quantize").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(reqs.req("predict").unwrap().as_usize().unwrap(), 1);
+    let kernel = stats.req("metrics").unwrap().req("kernel").unwrap();
+    for k in ["int8", "int4", "f32"] {
+        assert_eq!(
+            sample(&format!("squant_kernel_dispatch_total{{kernel=\"{k}\"}}")),
+            kernel.req(k).unwrap().as_usize().unwrap(),
+            "kernel {k}: {text}"
+        );
+    }
+
+    // Satellite invariant: the per-shard kernel counters in the cluster
+    // doc sum to the merged totals, and the predict dispatched something.
+    let per = stats
+        .req("cluster")
+        .unwrap()
+        .req("per_shard")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    let mut sum = 0usize;
+    for k in ["int8", "int4", "f32"] {
+        let shards: usize = per
+            .iter()
+            .map(|p| p.req("kernel").unwrap().req(k).unwrap().as_usize().unwrap())
+            .sum();
+        assert_eq!(
+            shards,
+            kernel.req(k).unwrap().as_usize().unwrap(),
+            "per-shard {k} rollup: {}",
+            stats.dump()
+        );
+        sum += shards;
+    }
+    assert!(sum > 0, "predict dispatched kernels: {}", stats.dump());
+
+    handle.join();
+}
+
+/// A shard dying with a request in flight answers the client `busy`, and
+/// the trace of that request survives with the failure recorded: a
+/// `shard_failed` event naming the shard and the suggested retry.  After
+/// the respawn, new requests mint fresh trace ids — none collide with any
+/// id issued before the crash.
+#[cfg(unix)]
+#[test]
+fn shard_death_traces_busy_failure_and_respawn_mints_fresh_ids() {
+    // Probing effectively off: only the data path may discover the death,
+    // so the in-flight request deterministically drains as `busy` (the
+    // reactor tick still drives the respawn on its own).
+    let health = HealthCfg {
+        period: Duration::from_secs(3600),
+        timeout: Duration::from_secs(3600),
+    };
+    let handle = spawn_with(2, engine(), health);
+    let mut client = connect(&handle);
+
+    let mut seen: HashSet<String> = HashSet::new();
+    let first = quantize(&mut client, 4);
+    assert!(is_ok(&first), "{}", first.dump());
+    let key_id = trace_id(&first);
+    seen.insert(key_id.clone());
+    for wb in [2usize, 3, 5, 6] {
+        let r = quantize(&mut client, wb);
+        assert!(is_ok(&r), "{}", r.dump());
+        assert!(seen.insert(trace_id(&r)), "duplicate id: {}", r.dump());
+    }
+
+    // The wbits=4 key's owner is whoever answered its trace's child.
+    let doc = trace_by_id(&mut client, &key_id);
+    let kids = doc.req("children").unwrap().as_arr().unwrap();
+    let owner = kids[0].req("shard").unwrap().as_usize().unwrap();
+    let stats = client.call(&json(r#"{"cmd":"stats"}"#)).unwrap();
+    let per = stats
+        .req("cluster")
+        .unwrap()
+        .req("per_shard")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    let pid = per[owner].req("pid").unwrap().as_usize().unwrap();
+
+    // Freeze the owner so the next request parks on it, then kill it
+    // behind the router's back while the request is in flight.
+    assert!(Command::new("kill")
+        .args(["-STOP", &pid.to_string()])
+        .status()
+        .unwrap()
+        .success());
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        let _ = Command::new("kill").args(["-9", &pid.to_string()]).status();
+    });
+    let r = quantize(&mut client, 4);
+    killer.join().unwrap();
+    assert!(is_busy(&r), "drained as busy: {}", r.dump());
+    assert!(
+        r.req("retry_ms").unwrap().as_usize().unwrap() > 0,
+        "{}",
+        r.dump()
+    );
+    let busy_id = trace_id(&r);
+    assert!(!seen.contains(&busy_id), "busy trace reused an id");
+
+    // The failed request's trace is complete: status busy, the failure
+    // event names the shard, and no worker claims the id (the owner died
+    // holding its half).
+    let doc = trace_by_id(&mut client, &busy_id);
+    assert_eq!(doc.req("status").unwrap().as_str().unwrap(), "busy");
+    let names = span_names(&doc);
+    for need in ["ingress", "route", "shard_failed", "respond"] {
+        assert!(
+            names.iter().any(|n| n == need),
+            "busy-trace span {need} missing: {}",
+            doc.dump()
+        );
+    }
+    let fail = find_span(&doc, "shard_failed").unwrap().req("detail").unwrap();
+    assert_eq!(fail.req("shard").unwrap().as_usize().unwrap(), owner);
+    assert!(fail.req("retry_ms").unwrap().as_usize().unwrap() > 0);
+    match doc.get("children") {
+        None => {}
+        Some(k) => assert!(k.as_arr().unwrap().is_empty(), "{}", doc.dump()),
+    }
+
+    // Wait for the replacement, then verify the id space stays fresh.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = client.call(&json(r#"{"cmd":"stats"}"#)).unwrap();
+        let c = s.req("cluster").unwrap();
+        if c.req("alive").unwrap().as_usize().unwrap() == 2
+            && c.req("respawns").unwrap().as_usize().unwrap() >= 1
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no respawn: {}", s.dump());
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    seen.insert(busy_id);
+    for wb in [4usize, 7, 8] {
+        let mut r = quantize(&mut client, wb);
+        for _ in 0..20 {
+            if !is_busy(&r) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+            r = quantize(&mut client, wb);
+        }
+        assert!(is_ok(&r), "wbits {wb} after respawn: {}", r.dump());
+        assert!(
+            seen.insert(trace_id(&r)),
+            "post-respawn id collided: {}",
+            r.dump()
+        );
+    }
+
+    handle.join();
+}
+
+/// A worker run with `--log-json --trace-slow-ms 0` slow-logs every
+/// request as exactly one JSON document per stderr line, carrying the
+/// same span tree the `trace` verb serves; its direct prom page labels
+/// every series with the shard id.
+#[test]
+fn worker_emits_structured_json_slow_logs_on_stderr() {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_squant"))
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--shard-worker",
+            "0",
+            "--shards",
+            "1",
+            "--tiny",
+            "--workers",
+            "2",
+            "--queue-depth",
+            "8",
+            "--log-json",
+            "--trace-slow-ms",
+            "0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("worker process");
+    let mut ready = String::new();
+    BufReader::new(child.stdout.as_mut().unwrap())
+        .read_line(&mut ready)
+        .unwrap();
+    let addr = Json::parse(ready.trim())
+        .expect("ready line")
+        .req("addr")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let r = c
+        .call(
+            &Json::obj()
+                .set("cmd", "quantize")
+                .set("model", "tiny")
+                .set("wbits", 4usize),
+        )
+        .unwrap();
+    assert!(is_ok(&r), "{}", r.dump());
+    // No router stamped an id, so the worker minted one itself.
+    let id = trace_id(&r);
+
+    // Scraped directly, the worker labels every series with its shard.
+    let prom = c.call(&Json::obj().set("cmd", "metrics-prom")).unwrap();
+    assert!(is_ok(&prom), "{}", prom.dump());
+    let text = prom.req("prom").unwrap().as_str().unwrap();
+    assert!(
+        text.contains("squant_requests_total{shard=\"0\",cmd=\"quantize\"} 1"),
+        "{text}"
+    );
+
+    // The shutdown reply may race the socket close; the exit is what
+    // matters.
+    let _ = c.call(&Json::obj().set("cmd", "shutdown"));
+    let status = child.wait().unwrap();
+    assert!(status.success(), "worker exit: {status:?}");
+
+    let mut err = String::new();
+    child.stderr.as_mut().unwrap().read_to_string(&mut err).unwrap();
+    let mut slow = 0usize;
+    for line in err.lines().filter(|l| !l.trim().is_empty()) {
+        let doc = Json::parse(line)
+            .unwrap_or_else(|e| panic!("stderr not JSON ({e:#}): {line:?}"));
+        assert!(doc.get("event").is_some(), "{line:?}");
+        assert!(doc.get("level").is_some(), "{line:?}");
+        if doc.get("event").and_then(|v| v.as_str().ok()) == Some("slow_request")
+        {
+            slow += 1;
+            if doc.req("id").unwrap().as_str().unwrap() == id {
+                // The logged spans are the tree the trace verb serves.
+                let spans = doc.req("spans").unwrap().as_arr().unwrap();
+                assert!(
+                    spans.iter().any(|s| {
+                        s.get("name").and_then(|n| n.as_str().ok())
+                            == Some("assemble")
+                    }),
+                    "{line:?}"
+                );
+            }
+        }
+    }
+    assert!(slow >= 2, "every request slow-logs at threshold 0:\n{err}");
+}
