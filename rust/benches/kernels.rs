@@ -1,19 +1,25 @@
 //! Packed-kernel microbenchmarks: f32 matmul vs the integer qgemm path
-//! (i8 and nibble-packed i4), plus the runtime costs the packed path adds
-//! (weight packing, activation quantization) and a served predict tail
-//! latency over the tiny in-memory model.
+//! (i8 and nibble-packed i4) across its three execution tiers —
+//! unblocked reference, blocked (panel microkernel + cache tiling), and
+//! blocked+parallel (cooperative pool partitions) — plus the runtime
+//! costs the packed path adds (weight packing, activation quantization)
+//! and a served predict tail latency over the tiny in-memory model.
 //!
-//! Writes a BENCH_kernels.json snapshot (GFLOP/s per kernel, pack /
-//! act-quantize ms, serve p50/p99 ms) for cross-PR regression tracking.
+//! Writes a BENCH_kernels.json snapshot (GFLOP/s per kernel tier with
+//! blocked/parallel speedup ratios, pack / act-quantize ms, serve
+//! p50/p99 ms) for cross-PR regression tracking.
 
 use squant::coordinator::server;
 use squant::quant::{channel_scales, quantize_rtn, quantize_rtn_packed, QuantConfig};
 use squant::serve::EngineCfg;
 use squant::tensor::matmul::matmul_into;
-use squant::tensor::qgemm::{act_grid, qgemm_into, quantize_acts};
+use squant::tensor::qgemm::{
+    act_grid, qgemm_into, qgemm_parallel_into, qgemm_unblocked_into, quantize_acts,
+};
 use squant::tensor::{QTensor, Tensor};
 use squant::util::bench::bench;
 use squant::util::json::Json;
+use squant::util::pool::ThreadPool;
 use squant::util::rng::Rng;
 
 /// One GEMM shape benched across the three kernels.  (m, k, n) is the
@@ -49,10 +55,13 @@ fn bench_case(c: &Case) -> Json {
     let f32_gfs = gflops(m, k, n, st.median_ns);
     println!("{st}   ({f32_gfs:.2} GFLOP/s)");
 
-    // Packed kernels: same shape from a quantized weight + u8 panel.
+    // Packed kernels: same shape from a quantized weight + u8 panel,
+    // swept across the three execution tiers.  The pool matches the
+    // default serve worker count shape (4 helpers + the caller).
     let g = act_grid(8, -1.0, 1.0).expect("symmetric 8-bit grid");
     let mut panel = vec![0u8; k * n];
     quantize_acts(&x, g, &mut panel);
+    let pool = ThreadPool::new(4);
     let mut case = Json::obj()
         .set("m", m)
         .set("k", k)
@@ -61,15 +70,42 @@ fn bench_case(c: &Case) -> Json {
     for bits in [8usize, 4] {
         let scales = channel_scales(&w, QuantConfig::new(bits));
         let qt = quantize_rtn_packed(&w, &scales, bits).expect("packable bits");
-        let st = bench(&format!("{} qgemm int{bits}", c.name), 2, 7, || {
+        let st = bench(&format!("{} int{bits} unblocked", c.name), 2, 7, || {
+            qgemm_unblocked_into(&qt, 0, m, &panel, k, n, g.scale, g.zp, &mut dst);
+        });
+        let base_gfs = gflops(m, k, n, st.median_ns);
+        println!("{st}   ({base_gfs:.2} GFLOP/s)");
+        let st = bench(&format!("{} int{bits} blocked", c.name), 2, 7, || {
             qgemm_into(&qt, 0, m, &panel, k, n, g.scale, g.zp, &mut dst);
         });
         let gfs = gflops(m, k, n, st.median_ns);
         println!(
-            "{st}   ({gfs:.2} GFLOP/s, {:.2}x f32)",
+            "{st}   ({gfs:.2} GFLOP/s, {:.2}x unblocked, {:.2}x f32)",
+            gfs / base_gfs.max(1e-9),
             gfs / f32_gfs.max(1e-9)
         );
-        case = case.set(&format!("int{bits}_gflops"), gfs);
+        let st = bench(&format!("{} int{bits} blocked+par", c.name), 2, 7, || {
+            qgemm_parallel_into(
+                &pool, 8, 1 << 20, &qt, &panel, k, n, g.scale, g.zp, &mut dst,
+            );
+        });
+        let par_gfs = gflops(m, k, n, st.median_ns);
+        println!(
+            "{st}   ({par_gfs:.2} GFLOP/s, {:.2}x blocked)",
+            par_gfs / gfs.max(1e-9)
+        );
+        case = case
+            .set(&format!("int{bits}_unblocked_gflops"), base_gfs)
+            .set(&format!("int{bits}_gflops"), gfs)
+            .set(&format!("int{bits}_parallel_gflops"), par_gfs)
+            .set(
+                &format!("int{bits}_blocked_speedup"),
+                gfs / base_gfs.max(1e-9),
+            )
+            .set(
+                &format!("int{bits}_parallel_speedup"),
+                par_gfs / base_gfs.max(1e-9),
+            );
     }
 
     // The packed path's runtime overheads: packing the weight grid once at

@@ -188,7 +188,10 @@ pub fn plan_layers(
 
 /// Execute one layer task against its weight tensor.  The per-layer timer
 /// covers everything the task computes — scale search included — so `ms`
-/// is comparable across the native, serving and offload paths.
+/// is comparable across the native, serving and offload paths.  Packing
+/// (`pack_grid` → `QTensor::from_grid`) also builds the kernel-native
+/// panel layout (`QTensor::packed`) here, at quantize time, so forwards
+/// against the cached artifact never unpack or repack weights.
 pub fn run_layer_task(task: &LayerTask, w: &Tensor) -> LayerOutcome {
     let lt = Instant::now();
     let (bits, wq, packed, flips_k, flips_c) = match task.method {

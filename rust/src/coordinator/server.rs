@@ -43,7 +43,13 @@
 //! weight-only specs (`a0`), FP32/`w>8` override layers and
 //! unrepresentable activation grids fall back to f32, so a
 //! mixed-precision spec reports a mix.  The same counters accumulate
-//! server-wide under `stats` → `metrics` → `kernel`.
+//! server-wide under `stats` → `metrics` → `kernel`, which additionally
+//! carries `"gemm_tasks"` / `"gemm_split"` / `"gemm_inline"`: how many
+//! packed GEMM calls were split into cooperative pool partitions (one
+//! `gemm_tasks` count per partition) vs run inline on the calling
+//! worker — the blocked-GEMM parallelism knob (`nn/engine.rs`
+//! `GEMM_SPLIT_COST_BITS`) observable per shard and in Prometheus as
+//! `squant_gemm_tasks_total` / `squant_gemm_calls_total{mode}`.
 //!
 //! Responses always carry `"ok"`.  `quantize`/`eval`/`predict` add
 //! `"cached"`, `"spec"` (the canonical spec served), `"source"`

@@ -1178,6 +1178,16 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
     };
     let (k8, k4, kf) = (kget("int8"), kget("int4"), kget("f32"));
     println!("  kernels    : int8 {k8:.0}, int4 {k4:.0}, f32 {kf:.0}");
+    // Blocked-GEMM partitioning: how many packed GEMM calls split into
+    // cooperative pool partitions vs ran inline, and the mean partition
+    // count per split (gemm_tasks / gemm_split).
+    let (gt, gs, gi) =
+        (kget("gemm_tasks"), kget("gemm_split"), kget("gemm_inline"));
+    let mean_parts = if gs > 0.0 { gt / gs } else { 0.0 };
+    println!(
+        "  gemm       : {gs:.0} split / {gi:.0} inline \
+         ({gt:.0} partition tasks, mean {mean_parts:.2}/split)"
+    );
     if let Ok(conns_stats) = stats1.req("conns") {
         println!(
             "  conns      : active {}, peak {}, rejected {}, idle-closed {}",
@@ -1329,6 +1339,14 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
                 .set("int8", k8 as usize)
                 .set("int4", k4 as usize)
                 .set("f32", kf as usize),
+        )
+        .set(
+            "gemm",
+            Json::obj()
+                .set("tasks", gt as usize)
+                .set("split", gs as usize)
+                .set("inline", gi as usize)
+                .set("mean_partitions", mean_parts),
         );
     if let Some(base) = baseline_req_s {
         snapshot = snapshot
@@ -1382,6 +1400,17 @@ fn cmd_bench_serve(artifacts: &str, args: &mut Args) -> Result<()> {
         bail!(
             "--require-int8: stats kernel.int8 = {k8:.0}; \
              the packed i8 path never ran (int4 {k4:.0}, f32 {kf:.0})"
+        );
+    }
+    // Under pipelined predict traffic the batch collector stacks inputs,
+    // and a 2+-image tiny-model conv crosses GEMM_SPLIT_COST_BITS — so
+    // the packed-kernel smoke also proves pool-parallel GEMM actually
+    // engaged, not just that the int8 kernel dispatched.
+    if require_int8 && predict && gt < 1.0 {
+        bail!(
+            "--require-int8: stats kernel.gemm_tasks = {gt:.0}; \
+             no packed GEMM ever split across the pool \
+             (split {gs:.0}, inline {gi:.0}, mean batch {server_mean_batch:.2})"
         );
     }
 

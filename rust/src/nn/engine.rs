@@ -22,9 +22,12 @@ use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use super::{Graph, Op, Params};
-use crate::tensor::im2col::{im2col, im2col_u8, out_dim};
-use crate::tensor::qgemm::{act_grid, qgemm_into, quantize_acts, ActGrid};
+use crate::tensor::im2col::{im2col, im2col_u8_into, out_dim};
+use crate::tensor::qgemm::{
+    act_grid, qgemm_into, qgemm_parallel_into, quantize_acts, ActGrid,
+};
 use crate::tensor::{matmul::matmul_bt, matmul::matmul_into, QTensor, Tensor};
+use crate::util::pool::ThreadPool;
 use crate::util::rn;
 
 /// Per-tensor affine activation quantizer: node id -> (min, max) range.
@@ -121,6 +124,38 @@ impl KernelCounts {
     }
 }
 
+/// Threshold above which a packed GEMM is split into pool partitions, in
+/// weight-element-bits of the GEMM actually run (`M·N·K × storage bits`
+/// summed over the batch) — the same cost currency the serving scheduler
+/// admits flights in.  Deliberately small (2^15 ≈ one tiny-model conv
+/// image) so the CI tiny model demonstrably splits on a 2+-input batch;
+/// real layers are orders of magnitude past it either way, and below it
+/// partition bookkeeping costs more than the arithmetic.
+pub const GEMM_SPLIT_COST_BITS: u64 = 1 << 15;
+
+/// Per-forward packed-GEMM partitioning stats: how many conv/linear GEMM
+/// calls ran inline vs split across the pool, and how many partition
+/// subtasks the splits produced in total (caller + helpers — `tasks /
+/// split` is the mean partition count).  Surfaced through serve metrics
+/// as `kernel.{gemm_tasks,gemm_split,gemm_inline}`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GemmStats {
+    /// Partition subtasks executed across all split GEMM calls.
+    pub tasks: u64,
+    /// Packed GEMM calls split into pool partitions.
+    pub split: u64,
+    /// Packed GEMM calls run inline (below threshold, or no pool).
+    pub inline: u64,
+}
+
+impl GemmStats {
+    pub fn add(&mut self, other: GemmStats) {
+        self.tasks += other.tasks;
+        self.split += other.split;
+        self.inline += other.inline;
+    }
+}
+
 /// What to record during a forward pass.
 #[derive(Default)]
 pub struct Capture {
@@ -142,6 +177,8 @@ pub struct ForwardOut {
     pub captured_out: HashMap<usize, Tensor>,
     /// Which kernel path each conv/linear node dispatched to.
     pub kernels: KernelCounts,
+    /// Packed-GEMM partitioning stats (all-inline when no pool was given).
+    pub gemm: GemmStats,
 }
 
 /// Run the graph on a (B, C, H, W) input batch (f32 path only — see
@@ -181,6 +218,28 @@ pub fn forward_q(
     act_quant: Option<&ActQuant>,
     capture: Option<&Capture>,
 ) -> Result<ForwardOut> {
+    forward_exec(graph, params, qparams, x, act_quant, capture, None)
+}
+
+/// [`forward_q`] with an optional worker pool: packed GEMMs whose cost
+/// exceeds [`GEMM_SPLIT_COST_BITS`] are split into partitions run
+/// cooperatively on `pool` (`ThreadPool::coop_run` — the calling thread
+/// participates and helpers ride the weighted queue, so the pool's thread
+/// count is never exceeded and a saturated pool degrades to inline
+/// execution).  Convs partition over batch images, linears over output
+/// rows; partitions write disjoint output ranges and integer accumulation
+/// is order-independent, so logits are **bit-identical** to the serial
+/// call (pinned by test).  `ForwardOut::gemm` reports what split.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_exec(
+    graph: &Graph,
+    params: &Params,
+    qparams: Option<&QuantizedParams>,
+    x: &Tensor,
+    act_quant: Option<&ActQuant>,
+    capture: Option<&Capture>,
+    pool: Option<&ThreadPool>,
+) -> Result<ForwardOut> {
     if x.ndim() != 4 {
         bail!("input must be (B,C,H,W), got {:?}", x.shape);
     }
@@ -188,6 +247,7 @@ pub fn forward_q(
     let mut captured = HashMap::new();
     let mut captured_out = HashMap::new();
     let mut kernels = KernelCounts::default();
+    let mut gemm = GemmStats::default();
 
     for node in &graph.nodes {
         let get = |i: usize| -> Result<&Tensor> {
@@ -223,12 +283,16 @@ pub fn forward_q(
                             bias.as_ref().and_then(|b| params.get(b)),
                             grid,
                             *stride, *ph, *pw, *groups, *cin, *cout, *kh, *kw,
+                            pool,
+                            &mut gemm,
                         )?,
                         Op::Linear { bias, .. } => linear_q(
                             input,
                             qt,
                             bias.as_ref().and_then(|b| params.get(b)),
                             grid,
+                            pool,
+                            &mut gemm,
                         )?,
                         _ => unreachable!(),
                     };
@@ -327,7 +391,7 @@ pub fn forward_q(
         .pop()
         .flatten()
         .context("empty graph")?;
-    Ok(ForwardOut { logits, captured, captured_out, kernels })
+    Ok(ForwardOut { logits, captured, captured_out, kernels, gemm })
 }
 
 // ---------------------------------------------------------------------------
@@ -394,6 +458,12 @@ fn conv2d(
 /// run the integer GEMM per group with a fused dequant epilogue.  Group `g`
 /// owns QTensor rows `g·og..(g+1)·og`, so scales and row sums line up with
 /// output channels exactly as in the f32 kernel.
+///
+/// Batches past [`GEMM_SPLIT_COST_BITS`] partition over images on `pool`:
+/// each partition carries its own quantize/im2col scratch and writes its
+/// images' disjoint output slices, so a big stacked predict batch uses
+/// every worker.  Below the threshold (or with no pool) the whole batch
+/// runs inline, reusing ONE quantize + patch buffer across images.
 #[allow(clippy::too_many_arguments)]
 fn conv2d_q(
     x: &Tensor,
@@ -408,6 +478,8 @@ fn conv2d_q(
     cout: usize,
     kh: usize,
     kw: usize,
+    pool: Option<&ThreadPool>,
+    gemm: &mut GemmStats,
 ) -> Result<Tensor> {
     let (b, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     if c != cin {
@@ -421,38 +493,118 @@ fn conv2d_q(
     let cg = cin / groups;
     let og = cout / groups;
     let krows = cg * kh * kw;
-    let zp = g.zp as u8; // act_grid guarantees 0 <= zp <= levels <= 255
     let mut out = Tensor::zeros(&[b, cout, oh, ow]);
-    let mut qimg = vec![0u8; c * h * wd];
-    for bi in 0..b {
-        let img = &x.data[bi * c * h * wd..(bi + 1) * c * h * wd];
-        quantize_acts(img, g, &mut qimg);
-        for gi in 0..groups {
-            let patches = im2col_u8(
-                &qimg[gi * cg * h * wd..(gi + 1) * cg * h * wd],
-                cg, h, wd, kh, kw, stride, ph, pw, zp,
-            );
-            let dst = &mut out.data
-                [(bi * cout + gi * og) * oh * ow..(bi * cout + (gi + 1) * og) * oh * ow];
-            qgemm_into(w, gi * og, og, &patches, krows, oh * ow, g.scale, g.zp, dst);
-        }
-        if let Some(bt) = bias {
-            for oc in 0..cout {
-                let base = (bi * cout + oc) * oh * ow;
-                let bv = bt.data[oc];
-                for v in &mut out.data[base..base + oh * ow] {
-                    *v += bv;
+    let per_img = cout * oh * ow;
+    let geo = ConvGeo { stride, ph, pw, groups, cg, og, krows, c, h, wd, oh, ow };
+    let cost = (b * cout * krows * oh * ow) as u64 * w.storage_bits() as u64;
+    let nparts = ((cost / GEMM_SPLIT_COST_BITS) as usize).clamp(1, b.min(16));
+    match pool {
+        Some(pool) if nparts >= 2 => {
+            let chunk = b.div_ceil(nparts);
+            let nparts = b.div_ceil(chunk);
+            gemm.split += 1;
+            gemm.tasks += nparts as u64;
+            let base = SendPtr(out.data.as_mut_ptr());
+            pool.coop_run(nparts, cost / nparts as u64, |pi| {
+                let mut qimg = vec![0u8; c * h * wd];
+                let mut patches = vec![0u8; krows * oh * ow];
+                for bi in pi * chunk..(pi * chunk + chunk).min(b) {
+                    // SAFETY: each image owns the disjoint output range
+                    // `[bi*per_img, (bi+1)*per_img)` and coop_run blocks
+                    // until every partition finishes.
+                    let out_img = unsafe {
+                        std::slice::from_raw_parts_mut(base.0.add(bi * per_img), per_img)
+                    };
+                    conv_q_image(x, bi, w, bias, g, &geo, &mut qimg, &mut patches, out_img);
                 }
+            });
+        }
+        _ => {
+            gemm.inline += 1;
+            let mut qimg = vec![0u8; c * h * wd];
+            let mut patches = vec![0u8; krows * oh * ow];
+            for bi in 0..b {
+                let out_img = &mut out.data[bi * per_img..(bi + 1) * per_img];
+                conv_q_image(x, bi, w, bias, g, &geo, &mut qimg, &mut patches, out_img);
             }
         }
     }
     Ok(out)
 }
 
+/// Conv geometry bundle threaded through [`conv_q_image`].
+struct ConvGeo {
+    stride: usize,
+    ph: usize,
+    pw: usize,
+    groups: usize,
+    cg: usize,
+    og: usize,
+    krows: usize,
+    c: usize,
+    h: usize,
+    wd: usize,
+    oh: usize,
+    ow: usize,
+}
+
+/// One image of the packed conv: quantize, per-group im2col into the
+/// reused `patches` scratch, blocked GEMM, bias.  `out_img` is the
+/// image's `(cout, oh, ow)` output slice.
+#[allow(clippy::too_many_arguments)]
+fn conv_q_image(
+    x: &Tensor,
+    bi: usize,
+    w: &QTensor,
+    bias: Option<&Tensor>,
+    g: ActGrid,
+    geo: &ConvGeo,
+    qimg: &mut [u8],
+    patches: &mut [u8],
+    out_img: &mut [f32],
+) {
+    let &ConvGeo { stride, ph, pw, groups, cg, og, krows, c, h, wd, oh, ow } = geo;
+    let zp = g.zp as u8; // act_grid guarantees 0 <= zp <= levels <= 255
+    let img = &x.data[bi * c * h * wd..(bi + 1) * c * h * wd];
+    quantize_acts(img, g, qimg);
+    for gi in 0..groups {
+        im2col_u8_into(
+            &qimg[gi * cg * h * wd..(gi + 1) * cg * h * wd],
+            cg, h, wd, w.shape[2], w.shape[3], stride, ph, pw, zp, patches,
+        );
+        let dst = &mut out_img[gi * og * oh * ow..(gi + 1) * og * oh * ow];
+        qgemm_into(w, gi * og, og, patches, krows, oh * ow, g.scale, g.zp, dst);
+    }
+    if let Some(bt) = bias {
+        for (oc, &bv) in bt.data.iter().enumerate() {
+            for v in &mut out_img[oc * oh * ow..(oc + 1) * oh * ow] {
+                *v += bv;
+            }
+        }
+    }
+}
+
+struct SendPtr(*mut f32);
+// SAFETY: used only for disjoint per-image writes inside coop_run, which
+// blocks until every partition is done.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
 /// Packed linear: quantize the (B, K) input, transpose to a (K, B) panel so
 /// output channels are GEMM rows, run the integer GEMM, then scatter the
 /// (O, B) result back to (B, O) and add the bias.
-fn linear_q(x: &Tensor, w: &QTensor, bias: Option<&Tensor>, g: ActGrid) -> Result<Tensor> {
+///
+/// GEMMs past [`GEMM_SPLIT_COST_BITS`] partition over output rows on
+/// `pool` ([`qgemm_parallel_into`] — MR-aligned disjoint row ranges,
+/// bit-identical to the serial call).
+fn linear_q(
+    x: &Tensor,
+    w: &QTensor,
+    bias: Option<&Tensor>,
+    g: ActGrid,
+    pool: Option<&ThreadPool>,
+    gemm: &mut GemmStats,
+) -> Result<Tensor> {
     if x.ndim() != 2 {
         bail!("linear input must be 2-D, got {:?}", x.shape);
     }
@@ -470,7 +622,34 @@ fn linear_q(x: &Tensor, w: &QTensor, bias: Option<&Tensor>, g: ActGrid) -> Resul
         }
     }
     let mut yt = vec![0.0f32; o * b];
-    qgemm_into(w, 0, o, &panel, k, b, g.scale, g.zp, &mut yt);
+    let cost = (o * k * b) as u64 * w.storage_bits() as u64;
+    let nparts = ((cost / GEMM_SPLIT_COST_BITS) as usize).clamp(1, 16);
+    match pool {
+        Some(pool) if nparts >= 2 => {
+            let used = qgemm_parallel_into(
+                pool,
+                nparts,
+                cost / nparts as u64,
+                w,
+                &panel,
+                k,
+                b,
+                g.scale,
+                g.zp,
+                &mut yt,
+            );
+            if used >= 2 {
+                gemm.split += 1;
+                gemm.tasks += used as u64;
+            } else {
+                gemm.inline += 1;
+            }
+        }
+        _ => {
+            gemm.inline += 1;
+            qgemm_into(w, 0, o, &panel, k, b, g.scale, g.zp, &mut yt);
+        }
+    }
     let mut y = Tensor::zeros(&[b, o]);
     for bi in 0..b {
         for oc in 0..o {
@@ -748,6 +927,50 @@ mod tests {
         let out = forward_q(&g, &pq, Some(&qp), &x, Some(&aq), None).unwrap();
         assert_eq!(out.kernels, KernelCounts { int8: 1, int4: 0, f32: 1 });
         assert_logits_close(&out.logits, &reference.logits);
+    }
+
+    /// Tentpole bit-identity pin: a pool-partitioned forward over a big
+    /// batch produces logits bit-identical to the serial packed forward,
+    /// and each batch row is bit-identical to running that input alone at
+    /// B = 1 — so pool-parallel predict batching never changes an answer.
+    #[test]
+    fn pool_partitioned_forward_is_bit_identical_and_splits() {
+        let pool = ThreadPool::new(3);
+        let (g, pq, qp) = quantized_tiny(Some(8), Some(4));
+        let aq = ActQuant { bits: 8, ranges: tiny_ranges() };
+        let mut x = Tensor::zeros(&[9, 3, 8, 8]);
+        Rng::new(21).fill_normal(&mut x.data, 1.0);
+        let serial = forward_q(&g, &pq, Some(&qp), &x, Some(&aq), None).unwrap();
+        assert_eq!(serial.gemm, GemmStats { tasks: 0, split: 0, inline: 2 });
+        let par =
+            forward_exec(&g, &pq, Some(&qp), &x, Some(&aq), None, Some(&pool)).unwrap();
+        assert_eq!(par.logits.data, serial.logits.data, "B=9 pooled vs serial");
+        assert!(par.gemm.split >= 1, "conv batch must split: {:?}", par.gemm);
+        assert!(par.gemm.tasks >= 2, "split produced subtasks: {:?}", par.gemm);
+        assert_eq!(
+            par.gemm.split + par.gemm.inline,
+            2,
+            "every packed GEMM call classified: {:?}",
+            par.gemm
+        );
+        // Per-row agreement with standalone B=1 runs (which stay inline:
+        // one image is below the split threshold).
+        let classes = serial.logits.shape[1];
+        for bi in 0..9 {
+            let one = Tensor::from_vec(
+                &[1, 3, 8, 8],
+                x.data[bi * 3 * 64..(bi + 1) * 3 * 64].to_vec(),
+            );
+            let solo =
+                forward_exec(&g, &pq, Some(&qp), &one, Some(&aq), None, Some(&pool))
+                    .unwrap();
+            assert_eq!(solo.gemm.split, 0, "B=1 stays inline");
+            assert_eq!(
+                solo.logits.data,
+                par.logits.data[bi * classes..(bi + 1) * classes],
+                "row {bi}"
+            );
+        }
     }
 
     #[test]

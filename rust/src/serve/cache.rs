@@ -71,7 +71,9 @@ pub fn params_bytes(p: &Params) -> usize {
 }
 
 /// Full byte footprint of an entry's payloads (f32 params + packed
-/// weights), counting every allocation shared or not.
+/// weights), counting every allocation shared or not.  `QTensor::bytes`
+/// includes the pre-packed GEMM panels built at assemble time, so the
+/// kernel-native copy is budgeted here like any other resident payload.
 pub fn entry_payload_bytes(params: &Params, qparams: Option<&QuantizedParams>) -> usize {
     params_bytes(params)
         + qparams.map_or(0, |qp| qp.values().map(|qt| qt.bytes()).sum())
@@ -469,6 +471,10 @@ mod tests {
         let grid = Tensor::from_vec(&[2, 2], vec![1., -1., 2., -2.]);
         let qt = Arc::new(QTensor::from_grid(&grid, &[0.5, 0.5], 8).unwrap());
         let qbytes = qt.bytes();
+        assert!(
+            qbytes > qt.packed.bytes() && qt.packed.bytes() > 0,
+            "footprint includes the pre-packed GEMM panels"
+        );
         let entry_q = || {
             let mut qp = QuantizedParams::new();
             qp.insert("w", Arc::clone(&qt));

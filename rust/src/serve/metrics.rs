@@ -11,7 +11,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use crate::nn::engine::KernelCounts;
+use crate::nn::engine::{GemmStats, KernelCounts};
 use crate::util::json::Json;
 
 /// Buckets cover 1 µs .. ~2^27 µs (~134 s); slower requests saturate the
@@ -301,6 +301,15 @@ pub struct Metrics {
     pub kernel_int4: AtomicU64,
     /// Nodes that fell back to (or were assigned) the f32 path.
     pub kernel_f32: AtomicU64,
+    /// GEMM partition subtasks executed by split GEMM calls (one count
+    /// per partition; `gemm_tasks / gemm_split` is the mean partition
+    /// count — inline calls contribute nothing here).
+    pub gemm_tasks: AtomicU64,
+    /// GEMMs whose cost crossed `GEMM_SPLIT_COST_BITS` and were split
+    /// into cooperative pool partitions.
+    pub gemm_split: AtomicU64,
+    /// GEMMs below the split threshold, executed inline on the caller.
+    pub gemm_inline: AtomicU64,
     pub lat_all: Histogram,
     pub lat_quantize: Histogram,
     pub lat_eval: Histogram,
@@ -351,6 +360,9 @@ impl Metrics {
             kernel_int8: AtomicU64::new(0),
             kernel_int4: AtomicU64::new(0),
             kernel_f32: AtomicU64::new(0),
+            gemm_tasks: AtomicU64::new(0),
+            gemm_split: AtomicU64::new(0),
+            gemm_inline: AtomicU64::new(0),
             lat_all: Histogram::new(),
             lat_quantize: Histogram::new(),
             lat_eval: Histogram::new(),
@@ -367,6 +379,13 @@ impl Metrics {
         self.kernel_int8.fetch_add(k.int8, Ordering::Relaxed);
         self.kernel_int4.fetch_add(k.int4, Ordering::Relaxed);
         self.kernel_f32.fetch_add(k.f32, Ordering::Relaxed);
+    }
+
+    /// Fold one forward pass's GEMM partitioning stats into the gauges.
+    pub fn record_gemm(&self, g: GemmStats) {
+        self.gemm_tasks.fetch_add(g.tasks, Ordering::Relaxed);
+        self.gemm_split.fetch_add(g.split, Ordering::Relaxed);
+        self.gemm_inline.fetch_add(g.inline, Ordering::Relaxed);
     }
 
     pub fn count_cmd(&self, cmd: &str) {
@@ -451,6 +470,18 @@ impl Metrics {
                     .set(
                         "f32",
                         self.kernel_f32.load(Ordering::Relaxed) as usize,
+                    )
+                    .set(
+                        "gemm_tasks",
+                        self.gemm_tasks.load(Ordering::Relaxed) as usize,
+                    )
+                    .set(
+                        "gemm_split",
+                        self.gemm_split.load(Ordering::Relaxed) as usize,
+                    )
+                    .set(
+                        "gemm_inline",
+                        self.gemm_inline.load(Ordering::Relaxed) as usize,
                     ),
             )
             .set(
@@ -494,6 +525,9 @@ impl Metrics {
             kernel_int8: c(&self.kernel_int8),
             kernel_int4: c(&self.kernel_int4),
             kernel_f32: c(&self.kernel_f32),
+            gemm_tasks: c(&self.gemm_tasks),
+            gemm_split: c(&self.gemm_split),
+            gemm_inline: c(&self.gemm_inline),
             lat_all: self.lat_all.snapshot(),
             lat_quantize: self.lat_quantize.snapshot(),
             lat_eval: self.lat_eval.snapshot(),
@@ -536,6 +570,9 @@ pub struct Snapshot {
     pub kernel_int8: u64,
     pub kernel_int4: u64,
     pub kernel_f32: u64,
+    pub gemm_tasks: u64,
+    pub gemm_split: u64,
+    pub gemm_inline: u64,
     pub lat_all: HistSnapshot,
     pub lat_quantize: HistSnapshot,
     pub lat_eval: HistSnapshot,
@@ -578,6 +615,9 @@ impl Snapshot {
         self.kernel_int8 += other.kernel_int8;
         self.kernel_int4 += other.kernel_int4;
         self.kernel_f32 += other.kernel_f32;
+        self.gemm_tasks += other.gemm_tasks;
+        self.gemm_split += other.gemm_split;
+        self.gemm_inline += other.gemm_inline;
         self.lat_all.merge(&other.lat_all);
         self.lat_quantize.merge(&other.lat_quantize);
         self.lat_eval.merge(&other.lat_eval);
@@ -619,6 +659,9 @@ impl Snapshot {
             .set("kernel_int8", self.kernel_int8 as usize)
             .set("kernel_int4", self.kernel_int4 as usize)
             .set("kernel_f32", self.kernel_f32 as usize)
+            .set("gemm_tasks", self.gemm_tasks as usize)
+            .set("gemm_split", self.gemm_split as usize)
+            .set("gemm_inline", self.gemm_inline as usize)
             .set("lat_all", self.lat_all.to_json())
             .set("lat_quantize", self.lat_quantize.to_json())
             .set("lat_eval", self.lat_eval.to_json())
@@ -672,6 +715,9 @@ impl Snapshot {
             kernel_int8: n("kernel_int8"),
             kernel_int4: n("kernel_int4"),
             kernel_f32: n("kernel_f32"),
+            gemm_tasks: n("gemm_tasks"),
+            gemm_split: n("gemm_split"),
+            gemm_inline: n("gemm_inline"),
             lat_all: h("lat_all"),
             lat_quantize: h("lat_quantize"),
             lat_eval: h("lat_eval"),
@@ -866,6 +912,25 @@ pub fn prometheus(s: &Snapshot, shard: Option<usize>) -> String {
 
     prom_head(
         &mut out,
+        "squant_gemm_tasks_total",
+        "counter",
+        "GEMM partition tasks executed by the blocked integer kernel.",
+    );
+    prom_line(&mut out, "squant_gemm_tasks_total", &base, s.gemm_tasks as f64);
+    prom_head(
+        &mut out,
+        "squant_gemm_calls_total",
+        "counter",
+        "GEMM calls by execution mode (split across pool vs inline).",
+    );
+    for (mode, v) in [("split", s.gemm_split), ("inline", s.gemm_inline)] {
+        let mut l = base.clone();
+        l.push(("mode", mode));
+        prom_line(&mut out, "squant_gemm_calls_total", &l, v as f64);
+    }
+
+    prom_head(
+        &mut out,
         "squant_conns_active",
         "gauge",
         "Open connections right now.",
@@ -977,11 +1042,15 @@ mod tests {
         let m = Metrics::new();
         m.kernel_int8.fetch_add(3, Ordering::Relaxed);
         m.kernel_f32.fetch_add(1, Ordering::Relaxed);
+        m.record_gemm(GemmStats { tasks: 9, split: 1, inline: 2 });
         let k = m.to_json();
         let k = k.req("kernel").unwrap();
         assert_eq!(k.req("int8").unwrap().as_usize().unwrap(), 3);
         assert_eq!(k.req("int4").unwrap().as_usize().unwrap(), 0);
         assert_eq!(k.req("f32").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(k.req("gemm_tasks").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(k.req("gemm_split").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(k.req("gemm_inline").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]
@@ -1087,6 +1156,7 @@ mod tests {
         m.count_cmd("stats");
         m.cache_hits.fetch_add(3, Ordering::Relaxed);
         m.kernel_int8.fetch_add(7, Ordering::Relaxed);
+        m.record_gemm(GemmStats { tasks: 11, split: 2, inline: 5 });
         m.batch_flush_full.fetch_add(1, Ordering::Relaxed);
         m.lat_predict.record_us(900);
         m.batch_size.record_us(4);
@@ -1095,6 +1165,9 @@ mod tests {
         assert_eq!(back.by_cmd, snap.by_cmd);
         assert_eq!(back.cache_hits, 3);
         assert_eq!(back.kernel_int8, 7);
+        assert_eq!(back.gemm_tasks, 11);
+        assert_eq!(back.gemm_split, 2);
+        assert_eq!(back.gemm_inline, 5);
         assert_eq!(back.batch_flush_full, 1);
         assert_eq!(back.lat_predict, snap.lat_predict);
         assert_eq!(back.batch_size, snap.batch_size);
@@ -1117,6 +1190,7 @@ mod tests {
         m.count_cmd("quantize");
         m.errors.fetch_add(1, Ordering::Relaxed);
         m.kernel_int8.fetch_add(5, Ordering::Relaxed);
+        m.record_gemm(GemmStats { tasks: 4, split: 1, inline: 3 });
         m.lat_all.record_us(777);
         let text = prometheus(&m.snapshot(), Some(2));
         let mut requests_sum = 0.0;
@@ -1148,6 +1222,9 @@ mod tests {
         }
         assert_eq!(requests_sum as u64, m.requests_total());
         assert!(text.contains("squant_kernel_dispatch_total{shard=\"2\",kernel=\"int8\"} 5"));
+        assert!(text.contains("squant_gemm_tasks_total{shard=\"2\"} 4"));
+        assert!(text.contains("squant_gemm_calls_total{shard=\"2\",mode=\"split\"} 1"));
+        assert!(text.contains("squant_gemm_calls_total{shard=\"2\",mode=\"inline\"} 3"));
         // Histogram family: +Inf bucket equals _count.
         assert!(text
             .contains("squant_latency_seconds_bucket{path=\"all\",shard=\"2\",le=\"+Inf\"} 1"));

@@ -89,7 +89,7 @@ use crate::coordinator;
 use crate::coordinator::server::ModelStore;
 use crate::coordinator::{LayerOutcome, LayerTask};
 use crate::nn::actrange::data_free_ranges;
-use crate::nn::engine::{forward_q, KernelCounts};
+use crate::nn::engine::{forward_exec, KernelCounts};
 use crate::nn::Params;
 use crate::quant::spec::{Method, QuantSpec};
 use crate::tensor::Tensor;
@@ -964,18 +964,20 @@ impl Engine {
         let (x, labels) = self.store.test.batch(start, len);
         let entry = &fan.task.entry;
         let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            forward_q(
+            forward_exec(
                 graph,
                 &entry.params,
                 entry.qparams.as_deref(),
                 &x,
                 entry.act.as_ref(),
                 None,
+                Some(self.sched.pool()),
             )
         }))
         .map_err(|_| format!("eval batch panicked for {}", key.label()))?
         .map_err(|e| format!("{e:#}"))?;
         self.metrics.record_kernels(out.kernels);
+        self.metrics.record_gemm(out.gemm);
         let preds = out.logits.argmax_rows();
         Ok(preds
             .iter()
@@ -1279,16 +1281,18 @@ impl Engine {
             data.extend_from_slice(row);
         }
         let x = Tensor::from_vec(&shape, data);
-        let out = forward_q(
+        let out = forward_exec(
             graph,
             &entry.params,
             entry.qparams.as_deref(),
             &x,
             entry.act.as_ref(),
             None,
+            Some(self.sched.pool()),
         )
         .map_err(|e| format!("{e:#}"))?;
         self.metrics.record_kernels(out.kernels);
+        self.metrics.record_gemm(out.gemm);
         let ncls = out.logits.shape[1];
         Ok((
             (0..inputs.len())
@@ -3165,5 +3169,87 @@ mod tests {
         let mk = stats.req("metrics").unwrap().req("kernel").unwrap();
         assert_eq!(mk.req("int8").unwrap().as_usize().unwrap(), 2);
         engine.wait_idle();
+    }
+
+    /// Blocked-GEMM acceptance: a stacked multi-input predict batch
+    /// splits its conv GEMM into cooperative pool partitions
+    /// (`kernel.gemm_tasks` > 0, `gemm_split` ≥ 1 in stats) while the
+    /// process spawns ZERO new threads — partitions run on the one
+    /// pre-spawned worker pool plus the calling worker itself.
+    #[test]
+    fn batched_predict_partitions_gemm_on_pool_without_new_threads() {
+        let engine = Engine::new(
+            tiny_store(),
+            EngineCfg {
+                workers: 2,
+                queue_depth: 16,
+                batch_window_us: 60_000_000,
+                max_batch: 4,
+                ..cfg()
+            },
+        )
+        .unwrap();
+        // Artifact in memory first so every predict enqueues inline.
+        let q = Json::obj()
+            .set("cmd", "quantize")
+            .set("model", "tiny")
+            .set("wbits", 8usize)
+            .set("abits", 8usize);
+        let r = engine.handle(&q);
+        assert_eq!(r.req("ok").unwrap(), &Json::Bool(true), "{}", r.dump());
+
+        #[cfg(target_os = "linux")]
+        let base = std::fs::read_dir("/proc/self/task").unwrap().count();
+        let inputs = predict_inputs(4);
+        let (tx, rx) = mpsc::channel();
+        for input in &inputs {
+            let tx = tx.clone();
+            let req = Json::obj()
+                .set("cmd", "predict")
+                .set("model", "tiny")
+                .set("wbits", 8usize)
+                .set("abits", 8usize)
+                .set(
+                    "input",
+                    Json::Arr(
+                        input.iter().map(|v| Json::Num(*v as f64)).collect(),
+                    ),
+                );
+            engine.submit(&req, Box::new(move |r| tx.send(r).unwrap()));
+        }
+        #[cfg(target_os = "linux")]
+        let mut peak = 0usize;
+        for _ in 0..inputs.len() {
+            #[cfg(target_os = "linux")]
+            {
+                peak = peak
+                    .max(std::fs::read_dir("/proc/self/task").unwrap().count());
+            }
+            let resp =
+                rx.recv_timeout(Duration::from_secs(60)).expect("predicted");
+            assert_eq!(
+                resp.req("ok").unwrap(),
+                &Json::Bool(true),
+                "{}",
+                resp.dump()
+            );
+            assert_eq!(
+                resp.req("batch").unwrap().as_usize().unwrap(),
+                4,
+                "all four inputs rode one stacked forward"
+            );
+        }
+        engine.wait_idle();
+        #[cfg(target_os = "linux")]
+        assert!(
+            peak <= base + 3,
+            "GEMM partitioning must not fork threads: base {base}, peak {peak}"
+        );
+        let stats = engine.handle(&Json::obj().set("cmd", "stats"));
+        let mk = stats.req("metrics").unwrap().req("kernel").unwrap();
+        let tasks = mk.req("gemm_tasks").unwrap().as_usize().unwrap();
+        let split = mk.req("gemm_split").unwrap().as_usize().unwrap();
+        assert!(split >= 1, "B=4 conv must cross GEMM_SPLIT_COST_BITS");
+        assert!(tasks >= 2, "a split GEMM runs 2+ partitions, got {tasks}");
     }
 }

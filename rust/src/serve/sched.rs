@@ -229,6 +229,14 @@ impl Scheduler {
         self.pool.vnow()
     }
 
+    /// The underlying pool, for cooperative intra-task parallelism: a
+    /// forward already running as a pool task hands this to
+    /// `nn::engine::forward_exec` so oversized GEMMs can split into
+    /// `coop_run` partitions on the same workers (zero extra threads).
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
     /// Run `f` on the pool under an already-reserved slot; the slot is
     /// released when the job finishes (panics included).  Slot jobs are
     /// weighted at one [`COST_UNIT`] of virtual time, so a sustained

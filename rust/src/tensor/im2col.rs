@@ -76,11 +76,37 @@ pub fn im2col_u8(
     pw: usize,
     pad: u8,
 ) -> Vec<u8> {
+    let rows = c * kh * kw;
+    let cols = out_dim(h, kh, stride, ph) * out_dim(w, kw, stride, pw);
+    let mut out = vec![0u8; rows * cols];
+    im2col_u8_into(x, c, h, w, kh, kw, stride, ph, pw, pad, &mut out);
+    out
+}
+
+/// [`im2col_u8`] into a caller-provided buffer of exactly
+/// `(c*kh*kw) * (oh*ow)` bytes, so the conv hot loop can reuse one
+/// allocation across batch images instead of allocating per call.  The
+/// buffer is fully overwritten (pad value first, then patches).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_u8_into(
+    x: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    ph: usize,
+    pw: usize,
+    pad: u8,
+    out: &mut [u8],
+) {
     let oh = out_dim(h, kh, stride, ph);
     let ow = out_dim(w, kw, stride, pw);
     let rows = c * kh * kw;
     let cols = oh * ow;
-    let mut out = vec![pad; rows * cols];
+    assert_eq!(out.len(), rows * cols, "im2col_u8_into buffer size");
+    out.fill(pad);
     for ci in 0..c {
         let xch = &x[ci * h * w..(ci + 1) * h * w];
         for ki in 0..kh {
@@ -104,7 +130,6 @@ pub fn im2col_u8(
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -156,6 +181,18 @@ mod tests {
                 assert_eq!(u as f32, fv, "in-bounds position {i}");
             }
         }
+    }
+
+    #[test]
+    fn into_variant_fully_overwrites_a_reused_buffer() {
+        let a: Vec<u8> = (0..2 * 4 * 4).map(|v| v as u8).collect();
+        let b: Vec<u8> = (0..2 * 4 * 4).map(|v| 255 - v as u8).collect();
+        let fresh_b = im2col_u8(&b, 2, 4, 4, 3, 3, 1, 1, 1, 7);
+        let mut buf = im2col_u8(&a, 2, 4, 4, 3, 3, 1, 1, 1, 7);
+        // Reusing the buffer from image `a` for image `b` must leave no
+        // residue — including at padded positions.
+        im2col_u8_into(&b, 2, 4, 4, 3, 3, 1, 1, 1, 7, &mut buf);
+        assert_eq!(buf, fresh_b);
     }
 
     #[test]

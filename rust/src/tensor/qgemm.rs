@@ -16,14 +16,49 @@
 //! the precomputed `QTensor::row_sums`.  i32 accumulation is exact: the
 //! largest per-term magnitude is 127·255 = 32385, safe for K up to ~66k.
 //!
-//! The inner accumulation has two implementations selected at runtime: an
-//! explicit AVX2 kernel (`std::arch`, 8-wide i32 lanes held in registers
-//! across the K loop) and a portable `chunks_exact`-style fallback that
-//! auto-vectorizes.  Results are bit-identical between the two — integer
-//! math has no reassociation error — so dispatch never changes answers.
+//! ## Blocked execution
+//!
+//! [`qgemm_into`] is a tiled microkernel GEMM over the QTensor's
+//! pre-packed panels (`qtensor::PackedWeights` — [`MR`]-row panels built
+//! once at construction, i4 nibbles already sign-extended, so the kernel
+//! never decodes or copies a weight row):
+//!
+//! * **Register blocking** — an MR×[`NR`] (4×8) microkernel holds the
+//!   i32 accumulator tile in registers across the whole K loop.  Two
+//!   implementations selected at runtime: explicit AVX2 (`std::arch`,
+//!   four 8-lane ymm accumulators, widening u8→i32 so there is no
+//!   `maddubs` saturation hazard) and a portable local-array kernel LLVM
+//!   auto-vectorizes.  Integer math has no reassociation error, so the
+//!   two are bit-identical and dispatch never changes answers.
+//! * **Cache tiling** — the K loop runs in [`KC`]-step tiles (weight
+//!   panel slice + activation rows stay L1/L2-resident) and the N loop
+//!   in [`NC`]-step tiles bounding the accumulator scratch.
+//! * **Masked epilogue** — row ranges that are not MR-aligned (grouped
+//!   convs run one group at a time via `row0`) compute whole panels but
+//!   the epilogue writes only rows inside `[row0, row0+rows)`; at most
+//!   MR−1 rows of wasted accumulation per group edge, in exchange for
+//!   one panel layout shared by every caller.  The epilogue walks exact
+//!   per-panel scale/row-sum slices — no per-element `scales[row]`
+//!   indexing in the inner loop.
+//!
+//! [`qgemm_unblocked_into`] keeps the PR 7 row-at-a-time kernel as the
+//! bit-exactness reference and bench baseline.  [`qgemm_parallel_into`]
+//! splits output rows into MR-aligned partitions run cooperatively on a
+//! `util::pool::ThreadPool` (`coop_run` — the caller participates, zero
+//! new threads); partitions write disjoint `dst` row ranges and integer
+//! accumulation is order-independent, so the parallel result is
+//! bit-identical too.
 
-use super::qtensor::QTensor;
+use super::qtensor::{QTensor, MR};
+use crate::util::pool::ThreadPool;
 use crate::util::rn;
+
+/// Microkernel column width (i32 lanes per accumulator register).
+pub const NR: usize = 8;
+/// K-dimension cache-tile step.
+pub const KC: usize = 256;
+/// N-dimension cache-tile step (bounds the accumulator scratch).
+pub const NC: usize = 256;
 
 /// A per-tensor affine activation grid: `v ≈ (q − zp) · scale` with
 /// `q ∈ [0, levels]`.  Mirrors `nn::engine::ActQuant::apply`.
@@ -65,13 +100,147 @@ pub fn quantize_acts(src: &[f32], g: ActGrid, dst: &mut [u8]) {
 }
 
 /// `dst[r, j] = Σ_k w[row0+r, k] · (panel[k, j] − zp) · s_w[row0+r] · s_a`
-/// for `r` in `0..rows` — an (rows × n) f32 output from packed weights and
-/// a row-major u8 activation panel of shape (k × n).
+/// for `r` in `0..rows` — an (rows × n) f32 output from pre-packed weight
+/// panels and a row-major u8 activation panel of shape (k × n).
 ///
 /// `row0` offsets into the QTensor's rows so grouped convs can run one
-/// group at a time against the group's scale/row-sum slices.
+/// group at a time; the range need not be MR-aligned (see module docs).
+/// Bit-identical to [`qgemm_unblocked_into`] on every shape (pinned by
+/// property test).
 #[allow(clippy::too_many_arguments)]
 pub fn qgemm_into(
+    w: &QTensor,
+    row0: usize,
+    rows: usize,
+    panel: &[u8],
+    k: usize,
+    n: usize,
+    a_scale: f32,
+    a_zp: i32,
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(w.row_len(), k);
+    debug_assert_eq!(panel.len(), k * n);
+    debug_assert_eq!(dst.len(), rows * n);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    let pw = &w.packed;
+    debug_assert_eq!(pw.k, k);
+    let avx2 = avx2_available();
+    let p0 = row0 / MR;
+    let p1 = (row0 + rows - 1) / MR + 1;
+    let ncmax = n.min(NC);
+    // Accumulator scratch for one NC column tile across all touched
+    // panels; row stride is `ncmax` for every tile (the last tile may be
+    // narrower but keeps the stride).
+    let mut acc = vec![0i32; (p1 - p0) * MR * ncmax];
+    let zp = a_zp as i64;
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut kc0 = 0;
+        while kc0 < k {
+            let kc = KC.min(k - kc0);
+            let first = kc0 == 0;
+            for p in p0..p1 {
+                let wp = &pw.data[(p * k + kc0) * MR..(p * k + kc0 + kc) * MR];
+                let arow0 = (p - p0) * MR;
+                let full = nc - nc % NR;
+                let mut jr = 0;
+                while jr < full {
+                    let act = &panel[kc0 * n + jc + jr..];
+                    let a = &mut acc[arow0 * ncmax + jr..];
+                    mk_tile(wp, act, kc, n, NR, a, ncmax, first, avx2);
+                    jr += NR;
+                }
+                if jr < nc {
+                    let act = &panel[kc0 * n + jc + jr..];
+                    let a = &mut acc[arow0 * ncmax + jr..];
+                    mk_tile_portable(wp, act, kc, n, nc - jr, a, ncmax, first);
+                }
+            }
+            kc0 += kc;
+        }
+        // Fused dequantize epilogue over this column tile: per-panel
+        // scale/row-sum slices, rows outside [row0, row0+rows) masked off.
+        for p in p0..p1 {
+            let ps = &pw.scales[p * MR..(p + 1) * MR];
+            let prs = &pw.row_sums[p * MR..(p + 1) * MR];
+            for r in 0..MR {
+                let gr = p * MR + r;
+                if gr < row0 || gr >= row0 + rows {
+                    continue;
+                }
+                let m = ps[r] * a_scale;
+                let rs = zp * prs[r] as i64;
+                let arow = &acc[((p - p0) * MR + r) * ncmax..][..nc];
+                let orow = &mut dst[(gr - row0) * n + jc..][..nc];
+                for (o, &a) in orow.iter_mut().zip(arow) {
+                    *o = ((a as i64 - rs) as f32) * m;
+                }
+            }
+        }
+        jc += nc;
+    }
+}
+
+/// Pool-parallel [`qgemm_into`]: split the output rows into up to
+/// `nparts` MR-aligned contiguous partitions and run them cooperatively
+/// on `pool` (`coop_run` — the calling thread participates and helpers
+/// ride the weighted queue, so no new threads are ever spawned and a
+/// saturated pool degrades to inline execution).  Partitions write
+/// disjoint `dst` row ranges; integer accumulation is order-independent,
+/// so the result is bit-identical to the serial call.  Returns the
+/// partition count actually used (1 = ran inline).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_parallel_into(
+    pool: &ThreadPool,
+    nparts: usize,
+    weight: u64,
+    w: &QTensor,
+    panel: &[u8],
+    k: usize,
+    n: usize,
+    a_scale: f32,
+    a_zp: i32,
+    dst: &mut [f32],
+) -> usize {
+    let rows = w.rows();
+    debug_assert_eq!(dst.len(), rows * n);
+    let nparts = nparts.clamp(1, rows.div_ceil(MR).max(1));
+    if nparts <= 1 {
+        qgemm_into(w, 0, rows, panel, k, n, a_scale, a_zp, dst);
+        return 1;
+    }
+    let chunk = rows.div_ceil(nparts).div_ceil(MR) * MR;
+    let nparts = rows.div_ceil(chunk);
+    let base = SendPtr(dst.as_mut_ptr());
+    pool.coop_run(nparts, weight, |i| {
+        let r0 = i * chunk;
+        let nrows = chunk.min(rows - r0);
+        // SAFETY: partitions cover disjoint `[r0*n, (r0+nrows)*n)` row
+        // ranges of `dst`, and coop_run does not return until every
+        // partition has finished, so no write outlives the borrow.
+        let d = unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), nrows * n) };
+        qgemm_into(w, r0, nrows, panel, k, n, a_scale, a_zp, d);
+    });
+    nparts
+}
+
+struct SendPtr(*mut f32);
+// SAFETY: used only for disjoint row-range writes inside coop_run, which
+// blocks until every partition is done.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// The PR 7 row-at-a-time kernel: unpack one weight row, accumulate it
+/// against the whole activation panel, apply the epilogue, next row.
+/// Kept as the bit-exactness reference for the blocked kernel's property
+/// tests and as the bench baseline (`benches/kernels.rs` sweeps
+/// unblocked vs blocked vs blocked+parallel).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_unblocked_into(
     w: &QTensor,
     row0: usize,
     rows: usize,
@@ -112,7 +281,72 @@ fn avx2_available() -> bool {
     false
 }
 
-/// `acc[j] = Σ_k wrow[k] · panel[k·n + j]` (overwrites `acc[..n]`).
+/// One MR×`cols` microkernel step over a KC tile: `acc[r, j] += Σ_kk
+/// wp[kk·MR+r] · act[kk·n+j]` (overwriting when `first`).  Dispatches to
+/// the AVX2 kernel for full-NR tiles, portable otherwise.
+#[allow(clippy::too_many_arguments)]
+fn mk_tile(
+    wp: &[i8],
+    act: &[u8],
+    kc: usize,
+    n: usize,
+    cols: usize,
+    acc: &mut [i32],
+    acc_stride: usize,
+    first: bool,
+    avx2: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2 && cols == NR {
+        // SAFETY: `avx2` is only true when is_x86_feature_detected!("avx2")
+        // passed; the kernel reads exactly kc×NR bytes inside `act` and
+        // writes the MR×NR accumulator tile inside `acc`.
+        unsafe { avx2::mk4x8(wp, act, kc, n, acc, acc_stride, first) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = avx2;
+    mk_tile_portable(wp, act, kc, n, cols, acc, acc_stride, first);
+}
+
+/// Portable MR×`cols` microkernel (`cols <= NR`): the accumulator tile
+/// lives in a local array across the K loop, which LLVM keeps in
+/// registers / auto-vectorizes.  Bit-identical to the AVX2 kernel.
+#[allow(clippy::too_many_arguments)]
+fn mk_tile_portable(
+    wp: &[i8],
+    act: &[u8],
+    kc: usize,
+    n: usize,
+    cols: usize,
+    acc: &mut [i32],
+    acc_stride: usize,
+    first: bool,
+) {
+    debug_assert!(cols <= NR);
+    let mut c = [[0i32; NR]; MR];
+    if !first {
+        for (r, cr) in c.iter_mut().enumerate() {
+            cr[..cols].copy_from_slice(&acc[r * acc_stride..r * acc_stride + cols]);
+        }
+    }
+    for kk in 0..kc {
+        let arow = &act[kk * n..kk * n + cols];
+        let wcol = &wp[kk * MR..(kk + 1) * MR];
+        for (cr, &wv) in c.iter_mut().zip(wcol) {
+            let wv = wv as i32;
+            for (a, &p) in cr[..cols].iter_mut().zip(arow) {
+                *a += wv * p as i32;
+            }
+        }
+    }
+    for (r, cr) in c.iter().enumerate() {
+        acc[r * acc_stride..r * acc_stride + cols].copy_from_slice(&cr[..cols]);
+    }
+}
+
+/// `acc[j] = Σ_k wrow[k] · panel[k·n + j]` (overwrites `acc[..n]`) — the
+/// unblocked kernel's row accumulation.
 fn accum_row(wrow: &[i8], panel: &[u8], k: usize, n: usize, acc: &mut [i32], avx2: bool) {
     #[cfg(target_arch = "x86_64")]
     if avx2 {
@@ -142,11 +376,66 @@ fn accum_row_portable(wrow: &[i8], panel: &[u8], k: usize, n: usize, acc: &mut [
 
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
+    use super::{MR, NR};
     use std::arch::x86_64::*;
 
-    /// AVX2 accumulation: 8 i32 lanes per column tile, held in a register
-    /// across the whole K loop.  Widening u8→i32 before the multiply keeps
-    /// every product exact (no `maddubs`-style i16 saturation hazard).
+    // The mk4x8 register allocation is written for exactly 4×8 lanes.
+    const _: () = assert!(MR == 4 && NR == 8);
+
+    /// AVX2 MR×NR microkernel: four 8-lane i32 accumulator registers held
+    /// across the whole KC tile.  Widening u8→i32 before the multiply
+    /// keeps every product exact (no `maddubs`-style i16 saturation
+    /// hazard).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn mk4x8(
+        wp: &[i8],
+        act: &[u8],
+        kc: usize,
+        n: usize,
+        acc: &mut [i32],
+        acc_stride: usize,
+        first: bool,
+    ) {
+        let (mut c0, mut c1, mut c2, mut c3);
+        if first {
+            c0 = _mm256_setzero_si256();
+            c1 = _mm256_setzero_si256();
+            c2 = _mm256_setzero_si256();
+            c3 = _mm256_setzero_si256();
+        } else {
+            let a = acc.as_ptr();
+            c0 = _mm256_loadu_si256(a as *const __m256i);
+            c1 = _mm256_loadu_si256(a.add(acc_stride) as *const __m256i);
+            c2 = _mm256_loadu_si256(a.add(2 * acc_stride) as *const __m256i);
+            c3 = _mm256_loadu_si256(a.add(3 * acc_stride) as *const __m256i);
+        }
+        for kk in 0..kc {
+            let p = _mm_loadl_epi64(act.as_ptr().add(kk * n) as *const __m128i);
+            let p = _mm256_cvtepu8_epi32(p);
+            let wcol = wp.as_ptr().add(kk * MR);
+            c0 = _mm256_add_epi32(c0, _mm256_mullo_epi32(_mm256_set1_epi32(*wcol as i32), p));
+            c1 = _mm256_add_epi32(
+                c1,
+                _mm256_mullo_epi32(_mm256_set1_epi32(*wcol.add(1) as i32), p),
+            );
+            c2 = _mm256_add_epi32(
+                c2,
+                _mm256_mullo_epi32(_mm256_set1_epi32(*wcol.add(2) as i32), p),
+            );
+            c3 = _mm256_add_epi32(
+                c3,
+                _mm256_mullo_epi32(_mm256_set1_epi32(*wcol.add(3) as i32), p),
+            );
+        }
+        _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, c0);
+        _mm256_storeu_si256(acc.as_mut_ptr().add(acc_stride) as *mut __m256i, c1);
+        _mm256_storeu_si256(acc.as_mut_ptr().add(2 * acc_stride) as *mut __m256i, c2);
+        _mm256_storeu_si256(acc.as_mut_ptr().add(3 * acc_stride) as *mut __m256i, c3);
+    }
+
+    /// AVX2 accumulation for the unblocked reference kernel: 8 i32 lanes
+    /// per column tile, held in a register across the whole K loop.
     #[target_feature(enable = "avx2")]
     pub unsafe fn accum_row(wrow: &[i8], panel: &[u8], k: usize, n: usize, acc: &mut [i32]) {
         let tiles = n - n % 8;
@@ -177,6 +466,7 @@ mod tests {
     use super::*;
     use crate::quant::{channel_scales, dequant, quantize_rtn, QuantConfig};
     use crate::tensor::Tensor;
+    use crate::util::prop::forall;
     use crate::util::rng::Rng;
 
     /// Reference: dequantized weights × fake-quantized activations in f32,
@@ -266,9 +556,96 @@ mod tests {
         quantize_acts(&x, g, &mut panel);
         let mut full = vec![0.0f32; rows * n];
         qgemm_into(&qt, 0, rows, &panel, k, n, g.scale, g.zp, &mut full);
+        // row0 = 3 is deliberately not MR-aligned: the masked epilogue
+        // must discard the panel lanes outside the group's row range.
         let mut part = vec![0.0f32; 2 * n];
         qgemm_into(&qt, 3, 2, &panel, k, n, g.scale, g.zp, &mut part);
         assert_eq!(part, full[3 * n..5 * n]);
+    }
+
+    /// Random QTensor + raw u8 panel for the bit-exactness properties.
+    fn random_case(
+        c: &mut crate::util::prop::Case,
+        rows: usize,
+        k: usize,
+        n: usize,
+        bits: usize,
+    ) -> (QTensor, Vec<u8>) {
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let span = (2 * qmax + 1) as usize;
+        let grid: Vec<f32> =
+            (0..rows * k).map(|_| (c.rng.below(span) as i32 - qmax) as f32).collect();
+        let q = Tensor::from_vec(&[rows, k], grid);
+        let scales: Vec<f32> = (0..rows).map(|r| 0.003 + r as f32 * 0.001).collect();
+        let qt = QTensor::from_grid(&q, &scales, bits).unwrap();
+        let panel: Vec<u8> = (0..k * n).map(|_| c.rng.below(256) as u8).collect();
+        (qt, panel)
+    }
+
+    /// The tentpole correctness bar: `from_grid → prepack → blocked gemm`
+    /// is bit-identical to the unblocked PR 7 kernel across adversarial
+    /// shapes — K not a multiple of KC (including KC±ε and multi-tile),
+    /// N below/at/above NR, odd i4 row lengths, row counts off the MR
+    /// grid, and non-aligned `row0` group offsets.
+    #[test]
+    fn blocked_gemm_is_bit_identical_to_unblocked_property() {
+        let ks = [1usize, 7, KC - 1, KC, KC + 3, 2 * KC + 5];
+        let ns = [1usize, NR - 1, NR, NR + 3, 37];
+        forall("qgemm-blocked-bitexact", 23, 48, 64, |c| {
+            let k = ks[c.rng.below(ks.len())];
+            let n = ns[c.rng.below(ns.len())];
+            let rows = 1 + c.rng.below(13);
+            let bits = [4usize, 8][c.rng.below(2)];
+            let (qt, panel) = random_case(c, rows, k, n, bits);
+            let (a_scale, a_zp) = (0.013f32, c.rng.below(200) as i32);
+            let mut blocked = vec![0.0f32; rows * n];
+            qgemm_into(&qt, 0, rows, &panel, k, n, a_scale, a_zp, &mut blocked);
+            let mut reference = vec![0.0f32; rows * n];
+            qgemm_unblocked_into(&qt, 0, rows, &panel, k, n, a_scale, a_zp, &mut reference);
+            if blocked != reference {
+                return Err(format!("full-range mismatch rows={rows} k={k} n={n} bits={bits}"));
+            }
+            // Grouped-conv style sub-range with a non-aligned row0.
+            let row0 = c.rng.below(rows);
+            let sub = 1 + c.rng.below(rows - row0);
+            let mut bpart = vec![0.0f32; sub * n];
+            qgemm_into(&qt, row0, sub, &panel, k, n, a_scale, a_zp, &mut bpart);
+            if bpart != reference[row0 * n..(row0 + sub) * n] {
+                return Err(format!("row0={row0} sub={sub} mismatch k={k} n={n} bits={bits}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Pool-parallel partitioning is bit-identical to the serial blocked
+    /// call — disjoint output rows, order-independent integer math.
+    #[test]
+    fn parallel_gemm_is_bit_identical_property() {
+        let pool = ThreadPool::new(3);
+        forall("qgemm-parallel-bitexact", 31, 24, 64, |c| {
+            let rows = 1 + c.rng.below(21);
+            let k = 1 + c.rng.below(70);
+            let n = 1 + c.rng.below(40);
+            let bits = [4usize, 8][c.rng.below(2)];
+            let (qt, panel) = random_case(c, rows, k, n, bits);
+            let (a_scale, a_zp) = (0.02f32, 11);
+            let mut serial = vec![0.0f32; rows * n];
+            qgemm_into(&qt, 0, rows, &panel, k, n, a_scale, a_zp, &mut serial);
+            let nparts = 1 + c.rng.below(5);
+            let mut par = vec![0.0f32; rows * n];
+            let used = qgemm_parallel_into(
+                &pool, nparts, 64, &qt, &panel, k, n, a_scale, a_zp, &mut par,
+            );
+            if used > rows.div_ceil(MR) {
+                return Err(format!("used {used} partitions for {rows} rows"));
+            }
+            if par != serial {
+                return Err(format!(
+                    "parallel mismatch rows={rows} k={k} n={n} bits={bits} nparts={nparts}"
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -284,6 +661,21 @@ mod tests {
         let mut acc2 = [0i32; 2];
         accum_row(&wrow, &panel, 3, 2, &mut acc2, avx2_available());
         assert_eq!(acc2, [248, -8]);
+    }
+
+    /// The portable microkernel against the same hand case, exercised
+    /// through a 1-row QTensor so the panel path (not `accum_row`) runs.
+    #[test]
+    fn microkernel_tile_accumulates_and_reloads() {
+        // 2 rows, k=3: row0 = [2,-3,1], row1 = [1,0,-2].
+        let q = Tensor::from_vec(&[2, 3], vec![2.0, -3.0, 1.0, 1.0, 0.0, -2.0]);
+        let qt = QTensor::from_grid(&q, &[1.0, 1.0], 8).unwrap();
+        let panel = [1u8, 2, 3, 4, 255, 0];
+        let mut dst = vec![0.0f32; 2 * 2];
+        // a_scale 1, zp 0: output is the raw accumulator as f32.
+        qgemm_into(&qt, 0, 2, &panel, 3, 2, 1.0, 0, &mut dst);
+        // row0: [248, -8]; row1: [1*1 - 2*255, 1*2 - 2*0] = [-509, 2]
+        assert_eq!(dst, vec![248.0, -8.0, -509.0, 2.0]);
     }
 
     #[test]

@@ -13,12 +13,54 @@
 //! Dequantization (`q * scale[row]`) is bit-identical to `quant::dequant`
 //! on the same grid, so a packed artifact reconstructs the exact f32
 //! weights the fake-quant path would have stored.
+//!
+//! Every QTensor also carries a kernel-native [`PackedWeights`] panel
+//! buffer, built exactly once at construction time (`from_grid` at
+//! assemble time, `from_packed` at disk load): rows laid out as
+//! [`MR`]-row panels with the k dimension interleaved across lanes, i4
+//! nibbles already sign-extended to i8, and the per-panel scale /
+//! row-sum slices the blocked GEMM epilogue walks.  The per-GEMM nibble
+//! decode and row copy the row-at-a-time kernel paid are gone.
 
 use super::Tensor;
 use anyhow::{bail, Result};
 
 /// Largest grid bit-width a QTensor can represent (i8 storage).
 pub const MAX_PACK_BITS: usize = 8;
+
+/// Rows per weight panel — the microkernel's register-block height.
+/// Shared with `tensor::qgemm`; changing it re-layouts every panel.
+pub const MR: usize = 4;
+
+/// Kernel-native panel layout of a QTensor's rows, built once at
+/// construction.  Rows are grouped into `npanels = rows.div_ceil(MR)`
+/// panels; within a panel the k dimension is the major axis and the MR
+/// row lanes are interleaved: `data[(p*k + kk)*MR + r]` is row `p*MR+r`,
+/// column `kk`.  Tail lanes of the last panel are zero-filled (zero grid
+/// values contribute nothing to the accumulator, and the epilogue never
+/// writes rows past `rows`).  `scales`/`row_sums` are the per-row values
+/// padded to `npanels * MR` so the epilogue can take exact per-panel
+/// slices instead of bounds-checking `scales[row]` per element.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PackedWeights {
+    /// Row-panel count: `rows.div_ceil(MR)`.
+    pub npanels: usize,
+    /// Elements per row (the GEMM k dimension).
+    pub k: usize,
+    /// Panel-major sign-extended grid values, `npanels * k * MR` long.
+    pub data: Vec<i8>,
+    /// Per-row scales padded to `npanels * MR` (tail lanes 0.0).
+    pub scales: Vec<f32>,
+    /// Per-row grid-value sums padded to `npanels * MR` (tail lanes 0).
+    pub row_sums: Vec<i32>,
+}
+
+impl PackedWeights {
+    /// Heap footprint of the panel buffer (payload + padded scales/sums).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len() + 4 * self.row_sums.len()
+    }
+}
 
 /// Packed integer tensor: grid values + per-output-channel scales.
 #[derive(Clone, Debug, PartialEq)]
@@ -35,6 +77,10 @@ pub struct QTensor {
     /// Per-row sums of grid values: the qgemm epilogue's zero-point
     /// correction term (`Σ wq·(q−zp) = Σ wq·q − zp·Σ wq`).
     pub row_sums: Vec<i32>,
+    /// Kernel-native panel layout, built once at construction time so the
+    /// blocked GEMM never unpacks nibbles or copies rows per call.  A pure
+    /// function of the other fields, so `PartialEq`/round-trips still hold.
+    pub packed: PackedWeights,
 }
 
 impl QTensor {
@@ -59,10 +105,16 @@ impl QTensor {
         row_bytes(self.bits, self.row_len())
     }
 
-    /// Approximate heap footprint (payload + scales + row sums + headers),
-    /// mirroring `serve::cache::tensor_bytes` for the f32 case.
+    /// Approximate heap footprint (payload + scales + row sums + the
+    /// pre-packed kernel panels + headers), mirroring
+    /// `serve::cache::tensor_bytes` for the f32 case.  Cache unique-bytes
+    /// accounting charges the panel buffer through this.
     pub fn bytes(&self) -> usize {
-        self.data.len() + 4 * self.scales.len() + 4 * self.row_sums.len() + 64
+        self.data.len()
+            + 4 * self.scales.len()
+            + 4 * self.row_sums.len()
+            + self.packed.bytes()
+            + 64
     }
 
     /// Pack a grid-value tensor (f32 integers from `quant::quantize_rtn` or
@@ -98,7 +150,16 @@ impl QTensor {
             row_sums[r] = sum;
             pack_row(&grid, bits, &mut data[r * rb..(r + 1) * rb]);
         }
-        Ok(QTensor { shape: q.shape.clone(), bits, data, scales: scales.to_vec(), row_sums })
+        let mut qt = QTensor {
+            shape: q.shape.clone(),
+            bits,
+            data,
+            scales: scales.to_vec(),
+            row_sums,
+            packed: PackedWeights::default(),
+        };
+        qt.packed = qt.prepack();
+        Ok(qt)
     }
 
     /// Rebuild from already-packed bytes (the disk-load path).  Validates
@@ -125,7 +186,14 @@ impl QTensor {
         if scales.len() != rows {
             bail!("qtensor scales len {} vs {rows} rows", scales.len());
         }
-        let mut qt = QTensor { shape, bits, data, scales, row_sums: vec![0; rows] };
+        let mut qt = QTensor {
+            shape,
+            bits,
+            data,
+            scales,
+            row_sums: vec![0; rows],
+            packed: PackedWeights::default(),
+        };
         let qmax = ((1i32 << (bits - 1)) - 1) as i8;
         let mut grid = vec![0i8; per];
         for r in 0..rows {
@@ -139,7 +207,31 @@ impl QTensor {
             }
             qt.row_sums[r] = sum;
         }
+        qt.packed = qt.prepack();
         Ok(qt)
+    }
+
+    /// Lay the rows out as MR-row kernel panels (see [`PackedWeights`]).
+    /// Called exactly once per tensor, from both constructors — the one
+    /// place i4 nibbles are ever decoded on the inference path.
+    fn prepack(&self) -> PackedWeights {
+        let rows = self.rows();
+        let k = self.row_len();
+        let npanels = rows.div_ceil(MR);
+        let mut data = vec![0i8; npanels * k * MR];
+        let mut scales = vec![0.0f32; npanels * MR];
+        let mut row_sums = vec![0i32; npanels * MR];
+        let mut grid = vec![0i8; k];
+        for r in 0..rows {
+            self.unpack_row(r, &mut grid);
+            let base = (r / MR) * k * MR + (r % MR);
+            for (kk, &g) in grid.iter().enumerate() {
+                data[base + kk * MR] = g;
+            }
+            scales[r] = self.scales[r];
+            row_sums[r] = self.row_sums[r];
+        }
+        PackedWeights { npanels, k, data, scales, row_sums }
     }
 
     /// Unpack row `r` into `dst[..row_len()]` as sign-extended i8 values.
@@ -317,6 +409,35 @@ mod tests {
         assert!(QTensor::from_grid(&q, &[1.0, 2.0], 4).is_err(), "scales len");
         assert!(QTensor::from_grid(&q, &[1.0], 9).is_err(), "bits too wide");
         assert!(QTensor::from_grid(&q, &[1.0], 1).is_err(), "bits too narrow");
+    }
+
+    #[test]
+    fn prepack_panel_layout_interleaves_mr_lanes() {
+        // 5 rows of 3 elements → 2 panels; the second panel's 3 unused
+        // lanes (and padded scales/sums) must be zero.
+        let vals: Vec<f32> = (0..15).map(|i| (i as i32 - 7) as f32).collect();
+        let q = Tensor::from_vec(&[5, 3], vals.clone());
+        let scales: Vec<f32> = (0..5).map(|r| 1.0 + r as f32).collect();
+        let qt = QTensor::from_grid(&q, &scales, 4).unwrap();
+        let pw = &qt.packed;
+        assert_eq!((pw.npanels, pw.k), (2, 3));
+        assert_eq!(pw.data.len(), 2 * 3 * MR);
+        assert_eq!(pw.scales.len(), 2 * MR);
+        for r in 0..5 {
+            for kk in 0..3 {
+                let lane = pw.data[((r / MR) * 3 + kk) * MR + (r % MR)];
+                assert_eq!(lane as f32, vals[r * 3 + kk], "row {r} col {kk}");
+            }
+            assert_eq!(pw.scales[r], scales[r]);
+            assert_eq!(pw.row_sums[r], qt.row_sums[r]);
+        }
+        for kk in 0..3 {
+            for lane in 1..MR {
+                assert_eq!(pw.data[(3 + kk) * MR + lane], 0, "tail lane");
+            }
+        }
+        assert_eq!(&pw.scales[5..], &[0.0, 0.0, 0.0]);
+        assert_eq!(&pw.row_sums[5..], &[0, 0, 0]);
     }
 
     #[test]

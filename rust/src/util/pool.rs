@@ -293,6 +293,89 @@ impl ThreadPool {
             st = self.shared.idle.wait(st).unwrap();
         }
     }
+
+    /// Cooperative fork-join: run `f(i)` for every `i in 0..nparts`
+    /// across the *calling thread and* the pool's workers, returning only
+    /// when every partition has finished.  The caller always participates
+    /// (help-first), so the call makes progress even when every worker is
+    /// busy — or when the caller *is* the pool's only worker — with zero
+    /// new threads and no deadlock.  Helpers are submitted as
+    /// flow-weighted jobs (`weight` = per-partition cost in the pool's
+    /// virtual-time currency), so e.g. GEMM partitions interleave fairly
+    /// with other pool work instead of jumping the queue.  A panicking
+    /// partition is contained until all partitions finish, then re-raised
+    /// on the caller.
+    pub fn coop_run<F>(&self, nparts: usize, weight: u64, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if nparts <= 1 {
+            if nparts == 1 {
+                f(0);
+            }
+            return;
+        }
+        struct CoopJob {
+            /// Next unclaimed partition index; claims past `nparts` are
+            /// no-ops (late-waking helpers exit without touching `f`).
+            next: AtomicUsize,
+            done: Mutex<usize>,
+            all_done: Condvar,
+            panicked: std::sync::atomic::AtomicBool,
+            nparts: usize,
+            f: &'static (dyn Fn(usize) + Sync),
+        }
+        impl CoopJob {
+            fn run_some(&self) {
+                loop {
+                    let i = self.next.fetch_add(1, Ordering::Relaxed);
+                    if i >= self.nparts {
+                        break;
+                    }
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        (self.f)(i)
+                    }));
+                    if r.is_err() {
+                        self.panicked.store(true, Ordering::SeqCst);
+                    }
+                    let mut done = self.done.lock().unwrap();
+                    *done += 1;
+                    if *done == self.nparts {
+                        self.all_done.notify_all();
+                    }
+                }
+            }
+        }
+        // SAFETY: lifetime erasure.  The caller blocks below until
+        // `done == nparts`, i.e. until every claimed partition has run to
+        // completion, so `f` outlives every invocation; a helper that
+        // wakes after that claims `i >= nparts` and returns without ever
+        // dereferencing `f`.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(&f)
+        };
+        let job = Arc::new(CoopJob {
+            next: AtomicUsize::new(0),
+            done: Mutex::new(0),
+            all_done: Condvar::new(),
+            panicked: std::sync::atomic::AtomicBool::new(false),
+            nparts,
+            f: f_static,
+        });
+        for _ in 0..(nparts - 1).min(self.threads()) {
+            let j = Arc::clone(&job);
+            self.submit_weighted(weight, move || j.run_some());
+        }
+        job.run_some();
+        let mut done = job.done.lock().unwrap();
+        while *done < nparts {
+            done = job.all_done.wait(done).unwrap();
+        }
+        drop(done);
+        if job.panicked.load(Ordering::SeqCst) {
+            panic!("coop_run partition panicked");
+        }
+    }
 }
 
 impl Drop for ThreadPool {
@@ -454,6 +537,82 @@ mod tests {
         pool.submit(|| panic!("must never run"));
         assert_eq!(pool.pending(), 0, "dropped job was not counted");
         pool.wait(); // must return immediately, not deadlock
+    }
+
+    #[test]
+    fn coop_run_covers_every_partition_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        pool.coop_run(hits.len(), 10, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "partition {i}");
+        }
+    }
+
+    #[test]
+    fn coop_run_zero_and_one_partitions_run_inline() {
+        let pool = ThreadPool::new(2);
+        let n = AtomicU64::new(0);
+        pool.coop_run(0, 1, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 0);
+        pool.coop_run(1, 1, |i| {
+            assert_eq!(i, 0);
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.pending(), 0, "single partition never touches the queue");
+    }
+
+    /// The caller makes progress even when every worker is pinned on
+    /// other jobs: help-first means a saturated pool degrades to inline
+    /// execution instead of deadlocking.
+    #[test]
+    fn coop_run_progresses_with_all_workers_busy() {
+        let pool = ThreadPool::new(1);
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        pool.submit(move || {
+            while !g.load(Ordering::SeqCst) {
+                thread::sleep(std::time::Duration::from_millis(1));
+            }
+        });
+        while pool.running() == 0 {
+            thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let n = AtomicU64::new(0);
+        pool.coop_run(8, 5, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8, "caller drained all partitions");
+        gate.store(true, Ordering::SeqCst);
+        pool.wait();
+    }
+
+    #[test]
+    fn coop_run_repanics_on_caller_after_all_partitions_finish() {
+        let pool = ThreadPool::new(2);
+        let ran = Arc::new(AtomicU64::new(0));
+        let r = Arc::clone(&ran);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.coop_run(6, 1, |i| {
+                r.fetch_add(1, Ordering::Relaxed);
+                if i == 2 {
+                    panic!("partition 2 blew up");
+                }
+            });
+        }));
+        assert!(res.is_err(), "partition panic reaches the caller");
+        assert_eq!(ran.load(Ordering::Relaxed), 6, "other partitions still ran");
+        // The pool stays usable afterwards.
+        let n = AtomicU64::new(0);
+        pool.coop_run(4, 1, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
     }
 
     #[test]
